@@ -1,0 +1,122 @@
+//! End-to-end validation driver (DESIGN.md §6): proves all layers compose.
+//!
+//! For every Table-4 on-chip dataset group × {BFS, SSSP, WCC} × several
+//! sources, plus an oversized swap-exercising graph:
+//!   1. generate the graph (graph substrate),
+//!   2. compile the vertex mapping (FLIP compiler),
+//!   3. run the cycle-accurate data-centric simulator (L3),
+//!   4. validate the functional result against BOTH the native Rust
+//!      reference AND the AOT JAX/Pallas golden model through PJRT (L2/L1),
+//!   5. report MTEPS + energy from the calibrated model.
+//!
+//! The run is recorded in EXPERIMENTS.md.
+
+use flip::energy;
+use flip::experiments::harness::{self, CompiledPair, ExpEnv};
+use flip::graph::datasets::Group;
+use flip::report::{sig, Json, Table};
+use flip::runtime::{default_artifact_dir, GoldenEngine};
+use flip::sim::flip::SimOptions;
+use flip::workloads::Workload;
+
+fn main() -> anyhow::Result<()> {
+    let mut env = ExpEnv::quick();
+    env.graphs_per_group = 3;
+    env.sources_per_graph = 2;
+    let engine = GoldenEngine::load(&default_artifact_dir())?;
+    println!(
+        "PJRT golden model: platform={}, artifact sizes {:?}\n",
+        engine.platform(),
+        engine.sizes
+    );
+    let emodel = harness::calibrated_energy(&env);
+
+    let mut table = Table::new(
+        "End-to-end validation",
+        &["group", "workload", "runs", "cycles (mean)", "MTEPS", "energy µJ", "ref", "golden"],
+    );
+    let mut json_rows = Vec::new();
+    let (mut total_runs, mut golden_runs) = (0usize, 0usize);
+
+    for group in Group::ON_CHIP {
+        let graphs = env.graphs(group);
+        for w in Workload::ALL {
+            let (mut cycles, mut mteps, mut euj) = (vec![], vec![], vec![]);
+            let mut golden_checked = 0usize;
+            let mut runs = 0usize;
+            for (gi, g) in graphs.iter().enumerate() {
+                let pair = CompiledPair::build(g, &env.cfg, env.seed);
+                for src in env.sources(group, g, gi) {
+                    // run_flip asserts against the native reference in
+                    // debug; assert explicitly here for release builds
+                    let r = harness::run_flip(&pair, w, src);
+                    let view = if w.needs_undirected() { &pair.wcc_view } else { &pair.graph };
+                    assert_eq!(r.attrs, w.reference(view, src), "native reference mismatch");
+                    if let Some(golden) = engine.golden_attrs(g, w, src)? {
+                        assert_eq!(r.attrs, golden, "PJRT golden mismatch");
+                        golden_checked += 1;
+                    }
+                    cycles.push(r.cycles as f64);
+                    mteps.push(r.mteps(env.cfg.freq_mhz));
+                    euj.push(emodel.run_energy_uj(&r.sim.activity, r.cycles));
+                    runs += 1;
+                }
+            }
+            total_runs += runs;
+            golden_runs += golden_checked;
+            let mean = |v: &Vec<f64>| v.iter().sum::<f64>() / v.len() as f64;
+            table.row(&[
+                group.name().into(),
+                w.name().into(),
+                format!("{runs}"),
+                sig(mean(&cycles), 4),
+                sig(mean(&mteps), 3),
+                sig(mean(&euj), 3),
+                "OK".into(),
+                format!("{golden_checked}/{runs}"),
+            ]);
+            json_rows.push(Json::Obj(vec![
+                ("group".into(), Json::Str(group.name().into())),
+                ("workload".into(), Json::Str(w.name().into())),
+                ("runs".into(), Json::Num(runs as f64)),
+                ("mean_cycles".into(), Json::Num(mean(&cycles))),
+                ("mean_mteps".into(), Json::Num(mean(&mteps))),
+                ("mean_energy_uj".into(), Json::Num(mean(&euj))),
+            ]));
+        }
+    }
+
+    // swap path: a 2-copy graph exercises the off-chip engine end to end
+    let big = flip::graph::generate::road_network(384, 880, 1100, 9);
+    let pair = CompiledPair::build(&big, &env.cfg, env.seed);
+    let opts = SimOptions { max_cycles: 1_000_000_000, watchdog: 5_000_000, ..Default::default() };
+    let r = harness::run_flip_opts(&pair, Workload::Bfs, 0, &opts);
+    assert_eq!(r.attrs, flip::graph::reference::bfs_levels(&big, 0));
+    assert!(r.sim.swaps > 0, "swap path must trigger");
+    println!("{}", table.render());
+    println!(
+        "swap path: |V|={} over {} copies, {} swaps, {} cycles — reference OK",
+        big.num_vertices(),
+        pair.directed.placement.num_copies,
+        r.sim.swaps,
+        r.cycles
+    );
+    println!(
+        "\n{total_runs} cycle-accurate runs validated against the native reference;\n\
+         {golden_runs} also validated against the AOT JAX/Pallas golden model via PJRT."
+    );
+    println!(
+        "FLIP model: {:.2} mW / {:.3} mm² (Table 6)",
+        energy::paper_total_power_mw(),
+        energy::paper_total_area_mm2()
+    );
+    let json = Json::Obj(vec![
+        ("total_runs".into(), Json::Num(total_runs as f64)),
+        ("golden_runs".into(), Json::Num(golden_runs as f64)),
+        ("cells".into(), Json::Arr(json_rows)),
+    ]);
+    let path = flip::report::write_report("e2e_validation.json", &json.render())?;
+    println!("[machine-readable results: {}]", path.display());
+    println!("e2e_validation OK");
+    Ok(())
+}

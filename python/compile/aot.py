@@ -1,0 +1,78 @@
+"""AOT export: lower the L2 model to HLO **text** artifacts.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which xla_extension 0.5.1 (the
+version pinned by the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`).  The text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: Dense sizes to export. 16/64 cover unit tests and SRN graphs, 256 is the
+#: paper's 8x8 array at 4 vertices/PE, 1024 covers the Fig-12 16x16 scaling
+#: point. Ext.LRN (16k) is validated against the native rust reference
+#: instead (a 16k^2 dense matrix is out of scope for the golden model).
+SIZES = (16, 64, 256, 1024)
+
+#: (entry point, sizes) pairs to export.
+EXPORTS = [
+    ("relax_step", SIZES),
+    ("relax_k8", (16, 64, 256)),
+    ("relax_step_count", (16, 64, 256)),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "return_tuple": True, "modules": []}
+    for name, sizes in EXPORTS:
+        for n in sizes:
+            text = to_hlo_text(model.lower(name, n))
+            fname = f"{name}_n{n}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["modules"].append(
+                {
+                    "name": name,
+                    "n": n,
+                    "file": fname,
+                    "inputs": [f"f32[{n}]", f"f32[{n},{n}]"],
+                    "outputs": 2 if name == "relax_step_count" else 1,
+                    "scan_k": model.SCAN_K if name == "relax_k8" else None,
+                }
+            )
+            print(f"wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    export_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

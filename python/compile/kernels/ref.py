@@ -1,0 +1,97 @@
+"""Pure-jnp oracle for the FLIP golden-model compute.
+
+The FLIP fabric executes graph workloads as distributed, asynchronous
+min-plus relaxation over the vertex set.  The dense golden model expresses
+one *synchronous* relaxation step:
+
+    d'[v] = min(d[v], min_u (d[u] + W[u, v]))
+
+with ``W[u, v] = +inf`` when there is no edge ``u -> v``.  Iterating to
+fixpoint yields:
+
+  * **SSSP** distances (W = edge weights, d0 = 0 at source, inf elsewhere)
+  * **BFS** levels      (W = 1 on edges)
+  * **WCC** labels      (W = 0 on edges, d0 = vertex index) — min-label
+    propagation over the undirected edge set.
+
+These functions are the correctness oracle for the Pallas kernel
+(`relax.py`) and, transitively, for the Rust cycle-accurate simulator
+(which must agree with the AOT-compiled HLO built from the kernel).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+INF = np.float32(np.inf)
+
+
+def relax_step_ref(d: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """One synchronous min-plus relaxation step (the oracle).
+
+    d: f32[n]    current tentative attributes (inf = unreached)
+    w: f32[n, n] dense adjacency, w[u, v] = weight of edge u->v, inf = no edge
+    """
+    cand = jnp.min(d[:, None] + w, axis=0)
+    return jnp.minimum(d, cand)
+
+
+def relax_k_ref(d: jnp.ndarray, w: jnp.ndarray, k: int) -> jnp.ndarray:
+    """k synchronous relaxation steps (oracle for the lax.scan variant)."""
+    for _ in range(k):
+        d = relax_step_ref(d, w)
+    return d
+
+
+def relax_fixpoint_ref(d: np.ndarray, w: np.ndarray, max_iter: int | None = None) -> np.ndarray:
+    """Iterate relax_step_ref to fixpoint (numpy, exact convergence check)."""
+    d = np.asarray(d, dtype=np.float32)
+    w = np.asarray(w, dtype=np.float32)
+    n = d.shape[0]
+    limit = max_iter if max_iter is not None else n + 1
+    for _ in range(limit):
+        nxt = np.minimum(d, np.min(d[:, None] + w, axis=0))
+        if np.array_equal(nxt, d, equal_nan=True):
+            return nxt
+        d = nxt
+    return d
+
+
+def adjacency_from_edges(n: int, edges, weights=None, undirected: bool = False) -> np.ndarray:
+    """Build the dense f32 adjacency with +inf non-edges.
+
+    edges: iterable of (u, v); weights: per-edge f32 (default 1.0).
+    Parallel edges keep the minimum weight (matches CSR semantics in rust).
+    """
+    w = np.full((n, n), INF, dtype=np.float32)
+    for i, (u, v) in enumerate(edges):
+        wt = np.float32(1.0) if weights is None else np.float32(weights[i])
+        w[u, v] = min(w[u, v], wt)
+        if undirected:
+            w[v, u] = min(w[v, u], wt)
+    return w
+
+
+def sssp_ref(n: int, edges, weights, source: int, undirected: bool = True) -> np.ndarray:
+    """SSSP distances via dense relaxation (Bellman-Ford fixpoint)."""
+    w = adjacency_from_edges(n, edges, weights, undirected)
+    d = np.full(n, INF, dtype=np.float32)
+    d[source] = 0.0
+    return relax_fixpoint_ref(d, w)
+
+
+def bfs_levels_ref(n: int, edges, source: int, undirected: bool = True) -> np.ndarray:
+    """BFS levels = SSSP with unit weights."""
+    w = adjacency_from_edges(n, edges, None, undirected)
+    d = np.full(n, INF, dtype=np.float32)
+    d[source] = 0.0
+    return relax_fixpoint_ref(d, w)
+
+
+def wcc_labels_ref(n: int, edges) -> np.ndarray:
+    """WCC labels via min-label propagation (zero-weight, undirected)."""
+    edges = list(edges)
+    w = adjacency_from_edges(n, edges, [0.0] * len(edges), undirected=True)
+    d = np.arange(n, dtype=np.float32)
+    return relax_fixpoint_ref(d, w)

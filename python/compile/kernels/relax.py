@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: tiled dense min-plus relaxation step.
+
+This is the compute hot-spot of the FLIP golden model.  One step computes
+
+    d'[v] = min(d[v], min_u (d[u] + W[u, v]))
+
+over a dense f32 adjacency W (inf = no edge).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the paper's fabric is a
+22nm CGRA, so there is no CUDA kernel to port — instead the *algorithmic
+core* (frontier relaxation) is tiled for VMEM.  The grid is
+(n/TILE_V destination tiles, n/TILE_U source tiles) with the source axis
+innermost, so each output block stays resident while all source tiles are
+reduced into it (the Pallas analogue of per-PE accumulation in FLIP).
+min/add run on the VPU — the op is memory-bound (one f32 load per W entry,
+O(1) flops each), so the roofline target is HBM bandwidth, not the MXU.
+
+Must be lowered with ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Default tile edge. 256-vertex graphs (the 8x8 FLIP array at 4 vertices/PE)
+#: tile as 4x4 blocks of 64; smaller graphs use a single tile.
+DEFAULT_TILE = 64
+
+
+def _pick_tile(n: int, tile: int | None) -> int:
+    t = min(tile or DEFAULT_TILE, n)
+    while n % t != 0:  # shapes are padded to powers of two upstream
+        t -= 1
+    return max(t, 1)
+
+
+def _relax_kernel(d_src_ref, d_dst_ref, w_ref, o_ref):
+    """Grid cell (i, j): fold source tile j into destination tile i.
+
+    o[i] is initialised from d on the first source tile and revisited
+    (same output block) for every j — accumulation across the inner grid
+    axis, as the Pallas revisiting-output-block idiom.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = d_dst_ref[...]
+
+    # min over the source axis of (d[u] + W[u, v]) for this tile pair.
+    cand = jnp.min(d_src_ref[...][:, None] + w_ref[...], axis=0)
+    o_ref[...] = jnp.minimum(o_ref[...], cand)
+
+
+def relax_step(d: jnp.ndarray, w: jnp.ndarray, *, tile: int | None = None) -> jnp.ndarray:
+    """One min-plus relaxation step as a Pallas call.
+
+    d: f32[n], w: f32[n, n]  ->  f32[n]
+    """
+    n = d.shape[0]
+    assert w.shape == (n, n), f"adjacency must be square, got {w.shape}"
+    t = _pick_tile(n, tile)
+    grid = (n // t, n // t)
+    return pl.pallas_call(
+        _relax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t,), lambda i, j: (j,)),   # d as source tile
+            pl.BlockSpec((t,), lambda i, j: (i,)),   # d as dest-init tile
+            pl.BlockSpec((t, t), lambda i, j: (j, i)),  # W tile (src, dst)
+        ],
+        out_specs=pl.BlockSpec((t,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(d, d, w)
+
+
+def relax_k(d: jnp.ndarray, w: jnp.ndarray, k: int, *, tile: int | None = None) -> jnp.ndarray:
+    """k relaxation steps under lax.scan (amortizes PJRT dispatch in rust)."""
+    step = functools.partial(relax_step, tile=tile)
+
+    def body(carry, _):
+        return step(carry, w), None
+
+    out, _ = jax.lax.scan(body, d, None, length=k)
+    return out
+
+
+def changed_count(d_old: jnp.ndarray, d_new: jnp.ndarray) -> jnp.ndarray:
+    """Number of vertices whose attribute changed (fixpoint detection)."""
+    return jnp.sum((d_old != d_new).astype(jnp.int32))

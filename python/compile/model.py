@@ -1,0 +1,52 @@
+"""L2 JAX model: the FLIP golden-model compute graph.
+
+Composes the L1 Pallas kernel (`kernels.relax`) into the exported entry
+points.  Each entry point is a pure function of dense arrays — lowered once
+by `aot.py` to HLO text and executed from the Rust runtime
+(`rust/src/runtime`) via PJRT.  Python never runs on the request path.
+
+Exported programs (all return 1-tuples, unwrapped with `to_tuple1` in rust):
+
+  relax_step(d, w)            -> (d',)              one synchronous step
+  relax_k(d, w)               -> (d',)              K steps via lax.scan
+  relax_step_count(d, w)      -> (d', changed)      step + fixpoint counter
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import relax
+
+#: Step count for the scanned variant; 8 amortizes PJRT dispatch while
+#: keeping the artifact small (road-network diameters are ~tens of steps).
+SCAN_K = 8
+
+
+def relax_step_fn(d, w):
+    return (relax.relax_step(d, w),)
+
+
+def relax_k_fn(d, w):
+    return (relax.relax_k(d, w, SCAN_K),)
+
+
+def relax_step_count_fn(d, w):
+    d2 = relax.relax_step(d, w)
+    return (d2, relax.changed_count(d, d2))
+
+
+ENTRY_POINTS = {
+    "relax_step": relax_step_fn,
+    "relax_k8": relax_k_fn,
+    "relax_step_count": relax_step_count_fn,
+}
+
+
+def lower(name: str, n: int):
+    """Lower entry point `name` for an n-vertex dense graph; returns Lowered."""
+    fn = ENTRY_POINTS[name]
+    d_spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    w_spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    return jax.jit(fn).lower(d_spec, w_spec)

@@ -1,0 +1,93 @@
+"""L1 correctness: Pallas relax kernel vs pure-jnp oracle.
+
+Hypothesis sweeps graph sizes, tile choices, weight ranges and inf
+patterns; every case asserts exact f32 agreement with `ref.relax_step_ref`
+(the kernel performs the same adds/mins, so results are bit-identical).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, relax
+
+INF = np.float32(np.inf)
+
+
+def random_case(rng: np.random.Generator, n: int, density: float):
+    w = rng.uniform(0.5, 10.0, size=(n, n)).astype(np.float32)
+    mask = rng.uniform(size=(n, n)) > density
+    w[mask] = INF
+    np.fill_diagonal(w, INF)
+    d = rng.uniform(0.0, 20.0, size=n).astype(np.float32)
+    d[rng.uniform(size=n) > 0.5] = INF
+    if np.all(np.isinf(d)):
+        d[0] = 0.0
+    return d, w
+
+
+@pytest.mark.parametrize("n", [1, 2, 4, 8, 16, 64])
+def test_matches_ref_exact(n):
+    rng = np.random.default_rng(n)
+    d, w = random_case(rng, n, 0.3)
+    got = np.asarray(relax.relax_step(d, w))
+    want = np.asarray(ref.relax_step_ref(d, w))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.sampled_from([2, 3, 4, 6, 8, 12, 16, 24, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    density=st.floats(0.05, 0.9),
+    tile=st.sampled_from([None, 1, 2, 4, 8, 64]),
+)
+def test_matches_ref_hypothesis(n, seed, density, tile):
+    rng = np.random.default_rng(seed)
+    d, w = random_case(rng, n, density)
+    got = np.asarray(relax.relax_step(d, w, tile=tile))
+    want = np.asarray(ref.relax_step_ref(d, w))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2**31 - 1))
+def test_monotone_nonincreasing(n, seed):
+    """Relaxation never increases any attribute (simulator invariant too)."""
+    rng = np.random.default_rng(seed)
+    d, w = random_case(rng, n, 0.4)
+    out = np.asarray(relax.relax_step(d, w))
+    assert np.all((out <= d) | (np.isinf(out) & np.isinf(d)))
+
+
+def test_all_inf_edges_is_identity():
+    n = 8
+    d = np.arange(n, dtype=np.float32)
+    w = np.full((n, n), INF, dtype=np.float32)
+    out = np.asarray(relax.relax_step(d, w))
+    np.testing.assert_array_equal(out, d)
+
+
+def test_fixpoint_is_idempotent():
+    rng = np.random.default_rng(7)
+    d, w = random_case(rng, 16, 0.3)
+    fp = ref.relax_fixpoint_ref(d, w)
+    out = np.asarray(relax.relax_step(fp, w))
+    np.testing.assert_array_equal(out, fp)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 5))
+def test_relax_k_equals_iterated_step(seed, k):
+    rng = np.random.default_rng(seed)
+    d, w = random_case(rng, 8, 0.4)
+    got = np.asarray(relax.relax_k(d, w, k))
+    want = np.asarray(ref.relax_k_ref(d, w, k))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_changed_count():
+    a = np.array([0.0, 1.0, INF, 3.0], dtype=np.float32)
+    b = np.array([0.0, 0.5, INF, 2.0], dtype=np.float32)
+    assert int(relax.changed_count(a, b)) == 2
+    assert int(relax.changed_count(a, a)) == 0

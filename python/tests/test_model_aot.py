@@ -1,0 +1,53 @@
+"""L2 shape/lowering checks and AOT artifact validity."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_entry_points_execute():
+    n = 16
+    rng = np.random.default_rng(0)
+    d = rng.uniform(0, 5, n).astype(np.float32)
+    w = rng.uniform(0.5, 3, (n, n)).astype(np.float32)
+    (out,) = model.relax_step_fn(d, w)
+    assert out.shape == (n,)
+    (out_k,) = model.relax_k_fn(d, w)
+    want = ref.relax_k_ref(d, w, model.SCAN_K)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(want))
+    d2, changed = model.relax_step_count_fn(d, w)
+    assert d2.shape == (n,)
+    assert int(changed) == int(np.sum(np.asarray(out) != d))
+
+
+@pytest.mark.parametrize("name", list(model.ENTRY_POINTS))
+def test_lowering_produces_hlo_text(name, tmp_path):
+    text = aot.to_hlo_text(model.lower(name, 16))
+    assert "HloModule" in text
+    assert "f32[16,16]" in text
+
+
+def test_export_all_manifest(tmp_path):
+    # Patch sizes down so the test is fast.
+    orig = aot.EXPORTS
+    aot.EXPORTS = [("relax_step", (16,)), ("relax_step_count", (16,))]
+    try:
+        manifest = aot.export_all(str(tmp_path))
+    finally:
+        aot.EXPORTS = orig
+    files = os.listdir(tmp_path)
+    assert "relax_step_n16.hlo.txt" in files
+    assert "manifest.json" in files
+    with open(tmp_path / "manifest.json") as f:
+        m = json.load(f)
+    assert m == manifest
+    mods = {x["name"]: x for x in m["modules"]}
+    assert mods["relax_step"]["outputs"] == 1
+    assert mods["relax_step_count"]["outputs"] == 2
+    with open(tmp_path / "relax_step_n16.hlo.txt") as f:
+        assert f.read().startswith("HloModule")

@@ -1,0 +1,54 @@
+//! Bench: FLIP compiler phases (Fig 13 timing source) and ablations
+//! (beam-only vs +local-opt vs layout-sort-off).
+
+mod common;
+
+use flip::compiler::{compile, CompileOpts};
+use flip::config::ArchConfig;
+use flip::graph::datasets::{self, Group};
+
+fn main() {
+    let cfg = ArchConfig::default();
+    common::section("FLIP compiler per dataset group (Fig 13b)");
+    for group in Group::ON_CHIP {
+        let g = datasets::generate_one(group, 0, 42);
+        common::bench(
+            &format!("{} (|V|={} |E|={})", group.name(), g.num_vertices(), g.num_edges()),
+            1,
+            5,
+            || {
+                compile(&g, &cfg, &CompileOpts::default());
+            },
+        );
+    }
+
+    common::section("Ablations (LRN)");
+    let g = datasets::generate_one(Group::Lrn, 0, 42);
+    let full = compile(&g, &cfg, &CompileOpts::default());
+    let beam_only =
+        compile(&g, &cfg, &CompileOpts { skip_local_opt: true, ..Default::default() });
+    common::bench("beam search only", 1, 5, || {
+        compile(&g, &cfg, &CompileOpts { skip_local_opt: true, ..Default::default() });
+    });
+    common::bench("beam + local optimization", 1, 5, || {
+        compile(&g, &cfg, &CompileOpts::default());
+    });
+    common::bench("no farthest-first layout sort", 1, 5, || {
+        compile(&g, &cfg, &CompileOpts { skip_layout_sort: true, ..Default::default() });
+    });
+    println!(
+        "    -> routing length: beam-only {:.3} vs optimized {:.3}; congested arcs {} vs {}",
+        beam_only.stats.avg_routing_length,
+        full.stats.avg_routing_length,
+        beam_only.stats.congested_edges,
+        full.stats.congested_edges
+    );
+
+    common::section("Scaling (road networks)");
+    for (n, lo, hi) in [(64usize, 146usize, 166usize), (128, 292, 330), (256, 584, 650)] {
+        let g = flip::graph::generate::road_network(n, lo, hi, 7);
+        common::bench(&format!("|V|={n}"), 1, 3, || {
+            compile(&g, &cfg, &CompileOpts::default());
+        });
+    }
+}

@@ -1,0 +1,30 @@
+//! Bench: regenerate EVERY table and figure of the paper (quick scale) —
+//! the single entry point that reproduces the evaluation section.
+//! `cargo bench --bench bench_exp` prints the paper-shaped rows.
+
+mod common;
+
+use flip::experiments::{registry, ExpEnv};
+
+fn main() {
+    let mut env = ExpEnv::quick();
+    env.graphs_per_group = 3;
+    env.sources_per_graph = 2;
+    // keep Ext. LRN light under the bench harness
+    let heavy = ["scalability"];
+    for (id, desc, driver) in registry() {
+        common::section(&format!("{id} — {desc}"));
+        let mut e = env.clone();
+        if heavy.contains(&id) {
+            e.graphs_per_group = 1;
+        }
+        let t0 = std::time::Instant::now();
+        match driver(&e) {
+            Ok(text) => {
+                println!("{text}");
+                println!("[{id} regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+            }
+            Err(err) => println!("[{id} FAILED: {err}]"),
+        }
+    }
+}

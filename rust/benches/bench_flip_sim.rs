@@ -1,0 +1,50 @@
+//! Bench: cycle-accurate FLIP simulator throughput — the L3 hot path.
+//! Reports wall time per run and simulated PE-cycles/second (the §Perf
+//! target in DESIGN.md is ≥10M PE-cycles/s).
+
+mod common;
+
+use flip::compiler::{compile, CompileOpts};
+use flip::config::ArchConfig;
+use flip::graph::datasets::{self, Group};
+use flip::sim::flip::{run, SimOptions};
+use flip::workloads::Workload;
+
+fn main() {
+    let cfg = ArchConfig::default();
+    common::section("FLIP cycle-accurate simulator");
+    for (group, w) in [
+        (Group::Lrn, Workload::Bfs),
+        (Group::Lrn, Workload::Sssp),
+        (Group::Lrn, Workload::Wcc),
+        (Group::Syn, Workload::Wcc),
+    ] {
+        let g = datasets::generate_one(group, 0, 42);
+        let view = flip::workloads::view_for(w, &g);
+        let c = compile(&view, &cfg, &CompileOpts::default());
+        let mut cycles = 0u64;
+        let r = common::bench(
+            &format!("{} on {} (|V|={} |E|={})", w.name(), group.name(), g.num_vertices(), g.num_edges()),
+            2,
+            10,
+            || {
+                let r = run(&c, w, 0, &SimOptions::default()).unwrap();
+                cycles = r.cycles;
+            },
+        );
+        let pe_cycles_per_s = cycles as f64 * cfg.num_pes() as f64 / (r.mean_ms / 1e3);
+        println!(
+            "    -> {} sim cycles/run, {:.1}M simulated PE-cycles/s",
+            cycles,
+            pe_cycles_per_s / 1e6
+        );
+    }
+
+    common::section("FLIP simulator with data swapping (2 copies)");
+    let g = flip::graph::generate::road_network(384, 880, 1100, 9);
+    let c = compile(&g, &cfg, &CompileOpts::default());
+    let opts = SimOptions { max_cycles: 1_000_000_000, watchdog: 5_000_000, ..Default::default() };
+    common::bench("BFS with slice swapping (|V|=384)", 1, 5, || {
+        run(&c, Workload::Bfs, 0, &opts).unwrap();
+    });
+}

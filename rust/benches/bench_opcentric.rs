@@ -1,0 +1,39 @@
+//! Bench: operation-centric baseline — modulo scheduling (the classic
+//! CGRA compile path, Fig 13a) and execution-model throughput.
+
+mod common;
+
+use flip::config::ArchConfig;
+use flip::graph::datasets::{self, Group};
+use flip::sim::{modulo, opcentric};
+use flip::workloads::{dfgs, Workload};
+
+fn main() {
+    let cfg = ArchConfig::default();
+    common::section("Modulo scheduling + SA placement (per kernel)");
+    for (name, d) in [
+        ("BFS u1", dfgs::bfs_dfg()),
+        ("BFS u3", dfgs::bfs_dfg().unrolled(3)),
+        ("WCC u1", dfgs::wcc_dfg()),
+        ("SSSP search", dfgs::sssp_search_dfg()),
+        ("SSSP update", dfgs::sssp_update_dfg()),
+    ] {
+        let mut out = None;
+        common::bench(&format!("map {name} ({} ops)", d.num_ops()), 1, 5, || {
+            out = modulo::map(&d, cfg.array_w, cfg.array_h, 1, 64);
+        });
+        let s = out.unwrap();
+        println!("    -> II={} length={} routing={}", s.ii, s.length, s.routing_cost);
+    }
+
+    common::section("Op-centric execution model");
+    let g = datasets::generate_one(Group::Lrn, 0, 42);
+    for w in Workload::ALL {
+        let k = opcentric::compile_kernel(w, &cfg, 1, 1).unwrap();
+        let mut cycles = 0;
+        common::bench(&format!("{} on LRN", w.name()), 2, 10, || {
+            cycles = opcentric::run(&k, &g, 0).cycles;
+        });
+        println!("    -> {cycles} modeled cycles");
+    }
+}

@@ -1,0 +1,39 @@
+//! Bench: PJRT runtime — AOT artifact dispatch latency and golden-model
+//! fixpoint time (§Perf target: 256-vertex fixpoint < 50 ms).
+
+mod common;
+
+use flip::graph::generate;
+use flip::runtime::{default_artifact_dir, GoldenEngine};
+use flip::workloads::Workload;
+
+fn main() {
+    let engine = match GoldenEngine::load(&default_artifact_dir()) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("artifacts not built ({e}); run `make artifacts` first");
+            return;
+        }
+    };
+    common::section("PJRT dispatch latency (dense relax)");
+    for &n in &[16usize, 64, 256] {
+        let d = vec![f32::INFINITY; n];
+        let w = vec![f32::INFINITY; n * n];
+        common::bench(&format!("relax_step n={n}"), 3, 20, || {
+            engine.relax_step(&d, &w, n).unwrap();
+        });
+        common::bench(&format!("relax_k8  n={n} (scan amortized)"), 3, 20, || {
+            engine.relax_k8(&d, &w, n).unwrap();
+        });
+    }
+
+    common::section("Golden-model fixpoint (graph -> dense -> converged)");
+    let g = generate::road_network(256, 584, 650, 3);
+    common::bench("BFS golden, |V|=256 (pad 256)", 1, 5, || {
+        engine.golden_attrs(&g, Workload::Bfs, 0).unwrap().unwrap();
+    });
+    let small = generate::road_network(64, 146, 166, 3);
+    common::bench("SSSP golden, |V|=64 (pad 64)", 1, 5, || {
+        engine.golden_attrs(&small, Workload::Sssp, 0).unwrap().unwrap();
+    });
+}

@@ -1,0 +1,43 @@
+//! Minimal bench harness (criterion is not vendored offline): warmup +
+//! timed iterations with mean/min/max reporting.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: mean,
+        min_ms: times.iter().copied().fold(f64::MAX, f64::min),
+        max_ms: times.iter().copied().fold(0.0, f64::max),
+    };
+    println!(
+        "{:<44} {:>4} iters  mean {:>10.3} ms  min {:>10.3}  max {:>10.3}",
+        r.name, r.iters, r.mean_ms, r.min_ms, r.max_ms
+    );
+    r
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,148 @@
+//! Vertex-program ISA (paper §2, Fig 5; §5.1 instruction counts).
+//!
+//! Every PE stores the same tiny program in its Instruction Memory and runs
+//! it once per delivered packet.  The incoming message has already been
+//! combined with the edge weight by the Intra-Table stage (§3.1 "Each
+//! incoming packet is processed and updated with edge attributes before
+//! being fed to ALU"), so programs see `msg = attr_u ⊕ w(u,v)`.
+//!
+//! Instruction counts match §5.1 exactly:
+//!   BFS  5 (update) / 4 (no update)
+//!   SSSP 5 / 4
+//!   WCC  4 / 2
+
+/// One instruction. `acc` is the DRF attribute loaded by `Load`; `msg` is
+/// the weighted incoming message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instr {
+    /// acc = DRF[reg] (the destination vertex's current attribute).
+    Load,
+    /// msg = min(msg, acc).
+    Min,
+    /// If msg >= acc (no update possible) jump to `target`.
+    CmpBrGe(u8),
+    /// If msg >= acc, halt immediately (fused compare+halt, WCC's 2-cycle
+    /// no-update path).
+    CmpHaltGe,
+    /// DRF[reg] = msg.
+    Store,
+    /// Emit (vid, msg) to the ALUout buffer and halt.
+    ScatterHalt,
+    /// Stop.
+    Halt,
+}
+
+/// Result of running a vertex program for one delivered message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecResult {
+    /// Cycles spent in the ALU (= instructions executed).
+    pub cycles: u64,
+    /// New attribute if the vertex updated (to be scattered), else None.
+    pub scatter: Option<u32>,
+}
+
+/// Execute `prog` with message `msg` against attribute `attr`.
+/// Returns the result and the new attribute value.
+pub fn execute(prog: &[Instr], msg: u32, attr: u32) -> (ExecResult, u32) {
+    let mut acc = 0u32;
+    let mut m = msg;
+    let mut new_attr = attr;
+    let mut cycles = 0u64;
+    let mut scatter = None;
+    let mut pc = 0usize;
+    while pc < prog.len() {
+        cycles += 1;
+        match prog[pc] {
+            Instr::Load => acc = attr,
+            Instr::Min => m = m.min(acc),
+            Instr::CmpBrGe(target) => {
+                if m >= acc {
+                    pc = target as usize;
+                    continue;
+                }
+            }
+            Instr::CmpHaltGe => {
+                if m >= acc {
+                    break;
+                }
+            }
+            Instr::Store => new_attr = m,
+            Instr::ScatterHalt => {
+                scatter = Some(m);
+                break;
+            }
+            Instr::Halt => break,
+        }
+        pc += 1;
+    }
+    (ExecResult { cycles, scatter }, new_attr)
+}
+
+/// BFS / SSSP program (§5.1: 5 instructions with update, 4 without):
+/// Load, Min, CmpBrGe→Halt, Store, ScatterHalt, Halt.
+pub const PROG_RELAX: &[Instr] = &[
+    Instr::Load,
+    Instr::Min,
+    Instr::CmpBrGe(5),
+    Instr::Store,
+    Instr::ScatterHalt,
+    Instr::Halt,
+];
+
+/// WCC program (§5.1: 4 instructions with update, 2 without):
+/// Load, CmpHaltGe, Store, ScatterHalt.
+pub const PROG_WCC: &[Instr] = &[Instr::Load, Instr::CmpHaltGe, Instr::Store, Instr::ScatterHalt];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relax_update_path_is_5_cycles() {
+        // attr=10, msg=4 -> update to 4, scatter
+        let (r, attr) = execute(PROG_RELAX, 4, 10);
+        assert_eq!(r.cycles, 5);
+        assert_eq!(r.scatter, Some(4));
+        assert_eq!(attr, 4);
+    }
+
+    #[test]
+    fn relax_noupdate_path_is_4_cycles() {
+        let (r, attr) = execute(PROG_RELAX, 10, 4);
+        assert_eq!(r.cycles, 4);
+        assert_eq!(r.scatter, None);
+        assert_eq!(attr, 4);
+    }
+
+    #[test]
+    fn relax_equal_is_noupdate() {
+        let (r, attr) = execute(PROG_RELAX, 4, 4);
+        assert_eq!(r.cycles, 4);
+        assert_eq!(r.scatter, None);
+        assert_eq!(attr, 4);
+    }
+
+    #[test]
+    fn wcc_update_path_is_4_cycles() {
+        let (r, attr) = execute(PROG_WCC, 2, 9);
+        assert_eq!(r.cycles, 4);
+        assert_eq!(r.scatter, Some(2));
+        assert_eq!(attr, 2);
+    }
+
+    #[test]
+    fn wcc_noupdate_path_is_2_cycles() {
+        let (r, attr) = execute(PROG_WCC, 9, 2);
+        assert_eq!(r.cycles, 2);
+        assert_eq!(r.scatter, None);
+        assert_eq!(attr, 2);
+    }
+
+    #[test]
+    fn inf_attr_always_updates() {
+        let (r, attr) = execute(PROG_RELAX, 0, u32::MAX);
+        assert_eq!(r.scatter, Some(0));
+        assert_eq!(attr, 0);
+        assert_eq!(r.cycles, 5);
+    }
+}

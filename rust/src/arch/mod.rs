@@ -1,0 +1,169 @@
+//! FLIP architecture model (paper §3): PE coordinates, packets, the two
+//! routing tables (Inter/Intra), and the vertex-program ISA.
+
+pub mod isa;
+pub mod packet;
+pub mod tables;
+
+pub use packet::Packet;
+pub use tables::{InterEntry, IntraTable, PeSliceConfig, SliceId};
+
+use crate::config::ArchConfig;
+
+/// PE coordinate on the mesh. `x` grows east, `y` grows south.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PeCoord {
+    pub x: u8,
+    pub y: u8,
+}
+
+impl PeCoord {
+    #[inline]
+    pub fn index(self, cfg: &ArchConfig) -> usize {
+        self.y as usize * cfg.array_w + self.x as usize
+    }
+
+    #[inline]
+    pub fn from_index(i: usize, cfg: &ArchConfig) -> PeCoord {
+        PeCoord { x: (i % cfg.array_w) as u8, y: (i / cfg.array_w) as u8 }
+    }
+
+    /// Manhattan distance in hops.
+    #[inline]
+    pub fn hops(self, other: PeCoord) -> u32 {
+        (self.x.abs_diff(other.x) + self.y.abs_diff(other.y)) as u32
+    }
+
+    /// Signed offset `(dx, dy)` from self to `other` (carried in packets).
+    #[inline]
+    pub fn offset_to(self, other: PeCoord) -> (i8, i8) {
+        (other.x as i8 - self.x as i8, other.y as i8 - self.y as i8)
+    }
+
+    /// 2×2-cluster index of this PE (data-swapping unit, §3.3).
+    #[inline]
+    pub fn cluster(self, cfg: &ArchConfig) -> usize {
+        let cw = cfg.array_w / cfg.cluster;
+        (self.y as usize / cfg.cluster) * cw + self.x as usize / cfg.cluster
+    }
+
+    /// Mesh neighbors (N/E/S/W) that exist.
+    pub fn neighbors(self, cfg: &ArchConfig) -> impl Iterator<Item = (Dir, PeCoord)> {
+        let (x, y) = (self.x as i32, self.y as i32);
+        let (w, h) = (cfg.array_w as i32, cfg.array_h as i32);
+        [
+            (Dir::North, (x, y - 1)),
+            (Dir::East, (x + 1, y)),
+            (Dir::South, (x, y + 1)),
+            (Dir::West, (x - 1, y)),
+        ]
+        .into_iter()
+        .filter(move |&(_, (nx, ny))| nx >= 0 && nx < w && ny >= 0 && ny < h)
+        .map(|(d, (nx, ny))| (d, PeCoord { x: nx as u8, y: ny as u8 }))
+    }
+}
+
+/// Mesh link direction, also used as input/output port index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dir {
+    North = 0,
+    East = 1,
+    South = 2,
+    West = 3,
+    /// The PE's own injection/delivery port.
+    Local = 4,
+}
+
+impl Dir {
+    pub const SIDES: [Dir; 4] = [Dir::North, Dir::East, Dir::South, Dir::West];
+    pub const ALL: [Dir; 5] = [Dir::North, Dir::East, Dir::South, Dir::West, Dir::Local];
+
+    /// The port on the receiving router that a packet sent in direction
+    /// `self` arrives on (e.g. sending East arrives on the West port).
+    pub fn opposite(self) -> Dir {
+        match self {
+            Dir::North => Dir::South,
+            Dir::East => Dir::West,
+            Dir::South => Dir::North,
+            Dir::West => Dir::East,
+            Dir::Local => Dir::Local,
+        }
+    }
+}
+
+/// YX dimension-ordered routing decision (§3.2): travel Y first, then X,
+/// based on the packet's remaining signed offset. `None` = deliver here.
+#[inline]
+pub fn yx_route(dx: i8, dy: i8) -> Option<Dir> {
+    if dy < 0 {
+        Some(Dir::North)
+    } else if dy > 0 {
+        Some(Dir::South)
+    } else if dx > 0 {
+        Some(Dir::East)
+    } else if dx < 0 {
+        Some(Dir::West)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ArchConfig {
+        ArchConfig::default()
+    }
+
+    #[test]
+    fn coord_index_roundtrip() {
+        let c = cfg();
+        for i in 0..c.num_pes() {
+            assert_eq!(PeCoord::from_index(i, &c).index(&c), i);
+        }
+    }
+
+    #[test]
+    fn hops_and_offsets() {
+        let a = PeCoord { x: 1, y: 2 };
+        let b = PeCoord { x: 4, y: 0 };
+        assert_eq!(a.hops(b), 5);
+        assert_eq!(a.offset_to(b), (3, -2));
+        assert_eq!(b.offset_to(a), (-3, 2));
+    }
+
+    #[test]
+    fn cluster_indexing() {
+        let c = cfg(); // 8x8, 2x2 clusters -> 4x4 grid of clusters
+        assert_eq!(PeCoord { x: 0, y: 0 }.cluster(&c), 0);
+        assert_eq!(PeCoord { x: 1, y: 1 }.cluster(&c), 0);
+        assert_eq!(PeCoord { x: 2, y: 0 }.cluster(&c), 1);
+        assert_eq!(PeCoord { x: 7, y: 7 }.cluster(&c), 15);
+    }
+
+    #[test]
+    fn neighbors_at_corner_and_center() {
+        let c = cfg();
+        let corner: Vec<_> = PeCoord { x: 0, y: 0 }.neighbors(&c).collect();
+        assert_eq!(corner.len(), 2);
+        let center: Vec<_> = PeCoord { x: 4, y: 4 }.neighbors(&c).collect();
+        assert_eq!(center.len(), 4);
+    }
+
+    #[test]
+    fn yx_routes_y_first() {
+        assert_eq!(yx_route(3, -2), Some(Dir::North));
+        assert_eq!(yx_route(3, 2), Some(Dir::South));
+        assert_eq!(yx_route(3, 0), Some(Dir::East));
+        assert_eq!(yx_route(-1, 0), Some(Dir::West));
+        assert_eq!(yx_route(0, 0), None);
+    }
+
+    #[test]
+    fn opposite_ports() {
+        for d in Dir::SIDES {
+            assert_eq!(d.opposite().opposite(), d);
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! NoC packet format (paper §3.1, Input Buffers):
+//! `(id_u, offset_v, attribute_u, slice_id_v)`.
+
+use super::tables::SliceId;
+
+/// A frontier-update message travelling the mesh.
+///
+/// `dx`/`dy` are the *remaining* signed hop offsets to the destination PE;
+/// the offset subtractor in each router decrements them as the packet
+/// moves (YX order: `dy` drains first).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Packet {
+    /// Source vertex id (`id_u`) — the vertex whose attribute changed.
+    pub src_vid: u32,
+    /// Updated attribute of the source vertex (`attribute_u`).
+    pub attr: u32,
+    /// Remaining X offset to the destination PE.
+    pub dx: i8,
+    /// Remaining Y offset to the destination PE.
+    pub dy: i8,
+    /// Slice holding the destination vertex (`slice_id_v`, §3.3).
+    pub slice: SliceId,
+}
+
+impl Packet {
+    /// True when the packet has reached its destination PE.
+    #[inline]
+    pub fn arrived(&self) -> bool {
+        self.dx == 0 && self.dy == 0
+    }
+
+    /// Apply one hop in direction `dir` (offset subtractor).
+    #[inline]
+    pub fn hop(mut self, dir: super::Dir) -> Packet {
+        match dir {
+            super::Dir::North => self.dy += 1,
+            super::Dir::South => self.dy -= 1,
+            super::Dir::East => self.dx -= 1,
+            super::Dir::West => self.dx += 1,
+            super::Dir::Local => {}
+        }
+        self
+    }
+
+    /// Remaining hops to destination.
+    #[inline]
+    pub fn remaining_hops(&self) -> u32 {
+        self.dx.unsigned_abs() as u32 + self.dy.unsigned_abs() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{yx_route, Dir};
+
+    #[test]
+    fn hop_drains_offsets() {
+        let mut p = Packet { src_vid: 1, attr: 7, dx: 2, dy: -1, slice: 0 };
+        assert_eq!(p.remaining_hops(), 3);
+        // YX: Y first
+        let d = yx_route(p.dx, p.dy).unwrap();
+        assert_eq!(d, Dir::North);
+        p = p.hop(d);
+        assert_eq!((p.dx, p.dy), (2, 0));
+        p = p.hop(yx_route(p.dx, p.dy).unwrap());
+        p = p.hop(yx_route(p.dx, p.dy).unwrap());
+        assert!(p.arrived());
+        assert_eq!(yx_route(p.dx, p.dy), None);
+    }
+}

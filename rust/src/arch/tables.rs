@@ -1,0 +1,184 @@
+//! Inter-PE and Intra-PE routing tables (paper §3.2, Fig 7) and the per-PE
+//! slice configuration loaded on data swap.
+
+/// Global slice identifier. The paper's Slice-ID register is 8-bit (on-chip
+/// graphs need ≤ #copies × #clusters ids); we widen to u16 so the Ext. LRN
+/// scalability experiment (16k vertices → up to 64 copies × 16 clusters)
+/// fits without loss of fidelity.
+pub type SliceId = u16;
+
+/// One Inter-Table entry: where (one of) vertex `src_reg`'s out-edges goes.
+///
+/// The hardware stores per-source linked lists with the four head entries at
+/// the headmost positions (§3.2.1); we store each list as a Vec in layout
+/// order (farthest-first after §4.3 sorting) — the simulator charges one
+/// cycle per entry walked, which is exactly the linked-list behaviour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InterEntry {
+    /// X hop offset to the destination PE.
+    pub dx: i8,
+    /// Y hop offset to the destination PE.
+    pub dy: i8,
+    /// Slice holding the destination vertex.
+    pub slice: SliceId,
+    /// Destination vertex id (diagnostic only; hardware resolves the vertex
+    /// at the destination via its Intra-Table).
+    pub dst_vid: u32,
+}
+
+impl InterEntry {
+    #[inline]
+    pub fn hops(&self) -> u32 {
+        self.dx.unsigned_abs() as u32 + self.dy.unsigned_abs() as u32
+    }
+}
+
+/// One Intra-Table entry: for a packet from `src_vid` arriving at this PE,
+/// which DRF register holds the destination vertex and the edge weight.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IntraEntry {
+    /// Source vertex id of the incoming edge (8-bit `src_id` in hardware).
+    pub src_vid: u32,
+    /// DRF register index of the destination vertex.
+    pub dst_reg: u8,
+    /// Edge weight, applied to the message before it enters the ALU.
+    pub weight: u32,
+}
+
+/// The Intra-Table: `NUM_BUCKETS` hash lists (hash = src_id % 8, §3.2.2).
+#[derive(Debug, Clone, Default)]
+pub struct IntraTable {
+    buckets: [Vec<IntraEntry>; IntraTable::NUM_BUCKETS],
+}
+
+impl IntraTable {
+    pub const NUM_BUCKETS: usize = 8;
+
+    #[inline]
+    fn bucket_of(src_vid: u32) -> usize {
+        (src_vid as usize) % Self::NUM_BUCKETS
+    }
+
+    pub fn insert(&mut self, e: IntraEntry) {
+        self.buckets[Self::bucket_of(e.src_vid)].push(e);
+    }
+
+    /// Zero-copy access to the hash bucket of `src_vid` (hot path: the
+    /// simulator filters matches inline without allocating).
+    #[inline]
+    pub fn bucket(&self, src_vid: u32) -> &[IntraEntry] {
+        &self.buckets[Self::bucket_of(src_vid)]
+    }
+
+    /// Look up all entries for `src_vid`. Returns `(matches, cycles)` where
+    /// `cycles` is the list positions walked (hash head is O(1), then a
+    /// sequential walk of the whole bucket list — matching entries for the
+    /// same source can sit anywhere in it).
+    pub fn lookup(&self, src_vid: u32) -> (Vec<IntraEntry>, u64) {
+        let bucket = &self.buckets[Self::bucket_of(src_vid)];
+        let matches: Vec<IntraEntry> =
+            bucket.iter().copied().filter(|e| e.src_vid == src_vid).collect();
+        (matches, bucket.len().max(1) as u64)
+    }
+
+    /// Average bucket-list length (paper: < 2 for edge graphs).
+    pub fn avg_list_len(&self) -> f64 {
+        let nonempty: Vec<usize> =
+            self.buckets.iter().map(|b| b.len()).filter(|&l| l > 0).collect();
+        if nonempty.is_empty() {
+            0.0
+        } else {
+            nonempty.iter().sum::<usize>() as f64 / nonempty.len() as f64
+        }
+    }
+
+    pub fn num_entries(&self) -> usize {
+        self.buckets.iter().map(|b| b.len()).sum()
+    }
+}
+
+/// Everything a PE must hold for one slice: the vertices in its DRF, the
+/// Inter-Table lists (one per DRF register) and the Intra-Table. Loaded
+/// from SPM/off-chip when the slice is swapped in.
+#[derive(Debug, Clone, Default)]
+pub struct PeSliceConfig {
+    /// `vertices[reg]` = vertex id stored in DRF register `reg`.
+    pub vertices: Vec<u32>,
+    /// Inter-Table: per DRF register, out-edge entries in layout order.
+    pub inter: Vec<Vec<InterEntry>>,
+    /// Intra-Table for packets destined to this PE in this slice.
+    pub intra: IntraTable,
+}
+
+impl PeSliceConfig {
+    /// DRF register of `vid`, if mapped here.
+    pub fn reg_of(&self, vid: u32) -> Option<u8> {
+        self.vertices.iter().position(|&v| v == vid).map(|r| r as u8)
+    }
+
+    /// Storage words occupied by this slice config on one PE
+    /// (vertex attrs + inter entries + intra entries); drives swap cost.
+    pub fn storage_words(&self) -> usize {
+        self.vertices.len()
+            + self.inter.iter().map(|l| l.len()).sum::<usize>()
+            + self.intra.num_entries()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intra_lookup_finds_all_matches() {
+        let mut t = IntraTable::default();
+        t.insert(IntraEntry { src_vid: 3, dst_reg: 0, weight: 5 });
+        t.insert(IntraEntry { src_vid: 11, dst_reg: 1, weight: 7 }); // same bucket (3 % 8 == 11 % 8)
+        t.insert(IntraEntry { src_vid: 3, dst_reg: 2, weight: 9 });
+        let (m, cycles) = t.lookup(3);
+        assert_eq!(m.len(), 2);
+        assert_eq!(cycles, 3); // walks whole bucket list
+        let (m11, _) = t.lookup(11);
+        assert_eq!(m11.len(), 1);
+        assert_eq!(m11[0].dst_reg, 1);
+    }
+
+    #[test]
+    fn intra_miss_costs_at_least_one_cycle() {
+        let t = IntraTable::default();
+        let (m, cycles) = t.lookup(42);
+        assert!(m.is_empty());
+        assert_eq!(cycles, 1);
+    }
+
+    #[test]
+    fn avg_list_len_counts_nonempty_buckets() {
+        let mut t = IntraTable::default();
+        t.insert(IntraEntry { src_vid: 0, dst_reg: 0, weight: 1 });
+        t.insert(IntraEntry { src_vid: 8, dst_reg: 1, weight: 1 });
+        t.insert(IntraEntry { src_vid: 1, dst_reg: 0, weight: 1 });
+        assert_eq!(t.avg_list_len(), 1.5); // buckets: [2, 1]
+    }
+
+    #[test]
+    fn slice_config_storage() {
+        let mut cfg = PeSliceConfig {
+            vertices: vec![10, 20],
+            inter: vec![
+                vec![InterEntry { dx: 1, dy: 0, slice: 0, dst_vid: 20 }],
+                vec![],
+            ],
+            intra: IntraTable::default(),
+        };
+        cfg.intra.insert(IntraEntry { src_vid: 10, dst_reg: 1, weight: 2 });
+        assert_eq!(cfg.reg_of(20), Some(1));
+        assert_eq!(cfg.reg_of(99), None);
+        assert_eq!(cfg.storage_words(), 2 + 1 + 1);
+    }
+
+    #[test]
+    fn inter_entry_hops() {
+        let e = InterEntry { dx: -2, dy: 3, slice: 0, dst_vid: 0 };
+        assert_eq!(e.hops(), 5);
+    }
+}

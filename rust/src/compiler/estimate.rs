@@ -1,0 +1,185 @@
+//! Run-time estimation model (paper Algorithm 2).
+//!
+//! Estimates the *partial run time* around a vertex pair: for every edge
+//! incident to either vertex,
+//!
+//! ```text
+//! t_trans = hops × t_h  (+ ε if endpoints share a cluster but not a slice)
+//! t_e     = congested ? worst-case sequential time over the collision set
+//!                     : t_trans + t_tab + t_exe
+//! ```
+//!
+//! A *collision set* (§4.1 "sequentialization") is the set of vertices on
+//! one PE that all receive edges from the same source vertex — they must
+//! execute sequentially.
+
+use super::Placement;
+use crate::config::ArchConfig;
+use crate::graph::Graph;
+
+/// Table-search time per delivery (paper: avg < 2 cycles).
+pub const T_TAB: u64 = 2;
+/// Vertex program execution time (update path, BFS/SSSP: 5 cycles).
+pub const T_EXE: u64 = 5;
+/// Penalty when an edge's endpoints share a cluster but live in different
+/// slices — they can never be co-resident, so every traversal implies a
+/// swap (§4.2.2 line 4). Scaled to the slice swap cost.
+pub const EPSILON: u64 = 200;
+
+/// Precomputed bidirectional incidence for partial-run-time sums.
+pub struct Estimator<'g> {
+    g: &'g Graph,
+    cfg: &'g ArchConfig,
+    t_hop: u64,
+    /// In-arcs per vertex: (src, weight-ignored multiplicity folded).
+    in_arcs: Vec<Vec<u32>>,
+}
+
+impl<'g> Estimator<'g> {
+    pub fn new(g: &'g Graph, cfg: &'g ArchConfig, t_hop: u64) -> Estimator<'g> {
+        let mut in_arcs: Vec<Vec<u32>> = vec![Vec::new(); g.num_vertices()];
+        for (u, v, _) in g.arcs() {
+            in_arcs[v as usize].push(u);
+        }
+        Estimator { g, cfg, t_hop, in_arcs }
+    }
+
+    /// Collision-set size for arc `u -> v` under `p`: how many distinct
+    /// destination vertices of `u` live on v's (copy, PE).
+    fn collision_size(&self, p: &Placement, u: u32, v: u32) -> usize {
+        let sv = p.slots[v as usize];
+        self.g
+            .neighbors(u)
+            .filter(|&(d, _)| {
+                let sd = p.slots[d as usize];
+                sd.copy == sv.copy && sd.pe == sv.pe
+            })
+            .count()
+    }
+
+    /// Estimated time of arc `u -> v` (Algorithm 2 lines 3–8).
+    pub fn edge_time(&self, p: &Placement, u: u32, v: u32) -> u64 {
+        let su = p.slots[u as usize];
+        let sv = p.slots[v as usize];
+        let mut t_trans = su.pe.hops(sv.pe) as u64 * self.t_hop;
+        if su.pe.cluster(self.cfg) == sv.pe.cluster(self.cfg) && su.copy != sv.copy {
+            t_trans += EPSILON;
+        }
+        let collision = self.collision_size(p, u, v);
+        if collision > 1 {
+            // worst case: v is last in the sequential drain of the set
+            t_trans + collision as u64 * (T_TAB + T_EXE)
+        } else {
+            t_trans + T_TAB + T_EXE
+        }
+    }
+
+    /// Partial run time around vertex `x`: sum over its in- and out-arcs.
+    pub fn partial_run_time(&self, p: &Placement, x: u32) -> u64 {
+        let out: u64 = self.g.neighbors(x).map(|(v, _)| self.edge_time(p, x, v)).sum();
+        let inn: u64 = self.in_arcs[x as usize].iter().map(|&u| self.edge_time(p, u, x)).sum();
+        out + inn
+    }
+
+    /// Benefit (positive = improvement) of swapping the placements of `a`
+    /// and `b` (Algorithm 2 lines 9–11).
+    pub fn swap_benefit(&self, p: &mut Placement, a: u32, b: u32) -> i64 {
+        let before = (self.partial_run_time(p, a) + self.partial_run_time(p, b)) as i64;
+        p.slots.swap(a as usize, b as usize);
+        let after = (self.partial_run_time(p, a) + self.partial_run_time(p, b)) as i64;
+        p.slots.swap(a as usize, b as usize);
+        before - after
+    }
+}
+
+/// Count congested arcs in a placement (Table 8 / MappingStats):
+/// arcs whose destination shares its PE with another destination of the
+/// same source.
+pub fn congested_edge_count(g: &Graph, p: &Placement) -> usize {
+    let mut count = 0;
+    for u in 0..g.num_vertices() as u32 {
+        let mut per_pe: std::collections::HashMap<(u16, crate::arch::PeCoord), usize> =
+            std::collections::HashMap::new();
+        for (v, _) in g.neighbors(u) {
+            let s = p.slots[v as usize];
+            *per_pe.entry((s.copy, s.pe)).or_insert(0) += 1;
+        }
+        count += per_pe.values().filter(|&&c| c > 1).map(|&c| c).sum::<usize>();
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::PeCoord;
+    use crate::compiler::Slot;
+
+    fn slot(x: u8, y: u8, copy: u16, reg: u8) -> Slot {
+        Slot { copy, pe: PeCoord { x, y }, reg }
+    }
+
+    /// star: 0 -> 1,2,3
+    fn star() -> Graph {
+        Graph::from_edges(4, &[(0, 1, 1), (0, 2, 1), (0, 3, 1)], true)
+    }
+
+    #[test]
+    fn uncongested_edge_time() {
+        let g = star();
+        let cfg = ArchConfig::default();
+        let p = Placement {
+            num_copies: 1,
+            slots: vec![slot(0, 0, 0, 0), slot(1, 0, 0, 0), slot(0, 1, 0, 0), slot(3, 3, 0, 0)],
+        };
+        let est = Estimator::new(&g, &cfg, 3);
+        // 0 -> 1: 1 hop * 3 + T_TAB + T_EXE
+        assert_eq!(est.edge_time(&p, 0, 1), 3 + T_TAB + T_EXE);
+        // 0 -> 3: 6 hops
+        assert_eq!(est.edge_time(&p, 0, 3), 18 + T_TAB + T_EXE);
+    }
+
+    #[test]
+    fn collision_detected_and_penalized() {
+        let g = star();
+        let cfg = ArchConfig::default();
+        // 1 and 2 on the same PE -> collision set of size 2
+        let p = Placement {
+            num_copies: 1,
+            slots: vec![slot(0, 0, 0, 0), slot(1, 0, 0, 0), slot(1, 0, 0, 1), slot(2, 0, 0, 0)],
+        };
+        let est = Estimator::new(&g, &cfg, 3);
+        assert_eq!(est.edge_time(&p, 0, 1), 3 + 2 * (T_TAB + T_EXE));
+        assert_eq!(congested_edge_count(&g, &p), 2);
+    }
+
+    #[test]
+    fn cross_slice_same_cluster_penalty() {
+        let g = Graph::from_edges(2, &[(0, 1, 1)], true);
+        let cfg = ArchConfig::default();
+        // same PE cluster (0,0)/(1,1), different copies
+        let p = Placement {
+            num_copies: 2,
+            slots: vec![slot(0, 0, 0, 0), slot(1, 1, 1, 0)],
+        };
+        let est = Estimator::new(&g, &cfg, 3);
+        assert_eq!(est.edge_time(&p, 0, 1), 2 * 3 + EPSILON + T_TAB + T_EXE);
+    }
+
+    #[test]
+    fn swap_benefit_positive_for_obvious_improvement() {
+        // path 0-1 with 1 placed far away; swapping 1 with a vertex
+        // adjacent to 0 must help.
+        let g = Graph::from_edges(3, &[(0, 1, 1)], true);
+        let cfg = ArchConfig::default();
+        let mut p = Placement {
+            num_copies: 1,
+            slots: vec![slot(0, 0, 0, 0), slot(7, 7, 0, 0), slot(1, 0, 0, 0)],
+        };
+        let est = Estimator::new(&g, &cfg, 3);
+        let benefit = est.swap_benefit(&mut p, 1, 2);
+        assert!(benefit > 0, "benefit {benefit}");
+        // swap_benefit must not mutate the placement
+        assert_eq!(p.slots[1], slot(7, 7, 0, 0));
+    }
+}

@@ -1,0 +1,248 @@
+//! FLIP compiler (paper §4): maps graph *vertices* onto the PE array and
+//! generates the Inter-/Intra-Table routing configuration.
+//!
+//! Pipeline (Algorithm 1):
+//! 1. [`place`] — beam-search initial placement minimizing total routing
+//!    length (§4.2.1), over the PE array replicated ⌈|V|/capacity⌉ times
+//!    for data swapping (§4.4).
+//! 2. [`optimize`] — local vertex-pair swaps guided by the run-time
+//!    estimation model (§4.2.2, Algorithm 2) to balance locality against
+//!    sequentialization.
+//! 3. [`tablegen`] — emit per-(PE, slice) routing tables with the
+//!    farthest-first Inter-Table layout (§4.3).
+
+pub mod estimate;
+pub mod optimize;
+pub mod place;
+pub mod tablegen;
+
+use crate::arch::{PeCoord, PeSliceConfig, SliceId};
+use crate::config::ArchConfig;
+use crate::graph::Graph;
+use crate::util::Rng;
+
+/// Where one vertex lives: PE-array copy (slice layer), PE, DRF register.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Slot {
+    pub copy: u16,
+    pub pe: PeCoord,
+    pub reg: u8,
+}
+
+/// A complete many-to-one vertex → PE mapping (`M` in the paper).
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub num_copies: usize,
+    /// Per-vertex slot.
+    pub slots: Vec<Slot>,
+}
+
+impl Placement {
+    /// Global slice id of a (cluster, copy) pair.
+    pub fn slice_id(cfg: &ArchConfig, cluster: usize, copy: u16) -> SliceId {
+        (copy as usize * cfg.num_clusters() + cluster) as SliceId
+    }
+
+    /// Slice holding vertex `v`.
+    pub fn slice_of(&self, cfg: &ArchConfig, v: u32) -> SliceId {
+        let s = self.slots[v as usize];
+        Self::slice_id(cfg, s.pe.cluster(cfg), s.copy)
+    }
+
+    /// Total routing length `f(M)`: Manhattan hops summed over all arcs.
+    pub fn total_routing_length(&self, g: &Graph) -> u64 {
+        g.arcs()
+            .map(|(u, v, _)| self.slots[u as usize].pe.hops(self.slots[v as usize].pe) as u64)
+            .sum()
+    }
+
+    /// Average routing length per arc (Table 8 row 1).
+    pub fn avg_routing_length(&self, g: &Graph) -> f64 {
+        if g.num_arcs() == 0 {
+            return 0.0;
+        }
+        self.total_routing_length(g) as f64 / g.num_arcs() as f64
+    }
+
+    /// Check structural validity: every vertex has a slot, register indices
+    /// are unique per (copy, PE), and capacity bounds hold.
+    pub fn validate(&self, g: &Graph, cfg: &ArchConfig) -> Result<(), String> {
+        if self.slots.len() != g.num_vertices() {
+            return Err(format!(
+                "slots {} != vertices {}",
+                self.slots.len(),
+                g.num_vertices()
+            ));
+        }
+        let mut used: std::collections::HashMap<(u16, usize), Vec<u8>> =
+            std::collections::HashMap::new();
+        for (v, s) in self.slots.iter().enumerate() {
+            if (s.copy as usize) >= self.num_copies {
+                return Err(format!("vertex {v}: copy {} out of range", s.copy));
+            }
+            if s.pe.x as usize >= cfg.array_w || s.pe.y as usize >= cfg.array_h {
+                return Err(format!("vertex {v}: PE {:?} out of array", s.pe));
+            }
+            if (s.reg as usize) >= cfg.drf_size {
+                return Err(format!("vertex {v}: reg {} out of DRF", s.reg));
+            }
+            let regs = used.entry((s.copy, s.pe.index(cfg))).or_default();
+            if regs.contains(&s.reg) {
+                return Err(format!("vertex {v}: duplicate reg {} on {:?}", s.reg, s.pe));
+            }
+            regs.push(s.reg);
+        }
+        Ok(())
+    }
+}
+
+/// Mapping-quality statistics (Table 8 inputs + Fig 13 timing).
+#[derive(Debug, Clone, Default)]
+pub struct MappingStats {
+    pub total_routing_length: u64,
+    pub avg_routing_length: f64,
+    /// Number of congested (collision-set) edges after optimization.
+    pub congested_edges: usize,
+    /// Wall-clock compile time, seconds.
+    pub compile_seconds: f64,
+    /// Beam-search phase seconds.
+    pub place_seconds: f64,
+    /// Local-optimization phase seconds.
+    pub optimize_seconds: f64,
+    /// Swaps applied during local optimization.
+    pub swaps_applied: usize,
+}
+
+/// The compiler's output: placement + per-(copy, PE) slice configurations.
+#[derive(Debug, Clone)]
+pub struct CompiledGraph {
+    pub cfg: ArchConfig,
+    pub placement: Placement,
+    /// `pe_slices[copy * num_pes + pe]` — the slice config loaded into
+    /// that PE when array-copy `copy` is resident.
+    pub pe_slices: Vec<PeSliceConfig>,
+    pub stats: MappingStats,
+}
+
+impl CompiledGraph {
+    #[inline]
+    pub fn slice_cfg(&self, copy: u16, pe_idx: usize) -> &PeSliceConfig {
+        &self.pe_slices[copy as usize * self.cfg.num_pes() + pe_idx]
+    }
+
+    /// Total slices = copies × clusters.
+    pub fn num_slices(&self) -> usize {
+        self.placement.num_copies * self.cfg.num_clusters()
+    }
+
+    /// True when the whole graph fits in one array copy (no swapping).
+    pub fn fits_on_chip(&self) -> bool {
+        self.placement.num_copies == 1
+    }
+}
+
+/// Compiler options.
+#[derive(Debug, Clone)]
+pub struct CompileOpts {
+    /// Beam width `k` (paper: 10).
+    pub beam_width: usize,
+    /// Estimated one-hop transmission time `t_h` for Algorithm 2.
+    pub t_hop: u64,
+    /// Consecutive no-improvement iterations before declaring stability.
+    pub stable_iters: usize,
+    /// Skip local optimization (ablation: beam search only).
+    pub skip_local_opt: bool,
+    /// Skip farthest-first Inter-Table sorting (ablation, §4.3).
+    pub skip_layout_sort: bool,
+    /// RNG seed for the local-optimization random PE walk.
+    pub seed: u64,
+}
+
+impl Default for CompileOpts {
+    fn default() -> Self {
+        CompileOpts {
+            beam_width: 10,
+            t_hop: ArchConfig::default().t_hop,
+            stable_iters: 256,
+            skip_local_opt: false,
+            skip_layout_sort: false,
+            seed: 0xF11F,
+        }
+    }
+}
+
+/// Compile a graph for a FLIP instance (Algorithm 1 end to end).
+pub fn compile(g: &Graph, cfg: &ArchConfig, opts: &CompileOpts) -> CompiledGraph {
+    let t0 = std::time::Instant::now();
+    let mut placement = place::initial_placement(g, cfg, opts);
+    let place_seconds = t0.elapsed().as_secs_f64();
+
+    let t1 = std::time::Instant::now();
+    let mut swaps = 0;
+    if !opts.skip_local_opt {
+        let mut rng = Rng::new(opts.seed);
+        swaps = optimize::local_optimize(&mut placement, g, cfg, opts, &mut rng);
+    }
+    let optimize_seconds = t1.elapsed().as_secs_f64();
+
+    let pe_slices = tablegen::build_tables(g, &placement, cfg, opts);
+    let stats = MappingStats {
+        total_routing_length: placement.total_routing_length(g),
+        avg_routing_length: placement.avg_routing_length(g),
+        congested_edges: estimate::congested_edge_count(g, &placement),
+        compile_seconds: t0.elapsed().as_secs_f64(),
+        place_seconds,
+        optimize_seconds,
+        swaps_applied: swaps,
+    };
+    debug_assert!(placement.validate(g, cfg).is_ok());
+    CompiledGraph { cfg: cfg.clone(), placement, pe_slices, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    #[test]
+    fn compile_small_graph_valid() {
+        let g = generate::synthetic(32, 64, 1);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts::default());
+        assert!(c.placement.validate(&g, &cfg).is_ok());
+        assert!(c.fits_on_chip());
+        assert_eq!(c.pe_slices.len(), cfg.num_pes());
+    }
+
+    #[test]
+    fn compile_replicates_for_large_graphs() {
+        let g = generate::synthetic(300, 600, 2); // > 256 capacity
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts::default());
+        assert_eq!(c.placement.num_copies, 2);
+        assert!(!c.fits_on_chip());
+        assert!(c.placement.validate(&g, &cfg).is_ok());
+    }
+
+    #[test]
+    fn slice_ids_unique_per_cluster_copy() {
+        let cfg = ArchConfig::default();
+        let mut seen = std::collections::HashSet::new();
+        for copy in 0..3u16 {
+            for cl in 0..cfg.num_clusters() {
+                assert!(seen.insert(Placement::slice_id(&cfg, cl, copy)));
+            }
+        }
+    }
+
+    #[test]
+    fn local_opt_does_not_worsen_validity() {
+        let g = generate::road_network(64, 146, 170, 3);
+        let cfg = ArchConfig::default();
+        let with = compile(&g, &cfg, &CompileOpts::default());
+        let without =
+            compile(&g, &cfg, &CompileOpts { skip_local_opt: true, ..Default::default() });
+        assert!(with.placement.validate(&g, &cfg).is_ok());
+        assert!(without.placement.validate(&g, &cfg).is_ok());
+    }
+}

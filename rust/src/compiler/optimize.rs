@@ -1,0 +1,154 @@
+//! Phase 2 — local optimization (paper Algorithm 1 lines 4–10).
+//!
+//! Repeatedly: pick a random PE `p`, form candidate vertex pairs between
+//! `p`'s vertices and its mesh neighbors' vertices, estimate the swap
+//! benefit with the run-time model (Algorithm 2), and apply the best
+//! positive swap. Stops when the mapping is stable (`stable_iters`
+//! consecutive iterations without an applied swap).
+
+use super::estimate::Estimator;
+use super::{CompileOpts, Placement};
+use crate::arch::PeCoord;
+use crate::config::ArchConfig;
+use crate::graph::Graph;
+use crate::util::Rng;
+
+/// Run local optimization in place; returns the number of swaps applied.
+pub fn local_optimize(
+    p: &mut Placement,
+    g: &Graph,
+    cfg: &ArchConfig,
+    opts: &CompileOpts,
+    rng: &mut Rng,
+) -> usize {
+    let est = Estimator::new(g, cfg, opts.t_hop);
+    // vertices per (copy, pe) index
+    let num_pes = cfg.num_pes();
+    let mut on_slot: Vec<Vec<u32>> = vec![Vec::new(); p.num_copies * num_pes];
+    for (v, s) in p.slots.iter().enumerate() {
+        on_slot[s.copy as usize * num_pes + s.pe.index(cfg)].push(v as u32);
+    }
+    let occupied: Vec<usize> =
+        (0..on_slot.len()).filter(|&i| !on_slot[i].is_empty()).collect();
+    if occupied.is_empty() {
+        return 0;
+    }
+
+    let mut swaps = 0usize;
+    let mut stale = 0usize;
+    // Hard cap bounds the walk on pathological inputs.
+    let max_iters = 64 * g.num_vertices().max(64);
+    for _ in 0..max_iters {
+        if stale >= opts.stable_iters {
+            break;
+        }
+        // random occupied (copy, PE)
+        let slot_idx = occupied[rng.below(occupied.len() as u64) as usize];
+        let copy = (slot_idx / num_pes) as u16;
+        let pe = PeCoord::from_index(slot_idx % num_pes, cfg);
+        // neighbor PEs (any copy) — the paper's P_p
+        let mut nbr_slots: Vec<usize> = Vec::new();
+        for (_, np) in pe.neighbors(cfg) {
+            for c in 0..p.num_copies {
+                let i = c * num_pes + np.index(cfg);
+                if !on_slot[i].is_empty() {
+                    nbr_slots.push(i);
+                }
+            }
+        }
+        // also allow same-PE different-copy pairs (cross-slice separation)
+        for c in 0..p.num_copies {
+            let i = c * num_pes + pe.index(cfg);
+            if c as u16 != copy && !on_slot[i].is_empty() {
+                nbr_slots.push(i);
+            }
+        }
+        if nbr_slots.is_empty() {
+            stale += 1;
+            continue;
+        }
+        // ψ = combination(V_p, V_P): evaluate all pairs, keep the best.
+        let mut best: Option<(i64, u32, u32)> = None;
+        let vp = on_slot[slot_idx].clone();
+        for &ni in &nbr_slots {
+            for &u in &vp {
+                for &v in &on_slot[ni] {
+                    let benefit = est.swap_benefit(p, u, v);
+                    if benefit > 0 && best.map_or(true, |(b, _, _)| benefit > b) {
+                        best = Some((benefit, u, v));
+                    }
+                }
+            }
+        }
+        if let Some((_, u, v)) = best {
+            // swap slots and bookkeeping
+            let (su, sv) = (p.slots[u as usize], p.slots[v as usize]);
+            p.slots.swap(u as usize, v as usize);
+            let iu = su.copy as usize * num_pes + su.pe.index(cfg);
+            let iv = sv.copy as usize * num_pes + sv.pe.index(cfg);
+            on_slot[iu].retain(|&x| x != u);
+            on_slot[iu].push(v);
+            on_slot[iv].retain(|&x| x != v);
+            on_slot[iv].push(u);
+            swaps += 1;
+            stale = 0;
+        } else {
+            stale += 1;
+        }
+    }
+    swaps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{place, Slot};
+    use crate::graph::generate;
+
+    #[test]
+    fn optimization_never_invalidates() {
+        let g = generate::road_network(96, 219, 249, 17);
+        let cfg = ArchConfig::default();
+        let opts = CompileOpts::default();
+        let mut p = place::beam_search_initial(&g, &cfg, &opts);
+        let mut rng = Rng::new(7);
+        local_optimize(&mut p, &g, &cfg, &opts, &mut rng);
+        p.validate(&g, &cfg).unwrap();
+    }
+
+    #[test]
+    fn optimization_reduces_estimated_cost() {
+        // Start from a deliberately bad placement: vertices scattered in
+        // id order (ignores adjacency entirely).
+        let g = generate::road_network(64, 146, 166, 23);
+        let cfg = ArchConfig::default();
+        let opts = CompileOpts { stable_iters: 512, ..Default::default() };
+        let mut slots = Vec::new();
+        for v in 0..g.num_vertices() {
+            let pe = PeCoord::from_index(v % cfg.num_pes(), &cfg);
+            slots.push(Slot { copy: 0, pe, reg: (v / cfg.num_pes()) as u8 });
+        }
+        let mut p = Placement { num_copies: 1, slots };
+        let before = p.total_routing_length(&g);
+        let mut rng = Rng::new(5);
+        let swaps = local_optimize(&mut p, &g, &cfg, &opts, &mut rng);
+        let after = p.total_routing_length(&g);
+        assert!(swaps > 0);
+        assert!(after < before, "routing length {before} -> {after}");
+        p.validate(&g, &cfg).unwrap();
+    }
+
+    #[test]
+    fn swap_count_deterministic_per_seed() {
+        let g = generate::synthetic(48, 96, 3);
+        let cfg = ArchConfig::default();
+        let opts = CompileOpts::default();
+        let base = place::beam_search_initial(&g, &cfg, &opts);
+        let mut p1 = base.clone();
+        let mut p2 = base.clone();
+        let s1 = local_optimize(&mut p1, &g, &cfg, &opts, &mut Rng::new(9));
+        let s2 = local_optimize(&mut p2, &g, &cfg, &opts, &mut Rng::new(9));
+        assert_eq!(s1, s2);
+        assert_eq!(p1.slots, p2.slots);
+    }
+}

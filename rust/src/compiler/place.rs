@@ -1,0 +1,352 @@
+//! Phase 1 — beam-search initial placement (paper §4.2.1).
+//!
+//! The graph center (minimum eccentricity) is seeded at the array center;
+//! the search tree is expanded one vertex per level, keeping the `k`
+//! lowest-routing-length partial mappings. Candidate vertices are the
+//! frontier of the mapped set; candidate PEs are occupied PEs and their
+//! mesh neighbors (with spare DRF capacity), exactly the paper's
+//! frontier-like candidate sets.
+
+use super::{CompileOpts, Placement, Slot};
+use crate::arch::PeCoord;
+use crate::config::ArchConfig;
+use crate::graph::Graph;
+
+/// Cap on frontier vertices evaluated per beam node per level.
+const V_CAN_CAP: usize = 12;
+/// Cap on candidate PEs evaluated per vertex.
+const P_CAN_CAP: usize = 16;
+
+struct BeamNode {
+    slots: Vec<Option<Slot>>,
+    /// occupancy[copy * num_pes + pe] = used DRF registers.
+    occupancy: Vec<u8>,
+    /// Physical PEs with at least one vertex (any copy).
+    occupied_pes: Vec<bool>,
+    /// Frontier: unmapped vertices adjacent to mapped ones (sorted set for
+    /// deterministic iteration).
+    frontier: std::collections::BTreeSet<u32>,
+    /// Total routing length of mapped-both-ends arcs (f(M)).
+    cost: u64,
+    mapped: usize,
+}
+
+impl BeamNode {
+    fn clone_from(&self) -> BeamNode {
+        BeamNode {
+            slots: self.slots.clone(),
+            occupancy: self.occupancy.clone(),
+            occupied_pes: self.occupied_pes.clone(),
+            frontier: self.frontier.clone(),
+            cost: self.cost,
+            mapped: self.mapped,
+        }
+    }
+}
+
+/// Bidirectional adjacency (graph edges as seen by the mapper: routing
+/// length counts every arc, frontier expansion uses both directions).
+pub(crate) struct BiAdj {
+    /// For each vertex: (neighbor, arc multiplicity in that direction).
+    pub nbrs: Vec<Vec<(u32, u32)>>,
+}
+
+impl BiAdj {
+    pub fn new(g: &Graph) -> BiAdj {
+        let n = g.num_vertices();
+        let mut nbrs: Vec<std::collections::BTreeMap<u32, u32>> = vec![Default::default(); n];
+        for (u, v, _) in g.arcs() {
+            *nbrs[u as usize].entry(v).or_insert(0) += 1;
+            *nbrs[v as usize].entry(u).or_insert(0) += 1;
+        }
+        BiAdj { nbrs: nbrs.into_iter().map(|m| m.into_iter().collect()).collect() }
+    }
+}
+
+/// Added routing length of placing `v` at physical PE `pe`, given current
+/// partial placement (sum over already-mapped neighbors, weighted by arc
+/// multiplicity).
+fn added_cost(v: u32, pe: PeCoord, adj: &BiAdj, slots: &[Option<Slot>]) -> u64 {
+    adj.nbrs[v as usize]
+        .iter()
+        .filter_map(|&(nbr, mult)| {
+            slots[nbr as usize].map(|s| mult as u64 * s.pe.hops(pe) as u64)
+        })
+        .sum()
+}
+
+/// Pick the copy index for a physical PE: lowest copy with spare capacity
+/// (keeps early copies geographically dense, which minimizes cross-slice
+/// traffic before phase 2 refines it).
+fn pick_copy(occupancy: &[u8], pe_idx: usize, num_pes: usize, num_copies: usize, drf: u8) -> Option<u16> {
+    (0..num_copies).find(|&c| occupancy[c * num_pes + pe_idx] < drf).map(|c| c as u16)
+}
+
+/// Phase-1 entry point: run beam search *and* the DFS-packing heuristic
+/// and keep whichever yields the lower total routing length. (The paper
+/// uses beam search alone; DFS packing is a cheap complementary
+/// initializer that excels on trees/paths where greedy frontier expansion
+/// scatters subtrees — see DESIGN.md.)
+pub fn initial_placement(g: &Graph, cfg: &ArchConfig, opts: &CompileOpts) -> Placement {
+    let beam = beam_search_initial(g, cfg, opts);
+    let packed = dfs_pack(g, cfg);
+    if packed.total_routing_length(g) < beam.total_routing_length(g) {
+        packed
+    } else {
+        beam
+    }
+}
+
+/// DFS-packing: vertices in DFS order from the graph center fill PEs four
+/// at a time along a serpentine walk of the array, so subtrees / path
+/// segments land on the same or adjacent PEs.
+pub fn dfs_pack(g: &Graph, cfg: &ArchConfig) -> Placement {
+    let n = g.num_vertices();
+    let num_copies = n.div_ceil(cfg.capacity());
+    let adj = BiAdj::new(g);
+    // DFS order from the center, restarting on unvisited components.
+    let mut order = Vec::with_capacity(n);
+    let mut seen = vec![false; n];
+    let mut stack = Vec::new();
+    let center = g.center();
+    for start in std::iter::once(center).chain(0..n as u32) {
+        if seen[start as usize] {
+            continue;
+        }
+        stack.push(start);
+        seen[start as usize] = true;
+        while let Some(v) = stack.pop() {
+            order.push(v);
+            for &(u, _) in adj.nbrs[v as usize].iter().rev() {
+                if !seen[u as usize] {
+                    seen[u as usize] = true;
+                    stack.push(u);
+                }
+            }
+        }
+    }
+    // serpentine PE walk: row-major, alternating direction per row
+    let mut pe_walk = Vec::with_capacity(cfg.num_pes());
+    for y in 0..cfg.array_h {
+        let xs: Vec<usize> = if y % 2 == 0 {
+            (0..cfg.array_w).collect()
+        } else {
+            (0..cfg.array_w).rev().collect()
+        };
+        for x in xs {
+            pe_walk.push(PeCoord { x: x as u8, y: y as u8 });
+        }
+    }
+    let mut slots = vec![
+        Slot { copy: 0, pe: PeCoord { x: 0, y: 0 }, reg: 0 };
+        n
+    ];
+    for (i, &v) in order.iter().enumerate() {
+        let slot_idx = i / cfg.drf_size;
+        let copy = (slot_idx / cfg.num_pes()) as u16;
+        let pe = pe_walk[slot_idx % cfg.num_pes()];
+        slots[v as usize] = Slot { copy, pe, reg: (i % cfg.drf_size) as u8 };
+    }
+    Placement { num_copies, slots }
+}
+
+pub fn beam_search_initial(g: &Graph, cfg: &ArchConfig, opts: &CompileOpts) -> Placement {
+    let n = g.num_vertices();
+    assert!(n > 0);
+    let num_copies = n.div_ceil(cfg.capacity());
+    let num_pes = cfg.num_pes();
+    let drf = cfg.drf_size as u8;
+    let adj = BiAdj::new(g);
+
+    // Root: graph center at array center, copy 0.
+    let vc = g.center();
+    let pc = PeCoord { x: (cfg.array_w / 2) as u8, y: (cfg.array_h / 2) as u8 };
+    let mut root = BeamNode {
+        slots: vec![None; n],
+        occupancy: vec![0; num_copies * num_pes],
+        occupied_pes: vec![false; num_pes],
+        frontier: Default::default(),
+        cost: 0,
+        mapped: 1,
+    };
+    root.slots[vc as usize] = Some(Slot { copy: 0, pe: pc, reg: 0 });
+    root.occupancy[pc.index(cfg)] = 1;
+    root.occupied_pes[pc.index(cfg)] = true;
+    for &(nbr, _) in &adj.nbrs[vc as usize] {
+        root.frontier.insert(nbr);
+    }
+
+    let mut beam = vec![root];
+    while beam[0].mapped < n {
+        // Collect scored successors: (beam idx, vertex, slot, new cost).
+        let mut succs: Vec<(usize, u32, Slot, u64)> = Vec::new();
+        for (bi, node) in beam.iter().enumerate() {
+            let v_can: Vec<u32> = if node.frontier.is_empty() {
+                // disconnected remainder: take the lowest unmapped vertex
+                (0..n as u32).find(|&v| node.slots[v as usize].is_none()).into_iter().collect()
+            } else {
+                // most-constrained-first: frontier vertices with the most
+                // already-mapped neighbors place best (their cost is known)
+                let mut ranked: Vec<(usize, u32)> = node
+                    .frontier
+                    .iter()
+                    .map(|&v| {
+                        let mapped_nbrs = adj.nbrs[v as usize]
+                            .iter()
+                            .filter(|&&(u, _)| node.slots[u as usize].is_some())
+                            .count();
+                        (mapped_nbrs, v)
+                    })
+                    .collect();
+                ranked.sort_unstable_by_key(|&(m, v)| (std::cmp::Reverse(m), v));
+                ranked.into_iter().take(V_CAN_CAP).map(|(_, v)| v).collect()
+            };
+            // Candidate physical PEs: occupied ∪ their neighbors, with
+            // spare capacity on some copy.
+            let mut p_can: Vec<usize> = Vec::new();
+            for pe_idx in 0..num_pes {
+                if !node.occupied_pes[pe_idx] {
+                    continue;
+                }
+                let pe = PeCoord::from_index(pe_idx, cfg);
+                if pick_copy(&node.occupancy, pe_idx, num_pes, num_copies, drf).is_some() {
+                    p_can.push(pe_idx);
+                }
+                for (_, np) in pe.neighbors(cfg) {
+                    let ni = np.index(cfg);
+                    if !node.occupied_pes[ni]
+                        && pick_copy(&node.occupancy, ni, num_pes, num_copies, drf).is_some()
+                    {
+                        p_can.push(ni);
+                    }
+                }
+            }
+            p_can.sort_unstable();
+            p_can.dedup();
+            for &v in &v_can {
+                // Rank candidate PEs by added cost; keep the best few.
+                let mut ranked: Vec<(u64, usize)> = p_can
+                    .iter()
+                    .map(|&pi| (added_cost(v, PeCoord::from_index(pi, cfg), &adj, &node.slots), pi))
+                    .collect();
+                ranked.sort_unstable();
+                for &(add, pi) in ranked.iter().take(P_CAN_CAP) {
+                    let copy = pick_copy(&node.occupancy, pi, num_pes, num_copies, drf)
+                        .expect("filtered for capacity");
+                    let pe = PeCoord::from_index(pi, cfg);
+                    let reg = node.occupancy[copy as usize * num_pes + pi];
+                    succs.push((bi, v, Slot { copy, pe, reg }, node.cost + add));
+                }
+            }
+        }
+        assert!(!succs.is_empty(), "beam search starved (capacity too small?)");
+        // Keep top-k by cost; deterministic tie-break on (vertex, pe).
+        succs.sort_by_key(|&(_, v, s, cost)| (cost, v, s.pe, s.copy));
+        succs.truncate(opts.beam_width);
+        let mut next = Vec::with_capacity(succs.len());
+        for (bi, v, slot, cost) in succs {
+            let mut node = beam[bi].clone_from();
+            node.slots[v as usize] = Some(slot);
+            node.occupancy[slot.copy as usize * num_pes + slot.pe.index(cfg)] += 1;
+            node.occupied_pes[slot.pe.index(cfg)] = true;
+            node.frontier.remove(&v);
+            for &(nbr, _) in &adj.nbrs[v as usize] {
+                if node.slots[nbr as usize].is_none() {
+                    node.frontier.insert(nbr);
+                }
+            }
+            node.cost = cost;
+            node.mapped += 1;
+            next.push(node);
+        }
+        beam = next;
+    }
+
+    let best = beam.into_iter().min_by_key(|b| b.cost).unwrap();
+    Placement {
+        num_copies,
+        slots: best.slots.into_iter().map(|s| s.unwrap()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    fn place(g: &Graph) -> Placement {
+        let cfg = ArchConfig::default();
+        let p = beam_search_initial(g, &cfg, &CompileOpts::default());
+        p.validate(g, &cfg).unwrap();
+        p
+    }
+
+    #[test]
+    fn places_all_vertices() {
+        let g = generate::synthetic(64, 128, 1);
+        let p = place(&g);
+        assert_eq!(p.slots.len(), 64);
+        assert_eq!(p.num_copies, 1);
+    }
+
+    #[test]
+    fn neighbors_placed_close() {
+        // A path graph should map with short (mostly 0/1-hop) edges.
+        let edges: Vec<(u32, u32, u32)> = (0..31).map(|i| (i, i + 1, 1)).collect();
+        let g = Graph::from_edges(32, &edges, false);
+        let p = place(&g);
+        assert!(
+            p.avg_routing_length(&g) < 1.0,
+            "path avg routing length {}",
+            p.avg_routing_length(&g)
+        );
+    }
+
+    #[test]
+    fn beats_random_placement() {
+        let g = generate::road_network(128, 292, 340, 5);
+        let cfg = ArchConfig::default();
+        let p = place(&g);
+        // random placement baseline
+        let mut rng = crate::util::Rng::new(1);
+        let mut slots: Vec<Slot> = Vec::new();
+        let mut occ = vec![0u8; cfg.num_pes()];
+        for _ in 0..g.num_vertices() {
+            loop {
+                let pi = rng.below(cfg.num_pes() as u64) as usize;
+                if (occ[pi] as usize) < cfg.drf_size {
+                    slots.push(Slot {
+                        copy: 0,
+                        pe: PeCoord::from_index(pi, &cfg),
+                        reg: occ[pi],
+                    });
+                    occ[pi] += 1;
+                    break;
+                }
+            }
+        }
+        let random = Placement { num_copies: 1, slots };
+        assert!(
+            p.total_routing_length(&g) < random.total_routing_length(&g) / 2,
+            "beam {} vs random {}",
+            p.total_routing_length(&g),
+            random.total_routing_length(&g)
+        );
+    }
+
+    #[test]
+    fn handles_disconnected_graphs() {
+        let g = Graph::from_edges(8, &[(0, 1, 1), (2, 3, 1), (4, 5, 1)], false);
+        let p = place(&g);
+        assert_eq!(p.slots.len(), 8);
+    }
+
+    #[test]
+    fn replicates_when_over_capacity() {
+        let g = generate::synthetic(300, 600, 3);
+        let cfg = ArchConfig::default();
+        let p = beam_search_initial(&g, &cfg, &CompileOpts::default());
+        assert_eq!(p.num_copies, 2);
+        p.validate(&g, &cfg).unwrap();
+    }
+}

@@ -1,0 +1,177 @@
+//! Phase 3 — routing-table generation (paper §3.2, Fig 7) with the
+//! farthest-first Inter-Table data layout (§4.3).
+
+use super::{CompileOpts, Placement};
+use crate::arch::tables::{IntraEntry, PeSliceConfig};
+use crate::arch::InterEntry;
+use crate::config::ArchConfig;
+use crate::graph::Graph;
+
+/// Build per-(copy, PE) slice configurations: DRF contents, Inter-Table
+/// lists (one per DRF register, farthest-first unless disabled), and the
+/// Intra-Table.
+pub fn build_tables(
+    g: &Graph,
+    p: &Placement,
+    cfg: &ArchConfig,
+    opts: &CompileOpts,
+) -> Vec<PeSliceConfig> {
+    let num_pes = cfg.num_pes();
+    let mut out: Vec<PeSliceConfig> = (0..p.num_copies * num_pes)
+        .map(|_| PeSliceConfig {
+            vertices: vec![u32::MAX; cfg.drf_size],
+            inter: vec![Vec::new(); cfg.drf_size],
+            intra: Default::default(),
+        })
+        .collect();
+
+    // DRF contents.
+    for (v, s) in p.slots.iter().enumerate() {
+        let idx = s.copy as usize * num_pes + s.pe.index(cfg);
+        out[idx].vertices[s.reg as usize] = v as u32;
+    }
+
+    // One Inter entry + one Intra entry per arc.
+    for (u, v, w) in g.arcs() {
+        let su = p.slots[u as usize];
+        let sv = p.slots[v as usize];
+        let (dx, dy) = su.pe.offset_to(sv.pe);
+        let src_idx = su.copy as usize * num_pes + su.pe.index(cfg);
+        out[src_idx].inter[su.reg as usize].push(InterEntry {
+            dx,
+            dy,
+            slice: p.slice_of(cfg, v),
+            dst_vid: v,
+        });
+        let dst_idx = sv.copy as usize * num_pes + sv.pe.index(cfg);
+        out[dst_idx].intra.insert(IntraEntry { src_vid: u, dst_reg: sv.reg, weight: w });
+    }
+
+    // Farthest-first layout (§4.3): scatter issues entries in list order,
+    // so the longest route starts first. Stable sort keeps determinism.
+    if !opts.skip_layout_sort {
+        for cfg_pe in &mut out {
+            for list in &mut cfg_pe.inter {
+                list.sort_by_key(|e| std::cmp::Reverse((e.hops(), e.dst_vid)));
+            }
+        }
+    }
+    out
+}
+
+/// Update edge *weights* in the Intra-Tables in place, without remapping —
+/// the paper's dynamic-attribute path (§1.1: "FLIP also supports efficient
+/// attribute changing ... without recompilation"). The graph structure
+/// (same arcs, same placement) must be unchanged.
+pub fn update_edge_weights(c: &mut crate::compiler::CompiledGraph, g: &Graph) {
+    let num_pes = c.cfg.num_pes();
+    // clear + re-insert intra entries with new weights (same placement)
+    for cfg_pe in &mut c.pe_slices {
+        cfg_pe.intra = Default::default();
+    }
+    for (u, v, w) in g.arcs() {
+        let sv = c.placement.slots[v as usize];
+        let dst_idx = sv.copy as usize * num_pes + sv.pe.index(&c.cfg);
+        c.pe_slices[dst_idx].intra.insert(IntraEntry { src_vid: u, dst_reg: sv.reg, weight: w });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOpts};
+    use crate::graph::generate;
+
+    #[test]
+    fn weight_update_without_remap() {
+        let g = generate::road_network(64, 146, 166, 77);
+        let cfg = ArchConfig::default();
+        let mut c = compile(&g, &cfg, &CompileOpts::default());
+        // double every weight
+        let edges: Vec<(u32, u32, u32)> =
+            g.arcs().filter(|&(u, v, _)| u < v).map(|(u, v, w)| (u, v, w * 2)).collect();
+        let g2 = Graph::from_edges(g.num_vertices(), &edges, false);
+        let placement_before = c.placement.slots.clone();
+        update_edge_weights(&mut c, &g2);
+        assert_eq!(c.placement.slots, placement_before, "no remapping");
+        for (u, v, w) in g2.arcs() {
+            let sv = c.placement.slots[v as usize];
+            let (m, _) = c.slice_cfg(sv.copy, sv.pe.index(&cfg)).intra.lookup(u);
+            assert!(m.iter().any(|e| e.dst_reg == sv.reg && e.weight == w));
+        }
+    }
+
+    fn compiled() -> (Graph, crate::compiler::CompiledGraph) {
+        let g = generate::road_network(64, 146, 166, 31);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts::default());
+        (g, c)
+    }
+
+    #[test]
+    fn every_arc_has_inter_and_intra_entries() {
+        let (g, c) = compiled();
+        let cfg = &c.cfg;
+        let p = &c.placement;
+        for (u, v, w) in g.arcs() {
+            let su = p.slots[u as usize];
+            let sv = p.slots[v as usize];
+            let s_cfg = c.slice_cfg(su.copy, su.pe.index(cfg));
+            let entry = s_cfg.inter[su.reg as usize]
+                .iter()
+                .find(|e| e.dst_vid == v)
+                .unwrap_or_else(|| panic!("missing inter entry {u}->{v}"));
+            assert_eq!((entry.dx, entry.dy), su.pe.offset_to(sv.pe));
+            assert_eq!(entry.slice, p.slice_of(cfg, v));
+            let d_cfg = c.slice_cfg(sv.copy, sv.pe.index(cfg));
+            let (matches, _) = d_cfg.intra.lookup(u);
+            let m = matches
+                .iter()
+                .find(|e| e.dst_reg == sv.reg)
+                .unwrap_or_else(|| panic!("missing intra entry {u}->{v}"));
+            assert_eq!(m.weight, w);
+        }
+    }
+
+    #[test]
+    fn drf_contents_match_placement() {
+        let (g, c) = compiled();
+        for v in 0..g.num_vertices() as u32 {
+            let s = c.placement.slots[v as usize];
+            let s_cfg = c.slice_cfg(s.copy, s.pe.index(&c.cfg));
+            assert_eq!(s_cfg.vertices[s.reg as usize], v);
+            assert_eq!(s_cfg.reg_of(v), Some(s.reg));
+        }
+    }
+
+    #[test]
+    fn inter_lists_are_farthest_first() {
+        let (_, c) = compiled();
+        for s_cfg in &c.pe_slices {
+            for list in &s_cfg.inter {
+                for w in list.windows(2) {
+                    assert!(w[0].hops() >= w[1].hops(), "layout not farthest-first");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn layout_sort_can_be_disabled() {
+        let g = generate::synthetic(64, 256, 9);
+        let cfg = ArchConfig::default();
+        let sorted = compile(&g, &cfg, &CompileOpts::default());
+        let unsorted =
+            compile(&g, &cfg, &CompileOpts { skip_layout_sort: true, ..Default::default() });
+        // same multiset of entries per register either way
+        for (a, b) in sorted.pe_slices.iter().zip(&unsorted.pe_slices) {
+            for (la, lb) in a.inter.iter().zip(&b.inter) {
+                let mut sa: Vec<u32> = la.iter().map(|e| e.dst_vid).collect();
+                let mut sb: Vec<u32> = lb.iter().map(|e| e.dst_vid).collect();
+                sa.sort_unstable();
+                sb.sort_unstable();
+                assert_eq!(sa, sb);
+            }
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! System configuration: architecture parameters for the FLIP fabric, the
+//! classic-CGRA baseline, and the MCU baseline (paper §3, Table 2/5).
+//!
+//! No serde offline — configs are plain structs with builder-style
+//! overrides, and a tiny `key=value` parser for the CLI (`--set aw=16`).
+
+/// FLIP fabric + system parameters (defaults = the paper's 8×8 prototype).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchConfig {
+    /// PE array width (paper: 8).
+    pub array_w: usize,
+    /// PE array height (paper: 8).
+    pub array_h: usize,
+    /// Vertices per PE = DRF registers (paper: 4).
+    pub drf_size: usize,
+    /// Data-swapping cluster edge (paper: 2 → 2×2 clusters).
+    pub cluster: usize,
+    /// Input-buffer capacity per port (packets).
+    pub input_buf_cap: usize,
+    /// ALUin buffer capacity (packets).
+    pub aluin_cap: usize,
+    /// ALUout buffer capacity (packets).
+    pub aluout_cap: usize,
+    /// Memory-buffer capacity (packets parked for swapped-out slices).
+    pub membuf_cap: usize,
+    /// Router latency per hop, cycles (arbitrate + route + link). The paper
+    /// notes one-hop latency ≈ the compute time of one packet (~3–5 cyc).
+    pub t_hop: u64,
+    /// Cycles for an Intra-Table hash + average list walk (paper: <2 avg).
+    pub t_intra_lookup: u64,
+    /// Cycles per Inter-Table entry walked during scatter (1 entry/cycle).
+    pub t_inter_entry: u64,
+    /// Clock frequency in MHz (paper: 100).
+    pub freq_mhz: u64,
+    /// On-chip SPM bytes (paper: 16 KB in 8 banks).
+    pub spm_bytes: usize,
+    /// SPM banks (paper: 8).
+    pub spm_banks: usize,
+    /// Off-chip memory bytes (paper: 256 KB).
+    pub offchip_bytes: usize,
+    /// Cycles to transfer one 32-bit word SPM<->PE during slice swap.
+    pub t_swap_word: u64,
+    /// Extra cycles to fetch a slice from off-chip memory (fixed cost).
+    pub t_offchip_fixed: u64,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        ArchConfig {
+            array_w: 8,
+            array_h: 8,
+            drf_size: 4,
+            cluster: 2,
+            input_buf_cap: 4,
+            aluin_cap: 4,
+            aluout_cap: 4,
+            membuf_cap: 8,
+            t_hop: 5,
+            t_intra_lookup: 2,
+            t_inter_entry: 1,
+            freq_mhz: 100,
+            spm_bytes: 16 * 1024,
+            spm_banks: 8,
+            offchip_bytes: 256 * 1024,
+            t_swap_word: 1,
+            t_offchip_fixed: 32,
+        }
+    }
+}
+
+impl ArchConfig {
+    /// Total PEs in the array.
+    pub fn num_pes(&self) -> usize {
+        self.array_w * self.array_h
+    }
+
+    /// On-chip vertex capacity of one PE-array copy (paper: 8·8·4 = 256).
+    pub fn capacity(&self) -> usize {
+        self.num_pes() * self.drf_size
+    }
+
+    /// Number of 2×2 clusters.
+    pub fn num_clusters(&self) -> usize {
+        (self.array_w / self.cluster) * (self.array_h / self.cluster)
+    }
+
+    /// Vertex capacity of one cluster (slice size bound).
+    pub fn cluster_capacity(&self) -> usize {
+        self.cluster * self.cluster * self.drf_size
+    }
+
+    /// Scaled variant for the Fig-12 experiment (array edge `k`, memory per
+    /// PE constant).
+    pub fn scaled(k: usize) -> ArchConfig {
+        ArchConfig { array_w: k, array_h: k, ..ArchConfig::default() }
+    }
+
+    /// Apply a `key=value` override (CLI `--set`). Returns Err on unknown
+    /// key or malformed value.
+    pub fn set(&mut self, kv: &str) -> Result<(), String> {
+        let (k, v) = kv.split_once('=').ok_or_else(|| format!("expected key=value, got `{kv}`"))?;
+        let vu: usize = v.parse().map_err(|_| format!("bad value `{v}` for `{k}`"))?;
+        match k {
+            "array_w" | "aw" => self.array_w = vu,
+            "array_h" | "ah" => self.array_h = vu,
+            "drf_size" | "drf" => self.drf_size = vu,
+            "cluster" => self.cluster = vu,
+            "input_buf_cap" => self.input_buf_cap = vu,
+            "aluin_cap" => self.aluin_cap = vu,
+            "aluout_cap" => self.aluout_cap = vu,
+            "membuf_cap" => self.membuf_cap = vu,
+            "t_hop" => self.t_hop = vu as u64,
+            "t_intra_lookup" => self.t_intra_lookup = vu as u64,
+            "freq_mhz" => self.freq_mhz = vu as u64,
+            "spm_bytes" => self.spm_bytes = vu,
+            "spm_banks" => self.spm_banks = vu,
+            "t_swap_word" => self.t_swap_word = vu as u64,
+            "t_offchip_fixed" => self.t_offchip_fixed = vu as u64,
+            _ => return Err(format!("unknown config key `{k}`")),
+        }
+        Ok(())
+    }
+}
+
+/// MCU baseline parameters (ARM Cortex-M4F, paper §5.1).
+#[derive(Debug, Clone)]
+pub struct McuConfig {
+    pub freq_mhz: u64,
+    /// Cycles per load/store (M4: 2 for first in a sequence).
+    pub t_mem: u64,
+    /// Cycles per ALU op.
+    pub t_alu: u64,
+    /// Cycles per taken branch (pipeline refill).
+    pub t_branch_taken: u64,
+    /// Flash instruction-fetch wait states amortized per executed
+    /// operation (M4 @64 MHz runs from embedded flash with 2 wait states;
+    /// the prefetch buffer hides only part of it — effective CPI ≈ 2–3).
+    pub t_fetch: u64,
+    /// Core power in mW (paper Table 5: 0.78 mW @22nm, core only).
+    pub power_mw: f64,
+    /// Core area in mm² (paper Table 5: 0.03 mm², core only).
+    pub area_mm2: f64,
+}
+
+impl Default for McuConfig {
+    fn default() -> Self {
+        McuConfig {
+            freq_mhz: 64,
+            t_mem: 2,
+            t_alu: 1,
+            t_branch_taken: 3,
+            t_fetch: 1,
+            power_mw: 0.78,
+            area_mm2: 0.03,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_prototype() {
+        let c = ArchConfig::default();
+        assert_eq!(c.num_pes(), 64);
+        assert_eq!(c.capacity(), 256);
+        assert_eq!(c.num_clusters(), 16);
+        assert_eq!(c.cluster_capacity(), 16);
+        assert_eq!(c.freq_mhz, 100);
+        assert_eq!(c.spm_bytes, 16 * 1024);
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = ArchConfig::default();
+        c.set("aw=16").unwrap();
+        c.set("array_h=16").unwrap();
+        assert_eq!(c.num_pes(), 256);
+        assert!(c.set("bogus=1").is_err());
+        assert!(c.set("aw").is_err());
+        assert!(c.set("aw=x").is_err());
+    }
+
+    #[test]
+    fn scaled_keeps_per_pe_memory() {
+        let c = ArchConfig::scaled(16);
+        assert_eq!(c.drf_size, ArchConfig::default().drf_size);
+        assert_eq!(c.capacity(), 1024);
+    }
+}

@@ -1,0 +1,275 @@
+//! Power / area / energy model (paper §5.2.2, Tables 5 & 6).
+//!
+//! The paper synthesized FLIP's RTL at 22 nm and reports a per-component
+//! power/area breakdown (Table 6) measured on representative graph
+//! workloads. Without the Synopsys flow (see DESIGN.md §3), we calibrate
+//! an activity-based model against that breakdown: each component has a
+//! static (leakage + clock) fraction and a dynamic per-access energy
+//! derived from Table 6's power at a reference activity rate. A run's
+//! energy is then
+//!
+//! ```text
+//! E = Σ_c  P_c·s·T  +  e_c·accesses_c        (s = static fraction)
+//! ```
+//!
+//! At the calibration activity this reproduces Table 6 exactly; across
+//! workloads/datasets energy follows the simulator's measured activity.
+
+use crate::config::ArchConfig;
+use crate::metrics::ActivityCounts;
+
+/// Component grouping for Table 6 rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Group {
+    Interconnect,
+    Compute,
+    Memory,
+    Register,
+    Logic,
+}
+
+/// One Table-6 component: paper-reported power (mW) and area (mm²) for the
+/// whole 8×8 fabric at 100 MHz / 22 nm.
+#[derive(Debug, Clone, Copy)]
+pub struct Component {
+    pub name: &'static str,
+    pub group: Group,
+    pub power_mw: f64,
+    pub area_mm2: f64,
+}
+
+/// Table 6 of the paper, verbatim.
+pub const COMPONENTS: &[Component] = &[
+    Component { name: "Switch Allocator", group: Group::Interconnect, power_mw: 0.08, area_mm2: 0.006 },
+    Component { name: "ALU", group: Group::Compute, power_mw: 0.01, area_mm2: 0.004 },
+    Component { name: "Inter-Table", group: Group::Memory, power_mw: 5.91, area_mm2: 0.073 },
+    Component { name: "Intra-Table", group: Group::Memory, power_mw: 5.39, area_mm2: 0.065 },
+    Component { name: "ALUout Buffer", group: Group::Memory, power_mw: 0.07, area_mm2: 0.021 },
+    Component { name: "ALUin Buffer", group: Group::Memory, power_mw: 1.05, area_mm2: 0.011 },
+    Component { name: "Memory Buffer", group: Group::Memory, power_mw: 0.75, area_mm2: 0.008 },
+    Component { name: "Input Buffer", group: Group::Memory, power_mw: 4.02, area_mm2: 0.055 },
+    Component { name: "DRF", group: Group::Memory, power_mw: 1.75, area_mm2: 0.021 },
+    Component { name: "Instruction Memory", group: Group::Memory, power_mw: 4.89, area_mm2: 0.074 },
+    Component { name: "Slice ID Register", group: Group::Register, power_mw: 0.11, area_mm2: 0.001 },
+    Component { name: "Additional Logic", group: Group::Logic, power_mw: 1.78, area_mm2: 0.034 },
+];
+
+/// Paper totals (Table 6): 25.79 mW, 0.373 mm².
+pub fn paper_total_power_mw() -> f64 {
+    COMPONENTS.iter().map(|c| c.power_mw).sum()
+}
+
+pub fn paper_total_area_mm2() -> f64 {
+    COMPONENTS.iter().map(|c| c.area_mm2).sum()
+}
+
+/// Baseline constants from Table 5 (classic CGRA and MCU, 22 nm).
+pub const CGRA_POWER_MW: f64 = 17.0;
+pub const CGRA_AREA_MM2: f64 = 0.32;
+pub const MCU_POWER_MW: f64 = 0.78;
+pub const MCU_AREA_MM2: f64 = 0.03;
+
+/// Static (activity-independent) fraction of each component's power:
+/// clock tree + leakage of SRAM-dominated edge designs at 22HPC ≈ 35%.
+pub const STATIC_FRAC: f64 = 0.35;
+
+/// Extract the access count driving each component from the simulator's
+/// activity counters.
+pub fn accesses(c: &Component, a: &ActivityCounts) -> u64 {
+    match c.name {
+        "Switch Allocator" => a.switch_grants,
+        "ALU" => a.alu_ops,
+        "Inter-Table" => a.inter_walked,
+        "Intra-Table" => a.intra_walked,
+        "ALUout Buffer" => a.aluout_pushes,
+        "ALUin Buffer" => a.aluin_pushes,
+        "Memory Buffer" => a.membuf_pushes + a.swap_words,
+        "Input Buffer" => a.input_buf_pushes,
+        "DRF" => a.drf_reads + a.drf_writes,
+        "Instruction Memory" => a.im_fetches,
+        "Slice ID Register" => a.slice_compares,
+        "Additional Logic" => a.slice_compares + a.switch_grants,
+        _ => unreachable!("unknown component {}", c.name),
+    }
+}
+
+/// Calibrated energy model.
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    /// Dynamic energy per access, nJ, per component (Table 6 order).
+    per_access_nj: Vec<f64>,
+    freq_mhz: u64,
+    /// Array-size scale factor vs the 8×8 prototype (Fig 12).
+    scale: f64,
+}
+
+impl EnergyModel {
+    /// Calibrate against a reference run so that at the reference activity
+    /// the average per-component power equals Table 6.
+    pub fn calibrated(ref_act: &ActivityCounts, ref_cycles: u64, cfg: &ArchConfig) -> EnergyModel {
+        let ref_seconds = ref_cycles as f64 / (cfg.freq_mhz as f64 * 1e6);
+        let per_access_nj = COMPONENTS
+            .iter()
+            .map(|c| {
+                let n = accesses(c, ref_act).max(1) as f64;
+                // dynamic energy budget over the reference run, split per access
+                let dyn_mj = c.power_mw * (1.0 - STATIC_FRAC) * ref_seconds; // mW·s = mJ... (µJ units below)
+                dyn_mj * 1e6 / n // mJ -> nJ
+            })
+            .collect();
+        EnergyModel {
+            per_access_nj,
+            freq_mhz: cfg.freq_mhz,
+            scale: cfg.num_pes() as f64 / 64.0,
+        }
+    }
+
+    /// Reuse the per-access calibration for a scaled array (Fig 12): the
+    /// per-access energies are physical constants of the 22 nm components;
+    /// only the static power scales with PE count.
+    pub fn rescaled(&self, cfg: &ArchConfig) -> EnergyModel {
+        EnergyModel {
+            per_access_nj: self.per_access_nj.clone(),
+            freq_mhz: cfg.freq_mhz,
+            scale: cfg.num_pes() as f64 / 64.0,
+        }
+    }
+
+    /// Total energy of a run in µJ, given its activity and cycle count.
+    pub fn run_energy_uj(&self, act: &ActivityCounts, cycles: u64) -> f64 {
+        self.breakdown_uj(act, cycles).iter().map(|(_, e)| e).sum()
+    }
+
+    /// Per-component energy (µJ).
+    pub fn breakdown_uj(&self, act: &ActivityCounts, cycles: u64) -> Vec<(&'static str, f64)> {
+        let seconds = cycles as f64 / (self.freq_mhz as f64 * 1e6);
+        COMPONENTS
+            .iter()
+            .zip(&self.per_access_nj)
+            .map(|(c, &e_nj)| {
+                let static_uj = c.power_mw * self.scale * STATIC_FRAC * seconds * 1e3; // mW·s = mJ -> µJ: ×1e3
+                let dyn_uj = e_nj * accesses(c, act) as f64 * 1e-3; // nJ -> µJ
+                (c.name, static_uj + dyn_uj)
+            })
+            .collect()
+    }
+
+    /// Average power of a run, mW.
+    pub fn run_power_mw(&self, act: &ActivityCounts, cycles: u64) -> f64 {
+        let seconds = cycles as f64 / (self.freq_mhz as f64 * 1e6);
+        if seconds == 0.0 {
+            return 0.0;
+        }
+        self.run_energy_uj(act, cycles) * 1e-3 / seconds // µJ/s -> mW
+    }
+}
+
+/// FLIP total area for a scaled array (per-PE memory constant, Fig 12).
+pub fn flip_area_mm2(cfg: &ArchConfig) -> f64 {
+    paper_total_area_mm2() * cfg.num_pes() as f64 / 64.0
+}
+
+/// FLIP nominal power for a scaled array.
+pub fn flip_power_mw(cfg: &ArchConfig) -> f64 {
+    paper_total_power_mw() * cfg.num_pes() as f64 / 64.0
+}
+
+/// Simple P×t energies for the baselines (the paper's own methodology for
+/// MCU/CGRA comparisons), in µJ.
+pub fn baseline_energy_uj(power_mw: f64, cycles: u64, freq_mhz: u64) -> f64 {
+    let seconds = cycles as f64 / (freq_mhz as f64 * 1e6);
+    power_mw * seconds * 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nominal_activity() -> ActivityCounts {
+        ActivityCounts {
+            alu_ops: 50_000,
+            intra_lookups: 10_000,
+            intra_walked: 15_000,
+            inter_walked: 12_000,
+            drf_reads: 10_000,
+            drf_writes: 6_000,
+            input_buf_pushes: 20_000,
+            aluin_pushes: 10_000,
+            aluout_pushes: 6_000,
+            membuf_pushes: 100,
+            switch_grants: 20_000,
+            im_fetches: 50_000,
+            swap_words: 0,
+            slice_compares: 10_000,
+        }
+    }
+
+    #[test]
+    fn paper_totals() {
+        // component rows sum to 25.81 vs the paper's rounded 25.79 total
+        assert!((paper_total_power_mw() - 25.79).abs() < 0.05);
+        assert!((paper_total_area_mm2() - 0.373).abs() < 0.001);
+    }
+
+    #[test]
+    fn memory_dominates_area_as_in_paper() {
+        let mem_area: f64 = COMPONENTS
+            .iter()
+            .filter(|c| c.group == Group::Memory)
+            .map(|c| c.area_mm2)
+            .sum();
+        let frac = mem_area / paper_total_area_mm2();
+        assert!((0.85..0.92).contains(&frac), "memory area frac {frac}");
+    }
+
+    #[test]
+    fn calibration_reproduces_reference_power() {
+        let cfg = ArchConfig::default();
+        let act = nominal_activity();
+        let cycles = 100_000;
+        let m = EnergyModel::calibrated(&act, cycles, &cfg);
+        let p = m.run_power_mw(&act, cycles);
+        assert!(
+            (p - paper_total_power_mw()).abs() < 0.1,
+            "calibrated power {p} vs paper {}",
+            paper_total_power_mw()
+        );
+    }
+
+    #[test]
+    fn lower_activity_means_lower_power() {
+        let cfg = ArchConfig::default();
+        let act = nominal_activity();
+        let m = EnergyModel::calibrated(&act, 100_000, &cfg);
+        let mut idle = ActivityCounts::default();
+        idle.alu_ops = 100;
+        let p_idle = m.run_power_mw(&idle, 100_000);
+        assert!(p_idle < paper_total_power_mw() * 0.5, "idle power {p_idle}");
+        // but never below the static floor
+        assert!(p_idle > paper_total_power_mw() * STATIC_FRAC * 0.9);
+    }
+
+    #[test]
+    fn energy_scales_with_time_at_fixed_activity() {
+        let cfg = ArchConfig::default();
+        let act = nominal_activity();
+        let m = EnergyModel::calibrated(&act, 100_000, &cfg);
+        let e1 = m.run_energy_uj(&act, 100_000);
+        let e2 = m.run_energy_uj(&act, 200_000);
+        assert!(e2 > e1, "longer run at same accesses must cost static energy");
+    }
+
+    #[test]
+    fn area_scaling_linear_in_pes() {
+        let a8 = flip_area_mm2(&ArchConfig::default());
+        let a16 = flip_area_mm2(&ArchConfig::scaled(16));
+        assert!((a16 / a8 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn baseline_energy_p_times_t() {
+        // 17 mW for 1e6 cycles at 100MHz = 17mW * 10ms = 170 µJ
+        let e = baseline_energy_uj(CGRA_POWER_MW, 1_000_000, 100);
+        assert!((e - 170.0).abs() < 1e-9);
+    }
+}

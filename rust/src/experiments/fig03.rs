@@ -1,0 +1,76 @@
+//! Fig 3 — number of operations per vertex iteration: operation-centric
+//! DFG category census vs FLIP's vertex-program instruction counts.
+
+use super::ExpEnv;
+use crate::report::{sig, Table};
+use crate::workloads::{dfgs, Workload};
+
+pub fn run(_env: &ExpEnv) -> anyhow::Result<String> {
+    let mut out = String::new();
+
+    let mut a = Table::new(
+        "Fig 3(a) — operation-centric CGRA: ops per vertex iteration",
+        &["kernel", "total", "Memory Access", "Address Generation", "Loop Control", "Compute", "mem %", "addr %"],
+    );
+    let mut kernels: Vec<(String, dfgs::Dfg)> = vec![
+        ("BFS".into(), dfgs::bfs_dfg()),
+        ("WCC".into(), dfgs::wcc_dfg()),
+        ("SSSP search".into(), dfgs::sssp_search_dfg()),
+        ("SSSP update".into(), dfgs::sssp_update_dfg()),
+    ];
+    for (name, d) in &mut kernels {
+        let census: std::collections::HashMap<_, _> = d.census().into_iter().collect();
+        let total = d.num_ops() as f64;
+        let get = |c: dfgs::OpCat| census.get(&c).copied().unwrap_or(0);
+        a.row(&[
+            name.clone(),
+            format!("{}", d.num_ops()),
+            format!("{}", get(dfgs::OpCat::MemAccess)),
+            format!("{}", get(dfgs::OpCat::AddrGen)),
+            format!("{}", get(dfgs::OpCat::LoopControl)),
+            format!("{}", get(dfgs::OpCat::Compute)),
+            format!("{}%", sig(get(dfgs::OpCat::MemAccess) as f64 / total * 100.0, 2)),
+            format!("{}%", sig(get(dfgs::OpCat::AddrGen) as f64 / total * 100.0, 2)),
+        ]);
+    }
+    out.push_str(&a.render());
+    out.push('\n');
+
+    let mut b = Table::new(
+        "Fig 3(b) — FLIP data-centric: instructions per vertex (update / no-update)",
+        &["workload", "update", "no update", "graph mem access", "addr gen", "loop control"],
+    );
+    for w in Workload::ALL {
+        let prog = w.program();
+        // execute both paths to count
+        let (upd, _) = crate::arch::isa::execute(prog, 0, u32::MAX);
+        let (noupd, _) = crate::arch::isa::execute(prog, 5, 1);
+        b.row(&[
+            w.name().into(),
+            format!("{}", upd.cycles),
+            format!("{}", noupd.cycles),
+            "0 (local DRF only)".into(),
+            "0 (tables route)".into(),
+            "0 (packet-triggered)".into(),
+        ]);
+    }
+    out.push_str(&b.render());
+    out.push_str(
+        "\nPaper shape: ~20% of op-centric ops are graph memory accesses and ~30% address\n\
+         generation, with a substantial loop-control share; FLIP needs 4-5 instructions\n\
+         per vertex (2-4 without update) and zero address/loop overhead.\n",
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders() {
+        let s = super::run(&super::ExpEnv::quick()).unwrap();
+        assert!(s.contains("Fig 3(a)"));
+        assert!(s.contains("BFS"));
+        assert!(s.contains("34"));
+        assert!(s.contains("Fig 3(b)"));
+    }
+}

@@ -1,0 +1,167 @@
+//! Fig 10 — performance (a) and energy (b) for BFS/SSSP/WCC on the four
+//! on-chip dataset groups, normalized to the MCU. The paper's headline:
+//! FLIP 25–393× vs MCU and 11–36× vs classic CGRA on BFS/WCC, with
+//! 5–82% of MCU energy and 3–15% of CGRA energy.
+
+use super::harness::{self, Baselines, CompiledPair, ExpEnv};
+use crate::energy;
+use crate::graph::datasets::Group;
+use crate::report::{sig, Table};
+use crate::util::stats;
+use crate::workloads::Workload;
+
+pub struct Cell {
+    pub group: Group,
+    pub workload: Workload,
+    pub speedup_cgra_vs_mcu: f64,
+    pub speedup_flip_vs_mcu: f64,
+    pub speedup_flip_vs_cgra: f64,
+    pub energy_flip_vs_mcu: f64,
+    pub energy_flip_vs_cgra: f64,
+}
+
+/// Full sweep: returns one cell per (group, workload).
+pub fn sweep(env: &ExpEnv) -> Vec<Cell> {
+    let emodel = harness::calibrated_energy(env);
+    let base = Baselines::build(&env.cfg, &env.mcu, env.seed);
+    let mut cells = Vec::new();
+    for group in Group::ON_CHIP {
+        let graphs = env.graphs(group);
+        let pairs: Vec<CompiledPair> = graphs
+            .iter()
+            .map(|g| CompiledPair::build(g, &env.cfg, env.seed))
+            .collect();
+        for w in Workload::ALL {
+            let mut mcu_s = Vec::new();
+            let mut cgra_s = Vec::new();
+            let mut flip_s = Vec::new();
+            let mut e_mcu = Vec::new();
+            let mut e_cgra = Vec::new();
+            let mut e_flip = Vec::new();
+            for (gi, (g, pair)) in graphs.iter().zip(&pairs).enumerate() {
+                for src in env.sources(group, g, gi) {
+                    let m = base.run_mcu(w, g, src);
+                    let c = base.run_cgra(w, g, src);
+                    let f = harness::run_flip(pair, w, src);
+                    mcu_s.push(harness::seconds(m.cycles, env.mcu.freq_mhz));
+                    cgra_s.push(harness::seconds(c.cycles, env.cfg.freq_mhz));
+                    flip_s.push(harness::seconds(f.cycles, env.cfg.freq_mhz));
+                    e_mcu.push(energy::baseline_energy_uj(
+                        energy::MCU_POWER_MW,
+                        m.cycles,
+                        env.mcu.freq_mhz,
+                    ));
+                    e_cgra.push(energy::baseline_energy_uj(
+                        energy::CGRA_POWER_MW,
+                        c.cycles,
+                        env.cfg.freq_mhz,
+                    ));
+                    e_flip.push(emodel.run_energy_uj(&f.sim.activity, f.cycles));
+                }
+            }
+            cells.push(Cell {
+                group,
+                workload: w,
+                speedup_cgra_vs_mcu: harness::speedup_geomean(&mcu_s, &cgra_s),
+                speedup_flip_vs_mcu: harness::speedup_geomean(&mcu_s, &flip_s),
+                speedup_flip_vs_cgra: harness::speedup_geomean(&cgra_s, &flip_s),
+                energy_flip_vs_mcu: stats::geomean(
+                    &e_flip.iter().zip(&e_mcu).map(|(f, m)| f / m).collect::<Vec<_>>(),
+                ),
+                energy_flip_vs_cgra: stats::geomean(
+                    &e_flip.iter().zip(&e_cgra).map(|(f, c)| f / c).collect::<Vec<_>>(),
+                ),
+            });
+        }
+    }
+    cells
+}
+
+pub fn run(env: &ExpEnv) -> anyhow::Result<String> {
+    let cells = sweep(env);
+    let mut a = Table::new(
+        "Fig 10(a) — speedup normalized to MCU (geomean; log-scale in paper)",
+        &["group", "workload", "CGRA vs MCU", "FLIP vs MCU", "FLIP vs CGRA"],
+    );
+    for c in &cells {
+        a.row(&[
+            c.group.name().into(),
+            c.workload.name().into(),
+            format!("{}x", sig(c.speedup_cgra_vs_mcu, 3)),
+            format!("{}x", sig(c.speedup_flip_vs_mcu, 3)),
+            format!("{}x", sig(c.speedup_flip_vs_cgra, 3)),
+        ]);
+    }
+    let mut b = Table::new(
+        "Fig 10(b) — FLIP energy relative to baselines (lower is better)",
+        &["group", "workload", "vs MCU", "vs CGRA"],
+    );
+    for c in &cells {
+        b.row(&[
+            c.group.name().into(),
+            c.workload.name().into(),
+            format!("{}%", sig(c.energy_flip_vs_mcu * 100.0, 3)),
+            format!("{}%", sig(c.energy_flip_vs_cgra * 100.0, 3)),
+        ]);
+    }
+    let max_vs_mcu =
+        cells.iter().map(|c| c.speedup_flip_vs_mcu).fold(0.0f64, f64::max);
+    let bfs_wcc_vs_cgra: Vec<f64> = cells
+        .iter()
+        .filter(|c| c.workload != Workload::Sssp)
+        .map(|c| c.speedup_flip_vs_cgra)
+        .collect();
+    let summary = format!(
+        "\nShape check vs paper: FLIP max {}x vs MCU (paper: up to 393x); FLIP vs CGRA on\n\
+         BFS/WCC in [{}x, {}x] (paper: 11-36x); MCU beats CGRA on SSSP: {}\n",
+        sig(max_vs_mcu, 3),
+        sig(bfs_wcc_vs_cgra.iter().copied().fold(f64::MAX, f64::min), 3),
+        sig(bfs_wcc_vs_cgra.iter().copied().fold(0.0, f64::max), 3),
+        cells
+            .iter()
+            .filter(|c| c.workload == Workload::Sssp)
+            .any(|c| c.speedup_cgra_vs_mcu < 1.0),
+    );
+    Ok(format!("{}\n{}{}", a.render(), b.render(), summary))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_sweep_shape_matches_paper() {
+        let mut env = ExpEnv::quick();
+        env.graphs_per_group = 2;
+        env.sources_per_graph = 2;
+        let cells = sweep(&env);
+        assert_eq!(cells.len(), 4 * 3);
+        for c in &cells {
+            // FLIP beats the MCU everywhere (paper: 25-393x)
+            assert!(
+                c.speedup_flip_vs_mcu > 1.0,
+                "{} {} flip vs mcu {}",
+                c.group.name(),
+                c.workload.name(),
+                c.speedup_flip_vs_mcu
+            );
+            // FLIP beats classic CGRA on BFS/WCC (paper: 11-36x)
+            if c.workload != Workload::Sssp {
+                assert!(
+                    c.speedup_flip_vs_cgra > 2.0,
+                    "{} {} flip vs cgra {}",
+                    c.group.name(),
+                    c.workload.name(),
+                    c.speedup_flip_vs_cgra
+                );
+            }
+            // FLIP uses less energy than the CGRA baseline
+            assert!(c.energy_flip_vs_cgra < 1.0);
+        }
+        // MCU (optimal heap) beats the O(V^2) CGRA SSSP on some group
+        assert!(cells
+            .iter()
+            .filter(|c| c.workload == Workload::Sssp)
+            .any(|c| c.speedup_cgra_vs_mcu < 1.0));
+    }
+}

@@ -1,0 +1,95 @@
+//! Fig 12 — PE-array scaling: linearly growing array and dataset, per-PE
+//! memory constant. The paper observes MTEPS/mW and MTEPS/mm² *degrade*
+//! with scale for road networks because graph diameter grows with |V|.
+
+use super::harness::{self, CompiledPair, ExpEnv};
+use crate::config::ArchConfig;
+use crate::energy;
+use crate::graph::datasets;
+use crate::report::{sig, Table};
+use crate::util::stats;
+use crate::workloads::Workload;
+
+pub struct ScalePoint {
+    pub k: usize,
+    pub mteps: f64,
+    pub power_mw: f64,
+    pub area_mm2: f64,
+}
+
+pub fn sweep(env: &ExpEnv, ks: &[usize]) -> Vec<ScalePoint> {
+    // per-access energies calibrated once on the 8x8 prototype; only the
+    // static power scales with the array (per-PE memory is constant)
+    let base_model = harness::calibrated_energy(env);
+    let mut out = Vec::new();
+    for &k in ks {
+        let cfg = ArchConfig { array_w: k, array_h: k, ..env.cfg.clone() };
+        let capacity = cfg.capacity();
+        let graphs: Vec<_> = (0..env.graphs_per_group.min(4))
+            .map(|i| datasets::road_for_capacity(capacity, i, env.seed))
+            .collect();
+        let emodel = base_model.rescaled(&cfg);
+        let mut mteps = Vec::new();
+        let mut power = Vec::new();
+        for g in &graphs {
+            let pair = CompiledPair::build(g, &cfg, env.seed);
+            let r = harness::run_flip(&pair, Workload::Wcc, 0);
+            mteps.push(r.mteps(cfg.freq_mhz));
+            power.push(emodel.run_power_mw(&r.sim.activity, r.cycles));
+        }
+        out.push(ScalePoint {
+            k,
+            mteps: stats::mean(&mteps),
+            power_mw: stats::mean(&power),
+            area_mm2: energy::flip_area_mm2(&cfg),
+        });
+    }
+    out
+}
+
+pub fn run(env: &ExpEnv) -> anyhow::Result<String> {
+    let points = sweep(env, &[4, 8, 12, 16]);
+    let mut t = Table::new(
+        "Fig 12 — scaling (WCC on road networks filling the array)",
+        &["array", "|V|", "MTEPS", "power (mW)", "area (mm^2)", "MTEPS/mW", "MTEPS/mm^2"],
+    );
+    for p in &points {
+        t.row(&[
+            format!("{}x{}", p.k, p.k),
+            format!("{}", 4 * p.k * p.k),
+            sig(p.mteps, 3),
+            sig(p.power_mw, 3),
+            sig(p.area_mm2, 3),
+            sig(p.mteps / p.power_mw, 3),
+            sig(p.mteps / p.area_mm2, 3),
+        ]);
+    }
+    let eff8 = points.iter().find(|p| p.k == 8).map(|p| p.mteps / p.power_mw).unwrap_or(0.0);
+    let eff16 = points.iter().find(|p| p.k == 16).map(|p| p.mteps / p.power_mw).unwrap_or(0.0);
+    Ok(format!(
+        "{}\nShape check: power efficiency degrades with scale (8x8 {} vs 16x16 {} MTEPS/mW)\n\
+         because road-network diameter grows with |V| (paper §5.2.5).\n",
+        t.render(),
+        sig(eff8, 3),
+        sig(eff16, 3)
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficiency_degrades_with_scale() {
+        let mut env = ExpEnv::quick();
+        env.graphs_per_group = 2;
+        let pts = sweep(&env, &[4, 16]);
+        let e4 = pts[0].mteps / pts[0].power_mw;
+        let e16 = pts[1].mteps / pts[1].power_mw;
+        assert!(
+            e16 < e4 * 1.2,
+            "16x16 efficiency {e16} should not exceed 4x4 {e4} by much (diameter growth)"
+        );
+        assert!(pts[1].area_mm2 > pts[0].area_mm2 * 10.0);
+    }
+}

@@ -1,0 +1,81 @@
+//! Fig 13 — compilation time: (a) classic CGRA kernel mapping vs FLIP
+//! graph mapping (paper: FLIP needs <1%–10% of the classic compile time);
+//! (b) FLIP compile time across graph groups.
+
+use super::harness::ExpEnv;
+use crate::compiler::{compile, CompileOpts};
+use crate::graph::datasets::Group;
+use crate::report::{sig, Table};
+use crate::sim::opcentric;
+use crate::util::stats;
+use crate::workloads::Workload;
+
+pub fn run(env: &ExpEnv) -> anyhow::Result<String> {
+    // (a) classic CGRA: modulo mapping (II search + SA place & route)
+    let mut a = Table::new(
+        "Fig 13(a) — compile time (seconds)",
+        &["workload", "classic CGRA (unroll 3)", "FLIP graph mapping (LRN mean)", "FLIP / classic"],
+    );
+    // FLIP mapping time per LRN graph (workload independent — one mapping
+    // serves BFS/SSSP/WCC, §1.1 "map a graph once")
+    let graphs = env.graphs(Group::Lrn);
+    let flip_times: Vec<f64> = graphs
+        .iter()
+        .map(|g| {
+            compile(g, &env.cfg, &CompileOpts { seed: env.seed, ..Default::default() })
+                .stats
+                .compile_seconds
+        })
+        .collect();
+    let flip_mean = stats::mean(&flip_times);
+    for w in Workload::ALL {
+        // unroll 3 is where the paper's Fig 4 experiment lands before blow-up
+        let classic = opcentric::compile_kernel(w, &env.cfg, 3, env.seed)
+            .map(|k| k.map_seconds)
+            .unwrap_or(f64::NAN);
+        a.row(&[
+            w.name().into(),
+            sig(classic, 3),
+            sig(flip_mean, 3),
+            format!("{}%", sig(flip_mean / classic * 100.0, 3)),
+        ]);
+    }
+
+    // (b) FLIP compile time per group
+    let mut b = Table::new(
+        "Fig 13(b) — FLIP compile time by graph group (seconds)",
+        &["group", "mean", "min", "max", "mean |V|", "mean |E|"],
+    );
+    for group in Group::ON_CHIP {
+        let graphs = env.graphs(group);
+        let times: Vec<f64> = graphs
+            .iter()
+            .map(|g| {
+                compile(g, &env.cfg, &CompileOpts { seed: env.seed, ..Default::default() })
+                    .stats
+                    .compile_seconds
+            })
+            .collect();
+        b.row(&[
+            group.name().into(),
+            sig(stats::mean(&times), 3),
+            sig(times.iter().copied().fold(f64::MAX, f64::min), 3),
+            sig(times.iter().copied().fold(0.0, f64::max), 3),
+            sig(stats::mean(&graphs.iter().map(|g| g.num_vertices() as f64).collect::<Vec<_>>()), 3),
+            sig(stats::mean(&graphs.iter().map(|g| g.num_edges() as f64).collect::<Vec<_>>()), 3),
+        ]);
+    }
+    Ok(format!("{}\n{}", a.render(), b.render()))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn flip_compiles_much_faster_than_classic() {
+        let mut env = super::ExpEnv::quick();
+        env.graphs_per_group = 2;
+        let s = super::run(&env).unwrap();
+        assert!(s.contains("Fig 13(a)"));
+        assert!(s.contains("Fig 13(b)"));
+    }
+}

@@ -1,0 +1,207 @@
+//! Shared experiment harness: dataset sweeps, per-architecture runners,
+//! compile caching, and the calibrated energy model.
+
+use crate::compiler::{compile, CompileOpts, CompiledGraph};
+use crate::config::{ArchConfig, McuConfig};
+use crate::energy::EnergyModel;
+use crate::graph::{datasets::Group, Graph};
+use crate::metrics::RunResult;
+use crate::sim::{flip, mcu, opcentric};
+use crate::util::Rng;
+use crate::workloads::{view_for, Workload};
+
+/// Experiment environment / scale knobs.
+#[derive(Debug, Clone)]
+pub struct ExpEnv {
+    pub cfg: ArchConfig,
+    pub mcu: McuConfig,
+    /// Graphs per dataset group (paper: 100; Ext. LRN: 10).
+    pub graphs_per_group: usize,
+    /// Random source vertices per graph (paper: 100).
+    pub sources_per_graph: usize,
+    pub seed: u64,
+}
+
+impl ExpEnv {
+    /// Fast sweep for interactive runs and benches.
+    pub fn quick() -> ExpEnv {
+        ExpEnv {
+            cfg: ArchConfig::default(),
+            mcu: McuConfig::default(),
+            graphs_per_group: 5,
+            sources_per_graph: 3,
+            seed: 42,
+        }
+    }
+
+    /// The paper's full counts (slow: hours).
+    pub fn paper_scale() -> ExpEnv {
+        ExpEnv { graphs_per_group: 100, sources_per_graph: 100, ..ExpEnv::quick() }
+    }
+
+    pub fn graphs(&self, group: Group) -> Vec<Graph> {
+        let count = match group {
+            Group::ExtLrn => self.graphs_per_group.min(3),
+            _ => self.graphs_per_group,
+        };
+        crate::graph::datasets::generate_group(group, count, self.seed)
+    }
+
+    /// Random sources for one graph (Tree always starts at the root).
+    pub fn sources(&self, group: Group, g: &Graph, graph_idx: usize) -> Vec<u32> {
+        if group == Group::Tree {
+            return vec![0];
+        }
+        let mut rng = Rng::new(self.seed ^ (graph_idx as u64) << 17);
+        (0..self.sources_per_graph)
+            .map(|_| rng.below(g.num_vertices() as u64) as u32)
+            .collect()
+    }
+}
+
+/// One graph compiled for both arc views (directed for BFS/SSSP, undirected
+/// closure for WCC).
+pub struct CompiledPair {
+    pub directed: CompiledGraph,
+    /// Same object as `directed` when the graph is already undirected.
+    pub undirected: Option<CompiledGraph>,
+    pub graph: Graph,
+    pub wcc_view: Graph,
+}
+
+impl CompiledPair {
+    pub fn build(g: &Graph, cfg: &ArchConfig, seed: u64) -> CompiledPair {
+        let opts = CompileOpts { seed, ..Default::default() };
+        let directed = compile(g, cfg, &opts);
+        let wcc_view = view_for(Workload::Wcc, g);
+        let undirected = if g.is_directed() { Some(compile(&wcc_view, cfg, &opts)) } else { None };
+        CompiledPair { directed, undirected, graph: g.clone(), wcc_view }
+    }
+
+    pub fn for_workload(&self, w: Workload) -> &CompiledGraph {
+        match (w.needs_undirected(), &self.undirected) {
+            (true, Some(u)) => u,
+            _ => &self.directed,
+        }
+    }
+}
+
+/// Run FLIP (cycle-accurate) for one (workload, source).
+pub fn run_flip(pair: &CompiledPair, w: Workload, source: u32) -> RunResult {
+    run_flip_opts(pair, w, source, &flip::SimOptions::default())
+}
+
+pub fn run_flip_opts(
+    pair: &CompiledPair,
+    w: Workload,
+    source: u32,
+    opts: &flip::SimOptions,
+) -> RunResult {
+    let c = pair.for_workload(w);
+    let r = flip::run(c, w, source, opts)
+        .unwrap_or_else(|e| panic!("FLIP sim failed ({}, src {source}): {e}", w.name()));
+    debug_assert_eq!(
+        r.attrs,
+        w.reference(if w.needs_undirected() { &pair.wcc_view } else { &pair.graph }, source),
+        "functional mismatch {} src {source}",
+        w.name()
+    );
+    r
+}
+
+/// Cached op-centric kernels (one compile per workload per config).
+pub struct Baselines {
+    pub kernels: Vec<(Workload, opcentric::OpCentricKernel)>,
+    pub mcu: McuConfig,
+}
+
+impl Baselines {
+    pub fn build(cfg: &ArchConfig, mcu: &McuConfig, seed: u64) -> Baselines {
+        let kernels = Workload::ALL
+            .iter()
+            .map(|&w| {
+                (w, opcentric::compile_kernel(w, cfg, 1, seed).expect("baseline kernel maps"))
+            })
+            .collect();
+        Baselines { kernels, mcu: mcu.clone() }
+    }
+
+    pub fn kernel(&self, w: Workload) -> &opcentric::OpCentricKernel {
+        &self.kernels.iter().find(|(k, _)| *k == w).unwrap().1
+    }
+
+    pub fn run_cgra(&self, w: Workload, g: &Graph, source: u32) -> RunResult {
+        opcentric::run(self.kernel(w), g, source)
+    }
+
+    pub fn run_mcu(&self, w: Workload, g: &Graph, source: u32) -> RunResult {
+        mcu::run(w, g, source, &self.mcu)
+    }
+}
+
+/// Calibrate the energy model the way the paper's synthesis flow was
+/// driven: on a representative LRN/WCC run.
+pub fn calibrated_energy(env: &ExpEnv) -> EnergyModel {
+    let g = crate::graph::datasets::generate_one(Group::Lrn, 0, env.seed);
+    let pair = CompiledPair::build(&g, &env.cfg, env.seed);
+    let r = run_flip(&pair, Workload::Wcc, 0);
+    EnergyModel::calibrated(&r.sim.activity, r.cycles, &env.cfg)
+}
+
+/// Geometric-mean helper over (a/b) ratios.
+pub fn speedup_geomean(num_cycles: &[f64], den_cycles: &[f64]) -> f64 {
+    assert_eq!(num_cycles.len(), den_cycles.len());
+    let ratios: Vec<f64> =
+        num_cycles.iter().zip(den_cycles).map(|(a, b)| a / b).collect();
+    crate::util::stats::geomean(&ratios)
+}
+
+/// Convert cycles@freq to seconds — cross-architecture comparisons must
+/// account for MCU 64 MHz vs CGRA/FLIP 100 MHz.
+pub fn seconds(cycles: u64, freq_mhz: u64) -> f64 {
+    cycles as f64 / (freq_mhz as f64 * 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compiled_pair_provides_wcc_view_for_directed() {
+        let g = crate::graph::generate::synthetic(32, 64, 1);
+        let pair = CompiledPair::build(&g, &ArchConfig::default(), 1);
+        assert!(pair.undirected.is_some());
+        assert!(!pair.for_workload(Workload::Wcc).placement.slots.is_empty());
+    }
+
+    #[test]
+    fn flip_and_baselines_agree_functionally() {
+        let env = ExpEnv::quick();
+        let g = crate::graph::datasets::generate_one(Group::Srn, 0, env.seed);
+        let pair = CompiledPair::build(&g, &env.cfg, env.seed);
+        let base = Baselines::build(&env.cfg, &env.mcu, env.seed);
+        for w in Workload::ALL {
+            let f = run_flip(&pair, w, 0);
+            let c = base.run_cgra(w, &g, 0);
+            let m = base.run_mcu(w, &g, 0);
+            assert_eq!(f.attrs, c.attrs, "{}", w.name());
+            assert_eq!(f.attrs, m.attrs, "{}", w.name());
+        }
+    }
+
+    #[test]
+    fn flip_faster_than_baselines_on_bfs() {
+        let env = ExpEnv::quick();
+        let g = crate::graph::datasets::generate_one(Group::Lrn, 1, env.seed);
+        let pair = CompiledPair::build(&g, &env.cfg, env.seed);
+        let base = Baselines::build(&env.cfg, &env.mcu, env.seed);
+        let f = run_flip(&pair, Workload::Bfs, 0);
+        let c = base.run_cgra(Workload::Bfs, &g, 0);
+        let m = base.run_mcu(Workload::Bfs, &g, 0);
+        let f_s = seconds(f.cycles, env.cfg.freq_mhz);
+        let c_s = seconds(c.cycles, env.cfg.freq_mhz);
+        let m_s = seconds(m.cycles, env.mcu.freq_mhz);
+        assert!(f_s < c_s, "FLIP {f_s} vs CGRA {c_s}");
+        assert!(f_s < m_s, "FLIP {f_s} vs MCU {m_s}");
+    }
+}

@@ -1,0 +1,96 @@
+//! Experiment drivers — one per table/figure of the paper's §5 evaluation.
+//!
+//! | id            | paper artifact | driver |
+//! |---------------|----------------|--------|
+//! | `fig3`        | op-mix census  | [`fig03`] |
+//! | `fig4`        | unroll speedup | [`fig04`] |
+//! | `table2`      | accelerator comparison | [`table2`] |
+//! | `fig10`       | performance + energy vs MCU/CGRA | [`fig10`] |
+//! | `fig11`       | parallelism | [`fig11`] |
+//! | `fig12`       | array scaling | [`fig12`] |
+//! | `fig13`       | compile times | [`fig13`] |
+//! | `table5`      | MTEPS/power/area | [`table5`] |
+//! | `table6`      | power/area breakdown | [`table6`] |
+//! | `table7`      | compiler complexity | [`table7`] |
+//! | `table8`      | mapping quality | [`table8`] |
+//! | `scalability` | §5.2.5 Ext. LRN swapping | [`scalability`] |
+//!
+//! Paper-fidelity note: the paper averages 100 graphs × 100 random
+//! sources per cell; the default [`ExpEnv`] uses a smaller sweep for
+//! iteration speed. `--paper-scale` restores the full counts.
+
+pub mod fig03;
+pub mod fig04;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod harness;
+pub mod scalability;
+pub mod table2;
+pub mod table5;
+pub mod table6;
+pub mod table7;
+pub mod table8;
+
+pub use harness::ExpEnv;
+
+/// Experiment registry: (id, description, driver).
+pub type Driver = fn(&ExpEnv) -> anyhow::Result<String>;
+
+pub fn registry() -> Vec<(&'static str, &'static str, Driver)> {
+    vec![
+        ("fig3", "operation census: op-centric DFGs vs FLIP programs", fig03::run as Driver),
+        ("fig4", "BFS unroll-degree speedup + compile blow-up on classic CGRA", fig04::run),
+        ("table2", "qualitative accelerator comparison (quoted constants)", table2::run),
+        ("fig10", "performance and energy vs MCU and classic CGRA", fig10::run),
+        ("fig11", "average parallelism, FLIP vs op-centric CGRA", fig11::run),
+        ("fig12", "PE-array scaling: MTEPS/mW and MTEPS/mm^2", fig12::run),
+        ("fig13", "compile time: classic CGRA vs FLIP, and by graph group", fig13::run),
+        ("table5", "MTEPS / power / area efficiency incl. PolyGraph", table5::run),
+        ("table6", "power & area breakdown (energy-model calibration)", table6::run),
+        ("table7", "compiler time-complexity scaling", table7::run),
+        ("table8", "mapping quality: routing length, pkt wait, ALUin depth", table8::run),
+        ("scalability", "Ext. LRN with runtime data swapping (§5.2.5)", scalability::run),
+    ]
+}
+
+/// Run one experiment by id (or `all`); returns rendered reports.
+pub fn run_by_id(id: &str, env: &ExpEnv) -> anyhow::Result<Vec<(String, String)>> {
+    let reg = registry();
+    let mut out = Vec::new();
+    if id == "all" {
+        for (name, _, f) in &reg {
+            out.push((name.to_string(), f(env)?));
+        }
+    } else {
+        let (_, _, f) = reg
+            .iter()
+            .find(|(n, _, _)| *n == id)
+            .ok_or_else(|| anyhow::anyhow!("unknown experiment `{id}`"))?;
+        out.push((id.to_string(), f(env)?));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_paper_artifact() {
+        let ids: Vec<&str> = registry().iter().map(|(n, _, _)| *n).collect();
+        for want in [
+            "fig3", "fig4", "fig10", "fig11", "fig12", "fig13", "table2", "table5", "table6",
+            "table7", "table8", "scalability",
+        ] {
+            assert!(ids.contains(&want), "missing experiment {want}");
+        }
+    }
+
+    #[test]
+    fn unknown_id_is_an_error() {
+        let env = ExpEnv::quick();
+        assert!(run_by_id("nope", &env).is_err());
+    }
+}

@@ -1,0 +1,50 @@
+//! Tables 1 & 2 — qualitative + quantitative comparison with other
+//! CGRA-based accelerators. As in the paper, rows for PolyGraph, Fifer,
+//! HyCUBE and RipTide quote the numbers reported in their publications;
+//! the FLIP row comes from our Table-6 model.
+
+use super::ExpEnv;
+use crate::energy;
+use crate::report::{sig, Table};
+
+pub fn run(_env: &ExpEnv) -> anyhow::Result<String> {
+    let mut q = Table::new(
+        "Table 1 — qualitative comparison",
+        &["accelerator", "graph perf", "general perf", "power eff.", "area eff.", "PEs", "mode"],
+    );
+    q.row(&["PolyGraph".into(), "yes".into(), "yes".into(), "no".into(), "no".into(), "16x5x4".into(), "Op-Centric".into()]);
+    q.row(&["Fifer".into(), "yes".into(), "yes".into(), "no".into(), "no".into(), "16x16x5".into(), "Op-Centric".into()]);
+    q.row(&["HyCUBE".into(), "no".into(), "yes".into(), "yes".into(), "yes".into(), "4x4".into(), "Op-Centric".into()]);
+    q.row(&["RipTide".into(), "no".into(), "yes".into(), "yes".into(), "yes".into(), "6x6".into(), "Op-Centric".into()]);
+    q.row(&["FLIP".into(), "yes".into(), "yes".into(), "yes".into(), "yes".into(), "8x8".into(), "Data&Op-Centric".into()]);
+
+    let mut t = Table::new(
+        "Table 2 — quantitative comparison (quoted from the papers)",
+        &["accelerator", "goal", "on-chip mem", "freq", "tech (nm)", "power (mW)", "area (mm^2)"],
+    );
+    t.row(&["PolyGraph".into(), "High Perf.".into(), "512MB".into(), "1GHz".into(), "28".into(), "2292".into(), "73".into()]);
+    t.row(&["Fifer".into(), "High Perf.".into(), "4.5MB".into(), "2GHz".into(), "22".into(), "N/A".into(), "21".into()]);
+    t.row(&["HyCUBE".into(), "Low Pwr.".into(), "4KB".into(), "488MHz".into(), "40".into(), "140".into(), "3".into()]);
+    t.row(&["RipTide".into(), "Ultra Low Pwr.".into(), "256KB".into(), "50MHz".into(), "sub-28".into(), "0.5+".into(), "0.3+".into()]);
+    t.row(&[
+        "FLIP (this repro)".into(),
+        "Low Pwr.".into(),
+        "32KB".into(),
+        "100MHz".into(),
+        "22".into(),
+        sig(energy::paper_total_power_mw(), 4),
+        sig(energy::paper_total_area_mm2(), 3),
+    ]);
+    Ok(format!("{}\n{}", q.render(), t.render()))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders() {
+        let s = super::run(&super::ExpEnv::quick()).unwrap();
+        assert!(s.contains("PolyGraph"));
+        assert!(s.contains("RipTide"));
+        assert!(s.contains("25.8"));
+    }
+}

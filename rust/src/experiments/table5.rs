@@ -1,0 +1,119 @@
+//! Table 5 — performance-power-area comparison (WCC on LRN):
+//! MTEPS, power, area, MTEPS/mW, MTEPS/mm², for MCU / CGRA / FLIP, plus
+//! PolyGraph's reported numbers. Paper: FLIP 158 MTEPS @ 26 mW / 0.37 mm²
+//! → 6.12 MTEPS/mW and 424 MTEPS/mm²; PolyGraph 6.04 and 191.
+
+use super::harness::{self, Baselines, CompiledPair, ExpEnv};
+use crate::energy;
+use crate::graph::datasets::Group;
+use crate::report::{sig, Table};
+use crate::util::stats;
+use crate::workloads::Workload;
+
+pub struct Row {
+    pub name: String,
+    pub mteps: f64,
+    pub power_mw: f64,
+    pub area_mm2: f64,
+    pub tech_nm: u32,
+}
+
+pub fn rows(env: &ExpEnv) -> Vec<Row> {
+    let graphs = env.graphs(Group::Lrn);
+    let base = Baselines::build(&env.cfg, &env.mcu, env.seed);
+    let emodel = harness::calibrated_energy(env);
+    let (mut m_mteps, mut c_mteps, mut f_mteps, mut f_power) =
+        (vec![], vec![], vec![], vec![]);
+    for (gi, g) in graphs.iter().enumerate() {
+        let pair = CompiledPair::build(g, &env.cfg, env.seed);
+        for src in env.sources(Group::Lrn, g, gi) {
+            let m = base.run_mcu(Workload::Wcc, g, src);
+            let c = base.run_cgra(Workload::Wcc, g, src);
+            let f = harness::run_flip(&pair, Workload::Wcc, src);
+            m_mteps.push(m.mteps(env.mcu.freq_mhz));
+            c_mteps.push(c.mteps(env.cfg.freq_mhz));
+            f_mteps.push(f.mteps(env.cfg.freq_mhz));
+            f_power.push(emodel.run_power_mw(&f.sim.activity, f.cycles));
+        }
+    }
+    vec![
+        Row {
+            name: "MCU (LRN)".into(),
+            mteps: stats::mean(&m_mteps),
+            power_mw: energy::MCU_POWER_MW,
+            area_mm2: energy::MCU_AREA_MM2,
+            tech_nm: 22,
+        },
+        Row {
+            name: "CGRA (LRN)".into(),
+            mteps: stats::mean(&c_mteps),
+            power_mw: energy::CGRA_POWER_MW,
+            area_mm2: energy::CGRA_AREA_MM2,
+            tech_nm: 22,
+        },
+        Row {
+            name: "FLIP (LRN)".into(),
+            mteps: stats::mean(&f_mteps),
+            power_mw: stats::mean(&f_power),
+            area_mm2: energy::paper_total_area_mm2(),
+            tech_nm: 22,
+        },
+        Row {
+            name: "PolyGraph (from paper)".into(),
+            mteps: 13_845.0,
+            power_mw: 2292.0,
+            area_mm2: 72.56,
+            tech_nm: 28,
+        },
+    ]
+}
+
+pub fn run(env: &ExpEnv) -> anyhow::Result<String> {
+    let rows = rows(env);
+    let mut t = Table::new(
+        "Table 5 — performance-power-area (WCC)",
+        &["architecture", "MTEPS", "power (mW)", "area (mm^2)", "MTEPS/mW", "MTEPS/mm^2", "tech (nm)"],
+    );
+    for r in &rows {
+        t.row(&[
+            r.name.clone(),
+            sig(r.mteps, 3),
+            sig(r.power_mw, 3),
+            sig(r.area_mm2, 3),
+            sig(r.mteps / r.power_mw, 3),
+            sig(r.mteps / r.area_mm2, 3),
+            format!("{}", r.tech_nm),
+        ]);
+    }
+    let flip = &rows[2];
+    let poly = &rows[3];
+    let area_eff_ratio = (flip.mteps / flip.area_mm2) / (poly.mteps / poly.area_mm2);
+    let power_eff_ratio = (flip.mteps / flip.power_mw) / (poly.mteps / poly.power_mw);
+    Ok(format!(
+        "{}\nShape check vs paper: FLIP area-efficiency {}x PolyGraph (paper: 2.2x), \
+         power-efficiency {}x (paper: ~1.0x),\nat {}% of PolyGraph power and {}% of its area.\n",
+        t.render(),
+        sig(area_eff_ratio, 3),
+        sig(power_eff_ratio, 3),
+        sig(flip.power_mw / poly.power_mw * 100.0, 2),
+        sig(flip.area_mm2 / poly.area_mm2 * 100.0, 2),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_matches_paper() {
+        let mut env = ExpEnv::quick();
+        env.graphs_per_group = 2;
+        env.sources_per_graph = 2;
+        let rows = rows(&env);
+        let (m, c, f) = (&rows[0], &rows[1], &rows[2]);
+        assert!(f.mteps > c.mteps, "FLIP {} vs CGRA {}", f.mteps, c.mteps);
+        assert!(c.mteps > m.mteps, "CGRA {} vs MCU {}", c.mteps, m.mteps);
+        // FLIP area efficiency must dominate the classic CGRA's
+        assert!(f.mteps / f.area_mm2 > c.mteps / c.area_mm2);
+    }
+}

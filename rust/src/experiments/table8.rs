@@ -1,0 +1,96 @@
+//! Table 8 — mapping quality (SSSP): average routing length per arc,
+//! packet wait time, ALUin buffer depth, per dataset group.
+//! Paper: routing length 0.55–2.46, wait < 10 cycles, depth ≤ 0.14.
+
+use super::harness::{self, CompiledPair, ExpEnv};
+use crate::graph::datasets::Group;
+use crate::report::{sig, Table};
+use crate::util::stats;
+use crate::workloads::Workload;
+
+pub struct GroupQuality {
+    pub group: Group,
+    pub avg_routing_length: f64,
+    pub pkt_wait: f64,
+    pub aluin_depth: f64,
+    pub congested_edges: f64,
+}
+
+pub fn sweep(env: &ExpEnv) -> Vec<GroupQuality> {
+    let mut out = Vec::new();
+    for group in Group::ON_CHIP {
+        let graphs = env.graphs(group);
+        let (mut rl, mut wait, mut depth, mut cong) = (vec![], vec![], vec![], vec![]);
+        for (gi, g) in graphs.iter().enumerate() {
+            let pair = CompiledPair::build(g, &env.cfg, env.seed);
+            rl.push(pair.directed.stats.avg_routing_length);
+            cong.push(pair.directed.stats.congested_edges as f64);
+            for src in env.sources(group, g, gi) {
+                let r = harness::run_flip(&pair, Workload::Sssp, src);
+                wait.push(r.sim.avg_pkt_wait);
+                depth.push(r.sim.avg_aluin_depth);
+            }
+        }
+        out.push(GroupQuality {
+            group,
+            avg_routing_length: stats::mean(&rl),
+            pkt_wait: stats::mean(&wait),
+            aluin_depth: stats::mean(&depth),
+            congested_edges: stats::mean(&cong),
+        });
+    }
+    out
+}
+
+pub fn run(env: &ExpEnv) -> anyhow::Result<String> {
+    let rows = sweep(env);
+    let mut t = Table::new(
+        "Table 8 — SSSP mapping quality per group",
+        &["group", "avg routing length", "pkt wait (cycles)", "ALUin depth", "congested arcs"],
+    );
+    for r in &rows {
+        t.row(&[
+            r.group.name().into(),
+            sig(r.avg_routing_length, 3),
+            sig(r.pkt_wait, 3),
+            sig(r.aluin_depth, 3),
+            sig(r.congested_edges, 3),
+        ]);
+    }
+    Ok(format!(
+        "{}\nPaper envelope: routing length 0.55 (Tree) – 2.46 (Syn.), wait < 10 cycles,\n\
+         ALUin depth 0.03–0.14. Road networks must stay below ~1.0 routing length.\n",
+        t.render()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quality_in_paper_envelope() {
+        let mut env = ExpEnv::quick();
+        env.graphs_per_group = 2;
+        env.sources_per_graph = 2;
+        let rows = sweep(&env);
+        for r in &rows {
+            assert!(
+                r.avg_routing_length < 4.0,
+                "{}: routing length {}",
+                r.group.name(),
+                r.avg_routing_length
+            );
+            assert!(r.aluin_depth < 1.0, "{}: depth {}", r.group.name(), r.aluin_depth);
+        }
+        // synthetic graphs route longer than road networks (paper: 2.46 vs 0.76)
+        let syn = rows.iter().find(|r| r.group == Group::Syn).unwrap();
+        let lrn = rows.iter().find(|r| r.group == Group::Lrn).unwrap();
+        assert!(
+            syn.avg_routing_length > lrn.avg_routing_length,
+            "Syn {} vs LRN {}",
+            syn.avg_routing_length,
+            lrn.avg_routing_length
+        );
+    }
+}

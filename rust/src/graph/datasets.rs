@@ -1,0 +1,158 @@
+//! Table-4 dataset groups.
+//!
+//! | Group    | Type       | Diameter | #Graphs | |V|       | |E|        |
+//! |----------|------------|----------|---------|-----------|------------|
+//! | Tree     | Directed   | High     | 100     | 256       | 255        |
+//! | SRN      | Undirected | High     | 100     | [64,107]  | [146,278]  |
+//! | LRN      | Undirected | High     | 100     | 256       | [584,898]  |
+//! | Syn.     | Directed   | Low      | 100     | 256       | 768        |
+//! | Ext. LRN | Undirected | High     | 10      | 16k       | [44k,50k]  |
+
+use super::{generate, Graph};
+use crate::util::Rng;
+
+/// The five dataset groups of Table 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Group {
+    Tree,
+    Srn,
+    Lrn,
+    Syn,
+    ExtLrn,
+}
+
+impl Group {
+    pub const ALL: [Group; 5] = [Group::Tree, Group::Srn, Group::Lrn, Group::Syn, Group::ExtLrn];
+    /// The four on-chip groups used for the performance experiments.
+    pub const ON_CHIP: [Group; 4] = [Group::Tree, Group::Srn, Group::Lrn, Group::Syn];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Group::Tree => "Tree",
+            Group::Srn => "SRN",
+            Group::Lrn => "LRN",
+            Group::Syn => "Syn.",
+            Group::ExtLrn => "Ext. LRN",
+        }
+    }
+
+    pub fn paper_graph_count(self) -> usize {
+        match self {
+            Group::ExtLrn => 10,
+            _ => 100,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Group> {
+        match s.to_ascii_lowercase().as_str() {
+            "tree" => Some(Group::Tree),
+            "srn" => Some(Group::Srn),
+            "lrn" => Some(Group::Lrn),
+            "syn" | "syn." | "synthetic" => Some(Group::Syn),
+            "extlrn" | "ext-lrn" | "ext.lrn" | "ext. lrn" => Some(Group::ExtLrn),
+            _ => None,
+        }
+    }
+}
+
+/// Generate the `idx`-th graph of a group (deterministic in (group, idx, seed)).
+pub fn generate_one(group: Group, idx: usize, seed: u64) -> Graph {
+    let s = seed
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(idx as u64)
+        .wrapping_add(group as u64 * 0x1_0000_0001);
+    let mut rng = Rng::new(s);
+    match group {
+        Group::Tree => generate::random_tree(256, 4, s),
+        Group::Srn => {
+            let n = rng.range(64, 108);
+            // Table-4 envelope: |E|/|V| in ~[2.28, 2.60]
+            let lo = (n as f64 * 2.28).ceil() as usize;
+            let hi = (n as f64 * 2.60).floor() as usize;
+            generate::road_network(n, lo.max(146.min(lo)), hi, s)
+        }
+        Group::Lrn => generate::road_network(256, 584, 898, s),
+        Group::Syn => generate::synthetic(256, 768, s),
+        Group::ExtLrn => generate::road_network(16 * 1024, 44_000, 50_000, s),
+    }
+}
+
+/// Generate `count` graphs of a group.
+pub fn generate_group(group: Group, count: usize, seed: u64) -> Vec<Graph> {
+    (0..count).map(|i| generate_one(group, i, seed)).collect()
+}
+
+/// Road network sized to a PE-array capacity (Fig 12 scaling experiment):
+/// |V| = capacity, |E| scaled at LRN's density envelope.
+pub fn road_for_capacity(capacity: usize, idx: usize, seed: u64) -> Graph {
+    let lo = (capacity as f64 * 2.28).ceil() as usize;
+    let hi = (capacity as f64 * 3.5).floor() as usize;
+    let s = seed.wrapping_add(idx as u64).wrapping_mul(0xA24B_AED4_963E_E407);
+    generate::road_network(capacity, lo, hi, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_envelopes_small() {
+        for (g, idx) in [(Group::Tree, 0), (Group::Srn, 1), (Group::Lrn, 2), (Group::Syn, 3)] {
+            let graph = generate_one(g, idx, 42);
+            match g {
+                Group::Tree => {
+                    assert_eq!(graph.num_vertices(), 256);
+                    assert_eq!(graph.num_edges(), 255);
+                    assert!(graph.is_directed());
+                }
+                Group::Srn => {
+                    assert!((64..108).contains(&graph.num_vertices()));
+                    assert!((146..=278).contains(&graph.num_edges()), "e={}", graph.num_edges());
+                    assert!(!graph.is_directed());
+                }
+                Group::Lrn => {
+                    assert_eq!(graph.num_vertices(), 256);
+                    assert!((584..=898).contains(&graph.num_edges()));
+                }
+                Group::Syn => {
+                    assert_eq!(graph.num_vertices(), 256);
+                    assert_eq!(graph.num_edges(), 768);
+                    assert!(graph.is_directed());
+                }
+                Group::ExtLrn => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_index() {
+        let a = generate_one(Group::Lrn, 5, 1);
+        let b = generate_one(Group::Lrn, 5, 1);
+        assert_eq!(a.num_edges(), b.num_edges());
+        let c = generate_one(Group::Lrn, 6, 1);
+        // different index -> different graph (almost surely)
+        assert!(a.arcs().collect::<Vec<_>>() != c.arcs().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn diameter_classes() {
+        let road = generate_one(Group::Lrn, 0, 7);
+        let syn = generate_one(Group::Syn, 0, 7);
+        assert!(road.diameter_estimate() > syn.diameter_estimate());
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Group::parse("lrn"), Some(Group::Lrn));
+        assert_eq!(Group::parse("Ext.LRN"), Some(Group::ExtLrn));
+        assert_eq!(Group::parse("bogus"), None);
+    }
+
+    #[test]
+    #[ignore] // ~seconds: generated on demand by the scalability experiment
+    fn ext_lrn_envelope() {
+        let g = generate_one(Group::ExtLrn, 0, 1);
+        assert_eq!(g.num_vertices(), 16 * 1024);
+        assert!((44_000..=50_000).contains(&g.num_edges()), "e={}", g.num_edges());
+    }
+}

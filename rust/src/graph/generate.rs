@@ -1,0 +1,297 @@
+//! Graph generators reproducing the paper's dataset methodology (§5.1):
+//! road networks are BFS-sampled subgraphs of a larger network; trees and
+//! low-diameter synthetic graphs are generated directly.
+//!
+//! The SNAP California/San-Francisco networks are not available offline
+//! (see DESIGN.md §3): we substitute a degree-bounded perturbed lattice
+//! whose degree distribution and diameter class match road networks
+//! (avg degree ≈ 2.3–3.5, high diameter, planar-ish locality).
+
+use super::Graph;
+use crate::util::Rng;
+
+/// Edge weights for road networks: travel costs 1..=9 (SSSP uses them;
+/// BFS/WCC ignore weights).
+fn road_weight(rng: &mut Rng) -> u32 {
+    1 + rng.below(9) as u32
+}
+
+/// A large "city-scale" road network: rows×cols lattice with each lattice
+/// edge kept with probability `keep`, plus a deterministic spanning tree to
+/// guarantee connectivity, plus a few diagonal shortcuts. Degree ≤ 6.
+pub fn road_lattice(rows: usize, cols: usize, seed: u64) -> Graph {
+    road_lattice_density(rows, cols, 0.7, seed)
+}
+
+/// [`road_lattice`] with an explicit keep-probability for the non-tree
+/// lattice edges (controls |E|/|V|: ≈ 1 + 2·keep + 0.15).
+pub fn road_lattice_density(rows: usize, cols: usize, keep: f64, seed: u64) -> Graph {
+    let n = rows * cols;
+    let mut rng = Rng::new(seed);
+    let id = |r: usize, c: usize| (r * cols + c) as u32;
+    let mut edges: Vec<(u32, u32, u32)> = Vec::with_capacity(2 * n);
+    // Spanning tree: serpentine path through the lattice (always connected).
+    for r in 0..rows {
+        for c in 0..cols - 1 {
+            if r % 2 == 0 {
+                edges.push((id(r, c), id(r, c + 1), road_weight(&mut rng)));
+            } else {
+                edges.push((id(r, cols - 1 - c), id(r, cols - 2 - c), road_weight(&mut rng)));
+            }
+        }
+        if r + 1 < rows {
+            let c = if r % 2 == 0 { cols - 1 } else { 0 };
+            edges.push((id(r, c), id(r + 1, c), road_weight(&mut rng)));
+        }
+    }
+    // Extra lattice edges: kept with p to land avg degree in the road range.
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols && rng.chance(keep) {
+                edges.push((id(r, c), id(r, c + 1), road_weight(&mut rng)));
+            }
+            if r + 1 < rows && rng.chance(keep) {
+                edges.push((id(r, c), id(r + 1, c), road_weight(&mut rng)));
+            }
+            // occasional diagonal (over/under-pass)
+            if r + 1 < rows && c + 1 < cols && rng.chance(0.15) {
+                edges.push((id(r, c), id(r + 1, c + 1), road_weight(&mut rng)));
+            }
+        }
+    }
+    Graph::from_edges(n, &edges, false)
+}
+
+/// BFS-sample an `n`-vertex connected subgraph around a random seed vertex
+/// (the paper's construction for SRN/LRN from the SNAP networks), then
+/// induce and relabel.
+pub fn bfs_sample(g: &Graph, n: usize, rng: &mut Rng) -> Graph {
+    assert!(n <= g.num_vertices());
+    let src = rng.below(g.num_vertices() as u64) as u32;
+    let mut keep: Vec<u32> = Vec::with_capacity(n);
+    let mut seen = vec![false; g.num_vertices()];
+    let mut q = std::collections::VecDeque::new();
+    seen[src as usize] = true;
+    q.push_back(src);
+    while let Some(u) = q.pop_front() {
+        keep.push(u);
+        if keep.len() == n {
+            break;
+        }
+        for (v, _) in g.neighbors(u) {
+            if !seen[v as usize] {
+                seen[v as usize] = true;
+                q.push_back(v);
+            }
+        }
+    }
+    assert!(keep.len() == n, "source component smaller than sample size");
+    let mut relabel = vec![u32::MAX; g.num_vertices()];
+    for (i, &v) in keep.iter().enumerate() {
+        relabel[v as usize] = i as u32;
+    }
+    let mut edges = Vec::new();
+    for &u in &keep {
+        for (v, w) in g.neighbors(u) {
+            let (ru, rv) = (relabel[u as usize], relabel[v as usize]);
+            if rv != u32::MAX && ru < rv {
+                edges.push((ru, rv, w));
+            }
+        }
+    }
+    Graph::from_edges(n, &edges, false)
+}
+
+/// Random directed tree with bounded out-degree (Table 4 "Tree": 256
+/// vertices, 255 edges, directed, high diameter). Vertex 0 is the root.
+pub fn random_tree(n: usize, max_out_degree: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut out_deg = vec![0usize; n];
+    let mut edges = Vec::with_capacity(n - 1);
+    // Attach each vertex i>0 to a random earlier vertex with spare degree.
+    for i in 1..n as u32 {
+        loop {
+            let p = rng.below(i as u64) as u32;
+            if out_deg[p as usize] < max_out_degree {
+                out_deg[p as usize] += 1;
+                edges.push((p, i, road_weight(&mut rng)));
+                break;
+            }
+        }
+    }
+    Graph::from_edges(n, &edges, true)
+}
+
+/// Low-diameter synthetic graph (Table 4 "Syn."): `m` random directed
+/// edges over `n` vertices (random endpoints give O(log n) diameter).
+pub fn synthetic(n: usize, m: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(m);
+    let mut have = std::collections::HashSet::with_capacity(m);
+    while edges.len() < m {
+        let u = rng.below(n as u64) as u32;
+        let v = rng.below(n as u64) as u32;
+        if u != v && have.insert((u, v)) {
+            edges.push((u, v, road_weight(&mut rng)));
+        }
+    }
+    Graph::from_edges(n, &edges, true)
+}
+
+/// A road network with exactly `n` vertices and a logical edge count inside
+/// `[lo, hi]`, produced by BFS-sampling a 4×-larger lattice (the paper's
+/// construction from the SNAP networks) and then trimming non-tree edges /
+/// adding short-range edges to land in the budget.
+pub fn road_network(n: usize, lo: usize, hi: usize, seed: u64) -> Graph {
+    assert!(lo >= n - 1, "budget below spanning tree size");
+    let mut rng = Rng::new(seed);
+    // Lattice ~4n vertices, shape mildly rectangular like a city district.
+    let rows = ((4 * n) as f64).sqrt() as usize;
+    let cols = (4 * n + rows - 1) / rows;
+    // Aim the lattice density at the middle of the budget.
+    let target = (lo + hi) as f64 / 2.0 / n as f64;
+    let keep = ((target - 1.15) / 2.0).clamp(0.1, 0.95);
+    let base = road_lattice_density(rows, cols, keep, seed ^ 0x9E37);
+    let g = bfs_sample(&base, n, &mut rng);
+    let e = g.num_edges();
+    if e >= lo && e <= hi {
+        return g;
+    }
+    adjust_edges(&g, lo, hi, &mut rng)
+}
+
+/// Trim non-tree edges or add short-range edges so |E| lands in `[lo, hi]`
+/// while preserving connectivity (a BFS spanning tree is always kept).
+fn adjust_edges(g: &Graph, lo: usize, hi: usize, rng: &mut Rng) -> Graph {
+    let n = g.num_vertices();
+    // Split the undirected edge set into a BFS spanning tree + extras.
+    let mut parent = vec![u32::MAX; n];
+    let mut order = Vec::with_capacity(n);
+    let mut q = std::collections::VecDeque::new();
+    parent[0] = 0;
+    q.push_back(0u32);
+    while let Some(u) = q.pop_front() {
+        order.push(u);
+        for (v, _) in g.neighbors(u) {
+            if parent[v as usize] == u32::MAX {
+                parent[v as usize] = u;
+                q.push_back(v);
+            }
+        }
+    }
+    assert_eq!(order.len(), n, "sampled road network must be connected");
+    let mut tree: Vec<(u32, u32, u32)> = Vec::new();
+    let mut extra: Vec<(u32, u32, u32)> = Vec::new();
+    let mut tree_set = std::collections::HashSet::new();
+    for v in 1..n as u32 {
+        let p = parent[v as usize];
+        tree_set.insert((p.min(v), p.max(v)));
+    }
+    for (u, v, w) in g.arcs() {
+        if u < v {
+            if tree_set.contains(&(u, v)) {
+                tree.push((u, v, w));
+            } else {
+                extra.push((u, v, w));
+            }
+        }
+    }
+    rng.shuffle(&mut extra);
+    let mut edges = tree;
+    // Take extras up to hi; then pad with short-range (road-like) edges
+    // between lattice-close vertices until we reach lo.
+    for e in extra {
+        if edges.len() >= hi {
+            break;
+        }
+        edges.push(e);
+    }
+    let mut have: std::collections::HashSet<(u32, u32)> =
+        edges.iter().map(|&(u, v, _)| (u, v)).collect();
+    let mut guard = 0usize;
+    while edges.len() < lo {
+        guard += 1;
+        assert!(guard < 1_000_000, "edge padding did not converge");
+        // connect a vertex to a 2-hop neighbor: keeps locality road-like
+        let u = rng.below(n as u64) as u32;
+        let (nbrs, _) = g.out_edges(u);
+        if nbrs.is_empty() {
+            continue;
+        }
+        let mid = nbrs[rng.below(nbrs.len() as u64) as usize];
+        let (nbrs2, _) = g.out_edges(mid);
+        if nbrs2.is_empty() {
+            continue;
+        }
+        let v = nbrs2[rng.below(nbrs2.len() as u64) as usize];
+        if u == v {
+            continue;
+        }
+        let key = (u.min(v), u.max(v));
+        if have.insert(key) {
+            edges.push((key.0, key.1, road_weight(rng)));
+        }
+    }
+    let g2 = Graph::from_edges(n, &edges, false);
+    debug_assert!(g2.is_connected_from(0));
+    g2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::reference;
+
+    #[test]
+    fn lattice_connected() {
+        let g = road_lattice(16, 16, 1);
+        assert!(g.is_connected_from(0));
+        assert!(!g.is_directed());
+        let avg = g.num_edges() as f64 / g.num_vertices() as f64;
+        assert!(avg > 1.0 && avg < 3.5, "avg degree {avg} not road-like");
+    }
+
+    #[test]
+    fn bfs_sample_size_and_connectivity() {
+        let base = road_lattice(32, 32, 2);
+        let mut rng = Rng::new(3);
+        let g = bfs_sample(&base, 100, &mut rng);
+        assert_eq!(g.num_vertices(), 100);
+        assert!(g.is_connected_from(0));
+    }
+
+    #[test]
+    fn tree_shape() {
+        let g = random_tree(256, 4, 5);
+        assert_eq!(g.num_vertices(), 256);
+        assert_eq!(g.num_edges(), 255);
+        assert!(g.is_directed());
+        assert!(g.max_out_degree() <= 4);
+        // root reaches everything
+        let lv = reference::bfs_levels(&g, 0);
+        assert!(lv.iter().all(|&x| x != crate::graph::INF));
+    }
+
+    #[test]
+    fn synthetic_shape() {
+        let g = synthetic(256, 768, 7);
+        assert_eq!(g.num_vertices(), 256);
+        assert_eq!(g.num_edges(), 768);
+        assert!(g.is_directed());
+    }
+
+    #[test]
+    fn road_network_edge_budget() {
+        let g = road_network(256, 584, 898, 11);
+        assert_eq!(g.num_vertices(), 256);
+        assert!(g.num_edges() >= 584 && g.num_edges() <= 898, "e={}", g.num_edges());
+        assert!(g.is_connected_from(0));
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = synthetic(64, 128, 9);
+        let b = synthetic(64, 128, 9);
+        assert_eq!(a.arcs().collect::<Vec<_>>(), b.arcs().collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,217 @@
+//! Graph substrate: CSR graphs, generators for the Table-4 dataset groups,
+//! and native reference algorithms used for functional validation.
+
+pub mod datasets;
+pub mod generate;
+pub mod reference;
+
+/// Attribute value meaning "unreached" (maps to +inf in the golden model).
+pub const INF: u32 = u32::MAX;
+
+/// A weighted graph in CSR form.
+///
+/// Undirected graphs store each edge in both directions; [`Graph::num_edges`]
+/// reports *logical* edges (each undirected edge counted once), matching how
+/// the paper's Table 4 counts |E| and how MTEPS counts traversals.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    n: usize,
+    directed: bool,
+    logical_edges: usize,
+    offsets: Vec<u32>,
+    targets: Vec<u32>,
+    weights: Vec<u32>,
+}
+
+impl Graph {
+    /// Build from an edge list. For undirected graphs both directions are
+    /// materialized in the CSR. Self-loops and duplicate edges are dropped
+    /// (duplicates keep the minimum weight).
+    pub fn from_edges(n: usize, edges: &[(u32, u32, u32)], directed: bool) -> Graph {
+        let mut uniq: std::collections::BTreeMap<(u32, u32), u32> = std::collections::BTreeMap::new();
+        for &(u, v, w) in edges {
+            assert!((u as usize) < n && (v as usize) < n, "edge ({u},{v}) out of range");
+            if u == v {
+                continue;
+            }
+            let key = if directed || u <= v { (u, v) } else { (v, u) };
+            uniq.entry(key).and_modify(|x| *x = (*x).min(w)).or_insert(w);
+        }
+        let logical_edges = uniq.len();
+        let mut deg = vec![0u32; n];
+        for (&(u, v), _) in &uniq {
+            deg[u as usize] += 1;
+            if !directed {
+                deg[v as usize] += 1;
+            }
+        }
+        let mut offsets = vec![0u32; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let m = offsets[n] as usize;
+        let mut targets = vec![0u32; m];
+        let mut weights = vec![0u32; m];
+        let mut cursor: Vec<u32> = offsets[..n].to_vec();
+        let mut push = |cursor: &mut Vec<u32>, u: u32, v: u32, w: u32| {
+            let c = cursor[u as usize] as usize;
+            targets[c] = v;
+            weights[c] = w;
+            cursor[u as usize] += 1;
+        };
+        for (&(u, v), &w) in &uniq {
+            push(&mut cursor, u, v, w);
+            if !directed {
+                push(&mut cursor, v, u, w);
+            }
+        }
+        Graph { n, directed, logical_edges, offsets, targets, weights }
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    /// Logical edge count (undirected edges counted once).
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.logical_edges
+    }
+
+    #[inline]
+    pub fn is_directed(&self) -> bool {
+        self.directed
+    }
+
+    /// Out-degree (CSR arcs) of `v`.
+    #[inline]
+    pub fn out_degree(&self, v: u32) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// Out-neighbors of `v` as parallel `(targets, weights)` slices.
+    #[inline]
+    pub fn out_edges(&self, v: u32) -> (&[u32], &[u32]) {
+        let lo = self.offsets[v as usize] as usize;
+        let hi = self.offsets[v as usize + 1] as usize;
+        (&self.targets[lo..hi], &self.weights[lo..hi])
+    }
+
+    /// Iterate `(target, weight)` pairs of `v`'s out-edges.
+    pub fn neighbors(&self, v: u32) -> impl Iterator<Item = (u32, u32)> + '_ {
+        let (t, w) = self.out_edges(v);
+        t.iter().copied().zip(w.iter().copied())
+    }
+
+    /// All CSR arcs as `(src, dst, weight)` (directed view).
+    pub fn arcs(&self) -> impl Iterator<Item = (u32, u32, u32)> + '_ {
+        (0..self.n as u32).flat_map(move |u| self.neighbors(u).map(move |(v, w)| (u, v, w)))
+    }
+
+    /// Number of stored CSR arcs (= 2·|E| for undirected graphs).
+    #[inline]
+    pub fn num_arcs(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn max_out_degree(&self) -> usize {
+        (0..self.n as u32).map(|v| self.out_degree(v)).max().unwrap_or(0)
+    }
+
+    /// Unweighted BFS eccentricity of `v` within its reachable set.
+    pub fn eccentricity(&self, v: u32) -> u32 {
+        let lv = reference::bfs_levels(self, v);
+        lv.iter().copied().filter(|&x| x != INF).max().unwrap_or(0)
+    }
+
+    /// Vertex with minimum eccentricity (graph center, §4.2.1). O(|V|·|E|):
+    /// fine for edge-scale graphs; sampled for larger ones.
+    pub fn center(&self) -> u32 {
+        let sample_cap = 512;
+        let candidates: Vec<u32> = if self.n <= sample_cap {
+            (0..self.n as u32).collect()
+        } else {
+            // deterministic stride sample for big graphs (Ext. LRN)
+            let stride = self.n / sample_cap;
+            (0..sample_cap as u32).map(|i| (i as usize * stride) as u32).collect()
+        };
+        candidates
+            .into_iter()
+            .min_by_key(|&v| (self.eccentricity(v), v))
+            .unwrap_or(0)
+    }
+
+    /// Max eccentricity over a vertex sample (diameter estimate).
+    pub fn diameter_estimate(&self) -> u32 {
+        let step = (self.n / 64).max(1);
+        (0..self.n).step_by(step).map(|v| self.eccentricity(v as u32)).max().unwrap_or(0)
+    }
+
+    /// True if all vertices are reachable from `src` ignoring direction.
+    pub fn is_connected_from(&self, src: u32) -> bool {
+        reference::undirected_reach_count(self, src) == self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        // 0 -> 1,2 -> 3 (directed diamond)
+        Graph::from_edges(4, &[(0, 1, 1), (0, 2, 2), (1, 3, 1), (2, 3, 1)], true)
+    }
+
+    #[test]
+    fn csr_shape_directed() {
+        let g = diamond();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.num_arcs(), 4);
+        assert_eq!(g.out_degree(0), 2);
+        assert_eq!(g.out_degree(3), 0);
+        let (t, w) = g.out_edges(0);
+        assert_eq!(t, &[1, 2]);
+        assert_eq!(w, &[1, 2]);
+    }
+
+    #[test]
+    fn csr_shape_undirected() {
+        let g = Graph::from_edges(3, &[(0, 1, 5), (1, 2, 7)], false);
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.num_arcs(), 4);
+        assert_eq!(g.out_degree(1), 2);
+        let got: Vec<(u32, u32)> = g.neighbors(1).collect();
+        assert!(got.contains(&(0, 5)) && got.contains(&(2, 7)));
+    }
+
+    #[test]
+    fn duplicate_edges_keep_min_weight() {
+        let g = Graph::from_edges(2, &[(0, 1, 9), (0, 1, 3), (1, 0, 4)], false);
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.neighbors(0).next(), Some((1, 3)));
+    }
+
+    #[test]
+    fn self_loops_dropped() {
+        let g = Graph::from_edges(2, &[(0, 0, 1), (0, 1, 1)], true);
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn center_of_path_is_middle() {
+        let g = Graph::from_edges(5, &[(0, 1, 1), (1, 2, 1), (2, 3, 1), (3, 4, 1)], false);
+        assert_eq!(g.center(), 2);
+        assert_eq!(g.eccentricity(0), 4);
+        assert_eq!(g.eccentricity(2), 2);
+    }
+
+    #[test]
+    fn connectivity() {
+        let g = Graph::from_edges(4, &[(0, 1, 1), (2, 3, 1)], false);
+        assert!(!g.is_connected_from(0));
+        let g2 = Graph::from_edges(4, &[(0, 1, 1), (1, 2, 1), (2, 3, 1)], false);
+        assert!(g2.is_connected_from(0));
+    }
+}

@@ -1,0 +1,171 @@
+//! Native reference algorithms (textbook implementations).
+//!
+//! These are the functional ground truth for the cycle-accurate simulator
+//! and the dense PJRT golden model: every FLIP run's final vertex
+//! attributes must equal these outputs exactly.
+
+use super::{Graph, INF};
+use std::collections::BinaryHeap;
+use std::collections::VecDeque;
+
+/// BFS levels from `src` over CSR arcs; `INF` = unreachable.
+pub fn bfs_levels(g: &Graph, src: u32) -> Vec<u32> {
+    let mut lvl = vec![INF; g.num_vertices()];
+    lvl[src as usize] = 0;
+    let mut q = VecDeque::new();
+    q.push_back(src);
+    while let Some(u) = q.pop_front() {
+        let next = lvl[u as usize] + 1;
+        for (v, _) in g.neighbors(u) {
+            if lvl[v as usize] == INF {
+                lvl[v as usize] = next;
+                q.push_back(v);
+            }
+        }
+    }
+    lvl
+}
+
+/// Dijkstra distances from `src` (binary heap, the "optimal" MCU algorithm).
+/// `INF` = unreachable. Weights are u32; distances saturate below INF.
+pub fn dijkstra(g: &Graph, src: u32) -> Vec<u32> {
+    let mut dist = vec![INF; g.num_vertices()];
+    dist[src as usize] = 0;
+    // max-heap of Reverse((dist, vertex))
+    let mut pq: BinaryHeap<std::cmp::Reverse<(u32, u32)>> = BinaryHeap::new();
+    pq.push(std::cmp::Reverse((0, src)));
+    while let Some(std::cmp::Reverse((d, u))) = pq.pop() {
+        if d > dist[u as usize] {
+            continue;
+        }
+        for (v, w) in g.neighbors(u) {
+            let nd = d.saturating_add(w).min(INF - 1);
+            if nd < dist[v as usize] {
+                dist[v as usize] = nd;
+                pq.push(std::cmp::Reverse((nd, v)));
+            }
+        }
+    }
+    dist
+}
+
+/// WCC labels: label\[v\] = min vertex id in v's weakly-connected component.
+pub fn wcc_labels(g: &Graph) -> Vec<u32> {
+    let n = g.num_vertices();
+    // union-find over the undirected closure of the arcs
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    fn find(parent: &mut [u32], mut x: u32) -> u32 {
+        while parent[x as usize] != x {
+            parent[x as usize] = parent[parent[x as usize] as usize];
+            x = parent[x as usize];
+        }
+        x
+    }
+    for (u, v, _) in g.arcs() {
+        let (ru, rv) = (find(&mut parent, u), find(&mut parent, v));
+        if ru != rv {
+            parent[ru.max(rv) as usize] = ru.min(rv);
+        }
+    }
+    (0..n as u32).map(|v| find(&mut parent, v)).collect()
+}
+
+/// Count of vertices reachable from `src` treating arcs as undirected.
+pub fn undirected_reach_count(g: &Graph, src: u32) -> usize {
+    let n = g.num_vertices();
+    // Build reverse adjacency on the fly only if directed.
+    let mut radj: Vec<Vec<u32>> = vec![Vec::new(); if g.is_directed() { n } else { 0 }];
+    if g.is_directed() {
+        for (u, v, _) in g.arcs() {
+            radj[v as usize].push(u);
+        }
+    }
+    let mut seen = vec![false; n];
+    seen[src as usize] = true;
+    let mut q = VecDeque::new();
+    q.push_back(src);
+    let mut count = 1;
+    while let Some(u) = q.pop_front() {
+        let visit = |v: u32, seen: &mut Vec<bool>, q: &mut VecDeque<u32>, count: &mut usize| {
+            if !seen[v as usize] {
+                seen[v as usize] = true;
+                *count += 1;
+                q.push_back(v);
+            }
+        };
+        for (v, _) in g.neighbors(u) {
+            visit(v, &mut seen, &mut q, &mut count);
+        }
+        if g.is_directed() {
+            for &v in &radj[u as usize] {
+                visit(v, &mut seen, &mut q, &mut count);
+            }
+        }
+    }
+    count
+}
+
+/// Edges traversed by a frontier-driven run: every arc out of every vertex
+/// that is reached (the MTEPS numerator used across all architectures).
+pub fn traversed_edges(g: &Graph, levels_or_dist: &[u32]) -> usize {
+    (0..g.num_vertices() as u32)
+        .filter(|&v| levels_or_dist[v as usize] != INF)
+        .map(|v| g.out_degree(v))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(n: usize) -> Graph {
+        let edges: Vec<(u32, u32, u32)> =
+            (0..n as u32 - 1).map(|i| (i, i + 1, 2)).collect();
+        Graph::from_edges(n, &edges, false)
+    }
+
+    #[test]
+    fn bfs_line() {
+        let g = line(5);
+        assert_eq!(bfs_levels(&g, 0), vec![0, 1, 2, 3, 4]);
+        assert_eq!(bfs_levels(&g, 2), vec![2, 1, 0, 1, 2]);
+    }
+
+    #[test]
+    fn bfs_unreachable_is_inf() {
+        let g = Graph::from_edges(3, &[(0, 1, 1)], true);
+        let lv = bfs_levels(&g, 0);
+        assert_eq!(lv[2], INF);
+    }
+
+    #[test]
+    fn dijkstra_weighted() {
+        // 0 -2- 1 -2- 2, plus shortcut 0 -5- 2: shortest 0->2 is 4
+        let mut edges = vec![(0, 1, 2), (1, 2, 2), (0, 2, 5)];
+        let g = Graph::from_edges(3, &edges, false);
+        assert_eq!(dijkstra(&g, 0), vec![0, 2, 4]);
+        edges[2].2 = 3; // now shortcut wins
+        let g = Graph::from_edges(3, &edges, false);
+        assert_eq!(dijkstra(&g, 0), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn wcc_two_components() {
+        let g = Graph::from_edges(5, &[(1, 2, 1), (3, 4, 1)], false);
+        assert_eq!(wcc_labels(&g), vec![0, 1, 1, 3, 3]);
+    }
+
+    #[test]
+    fn wcc_directed_uses_weak_connectivity() {
+        let g = Graph::from_edges(3, &[(1, 0, 1), (2, 0, 1)], true);
+        assert_eq!(wcc_labels(&g), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn traversed_edges_counts_reached_arcs() {
+        let g = Graph::from_edges(4, &[(0, 1, 1), (1, 2, 1), (3, 0, 1)], true);
+        let lv = bfs_levels(&g, 0);
+        // reached: 0,1,2 with out-degrees 1,1,0
+        assert_eq!(traversed_edges(&g, &lv), 2);
+    }
+}

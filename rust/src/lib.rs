@@ -1,0 +1,30 @@
+//! # FLIP: Data-Centric Edge CGRA Accelerator — full-system reproduction
+//!
+//! This crate reproduces the FLIP system (Wu et al., 2023): a CGRA
+//! accelerator with a novel *data-centric* execution mode for graph
+//! processing at the edge, plus its graph-mapping compiler, the
+//! operation-centric and MCU baselines, the power/area/energy model, and
+//! the complete experimental harness (every table and figure of §5).
+//!
+//! Layer map (see DESIGN.md):
+//! - **L3 (this crate)** — the paper's contribution: cycle-accurate FLIP
+//!   simulator ([`sim`]), graph-mapping compiler ([`compiler`]),
+//!   architecture model ([`arch`]), baselines, energy model, experiment
+//!   drivers, CLI.
+//! - **L2/L1 (python/compile, build-time only)** — JAX + Pallas dense
+//!   relaxation golden model, AOT-lowered to HLO text in `artifacts/`.
+//! - **Runtime bridge** — [`runtime`] loads the artifacts via the PJRT CPU
+//!   client and cross-validates the simulator's functional outputs.
+
+pub mod arch;
+pub mod compiler;
+pub mod config;
+pub mod energy;
+pub mod experiments;
+pub mod graph;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;

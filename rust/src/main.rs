@@ -1,0 +1,263 @@
+//! FLIP command-line interface — the L3 leader entrypoint.
+//!
+//! ```text
+//! flip exp <id|all> [--graphs N] [--sources N] [--seed S] [--paper-scale]
+//!                   [--set key=val]... [--save]
+//! flip run --workload <bfs|sssp|wcc> --group <tree|srn|lrn|syn|extlrn>
+//!          [--idx I] [--source V] [--golden] [--set key=val]...
+//! flip compile --group <g> [--idx I]        mapping statistics
+//! flip golden --workload <w> --group <g>    validate sim vs PJRT artifacts
+//! flip info                                 configuration + artifact status
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use flip::compiler::{compile, CompileOpts};
+use flip::experiments::{registry, run_by_id, ExpEnv};
+use flip::graph::datasets::{self, Group};
+use flip::report;
+use flip::runtime::{default_artifact_dir, GoldenEngine};
+use flip::sim::flip::SimOptions;
+use flip::workloads::Workload;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, Vec<String>>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags: std::collections::HashMap<String, Vec<String>> = Default::default();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            let boolean = matches!(name, "paper-scale" | "golden" | "save" | "trace");
+            if boolean {
+                flags.entry(name.to_string()).or_default().push("true".into());
+            } else {
+                i += 1;
+                let v = argv.get(i).cloned().unwrap_or_default();
+                flags.entry(name.to_string()).or_default().push(v);
+            }
+        } else {
+            positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    fn env(&self) -> Result<ExpEnv> {
+        let mut env = if self.has("paper-scale") { ExpEnv::paper_scale() } else { ExpEnv::quick() };
+        if let Some(g) = self.flag("graphs") {
+            env.graphs_per_group = g.parse()?;
+        }
+        if let Some(s) = self.flag("sources") {
+            env.sources_per_graph = s.parse()?;
+        }
+        if let Some(s) = self.flag("seed") {
+            env.seed = s.parse()?;
+        }
+        for kv in self.flags.get("set").into_iter().flatten() {
+            env.cfg.set(kv).map_err(|e| anyhow!(e))?;
+        }
+        Ok(env)
+    }
+
+    fn group(&self) -> Result<Group> {
+        let g = self.flag("group").ok_or_else(|| anyhow!("--group required"))?;
+        Group::parse(g).ok_or_else(|| anyhow!("unknown group `{g}`"))
+    }
+
+    fn workload(&self) -> Result<Workload> {
+        let w = self.flag("workload").ok_or_else(|| anyhow!("--workload required"))?;
+        Workload::parse(w).ok_or_else(|| anyhow!("unknown workload `{w}`"))
+    }
+}
+
+fn real_main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = parse_args(&argv);
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("exp") => cmd_exp(&args),
+        Some("run") => cmd_run(&args),
+        Some("compile") => cmd_compile(&args),
+        Some("golden") => cmd_golden(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!("FLIP — data-centric edge CGRA accelerator (reproduction)\n");
+    println!("subcommands:");
+    println!("  exp <id|all>   run experiment drivers (tables/figures of the paper)");
+    for (id, desc, _) in registry() {
+        println!("      {id:<12} {desc}");
+    }
+    println!("  run            single cycle-accurate run (--workload, --group, --idx, --source)");
+    println!("  compile        mapping statistics (--group, --idx)");
+    println!("  golden         validate simulator vs PJRT golden model");
+    println!("  info           configuration and artifact status");
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: flip exp <id|all>"))?
+        .clone();
+    let env = args.env()?;
+    let t0 = std::time::Instant::now();
+    for (name, text) in run_by_id(&id, &env)? {
+        println!("{text}");
+        if args.has("save") {
+            let path = report::write_report(&format!("{name}.md"), &text)?;
+            println!("[saved {}]", path.display());
+        }
+    }
+    eprintln!("[{} finished in {:.1}s]", id, t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let env = args.env()?;
+    let group = args.group()?;
+    let w = args.workload()?;
+    let idx: usize = args.flag("idx").unwrap_or("0").parse()?;
+    let g = datasets::generate_one(group, idx, env.seed);
+    let source: u32 = args.flag("source").unwrap_or("0").parse()?;
+    let pair = flip::experiments::harness::CompiledPair::build(&g, &env.cfg, env.seed);
+    let opts = SimOptions {
+        trace_parallelism: args.has("trace"),
+        max_cycles: 2_000_000_000,
+        watchdog: 5_000_000,
+    };
+    let r = flip::experiments::harness::run_flip_opts(&pair, w, source, &opts);
+    println!(
+        "{} on {} graph #{idx} (|V|={}, |E|={}), source {source}:",
+        w.name(),
+        group.name(),
+        g.num_vertices(),
+        g.num_edges()
+    );
+    println!("  cycles            : {}", r.cycles);
+    println!("  edges traversed   : {}", r.edges_traversed);
+    println!("  MTEPS             : {:.2}", r.mteps(env.cfg.freq_mhz));
+    println!("  avg parallelism   : {:.2}", r.sim.avg_parallelism);
+    println!("  peak parallelism  : {}", r.sim.peak_parallelism);
+    println!("  packets delivered : {}", r.sim.packets_delivered);
+    println!("  packets parked    : {}", r.sim.packets_parked);
+    println!("  slice swaps       : {}", r.sim.swaps);
+    println!("  avg pkt wait      : {:.2} cycles", r.sim.avg_pkt_wait);
+    println!("  avg ALUin depth   : {:.3}", r.sim.avg_aluin_depth);
+    if args.has("golden") {
+        let engine = GoldenEngine::load(&default_artifact_dir())?;
+        match engine.golden_attrs(&g, w, source)? {
+            Some(golden) => {
+                if golden == r.attrs {
+                    println!("  golden (PJRT)     : MATCH ({} vertices)", golden.len());
+                } else {
+                    bail!("golden model mismatch!");
+                }
+            }
+            None => println!("  golden (PJRT)     : graph too large for dense artifacts"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_compile(args: &Args) -> Result<()> {
+    let env = args.env()?;
+    let group = args.group()?;
+    let idx: usize = args.flag("idx").unwrap_or("0").parse()?;
+    let g = datasets::generate_one(group, idx, env.seed);
+    let c = compile(&g, &env.cfg, &CompileOpts { seed: env.seed, ..Default::default() });
+    println!("{} graph #{idx}: |V|={} |E|={}", group.name(), g.num_vertices(), g.num_edges());
+    println!("  copies            : {}", c.placement.num_copies);
+    println!("  slices            : {}", c.num_slices());
+    println!("  total routing len : {}", c.stats.total_routing_length);
+    println!("  avg routing len   : {:.3}", c.stats.avg_routing_length);
+    println!("  congested arcs    : {}", c.stats.congested_edges);
+    println!("  swaps applied     : {}", c.stats.swaps_applied);
+    println!(
+        "  compile time      : {:.3}s (beam {:.3}s + local-opt {:.3}s)",
+        c.stats.compile_seconds, c.stats.place_seconds, c.stats.optimize_seconds
+    );
+    Ok(())
+}
+
+fn cmd_golden(args: &Args) -> Result<()> {
+    let env = args.env()?;
+    let group = args.group()?;
+    let w = args.workload()?;
+    let engine = GoldenEngine::load(&default_artifact_dir())?;
+    println!("PJRT platform: {}", engine.platform());
+    let graphs = env.graphs(group);
+    let mut checked = 0;
+    for (gi, g) in graphs.iter().enumerate() {
+        let pair = flip::experiments::harness::CompiledPair::build(g, &env.cfg, env.seed);
+        for src in env.sources(group, g, gi) {
+            let r = flip::experiments::harness::run_flip(&pair, w, src);
+            match engine.golden_attrs(g, w, src)? {
+                Some(golden) => {
+                    if golden != r.attrs {
+                        bail!("MISMATCH on graph {gi} source {src}");
+                    }
+                    checked += 1;
+                }
+                None => println!("graph {gi}: too large for dense golden model, skipped"),
+            }
+        }
+    }
+    println!("golden validation OK: {checked} runs match the PJRT model exactly");
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let cfg = flip::config::ArchConfig::default();
+    println!("FLIP prototype configuration (paper §3):");
+    println!("  PE array          : {}x{} ({} PEs)", cfg.array_w, cfg.array_h, cfg.num_pes());
+    println!("  DRF size          : {} vertices/PE (capacity {})", cfg.drf_size, cfg.capacity());
+    println!(
+        "  clusters          : {} ({}x{} swap units)",
+        cfg.num_clusters(),
+        cfg.cluster,
+        cfg.cluster
+    );
+    println!("  frequency         : {} MHz", cfg.freq_mhz);
+    println!("  SPM               : {} KB in {} banks", cfg.spm_bytes / 1024, cfg.spm_banks);
+    println!("  off-chip          : {} KB", cfg.offchip_bytes / 1024);
+    println!(
+        "  power / area      : {:.2} mW / {:.3} mm^2 (Table 6 model)",
+        flip::energy::paper_total_power_mw(),
+        flip::energy::paper_total_area_mm2()
+    );
+    let dir = default_artifact_dir();
+    match GoldenEngine::load(&dir) {
+        Ok(e) => {
+            println!("  artifacts         : {:?} (PJRT {}, sizes {:?})", dir, e.platform(), e.sizes)
+        }
+        Err(e) => println!("  artifacts         : NOT LOADED ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}

@@ -1,0 +1,137 @@
+//! Run metrics: what the experiment harness aggregates into the paper's
+//! tables and figures, plus the activity counters the energy model consumes.
+
+/// Per-component activity counters incremented by the cycle-accurate
+/// simulator; the energy model (crate::energy) converts them to nJ.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ActivityCounts {
+    /// ALU instructions executed.
+    pub alu_ops: u64,
+    /// Intra-Table lookups (deliveries).
+    pub intra_lookups: u64,
+    /// Intra-Table entry positions walked.
+    pub intra_walked: u64,
+    /// Inter-Table entries walked (scatter issues).
+    pub inter_walked: u64,
+    /// DRF reads.
+    pub drf_reads: u64,
+    /// DRF writes.
+    pub drf_writes: u64,
+    /// Input-buffer pushes (link traversals into a FIFO).
+    pub input_buf_pushes: u64,
+    /// ALUin buffer pushes.
+    pub aluin_pushes: u64,
+    /// ALUout buffer pushes.
+    pub aluout_pushes: u64,
+    /// Memory-buffer pushes (packets parked for swapped-out slices).
+    pub membuf_pushes: u64,
+    /// Router switch-allocator grants (one per forwarded packet per hop).
+    pub switch_grants: u64,
+    /// Instruction-memory fetches (= ALU ops; kept separate for Table 6).
+    pub im_fetches: u64,
+    /// Words moved between SPM/off-chip and the PE array during swaps.
+    pub swap_words: u64,
+    /// Slice-ID register compares (one per delivery).
+    pub slice_compares: u64,
+}
+
+impl ActivityCounts {
+    pub fn add(&mut self, o: &ActivityCounts) {
+        self.alu_ops += o.alu_ops;
+        self.intra_lookups += o.intra_lookups;
+        self.intra_walked += o.intra_walked;
+        self.inter_walked += o.inter_walked;
+        self.drf_reads += o.drf_reads;
+        self.drf_writes += o.drf_writes;
+        self.input_buf_pushes += o.input_buf_pushes;
+        self.aluin_pushes += o.aluin_pushes;
+        self.aluout_pushes += o.aluout_pushes;
+        self.membuf_pushes += o.membuf_pushes;
+        self.switch_grants += o.switch_grants;
+        self.im_fetches += o.im_fetches;
+        self.swap_words += o.swap_words;
+        self.slice_compares += o.slice_compares;
+    }
+}
+
+/// Result of one simulated run (any architecture).
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// Total cycles to termination.
+    pub cycles: u64,
+    /// Final vertex attributes (functional output).
+    pub attrs: Vec<u32>,
+    /// Edges traversed (MTEPS numerator): packets delivered to a vertex
+    /// program (FLIP) / edge iterations executed (baselines).
+    pub edges_traversed: u64,
+    /// Architecture-specific detail metrics.
+    pub sim: SimMetrics,
+}
+
+impl RunResult {
+    /// Million traversed edges per second at `freq_mhz`.
+    pub fn mteps(&self, freq_mhz: u64) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        let seconds = self.cycles as f64 / (freq_mhz as f64 * 1e6);
+        self.edges_traversed as f64 / 1e6 / seconds
+    }
+
+    /// Wall-clock seconds at `freq_mhz`.
+    pub fn seconds(&self, freq_mhz: u64) -> f64 {
+        self.cycles as f64 / (freq_mhz as f64 * 1e6)
+    }
+}
+
+/// Detail metrics from the FLIP cycle-accurate simulator (Table 8, Fig 11).
+#[derive(Debug, Clone, Default)]
+pub struct SimMetrics {
+    /// Packets delivered to a vertex program.
+    pub packets_delivered: u64,
+    /// Packets parked in memory buffers (destination slice off-chip).
+    pub packets_parked: u64,
+    /// Slice swaps performed.
+    pub swaps: u64,
+    /// Cycles spent with at least one cluster mid-swap.
+    pub swap_cycles: u64,
+    /// Mean #busy ALUs over cycles with ≥1 busy ALU (paper's parallelism).
+    pub avg_parallelism: f64,
+    /// Peak parallelism.
+    pub peak_parallelism: u32,
+    /// Mean packet wait (buffer residency beyond pure hop latency), cycles.
+    pub avg_pkt_wait: f64,
+    /// Mean ALUin queue depth sampled each cycle.
+    pub avg_aluin_depth: f64,
+    /// Activity counters for the energy model.
+    pub activity: ActivityCounts,
+    /// Per-cycle busy-ALU counts (only kept when tracing is enabled).
+    pub parallelism_trace: Vec<u16>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mteps_basic() {
+        let r = RunResult {
+            cycles: 1000,
+            attrs: vec![],
+            edges_traversed: 500,
+            sim: SimMetrics::default(),
+        };
+        // 1000 cycles @100MHz = 10us; 500 edges / 10us = 50 MTEPS
+        assert!((r.mteps(100) - 50.0).abs() < 1e-9);
+        assert!((r.seconds(100) - 1e-5).abs() < 1e-18);
+    }
+
+    #[test]
+    fn activity_add() {
+        let mut a = ActivityCounts { alu_ops: 1, ..Default::default() };
+        let b = ActivityCounts { alu_ops: 2, swap_words: 5, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.alu_ops, 3);
+        assert_eq!(a.swap_words, 5);
+    }
+}

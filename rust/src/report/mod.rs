@@ -1,0 +1,175 @@
+//! Report emitters: aligned text tables (the paper-shaped rows printed by
+//! every experiment driver), CSV files for plotting, and a minimal JSON
+//! writer for machine-readable results (no serde offline).
+
+use std::fmt::Write as _;
+
+/// An aligned text table.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(s, " {:<w$} |", c, w = width[i]);
+            }
+            let _ = writeln!(out, "{s}");
+        };
+        line(&mut out, &self.header);
+        let mut sep = String::from("|");
+        for w in &width {
+            let _ = write!(sep, "{:-<w$}|", "", w = w + 2);
+        }
+        let _ = writeln!(out, "{sep}");
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        out
+    }
+
+    /// CSV rendering (header + rows).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+}
+
+/// Format a float with `sig` significant digits (paper-style numbers).
+pub fn sig(x: f64, sig: usize) -> String {
+    if x == 0.0 || !x.is_finite() {
+        return format!("{x}");
+    }
+    let mag = x.abs().log10().floor() as i32;
+    let decimals = (sig as i32 - 1 - mag).max(0) as usize;
+    format!("{x:.decimals$}")
+}
+
+/// Format a ratio as "12.3x".
+pub fn times(x: f64) -> String {
+    format!("{}x", sig(x, 3))
+}
+
+/// Minimal JSON value writer (enough for results files).
+pub enum Json {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn render(&self) -> String {
+        match self {
+            Json::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    format!("{}", *x as i64)
+                } else {
+                    format!("{x}")
+                }
+            }
+            Json::Str(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+            Json::Bool(b) => format!("{b}"),
+            Json::Arr(xs) => {
+                format!("[{}]", xs.iter().map(|x| x.render()).collect::<Vec<_>>().join(","))
+            }
+            Json::Obj(kv) => format!(
+                "{{{}}}",
+                kv.iter()
+                    .map(|(k, v)| format!("\"{k}\":{}", v.render()))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            ),
+        }
+    }
+}
+
+/// Write a report file under `reports/` (created on demand); returns path.
+pub fn write_report(name: &str, content: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from("reports");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("| longer | 22    |"));
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(&["v,w".into()]);
+        assert!(t.to_csv().contains("\"v,w\""));
+    }
+
+    #[test]
+    fn sig_digits() {
+        assert_eq!(sig(123.456, 3), "123");
+        assert_eq!(sig(0.012345, 3), "0.0123");
+        assert_eq!(sig(1.5, 2), "1.5");
+        assert_eq!(times(36.0), "36.0x");
+    }
+
+    #[test]
+    fn json_roundtrip_shape() {
+        let j = Json::Obj(vec![
+            ("a".into(), Json::Num(1.0)),
+            ("b".into(), Json::Arr(vec![Json::Str("x\"y".into()), Json::Bool(true)])),
+        ]);
+        assert_eq!(j.render(), r#"{"a":1,"b":["x\"y",true]}"#);
+    }
+}

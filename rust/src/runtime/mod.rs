@@ -1,0 +1,217 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the L2/L1 **golden model** of the FLIP reproduction: the dense
+//! min-plus relaxation (Pallas kernel under `lax.scan`) iterated to
+//! fixpoint computes exactly what the distributed, asynchronous FLIP
+//! fabric computes — BFS levels (unit weights), SSSP distances (edge
+//! weights) or WCC labels (zero weights, own-label init). The e2e driver
+//! and `rust/tests/runtime_golden.rs` validate every simulator run against
+//! it. Python never runs here — only `artifacts/*.hlo.txt` are read.
+
+use crate::graph::{Graph, INF};
+use crate::workloads::Workload;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Compiled artifacts keyed by (entry point, n).
+pub struct GoldenEngine {
+    client: xla::PjRtClient,
+    exes: HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+    /// Sizes available for `relax_step`, ascending.
+    pub sizes: Vec<usize>,
+    /// Scan length of the `relax_k8` artifact.
+    pub scan_k: usize,
+}
+
+/// Default artifact directory: `$FLIP_ARTIFACTS` or `artifacts/` relative
+/// to the crate root (works from `cargo test`/`run` in the repo).
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("FLIP_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+impl GoldenEngine {
+    /// Load every `<entry>_n<k>.hlo.txt` in `dir` and compile it.
+    pub fn load(dir: &Path) -> Result<GoldenEngine> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        let mut sizes = Vec::new();
+        for entry in std::fs::read_dir(dir).with_context(|| format!("artifacts dir {dir:?}"))? {
+            let path = entry?.path();
+            let fname = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+            let Some(stem) = fname.strip_suffix(".hlo.txt") else { continue };
+            // parse "<name>_n<digits>"
+            let Some(pos) = stem.rfind("_n") else { continue };
+            let (name, n_str) = (&stem[..pos], &stem[pos + 2..]);
+            let Ok(n) = n_str.parse::<usize>() else { continue };
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parse {fname}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compile {fname}"))?;
+            if name == "relax_step" {
+                sizes.push(n);
+            }
+            exes.insert((name.to_string(), n), exe);
+        }
+        sizes.sort_unstable();
+        if sizes.is_empty() {
+            return Err(anyhow!("no relax_step artifacts found in {dir:?} — run `make artifacts`"));
+        }
+        Ok(GoldenEngine { client, exes, sizes, scan_k: 8 })
+    }
+
+    /// Smallest artifact size ≥ n, if any.
+    pub fn padded_size(&self, n: usize) -> Option<usize> {
+        self.sizes.iter().copied().find(|&s| s >= n)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// One relaxation step via the AOT module: d' = min(d, min_u d_u + W).
+    pub fn relax_step(&self, d: &[f32], w: &[f32], n: usize) -> Result<Vec<f32>> {
+        self.call1("relax_step", d, w, n)
+    }
+
+    /// Eight steps via the `lax.scan` artifact (falls back to `relax_step`).
+    pub fn relax_k8(&self, d: &[f32], w: &[f32], n: usize) -> Result<Vec<f32>> {
+        if self.exes.contains_key(&("relax_k8".to_string(), n)) {
+            self.call1("relax_k8", d, w, n)
+        } else {
+            let mut cur = d.to_vec();
+            for _ in 0..self.scan_k {
+                cur = self.relax_step(&cur, w, n)?;
+            }
+            Ok(cur)
+        }
+    }
+
+    fn call1(&self, name: &str, d: &[f32], w: &[f32], n: usize) -> Result<Vec<f32>> {
+        let exe = self
+            .exes
+            .get(&(name.to_string(), n))
+            .ok_or_else(|| anyhow!("no artifact {name}_n{n}"))?;
+        let dl = xla::Literal::vec1(d).reshape(&[n as i64])?;
+        let wl = xla::Literal::vec1(w).reshape(&[n as i64, n as i64])?;
+        let out = exe.execute::<xla::Literal>(&[dl, wl])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True
+        Ok(out.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Iterate to fixpoint (≤ n outer iterations). Uses the scanned
+    /// artifact to amortize dispatch, with a final exactness check.
+    pub fn relax_fixpoint(&self, d0: Vec<f32>, w: &[f32], n: usize) -> Result<Vec<f32>> {
+        let mut d = d0;
+        for _ in 0..n + 1 {
+            let next = self.relax_k8(&d, w, n)?;
+            let same = d
+                .iter()
+                .zip(&next)
+                .all(|(a, b)| a == b || (a.is_infinite() && b.is_infinite()));
+            d = next;
+            if same {
+                return Ok(d);
+            }
+        }
+        Ok(d)
+    }
+
+    /// Golden attributes for a workload run — the dense analogue of a FLIP
+    /// invocation. Returns `None` if no artifact size fits the graph.
+    pub fn golden_attrs(&self, g: &Graph, w: Workload, source: u32) -> Result<Option<Vec<u32>>> {
+        let view = crate::workloads::view_for(w, g);
+        let n = view.num_vertices();
+        let Some(pad) = self.padded_size(n) else { return Ok(None) };
+        // dense adjacency with +inf non-edges
+        let mut wm = vec![f32::INFINITY; pad * pad];
+        for (u, v, wt) in view.arcs() {
+            let eff = w.edge_weight(wt) as f32;
+            let cell = &mut wm[u as usize * pad + v as usize];
+            *cell = cell.min(eff);
+        }
+        let mut d0 = vec![f32::INFINITY; pad];
+        match w {
+            Workload::Bfs | Workload::Sssp => d0[source as usize] = 0.0,
+            Workload::Wcc => {
+                for v in 0..n {
+                    d0[v] = v as f32;
+                }
+                // padding vertices keep +inf: isolated, never propagate
+            }
+        }
+        let fix = self.relax_fixpoint(d0, &wm, pad)?;
+        Ok(Some(
+            fix[..n]
+                .iter()
+                .map(|&x| if x.is_infinite() { INF } else { x as u32 })
+                .collect(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generate, reference};
+
+    fn engine() -> GoldenEngine {
+        GoldenEngine::load(&default_artifact_dir()).expect("artifacts must be built")
+    }
+
+    #[test]
+    fn loads_artifacts_and_reports_sizes() {
+        let e = engine();
+        assert!(e.sizes.contains(&16));
+        assert!(e.sizes.contains(&256));
+        assert_eq!(e.padded_size(10), Some(16));
+        assert_eq!(e.padded_size(100), Some(256));
+        assert_eq!(e.padded_size(100_000), None);
+    }
+
+    #[test]
+    fn relax_step_matches_native() {
+        let n = 16;
+        let mut w = vec![f32::INFINITY; n * n];
+        w[0 * n + 1] = 2.0;
+        w[1 * n + 2] = 3.0;
+        let mut d = vec![f32::INFINITY; n];
+        d[0] = 0.0;
+        let e = engine();
+        let d1 = e.relax_step(&d, &w, n).unwrap();
+        assert_eq!(d1[1], 2.0);
+        assert!(d1[2].is_infinite());
+        let d2 = e.relax_step(&d1, &w, n).unwrap();
+        assert_eq!(d2[2], 5.0);
+    }
+
+    #[test]
+    fn golden_bfs_matches_reference() {
+        let g = generate::road_network(64, 146, 166, 3);
+        let e = engine();
+        let got = e.golden_attrs(&g, Workload::Bfs, 0).unwrap().unwrap();
+        assert_eq!(got, reference::bfs_levels(&g, 0));
+    }
+
+    #[test]
+    fn golden_sssp_matches_reference() {
+        let g = generate::road_network(48, 110, 125, 5);
+        let e = engine();
+        let got = e.golden_attrs(&g, Workload::Sssp, 7).unwrap().unwrap();
+        assert_eq!(got, reference::dijkstra(&g, 7));
+    }
+
+    #[test]
+    fn golden_wcc_matches_reference() {
+        let g = generate::synthetic(40, 80, 7);
+        let e = engine();
+        let got = e.golden_attrs(&g, Workload::Wcc, 0).unwrap().unwrap();
+        assert_eq!(got, reference::wcc_labels(&g));
+    }
+}

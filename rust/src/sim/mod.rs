@@ -1,0 +1,11 @@
+//! Simulators: the cycle-accurate FLIP data-centric simulator ([`flip`]),
+//! the classic operation-centric CGRA baseline ([`opcentric`] over
+//! [`modulo`]-scheduled [`crate::workloads::dfgs`]), and the MCU
+//! cost-model baseline ([`mcu`]).
+
+pub mod flip;
+pub mod mcu;
+pub mod modulo;
+pub mod opcentric;
+
+pub use flip::{FlipSim, SimOptions};

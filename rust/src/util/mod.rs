@@ -1,0 +1,7 @@
+//! Shared utilities: deterministic RNG, statistics, in-house property tests.
+
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

@@ -1,0 +1,452 @@
+//! Dataflow graphs of the *operation-centric* loop bodies (paper §1.2,
+//! §5.1, Fig 2/3).
+//!
+//! §5.1: "to iterate over one vertex, 34/38 operations are needed in BFS
+//! and WCC. In SSSP, two kernels with 10/31 operations will be mapped for
+//! vertex searching and updating."  Fig 3(a) gives the op mix: ~20% graph
+//! memory access, ~30% address generation, a substantial loop-control
+//! fraction, the rest compute.
+//!
+//! The DFGs here are structured (chained) the way a compiler would emit
+//! them — address chains feeding loads feeding compute feeding stores —
+//! so the modulo scheduler ([`crate::sim::modulo`]) derives realistic
+//! schedule lengths and IIs rather than using magic constants.
+
+use crate::workloads::Workload;
+
+/// Operation category, for Fig 3 censuses and bank-conflict modelling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpCat {
+    /// Graph-data SPM load/store.
+    MemAccess,
+    /// Address computation for an SPM access.
+    AddrGen,
+    /// Loop control: induction, bounds checks, queue bookkeeping, branches.
+    LoopControl,
+    /// The actual vertex computation (compare/add/min/select).
+    Compute,
+}
+
+impl OpCat {
+    pub fn name(self) -> &'static str {
+        match self {
+            OpCat::MemAccess => "Memory Access",
+            OpCat::AddrGen => "Address Generation",
+            OpCat::LoopControl => "Loop Control",
+            OpCat::Compute => "Compute",
+        }
+    }
+}
+
+/// One DFG node.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub cat: OpCat,
+    /// Result latency in cycles (SPM load = 2, others = 1).
+    pub latency: u32,
+}
+
+/// A loop-body DFG plus its loop-carried recurrences.
+#[derive(Debug, Clone)]
+pub struct Dfg {
+    pub name: String,
+    pub ops: Vec<Op>,
+    /// Intra-iteration dependencies (producer -> consumer).
+    pub edges: Vec<(u32, u32)>,
+    /// Loop-carried recurrences `(producer, consumer, distance)` — e.g. the
+    /// induction variable or the running min in SSSP's search kernel.
+    /// NOTE: the *memory-carried* dependencies (queue contents, dist[]
+    /// array) are not expressed here — they prevent cross-iteration
+    /// pipelining entirely, which the execution model captures by charging
+    /// the full schedule length per iteration (Fig 2's 15×9 example).
+    pub recurrences: Vec<(u32, u32, u32)>,
+    /// Indices of the per-edge sub-body (replicated under unrolling).
+    pub per_edge_ops: Vec<u32>,
+    /// The per-edge load of the mutable attribute array (level[]/dist[]/
+    /// label[]). Under unrolling, lane k's attribute load must wait for
+    /// lane k-1's store — the compiler cannot disambiguate the addresses.
+    pub attr_load_op: Option<u32>,
+}
+
+impl Dfg {
+    pub fn num_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Op count per category (Fig 3a census).
+    pub fn census(&self) -> Vec<(OpCat, usize)> {
+        let cats = [OpCat::MemAccess, OpCat::AddrGen, OpCat::LoopControl, OpCat::Compute];
+        cats.iter().map(|&c| (c, self.ops.iter().filter(|o| o.cat == c).count())).collect()
+    }
+
+    /// Number of SPM accesses per iteration (bank-conflict model input).
+    pub fn mem_ops(&self) -> usize {
+        self.ops.iter().filter(|o| o.cat == OpCat::MemAccess).count()
+    }
+
+    /// Unroll the per-edge sub-body `u` times: replicates the per-edge ops
+    /// (and their internal edges), keeps one copy of the shared prefix, and
+    /// serializes SPM stores of the replicas through a dependency (the
+    /// non-atomic read/write pairs the paper cites — lanes may not commit
+    /// out of order).
+    pub fn unrolled(&self, u: usize) -> Dfg {
+        assert!(u >= 1);
+        if u == 1 {
+            return self.clone();
+        }
+        let mut d = self.clone();
+        d.name = format!("{}_u{}", self.name, u);
+        let per_edge: std::collections::HashSet<u32> = self.per_edge_ops.iter().copied().collect();
+        // Map from original idx -> replica idx per lane.
+        for lane in 1..u {
+            let mut remap = std::collections::HashMap::new();
+            for &i in &self.per_edge_ops {
+                let new_idx = d.ops.len() as u32;
+                d.ops.push(self.ops[i as usize].clone());
+                remap.insert(i, new_idx);
+                d.per_edge_ops.push(new_idx);
+            }
+            for &(a, b) in &self.edges {
+                match (per_edge.contains(&a), per_edge.contains(&b)) {
+                    (true, true) => d.edges.push((remap[&a], remap[&b])),
+                    // shared prefix feeds each lane's replica
+                    (false, true) => d.edges.push((a, remap[&b])),
+                    // lane result feeding shared suffix: all lanes feed it
+                    (true, false) => d.edges.push((remap[&a], b)),
+                    (false, false) => {}
+                }
+            }
+            // Serialize lanes through the shared mutable array: lane k's
+            // attribute *load* must wait for lane k-1's attribute *store*
+            // (the compiler cannot disambiguate level[v_a] vs level[v_b],
+            // and the paper's non-atomic read/write pairs forbid
+            // reordering). This is the structural reason unrolling
+            // plateaus (Fig 4).
+            let store_orig = self
+                .per_edge_ops
+                .iter()
+                .copied()
+                .filter(|&i| self.ops[i as usize].cat == OpCat::MemAccess)
+                .last();
+            if let (Some(st), Some(ld)) = (store_orig, self.attr_load_op) {
+                let prev_store = if lane == 1 {
+                    st
+                } else {
+                    // the same store op in the previous lane
+                    d.per_edge_ops[(lane - 1) * self.per_edge_ops.len()
+                        + self.per_edge_ops.iter().position(|&x| x == st).unwrap()]
+                };
+                d.edges.push((prev_store, remap[&ld]));
+            }
+        }
+        d
+    }
+}
+
+/// Builder: a chain `a -> b -> c ...` of ops, returning their indices.
+struct Chain<'a> {
+    d: &'a mut Dfg,
+    last: Option<u32>,
+}
+
+impl<'a> Chain<'a> {
+    fn new(d: &'a mut Dfg) -> Self {
+        Chain { d, last: None }
+    }
+
+    fn push(&mut self, cat: OpCat, latency: u32) -> u32 {
+        let idx = self.d.ops.len() as u32;
+        self.d.ops.push(Op { cat, latency });
+        if let Some(p) = self.last {
+            self.d.edges.push((p, idx));
+        }
+        self.last = Some(idx);
+        idx
+    }
+
+    fn fork(&mut self, from: u32) {
+        self.last = Some(from);
+    }
+}
+
+fn push_n(c: &mut Chain, cat: OpCat, latency: u32, n: usize) -> Vec<u32> {
+    (0..n).map(|_| c.push(cat, latency)).collect()
+}
+
+/// BFS loop body: 34 ops (paper §5.1). Dequeue current vertex, walk its
+/// adjacency row, check/update levels, push unvisited neighbors.
+pub fn bfs_dfg() -> Dfg {
+    let mut d = Dfg {
+        name: "bfs".into(),
+        ops: vec![],
+        edges: vec![],
+        recurrences: vec![],
+        per_edge_ops: vec![],
+        attr_load_op: None,
+    };
+    let mut c = Chain::new(&mut d);
+    // -- shared per-vertex prefix --------------------------------------
+    // Parallel branches: the loop-control chain, the queue-load chain and
+    // the row-bound loads overlap the way a spatial mapper exploits ILP —
+    // the critical path is addr -> load u -> addr -> load row -> per-edge.
+    let qhead = c.push(OpCat::LoopControl, 1);
+    push_n(&mut c, OpCat::LoopControl, 1, 4); // bounds cmp + branch + empty-check + wrap
+    c.fork(qhead);
+    push_n(&mut c, OpCat::AddrGen, 1, 2); // &queue[head]
+    let u = c.push(OpCat::MemAccess, 2); // load u
+    c.fork(u);
+    c.push(OpCat::AddrGen, 1); // &offsets[u]
+    let row = c.push(OpCat::MemAccess, 2); // load row start
+    c.fork(u);
+    c.push(OpCat::AddrGen, 1); // &offsets[u+1] (parallel with row start)
+    c.push(OpCat::MemAccess, 2); // load row end
+    c.fork(u);
+    push_n(&mut c, OpCat::LoopControl, 1, 3); // neighbor-loop setup (parallel)
+    // -- per-edge body ---------------------------------------------------
+    let e0 = c.d.ops.len() as u32;
+    c.fork(row);
+    push_n(&mut c, OpCat::AddrGen, 1, 2); // &targets[i]
+    let v = c.push(OpCat::MemAccess, 2); // load neighbor v
+    c.fork(v);
+    c.push(OpCat::AddrGen, 1); // &level[v]
+    c.push(OpCat::MemAccess, 2); // load level[v]
+    push_n(&mut c, OpCat::Compute, 1, 2); // lvl+1 (parallel w/ load), cmp
+    let sel = c.push(OpCat::Compute, 1); // select
+    c.push(OpCat::AddrGen, 1); // &level[v] store addr
+    c.push(OpCat::MemAccess, 2); // store level[v]
+    // queue push of v (parallel with level store): addr + store + tail bump
+    c.fork(sel);
+    c.push(OpCat::AddrGen, 1); // &queue[tail]
+    c.push(OpCat::MemAccess, 2); // store queue[tail]
+    let e_end = c.push(OpCat::LoopControl, 1); // tail++
+    // per-edge loop control: i++, cmp, branch (parallel with loads)
+    c.fork(v);
+    push_n(&mut c, OpCat::LoopControl, 1, 3);
+    // -- shared suffix: visited-count bookkeeping ------------------------
+    push_n(&mut c, OpCat::Compute, 1, 2);
+    let last = c.push(OpCat::LoopControl, 1);
+    d.per_edge_ops = (e0..=e_end).collect::<Vec<u32>>();
+    // extend per-edge set to include its loop control trio
+    d.per_edge_ops.extend(e_end + 1..=e_end + 3);
+    // loop-carried recurrences: induction variables only (short cycles);
+    // memory-carried deps are modelled as full serialization at execution
+    d.recurrences.push((qhead, qhead, 1)); // queue-head induction
+    d.recurrences.push((e_end, e_end, 1)); // tail induction
+    let _ = last;
+    d.attr_load_op = Some(e0 + 4); // load level[v]
+    debug_assert_eq!(d.ops[(e0 + 4) as usize].cat, OpCat::MemAccess);
+    d
+}
+
+/// WCC loop body: 38 ops — like BFS but label compare/min on both
+/// endpoints and convergence-flag bookkeeping.
+pub fn wcc_dfg() -> Dfg {
+    let mut d = bfs_dfg();
+    d.name = "wcc".into();
+    // label min is two extra computes + a convergence-flag update
+    // (compute + store) vs BFS's level+1
+    let mut c = Chain::new(&mut d);
+    let n0 = c.push(OpCat::Compute, 1);
+    c.push(OpCat::Compute, 1);
+    c.push(OpCat::LoopControl, 1);
+    let n3 = c.push(OpCat::LoopControl, 1);
+    // wire them after the last compute of the per-edge body
+    d.edges.push((d.per_edge_ops[7], n0));
+    d.per_edge_ops.extend([n0, n0 + 1]);
+    let _ = n3;
+    d
+}
+
+/// SSSP search kernel: 10 ops — scan for the unvisited vertex with the
+/// minimum distance (the O(|V|²) Dijkstra inner scan). The running-min is
+/// a loop-carried recurrence: iterations serialize on it.
+pub fn sssp_search_dfg() -> Dfg {
+    let mut d = Dfg {
+        name: "sssp_search".into(),
+        ops: vec![],
+        edges: vec![],
+        recurrences: vec![],
+        per_edge_ops: vec![],
+        attr_load_op: None,
+    };
+    let mut c = Chain::new(&mut d);
+    let i0 = c.push(OpCat::LoopControl, 1); // i++
+    c.push(OpCat::LoopControl, 1); // bounds
+    push_n(&mut c, OpCat::AddrGen, 1, 2); // &dist[i], &visited[i]
+    c.push(OpCat::MemAccess, 2); // load dist[i]
+    c.push(OpCat::MemAccess, 2); // load visited[i]
+    let cmp0 = c.push(OpCat::Compute, 1); // < running min?
+    c.push(OpCat::Compute, 1); // unvisited mask
+    let sel = c.push(OpCat::Compute, 1); // select new min
+    let last = c.push(OpCat::LoopControl, 1); // branch
+    d.recurrences.push((sel, cmp0, 1)); // running-min serialization
+    d.recurrences.push((i0, i0, 1)); // induction
+    let _ = last;
+    d.per_edge_ops = (0..d.ops.len() as u32).collect();
+    d
+}
+
+/// SSSP update kernel: 31 ops — relax all neighbors of the chosen vertex.
+pub fn sssp_update_dfg() -> Dfg {
+    let mut d = Dfg {
+        name: "sssp_update".into(),
+        ops: vec![],
+        edges: vec![],
+        recurrences: vec![],
+        per_edge_ops: vec![],
+        attr_load_op: None,
+    };
+    let mut c = Chain::new(&mut d);
+    // prefix: mark chosen u visited, load dist[u] and row bounds —
+    // independent chains off the vertex id, mapped in parallel
+    let a0 = c.push(OpCat::AddrGen, 1); // &visited[u]
+    c.push(OpCat::AddrGen, 1);
+    c.push(OpCat::MemAccess, 2); // store visited[u]
+    c.fork(a0);
+    c.push(OpCat::AddrGen, 1); // &dist[u]
+    c.push(OpCat::MemAccess, 2); // load dist[u]
+    c.fork(a0);
+    let row = c.push(OpCat::MemAccess, 2); // load row start
+    c.fork(a0);
+    c.push(OpCat::MemAccess, 2); // load row end
+    c.fork(a0);
+    push_n(&mut c, OpCat::LoopControl, 1, 3);
+    // per-edge: load v, then w/dist[v]/visited[v] in parallel, relax, store
+    let e0 = c.d.ops.len() as u32;
+    c.fork(row);
+    push_n(&mut c, OpCat::AddrGen, 1, 2); // &targets[i]
+    let v = c.push(OpCat::MemAccess, 2); // load v
+    c.fork(v);
+    c.push(OpCat::AddrGen, 1);
+    let w_ld = c.push(OpCat::MemAccess, 2); // load w
+    c.fork(v);
+    c.push(OpCat::AddrGen, 1);
+    let dist_ld = c.push(OpCat::MemAccess, 2); // load dist[v]
+    c.fork(v);
+    c.push(OpCat::AddrGen, 1);
+    c.push(OpCat::MemAccess, 2); // load visited[v]
+    let mask = c.push(OpCat::Compute, 1); // visited mask
+    c.fork(w_ld);
+    let add = c.push(OpCat::Compute, 1); // dist[u] + w
+    c.fork(dist_ld);
+    c.push(OpCat::Compute, 1); // cmp (also depends on add)
+    c.d.edges.push((add, c.last.unwrap()));
+    c.push(OpCat::Compute, 1); // select
+    c.d.edges.push((mask, c.last.unwrap()));
+    c.push(OpCat::Compute, 1); // flag
+    c.push(OpCat::AddrGen, 1);
+    let st = c.push(OpCat::MemAccess, 2); // store dist[v]
+    let e_end = c.push(OpCat::LoopControl, 1); // i++
+    push_n(&mut c, OpCat::LoopControl, 1, 2); // cmp + branch
+    c.fork(e_end);
+    push_n(&mut c, OpCat::LoopControl, 1, 2); // outer bookkeeping
+    d.per_edge_ops = (e0..=e_end).collect();
+    d.recurrences.push((e_end, e_end, 1)); // induction
+    let _ = st;
+    d.attr_load_op = Some(e0 + 6); // load dist[v]
+    debug_assert_eq!(d.ops[(e0 + 6) as usize].cat, OpCat::MemAccess);
+    d
+}
+
+/// The DFG(s) the classic CGRA maps for a workload.
+pub fn dfgs_for(w: Workload) -> Vec<Dfg> {
+    match w {
+        Workload::Bfs => vec![bfs_dfg()],
+        Workload::Wcc => vec![wcc_dfg()],
+        Workload::Sssp => vec![sssp_search_dfg(), sssp_update_dfg()],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_counts_match_paper() {
+        assert_eq!(bfs_dfg().num_ops(), 34);
+        assert_eq!(wcc_dfg().num_ops(), 38);
+        assert_eq!(sssp_search_dfg().num_ops(), 10);
+        assert_eq!(sssp_update_dfg().num_ops(), 31);
+    }
+
+    #[test]
+    fn census_shape_matches_fig3() {
+        let d = bfs_dfg();
+        let census: std::collections::HashMap<_, _> = d.census().into_iter().collect();
+        let total = d.num_ops() as f64;
+        let mem = census[&OpCat::MemAccess] as f64 / total;
+        let addr = census[&OpCat::AddrGen] as f64 / total;
+        let loopc = census[&OpCat::LoopControl] as f64 / total;
+        assert!((0.15..0.30).contains(&mem), "mem frac {mem}");
+        assert!((0.20..0.40).contains(&addr), "addr frac {addr}");
+        assert!(loopc > 0.2, "loop frac {loopc}");
+    }
+
+    #[test]
+    fn edges_are_valid() {
+        for d in [bfs_dfg(), wcc_dfg(), sssp_search_dfg(), sssp_update_dfg()] {
+            let n = d.num_ops() as u32;
+            for &(a, b) in &d.edges {
+                assert!(a < n && b < n, "{}: edge ({a},{b}) out of range", d.name);
+            }
+            for &(a, b, dist) in &d.recurrences {
+                assert!(a < n && b < n && dist >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn dfg_is_acyclic_within_iteration() {
+        for d in [bfs_dfg(), wcc_dfg(), sssp_search_dfg(), sssp_update_dfg()] {
+            // Kahn toposort over intra-iteration edges must consume all ops.
+            let n = d.num_ops();
+            let mut indeg = vec![0usize; n];
+            for &(_, b) in &d.edges {
+                indeg[b as usize] += 1;
+            }
+            let mut q: Vec<usize> =
+                (0..n).filter(|&i| indeg[i] == 0).collect();
+            let mut seen = 0;
+            while let Some(u) = q.pop() {
+                seen += 1;
+                for &(a, b) in &d.edges {
+                    if a as usize == u {
+                        indeg[b as usize] -= 1;
+                        if indeg[b as usize] == 0 {
+                            q.push(b as usize);
+                        }
+                    }
+                }
+            }
+            assert_eq!(seen, n, "{} has an intra-iteration cycle", d.name);
+        }
+    }
+
+    #[test]
+    fn unroll_replicates_per_edge_ops() {
+        let d = bfs_dfg();
+        let u3 = d.unrolled(3);
+        assert_eq!(u3.num_ops(), d.num_ops() + 2 * d.per_edge_ops.len());
+        assert_eq!(d.unrolled(1).num_ops(), d.num_ops());
+        // unrolled DFG must still be acyclic
+        let n = u3.num_ops();
+        let mut indeg = vec![0usize; n];
+        for &(_, b) in &u3.edges {
+            indeg[b as usize] += 1;
+        }
+        let mut q: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0;
+        while let Some(x) = q.pop() {
+            seen += 1;
+            for &(a, b) in &u3.edges {
+                if a as usize == x {
+                    indeg[b as usize] -= 1;
+                    if indeg[b as usize] == 0 {
+                        q.push(b as usize);
+                    }
+                }
+            }
+        }
+        assert_eq!(seen, n, "unrolled DFG has a cycle");
+    }
+}

@@ -1,0 +1,133 @@
+//! Graph workloads (paper Table 3): BFS, SSSP, WCC in the vertex-centric
+//! programming model, plus the op-centric DFGs for the classic-CGRA
+//! baseline ([`dfgs`]).
+
+pub mod dfgs;
+
+use crate::arch::isa::{self, Instr};
+use crate::graph::{Graph, INF};
+
+/// The three evaluation workloads (Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Workload {
+    Bfs,
+    Sssp,
+    Wcc,
+}
+
+impl Workload {
+    pub const ALL: [Workload; 3] = [Workload::Bfs, Workload::Sssp, Workload::Wcc];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Workload::Bfs => "BFS",
+            Workload::Sssp => "SSSP",
+            Workload::Wcc => "WCC",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Workload> {
+        match s.to_ascii_lowercase().as_str() {
+            "bfs" => Some(Workload::Bfs),
+            "sssp" => Some(Workload::Sssp),
+            "wcc" => Some(Workload::Wcc),
+            _ => None,
+        }
+    }
+
+    /// The vertex program stored in every PE's Instruction Memory.
+    pub fn program(self) -> &'static [Instr] {
+        match self {
+            Workload::Bfs | Workload::Sssp => isa::PROG_RELAX,
+            Workload::Wcc => isa::PROG_WCC,
+        }
+    }
+
+    /// Effective edge weight seen by the Intra-Table stage: BFS counts
+    /// hops, SSSP uses the stored weight, WCC propagates labels unchanged.
+    #[inline]
+    pub fn edge_weight(self, stored_weight: u32) -> u32 {
+        match self {
+            Workload::Bfs => 1,
+            Workload::Sssp => stored_weight,
+            Workload::Wcc => 0,
+        }
+    }
+
+    /// Initial vertex attribute.
+    #[inline]
+    pub fn init_attr(self, vid: u32, _n: usize) -> u32 {
+        match self {
+            Workload::Bfs | Workload::Sssp => INF,
+            Workload::Wcc => vid,
+        }
+    }
+
+    /// True if the workload starts from a single source vertex (BFS/SSSP);
+    /// WCC starts with every vertex scattering its own label.
+    pub fn single_source(self) -> bool {
+        !matches!(self, Workload::Wcc)
+    }
+
+    /// WCC must propagate over the undirected closure (weak connectivity);
+    /// BFS/SSSP follow the stored arc direction.
+    pub fn needs_undirected(self) -> bool {
+        matches!(self, Workload::Wcc)
+    }
+
+    /// Functional reference output for validation (native Rust oracle).
+    pub fn reference(self, g: &Graph, source: u32) -> Vec<u32> {
+        match self {
+            Workload::Bfs => crate::graph::reference::bfs_levels(g, source),
+            Workload::Sssp => crate::graph::reference::dijkstra(g, source),
+            Workload::Wcc => crate::graph::reference::wcc_labels(g),
+        }
+    }
+}
+
+/// The graph actually mapped for a workload: WCC uses the undirected
+/// closure of directed graphs so weak connectivity propagates.
+pub fn view_for(workload: Workload, g: &Graph) -> Graph {
+    if workload.needs_undirected() && g.is_directed() {
+        let edges: Vec<(u32, u32, u32)> = g.arcs().collect();
+        Graph::from_edges(g.num_vertices(), &edges, false)
+    } else {
+        g.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_per_workload() {
+        assert_eq!(Workload::Bfs.edge_weight(7), 1);
+        assert_eq!(Workload::Sssp.edge_weight(7), 7);
+        assert_eq!(Workload::Wcc.edge_weight(7), 0);
+    }
+
+    #[test]
+    fn init_attrs() {
+        assert_eq!(Workload::Bfs.init_attr(5, 10), INF);
+        assert_eq!(Workload::Wcc.init_attr(5, 10), 5);
+    }
+
+    #[test]
+    fn wcc_view_is_undirected() {
+        let g = Graph::from_edges(3, &[(1, 0, 1), (2, 1, 1)], true);
+        let v = view_for(Workload::Wcc, &g);
+        assert!(!v.is_directed());
+        assert_eq!(v.num_edges(), 2);
+        // BFS view unchanged
+        let b = view_for(Workload::Bfs, &g);
+        assert!(b.is_directed());
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for w in Workload::ALL {
+            assert_eq!(Workload::parse(w.name()), Some(w));
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Integration tests: full pipeline (datasets → compiler → cycle-accurate
+//! simulator → references) across modules, plus the baselines and the
+//! dynamic-attribute path.
+
+use flip::compiler::{compile, tablegen, CompileOpts};
+use flip::config::{ArchConfig, McuConfig};
+use flip::experiments::harness::{self, Baselines, CompiledPair, ExpEnv};
+use flip::graph::datasets::{self, Group};
+use flip::graph::{generate, reference, Graph};
+use flip::sim::flip::{self as flipsim, SimOptions};
+use flip::workloads::Workload;
+
+fn quick_env() -> ExpEnv {
+    let mut env = ExpEnv::quick();
+    env.graphs_per_group = 2;
+    env.sources_per_graph = 2;
+    env
+}
+
+#[test]
+fn every_group_and_workload_validates() {
+    let env = quick_env();
+    for group in Group::ON_CHIP {
+        let graphs = env.graphs(group);
+        for (gi, g) in graphs.iter().enumerate() {
+            let pair = CompiledPair::build(g, &env.cfg, env.seed);
+            for w in Workload::ALL {
+                for src in env.sources(group, g, gi) {
+                    let r = harness::run_flip(&pair, w, src);
+                    let view = if w.needs_undirected() { &pair.wcc_view } else { &pair.graph };
+                    assert_eq!(
+                        r.attrs,
+                        w.reference(view, src),
+                        "{} {} graph {gi} src {src}",
+                        group.name(),
+                        w.name()
+                    );
+                    assert!(r.cycles > 0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_three_architectures_agree() {
+    let env = quick_env();
+    let base = Baselines::build(&env.cfg, &env.mcu, env.seed);
+    let g = datasets::generate_one(Group::Srn, 1, env.seed);
+    let pair = CompiledPair::build(&g, &env.cfg, env.seed);
+    for w in Workload::ALL {
+        let f = harness::run_flip(&pair, w, 3);
+        assert_eq!(f.attrs, base.run_cgra(w, &g, 3).attrs, "{} cgra", w.name());
+        assert_eq!(f.attrs, base.run_mcu(w, &g, 3).attrs, "{} mcu", w.name());
+    }
+}
+
+#[test]
+fn swap_path_end_to_end() {
+    // 3 copies: vertices spread over three array replicas
+    let g = generate::road_network(700, 1600, 2000, 3);
+    let cfg = ArchConfig::default();
+    let c = compile(&g, &cfg, &CompileOpts::default());
+    assert_eq!(c.placement.num_copies, 3);
+    let opts = SimOptions { max_cycles: 1_000_000_000, watchdog: 5_000_000, ..Default::default() };
+    let r = flipsim::run(&c, Workload::Bfs, 0, &opts).unwrap();
+    assert_eq!(r.attrs, reference::bfs_levels(&g, 0));
+    assert!(r.sim.swaps > 0);
+    assert!(r.sim.swap_cycles > 0);
+}
+
+#[test]
+fn dynamic_weight_update_path() {
+    let g = generate::road_network(96, 219, 249, 5);
+    let cfg = ArchConfig::default();
+    let mut c = compile(&g, &cfg, &CompileOpts::default());
+    let r1 = flipsim::run(&c, Workload::Sssp, 0, &SimOptions::default()).unwrap();
+    assert_eq!(r1.attrs, reference::dijkstra(&g, 0));
+    // re-weight every edge to 1: SSSP becomes BFS levels
+    let edges: Vec<(u32, u32, u32)> =
+        g.arcs().filter(|&(u, v, _)| u < v).map(|(u, v, _)| (u, v, 1)).collect();
+    let g_unit = Graph::from_edges(g.num_vertices(), &edges, false);
+    tablegen::update_edge_weights(&mut c, &g_unit);
+    let r2 = flipsim::run(&c, Workload::Sssp, 0, &SimOptions::default()).unwrap();
+    assert_eq!(r2.attrs, reference::bfs_levels(&g, 0));
+}
+
+#[test]
+fn mode_switching_same_fabric() {
+    // op-centric and data-centric produce identical results on one config
+    let g = datasets::generate_one(Group::Srn, 0, 1);
+    let cfg = ArchConfig::default();
+    let c = compile(&g, &cfg, &CompileOpts::default());
+    let data = flipsim::run(&c, Workload::Bfs, 0, &SimOptions::default()).unwrap();
+    let k = flip::sim::opcentric::compile_kernel(Workload::Bfs, &cfg, 1, 1).unwrap();
+    let op = flip::sim::opcentric::run(&k, &g, 0);
+    assert_eq!(data.attrs, op.attrs);
+    // and the data-centric mode is substantially faster (the paper's point)
+    assert!(op.cycles > 5 * data.cycles, "op {} vs data {}", op.cycles, data.cycles);
+}
+
+#[test]
+fn scaled_arrays_stay_correct() {
+    // 4x4 and 12x12 arrays (Fig 12 sizes) remain functionally exact
+    for k in [4usize, 12] {
+        let cfg = ArchConfig::scaled(k);
+        let g = datasets::road_for_capacity(cfg.capacity(), 0, 9);
+        let c = compile(&g, &cfg, &CompileOpts::default());
+        let r = flipsim::run(&c, Workload::Wcc, 0, &SimOptions::default()).unwrap();
+        assert_eq!(r.attrs, reference::wcc_labels(&g), "array {k}x{k}");
+    }
+}
+
+#[test]
+fn tree_workloads_from_root() {
+    let g = datasets::generate_one(Group::Tree, 3, 7);
+    let pair = CompiledPair::build(&g, &ArchConfig::default(), 7);
+    for w in Workload::ALL {
+        let r = harness::run_flip(&pair, w, 0);
+        let view = if w.needs_undirected() { &pair.wcc_view } else { &pair.graph };
+        assert_eq!(r.attrs, w.reference(view, 0), "{}", w.name());
+    }
+}
+
+#[test]
+fn mcu_slower_but_correct_and_heap_beats_cgra_sssp() {
+    let env = quick_env();
+    let base = Baselines::build(&env.cfg, &env.mcu, env.seed);
+    let g = datasets::generate_one(Group::Lrn, 0, env.seed);
+    let m = base.run_mcu(Workload::Sssp, &g, 0);
+    let c = base.run_cgra(Workload::Sssp, &g, 0);
+    assert_eq!(m.attrs, reference::dijkstra(&g, 0));
+    // paper: MCU performs better than classic CGRA on SSSP (heap vs O(V^2))
+    let m_s = harness::seconds(m.cycles, env.mcu.freq_mhz);
+    let c_s = harness::seconds(c.cycles, env.cfg.freq_mhz);
+    assert!(m_s < c_s, "MCU {m_s}s vs CGRA {c_s}s");
+}
+
+#[test]
+fn energy_model_orders_architectures_as_paper() {
+    let env = quick_env();
+    let emodel = harness::calibrated_energy(&env);
+    let base = Baselines::build(&env.cfg, &env.mcu, env.seed);
+    let g = datasets::generate_one(Group::Lrn, 0, env.seed);
+    let pair = CompiledPair::build(&g, &env.cfg, env.seed);
+    let f = harness::run_flip(&pair, Workload::Bfs, 0);
+    let c = base.run_cgra(Workload::Bfs, &g, 0);
+    let e_flip = emodel.run_energy_uj(&f.sim.activity, f.cycles);
+    let e_cgra =
+        flip::energy::baseline_energy_uj(flip::energy::CGRA_POWER_MW, c.cycles, env.cfg.freq_mhz);
+    // paper Fig 10b: FLIP needs 3-15% of classic CGRA energy
+    assert!(e_flip < 0.5 * e_cgra, "FLIP {e_flip} µJ vs CGRA {e_cgra} µJ");
+}
+
+#[test]
+fn watchdog_reports_instead_of_hanging() {
+    let g = generate::synthetic(32, 64, 1);
+    let cfg = ArchConfig::default();
+    let c = compile(&g, &cfg, &CompileOpts::default());
+    // absurdly small max_cycles triggers the safety net, not a hang
+    let opts = SimOptions { max_cycles: 2, ..Default::default() };
+    let err = flipsim::run(&c, Workload::Bfs, 0, &opts).unwrap_err();
+    assert!(err.contains("max_cycles"));
+}
+
+#[test]
+fn mcu_config_variation_scales_cycles() {
+    let g = datasets::generate_one(Group::Srn, 0, 1);
+    let fast = McuConfig { t_fetch: 0, ..Default::default() };
+    let slow = McuConfig { t_fetch: 3, ..Default::default() };
+    let rf = flip::sim::mcu::run(Workload::Bfs, &g, 0, &fast);
+    let rs = flip::sim::mcu::run(Workload::Bfs, &g, 0, &slow);
+    assert_eq!(rf.attrs, rs.attrs);
+    assert!(rs.cycles > 2 * rf.cycles);
+}

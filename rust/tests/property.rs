@@ -1,0 +1,240 @@
+//! Property-based tests (in-house harness, see `flip::util::proptest`):
+//! randomized graphs and configurations against system invariants.
+
+use flip::compiler::{compile, CompileOpts};
+use flip::config::ArchConfig;
+use flip::graph::{reference, Graph};
+use flip::prop_assert;
+use flip::sim::flip::{self as flipsim, SimOptions};
+use flip::util::{proptest::check, Rng};
+use flip::workloads::{view_for, Workload};
+
+/// Random connected-ish weighted graph with n in [lo, hi].
+fn random_graph(rng: &mut Rng, lo: usize, hi: usize, directed: bool) -> Graph {
+    let n = rng.range(lo, hi + 1);
+    let m = n + rng.range(0, 2 * n);
+    let mut edges = Vec::with_capacity(n - 1 + m);
+    // random spanning tree for (weak) connectivity
+    for v in 1..n as u32 {
+        let p = rng.below(v as u64) as u32;
+        edges.push((p, v, 1 + rng.below(9) as u32));
+    }
+    for _ in 0..m {
+        let u = rng.below(n as u64) as u32;
+        let v = rng.below(n as u64) as u32;
+        if u != v {
+            edges.push((u, v, 1 + rng.below(9) as u32));
+        }
+    }
+    Graph::from_edges(n, &edges, directed)
+}
+
+fn random_workload(rng: &mut Rng) -> Workload {
+    Workload::ALL[rng.below(3) as usize]
+}
+
+#[test]
+fn prop_sim_matches_reference_on_random_graphs() {
+    check("sim_matches_reference", 40, |rng| {
+        let directed = rng.chance(0.5);
+        let g = random_graph(rng, 8, 80, directed);
+        let w = random_workload(rng);
+        let view = view_for(w, &g);
+        let cfg = ArchConfig::default();
+        let c = compile(&view, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() });
+        let src = rng.below(g.num_vertices() as u64) as u32;
+        let r = flipsim::run(&c, w, src, &SimOptions::default())
+            .map_err(|e| format!("sim error: {e}"))?;
+        let want = w.reference(&view, src);
+        prop_assert!(r.attrs == want, "{} mismatch on |V|={}", w.name(), g.num_vertices());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_placement_structurally_valid() {
+    check("placement_valid", 40, |rng| {
+        let directed = rng.chance(0.5);
+        let g = random_graph(rng, 4, 300, directed);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() });
+        c.placement.validate(&g, &cfg)?;
+        // every arc has an inter entry and a matching intra entry
+        for (u, v, wt) in g.arcs() {
+            let su = c.placement.slots[u as usize];
+            let sv = c.placement.slots[v as usize];
+            let sc = c.slice_cfg(su.copy, su.pe.index(&cfg));
+            let e = sc.inter[su.reg as usize].iter().find(|e| e.dst_vid == v);
+            prop_assert!(e.is_some(), "missing inter entry {u}->{v}");
+            let e = e.unwrap();
+            prop_assert!(
+                (e.dx, e.dy) == su.pe.offset_to(sv.pe),
+                "offset wrong for {u}->{v}"
+            );
+            let dc = c.slice_cfg(sv.copy, sv.pe.index(&cfg));
+            let (m, _) = dc.intra.lookup(u);
+            prop_assert!(
+                m.iter().any(|x| x.dst_reg == sv.reg && x.weight == wt),
+                "missing intra entry {u}->{v}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_inter_lists_farthest_first() {
+    check("farthest_first", 25, |rng| {
+        let g = random_graph(rng, 8, 128, false);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() });
+        for sc in &c.pe_slices {
+            for list in &sc.inter {
+                for w in list.windows(2) {
+                    prop_assert!(w[0].hops() >= w[1].hops(), "layout not farthest-first");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_yx_route_always_reaches_destination() {
+    check("yx_reaches", 200, |rng| {
+        let cfg = ArchConfig::default();
+        let from = flip::arch::PeCoord {
+            x: rng.below(cfg.array_w as u64) as u8,
+            y: rng.below(cfg.array_h as u64) as u8,
+        };
+        let to = flip::arch::PeCoord {
+            x: rng.below(cfg.array_w as u64) as u8,
+            y: rng.below(cfg.array_h as u64) as u8,
+        };
+        let (dx, dy) = from.offset_to(to);
+        let mut p = flip::arch::Packet { src_vid: 0, attr: 0, dx, dy, slice: 0 };
+        let mut cur = from;
+        let mut hops = 0;
+        while let Some(dir) = flip::arch::yx_route(p.dx, p.dy) {
+            hops += 1;
+            prop_assert!(hops <= 32, "route too long");
+            // move the coordinate along dir and hop the packet
+            cur = cur
+                .neighbors(&cfg)
+                .find(|&(d, _)| d == dir)
+                .map(|(_, c)| c)
+                .ok_or_else(|| format!("walked off the mesh at {cur:?} dir {dir:?}"))?;
+            p = p.hop(dir);
+        }
+        prop_assert!(cur == to, "YX ended at {cur:?}, wanted {to:?}");
+        prop_assert!(hops == from.hops(to), "YX took a detour");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_attrs_monotonically_improve() {
+    // Final attributes never exceed initial ones (min-plus relaxation is
+    // monotone) and sources end at 0.
+    check("monotone", 25, |rng| {
+        let g = random_graph(rng, 8, 64, false);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() });
+        let src = rng.below(g.num_vertices() as u64) as u32;
+        let r = flipsim::run(&c, Workload::Sssp, src, &SimOptions::default())
+            .map_err(|e| e.to_string())?;
+        prop_assert!(r.attrs[src as usize] == 0, "source distance not 0");
+        for (v, &a) in r.attrs.iter().enumerate() {
+            if a != flip::graph::INF {
+                prop_assert!(a < flip::graph::INF, "vertex {v} overflowed");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_deterministic() {
+    check("deterministic", 15, |rng| {
+        let g = random_graph(rng, 8, 64, false);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() });
+        let a = flipsim::run(&c, Workload::Bfs, 0, &SimOptions::default())
+            .map_err(|e| e.to_string())?;
+        let b = flipsim::run(&c, Workload::Bfs, 0, &SimOptions::default())
+            .map_err(|e| e.to_string())?;
+        prop_assert!(a.cycles == b.cycles, "cycles differ");
+        prop_assert!(a.attrs == b.attrs, "attrs differ");
+        prop_assert!(
+            a.sim.packets_delivered == b.sim.packets_delivered,
+            "packet counts differ"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_multicopy_graphs_swap_and_stay_exact() {
+    check("multicopy", 8, |rng| {
+        let g = random_graph(rng, 260, 420, false);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() });
+        prop_assert!(c.placement.num_copies >= 2, "expected replication");
+        let opts =
+            SimOptions { max_cycles: 1_000_000_000, watchdog: 5_000_000, ..Default::default() };
+        let r = flipsim::run(&c, Workload::Bfs, 0, &opts).map_err(|e| e.to_string())?;
+        prop_assert!(
+            r.attrs == reference::bfs_levels(&g, 0),
+            "BFS mismatch with swapping (|V|={})",
+            g.num_vertices()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiny_buffers_still_correct() {
+    // failure injection: shrink every buffer to near-minimum; the memory-
+    // buffer escape path must keep the NoC deadlock-free and exact.
+    check("tiny_buffers", 12, |rng| {
+        let g = random_graph(rng, 8, 48, false);
+        let mut cfg = ArchConfig::default();
+        cfg.input_buf_cap = 1;
+        cfg.aluin_cap = 1;
+        cfg.aluout_cap = 1;
+        let c = compile(&g, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() });
+        let w = random_workload(rng);
+        let view = view_for(w, &g);
+        let c = if w.needs_undirected() && g.is_directed() {
+            compile(&view, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() })
+        } else {
+            c
+        };
+        let r = flipsim::run(&c, w, 0, &SimOptions::default()).map_err(|e| e.to_string())?;
+        prop_assert!(
+            r.attrs == w.reference(&view, 0),
+            "{} wrong under tiny buffers",
+            w.name()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_odd_array_shapes_work() {
+    // non-square and non-power-of-two arrays (cluster-divisible)
+    check("odd_arrays", 10, |rng| {
+        let shapes = [(2usize, 4usize), (4, 2), (6, 4), (4, 6), (10, 6)];
+        let (w, h) = shapes[rng.below(shapes.len() as u64) as usize];
+        let cfg = ArchConfig { array_w: w, array_h: h, ..Default::default() };
+        let g = random_graph(rng, 8, cfg.capacity().min(64), false);
+        let c = compile(&g, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() });
+        let r = flipsim::run(&c, Workload::Bfs, 0, &SimOptions::default())
+            .map_err(|e| e.to_string())?;
+        prop_assert!(
+            r.attrs == reference::bfs_levels(&g, 0),
+            "BFS wrong on {w}x{h} array"
+        );
+        Ok(())
+    });
+}

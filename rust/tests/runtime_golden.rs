@@ -1,0 +1,85 @@
+//! Cross-layer validation: the cycle-accurate Rust simulator (L3) against
+//! the AOT JAX/Pallas golden model executed through PJRT (L2/L1).
+//! Requires `make artifacts` (skipped gracefully otherwise is NOT allowed:
+//! the Makefile builds artifacts before `cargo test`).
+
+use flip::compiler::{compile, CompileOpts};
+use flip::config::ArchConfig;
+use flip::graph::generate;
+use flip::runtime::{default_artifact_dir, GoldenEngine};
+use flip::sim::flip::{self as flipsim, SimOptions};
+use flip::util::Rng;
+use flip::workloads::{view_for, Workload};
+
+fn engine() -> GoldenEngine {
+    GoldenEngine::load(&default_artifact_dir())
+        .expect("artifacts missing — run `make artifacts` first")
+}
+
+#[test]
+fn golden_matches_sim_across_workloads_and_sizes() {
+    let e = engine();
+    let cfg = ArchConfig::default();
+    let mut rng = Rng::new(0xD06);
+    for &n in &[12usize, 40, 100, 200] {
+        let lo = (n as f64 * 2.3) as usize;
+        let g = generate::road_network(n, lo, lo + n / 2, rng.next_u64());
+        for w in Workload::ALL {
+            let view = view_for(w, &g);
+            let c = compile(&view, &cfg, &CompileOpts::default());
+            let src = rng.below(n as u64) as u32;
+            let r = flipsim::run(&c, w, src, &SimOptions::default()).unwrap();
+            let golden = e
+                .golden_attrs(&g, w, src)
+                .unwrap()
+                .expect("size fits the dense artifacts");
+            assert_eq!(r.attrs, golden, "{} |V|={n} src {src}", w.name());
+        }
+    }
+}
+
+#[test]
+fn relax_k8_equals_eight_steps() {
+    let e = engine();
+    let n = 64;
+    let mut rng = Rng::new(7);
+    let mut w = vec![f32::INFINITY; n * n];
+    for _ in 0..200 {
+        let u = rng.below(n as u64) as usize;
+        let v = rng.below(n as u64) as usize;
+        w[u * n + v] = 1.0 + rng.below(9) as f32;
+    }
+    let mut d = vec![f32::INFINITY; n];
+    d[0] = 0.0;
+    let k8 = e.relax_k8(&d, &w, n).unwrap();
+    let mut step = d;
+    for _ in 0..8 {
+        step = e.relax_step(&step, &w, n).unwrap();
+    }
+    assert_eq!(k8, step);
+}
+
+#[test]
+fn padding_preserves_results() {
+    // a 10-vertex graph runs on the 16-wide artifact with inf padding
+    let e = engine();
+    let g = generate::road_network(10, 9, 14, 3);
+    let got = e.golden_attrs(&g, Workload::Bfs, 0).unwrap().unwrap();
+    assert_eq!(got, flip::graph::reference::bfs_levels(&g, 0));
+    assert_eq!(got.len(), 10, "padding must be trimmed");
+}
+
+#[test]
+fn oversized_graph_reports_none() {
+    let e = engine();
+    let g = generate::synthetic(2000, 4000, 1);
+    assert!(e.golden_attrs(&g, Workload::Bfs, 0).unwrap().is_none());
+}
+
+#[test]
+fn artifact_sizes_cover_prototype_and_scaling() {
+    let e = engine();
+    // 8x8 array capacity (256) and Fig-12 16x16 point (1024)
+    assert!(e.sizes.contains(&256));
+    assert!(e.sizes.contains(&1024));
+}
