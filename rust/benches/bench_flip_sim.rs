@@ -1,6 +1,10 @@
 //! Bench: cycle-accurate FLIP simulator throughput — the L3 hot path.
 //! Reports wall time per run and simulated PE-cycles/second (the §Perf
-//! target in DESIGN.md is ≥10M PE-cycles/s).
+//! target in DESIGN.md is ≥10M PE-cycles/s for the event-driven core),
+//! and compares against the retained naive reference stepper so the
+//! scheduler speedup is part of the recorded trajectory.
+//!
+//! Writes `BENCH_flip_sim.json` (override with `--json <path>`).
 
 mod common;
 
@@ -8,11 +12,13 @@ use flip::compiler::{compile, CompileOpts};
 use flip::config::ArchConfig;
 use flip::graph::datasets::{self, Group};
 use flip::sim::flip::{run, SimOptions};
+use flip::sim::naive;
 use flip::workloads::Workload;
 
 fn main() {
     let cfg = ArchConfig::default();
-    common::section("FLIP cycle-accurate simulator");
+    let mut suite = common::Suite::new("flip_sim");
+    common::section("FLIP cycle-accurate simulator (event-driven core)");
     for (group, w) in [
         (Group::Lrn, Workload::Bfs),
         (Group::Lrn, Workload::Sssp),
@@ -24,7 +30,13 @@ fn main() {
         let c = compile(&view, &cfg, &CompileOpts::default());
         let mut cycles = 0u64;
         let r = common::bench(
-            &format!("{} on {} (|V|={} |E|={})", w.name(), group.name(), g.num_vertices(), g.num_edges()),
+            &format!(
+                "{} on {} (|V|={} |E|={})",
+                w.name(),
+                group.name(),
+                g.num_vertices(),
+                g.num_edges()
+            ),
             2,
             10,
             || {
@@ -38,13 +50,41 @@ fn main() {
             cycles,
             pe_cycles_per_s / 1e6
         );
+        suite.add(r).metric("sim_cycles", cycles as f64).metric(
+            "pe_cycles_per_s",
+            pe_cycles_per_s,
+        );
     }
+
+    common::section("event-driven core vs naive reference stepper (Lrn BFS)");
+    let g = datasets::generate_one(Group::Lrn, 0, 42);
+    let c = compile(&g, &cfg, &CompileOpts::default());
+    let fast =
+        common::bench("event-driven core", 1, 5, || {
+            run(&c, Workload::Bfs, 0, &SimOptions::default()).unwrap();
+        });
+    let slow = common::bench("naive reference stepper", 1, 5, || {
+        naive::run(&c, Workload::Bfs, 0, &SimOptions::default()).unwrap();
+    });
+    let speedup = slow.mean_ms / fast.mean_ms;
+    println!("    -> scheduler speedup {speedup:.2}x over naive");
+    suite.add(fast).metric("speedup_vs_naive", speedup);
+    suite.add(slow);
 
     common::section("FLIP simulator with data swapping (2 copies)");
     let g = flip::graph::generate::road_network(384, 880, 1100, 9);
     let c = compile(&g, &cfg, &CompileOpts::default());
     let opts = SimOptions { max_cycles: 1_000_000_000, watchdog: 5_000_000, ..Default::default() };
-    common::bench("BFS with slice swapping (|V|=384)", 1, 5, || {
+    let fast = common::bench("BFS with slice swapping (|V|=384)", 1, 5, || {
         run(&c, Workload::Bfs, 0, &opts).unwrap();
     });
+    let slow = common::bench("  same, naive stepper", 1, 3, || {
+        naive::run(&c, Workload::Bfs, 0, &opts).unwrap();
+    });
+    let speedup = slow.mean_ms / fast.mean_ms;
+    println!("    -> fast-forward speedup {speedup:.2}x over naive on the swapping path");
+    suite.add(fast).metric("speedup_vs_naive", speedup);
+    suite.add(slow);
+
+    suite.write().expect("write bench json");
 }

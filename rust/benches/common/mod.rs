@@ -1,6 +1,11 @@
 //! Minimal bench harness (criterion is not vendored offline): warmup +
-//! timed iterations with mean/min/max reporting.
+//! timed iterations with mean/min/max reporting, plus a machine-readable
+//! JSON sink so the perf trajectory is tracked PR over PR
+//! (`BENCH_<suite>.json`, overridable with `--json <path>`).
+#![allow(dead_code)] // each bench bin compiles its own copy; not all use every helper
 
+use flip::report::Json;
+use std::path::PathBuf;
 use std::time::Instant;
 
 pub struct BenchResult {
@@ -40,4 +45,87 @@ pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Bench
 /// Print a section header.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// Machine-readable result collector for one bench binary. Push every
+/// [`BenchResult`] (plus any derived metrics such as simulated
+/// PE-cycles/s) and write a JSON file at the end.
+pub struct Suite {
+    name: String,
+    entries: Vec<(BenchResult, Vec<(String, f64)>)>,
+}
+
+impl Suite {
+    pub fn new(name: &str) -> Suite {
+        Suite { name: name.to_string(), entries: Vec::new() }
+    }
+
+    /// Record a bench result (returns `&mut self` for chaining).
+    pub fn add(&mut self, r: BenchResult) -> &mut Suite {
+        self.entries.push((r, Vec::new()));
+        self
+    }
+
+    /// Attach a derived metric to the most recently added result.
+    pub fn metric(&mut self, key: &str, value: f64) -> &mut Suite {
+        if let Some((_, extras)) = self.entries.last_mut() {
+            extras.push((key.to_string(), value));
+        }
+        self
+    }
+
+    /// Default output path: `BENCH_<suite>.json` in the crate root,
+    /// overridable with `--json <path>` on the bench command line
+    /// (`cargo bench --bench bench_flip_sim -- --json out.json`).
+    pub fn out_path(&self) -> PathBuf {
+        json_arg().unwrap_or_else(|| PathBuf::from(format!("BENCH_{}.json", self.name)))
+    }
+
+    /// Serialize all recorded results (no serde offline — uses the
+    /// crate's minimal JSON writer).
+    pub fn to_json(&self) -> Json {
+        let results: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|(r, extras)| {
+                let mut obj = vec![
+                    ("name".to_string(), Json::Str(r.name.clone())),
+                    ("iters".to_string(), Json::Num(r.iters as f64)),
+                    ("mean_ms".to_string(), Json::Num(r.mean_ms)),
+                    ("min_ms".to_string(), Json::Num(r.min_ms)),
+                    ("max_ms".to_string(), Json::Num(r.max_ms)),
+                ];
+                for (k, v) in extras {
+                    obj.push((k.clone(), Json::Num(*v)));
+                }
+                Json::Obj(obj)
+            })
+            .collect();
+        let unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs() as f64)
+            .unwrap_or(0.0);
+        Json::Obj(vec![
+            ("suite".to_string(), Json::Str(self.name.clone())),
+            ("created_unix".to_string(), Json::Num(unix)),
+            ("results".to_string(), Json::Arr(results)),
+        ])
+    }
+
+    /// Write the JSON file and report where it went.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let path = self.out_path();
+        std::fs::write(&path, self.to_json().render() + "\n")?;
+        println!("\n[bench json written to {}]", path.display());
+        Ok(path)
+    }
+}
+
+/// Parse `--json <path>` from the bench binary's argument list.
+pub fn json_arg() -> Option<PathBuf> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .map(PathBuf::from)
 }

@@ -91,6 +91,37 @@ impl Dir {
     }
 }
 
+/// Precomputed mesh topology: neighbor indices and cluster membership per
+/// PE. Hot-loop data shared by the simulator cores — building it once per
+/// run avoids recomputing mesh neighborhoods (and re-deriving cluster ids)
+/// every cycle.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// Neighbor PE index per direction (N/E/S/W); `usize::MAX` = array edge.
+    pub nbr: Vec<[usize; 4]>,
+    /// Cluster index per PE.
+    pub cluster_of: Vec<usize>,
+    /// PE indices of each cluster, ascending.
+    pub cluster_pes: Vec<Vec<usize>>,
+}
+
+impl Topology {
+    pub fn new(cfg: &ArchConfig) -> Topology {
+        let mut nbr = vec![[usize::MAX; 4]; cfg.num_pes()];
+        let mut cluster_of = vec![0usize; cfg.num_pes()];
+        let mut cluster_pes = vec![Vec::new(); cfg.num_clusters()];
+        for i in 0..cfg.num_pes() {
+            let c = PeCoord::from_index(i, cfg);
+            cluster_of[i] = c.cluster(cfg);
+            cluster_pes[cluster_of[i]].push(i);
+            for (d, n) in c.neighbors(cfg) {
+                nbr[i][d as usize] = n.index(cfg);
+            }
+        }
+        Topology { nbr, cluster_of, cluster_pes }
+    }
+}
+
 /// YX dimension-ordered routing decision (§3.2): travel Y first, then X,
 /// based on the packet's remaining signed offset. `None` = deliver here.
 #[inline]
@@ -158,6 +189,25 @@ mod tests {
         assert_eq!(yx_route(3, 0), Some(Dir::East));
         assert_eq!(yx_route(-1, 0), Some(Dir::West));
         assert_eq!(yx_route(0, 0), None);
+    }
+
+    #[test]
+    fn topology_matches_coord_math() {
+        let c = cfg();
+        let t = Topology::new(&c);
+        for i in 0..c.num_pes() {
+            let coord = PeCoord::from_index(i, &c);
+            assert_eq!(t.cluster_of[i], coord.cluster(&c));
+            for (d, n) in coord.neighbors(&c) {
+                assert_eq!(t.nbr[i][d as usize], n.index(&c));
+            }
+            assert!(t.cluster_pes[t.cluster_of[i]].contains(&i));
+        }
+        assert_eq!(t.cluster_pes.len(), c.num_clusters());
+        for pes in &t.cluster_pes {
+            assert_eq!(pes.len(), c.cluster * c.cluster);
+            assert!(pes.windows(2).all(|w| w[0] < w[1]), "cluster PEs sorted");
+        }
     }
 
     #[test]

@@ -111,7 +111,9 @@ impl ArchConfig {
             "membuf_cap" => self.membuf_cap = vu,
             "t_hop" => self.t_hop = vu as u64,
             "t_intra_lookup" => self.t_intra_lookup = vu as u64,
+            "t_inter_entry" => self.t_inter_entry = vu as u64,
             "freq_mhz" => self.freq_mhz = vu as u64,
+            "offchip_bytes" => self.offchip_bytes = vu,
             "spm_bytes" => self.spm_bytes = vu,
             "spm_banks" => self.spm_banks = vu,
             "t_swap_word" => self.t_swap_word = vu as u64,
@@ -177,6 +179,10 @@ mod tests {
         c.set("aw=16").unwrap();
         c.set("array_h=16").unwrap();
         assert_eq!(c.num_pes(), 256);
+        c.set("t_inter_entry=2").unwrap();
+        assert_eq!(c.t_inter_entry, 2);
+        c.set("offchip_bytes=1024").unwrap();
+        assert_eq!(c.offchip_bytes, 1024);
         assert!(c.set("bogus=1").is_err());
         assert!(c.set("aw").is_err());
         assert!(c.set("aw=x").is_err());

@@ -5,7 +5,7 @@ use super::ExpEnv;
 use crate::report::{sig, Table};
 use crate::workloads::{dfgs, Workload};
 
-pub fn run(_env: &ExpEnv) -> anyhow::Result<String> {
+pub fn run(_env: &ExpEnv) -> super::ExpResult {
     let mut out = String::new();
 
     let mut a = Table::new(

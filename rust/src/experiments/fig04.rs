@@ -10,7 +10,7 @@ use crate::workloads::Workload;
 
 pub const MAX_UNROLL: usize = 4;
 
-pub fn run(env: &ExpEnv) -> anyhow::Result<String> {
+pub fn run(env: &ExpEnv) -> super::ExpResult {
     let graphs = env.graphs(Group::Lrn);
     let mut t = Table::new(
         "Fig 4 — BFS on road networks, op-centric CGRA, unroll degree 1-4",

@@ -39,10 +39,16 @@ pub fn sweep(env: &ExpEnv) -> Vec<Cell> {
             let mut e_cgra = Vec::new();
             let mut e_flip = Vec::new();
             for (gi, (g, pair)) in graphs.iter().zip(&pairs).enumerate() {
-                for src in env.sources(group, g, gi) {
-                    let m = base.run_mcu(w, g, src);
-                    let c = base.run_cgra(w, g, src);
-                    let f = harness::run_flip(pair, w, src);
+                // all three architectures for one source are independent:
+                // fan the sources out across cores (one sim per thread)
+                let runs = harness::parallel_map(&env.sources(group, g, gi), |&src| {
+                    (
+                        base.run_mcu(w, g, src),
+                        base.run_cgra(w, g, src),
+                        harness::run_flip(pair, w, src),
+                    )
+                });
+                for (m, c, f) in runs {
                     mcu_s.push(harness::seconds(m.cycles, env.mcu.freq_mhz));
                     cgra_s.push(harness::seconds(c.cycles, env.cfg.freq_mhz));
                     flip_s.push(harness::seconds(f.cycles, env.cfg.freq_mhz));
@@ -77,7 +83,7 @@ pub fn sweep(env: &ExpEnv) -> Vec<Cell> {
     cells
 }
 
-pub fn run(env: &ExpEnv) -> anyhow::Result<String> {
+pub fn run(env: &ExpEnv) -> super::ExpResult {
     let cells = sweep(env);
     let mut a = Table::new(
         "Fig 10(a) — speedup normalized to MCU (geomean; log-scale in paper)",

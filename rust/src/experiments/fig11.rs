@@ -9,7 +9,7 @@ use crate::sim::flip::SimOptions;
 use crate::util::stats;
 use crate::workloads::Workload;
 
-pub fn run(env: &ExpEnv) -> anyhow::Result<String> {
+pub fn run(env: &ExpEnv) -> super::ExpResult {
     let mut t = Table::new(
         "Fig 11 — FLIP average parallelism (distribution over runs)",
         &["group", "workload", "min", "q25", "median", "q75", "max"],
@@ -21,8 +21,9 @@ pub fn run(env: &ExpEnv) -> anyhow::Result<String> {
             let mut pars = Vec::new();
             for (gi, g) in graphs.iter().enumerate() {
                 let pair = CompiledPair::build(g, &env.cfg, env.seed);
-                for src in env.sources(group, g, gi) {
-                    let r = harness::run_flip(&pair, w, src);
+                let jobs: Vec<(Workload, u32)> =
+                    env.sources(group, g, gi).iter().map(|&s| (w, s)).collect();
+                for r in harness::run_flip_many(&pair, &jobs, &SimOptions::default()) {
                     pars.push(r.sim.avg_parallelism);
                 }
                 // centered start (paper: parallelism reaches ~10.4)

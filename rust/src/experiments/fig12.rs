@@ -47,7 +47,7 @@ pub fn sweep(env: &ExpEnv, ks: &[usize]) -> Vec<ScalePoint> {
     out
 }
 
-pub fn run(env: &ExpEnv) -> anyhow::Result<String> {
+pub fn run(env: &ExpEnv) -> super::ExpResult {
     let points = sweep(env, &[4, 8, 12, 16]);
     let mut t = Table::new(
         "Fig 12 — scaling (WCC on road networks filling the array)",

@@ -10,7 +10,7 @@ use crate::sim::opcentric;
 use crate::util::stats;
 use crate::workloads::Workload;
 
-pub fn run(env: &ExpEnv) -> anyhow::Result<String> {
+pub fn run(env: &ExpEnv) -> super::ExpResult {
     // (a) classic CGRA: modulo mapping (II search + SA place & route)
     let mut a = Table::new(
         "Fig 13(a) — compile time (seconds)",

@@ -86,6 +86,63 @@ impl CompiledPair {
     }
 }
 
+/// Run `f` over `items` on up to `available_parallelism` OS threads
+/// (std scoped threads, work-stealing via an atomic cursor), preserving
+/// item order in the output. Every job must be independent — simulator
+/// runs are: each owns its full machine state and only shares the
+/// immutable compiled graph. Falls back to a sequential map for batches
+/// of one (or when parallelism is unavailable).
+pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    let threads =
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(n);
+    if threads <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let chunks: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
+        let workers: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(&items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        workers.into_iter().map(|w| w.join().expect("worker panicked")).collect()
+    });
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    for (i, r) in chunks.into_iter().flatten() {
+        out[i] = Some(r);
+    }
+    out.into_iter().map(|o| o.expect("missing result")).collect()
+}
+
+/// Thread-parallel multi-run driver: one FLIP simulation per (workload,
+/// source) job, spread across all cores, results in job order. The
+/// event-driven core made a single run cheap; this lets full figure/table
+/// sweeps exploit the remaining wall-clock across cores.
+pub fn run_flip_many(
+    pair: &CompiledPair,
+    jobs: &[(Workload, u32)],
+    opts: &flip::SimOptions,
+) -> Vec<RunResult> {
+    parallel_map(jobs, |&(w, src)| run_flip_opts(pair, w, src, opts))
+}
+
 /// Run FLIP (cycle-accurate) for one (workload, source).
 pub fn run_flip(pair: &CompiledPair, w: Workload, source: u32) -> RunResult {
     run_flip_opts(pair, w, source, &flip::SimOptions::default())
@@ -165,6 +222,34 @@ pub fn seconds(cycles: u64, freq_mhz: u64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<u64> = (0..100).collect();
+        let got = parallel_map(&items, |&x| x * x);
+        let want: Vec<u64> = items.iter().map(|&x| x * x).collect();
+        assert_eq!(got, want);
+        assert_eq!(parallel_map(&[] as &[u64], |&x| x), Vec::<u64>::new());
+        assert_eq!(parallel_map(&[7u64], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn run_flip_many_matches_sequential() {
+        let env = ExpEnv::quick();
+        let g = crate::graph::datasets::generate_one(Group::Srn, 0, env.seed);
+        let pair = CompiledPair::build(&g, &env.cfg, env.seed);
+        let jobs: Vec<(Workload, u32)> =
+            [(Workload::Bfs, 0), (Workload::Sssp, 3), (Workload::Wcc, 0), (Workload::Bfs, 5)]
+                .into_iter()
+                .collect();
+        let par = run_flip_many(&pair, &jobs, &flip::SimOptions::default());
+        for (i, &(w, src)) in jobs.iter().enumerate() {
+            let seq = run_flip(&pair, w, src);
+            assert_eq!(par[i].cycles, seq.cycles, "{} src {src}", w.name());
+            assert_eq!(par[i].attrs, seq.attrs);
+            assert_eq!(par[i].sim, seq.sim);
+        }
+    }
 
     #[test]
     fn compiled_pair_provides_wcc_view_for_directed() {

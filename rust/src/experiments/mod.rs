@@ -35,8 +35,12 @@ pub mod table8;
 
 pub use harness::ExpEnv;
 
+/// Result of one experiment driver: the rendered report, or a message.
+/// (Plain `String` errors keep the default build dependency-free.)
+pub type ExpResult = Result<String, String>;
+
 /// Experiment registry: (id, description, driver).
-pub type Driver = fn(&ExpEnv) -> anyhow::Result<String>;
+pub type Driver = fn(&ExpEnv) -> ExpResult;
 
 pub fn registry() -> Vec<(&'static str, &'static str, Driver)> {
     vec![
@@ -56,7 +60,7 @@ pub fn registry() -> Vec<(&'static str, &'static str, Driver)> {
 }
 
 /// Run one experiment by id (or `all`); returns rendered reports.
-pub fn run_by_id(id: &str, env: &ExpEnv) -> anyhow::Result<Vec<(String, String)>> {
+pub fn run_by_id(id: &str, env: &ExpEnv) -> Result<Vec<(String, String)>, String> {
     let reg = registry();
     let mut out = Vec::new();
     if id == "all" {
@@ -67,7 +71,7 @@ pub fn run_by_id(id: &str, env: &ExpEnv) -> anyhow::Result<Vec<(String, String)>
         let (_, _, f) = reg
             .iter()
             .find(|(n, _, _)| *n == id)
-            .ok_or_else(|| anyhow::anyhow!("unknown experiment `{id}`"))?;
+            .ok_or_else(|| format!("unknown experiment `{id}`"))?;
         out.push((id.to_string(), f(env)?));
     }
     Ok(out)

@@ -10,7 +10,7 @@ use crate::sim::flip::SimOptions;
 use crate::util::stats;
 use crate::workloads::Workload;
 
-pub fn run(env: &ExpEnv) -> anyhow::Result<String> {
+pub fn run(env: &ExpEnv) -> super::ExpResult {
     let graphs = env.graphs(Group::ExtLrn);
     let base = Baselines::build(&env.cfg, &env.mcu, env.seed);
     let mut t = Table::new(
@@ -20,12 +20,20 @@ pub fn run(env: &ExpEnv) -> anyhow::Result<String> {
     let mut vs_cgra = Vec::new();
     let mut vs_mcu = Vec::new();
     let opts = SimOptions { max_cycles: 2_000_000_000, watchdog: 5_000_000, ..Default::default() };
-    for (gi, g) in graphs.iter().enumerate() {
+    // Ext. LRN graphs are the heaviest runs in the suite (16k vertices,
+    // dozens of slice swaps each): compile + simulate one graph per core.
+    let idxs: Vec<usize> = (0..graphs.len()).collect();
+    let results = harness::parallel_map(&idxs, |&gi| {
+        let g = &graphs[gi];
         let pair = CompiledPair::build(g, &env.cfg, env.seed);
         let src = 0u32;
         let f = harness::run_flip_opts(&pair, Workload::Bfs, src, &opts);
         let c = base.run_cgra(Workload::Bfs, g, src);
         let m = base.run_mcu(Workload::Bfs, g, src);
+        (pair.directed.placement.num_copies, f, c, m)
+    });
+    for (gi, (copies, f, c, m)) in results.into_iter().enumerate() {
+        let g = &graphs[gi];
         let f_tput = f.mteps(env.cfg.freq_mhz);
         let c_tput = c.mteps(env.cfg.freq_mhz);
         let m_tput = m.mteps(env.mcu.freq_mhz);
@@ -34,7 +42,7 @@ pub fn run(env: &ExpEnv) -> anyhow::Result<String> {
         t.row(&[
             format!("{gi}"),
             format!("{}", g.num_edges()),
-            format!("{}", pair.directed.placement.num_copies),
+            format!("{copies}"),
             format!("{}", f.sim.swaps),
             format!("{}%", sig(f.sim.swap_cycles as f64 / f.cycles as f64 * 100.0, 3)),
             sig(f_tput, 3),

@@ -7,7 +7,7 @@ use super::ExpEnv;
 use crate::energy;
 use crate::report::{sig, Table};
 
-pub fn run(_env: &ExpEnv) -> anyhow::Result<String> {
+pub fn run(_env: &ExpEnv) -> super::ExpResult {
     let mut q = Table::new(
         "Table 1 — qualitative comparison",
         &["accelerator", "graph perf", "general perf", "power eff.", "area eff.", "PEs", "mode"],

@@ -68,7 +68,7 @@ pub fn rows(env: &ExpEnv) -> Vec<Row> {
     ]
 }
 
-pub fn run(env: &ExpEnv) -> anyhow::Result<String> {
+pub fn run(env: &ExpEnv) -> super::ExpResult {
     let rows = rows(env);
     let mut t = Table::new(
         "Table 5 — performance-power-area (WCC)",

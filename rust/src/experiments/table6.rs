@@ -9,7 +9,7 @@ use crate::graph::datasets::Group;
 use crate::report::{sig, Table};
 use crate::workloads::Workload;
 
-pub fn run(env: &ExpEnv) -> anyhow::Result<String> {
+pub fn run(env: &ExpEnv) -> super::ExpResult {
     let g = crate::graph::datasets::generate_one(Group::Lrn, 0, env.seed);
     let pair = CompiledPair::build(&g, &env.cfg, env.seed);
     let r = harness::run_flip(&pair, Workload::Wcc, 0);

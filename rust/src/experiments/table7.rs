@@ -8,7 +8,7 @@ use crate::compiler::{compile, CompileOpts};
 use crate::graph::generate;
 use crate::report::{sig, Table};
 
-pub fn run(env: &ExpEnv) -> anyhow::Result<String> {
+pub fn run(env: &ExpEnv) -> super::ExpResult {
     let mut t = Table::new(
         "Table 7 — compiler phase scaling (measured)",
         &["|V|", "|E|", "beam search (s)", "local opt (s)", "total (s)", "s per edge (beam)"],

@@ -25,8 +25,10 @@ pub fn sweep(env: &ExpEnv) -> Vec<GroupQuality> {
             let pair = CompiledPair::build(g, &env.cfg, env.seed);
             rl.push(pair.directed.stats.avg_routing_length);
             cong.push(pair.directed.stats.congested_edges as f64);
-            for src in env.sources(group, g, gi) {
-                let r = harness::run_flip(&pair, Workload::Sssp, src);
+            let runs = harness::parallel_map(&env.sources(group, g, gi), |&src| {
+                harness::run_flip(&pair, Workload::Sssp, src)
+            });
+            for r in runs {
                 wait.push(r.sim.avg_pkt_wait);
                 depth.push(r.sim.avg_aluin_depth);
             }
@@ -42,7 +44,7 @@ pub fn sweep(env: &ExpEnv) -> Vec<GroupQuality> {
     out
 }
 
-pub fn run(env: &ExpEnv) -> anyhow::Result<String> {
+pub fn run(env: &ExpEnv) -> super::ExpResult {
     let rows = sweep(env);
     let mut t = Table::new(
         "Table 8 — SSSP mapping quality per group",

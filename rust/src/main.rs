@@ -10,7 +10,6 @@
 //! flip info                                 configuration + artifact status
 //! ```
 
-use anyhow::{anyhow, bail, Result};
 use flip::compiler::{compile, CompileOpts};
 use flip::experiments::{registry, run_by_id, ExpEnv};
 use flip::graph::datasets::{self, Group};
@@ -19,9 +18,13 @@ use flip::runtime::{default_artifact_dir, GoldenEngine};
 use flip::sim::flip::SimOptions;
 use flip::workloads::Workload;
 
+/// CLI-level result: boxed std error keeps the binary dependency-free
+/// (`String`, `&str`, and the std parse errors all convert via `?`).
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
+
 fn main() {
     if let Err(e) = real_main() {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
@@ -75,19 +78,19 @@ impl Args {
             env.seed = s.parse()?;
         }
         for kv in self.flags.get("set").into_iter().flatten() {
-            env.cfg.set(kv).map_err(|e| anyhow!(e))?;
+            env.cfg.set(kv)?;
         }
         Ok(env)
     }
 
     fn group(&self) -> Result<Group> {
-        let g = self.flag("group").ok_or_else(|| anyhow!("--group required"))?;
-        Group::parse(g).ok_or_else(|| anyhow!("unknown group `{g}`"))
+        let g = self.flag("group").ok_or("--group required")?;
+        Ok(Group::parse(g).ok_or_else(|| format!("unknown group `{g}`"))?)
     }
 
     fn workload(&self) -> Result<Workload> {
-        let w = self.flag("workload").ok_or_else(|| anyhow!("--workload required"))?;
-        Workload::parse(w).ok_or_else(|| anyhow!("unknown workload `{w}`"))
+        let w = self.flag("workload").ok_or("--workload required")?;
+        Ok(Workload::parse(w).ok_or_else(|| format!("unknown workload `{w}`"))?)
     }
 }
 
@@ -121,11 +124,7 @@ fn print_usage() {
 }
 
 fn cmd_exp(args: &Args) -> Result<()> {
-    let id = args
-        .positional
-        .get(1)
-        .ok_or_else(|| anyhow!("usage: flip exp <id|all>"))?
-        .clone();
+    let id = args.positional.get(1).ok_or("usage: flip exp <id|all>")?.clone();
     let env = args.env()?;
     let t0 = std::time::Instant::now();
     for (name, text) in run_by_id(&id, &env)? {
@@ -177,7 +176,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 if golden == r.attrs {
                     println!("  golden (PJRT)     : MATCH ({} vertices)", golden.len());
                 } else {
-                    bail!("golden model mismatch!");
+                    return Err("golden model mismatch!".into());
                 }
             }
             None => println!("  golden (PJRT)     : graph too large for dense artifacts"),
@@ -221,7 +220,7 @@ fn cmd_golden(args: &Args) -> Result<()> {
             match engine.golden_attrs(g, w, src)? {
                 Some(golden) => {
                     if golden != r.attrs {
-                        bail!("MISMATCH on graph {gi} source {src}");
+                        return Err(format!("MISMATCH on graph {gi} source {src}").into());
                     }
                     checked += 1;
                 }

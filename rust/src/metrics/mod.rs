@@ -55,7 +55,7 @@ impl ActivityCounts {
 }
 
 /// Result of one simulated run (any architecture).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunResult {
     /// Total cycles to termination.
     pub cycles: u64,
@@ -85,7 +85,10 @@ impl RunResult {
 }
 
 /// Detail metrics from the FLIP cycle-accurate simulator (Table 8, Fig 11).
-#[derive(Debug, Clone, Default)]
+/// `PartialEq` is derived so the scheduler-equivalence property tests can
+/// compare a whole run bitwise (the f64 averages are ratios of identical
+/// integer sums on equivalent runs, so exact comparison is well-defined).
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct SimMetrics {
     /// Packets delivered to a vertex program.
     pub packets_delivered: u64,

@@ -1,4 +1,5 @@
-//! Cycle-accurate simulator for FLIP's data-centric mode (paper §3).
+//! Cycle-accurate simulator for FLIP's data-centric mode (paper §3) —
+//! event-driven core.
 //!
 //! Models, per cycle:
 //! * **Routers** — one packet per output port per cycle, round-robin
@@ -14,12 +15,36 @@
 //!   farthest-first layout order), packet injection.
 //! * **Swap engine** — when a 2×2 cluster is idle and packets are parked
 //!   for one of its non-resident slices, the slice with the earliest
-//!   pending packet is swapped in (earliest-pending priority, §3.3).
+//!   pending packet is swapped in (earliest-pending priority, §3.3;
+//!   ties break to the lowest slice id).
+//!
+//! ## Scheduling (DESIGN.md §Perf)
+//!
+//! The core is *active-set* scheduled: only PEs that hold a packet or any
+//! compute state are visited each cycle, and the per-cycle metric sums
+//! (busy ALUs, ALUin depth) are maintained incrementally, so a cycle costs
+//! O(active) instead of O(num_pes). On top of that, a cycle in which *no*
+//! state changed fast-forwards `now` directly to the next timed deadline
+//! (link `ready_at`, delivery/ALU/scatter busy-until, swap completion),
+//! accumulating the per-cycle metric samples for the skipped cycles in
+//! closed form. Both mechanisms are exact: `tests/property.rs` proves
+//! cycle/attr/metric equality against the retained naive stepper
+//! ([`super::naive`]) on random graphs. One caveat is documented there:
+//! with a degenerate `t_hop = 0` a packet can arrive ready in the same
+//! cycle it was sent; the active-set core delivers it one cycle later than
+//! the naive sweep order would. Every shipped configuration has
+//! `t_hop ≥ 1`, where the cores agree exactly.
+//!
+//! Queue storage is a flat SoA ring-buffer arena sized from the
+//! [`crate::config::ArchConfig`] FIFO depths — one contiguous allocation
+//! per buffer class for all PEs — instead of five `VecDeque`s per PE. The
+//! replay queue stays a `VecDeque`: it is SPM-backed and unbounded by
+//! design (a swap-in can dump an arbitrarily long parked list).
 //!
 //! The functional result (final vertex attributes) must equal the native
 //! reference and the PJRT golden model exactly — checked in tests.
 
-use crate::arch::{isa, yx_route, Dir, Packet, PeCoord};
+use crate::arch::{isa, yx_route, Dir, Packet, PeCoord, Topology};
 use crate::compiler::CompiledGraph;
 use crate::graph::INF;
 use crate::metrics::{ActivityCounts, RunResult, SimMetrics};
@@ -54,6 +79,13 @@ struct QPkt {
     route_hops: u32,
 }
 
+const ZERO_QPKT: QPkt = QPkt {
+    pkt: Packet { src_vid: 0, attr: 0, dx: 0, dy: 0, slice: 0 },
+    ready_at: 0,
+    created: 0,
+    route_hops: 0,
+};
+
 /// An entry waiting for the ALU: destination register + weighted message.
 #[derive(Debug, Clone, Copy)]
 struct AluinItem {
@@ -71,83 +103,117 @@ enum AluState {
     WaitOut { reg: u8, attr: u32 },
 }
 
-struct PeState {
-    /// Input FIFOs, indexed by the side the packet came *from*.
-    inbuf: [VecDeque<QPkt>; 4],
-    /// Local injection queue (scatter output).
-    local_q: VecDeque<QPkt>,
-    /// Replayed packets after a slice swap (SPM-backed, unbounded).
-    replay_q: VecDeque<QPkt>,
-    aluin: VecDeque<AluinItem>,
-    /// Matches of an accepted packet not yet pushed to ALUin (the
-    /// Intra-Table delivers one destination register per cycle; a packet
-    /// may match several vertices on this PE). Bounded by DRF size.
-    pending_matches: VecDeque<AluinItem>,
-    aluout: VecDeque<(u8, u32)>,
-    alu: AluState,
-    deliver_busy_until: u64,
-    scatter_pos: usize,
-    scatter_next_at: u64,
-    /// Round-robin pointers: outputs N/E/S/W + local delivery.
-    rr: [u8; 5],
-    /// Total packets queued in inbufs + local_q + replay_q (fast-path
-    /// idle check: lets the per-cycle loop skip inactive PEs).
-    queued: u32,
+/// Fixed-capacity ring buffers for all PEs in one flat allocation:
+/// queue `q` occupies slots `[q*cap, (q+1)*cap)`. Uniform capacity per
+/// arena, sized from the ArchConfig FIFO depths at construction.
+struct RingArena<T> {
+    buf: Box<[T]>,
+    head: Box<[u32]>,
+    len: Box<[u32]>,
+    cap: u32,
 }
 
-impl PeState {
-    /// Insert into ALUin with min-coalescing: a message for a register
-    /// that already has a queued message merges by `min` (min-plus
-    /// relaxation is idempotent and monotone, so this preserves the
-    /// fixpoint exactly). This is what keeps ALU contention negligible at
-    /// the paper's buffer sizes (§5.2.6; cf. GraphPulse's coalescer, which
-    /// the paper contrasts — FLIP's is per-PE and 4 entries deep, not
-    /// centralized). Returns true if merged (no new slot used).
-    fn try_coalesce(&mut self, item: AluinItem) -> bool {
-        for q in self.aluin.iter_mut().chain(self.pending_matches.iter_mut()) {
-            if q.reg == item.reg {
-                q.msg = q.msg.min(item.msg);
+impl<T: Copy> RingArena<T> {
+    fn new(queues: usize, cap: usize, fill: T) -> RingArena<T> {
+        let cap = cap.max(1);
+        RingArena {
+            buf: vec![fill; queues * cap].into_boxed_slice(),
+            head: vec![0u32; queues].into_boxed_slice(),
+            len: vec![0u32; queues].into_boxed_slice(),
+            cap: cap as u32,
+        }
+    }
+
+    #[inline]
+    fn len(&self, q: usize) -> usize {
+        self.len[q] as usize
+    }
+
+    #[inline]
+    fn is_empty(&self, q: usize) -> bool {
+        self.len[q] == 0
+    }
+
+    #[inline]
+    fn front(&self, q: usize) -> Option<&T> {
+        if self.len[q] == 0 {
+            None
+        } else {
+            Some(&self.buf[q * self.cap as usize + self.head[q] as usize])
+        }
+    }
+
+    #[inline]
+    fn push_back(&mut self, q: usize, v: T) {
+        // The push sites bound every queue by its architectural capacity;
+        // a violated bound must fail loudly, not corrupt the ring.
+        assert!(self.len[q] < self.cap, "ring overflow on queue {q}");
+        let cap = self.cap;
+        let slot = q * cap as usize + ((self.head[q] + self.len[q]) % cap) as usize;
+        self.buf[slot] = v;
+        self.len[q] += 1;
+    }
+
+    #[inline]
+    fn pop_front(&mut self, q: usize) -> Option<T> {
+        if self.len[q] == 0 {
+            return None;
+        }
+        let cap = self.cap;
+        let v = self.buf[q * cap as usize + self.head[q] as usize];
+        self.head[q] = (self.head[q] + 1) % cap;
+        self.len[q] -= 1;
+        Some(v)
+    }
+}
+
+impl RingArena<AluinItem> {
+    /// Min-coalesce `item` into queue `q` if a message for the same
+    /// register is already queued. Returns true if merged.
+    #[inline]
+    fn coalesce(&mut self, q: usize, item: AluinItem) -> bool {
+        let cap = self.cap as usize;
+        let base = q * cap;
+        let (h, l) = (self.head[q] as usize, self.len[q] as usize);
+        for i in 0..l {
+            let e = &mut self.buf[base + (h + i) % cap];
+            if e.reg == item.reg {
+                e.msg = e.msg.min(item.msg);
                 return true;
             }
         }
         false
     }
+}
 
-    fn new() -> PeState {
-        PeState {
-            inbuf: [VecDeque::new(), VecDeque::new(), VecDeque::new(), VecDeque::new()],
-            local_q: VecDeque::new(),
-            replay_q: VecDeque::new(),
-            aluin: VecDeque::new(),
-            pending_matches: VecDeque::new(),
-            aluout: VecDeque::new(),
+/// Per-PE scalar state (the queues live in the ring arenas).
+struct PeScalars {
+    alu: AluState,
+    deliver_busy_until: u64,
+    scatter_pos: u32,
+    scatter_next_at: u64,
+    /// Round-robin pointers: router outputs, local delivery.
+    rr_out: u8,
+    rr_del: u8,
+    /// Total packets queued in inbufs + local_q + replay_q (fast idle
+    /// check and activation bookkeeping).
+    queued: u32,
+    /// True while the PE is on the active worklist.
+    active: bool,
+}
+
+impl PeScalars {
+    fn new() -> PeScalars {
+        PeScalars {
             alu: AluState::Idle,
             deliver_busy_until: 0,
             scatter_pos: 0,
             scatter_next_at: 0,
-            rr: [0; 5],
+            rr_out: 0,
+            rr_del: 0,
             queued: 0,
+            active: false,
         }
-    }
-
-    fn compute_idle(&self) -> bool {
-        matches!(self.alu, AluState::Idle)
-            && self.aluin.is_empty()
-            && self.pending_matches.is_empty()
-            && self.aluout.is_empty()
-            && self.local_q.is_empty()
-            && self.replay_q.is_empty()
-    }
-
-    fn fully_empty(&self) -> bool {
-        debug_assert_eq!(
-            self.queued as usize,
-            self.inbuf.iter().map(|b| b.len()).sum::<usize>()
-                + self.local_q.len()
-                + self.replay_q.len(),
-            "queued counter out of sync"
-        );
-        self.queued == 0 && self.compute_idle()
     }
 }
 
@@ -161,72 +227,114 @@ struct Parked {
     parked_at: u64,
 }
 
+/// SPM contents for one slice: the parked-packet list plus a cached
+/// minimum `parked_at` so the swap engine's earliest-pending scan is O(1)
+/// per candidate slice. `dirty` marks the cache stale after a removal.
+struct SliceParked {
+    list: Vec<Parked>,
+    min_at: u64,
+    dirty: bool,
+}
+
+impl SliceParked {
+    fn new() -> SliceParked {
+        SliceParked { list: Vec::new(), min_at: u64::MAX, dirty: false }
+    }
+
+    #[inline]
+    fn push(&mut self, p: Parked) {
+        if self.list.is_empty() {
+            self.min_at = p.parked_at;
+            self.dirty = false;
+        } else {
+            self.min_at = self.min_at.min(p.parked_at);
+        }
+        self.list.push(p);
+    }
+
+    /// Earliest `parked_at` in the list (recomputing the cache if stale).
+    #[inline]
+    fn earliest(&mut self) -> u64 {
+        if self.list.is_empty() {
+            return u64::MAX;
+        }
+        if self.dirty {
+            self.min_at = self.list.iter().map(|p| p.parked_at).min().unwrap_or(u64::MAX);
+            self.dirty = false;
+        }
+        self.min_at
+    }
+}
+
 struct ClusterState {
     resident: u16, // SliceId
     /// In-progress swap: (finish cycle, incoming slice).
     swap: Option<(u64, u16)>,
-    /// PE indices of this cluster.
-    pes: Vec<usize>,
 }
 
-/// Precomputed per-PE topology and timing scalars (hot-loop data; avoids
-/// recomputing mesh neighborhoods and cloning ArchConfig every cycle —
-/// see EXPERIMENTS.md §Perf).
-struct HotCfg {
-    /// Neighbor PE index per direction (N/E/S/W), usize::MAX = edge.
-    nbr: Vec<[usize; 4]>,
-    /// Cluster index per PE.
-    cluster_of: Vec<usize>,
+/// Timing and capacity scalars copied out of ArchConfig (hot-loop data).
+struct Timing {
     t_hop: u64,
     t_intra_lookup: u64,
     t_inter_entry: u64,
     input_buf_cap: usize,
     aluin_cap: usize,
     aluout_cap: usize,
+    num_clusters: usize,
+    num_copies: usize,
 }
 
-impl HotCfg {
-    fn new(cfg: &crate::config::ArchConfig) -> HotCfg {
-        let mut nbr = vec![[usize::MAX; 4]; cfg.num_pes()];
-        let mut cluster_of = vec![0usize; cfg.num_pes()];
-        for i in 0..cfg.num_pes() {
-            let c = PeCoord::from_index(i, cfg);
-            cluster_of[i] = c.cluster(cfg);
-            for (d, n) in c.neighbors(cfg) {
-                nbr[i][d as usize] = n.index(cfg);
-            }
-        }
-        HotCfg {
-            nbr,
-            cluster_of,
-            t_hop: cfg.t_hop,
-            t_intra_lookup: cfg.t_intra_lookup,
-            t_inter_entry: cfg.t_inter_entry,
-            input_buf_cap: cfg.input_buf_cap,
-            aluin_cap: cfg.aluin_cap,
-            aluout_cap: cfg.aluout_cap,
-        }
-    }
-}
-
-/// The FLIP cycle-accurate simulator.
+/// The FLIP cycle-accurate simulator (event-driven core).
 pub struct FlipSim<'a> {
     c: &'a CompiledGraph,
     workload: Workload,
     opts: SimOptions,
-    hot: HotCfg,
-    pes: Vec<PeState>,
+    topo: Topology,
+    tm: Timing,
+    pe: Vec<PeScalars>,
+    /// Input FIFOs: queue id = pe*4 + arrival port.
+    inbuf: RingArena<QPkt>,
+    /// Local injection queues (scatter output), one per PE.
+    local_q: RingArena<QPkt>,
+    aluin: RingArena<AluinItem>,
+    /// Matches of an accepted packet not yet pushed to ALUin (one
+    /// destination register delivered per cycle). Bounded by DRF size:
+    /// coalescing keeps registers distinct across ALUin + this queue.
+    pending: RingArena<AluinItem>,
+    aluout: RingArena<(u8, u32)>,
+    /// Replayed packets after a slice swap (SPM-backed, unbounded).
+    replay: Vec<VecDeque<QPkt>>,
     clusters: Vec<ClusterState>,
     /// credits[pe][dir] = free slots in the downstream FIFO for that link.
     credits: Vec<[u8; 4]>,
     attrs: Vec<u32>,
-    /// Parked packets per slice (SPM contents).
-    parked: std::collections::HashMap<u16, Vec<Parked>>,
-    /// WCC initial scatters for not-yet-resident slices.
-    pending_seeds: std::collections::HashMap<u16, Vec<(usize, u8, u32)>>,
+    /// Parked packets per slice id (SPM contents).
+    parked: Vec<SliceParked>,
+    /// WCC initial scatters for not-yet-resident slices, per slice id.
+    seeds: Vec<Vec<(usize, u8, u32)>>,
+    // ---- scheduler state ------------------------------------------------
+    /// Active worklist: PEs that are not fully empty, ascending.
+    active: Vec<u32>,
+    /// PEs activated since the last merge (unsorted, flag-deduplicated).
+    newly: Vec<u32>,
+    /// Clusters currently mid-swap.
+    swap_clusters: Vec<u32>,
+    /// Clusters with parked packets or pending seeds for any of their
+    /// slices (lazily compacted).
+    work_list: Vec<u32>,
+    in_work: Vec<bool>,
+    /// Per-cluster count of parked packets + pending seeds.
+    cluster_work: Vec<u32>,
+    // ---- incrementally-maintained counters ------------------------------
+    /// #ALUs in `Executing` (the per-cycle busy sample).
+    execing: u32,
+    /// Total ALUin occupancy across PEs (the per-cycle depth sample).
+    aluin_total: u64,
+    parked_total: u64,
+    seeds_total: u64,
     now: u64,
     act: ActivityCounts,
-    // metric accumulators
+    // ---- metric accumulators --------------------------------------------
     edges: u64,
     delivered: u64,
     parked_count: u64,
@@ -246,24 +354,49 @@ impl<'a> FlipSim<'a> {
         let cfg = &c.cfg;
         let num_pes = cfg.num_pes();
         let num_clusters = cfg.num_clusters();
-        let mut clusters: Vec<ClusterState> = (0..num_clusters)
-            .map(|cl| ClusterState { resident: cl as u16, swap: None, pes: vec![] })
-            .collect();
-        for i in 0..num_pes {
-            let cl = PeCoord::from_index(i, cfg).cluster(cfg);
-            clusters[cl].pes.push(i);
-        }
+        let num_copies = c.placement.num_copies;
+        let num_slices = num_copies * num_clusters;
+        let tm = Timing {
+            t_hop: cfg.t_hop,
+            t_intra_lookup: cfg.t_intra_lookup,
+            t_inter_entry: cfg.t_inter_entry,
+            input_buf_cap: cfg.input_buf_cap,
+            aluin_cap: cfg.aluin_cap,
+            aluout_cap: cfg.aluout_cap,
+            num_clusters,
+            num_copies,
+        };
         FlipSim {
-            c,
             workload,
             opts,
-            hot: HotCfg::new(cfg),
-            pes: (0..num_pes).map(|_| PeState::new()).collect(),
-            clusters,
+            topo: Topology::new(cfg),
+            pe: (0..num_pes).map(|_| PeScalars::new()).collect(),
+            inbuf: RingArena::new(num_pes * 4, cfg.input_buf_cap, ZERO_QPKT),
+            local_q: RingArena::new(num_pes, cfg.input_buf_cap, ZERO_QPKT),
+            aluin: RingArena::new(num_pes, cfg.aluin_cap, AluinItem { reg: 0, msg: 0 }),
+            pending: RingArena::new(num_pes, cfg.drf_size, AluinItem { reg: 0, msg: 0 }),
+            // headroom beyond the architectural cap: a swap-in releases up
+            // to drf_size pending WCC seeds into an (idle, hence empty)
+            // ALUout without a capacity check, mirroring the host preload.
+            aluout: RingArena::new(num_pes, cfg.aluout_cap + cfg.drf_size, (0u8, 0u32)),
+            replay: (0..num_pes).map(|_| VecDeque::new()).collect(),
+            clusters: (0..num_clusters)
+                .map(|cl| ClusterState { resident: cl as u16, swap: None })
+                .collect(),
             credits: vec![[0; 4]; num_pes],
             attrs: vec![],
-            parked: Default::default(),
-            pending_seeds: Default::default(),
+            parked: (0..num_slices).map(|_| SliceParked::new()).collect(),
+            seeds: vec![Vec::new(); num_slices],
+            active: Vec::with_capacity(num_pes),
+            newly: Vec::new(),
+            swap_clusters: Vec::new(),
+            work_list: Vec::new(),
+            in_work: vec![false; num_clusters],
+            cluster_work: vec![0; num_clusters],
+            execing: 0,
+            aluin_total: 0,
+            parked_total: 0,
+            seeds_total: 0,
             now: 0,
             act: Default::default(),
             edges: 0,
@@ -278,20 +411,100 @@ impl<'a> FlipSim<'a> {
             peak_par: 0,
             trace: vec![],
             progress_at: 0,
+            c,
+            tm,
         }
     }
 
-    fn cfg(&self) -> &crate::config::ArchConfig {
-        &self.c.cfg
-    }
-
+    #[inline]
     fn resident_copy(&self, cluster: usize) -> u16 {
-        (self.clusters[cluster].resident as usize / self.cfg().num_clusters()) as u16
+        (self.clusters[cluster].resident as usize / self.tm.num_clusters) as u16
     }
 
-    fn slice_cfg_of(&self, pe_idx: usize) -> &crate::arch::PeSliceConfig {
-        let cl = self.hot.cluster_of[pe_idx];
+    /// Slice config of `pe_idx`'s currently resident slice, borrowed from
+    /// the compiled graph (lifetime `'a`, independent of `&self`).
+    #[inline]
+    fn slice_cfg_of(&self, pe_idx: usize) -> &'a crate::arch::PeSliceConfig {
+        let cl = self.topo.cluster_of[pe_idx];
         self.c.slice_cfg(self.resident_copy(cl), pe_idx)
+    }
+
+    // ---- scheduler bookkeeping -------------------------------------------
+
+    /// Put a PE on the worklist (no-op if already active). New work is
+    /// only actionable next cycle (`t_hop ≥ 1`, replay/SPM latencies ≥ 0
+    /// with the swap phase running before the sweep), so deferring the
+    /// merge preserves naive sweep order.
+    #[inline]
+    fn activate(&mut self, pe_idx: usize) {
+        if !self.pe[pe_idx].active {
+            self.pe[pe_idx].active = true;
+            self.newly.push(pe_idx as u32);
+        }
+    }
+
+    /// Merge pending activations into the sorted active list. In-place
+    /// backward merge: the merged list never exceeds num_pes (the two
+    /// lists are disjoint PE sets), so after construction-time reservation
+    /// this allocates nothing in steady state.
+    fn merge_newly(&mut self) {
+        if self.newly.is_empty() {
+            return;
+        }
+        self.newly.sort_unstable();
+        let old_len = self.active.len();
+        let add = self.newly.len();
+        self.active.resize(old_len + add, 0);
+        let mut i = old_len; // unmerged tail of the old active list: [0, i)
+        let mut j = add; // unmerged tail of newly: [0, j)
+        let mut k = old_len + add; // next write position (exclusive)
+        while j > 0 {
+            if i > 0 && self.active[i - 1] > self.newly[j - 1] {
+                self.active[k - 1] = self.active[i - 1];
+                i -= 1;
+            } else {
+                self.active[k - 1] = self.newly[j - 1];
+                j -= 1;
+            }
+            k -= 1;
+        }
+        // remaining active[0, i) is already in place
+        self.newly.clear();
+    }
+
+    #[inline]
+    fn add_cluster_work(&mut self, cl: usize, n: u32) {
+        self.cluster_work[cl] += n;
+        if !self.in_work[cl] {
+            self.in_work[cl] = true;
+            self.work_list.push(cl as u32);
+        }
+    }
+
+    #[inline]
+    fn compute_idle(&self, pe_idx: usize) -> bool {
+        matches!(self.pe[pe_idx].alu, AluState::Idle)
+            && self.aluin.is_empty(pe_idx)
+            && self.pending.is_empty(pe_idx)
+            && self.aluout.is_empty(pe_idx)
+            && self.local_q.is_empty(pe_idx)
+            && self.replay[pe_idx].is_empty()
+    }
+
+    #[inline]
+    fn fully_empty(&self, pe_idx: usize) -> bool {
+        debug_assert_eq!(
+            self.pe[pe_idx].queued as usize,
+            (0..4).map(|p| self.inbuf.len(pe_idx * 4 + p)).sum::<usize>()
+                + self.local_q.len(pe_idx)
+                + self.replay[pe_idx].len(),
+            "queued counter out of sync"
+        );
+        self.pe[pe_idx].queued == 0 && self.compute_idle(pe_idx)
+    }
+
+    fn cluster_idle(&self, cl: usize) -> bool {
+        self.topo.cluster_pes[cl].iter().all(|&i| self.compute_idle(i))
     }
 
     /// Prepare initial state for a run from `source` (ignored for WCC).
@@ -308,8 +521,7 @@ impl<'a> FlipSim<'a> {
             }
         }
         // initial resident slice per cluster: copy 0
-        let num_clusters = cfg.num_clusters();
-        for cl in 0..num_clusters {
+        for cl in 0..self.tm.num_clusters {
             self.clusters[cl].resident = crate::compiler::Placement::slice_id(cfg, cl, 0);
         }
         if self.workload.single_source() {
@@ -319,7 +531,9 @@ impl<'a> FlipSim<'a> {
             self.clusters[cl].resident = crate::compiler::Placement::slice_id(cfg, cl, s.copy);
             // bootstrap message: distance/level 0 delivered to the source
             let pe_idx = s.pe.index(cfg);
-            self.pes[pe_idx].aluin.push_back(AluinItem { reg: s.reg, msg: 0 });
+            self.aluin.push_back(pe_idx, AluinItem { reg: s.reg, msg: 0 });
+            self.aluin_total += 1;
+            self.activate(pe_idx);
         } else {
             // WCC: every vertex scatters its initial label (host preload of
             // the ALUout buffers; non-resident slices seed on swap-in).
@@ -329,30 +543,31 @@ impl<'a> FlipSim<'a> {
                 let slice = crate::compiler::Placement::slice_id(cfg, cl, s.copy);
                 let pe_idx = s.pe.index(cfg);
                 if slice == self.clusters[cl].resident {
-                    self.pes[pe_idx].aluout.push_back((s.reg, self.attrs[v as usize]));
+                    self.aluout.push_back(pe_idx, (s.reg, self.attrs[v as usize]));
+                    self.activate(pe_idx);
                 } else {
-                    self.pending_seeds.entry(slice).or_default().push((
-                        pe_idx,
-                        s.reg,
-                        self.attrs[v as usize],
-                    ));
+                    self.seeds[slice as usize].push((pe_idx, s.reg, self.attrs[v as usize]));
+                    self.seeds_total += 1;
+                    self.add_cluster_work(cl, 1);
                 }
             }
         }
     }
 
-    fn done(&self) -> bool {
-        self.parked.is_empty()
-            && self.pending_seeds.is_empty()
-            && self.clusters.iter().all(|c| c.swap.is_none())
-            && self.pes.iter().all(|p| p.fully_empty())
+    #[inline]
+    fn is_done(&self) -> bool {
+        self.active.is_empty()
+            && self.newly.is_empty()
+            && self.parked_total == 0
+            && self.seeds_total == 0
+            && self.swap_clusters.is_empty()
     }
 
     /// Run to termination; returns the functional result and metrics.
     pub fn run(mut self, source: u32) -> Result<RunResult, String> {
         self.seed(source);
         self.progress_at = 0;
-        while !self.done() {
+        while !self.is_done() {
             if self.now >= self.opts.max_cycles {
                 return Err(format!("exceeded max_cycles={}", self.opts.max_cycles));
             }
@@ -368,6 +583,7 @@ impl<'a> FlipSim<'a> {
         }
         let cycles = self.now;
         let act = self.act;
+        let num_pes = self.pe.len() as u64;
         Ok(RunResult {
             cycles,
             attrs: std::mem::take(&mut self.attrs),
@@ -389,7 +605,7 @@ impl<'a> FlipSim<'a> {
                     0.0
                 },
                 avg_aluin_depth: if cycles > 0 {
-                    self.aluin_depth_sum as f64 / (cycles * self.pes.len() as u64) as f64
+                    self.aluin_depth_sum as f64 / (cycles * num_pes) as f64
                 } else {
                     0.0
                 },
@@ -400,55 +616,63 @@ impl<'a> FlipSim<'a> {
     }
 
     fn diag(&self) -> String {
-        let inflight: usize = self
-            .pes
-            .iter()
+        let inflight: usize = (0..self.pe.len())
             .map(|p| {
-                p.inbuf.iter().map(|b| b.len()).sum::<usize>() + p.local_q.len() + p.replay_q.len()
+                (0..4).map(|i| self.inbuf.len(p * 4 + i)).sum::<usize>()
+                    + self.local_q.len(p)
+                    + self.replay[p].len()
             })
             .sum();
         format!(
-            "inflight={} parked={} seeds={} swaps_active={}",
+            "inflight={} parked={} seeds={} swaps_active={} active_pes={}",
             inflight,
-            self.parked.values().map(|v| v.len()).sum::<usize>(),
-            self.pending_seeds.len(),
-            self.clusters.iter().filter(|c| c.swap.is_some()).count()
+            self.parked_total,
+            self.seeds_total,
+            self.swap_clusters.len(),
+            self.active.len()
         )
     }
 
-    /// One cycle.
+    /// One cycle (possibly fast-forwarding over a stall at the end).
     fn step(&mut self) {
         let now = self.now;
         // ---- swap engine -------------------------------------------------
         self.step_swaps();
         self.step_repatriate();
-        // ---- per-PE: router outputs, delivery, ALU, scatter ---------------
-        // Fast path: skip PEs with no queued packets and no compute state.
-        // Flags are re-derived between stages so same-cycle forwarding
-        // (delivery->ALU start, ALU完->scatter) is identical to the
-        // unconditional loop.
-        for pe_idx in 0..self.pes.len() {
-            let pe = &self.pes[pe_idx];
-            if pe.queued > 0 {
+        // swap-phase activations are actionable this cycle (replay packets
+        // arrive with ready_at = now): merge before the sweep.
+        self.merge_newly();
+        // ---- per-PE sweep: router, delivery, ALU, scatter -----------------
+        // Only active PEs are visited; stage guards re-derive between
+        // stages so same-cycle forwarding (delivery -> ALU start, ALU done
+        // -> scatter) is identical to the naive unconditional loop.
+        let len = self.active.len();
+        let mut w = 0usize;
+        for r in 0..len {
+            let pe_idx = self.active[r] as usize;
+            if self.pe[pe_idx].queued > 0 {
                 self.step_router(pe_idx);
                 self.step_delivery(pe_idx);
-            } else if !pe.pending_matches.is_empty() {
+            } else if !self.pending.is_empty(pe_idx) {
                 self.step_delivery(pe_idx); // drain the match microqueue
             }
-            let pe = &self.pes[pe_idx];
-            if !matches!(pe.alu, AluState::Idle) || !pe.aluin.is_empty() {
+            if !matches!(self.pe[pe_idx].alu, AluState::Idle) || !self.aluin.is_empty(pe_idx) {
                 self.step_alu(pe_idx);
             }
-            if !self.pes[pe_idx].aluout.is_empty() {
+            if !self.aluout.is_empty(pe_idx) {
                 self.step_scatter(pe_idx);
             }
+            // retire fully-drained PEs; a later push re-activates them
+            if self.fully_empty(pe_idx) {
+                self.pe[pe_idx].active = false;
+            } else {
+                self.active[w] = pe_idx as u32;
+                w += 1;
+            }
         }
+        self.active.truncate(w);
         // ---- metrics sampling ---------------------------------------------
-        let busy = self
-            .pes
-            .iter()
-            .filter(|p| matches!(p.alu, AluState::Executing { .. }))
-            .count() as u32;
+        let busy = self.execing;
         if busy > 0 {
             self.busy_cycles += 1;
             self.busy_sum += busy as u64;
@@ -457,14 +681,94 @@ impl<'a> FlipSim<'a> {
         if self.opts.trace_parallelism {
             self.trace.push(busy as u16);
         }
-        self.aluin_depth_sum +=
-            self.pes.iter().map(|p| p.aluin.len() as u64).sum::<u64>();
-        if self.clusters.iter().any(|c| c.swap.is_some()) {
+        self.aluin_depth_sum += self.aluin_total;
+        if !self.swap_clusters.is_empty() {
             self.swap_cycles += 1;
         }
-        self.now = now + 1;
+        // ---- advance time (idle-cycle fast-forward) -----------------------
+        if self.progress_at == now {
+            self.now = now + 1;
+        } else {
+            // Nothing changed this cycle: every cycle until the next timed
+            // deadline is identical, so jump straight there, replicating
+            // the per-cycle samples in closed form. Capped so the loop-top
+            // max_cycles / watchdog checks fire on exactly the same cycle
+            // as the naive stepper.
+            let t = self.next_event_after(now);
+            let target = t
+                .min(self.opts.max_cycles)
+                .min(self.progress_at.saturating_add(self.opts.watchdog).saturating_add(1))
+                .max(now + 1);
+            let skipped = target - (now + 1);
+            if skipped > 0 {
+                if busy > 0 {
+                    self.busy_cycles += skipped;
+                    self.busy_sum += busy as u64 * skipped;
+                }
+                if self.opts.trace_parallelism {
+                    let new_len = self.trace.len() + skipped as usize;
+                    self.trace.resize(new_len, busy as u16);
+                }
+                self.aluin_depth_sum += self.aluin_total * skipped;
+                if !self.swap_clusters.is_empty() {
+                    self.swap_cycles += skipped;
+                }
+            }
+            self.now = target;
+        }
     }
 
+    /// Earliest timed deadline after `now`: queue-head readiness, delivery
+    /// busy-until, ALU completion, scatter pacing, swap completion. During
+    /// a stall every state-based condition is frozen, so the next possible
+    /// change is exactly the minimum of these (collecting a *superset* is
+    /// safe — a spurious wake-up is just another exactly-sampled stall
+    /// cycle; missing a deadline would break equivalence).
+    fn next_event_after(&self, now: u64) -> u64 {
+        let mut t = u64::MAX;
+        for &pe_u in &self.active {
+            let pe_idx = pe_u as usize;
+            for port in 0..4 {
+                if let Some(q) = self.inbuf.front(pe_idx * 4 + port) {
+                    if q.ready_at > now && q.ready_at < t {
+                        t = q.ready_at;
+                    }
+                }
+            }
+            if let Some(q) = self.local_q.front(pe_idx) {
+                if q.ready_at > now && q.ready_at < t {
+                    t = q.ready_at;
+                }
+            }
+            if let Some(q) = self.replay[pe_idx].front() {
+                if q.ready_at > now && q.ready_at < t {
+                    t = q.ready_at;
+                }
+            }
+            let s = &self.pe[pe_idx];
+            if s.deliver_busy_until > now && s.deliver_busy_until < t {
+                t = s.deliver_busy_until;
+            }
+            if let AluState::Executing { until, .. } = s.alu {
+                if until > now && until < t {
+                    t = until;
+                }
+            }
+            if !self.aluout.is_empty(pe_idx) && s.scatter_next_at > now && s.scatter_next_at < t {
+                t = s.scatter_next_at;
+            }
+        }
+        for &cl in &self.swap_clusters {
+            if let Some((until, _)) = self.clusters[cl as usize].swap {
+                if until > now && until < t {
+                    t = until;
+                }
+            }
+        }
+        t
+    }
+
+    #[inline]
     fn touch(&mut self) {
         self.progress_at = self.now;
     }
@@ -472,80 +776,113 @@ impl<'a> FlipSim<'a> {
     // ---- swap engine (§3.3) ----------------------------------------------
     fn step_swaps(&mut self) {
         let now = self.now;
-        let num_clusters = self.cfg().num_clusters();
-        for cl in 0..num_clusters {
-            // finish in-progress swap
-            if let Some((until, slice)) = self.clusters[cl].swap {
-                if until <= now {
-                    self.clusters[cl].resident = slice;
-                    self.clusters[cl].swap = None;
-                    self.swaps += 1;
-                    // replay parked packets of the new slice
-                    if let Some(list) = self.parked.remove(&slice) {
-                        for p in list {
-                            self.pes[p.pe_idx].replay_q.push_back(QPkt {
-                                pkt: p.pkt,
-                                ready_at: now,
-                                created: p.created,
-                                route_hops: p.route_hops,
-                            });
-                            self.pes[p.pe_idx].queued += 1;
-                        }
-                    }
-                    // release pending WCC seeds of the new slice
-                    if let Some(seeds) = self.pending_seeds.remove(&slice) {
-                        for (pe_idx, reg, attr) in seeds {
-                            self.pes[pe_idx].aluout.push_back((reg, attr));
-                        }
-                    }
-                    self.touch();
-                }
+        // finish in-progress swaps
+        let mut i = 0;
+        while i < self.swap_clusters.len() {
+            let cl = self.swap_clusters[i] as usize;
+            let (until, slice) = self.clusters[cl].swap.expect("swap_clusters out of sync");
+            if until <= now {
+                self.swap_clusters.swap_remove(i);
+                self.finish_swap(cl, slice, now);
+            } else {
+                i += 1;
+            }
+        }
+        // consider starting swaps on clusters with pending off-chip work.
+        // (A cluster that just finished a swap cannot restart this cycle:
+        // the released replay packets / seeds make it non-idle.)
+        let mut i = 0;
+        while i < self.work_list.len() {
+            let cl = self.work_list[i] as usize;
+            if self.cluster_work[cl] == 0 {
+                self.in_work[cl] = false;
+                self.work_list.swap_remove(i);
                 continue;
             }
-            // consider starting a swap: cluster compute-idle + pending work
-            // for a non-resident slice of this cluster
-            let idle =
-                self.clusters[cl].pes.iter().all(|&i| self.pes[i].compute_idle());
-            if !idle {
+            i += 1;
+            if self.clusters[cl].swap.is_some() || !self.cluster_idle(cl) {
                 continue;
             }
-            let resident = self.clusters[cl].resident;
-            // candidate slices of this cluster (slice % num_clusters == cl)
-            let mut best: Option<(u64, u16)> = None; // (earliest pending, slice)
-            for (&slice, list) in &self.parked {
-                if slice as usize % num_clusters == cl && slice != resident {
-                    let earliest = list.iter().map(|p| p.parked_at).min().unwrap_or(u64::MAX);
-                    if best.map_or(true, |(e, _)| earliest < e) {
-                        best = Some((earliest, slice));
-                    }
-                }
+            self.try_start_swap(cl, now);
+        }
+    }
+
+    fn finish_swap(&mut self, cl: usize, slice: u16, now: u64) {
+        self.clusters[cl].resident = slice;
+        self.clusters[cl].swap = None;
+        self.swaps += 1;
+        let s = slice as usize;
+        // replay parked packets of the new slice
+        if !self.parked[s].list.is_empty() {
+            let list = std::mem::take(&mut self.parked[s].list);
+            self.parked[s].min_at = u64::MAX;
+            self.parked[s].dirty = false;
+            self.parked_total -= list.len() as u64;
+            self.cluster_work[cl] -= list.len() as u32;
+            for p in list {
+                self.replay[p.pe_idx].push_back(QPkt {
+                    pkt: p.pkt,
+                    ready_at: now,
+                    created: p.created,
+                    route_hops: p.route_hops,
+                });
+                self.pe[p.pe_idx].queued += 1;
+                self.activate(p.pe_idx);
             }
-            for &slice in self.pending_seeds.keys() {
-                if slice as usize % num_clusters == cl && slice != resident {
-                    // seeds are pending since cycle 0
-                    if best.map_or(true, |(e, _)| 0 < e) {
-                        best = Some((0, slice));
-                    }
-                }
+        }
+        // release pending WCC seeds of the new slice
+        if !self.seeds[s].is_empty() {
+            let seeds = std::mem::take(&mut self.seeds[s]);
+            self.seeds_total -= seeds.len() as u64;
+            self.cluster_work[cl] -= seeds.len() as u32;
+            for (pe_idx, reg, attr) in seeds {
+                self.aluout.push_back(pe_idx, (reg, attr));
+                self.activate(pe_idx);
             }
-            if let Some((_, slice)) = best {
-                // swap cost: write out current slice words + read in new
-                let cfg = self.cfg();
-                let out_copy = self.resident_copy(cl);
-                let in_copy = (slice as usize / num_clusters) as u16;
-                let words: usize = self.clusters[cl]
-                    .pes
-                    .iter()
-                    .map(|&i| {
-                        self.c.slice_cfg(out_copy, i).storage_words()
-                            + self.c.slice_cfg(in_copy, i).storage_words()
-                    })
-                    .sum();
-                let cost = words as u64 * cfg.t_swap_word + cfg.t_offchip_fixed;
-                self.act.swap_words += words as u64;
-                self.clusters[cl].swap = Some((now + cost, slice));
-                self.touch();
+        }
+        self.touch();
+    }
+
+    fn try_start_swap(&mut self, cl: usize, now: u64) {
+        let resident = self.clusters[cl].resident;
+        let nc = self.tm.num_clusters;
+        // candidate slices of this cluster, ascending slice id (so ties on
+        // the earliest pending cycle resolve to the lowest slice — the
+        // naive reference uses the same rule)
+        let mut best: Option<(u64, u16)> = None; // (earliest pending, slice)
+        for copy in 0..self.tm.num_copies {
+            let slice = (copy * nc + cl) as u16;
+            if slice == resident {
+                continue;
             }
+            let mut earliest = self.parked[slice as usize].earliest();
+            if !self.seeds[slice as usize].is_empty() {
+                earliest = 0; // seeds are pending since cycle 0
+            }
+            if earliest == u64::MAX {
+                continue;
+            }
+            if best.map_or(true, |(e, _)| earliest < e) {
+                best = Some((earliest, slice));
+            }
+        }
+        if let Some((_, slice)) = best {
+            // swap cost: write out current slice words + read in new
+            let cfg = &self.c.cfg;
+            let out_copy = self.resident_copy(cl);
+            let in_copy = (slice as usize / nc) as u16;
+            let words: usize = self.topo.cluster_pes[cl]
+                .iter()
+                .map(|&i| {
+                    self.c.slice_cfg(out_copy, i).storage_words()
+                        + self.c.slice_cfg(in_copy, i).storage_words()
+                })
+                .sum();
+            let cost = words as u64 * cfg.t_swap_word + cfg.t_offchip_fixed;
+            self.act.swap_words += words as u64;
+            self.clusters[cl].swap = Some((now + cost, slice));
+            self.swap_clusters.push(cl as u32);
+            self.touch();
         }
     }
 
@@ -554,39 +891,44 @@ impl<'a> FlipSim<'a> {
     /// the other half of the memory-buffer escape path.
     fn step_repatriate(&mut self) {
         let now = self.now;
-        let aluin_cap = self.cfg().aluin_cap;
-        let num_clusters = self.cfg().num_clusters();
+        let aluin_cap = self.tm.aluin_cap;
         let spm_latency = 2u64;
-        for cl in 0..num_clusters {
-            if self.clusters[cl].swap.is_some() {
+        let mut i = 0;
+        while i < self.work_list.len() {
+            let cl = self.work_list[i] as usize;
+            i += 1;
+            if self.cluster_work[cl] == 0 || self.clusters[cl].swap.is_some() {
                 continue;
             }
-            let resident = self.clusters[cl].resident;
-            let Some(list) = self.parked.get_mut(&resident) else { continue };
+            let resident = self.clusters[cl].resident as usize;
+            if self.parked[resident].list.is_empty() {
+                continue;
+            }
             // drain entries whose destination ALUin has room again
-            let mut i = 0;
-            let mut moved = false;
-            while i < list.len() {
-                let p = list[i];
-                let pe = &self.pes[p.pe_idx];
-                if pe.aluin.len() < aluin_cap && pe.replay_q.len() < aluin_cap {
-                    list.swap_remove(i);
-                    self.pes[p.pe_idx].replay_q.push_back(QPkt {
+            let mut j = 0;
+            let mut moved = 0u32;
+            while j < self.parked[resident].list.len() {
+                let p = self.parked[resident].list[j];
+                if self.aluin.len(p.pe_idx) < aluin_cap && self.replay[p.pe_idx].len() < aluin_cap
+                {
+                    self.parked[resident].list.swap_remove(j);
+                    self.parked[resident].dirty = true;
+                    self.replay[p.pe_idx].push_back(QPkt {
                         pkt: p.pkt,
                         ready_at: now + spm_latency,
                         created: p.created,
                         route_hops: p.route_hops,
                     });
-                    self.pes[p.pe_idx].queued += 1;
-                    moved = true;
+                    self.pe[p.pe_idx].queued += 1;
+                    self.activate(p.pe_idx);
+                    moved += 1;
                 } else {
-                    i += 1;
+                    j += 1;
                 }
             }
-            if list.is_empty() {
-                self.parked.remove(&resident);
-            }
-            if moved {
+            if moved > 0 {
+                self.parked_total -= moved as u64;
+                self.cluster_work[cl] -= moved;
                 self.touch();
             }
         }
@@ -600,14 +942,14 @@ impl<'a> FlipSim<'a> {
         // Equivalent to per-output arbiters (one grant per output per
         // cycle, rotating priority) at a quarter of the scan cost.
         let mut granted = [false; 4];
-        let rr = self.pes[pe_idx].rr[0];
+        let rr = self.pe[pe_idx].rr_out;
         let mut grants = 0u8;
         for k in 0..5u8 {
             let src = ((rr + k) % 5) as usize;
             let head = if src < 4 {
-                self.pes[pe_idx].inbuf[src].front()
+                self.inbuf.front(pe_idx * 4 + src)
             } else {
-                self.pes[pe_idx].local_q.front()
+                self.local_q.front(pe_idx)
             };
             let Some(q) = head else { continue };
             if q.ready_at > now {
@@ -618,44 +960,53 @@ impl<'a> FlipSim<'a> {
             if granted[od] || self.credits[pe_idx][od] == 0 {
                 continue;
             }
-            let nbr_idx = self.hot.nbr[pe_idx][od];
+            let nbr_idx = self.topo.nbr[pe_idx][od];
             debug_assert!(nbr_idx != usize::MAX, "YX routed off the mesh");
             granted[od] = true;
             grants += 1;
             let q = if src < 4 {
-                let q = self.pes[pe_idx].inbuf[src].pop_front().unwrap();
+                let q = self.inbuf.pop_front(pe_idx * 4 + src).unwrap();
                 // return a credit upstream: the sender sits in direction `src`
-                let up = self.hot.nbr[pe_idx][src];
+                let up = self.topo.nbr[pe_idx][src];
                 self.credits[up][Dir::SIDES[src].opposite() as usize] += 1;
                 q
             } else {
-                self.pes[pe_idx].local_q.pop_front().unwrap()
+                self.local_q.pop_front(pe_idx).unwrap()
             };
-            self.pes[pe_idx].queued -= 1;
+            self.pe[pe_idx].queued -= 1;
             self.credits[pe_idx][od] -= 1;
             let hopped = QPkt {
                 pkt: q.pkt.hop(out_dir),
-                ready_at: now + self.hot.t_hop,
+                ready_at: now + self.tm.t_hop,
                 created: q.created,
                 route_hops: q.route_hops,
             };
             let in_port = out_dir.opposite() as usize;
-            self.pes[nbr_idx].inbuf[in_port].push_back(hopped);
-            self.pes[nbr_idx].queued += 1;
+            self.inbuf.push_back(nbr_idx * 4 + in_port, hopped);
+            self.pe[nbr_idx].queued += 1;
+            self.activate(nbr_idx);
             self.act.switch_grants += 1;
             self.act.input_buf_pushes += 1;
         }
         if grants > 0 {
             // rotate priority past the first granted source
-            self.pes[pe_idx].rr[0] = (rr + 1) % 5;
+            self.pe[pe_idx].rr_out = (rr + 1) % 5;
             self.touch();
         }
     }
 
     // ---- local delivery (slice compare, Intra-Table, ALUin) ---------------
+
+    /// Min-coalesce into ALUin or the pending microqueue (same scan order
+    /// as the naive `VecDeque` chain). Returns true if merged.
+    #[inline]
+    fn try_coalesce(&mut self, pe_idx: usize, item: AluinItem) -> bool {
+        self.aluin.coalesce(pe_idx, item) || self.pending.coalesce(pe_idx, item)
+    }
+
     fn step_delivery(&mut self, pe_idx: usize) {
         let now = self.now;
-        if self.pes[pe_idx].deliver_busy_until > now {
+        if self.pe[pe_idx].deliver_busy_until > now {
             return;
         }
         // Drain pending matches of the previously accepted packet first:
@@ -664,29 +1015,30 @@ impl<'a> FlipSim<'a> {
         // (and parking) arriving packets so link credits always recycle —
         // otherwise the ALUin→ALUout→scatter→NoC→delivery loop deadlocks.
         let mut must_park = false;
-        if !self.pes[pe_idx].pending_matches.is_empty() {
-            if self.pes[pe_idx].aluin.len() < self.hot.aluin_cap {
-                let item = self.pes[pe_idx].pending_matches.pop_front().unwrap();
-                if !self.pes[pe_idx].try_coalesce(item) {
-                    self.pes[pe_idx].aluin.push_back(item);
+        if !self.pending.is_empty(pe_idx) {
+            if self.aluin.len(pe_idx) < self.tm.aluin_cap {
+                let item = self.pending.pop_front(pe_idx).unwrap();
+                if !self.try_coalesce(pe_idx, item) {
+                    self.aluin.push_back(pe_idx, item);
+                    self.aluin_total += 1;
                 }
                 self.act.aluin_pushes += 1; // edge already counted at accept
-                self.pes[pe_idx].deliver_busy_until = now + 1;
+                self.pe[pe_idx].deliver_busy_until = now + 1;
                 self.touch();
                 return;
             }
             must_park = true; // microqueue blocked: park anything that arrives
         }
-        let cl = self.hot.cluster_of[pe_idx];
+        let cl = self.topo.cluster_of[pe_idx];
         // candidate sources: replay_q (5), local_q (4), inbufs (0-3)
-        let rr = self.pes[pe_idx].rr[4];
+        let rr = self.pe[pe_idx].rr_del;
         let mut chosen: Option<usize> = None;
         for k in 0..6u8 {
             let src = ((rr + k) % 6) as usize;
             let head = match src {
-                0..=3 => self.pes[pe_idx].inbuf[src].front(),
-                4 => self.pes[pe_idx].local_q.front(),
-                _ => self.pes[pe_idx].replay_q.front(),
+                0..=3 => self.inbuf.front(pe_idx * 4 + src),
+                4 => self.local_q.front(pe_idx),
+                _ => self.replay[pe_idx].front(),
             };
             if let Some(q) = head {
                 if q.ready_at <= now && q.pkt.arrived() {
@@ -697,35 +1049,22 @@ impl<'a> FlipSim<'a> {
         }
         let Some(src) = chosen else { return };
         let q = *match src {
-            0..=3 => self.pes[pe_idx].inbuf[src].front().unwrap(),
-            4 => self.pes[pe_idx].local_q.front().unwrap(),
-            _ => self.pes[pe_idx].replay_q.front().unwrap(),
+            0..=3 => self.inbuf.front(pe_idx * 4 + src).unwrap(),
+            4 => self.local_q.front(pe_idx).unwrap(),
+            _ => self.replay[pe_idx].front().unwrap(),
         };
         self.act.slice_compares += 1;
         // swap in progress, slice mismatch, or blocked microqueue -> park
         let swapping = self.clusters[cl].swap.is_some();
         let resident = self.clusters[cl].resident;
         if swapping || must_park || q.pkt.slice != resident {
-            self.pop_delivery_src(pe_idx, src);
-            self.parked.entry(q.pkt.slice).or_default().push(Parked {
-                pe_idx,
-                pkt: q.pkt,
-                created: q.created,
-                route_hops: q.route_hops,
-                parked_at: now,
-            });
-            self.act.membuf_pushes += 1;
-            self.parked_count += 1;
-            self.pes[pe_idx].deliver_busy_until = now + 1;
-            self.pes[pe_idx].rr[4] = ((src as u8) + 1) % 6;
-            self.touch();
+            self.park_pkt(pe_idx, src, &q, now);
             return;
         }
-        // Intra-Table lookup (zero-copy bucket walk; borrow from the
-        // compiled graph reference, not &self, so PE state stays mutable)
-        let compiled: &CompiledGraph = self.c;
+        // Intra-Table lookup (zero-copy bucket walk; borrowed from the
+        // compiled graph with lifetime 'a, so PE state stays mutable)
         let copy = self.resident_copy(cl);
-        let bucket = compiled.slice_cfg(copy, pe_idx).intra.bucket(q.pkt.src_vid);
+        let bucket = self.c.slice_cfg(copy, pe_idx).intra.bucket(q.pkt.src_vid);
         let walked = bucket.len().max(1) as u64;
         let src_vid = q.pkt.src_vid;
         let n_matches = bucket.iter().filter(|e| e.src_vid == src_vid).count();
@@ -735,8 +1074,8 @@ impl<'a> FlipSim<'a> {
             self.pop_delivery_src(pe_idx, src);
             self.act.intra_lookups += 1;
             self.act.intra_walked += walked;
-            self.pes[pe_idx].deliver_busy_until = now + self.hot.t_intra_lookup;
-            self.pes[pe_idx].rr[4] = ((src as u8) + 1) % 6;
+            self.pe[pe_idx].deliver_busy_until = now + self.tm.t_intra_lookup;
+            self.pe[pe_idx].rr_del = ((src as u8) + 1) % 6;
             self.touch();
             return;
         }
@@ -747,70 +1086,79 @@ impl<'a> FlipSim<'a> {
         // Memory buffer"). Accepted packets stash their matches in the
         // pending microqueue (one register delivered per cycle), which is
         // guaranteed to drain through the ALU.
-        if self.pes[pe_idx].aluin.len() >= self.hot.aluin_cap {
-            self.pop_delivery_src(pe_idx, src);
-            self.parked.entry(q.pkt.slice).or_default().push(Parked {
-                pe_idx,
-                pkt: q.pkt,
-                created: q.created,
-                route_hops: q.route_hops,
-                parked_at: now,
-            });
-            self.act.membuf_pushes += 1;
-            self.parked_count += 1;
-            self.pes[pe_idx].deliver_busy_until = now + 1;
-            self.pes[pe_idx].rr[4] = ((src as u8) + 1) % 6;
-            self.touch();
+        if self.aluin.len(pe_idx) >= self.tm.aluin_cap {
+            self.park_pkt(pe_idx, src, &q, now);
             return;
         }
         self.pop_delivery_src(pe_idx, src);
         self.act.intra_lookups += 1;
         self.act.intra_walked += walked;
         let mut first = true;
-        for mi in 0..bucket.len() {
-            let m = bucket[mi];
+        for m in bucket {
             if m.src_vid != src_vid {
                 continue;
             }
             let msg = q.pkt.attr.saturating_add(self.workload.edge_weight(m.weight)).min(INF - 1);
             let item = AluinItem { reg: m.dst_reg, msg };
-            if self.pes[pe_idx].try_coalesce(item) {
+            if self.try_coalesce(pe_idx, item) {
                 // merged with a queued message for the same register
                 self.edges += 1;
                 continue;
             }
             if first {
-                self.pes[pe_idx].aluin.push_back(item);
+                self.aluin.push_back(pe_idx, item);
+                self.aluin_total += 1;
                 self.act.aluin_pushes += 1;
                 self.edges += 1;
                 first = false;
             } else {
-                self.pes[pe_idx].pending_matches.push_back(item);
+                self.pending.push_back(pe_idx, item);
                 self.edges += 1;
             }
         }
         self.delivered += 1;
-        let pure = q.route_hops as u64 * self.hot.t_hop;
+        let pure = q.route_hops as u64 * self.tm.t_hop;
         let latency = now.saturating_sub(q.created);
         self.wait_sum += latency.saturating_sub(pure);
-        self.pes[pe_idx].deliver_busy_until = now + self.hot.t_intra_lookup;
-        self.pes[pe_idx].rr[4] = ((src as u8) + 1) % 6;
+        self.pe[pe_idx].deliver_busy_until = now + self.tm.t_intra_lookup;
+        self.pe[pe_idx].rr_del = ((src as u8) + 1) % 6;
+        self.touch();
+    }
+
+    /// Park the head packet of delivery source `src` into the memory
+    /// buffer / SPM for its destination slice.
+    fn park_pkt(&mut self, pe_idx: usize, src: usize, q: &QPkt, now: u64) {
+        self.pop_delivery_src(pe_idx, src);
+        let slice = q.pkt.slice as usize;
+        self.parked[slice].push(Parked {
+            pe_idx,
+            pkt: q.pkt,
+            created: q.created,
+            route_hops: q.route_hops,
+            parked_at: now,
+        });
+        self.parked_total += 1;
+        self.add_cluster_work(slice % self.tm.num_clusters, 1);
+        self.act.membuf_pushes += 1;
+        self.parked_count += 1;
+        self.pe[pe_idx].deliver_busy_until = now + 1;
+        self.pe[pe_idx].rr_del = ((src as u8) + 1) % 6;
         self.touch();
     }
 
     fn pop_delivery_src(&mut self, pe_idx: usize, src: usize) {
-        self.pes[pe_idx].queued -= 1;
+        self.pe[pe_idx].queued -= 1;
         match src {
             0..=3 => {
-                self.pes[pe_idx].inbuf[src].pop_front();
-                let up = self.hot.nbr[pe_idx][src];
+                self.inbuf.pop_front(pe_idx * 4 + src);
+                let up = self.topo.nbr[pe_idx][src];
                 self.credits[up][Dir::SIDES[src].opposite() as usize] += 1;
             }
             4 => {
-                self.pes[pe_idx].local_q.pop_front();
+                self.local_q.pop_front(pe_idx);
             }
             _ => {
-                self.pes[pe_idx].replay_q.pop_front();
+                self.replay[pe_idx].pop_front();
             }
         }
     }
@@ -818,7 +1166,7 @@ impl<'a> FlipSim<'a> {
     // ---- ALU ---------------------------------------------------------------
     fn step_alu(&mut self, pe_idx: usize) {
         let now = self.now;
-        match self.pes[pe_idx].alu {
+        match self.pe[pe_idx].alu {
             AluState::Executing { until, reg, new_attr, scatter } => {
                 if until <= now {
                     // write back
@@ -828,16 +1176,17 @@ impl<'a> FlipSim<'a> {
                         self.attrs[vid as usize] = new_attr;
                         self.act.drf_writes += 1;
                     }
+                    self.execing -= 1;
                     if scatter {
-                        if self.pes[pe_idx].aluout.len() < self.hot.aluout_cap {
-                            self.pes[pe_idx].aluout.push_back((reg, new_attr));
+                        if self.aluout.len(pe_idx) < self.tm.aluout_cap {
+                            self.aluout.push_back(pe_idx, (reg, new_attr));
                             self.act.aluout_pushes += 1;
-                            self.pes[pe_idx].alu = AluState::Idle;
+                            self.pe[pe_idx].alu = AluState::Idle;
                         } else {
-                            self.pes[pe_idx].alu = AluState::WaitOut { reg, attr: new_attr };
+                            self.pe[pe_idx].alu = AluState::WaitOut { reg, attr: new_attr };
                         }
                     } else {
-                        self.pes[pe_idx].alu = AluState::Idle;
+                        self.pe[pe_idx].alu = AluState::Idle;
                     }
                     self.touch();
                 } else {
@@ -845,10 +1194,10 @@ impl<'a> FlipSim<'a> {
                 }
             }
             AluState::WaitOut { reg, attr } => {
-                if self.pes[pe_idx].aluout.len() < self.hot.aluout_cap {
-                    self.pes[pe_idx].aluout.push_back((reg, attr));
+                if self.aluout.len(pe_idx) < self.tm.aluout_cap {
+                    self.aluout.push_back(pe_idx, (reg, attr));
                     self.act.aluout_pushes += 1;
-                    self.pes[pe_idx].alu = AluState::Idle;
+                    self.pe[pe_idx].alu = AluState::Idle;
                     self.touch();
                 } else {
                     return;
@@ -857,10 +1206,11 @@ impl<'a> FlipSim<'a> {
             AluState::Idle => {}
         }
         // start next item
-        if !matches!(self.pes[pe_idx].alu, AluState::Idle) {
+        if !matches!(self.pe[pe_idx].alu, AluState::Idle) {
             return;
         }
-        let Some(item) = self.pes[pe_idx].aluin.pop_front() else { return };
+        let Some(item) = self.aluin.pop_front(pe_idx) else { return };
+        self.aluin_total -= 1;
         let vid = self.slice_cfg_of(pe_idx).vertices[item.reg as usize];
         debug_assert!(vid != u32::MAX, "ALUin item for empty DRF register");
         let attr = self.attrs[vid as usize];
@@ -869,48 +1219,47 @@ impl<'a> FlipSim<'a> {
         self.act.alu_ops += res.cycles;
         self.act.im_fetches += res.cycles;
         self.act.drf_reads += 1;
-        self.pes[pe_idx].alu = AluState::Executing {
+        self.pe[pe_idx].alu = AluState::Executing {
             until: now + res.cycles,
             reg: item.reg,
             new_attr,
             scatter: res.scatter.is_some(),
         };
+        self.execing += 1;
         self.touch();
     }
 
     // ---- scatter (Inter-Table walk, farthest-first order) -------------------
     fn step_scatter(&mut self, pe_idx: usize) {
         let now = self.now;
-        if self.pes[pe_idx].scatter_next_at > now {
+        if self.pe[pe_idx].scatter_next_at > now {
             return;
         }
-        let Some(&(reg, attr)) = self.pes[pe_idx].aluout.front() else { return };
+        let Some(&(reg, attr)) = self.aluout.front(pe_idx) else { return };
         let slice_cfg = self.slice_cfg_of(pe_idx);
         let list = &slice_cfg.inter[reg as usize];
-        let pos = self.pes[pe_idx].scatter_pos;
+        let pos = self.pe[pe_idx].scatter_pos as usize;
         if pos >= list.len() {
-            self.pes[pe_idx].aluout.pop_front();
-            self.pes[pe_idx].scatter_pos = 0;
+            self.aluout.pop_front(pe_idx);
+            self.pe[pe_idx].scatter_pos = 0;
             self.touch();
             return;
         }
         let entry = list[pos];
         let vid = slice_cfg.vertices[reg as usize];
-        if self.pes[pe_idx].local_q.len() >= self.hot.input_buf_cap {
+        if self.local_q.len(pe_idx) >= self.tm.input_buf_cap {
             return; // injection stall
         }
         let pkt = Packet { src_vid: vid, attr, dx: entry.dx, dy: entry.dy, slice: entry.slice };
         let hops = entry.hops();
-        self.pes[pe_idx].local_q.push_back(QPkt {
-            pkt,
-            ready_at: now + 1,
-            created: now,
-            route_hops: hops,
-        });
-        self.pes[pe_idx].queued += 1;
+        self.local_q.push_back(
+            pe_idx,
+            QPkt { pkt, ready_at: now + 1, created: now, route_hops: hops },
+        );
+        self.pe[pe_idx].queued += 1;
         self.act.inter_walked += 1;
-        self.pes[pe_idx].scatter_pos += 1;
-        self.pes[pe_idx].scatter_next_at = now + self.hot.t_inter_entry;
+        self.pe[pe_idx].scatter_pos += 1;
+        self.pe[pe_idx].scatter_next_at = now + self.tm.t_inter_entry;
         self.touch();
     }
 }
@@ -1044,5 +1393,22 @@ mod tests {
         let r = run(&c, Workload::Wcc, 0, &opts).unwrap();
         assert_eq!(r.sim.parallelism_trace.len() as u64, r.cycles);
         assert!(r.sim.peak_parallelism >= 1);
+    }
+
+    #[test]
+    fn matches_naive_stepper_on_swapping_graph() {
+        // the heavy case the fast-forward targets: multi-copy graph with
+        // long slice swaps — cycle counts and all metrics must be bitwise
+        // identical to the naive reference stepper
+        let g = generate::road_network(300, 690, 800, 29);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts::default());
+        let opts = SimOptions { trace_parallelism: true, ..Default::default() };
+        let fast = run(&c, Workload::Bfs, 0, &opts).unwrap();
+        let naive = crate::sim::naive::run(&c, Workload::Bfs, 0, &opts).unwrap();
+        assert_eq!(fast.cycles, naive.cycles);
+        assert_eq!(fast.attrs, naive.attrs);
+        assert_eq!(fast.edges_traversed, naive.edges_traversed);
+        assert_eq!(fast.sim, naive.sim);
     }
 }

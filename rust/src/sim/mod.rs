@@ -1,11 +1,13 @@
-//! Simulators: the cycle-accurate FLIP data-centric simulator ([`flip`]),
-//! the classic operation-centric CGRA baseline ([`opcentric`] over
-//! [`modulo`]-scheduled [`crate::workloads::dfgs`]), and the MCU
-//! cost-model baseline ([`mcu`]).
+//! Simulators: the event-driven cycle-accurate FLIP data-centric simulator
+//! ([`flip`]), its retained naive reference stepper ([`naive`], used by the
+//! equivalence property tests), the classic operation-centric CGRA baseline
+//! ([`opcentric`] over [`modulo`]-scheduled [`crate::workloads::dfgs`]),
+//! and the MCU cost-model baseline ([`mcu`]).
 
 pub mod flip;
 pub mod mcu;
 pub mod modulo;
+pub mod naive;
 pub mod opcentric;
 
 pub use flip::{FlipSim, SimOptions};

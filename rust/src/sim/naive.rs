@@ -1,0 +1,913 @@
+//! Naive reference stepper for FLIP's data-centric mode.
+//!
+//! This is the original cycle-accurate core: it advances one cycle at a
+//! time and scans *every* PE, cluster, and parked-packet list each cycle.
+//! It is intentionally simple and slow — the event-driven core in
+//! [`super::flip`] must produce identical `cycles`, `attrs`,
+//! `edges_traversed`, and [`SimMetrics`] on every input, and
+//! `tests/property.rs` enforces that equivalence on random graphs. Keep
+//! this file boring: any behavioural change here must be mirrored in the
+//! fast core and vice versa.
+//!
+//! One deliberate deviation from the seed version: swap-candidate
+//! selection used to iterate `HashMap`s, so ties between slices with equal
+//! earliest-pending cycles were broken by hash order — nondeterministic
+//! across processes. Both cores now break ties by lowest slice id.
+
+use crate::arch::{isa, yx_route, Dir, Packet, PeCoord};
+use crate::compiler::CompiledGraph;
+use crate::graph::INF;
+use crate::metrics::{ActivityCounts, RunResult, SimMetrics};
+use crate::sim::SimOptions;
+use crate::workloads::Workload;
+use std::collections::VecDeque;
+
+/// A packet in a FIFO, with its link-arrival time and provenance for the
+/// wait-time metric.
+#[derive(Debug, Clone, Copy)]
+struct QPkt {
+    pkt: Packet,
+    ready_at: u64,
+    created: u64,
+    /// Total hops of the route (for wait = latency − hops·t_hop).
+    route_hops: u32,
+}
+
+/// An entry waiting for the ALU: destination register + weighted message.
+#[derive(Debug, Clone, Copy)]
+struct AluinItem {
+    reg: u8,
+    msg: u32,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum AluState {
+    Idle,
+    /// Executing until `until`; on completion write `new_attr` to `reg`
+    /// and scatter if `scatter`.
+    Executing { until: u64, reg: u8, new_attr: u32, scatter: bool },
+    /// Finished but ALUout was full; retrying the push.
+    WaitOut { reg: u8, attr: u32 },
+}
+
+struct PeState {
+    /// Input FIFOs, indexed by the side the packet came *from*.
+    inbuf: [VecDeque<QPkt>; 4],
+    /// Local injection queue (scatter output).
+    local_q: VecDeque<QPkt>,
+    /// Replayed packets after a slice swap (SPM-backed, unbounded).
+    replay_q: VecDeque<QPkt>,
+    aluin: VecDeque<AluinItem>,
+    /// Matches of an accepted packet not yet pushed to ALUin (the
+    /// Intra-Table delivers one destination register per cycle; a packet
+    /// may match several vertices on this PE). Bounded by DRF size.
+    pending_matches: VecDeque<AluinItem>,
+    aluout: VecDeque<(u8, u32)>,
+    alu: AluState,
+    deliver_busy_until: u64,
+    scatter_pos: usize,
+    scatter_next_at: u64,
+    /// Round-robin pointers: outputs N/E/S/W + local delivery.
+    rr: [u8; 5],
+    /// Total packets queued in inbufs + local_q + replay_q (fast-path
+    /// idle check: lets the per-cycle loop skip inactive PEs).
+    queued: u32,
+}
+
+impl PeState {
+    /// Insert into ALUin with min-coalescing: a message for a register
+    /// that already has a queued message merges by `min` (min-plus
+    /// relaxation is idempotent and monotone, so this preserves the
+    /// fixpoint exactly). This is what keeps ALU contention negligible at
+    /// the paper's buffer sizes (§5.2.6; cf. GraphPulse's coalescer, which
+    /// the paper contrasts — FLIP's is per-PE and 4 entries deep, not
+    /// centralized). Returns true if merged (no new slot used).
+    fn try_coalesce(&mut self, item: AluinItem) -> bool {
+        for q in self.aluin.iter_mut().chain(self.pending_matches.iter_mut()) {
+            if q.reg == item.reg {
+                q.msg = q.msg.min(item.msg);
+                return true;
+            }
+        }
+        false
+    }
+
+    fn new() -> PeState {
+        PeState {
+            inbuf: [VecDeque::new(), VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            local_q: VecDeque::new(),
+            replay_q: VecDeque::new(),
+            aluin: VecDeque::new(),
+            pending_matches: VecDeque::new(),
+            aluout: VecDeque::new(),
+            alu: AluState::Idle,
+            deliver_busy_until: 0,
+            scatter_pos: 0,
+            scatter_next_at: 0,
+            rr: [0; 5],
+            queued: 0,
+        }
+    }
+
+    fn compute_idle(&self) -> bool {
+        matches!(self.alu, AluState::Idle)
+            && self.aluin.is_empty()
+            && self.pending_matches.is_empty()
+            && self.aluout.is_empty()
+            && self.local_q.is_empty()
+            && self.replay_q.is_empty()
+    }
+
+    fn fully_empty(&self) -> bool {
+        debug_assert_eq!(
+            self.queued as usize,
+            self.inbuf.iter().map(|b| b.len()).sum::<usize>()
+                + self.local_q.len()
+                + self.replay_q.len(),
+            "queued counter out of sync"
+        );
+        self.queued == 0 && self.compute_idle()
+    }
+}
+
+/// A parked packet (destination slice off-chip): destination PE + packet.
+#[derive(Debug, Clone, Copy)]
+struct Parked {
+    pe_idx: usize,
+    pkt: Packet,
+    created: u64,
+    route_hops: u32,
+    parked_at: u64,
+}
+
+struct ClusterState {
+    resident: u16, // SliceId
+    /// In-progress swap: (finish cycle, incoming slice).
+    swap: Option<(u64, u16)>,
+    /// PE indices of this cluster.
+    pes: Vec<usize>,
+}
+
+/// Precomputed per-PE topology and timing scalars (avoids recomputing mesh
+/// neighborhoods and cloning ArchConfig every cycle).
+struct HotCfg {
+    /// Neighbor PE index per direction (N/E/S/W), usize::MAX = edge.
+    nbr: Vec<[usize; 4]>,
+    /// Cluster index per PE.
+    cluster_of: Vec<usize>,
+    t_hop: u64,
+    t_intra_lookup: u64,
+    t_inter_entry: u64,
+    input_buf_cap: usize,
+    aluin_cap: usize,
+    aluout_cap: usize,
+}
+
+impl HotCfg {
+    fn new(cfg: &crate::config::ArchConfig) -> HotCfg {
+        let mut nbr = vec![[usize::MAX; 4]; cfg.num_pes()];
+        let mut cluster_of = vec![0usize; cfg.num_pes()];
+        for i in 0..cfg.num_pes() {
+            let c = PeCoord::from_index(i, cfg);
+            cluster_of[i] = c.cluster(cfg);
+            for (d, n) in c.neighbors(cfg) {
+                nbr[i][d as usize] = n.index(cfg);
+            }
+        }
+        HotCfg {
+            nbr,
+            cluster_of,
+            t_hop: cfg.t_hop,
+            t_intra_lookup: cfg.t_intra_lookup,
+            t_inter_entry: cfg.t_inter_entry,
+            input_buf_cap: cfg.input_buf_cap,
+            aluin_cap: cfg.aluin_cap,
+            aluout_cap: cfg.aluout_cap,
+        }
+    }
+}
+
+/// The naive FLIP cycle-accurate reference simulator.
+pub struct NaiveFlipSim<'a> {
+    c: &'a CompiledGraph,
+    workload: Workload,
+    opts: SimOptions,
+    hot: HotCfg,
+    pes: Vec<PeState>,
+    clusters: Vec<ClusterState>,
+    /// credits[pe][dir] = free slots in the downstream FIFO for that link.
+    credits: Vec<[u8; 4]>,
+    attrs: Vec<u32>,
+    /// Parked packets per slice (SPM contents).
+    parked: std::collections::HashMap<u16, Vec<Parked>>,
+    /// WCC initial scatters for not-yet-resident slices.
+    pending_seeds: std::collections::HashMap<u16, Vec<(usize, u8, u32)>>,
+    now: u64,
+    act: ActivityCounts,
+    // metric accumulators
+    edges: u64,
+    delivered: u64,
+    parked_count: u64,
+    swaps: u64,
+    swap_cycles: u64,
+    wait_sum: u64,
+    aluin_depth_sum: u64,
+    busy_cycles: u64,
+    busy_sum: u64,
+    peak_par: u32,
+    trace: Vec<u16>,
+    progress_at: u64,
+}
+
+impl<'a> NaiveFlipSim<'a> {
+    pub fn new(c: &'a CompiledGraph, workload: Workload, opts: SimOptions) -> NaiveFlipSim<'a> {
+        let cfg = &c.cfg;
+        let num_pes = cfg.num_pes();
+        let num_clusters = cfg.num_clusters();
+        let mut clusters: Vec<ClusterState> = (0..num_clusters)
+            .map(|cl| ClusterState { resident: cl as u16, swap: None, pes: vec![] })
+            .collect();
+        for i in 0..num_pes {
+            let cl = PeCoord::from_index(i, cfg).cluster(cfg);
+            clusters[cl].pes.push(i);
+        }
+        NaiveFlipSim {
+            c,
+            workload,
+            opts,
+            hot: HotCfg::new(cfg),
+            pes: (0..num_pes).map(|_| PeState::new()).collect(),
+            clusters,
+            credits: vec![[0; 4]; num_pes],
+            attrs: vec![],
+            parked: Default::default(),
+            pending_seeds: Default::default(),
+            now: 0,
+            act: Default::default(),
+            edges: 0,
+            delivered: 0,
+            parked_count: 0,
+            swaps: 0,
+            swap_cycles: 0,
+            wait_sum: 0,
+            aluin_depth_sum: 0,
+            busy_cycles: 0,
+            busy_sum: 0,
+            peak_par: 0,
+            trace: vec![],
+            progress_at: 0,
+        }
+    }
+
+    fn cfg(&self) -> &crate::config::ArchConfig {
+        &self.c.cfg
+    }
+
+    fn resident_copy(&self, cluster: usize) -> u16 {
+        (self.clusters[cluster].resident as usize / self.cfg().num_clusters()) as u16
+    }
+
+    fn slice_cfg_of(&self, pe_idx: usize) -> &crate::arch::PeSliceConfig {
+        let cl = self.hot.cluster_of[pe_idx];
+        self.c.slice_cfg(self.resident_copy(cl), pe_idx)
+    }
+
+    /// Prepare initial state for a run from `source` (ignored for WCC).
+    fn seed(&mut self, source: u32) {
+        let cfg = &self.c.cfg;
+        let n = self.c.placement.slots.len();
+        let w = self.workload;
+        self.attrs = (0..n as u32).map(|v| w.init_attr(v, n)).collect();
+        // link credits = downstream input FIFO capacity
+        for pe in 0..cfg.num_pes() {
+            let coord = PeCoord::from_index(pe, cfg);
+            for (d, _) in coord.neighbors(cfg) {
+                self.credits[pe][d as usize] = cfg.input_buf_cap as u8;
+            }
+        }
+        // initial resident slice per cluster: copy 0
+        let num_clusters = cfg.num_clusters();
+        for cl in 0..num_clusters {
+            self.clusters[cl].resident = crate::compiler::Placement::slice_id(cfg, cl, 0);
+        }
+        if self.workload.single_source() {
+            // source's cluster loads the source's copy
+            let s = self.c.placement.slots[source as usize];
+            let cl = s.pe.cluster(cfg);
+            self.clusters[cl].resident = crate::compiler::Placement::slice_id(cfg, cl, s.copy);
+            // bootstrap message: distance/level 0 delivered to the source
+            let pe_idx = s.pe.index(cfg);
+            self.pes[pe_idx].aluin.push_back(AluinItem { reg: s.reg, msg: 0 });
+        } else {
+            // WCC: every vertex scatters its initial label (host preload of
+            // the ALUout buffers; non-resident slices seed on swap-in).
+            for v in 0..n as u32 {
+                let s = self.c.placement.slots[v as usize];
+                let cl = s.pe.cluster(cfg);
+                let slice = crate::compiler::Placement::slice_id(cfg, cl, s.copy);
+                let pe_idx = s.pe.index(cfg);
+                if slice == self.clusters[cl].resident {
+                    self.pes[pe_idx].aluout.push_back((s.reg, self.attrs[v as usize]));
+                } else {
+                    self.pending_seeds.entry(slice).or_default().push((
+                        pe_idx,
+                        s.reg,
+                        self.attrs[v as usize],
+                    ));
+                }
+            }
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.parked.is_empty()
+            && self.pending_seeds.is_empty()
+            && self.clusters.iter().all(|c| c.swap.is_none())
+            && self.pes.iter().all(|p| p.fully_empty())
+    }
+
+    /// Run to termination; returns the functional result and metrics.
+    pub fn run(mut self, source: u32) -> Result<RunResult, String> {
+        self.seed(source);
+        self.progress_at = 0;
+        while !self.done() {
+            if self.now >= self.opts.max_cycles {
+                return Err(format!("exceeded max_cycles={}", self.opts.max_cycles));
+            }
+            if self.now - self.progress_at > self.opts.watchdog {
+                return Err(format!(
+                    "no progress for {} cycles at cycle {} (deadlock?): {}",
+                    self.opts.watchdog,
+                    self.now,
+                    self.diag()
+                ));
+            }
+            self.step();
+        }
+        let cycles = self.now;
+        let act = self.act;
+        Ok(RunResult {
+            cycles,
+            attrs: std::mem::take(&mut self.attrs),
+            edges_traversed: self.edges,
+            sim: SimMetrics {
+                packets_delivered: self.delivered,
+                packets_parked: self.parked_count,
+                swaps: self.swaps,
+                swap_cycles: self.swap_cycles,
+                avg_parallelism: if self.busy_cycles > 0 {
+                    self.busy_sum as f64 / self.busy_cycles as f64
+                } else {
+                    0.0
+                },
+                peak_parallelism: self.peak_par,
+                avg_pkt_wait: if self.delivered > 0 {
+                    self.wait_sum as f64 / self.delivered as f64
+                } else {
+                    0.0
+                },
+                avg_aluin_depth: if cycles > 0 {
+                    self.aluin_depth_sum as f64 / (cycles * self.pes.len() as u64) as f64
+                } else {
+                    0.0
+                },
+                activity: act,
+                parallelism_trace: std::mem::take(&mut self.trace),
+            },
+        })
+    }
+
+    fn diag(&self) -> String {
+        let inflight: usize = self
+            .pes
+            .iter()
+            .map(|p| {
+                p.inbuf.iter().map(|b| b.len()).sum::<usize>() + p.local_q.len() + p.replay_q.len()
+            })
+            .sum();
+        format!(
+            "inflight={} parked={} seeds={} swaps_active={}",
+            inflight,
+            self.parked.values().map(|v| v.len()).sum::<usize>(),
+            self.pending_seeds.len(),
+            self.clusters.iter().filter(|c| c.swap.is_some()).count()
+        )
+    }
+
+    /// One cycle.
+    fn step(&mut self) {
+        let now = self.now;
+        // ---- swap engine -------------------------------------------------
+        self.step_swaps();
+        self.step_repatriate();
+        // ---- per-PE: router outputs, delivery, ALU, scatter ---------------
+        // Fast path: skip PEs with no queued packets and no compute state.
+        // Flags are re-derived between stages so same-cycle forwarding
+        // (delivery -> ALU start, ALU done -> scatter) is identical to the
+        // unconditional loop.
+        for pe_idx in 0..self.pes.len() {
+            let pe = &self.pes[pe_idx];
+            if pe.queued > 0 {
+                self.step_router(pe_idx);
+                self.step_delivery(pe_idx);
+            } else if !pe.pending_matches.is_empty() {
+                self.step_delivery(pe_idx); // drain the match microqueue
+            }
+            let pe = &self.pes[pe_idx];
+            if !matches!(pe.alu, AluState::Idle) || !pe.aluin.is_empty() {
+                self.step_alu(pe_idx);
+            }
+            if !self.pes[pe_idx].aluout.is_empty() {
+                self.step_scatter(pe_idx);
+            }
+        }
+        // ---- metrics sampling ---------------------------------------------
+        let busy = self
+            .pes
+            .iter()
+            .filter(|p| matches!(p.alu, AluState::Executing { .. }))
+            .count() as u32;
+        if busy > 0 {
+            self.busy_cycles += 1;
+            self.busy_sum += busy as u64;
+            self.peak_par = self.peak_par.max(busy);
+        }
+        if self.opts.trace_parallelism {
+            self.trace.push(busy as u16);
+        }
+        self.aluin_depth_sum +=
+            self.pes.iter().map(|p| p.aluin.len() as u64).sum::<u64>();
+        if self.clusters.iter().any(|c| c.swap.is_some()) {
+            self.swap_cycles += 1;
+        }
+        self.now = now + 1;
+    }
+
+    fn touch(&mut self) {
+        self.progress_at = self.now;
+    }
+
+    // ---- swap engine (§3.3) ----------------------------------------------
+    fn step_swaps(&mut self) {
+        let now = self.now;
+        let num_clusters = self.cfg().num_clusters();
+        for cl in 0..num_clusters {
+            // finish in-progress swap
+            if let Some((until, slice)) = self.clusters[cl].swap {
+                if until <= now {
+                    self.clusters[cl].resident = slice;
+                    self.clusters[cl].swap = None;
+                    self.swaps += 1;
+                    // replay parked packets of the new slice
+                    if let Some(list) = self.parked.remove(&slice) {
+                        for p in list {
+                            self.pes[p.pe_idx].replay_q.push_back(QPkt {
+                                pkt: p.pkt,
+                                ready_at: now,
+                                created: p.created,
+                                route_hops: p.route_hops,
+                            });
+                            self.pes[p.pe_idx].queued += 1;
+                        }
+                    }
+                    // release pending WCC seeds of the new slice
+                    if let Some(seeds) = self.pending_seeds.remove(&slice) {
+                        for (pe_idx, reg, attr) in seeds {
+                            self.pes[pe_idx].aluout.push_back((reg, attr));
+                        }
+                    }
+                    self.touch();
+                }
+                continue;
+            }
+            // consider starting a swap: cluster compute-idle + pending work
+            // for a non-resident slice of this cluster
+            let idle =
+                self.clusters[cl].pes.iter().all(|&i| self.pes[i].compute_idle());
+            if !idle {
+                continue;
+            }
+            let resident = self.clusters[cl].resident;
+            // candidate slices of this cluster (slice % num_clusters == cl),
+            // visited in ascending slice-id order so ties on the earliest
+            // pending cycle resolve deterministically (lowest slice wins) —
+            // must match the event-driven core exactly.
+            let mut cand: Vec<u16> = self
+                .parked
+                .keys()
+                .chain(self.pending_seeds.keys())
+                .copied()
+                .filter(|&s| s as usize % num_clusters == cl && s != resident)
+                .collect();
+            cand.sort_unstable();
+            cand.dedup();
+            let mut best: Option<(u64, u16)> = None; // (earliest pending, slice)
+            for slice in cand {
+                let mut earliest = self
+                    .parked
+                    .get(&slice)
+                    .map(|l| l.iter().map(|p| p.parked_at).min().unwrap_or(u64::MAX))
+                    .unwrap_or(u64::MAX);
+                if self.pending_seeds.contains_key(&slice) {
+                    earliest = 0; // seeds are pending since cycle 0
+                }
+                if best.map_or(true, |(e, _)| earliest < e) {
+                    best = Some((earliest, slice));
+                }
+            }
+            if let Some((_, slice)) = best {
+                // swap cost: write out current slice words + read in new
+                let cfg = self.cfg();
+                let out_copy = self.resident_copy(cl);
+                let in_copy = (slice as usize / num_clusters) as u16;
+                let words: usize = self.clusters[cl]
+                    .pes
+                    .iter()
+                    .map(|&i| {
+                        self.c.slice_cfg(out_copy, i).storage_words()
+                            + self.c.slice_cfg(in_copy, i).storage_words()
+                    })
+                    .sum();
+                let cost = words as u64 * cfg.t_swap_word + cfg.t_offchip_fixed;
+                self.act.swap_words += words as u64;
+                self.clusters[cl].swap = Some((now + cost, slice));
+                self.touch();
+            }
+        }
+    }
+
+    /// Packets parked for a slice that is (now) resident flow back from SPM
+    /// into the destination PE's replay queue once the ALUin has drained —
+    /// the other half of the memory-buffer escape path.
+    fn step_repatriate(&mut self) {
+        let now = self.now;
+        let aluin_cap = self.cfg().aluin_cap;
+        let num_clusters = self.cfg().num_clusters();
+        let spm_latency = 2u64;
+        for cl in 0..num_clusters {
+            if self.clusters[cl].swap.is_some() {
+                continue;
+            }
+            let resident = self.clusters[cl].resident;
+            let Some(list) = self.parked.get_mut(&resident) else { continue };
+            // drain entries whose destination ALUin has room again
+            let mut i = 0;
+            let mut moved = false;
+            while i < list.len() {
+                let p = list[i];
+                let pe = &self.pes[p.pe_idx];
+                if pe.aluin.len() < aluin_cap && pe.replay_q.len() < aluin_cap {
+                    list.swap_remove(i);
+                    self.pes[p.pe_idx].replay_q.push_back(QPkt {
+                        pkt: p.pkt,
+                        ready_at: now + spm_latency,
+                        created: p.created,
+                        route_hops: p.route_hops,
+                    });
+                    self.pes[p.pe_idx].queued += 1;
+                    moved = true;
+                } else {
+                    i += 1;
+                }
+            }
+            if list.is_empty() {
+                self.parked.remove(&resident);
+            }
+            if moved {
+                self.touch();
+            }
+        }
+    }
+
+    // ---- router: N/E/S/W outputs (one packet per output per cycle) --------
+    fn step_router(&mut self, pe_idx: usize) {
+        let now = self.now;
+        // Source-major arbitration: walk the 5 input sources once (round-
+        // robin), granting each desired output port at most once per cycle.
+        // Equivalent to per-output arbiters (one grant per output per
+        // cycle, rotating priority) at a quarter of the scan cost.
+        let mut granted = [false; 4];
+        let rr = self.pes[pe_idx].rr[0];
+        let mut grants = 0u8;
+        for k in 0..5u8 {
+            let src = ((rr + k) % 5) as usize;
+            let head = if src < 4 {
+                self.pes[pe_idx].inbuf[src].front()
+            } else {
+                self.pes[pe_idx].local_q.front()
+            };
+            let Some(q) = head else { continue };
+            if q.ready_at > now {
+                continue;
+            }
+            let Some(out_dir) = yx_route(q.pkt.dx, q.pkt.dy) else { continue };
+            let od = out_dir as usize;
+            if granted[od] || self.credits[pe_idx][od] == 0 {
+                continue;
+            }
+            let nbr_idx = self.hot.nbr[pe_idx][od];
+            debug_assert!(nbr_idx != usize::MAX, "YX routed off the mesh");
+            granted[od] = true;
+            grants += 1;
+            let q = if src < 4 {
+                let q = self.pes[pe_idx].inbuf[src].pop_front().unwrap();
+                // return a credit upstream: the sender sits in direction `src`
+                let up = self.hot.nbr[pe_idx][src];
+                self.credits[up][Dir::SIDES[src].opposite() as usize] += 1;
+                q
+            } else {
+                self.pes[pe_idx].local_q.pop_front().unwrap()
+            };
+            self.pes[pe_idx].queued -= 1;
+            self.credits[pe_idx][od] -= 1;
+            let hopped = QPkt {
+                pkt: q.pkt.hop(out_dir),
+                ready_at: now + self.hot.t_hop,
+                created: q.created,
+                route_hops: q.route_hops,
+            };
+            let in_port = out_dir.opposite() as usize;
+            self.pes[nbr_idx].inbuf[in_port].push_back(hopped);
+            self.pes[nbr_idx].queued += 1;
+            self.act.switch_grants += 1;
+            self.act.input_buf_pushes += 1;
+        }
+        if grants > 0 {
+            // rotate priority past the first granted source
+            self.pes[pe_idx].rr[0] = (rr + 1) % 5;
+            self.touch();
+        }
+    }
+
+    // ---- local delivery (slice compare, Intra-Table, ALUin) ---------------
+    fn step_delivery(&mut self, pe_idx: usize) {
+        let now = self.now;
+        if self.pes[pe_idx].deliver_busy_until > now {
+            return;
+        }
+        // Drain pending matches of the previously accepted packet first:
+        // the Intra-Table feeds ALUin one destination register per cycle.
+        // While the microqueue waits on a full ALUin we keep consuming
+        // (and parking) arriving packets so link credits always recycle —
+        // otherwise the ALUin→ALUout→scatter→NoC→delivery loop deadlocks.
+        let mut must_park = false;
+        if !self.pes[pe_idx].pending_matches.is_empty() {
+            if self.pes[pe_idx].aluin.len() < self.hot.aluin_cap {
+                let item = self.pes[pe_idx].pending_matches.pop_front().unwrap();
+                if !self.pes[pe_idx].try_coalesce(item) {
+                    self.pes[pe_idx].aluin.push_back(item);
+                }
+                self.act.aluin_pushes += 1; // edge already counted at accept
+                self.pes[pe_idx].deliver_busy_until = now + 1;
+                self.touch();
+                return;
+            }
+            must_park = true; // microqueue blocked: park anything that arrives
+        }
+        let cl = self.hot.cluster_of[pe_idx];
+        // candidate sources: replay_q (5), local_q (4), inbufs (0-3)
+        let rr = self.pes[pe_idx].rr[4];
+        let mut chosen: Option<usize> = None;
+        for k in 0..6u8 {
+            let src = ((rr + k) % 6) as usize;
+            let head = match src {
+                0..=3 => self.pes[pe_idx].inbuf[src].front(),
+                4 => self.pes[pe_idx].local_q.front(),
+                _ => self.pes[pe_idx].replay_q.front(),
+            };
+            if let Some(q) = head {
+                if q.ready_at <= now && q.pkt.arrived() {
+                    chosen = Some(src);
+                    break;
+                }
+            }
+        }
+        let Some(src) = chosen else { return };
+        let q = *match src {
+            0..=3 => self.pes[pe_idx].inbuf[src].front().unwrap(),
+            4 => self.pes[pe_idx].local_q.front().unwrap(),
+            _ => self.pes[pe_idx].replay_q.front().unwrap(),
+        };
+        self.act.slice_compares += 1;
+        // swap in progress, slice mismatch, or blocked microqueue -> park
+        let swapping = self.clusters[cl].swap.is_some();
+        let resident = self.clusters[cl].resident;
+        if swapping || must_park || q.pkt.slice != resident {
+            self.pop_delivery_src(pe_idx, src);
+            self.parked.entry(q.pkt.slice).or_default().push(Parked {
+                pe_idx,
+                pkt: q.pkt,
+                created: q.created,
+                route_hops: q.route_hops,
+                parked_at: now,
+            });
+            self.act.membuf_pushes += 1;
+            self.parked_count += 1;
+            self.pes[pe_idx].deliver_busy_until = now + 1;
+            self.pes[pe_idx].rr[4] = ((src as u8) + 1) % 6;
+            self.touch();
+            return;
+        }
+        // Intra-Table lookup (zero-copy bucket walk; borrow from the
+        // compiled graph reference, not &self, so PE state stays mutable)
+        let compiled: &CompiledGraph = self.c;
+        let copy = self.resident_copy(cl);
+        let bucket = compiled.slice_cfg(copy, pe_idx).intra.bucket(q.pkt.src_vid);
+        let walked = bucket.len().max(1) as u64;
+        let src_vid = q.pkt.src_vid;
+        let n_matches = bucket.iter().filter(|e| e.src_vid == src_vid).count();
+        if n_matches == 0 {
+            // no edge into this slice config (can happen transiently after
+            // re-route of parked packets) — drop with accounting
+            self.pop_delivery_src(pe_idx, src);
+            self.act.intra_lookups += 1;
+            self.act.intra_walked += walked;
+            self.pes[pe_idx].deliver_busy_until = now + self.hot.t_intra_lookup;
+            self.pes[pe_idx].rr[4] = ((src as u8) + 1) % 6;
+            self.touch();
+            return;
+        }
+        // Accept the packet only if ALUin has at least one free slot; a
+        // full ALUin *parks* it in the memory buffer instead of stalling
+        // the router — the escape path that keeps the NoC deadlock-free
+        // (§3.1: "the packet will be pushed into either ALUin buffer or
+        // Memory buffer"). Accepted packets stash their matches in the
+        // pending microqueue (one register delivered per cycle), which is
+        // guaranteed to drain through the ALU.
+        if self.pes[pe_idx].aluin.len() >= self.hot.aluin_cap {
+            self.pop_delivery_src(pe_idx, src);
+            self.parked.entry(q.pkt.slice).or_default().push(Parked {
+                pe_idx,
+                pkt: q.pkt,
+                created: q.created,
+                route_hops: q.route_hops,
+                parked_at: now,
+            });
+            self.act.membuf_pushes += 1;
+            self.parked_count += 1;
+            self.pes[pe_idx].deliver_busy_until = now + 1;
+            self.pes[pe_idx].rr[4] = ((src as u8) + 1) % 6;
+            self.touch();
+            return;
+        }
+        self.pop_delivery_src(pe_idx, src);
+        self.act.intra_lookups += 1;
+        self.act.intra_walked += walked;
+        let mut first = true;
+        for mi in 0..bucket.len() {
+            let m = bucket[mi];
+            if m.src_vid != src_vid {
+                continue;
+            }
+            let msg = q.pkt.attr.saturating_add(self.workload.edge_weight(m.weight)).min(INF - 1);
+            let item = AluinItem { reg: m.dst_reg, msg };
+            if self.pes[pe_idx].try_coalesce(item) {
+                // merged with a queued message for the same register
+                self.edges += 1;
+                continue;
+            }
+            if first {
+                self.pes[pe_idx].aluin.push_back(item);
+                self.act.aluin_pushes += 1;
+                self.edges += 1;
+                first = false;
+            } else {
+                self.pes[pe_idx].pending_matches.push_back(item);
+                self.edges += 1;
+            }
+        }
+        self.delivered += 1;
+        let pure = q.route_hops as u64 * self.hot.t_hop;
+        let latency = now.saturating_sub(q.created);
+        self.wait_sum += latency.saturating_sub(pure);
+        self.pes[pe_idx].deliver_busy_until = now + self.hot.t_intra_lookup;
+        self.pes[pe_idx].rr[4] = ((src as u8) + 1) % 6;
+        self.touch();
+    }
+
+    fn pop_delivery_src(&mut self, pe_idx: usize, src: usize) {
+        self.pes[pe_idx].queued -= 1;
+        match src {
+            0..=3 => {
+                self.pes[pe_idx].inbuf[src].pop_front();
+                let up = self.hot.nbr[pe_idx][src];
+                self.credits[up][Dir::SIDES[src].opposite() as usize] += 1;
+            }
+            4 => {
+                self.pes[pe_idx].local_q.pop_front();
+            }
+            _ => {
+                self.pes[pe_idx].replay_q.pop_front();
+            }
+        }
+    }
+
+    // ---- ALU ---------------------------------------------------------------
+    fn step_alu(&mut self, pe_idx: usize) {
+        let now = self.now;
+        match self.pes[pe_idx].alu {
+            AluState::Executing { until, reg, new_attr, scatter } => {
+                if until <= now {
+                    // write back
+                    let vid = self.slice_cfg_of(pe_idx).vertices[reg as usize];
+                    debug_assert!(vid != u32::MAX);
+                    if self.attrs[vid as usize] != new_attr {
+                        self.attrs[vid as usize] = new_attr;
+                        self.act.drf_writes += 1;
+                    }
+                    if scatter {
+                        if self.pes[pe_idx].aluout.len() < self.hot.aluout_cap {
+                            self.pes[pe_idx].aluout.push_back((reg, new_attr));
+                            self.act.aluout_pushes += 1;
+                            self.pes[pe_idx].alu = AluState::Idle;
+                        } else {
+                            self.pes[pe_idx].alu = AluState::WaitOut { reg, attr: new_attr };
+                        }
+                    } else {
+                        self.pes[pe_idx].alu = AluState::Idle;
+                    }
+                    self.touch();
+                } else {
+                    return;
+                }
+            }
+            AluState::WaitOut { reg, attr } => {
+                if self.pes[pe_idx].aluout.len() < self.hot.aluout_cap {
+                    self.pes[pe_idx].aluout.push_back((reg, attr));
+                    self.act.aluout_pushes += 1;
+                    self.pes[pe_idx].alu = AluState::Idle;
+                    self.touch();
+                } else {
+                    return;
+                }
+            }
+            AluState::Idle => {}
+        }
+        // start next item
+        if !matches!(self.pes[pe_idx].alu, AluState::Idle) {
+            return;
+        }
+        let Some(item) = self.pes[pe_idx].aluin.pop_front() else { return };
+        let vid = self.slice_cfg_of(pe_idx).vertices[item.reg as usize];
+        debug_assert!(vid != u32::MAX, "ALUin item for empty DRF register");
+        let attr = self.attrs[vid as usize];
+        let prog = self.workload.program();
+        let (res, new_attr) = isa::execute(prog, item.msg, attr);
+        self.act.alu_ops += res.cycles;
+        self.act.im_fetches += res.cycles;
+        self.act.drf_reads += 1;
+        self.pes[pe_idx].alu = AluState::Executing {
+            until: now + res.cycles,
+            reg: item.reg,
+            new_attr,
+            scatter: res.scatter.is_some(),
+        };
+        self.touch();
+    }
+
+    // ---- scatter (Inter-Table walk, farthest-first order) -------------------
+    fn step_scatter(&mut self, pe_idx: usize) {
+        let now = self.now;
+        if self.pes[pe_idx].scatter_next_at > now {
+            return;
+        }
+        let Some(&(reg, attr)) = self.pes[pe_idx].aluout.front() else { return };
+        let slice_cfg = self.slice_cfg_of(pe_idx);
+        let list = &slice_cfg.inter[reg as usize];
+        let pos = self.pes[pe_idx].scatter_pos;
+        if pos >= list.len() {
+            self.pes[pe_idx].aluout.pop_front();
+            self.pes[pe_idx].scatter_pos = 0;
+            self.touch();
+            return;
+        }
+        let entry = list[pos];
+        let vid = slice_cfg.vertices[reg as usize];
+        if self.pes[pe_idx].local_q.len() >= self.hot.input_buf_cap {
+            return; // injection stall
+        }
+        let pkt = Packet { src_vid: vid, attr, dx: entry.dx, dy: entry.dy, slice: entry.slice };
+        let hops = entry.hops();
+        self.pes[pe_idx].local_q.push_back(QPkt {
+            pkt,
+            ready_at: now + 1,
+            created: now,
+            route_hops: hops,
+        });
+        self.pes[pe_idx].queued += 1;
+        self.act.inter_walked += 1;
+        self.pes[pe_idx].scatter_pos += 1;
+        self.pes[pe_idx].scatter_next_at = now + self.hot.t_inter_entry;
+        self.touch();
+    }
+}
+
+/// Run the naive reference stepper for one workload invocation.
+pub fn run(
+    c: &CompiledGraph,
+    workload: Workload,
+    source: u32,
+    opts: &SimOptions,
+) -> Result<RunResult, String> {
+    NaiveFlipSim::new(c, workload, opts.clone()).run(source)
+}

@@ -52,6 +52,65 @@ fn prop_sim_matches_reference_on_random_graphs() {
 }
 
 #[test]
+fn prop_event_core_equals_naive_stepper() {
+    // The tentpole invariant of the event-driven scheduler (active-set
+    // sweep + idle-cycle fast-forward + ring arenas): cycle-for-cycle
+    // equivalence with the retained naive reference stepper — identical
+    // cycles, attrs, edges_traversed and every SimMetrics counter
+    // (including the activity counts the energy model consumes).
+    check("event_core_equals_naive", 30, |rng| {
+        let directed = rng.chance(0.5);
+        let g = random_graph(rng, 8, 96, directed);
+        let w = random_workload(rng);
+        let view = view_for(w, &g);
+        let cfg = ArchConfig::default();
+        let c = compile(&view, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() });
+        let src = rng.below(g.num_vertices() as u64) as u32;
+        let opts = SimOptions { trace_parallelism: rng.chance(0.3), ..Default::default() };
+        let fast = flipsim::run(&c, w, src, &opts).map_err(|e| format!("event core: {e}"))?;
+        let naive = flip::sim::naive::run(&c, w, src, &opts)
+            .map_err(|e| format!("naive core: {e}"))?;
+        prop_assert!(fast.cycles == naive.cycles, "cycles {} != {}", fast.cycles, naive.cycles);
+        prop_assert!(fast.attrs == naive.attrs, "attrs diverge ({})", w.name());
+        prop_assert!(
+            fast.edges_traversed == naive.edges_traversed,
+            "edges {} != {}",
+            fast.edges_traversed,
+            naive.edges_traversed
+        );
+        prop_assert!(
+            fast.sim == naive.sim,
+            "metrics diverge ({}): fast {:?} naive {:?}",
+            w.name(),
+            fast.sim,
+            naive.sim
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_core_equals_naive_with_swapping() {
+    // same invariant across the swap engine / SPM parking path: graphs
+    // larger than one array copy, where the fast-forward saves the most
+    check("event_core_equals_naive_swapping", 6, |rng| {
+        let g = random_graph(rng, 260, 400, false);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() });
+        prop_assert!(c.placement.num_copies >= 2, "expected replication");
+        let opts =
+            SimOptions { max_cycles: 1_000_000_000, watchdog: 5_000_000, ..Default::default() };
+        let fast = flipsim::run(&c, Workload::Bfs, 0, &opts).map_err(|e| e.to_string())?;
+        let naive =
+            flip::sim::naive::run(&c, Workload::Bfs, 0, &opts).map_err(|e| e.to_string())?;
+        prop_assert!(fast.cycles == naive.cycles, "cycles {} != {}", fast.cycles, naive.cycles);
+        prop_assert!(fast.attrs == naive.attrs, "attrs diverge under swapping");
+        prop_assert!(fast.sim == naive.sim, "metrics diverge under swapping");
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_placement_structurally_valid() {
     check("placement_valid", 40, |rng| {
         let directed = rng.chance(0.5);

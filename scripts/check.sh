@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Repo gate: format, lint, release build, tests. Run from anywhere.
+# The default build is dependency-free (no network needed); the PJRT
+# golden tests skip visibly unless artifacts + the `pjrt` feature exist.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "all checks passed"
