@@ -14,7 +14,7 @@ use flip::runtime::{default_artifact_dir, GoldenEngine};
 use flip::sim::{flip as flipsim, modulo, opcentric};
 use flip::workloads::{dfgs, Workload};
 
-fn main() -> anyhow::Result<()> {
+fn main() {
     let cfg = ArchConfig::default();
     let g = generate::road_network(64, 146, 166, 21);
 
@@ -50,23 +50,27 @@ fn main() -> anyhow::Result<()> {
 
     // ---- regular-kernel acceleration via the AOT path -------------------
     // The dense relax step (Pallas kernel lowered by python/compile/aot.py)
-    // runs as a classic compute kernel through PJRT.
-    let engine = GoldenEngine::load(&default_artifact_dir())?;
-    let n = 256usize;
-    let mut w = vec![f32::INFINITY; n * n];
-    for i in 0..n - 1 {
-        w[i * n + i + 1] = 1.0;
+    // runs as a classic compute kernel through PJRT. Skips visibly in the
+    // dependency-free default build (no `pjrt` feature / no artifacts).
+    match GoldenEngine::load(&default_artifact_dir()) {
+        Ok(engine) => {
+            let n = 256usize;
+            let mut w = vec![f32::INFINITY; n * n];
+            for i in 0..n - 1 {
+                w[i * n + i + 1] = 1.0;
+            }
+            let mut d0 = vec![f32::INFINITY; n];
+            d0[0] = 0.0;
+            let t0 = std::time::Instant::now();
+            let out = engine.relax_k8(&d0, &w, n).expect("relax_k8");
+            println!(
+                "AOT kernel    : relax_k8 (256x256 dense, Pallas->HLO->PJRT) in {:.2} ms, d[8]={}",
+                t0.elapsed().as_secs_f64() * 1e3,
+                out[8]
+            );
+            assert_eq!(out[8], 8.0);
+        }
+        Err(msg) => println!("AOT kernel    : SKIP ({msg})"),
     }
-    let mut d0 = vec![f32::INFINITY; n];
-    d0[0] = 0.0;
-    let t0 = std::time::Instant::now();
-    let out = engine.relax_k8(&d0, &w, n)?;
-    println!(
-        "AOT kernel    : relax_k8 (256x256 dense, Pallas->HLO->PJRT) in {:.2} ms, d[8]={}",
-        t0.elapsed().as_secs_f64() * 1e3,
-        out[8]
-    );
-    assert_eq!(out[8], 8.0);
     println!("dual_mode OK");
-    Ok(())
 }

@@ -1,4 +1,5 @@
-//! End-to-end validation driver (DESIGN.md §6): proves all layers compose.
+//! End-to-end validation driver (DESIGN.md §1 layer map): proves all
+//! layers compose.
 //!
 //! For every Table-4 on-chip dataset group × {BFS, SSSP, WCC} × several
 //! sources, plus an oversized swap-exercising graph:
@@ -19,16 +20,27 @@ use flip::runtime::{default_artifact_dir, GoldenEngine};
 use flip::sim::flip::SimOptions;
 use flip::workloads::Workload;
 
-fn main() -> anyhow::Result<()> {
+fn main() {
     let mut env = ExpEnv::quick();
     env.graphs_per_group = 3;
     env.sources_per_graph = 2;
-    let engine = GoldenEngine::load(&default_artifact_dir())?;
-    println!(
-        "PJRT golden model: platform={}, artifact sizes {:?}\n",
-        engine.platform(),
-        engine.sizes
-    );
+    // The PJRT golden model is optional: the dependency-free default build
+    // has no `pjrt` feature, so validation against it skips visibly and
+    // the native Rust references remain the ground truth.
+    let engine = match GoldenEngine::load(&default_artifact_dir()) {
+        Ok(e) => {
+            println!(
+                "PJRT golden model: platform={}, artifact sizes {:?}\n",
+                e.platform(),
+                e.sizes
+            );
+            Some(e)
+        }
+        Err(msg) => {
+            println!("PJRT golden model: SKIP ({msg})\n");
+            None
+        }
+    };
     let emodel = harness::calibrated_energy(&env);
 
     let mut table = Table::new(
@@ -52,9 +64,11 @@ fn main() -> anyhow::Result<()> {
                     let r = harness::run_flip(&pair, w, src);
                     let view = if w.needs_undirected() { &pair.wcc_view } else { &pair.graph };
                     assert_eq!(r.attrs, w.reference(view, src), "native reference mismatch");
-                    if let Some(golden) = engine.golden_attrs(g, w, src)? {
-                        assert_eq!(r.attrs, golden, "PJRT golden mismatch");
-                        golden_checked += 1;
+                    if let Some(eng) = &engine {
+                        if let Some(golden) = eng.golden_attrs(g, w, src).expect("golden model") {
+                            assert_eq!(r.attrs, golden, "PJRT golden mismatch");
+                            golden_checked += 1;
+                        }
                     }
                     cycles.push(r.cycles as f64);
                     mteps.push(r.mteps(env.cfg.freq_mhz));
@@ -115,8 +129,8 @@ fn main() -> anyhow::Result<()> {
         ("golden_runs".into(), Json::Num(golden_runs as f64)),
         ("cells".into(), Json::Arr(json_rows)),
     ]);
-    let path = flip::report::write_report("e2e_validation.json", &json.render())?;
+    let path = flip::report::write_report("e2e_validation.json", &json.render())
+        .expect("write report");
     println!("[machine-readable results: {}]", path.display());
     println!("e2e_validation OK");
-    Ok(())
 }

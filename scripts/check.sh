@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# Repo gate: format, lint, release build, tests. Run from anywhere.
-# The default build is dependency-free (no network needed); the PJRT
-# golden tests skip visibly unless artifacts + the `pjrt` feature exist.
+# Repo gate: format, lint, release build, docs, examples, tests. Run from
+# anywhere. The default build is dependency-free (no network needed); the
+# PJRT golden tests skip visibly unless artifacts + the `pjrt` feature
+# exist.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -14,6 +15,12 @@ cargo clippy --all-targets -- -D warnings
 
 echo "== cargo build --release =="
 cargo build --release
+
+echo "== cargo doc --no-deps (warnings are errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+echo "== cargo build --examples =="
+cargo build --examples
 
 echo "== cargo test -q =="
 cargo test -q
