@@ -2,13 +2,16 @@
 //! devices and navigation in small robots"): map a city-district road
 //! network once, then serve many shortest-path queries from different
 //! start points *without recompiling* — only the start vertex changes.
+//! Part two upgrades the same mapped fabric to goal-directed A*/ALT
+//! queries on the vertex-program layer (`flip::workloads::navigation`):
+//! identical distances, fewer packets.
 
 use flip::compiler::{compile, CompileOpts};
 use flip::config::ArchConfig;
 use flip::graph::{generate, reference, INF};
 use flip::sim::flip as flipsim;
 use flip::util::Rng;
-use flip::workloads::Workload;
+use flip::workloads::{navigation, Workload};
 
 fn main() {
     // A district road network the size of the paper's LRN graphs.
@@ -52,6 +55,43 @@ fn main() {
         seconds * 1e3,
         cfg.freq_mhz,
         total_edges as f64 / 1e6 / seconds
+    );
+
+    // Same fabric, same mapping — but point-to-point queries only need the
+    // corridor toward the destination. The A* vertex program prunes the
+    // frontier with an ALT landmark bound (g + h <= B), so each query
+    // delivers a fraction of the SSSP flood at the exact same distance.
+    println!("\ngoal-directed replan (A* vertex program, same mapping):");
+    // ALT preprocessing once per graph (like the mapping), reused by
+    // every query below.
+    let landmarks = navigation::Landmarks::build(&g, 4);
+    let mut rng = Rng::new(5);
+    let (mut astar_pkts, mut sssp_pkts) = (0u64, 0u64);
+    for q in 0..8 {
+        let start = rng.below(g.num_vertices() as u64) as u32;
+        let full = flipsim::run(&compiled, Workload::Sssp, start, &flipsim::SimOptions::default())
+            .expect("sssp");
+        let p = navigation::plan(
+            &compiled,
+            &landmarks,
+            start,
+            destination,
+            &flipsim::SimOptions::default(),
+        )
+        .expect("plan");
+        assert_eq!(p.distance, full.attrs[destination as usize], "query {q} diverged");
+        astar_pkts += p.run.sim.packets_delivered;
+        sssp_pkts += full.sim.packets_delivered;
+        println!(
+            "query {q}: start {start:>3} -> dest {destination}: distance {:<10} {:>5} pkts (SSSP floods {})",
+            if p.distance == INF { "unreachable".to_string() } else { p.distance.to_string() },
+            p.run.sim.packets_delivered,
+            full.sim.packets_delivered
+        );
+    }
+    println!(
+        "A* delivered {astar_pkts} packets vs {sssp_pkts} for SSSP ({:.0}% pruned)",
+        (1.0 - astar_pkts as f64 / sssp_pkts.max(1) as f64) * 100.0
     );
     println!("navigation OK");
 }

@@ -2,20 +2,40 @@
 //!
 //! Every PE stores the same tiny program in its Instruction Memory and runs
 //! it once per delivered packet.  The incoming message has already been
-//! combined with the edge weight by the Intra-Table stage (§3.1 "Each
+//! combined with the edge attribute by the Intra-Table stage (§3.1 "Each
 //! incoming packet is processed and updated with edge attributes before
-//! being fed to ALU"), so programs see `msg = attr_u ⊕ w(u,v)`.
+//! being fed to ALU"), so programs see `msg` as produced by
+//! [`crate::workloads::program::VertexProgram::combine`].
 //!
-//! Instruction counts match §5.1 exactly:
+//! Instruction counts for the paper's workloads match §5.1 exactly:
 //!   BFS  5 (update) / 4 (no update)
 //!   SSSP 5 / 4
 //!   WCC  4 / 2
+//!
+//! ## Extended ISA (DESIGN.md §5)
+//!
+//! The original three programs only needed min-relaxation over `(msg,
+//! acc)`. The pluggable [`crate::workloads::program::VertexProgram`] layer
+//! adds a small set of orthogonal instructions so new workloads express
+//! their per-message step in the same machine:
+//!
+//! * accumulation ([`Instr::Add`]) — PageRank's wrapping rank sums;
+//! * a per-vertex auxiliary constant `aux` ([`Instr::AddAuxSat`]) and a
+//!   per-run bound register ([`Instr::HaltGtBound`]) — A*'s `g + h(v) ≤ B`
+//!   frontier pruning;
+//! * small-constant compares, branches and moves ([`Instr::HaltMsgGe`],
+//!   [`Instr::HaltAccLe`], [`Instr::BrMsgEq`], [`Instr::SetMsg`],
+//!   [`Instr::DecAccToMsg`]) — MIS's decision automaton.
+//!
+//! `aux` and `bound` are supplied per execution through [`ExecCtx`]; the
+//! classic programs ignore them, so their cycle counts and results are
+//! bit-identical to the pre-trait implementation.
 
 /// One instruction. `acc` is the DRF attribute loaded by `Load`; `msg` is
-/// the weighted incoming message.
+/// the combined incoming message.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Instr {
-    /// acc = DRF[reg] (the destination vertex's current attribute).
+    /// acc = DRF\[reg\] (the destination vertex's current attribute).
     Load,
     /// msg = min(msg, acc).
     Min,
@@ -24,12 +44,53 @@ pub enum Instr {
     /// If msg >= acc, halt immediately (fused compare+halt, WCC's 2-cycle
     /// no-update path).
     CmpHaltGe,
-    /// DRF[reg] = msg.
+    /// DRF\[reg\] = msg.
     Store,
-    /// Emit (vid, msg) to the ALUout buffer and halt.
+    /// Emit the stored attribute to the ALUout buffer and halt.
     ScatterHalt,
     /// Stop.
     Halt,
+    // ---- extended ISA (vertex-program layer, DESIGN.md §5) ---------------
+    /// msg = msg ⊞ acc (wrapping add — PageRank's order-independent sums).
+    Add,
+    /// msg = msg ⊕ aux (saturating add of the per-vertex auxiliary
+    /// constant; A* computes `f = g + h(v)` here).
+    AddAuxSat,
+    /// If msg > the per-run bound register, halt (A* frontier pruning:
+    /// the attribute was already stored, only the scatter is suppressed).
+    HaltGtBound,
+    /// If msg >= the immediate, halt (MIS discards non-decision messages).
+    HaltMsgGe(u8),
+    /// If acc <= the immediate, halt (MIS ignores messages to decided
+    /// vertices).
+    HaltAccLe(u8),
+    /// If msg == the first immediate, jump to the second (MIS branches on
+    /// the dominator's decision).
+    BrMsgEq(u8, u8),
+    /// msg = the immediate (MIS materializes its IN/OUT encoding).
+    SetMsg(u8),
+    /// msg = acc - 1 (wrapping; MIS decrements its undecided-dominator
+    /// counter).
+    DecAccToMsg,
+}
+
+/// Per-execution context for the extended ISA: the per-vertex auxiliary
+/// constant (a second DRF lane, e.g. A*'s heuristic `h(v)`) and the
+/// per-run bound register (e.g. A*'s route budget `B`). The classic
+/// programs never read either; [`ExecCtx::default`] supplies neutral
+/// values.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecCtx {
+    /// Per-vertex auxiliary constant (second DRF lane).
+    pub aux: u32,
+    /// Per-run bound register.
+    pub bound: u32,
+}
+
+impl Default for ExecCtx {
+    fn default() -> Self {
+        ExecCtx { aux: 0, bound: u32::MAX }
+    }
 }
 
 /// Result of running a vertex program for one delivered message.
@@ -41,9 +102,9 @@ pub struct ExecResult {
     pub scatter: Option<u32>,
 }
 
-/// Execute `prog` with message `msg` against attribute `attr`.
+/// Execute `prog` with message `msg` against attribute `attr` under `ctx`.
 /// Returns the result and the new attribute value.
-pub fn execute(prog: &[Instr], msg: u32, attr: u32) -> (ExecResult, u32) {
+pub fn execute(prog: &[Instr], msg: u32, attr: u32, ctx: ExecCtx) -> (ExecResult, u32) {
     let mut acc = 0u32;
     let mut m = msg;
     let mut new_attr = attr;
@@ -68,10 +129,35 @@ pub fn execute(prog: &[Instr], msg: u32, attr: u32) -> (ExecResult, u32) {
             }
             Instr::Store => new_attr = m,
             Instr::ScatterHalt => {
-                scatter = Some(m);
+                scatter = Some(new_attr);
                 break;
             }
             Instr::Halt => break,
+            Instr::Add => m = m.wrapping_add(acc),
+            Instr::AddAuxSat => m = m.saturating_add(ctx.aux),
+            Instr::HaltGtBound => {
+                if m > ctx.bound {
+                    break;
+                }
+            }
+            Instr::HaltMsgGe(k) => {
+                if m >= k as u32 {
+                    break;
+                }
+            }
+            Instr::HaltAccLe(k) => {
+                if acc <= k as u32 {
+                    break;
+                }
+            }
+            Instr::BrMsgEq(k, target) => {
+                if m == k as u32 {
+                    pc = target as usize;
+                    continue;
+                }
+            }
+            Instr::SetMsg(k) => m = k as u32,
+            Instr::DecAccToMsg => m = acc.wrapping_sub(1),
         }
         pc += 1;
     }
@@ -93,14 +179,57 @@ pub const PROG_RELAX: &[Instr] = &[
 /// Load, CmpHaltGe, Store, ScatterHalt.
 pub const PROG_WCC: &[Instr] = &[Instr::Load, Instr::CmpHaltGe, Instr::Store, Instr::ScatterHalt];
 
+/// PageRank round program (4 instructions per delivered contribution):
+/// accumulate the incoming rank mass into the attribute, never scatter —
+/// rounds are host-synchronized ([`crate::workloads::pagerank`]).
+pub const PROG_PAGERANK: &[Instr] = &[Instr::Load, Instr::Add, Instr::Store, Instr::Halt];
+
+/// A* / ALT navigation program (7 instructions with update+scatter, 6 with
+/// update pruned by the bound, 4 without update): SSSP relaxation with a
+/// goal-directed scatter guard `g + h(v) ≤ B`.
+pub const PROG_ASTAR: &[Instr] = &[
+    Instr::Load,
+    Instr::Min,
+    Instr::CmpBrGe(7),
+    Instr::Store,
+    Instr::AddAuxSat,
+    Instr::HaltGtBound,
+    Instr::ScatterHalt,
+    Instr::Halt,
+];
+
+/// MIS decision automaton (see [`crate::workloads::mis`] for the attribute
+/// and message encodings). Paths: ignore 1 cycle, already-decided 3,
+/// become-OUT 7, decrement 8, become-IN 9.
+pub const PROG_MIS: &[Instr] = &[
+    Instr::HaltMsgGe(2),  // 0: not a dominator decision — discard
+    Instr::Load,          // 1
+    Instr::HaltAccLe(1),  // 2: this vertex already decided
+    Instr::BrMsgEq(1, 7), // 3: dominator went OUT — decrement path
+    Instr::SetMsg(0),     // 4: dominator is IN — become OUT
+    Instr::Store,         // 5
+    Instr::ScatterHalt,   // 6: announce OUT
+    Instr::DecAccToMsg,   // 7: one fewer undecided dominator
+    Instr::BrMsgEq(2, 11), // 8: counter hit zero — become IN
+    Instr::Store,         // 9: still waiting on dominators
+    Instr::Halt,          // 10
+    Instr::SetMsg(1),     // 11
+    Instr::Store,         // 12
+    Instr::ScatterHalt,   // 13: announce IN
+];
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn exec(prog: &[Instr], msg: u32, attr: u32) -> (ExecResult, u32) {
+        execute(prog, msg, attr, ExecCtx::default())
+    }
+
     #[test]
     fn relax_update_path_is_5_cycles() {
         // attr=10, msg=4 -> update to 4, scatter
-        let (r, attr) = execute(PROG_RELAX, 4, 10);
+        let (r, attr) = exec(PROG_RELAX, 4, 10);
         assert_eq!(r.cycles, 5);
         assert_eq!(r.scatter, Some(4));
         assert_eq!(attr, 4);
@@ -108,7 +237,7 @@ mod tests {
 
     #[test]
     fn relax_noupdate_path_is_4_cycles() {
-        let (r, attr) = execute(PROG_RELAX, 10, 4);
+        let (r, attr) = exec(PROG_RELAX, 10, 4);
         assert_eq!(r.cycles, 4);
         assert_eq!(r.scatter, None);
         assert_eq!(attr, 4);
@@ -116,7 +245,7 @@ mod tests {
 
     #[test]
     fn relax_equal_is_noupdate() {
-        let (r, attr) = execute(PROG_RELAX, 4, 4);
+        let (r, attr) = exec(PROG_RELAX, 4, 4);
         assert_eq!(r.cycles, 4);
         assert_eq!(r.scatter, None);
         assert_eq!(attr, 4);
@@ -124,7 +253,7 @@ mod tests {
 
     #[test]
     fn wcc_update_path_is_4_cycles() {
-        let (r, attr) = execute(PROG_WCC, 2, 9);
+        let (r, attr) = exec(PROG_WCC, 2, 9);
         assert_eq!(r.cycles, 4);
         assert_eq!(r.scatter, Some(2));
         assert_eq!(attr, 2);
@@ -132,7 +261,7 @@ mod tests {
 
     #[test]
     fn wcc_noupdate_path_is_2_cycles() {
-        let (r, attr) = execute(PROG_WCC, 9, 2);
+        let (r, attr) = exec(PROG_WCC, 9, 2);
         assert_eq!(r.cycles, 2);
         assert_eq!(r.scatter, None);
         assert_eq!(attr, 2);
@@ -140,9 +269,97 @@ mod tests {
 
     #[test]
     fn inf_attr_always_updates() {
-        let (r, attr) = execute(PROG_RELAX, 0, u32::MAX);
+        let (r, attr) = exec(PROG_RELAX, 0, u32::MAX);
         assert_eq!(r.scatter, Some(0));
         assert_eq!(attr, 0);
         assert_eq!(r.cycles, 5);
+    }
+
+    #[test]
+    fn pagerank_accumulates_without_scatter() {
+        let (r, attr) = exec(PROG_PAGERANK, 100, 7);
+        assert_eq!(attr, 107);
+        assert_eq!(r.scatter, None);
+        assert_eq!(r.cycles, 4);
+        // wrapping accumulation is total
+        let (_, attr) = exec(PROG_PAGERANK, u32::MAX, 2);
+        assert_eq!(attr, 1);
+    }
+
+    #[test]
+    fn astar_scatters_g_not_f() {
+        // attr=INF, msg g=10, h=5, bound=100: update, f=15 <= B, scatter g
+        let ctx = ExecCtx { aux: 5, bound: 100 };
+        let (r, attr) = execute(PROG_ASTAR, 10, u32::MAX, ctx);
+        assert_eq!(attr, 10);
+        assert_eq!(r.scatter, Some(10), "scatter carries stored g, not f");
+        assert_eq!(r.cycles, 7);
+    }
+
+    #[test]
+    fn astar_prunes_beyond_bound() {
+        // update happens but f = 10+5 > 12: attribute stored, no scatter
+        let ctx = ExecCtx { aux: 5, bound: 12 };
+        let (r, attr) = execute(PROG_ASTAR, 10, u32::MAX, ctx);
+        assert_eq!(attr, 10);
+        assert_eq!(r.scatter, None);
+        assert_eq!(r.cycles, 6);
+    }
+
+    #[test]
+    fn astar_noupdate_matches_sssp_cost() {
+        let ctx = ExecCtx { aux: 5, bound: 100 };
+        let (r, attr) = execute(PROG_ASTAR, 10, 4, ctx);
+        assert_eq!(attr, 4);
+        assert_eq!(r.scatter, None);
+        assert_eq!(r.cycles, 4);
+    }
+
+    #[test]
+    fn mis_ignores_non_decisions() {
+        // msg >= 2 is not a decision: 1-cycle discard, no state change
+        let (r, attr) = exec(PROG_MIS, u32::MAX, 5);
+        assert_eq!(attr, 5);
+        assert_eq!(r.scatter, None);
+        assert_eq!(r.cycles, 1);
+    }
+
+    #[test]
+    fn mis_in_from_dominator_means_out() {
+        // undecided (counter 1 -> attr 3), dominator announced IN (msg 0)
+        let (r, attr) = exec(PROG_MIS, 0, 3);
+        assert_eq!(attr, 0, "vertex goes OUT");
+        assert_eq!(r.scatter, Some(0));
+        assert_eq!(r.cycles, 7);
+    }
+
+    #[test]
+    fn mis_last_out_dominator_means_in() {
+        // one undecided dominator left (attr 3), it announces OUT (msg 1)
+        let (r, attr) = exec(PROG_MIS, 1, 3);
+        assert_eq!(attr, 1, "vertex joins the MIS");
+        assert_eq!(r.scatter, Some(1));
+        assert_eq!(r.cycles, 9);
+    }
+
+    #[test]
+    fn mis_decrement_keeps_waiting() {
+        // two undecided dominators (attr 4), one announces OUT
+        let (r, attr) = exec(PROG_MIS, 1, 4);
+        assert_eq!(attr, 3, "counter decremented, still undecided");
+        assert_eq!(r.scatter, None);
+        assert_eq!(r.cycles, 8);
+    }
+
+    #[test]
+    fn mis_decided_vertices_are_inert() {
+        for decided in [0u32, 1] {
+            for msg in [0u32, 1] {
+                let (r, attr) = exec(PROG_MIS, msg, decided);
+                assert_eq!(attr, decided);
+                assert_eq!(r.scatter, None);
+                assert_eq!(r.cycles, 3);
+            }
+        }
     }
 }

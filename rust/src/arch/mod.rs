@@ -13,16 +13,20 @@ use crate::config::ArchConfig;
 /// PE coordinate on the mesh. `x` grows east, `y` grows south.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct PeCoord {
+    /// Column (grows east).
     pub x: u8,
+    /// Row (grows south).
     pub y: u8,
 }
 
 impl PeCoord {
+    /// Row-major linear index of this PE.
     #[inline]
     pub fn index(self, cfg: &ArchConfig) -> usize {
         self.y as usize * cfg.array_w + self.x as usize
     }
 
+    /// Coordinate of the `i`-th PE (row-major inverse of [`PeCoord::index`]).
     #[inline]
     pub fn from_index(i: usize, cfg: &ArchConfig) -> PeCoord {
         PeCoord { x: (i % cfg.array_w) as u8, y: (i / cfg.array_w) as u8 }
@@ -66,16 +70,22 @@ impl PeCoord {
 /// Mesh link direction, also used as input/output port index.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dir {
+    /// Towards smaller `y`.
     North = 0,
+    /// Towards larger `x`.
     East = 1,
+    /// Towards larger `y`.
     South = 2,
+    /// Towards smaller `x`.
     West = 3,
     /// The PE's own injection/delivery port.
     Local = 4,
 }
 
 impl Dir {
+    /// The four mesh link directions (no Local).
     pub const SIDES: [Dir; 4] = [Dir::North, Dir::East, Dir::South, Dir::West];
+    /// All five ports including the local injection/delivery port.
     pub const ALL: [Dir; 5] = [Dir::North, Dir::East, Dir::South, Dir::West, Dir::Local];
 
     /// The port on the receiving router that a packet sent in direction
@@ -106,6 +116,7 @@ pub struct Topology {
 }
 
 impl Topology {
+    /// Precompute the mesh topology for one configuration.
     pub fn new(cfg: &ArchConfig) -> Topology {
         let mut nbr = vec![[usize::MAX; 4]; cfg.num_pes()];
         let mut cluster_of = vec![0usize; cfg.num_pes()];

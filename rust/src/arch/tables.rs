@@ -27,6 +27,7 @@ pub struct InterEntry {
 }
 
 impl InterEntry {
+    /// Manhattan route length of this entry.
     #[inline]
     pub fn hops(&self) -> u32 {
         self.dx.unsigned_abs() as u32 + self.dy.unsigned_abs() as u32
@@ -52,6 +53,7 @@ pub struct IntraTable {
 }
 
 impl IntraTable {
+    /// Hash-bucket count (`src_id % 8`, §3.2.2).
     pub const NUM_BUCKETS: usize = 8;
 
     #[inline]
@@ -59,6 +61,7 @@ impl IntraTable {
         (src_vid as usize) % Self::NUM_BUCKETS
     }
 
+    /// Insert one entry into its hash bucket.
     pub fn insert(&mut self, e: IntraEntry) {
         self.buckets[Self::bucket_of(e.src_vid)].push(e);
     }
@@ -92,6 +95,7 @@ impl IntraTable {
         }
     }
 
+    /// Total entries across all buckets.
     pub fn num_entries(&self) -> usize {
         self.buckets.iter().map(|b| b.len()).sum()
     }

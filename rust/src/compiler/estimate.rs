@@ -36,6 +36,7 @@ pub struct Estimator<'g> {
 }
 
 impl<'g> Estimator<'g> {
+    /// Precompute the in-arc lists the estimation model walks.
     pub fn new(g: &'g Graph, cfg: &'g ArchConfig, t_hop: u64) -> Estimator<'g> {
         let mut in_arcs: Vec<Vec<u32>> = vec![Vec::new(); g.num_vertices()];
         for (u, v, _) in g.arcs() {

@@ -24,14 +24,18 @@ use crate::util::Rng;
 /// Where one vertex lives: PE-array copy (slice layer), PE, DRF register.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Slot {
+    /// PE-array copy (slice layer) index.
     pub copy: u16,
+    /// PE coordinate within the array.
     pub pe: PeCoord,
+    /// DRF register index on that PE.
     pub reg: u8,
 }
 
 /// A complete many-to-one vertex → PE mapping (`M` in the paper).
 #[derive(Debug, Clone)]
 pub struct Placement {
+    /// Number of PE-array replicas the graph is spread over (⌈|V|/cap⌉).
     pub num_copies: usize,
     /// Per-vertex slot.
     pub slots: Vec<Slot>,
@@ -99,7 +103,9 @@ impl Placement {
 /// Mapping-quality statistics (Table 8 inputs + Fig 13 timing).
 #[derive(Debug, Clone, Default)]
 pub struct MappingStats {
+    /// Manhattan hops summed over all arcs (`f(M)` in the paper).
     pub total_routing_length: u64,
+    /// Routing length per arc (Table 8 row 1).
     pub avg_routing_length: f64,
     /// Number of congested (collision-set) edges after optimization.
     pub congested_edges: usize,
@@ -116,15 +122,19 @@ pub struct MappingStats {
 /// The compiler's output: placement + per-(copy, PE) slice configurations.
 #[derive(Debug, Clone)]
 pub struct CompiledGraph {
+    /// The architecture the graph was compiled for.
     pub cfg: ArchConfig,
+    /// The vertex → slot mapping.
     pub placement: Placement,
     /// `pe_slices[copy * num_pes + pe]` — the slice config loaded into
     /// that PE when array-copy `copy` is resident.
     pub pe_slices: Vec<PeSliceConfig>,
+    /// Mapping-quality statistics (Table 8 inputs, Fig 13 timing).
     pub stats: MappingStats,
 }
 
 impl CompiledGraph {
+    /// Slice configuration of PE `pe_idx` when `copy` is resident.
     #[inline]
     pub fn slice_cfg(&self, copy: u16, pe_idx: usize) -> &PeSliceConfig {
         &self.pe_slices[copy as usize * self.cfg.num_pes() + pe_idx]

@@ -150,6 +150,9 @@ pub fn dfs_pack(g: &Graph, cfg: &ArchConfig) -> Placement {
     Placement { num_copies, slots }
 }
 
+/// Beam-search initial placement (Algorithm 1 phase 1, §4.2.1): grow the
+/// mapping from the graph center outwards, keeping the `beam_width` best
+/// partial placements by total routing length.
 pub fn beam_search_initial(g: &Graph, cfg: &ArchConfig, opts: &CompileOpts) -> Placement {
     let n = g.num_vertices();
     assert!(n > 0);

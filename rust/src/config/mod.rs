@@ -127,6 +127,7 @@ impl ArchConfig {
 /// MCU baseline parameters (ARM Cortex-M4F, paper §5.1).
 #[derive(Debug, Clone)]
 pub struct McuConfig {
+    /// Core clock in MHz (paper: 64).
     pub freq_mhz: u64,
     /// Cycles per load/store (M4: 2 for first in a sequence).
     pub t_mem: u64,

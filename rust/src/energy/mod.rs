@@ -21,10 +21,15 @@ use crate::metrics::ActivityCounts;
 /// Component grouping for Table 6 rows.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Group {
+    /// NoC routers and links.
     Interconnect,
+    /// The per-PE ALU.
     Compute,
+    /// SRAM tables and buffers.
     Memory,
+    /// The Slice-ID compare register.
     Register,
+    /// Glue/control logic.
     Logic,
 }
 
@@ -32,9 +37,13 @@ pub enum Group {
 /// whole 8×8 fabric at 100 MHz / 22 nm.
 #[derive(Debug, Clone, Copy)]
 pub struct Component {
+    /// Table-6 row name.
     pub name: &'static str,
+    /// Component grouping.
     pub group: Group,
+    /// Paper-reported power in mW.
     pub power_mw: f64,
+    /// Paper-reported area in mm².
     pub area_mm2: f64,
 }
 
@@ -59,14 +68,18 @@ pub fn paper_total_power_mw() -> f64 {
     COMPONENTS.iter().map(|c| c.power_mw).sum()
 }
 
+/// Paper total area (Table 6): 0.373 mm².
 pub fn paper_total_area_mm2() -> f64 {
     COMPONENTS.iter().map(|c| c.area_mm2).sum()
 }
 
-/// Baseline constants from Table 5 (classic CGRA and MCU, 22 nm).
+/// Classic-CGRA power from Table 5 (22 nm).
 pub const CGRA_POWER_MW: f64 = 17.0;
+/// Classic-CGRA area from Table 5 (22 nm).
 pub const CGRA_AREA_MM2: f64 = 0.32;
+/// MCU core power from Table 5 (22 nm).
 pub const MCU_POWER_MW: f64 = 0.78;
+/// MCU core area from Table 5 (22 nm).
 pub const MCU_AREA_MM2: f64 = 0.03;
 
 /// Static (activity-independent) fraction of each component's power:

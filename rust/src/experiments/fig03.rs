@@ -5,6 +5,7 @@ use super::ExpEnv;
 use crate::report::{sig, Table};
 use crate::workloads::{dfgs, Workload};
 
+/// Render the Fig-3 operation census report.
 pub fn run(_env: &ExpEnv) -> super::ExpResult {
     let mut out = String::new();
 
@@ -41,10 +42,11 @@ pub fn run(_env: &ExpEnv) -> super::ExpResult {
         &["workload", "update", "no update", "graph mem access", "addr gen", "loop control"],
     );
     for w in Workload::ALL {
-        let prog = w.program();
+        let vp = w.builtin_program();
+        let ctx = crate::arch::isa::ExecCtx::default();
         // execute both paths to count
-        let (upd, _) = crate::arch::isa::execute(prog, 0, u32::MAX);
-        let (noupd, _) = crate::arch::isa::execute(prog, 5, 1);
+        let (upd, _) = crate::arch::isa::execute(vp.isa(), 0, u32::MAX, ctx);
+        let (noupd, _) = crate::arch::isa::execute(vp.isa(), 5, 1, ctx);
         b.row(&[
             w.name().into(),
             format!("{}", upd.cycles),

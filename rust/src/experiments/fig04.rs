@@ -8,8 +8,10 @@ use crate::sim::opcentric;
 use crate::util::stats;
 use crate::workloads::Workload;
 
+/// Deepest unroll degree attempted (Fig 4 x-axis).
 pub const MAX_UNROLL: usize = 4;
 
+/// Render the Fig-4 unroll-speedup / compile-blow-up report.
 pub fn run(env: &ExpEnv) -> super::ExpResult {
     let graphs = env.graphs(Group::Lrn);
     let mut t = Table::new(

@@ -10,13 +10,21 @@ use crate::report::{sig, Table};
 use crate::util::stats;
 use crate::workloads::Workload;
 
+/// One (group, workload) cell of Fig 10.
 pub struct Cell {
+    /// Dataset group.
     pub group: Group,
+    /// Workload.
     pub workload: Workload,
+    /// Classic-CGRA speedup over the MCU (wall-clock).
     pub speedup_cgra_vs_mcu: f64,
+    /// FLIP speedup over the MCU (wall-clock).
     pub speedup_flip_vs_mcu: f64,
+    /// FLIP speedup over the classic CGRA (wall-clock).
     pub speedup_flip_vs_cgra: f64,
+    /// FLIP energy as a fraction of the MCU run.
     pub energy_flip_vs_mcu: f64,
+    /// FLIP energy as a fraction of the classic-CGRA run.
     pub energy_flip_vs_cgra: f64,
 }
 
@@ -83,6 +91,7 @@ pub fn sweep(env: &ExpEnv) -> Vec<Cell> {
     cells
 }
 
+/// Render the Fig-10 performance/energy comparison report.
 pub fn run(env: &ExpEnv) -> super::ExpResult {
     let cells = sweep(env);
     let mut a = Table::new(

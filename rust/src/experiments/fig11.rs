@@ -9,6 +9,7 @@ use crate::sim::flip::SimOptions;
 use crate::util::stats;
 use crate::workloads::Workload;
 
+/// Render the Fig-11 parallelism report.
 pub fn run(env: &ExpEnv) -> super::ExpResult {
     let mut t = Table::new(
         "Fig 11 — FLIP average parallelism (distribution over runs)",

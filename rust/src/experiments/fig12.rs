@@ -10,13 +10,19 @@ use crate::report::{sig, Table};
 use crate::util::stats;
 use crate::workloads::Workload;
 
+/// One array size of the Fig-12 scaling sweep.
 pub struct ScalePoint {
+    /// Array edge (k×k PEs).
     pub k: usize,
+    /// Measured throughput.
     pub mteps: f64,
+    /// Modelled average power.
     pub power_mw: f64,
+    /// Modelled area.
     pub area_mm2: f64,
 }
 
+/// Run the scaling sweep over the given array edges.
 pub fn sweep(env: &ExpEnv, ks: &[usize]) -> Vec<ScalePoint> {
     // per-access energies calibrated once on the 8x8 prototype; only the
     // static power scales with the array (per-PE memory is constant)
@@ -47,6 +53,7 @@ pub fn sweep(env: &ExpEnv, ks: &[usize]) -> Vec<ScalePoint> {
     out
 }
 
+/// Render the Fig-12 array-scaling report.
 pub fn run(env: &ExpEnv) -> super::ExpResult {
     let points = sweep(env, &[4, 8, 12, 16]);
     let mut t = Table::new(

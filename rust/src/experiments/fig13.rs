@@ -10,6 +10,7 @@ use crate::sim::opcentric;
 use crate::util::stats;
 use crate::workloads::Workload;
 
+/// Render the Fig-13 compile-time report.
 pub fn run(env: &ExpEnv) -> super::ExpResult {
     // (a) classic CGRA: modulo mapping (II search + SA place & route)
     let mut a = Table::new(

@@ -13,12 +13,15 @@ use crate::workloads::{view_for, Workload};
 /// Experiment environment / scale knobs.
 #[derive(Debug, Clone)]
 pub struct ExpEnv {
+    /// FLIP fabric configuration.
     pub cfg: ArchConfig,
+    /// MCU baseline configuration.
     pub mcu: McuConfig,
     /// Graphs per dataset group (paper: 100; Ext. LRN: 10).
     pub graphs_per_group: usize,
     /// Random source vertices per graph (paper: 100).
     pub sources_per_graph: usize,
+    /// Master seed for dataset generation and source sampling.
     pub seed: u64,
 }
 
@@ -39,6 +42,7 @@ impl ExpEnv {
         ExpEnv { graphs_per_group: 100, sources_per_graph: 100, ..ExpEnv::quick() }
     }
 
+    /// Generate this environment's graphs for one dataset group.
     pub fn graphs(&self, group: Group) -> Vec<Graph> {
         let count = match group {
             Group::ExtLrn => self.graphs_per_group.min(3),
@@ -62,14 +66,18 @@ impl ExpEnv {
 /// One graph compiled for both arc views (directed for BFS/SSSP, undirected
 /// closure for WCC).
 pub struct CompiledPair {
+    /// The graph compiled as stored (BFS/SSSP view).
     pub directed: CompiledGraph,
     /// Same object as `directed` when the graph is already undirected.
     pub undirected: Option<CompiledGraph>,
+    /// The source graph.
     pub graph: Graph,
+    /// The undirected closure WCC propagates over.
     pub wcc_view: Graph,
 }
 
 impl CompiledPair {
+    /// Compile both views of one graph.
     pub fn build(g: &Graph, cfg: &ArchConfig, seed: u64) -> CompiledPair {
         let opts = CompileOpts { seed, ..Default::default() };
         let directed = compile(g, cfg, &opts);
@@ -78,6 +86,7 @@ impl CompiledPair {
         CompiledPair { directed, undirected, graph: g.clone(), wcc_view }
     }
 
+    /// The compiled view a trio workload runs on.
     pub fn for_workload(&self, w: Workload) -> &CompiledGraph {
         match (w.needs_undirected(), &self.undirected) {
             (true, Some(u)) => u,
@@ -148,6 +157,7 @@ pub fn run_flip(pair: &CompiledPair, w: Workload, source: u32) -> RunResult {
     run_flip_opts(pair, w, source, &flip::SimOptions::default())
 }
 
+/// [`run_flip`] with explicit simulator options.
 pub fn run_flip_opts(
     pair: &CompiledPair,
     w: Workload,
@@ -168,11 +178,14 @@ pub fn run_flip_opts(
 
 /// Cached op-centric kernels (one compile per workload per config).
 pub struct Baselines {
+    /// One mapped op-centric kernel per trio workload.
     pub kernels: Vec<(Workload, opcentric::OpCentricKernel)>,
+    /// MCU baseline configuration.
     pub mcu: McuConfig,
 }
 
 impl Baselines {
+    /// Compile the op-centric kernels for every trio workload.
     pub fn build(cfg: &ArchConfig, mcu: &McuConfig, seed: u64) -> Baselines {
         let kernels = Workload::ALL
             .iter()
@@ -183,14 +196,17 @@ impl Baselines {
         Baselines { kernels, mcu: mcu.clone() }
     }
 
+    /// The cached kernel for one trio workload.
     pub fn kernel(&self, w: Workload) -> &opcentric::OpCentricKernel {
         &self.kernels.iter().find(|(k, _)| *k == w).unwrap().1
     }
 
+    /// Run the classic-CGRA baseline.
     pub fn run_cgra(&self, w: Workload, g: &Graph, source: u32) -> RunResult {
         opcentric::run(self.kernel(w), g, source)
     }
 
+    /// Run the MCU baseline.
     pub fn run_mcu(&self, w: Workload, g: &Graph, source: u32) -> RunResult {
         mcu::run(w, g, source, &self.mcu)
     }

@@ -14,6 +14,7 @@
 //! | `table7`      | compiler complexity | [`table7`] |
 //! | `table8`      | mapping quality | [`table8`] |
 //! | `scalability` | §5.2.5 Ext. LRN swapping | [`scalability`] |
+//! | `scenarios`   | extended workloads (beyond the paper) | [`scenarios`] |
 //!
 //! Paper-fidelity note: the paper averages 100 graphs × 100 random
 //! sources per cell; the default [`ExpEnv`] uses a smaller sweep for
@@ -27,6 +28,7 @@ pub mod fig12;
 pub mod fig13;
 pub mod harness;
 pub mod scalability;
+pub mod scenarios;
 pub mod table2;
 pub mod table5;
 pub mod table6;
@@ -42,6 +44,7 @@ pub type ExpResult = Result<String, String>;
 /// Experiment registry: (id, description, driver).
 pub type Driver = fn(&ExpEnv) -> ExpResult;
 
+/// Experiment registry: every driver with its id and description.
 pub fn registry() -> Vec<(&'static str, &'static str, Driver)> {
     vec![
         ("fig3", "operation census: op-centric DFGs vs FLIP programs", fig03::run as Driver),
@@ -56,6 +59,7 @@ pub fn registry() -> Vec<(&'static str, &'static str, Driver)> {
         ("table7", "compiler time-complexity scaling", table7::run),
         ("table8", "mapping quality: routing length, pkt wait, ALUin depth", table8::run),
         ("scalability", "Ext. LRN with runtime data swapping (§5.2.5)", scalability::run),
+        ("scenarios", "extended workloads: PageRank, A* navigation, MIS", scenarios::run),
     ]
 }
 
@@ -86,7 +90,7 @@ mod tests {
         let ids: Vec<&str> = registry().iter().map(|(n, _, _)| *n).collect();
         for want in [
             "fig3", "fig4", "fig10", "fig11", "fig12", "fig13", "table2", "table5", "table6",
-            "table7", "table8", "scalability",
+            "table7", "table8", "scalability", "scenarios",
         ] {
             assert!(ids.contains(&want), "missing experiment {want}");
         }

@@ -10,6 +10,7 @@ use crate::sim::flip::SimOptions;
 use crate::util::stats;
 use crate::workloads::Workload;
 
+/// Render the §5.2.5 Ext. LRN swapping report.
 pub fn run(env: &ExpEnv) -> super::ExpResult {
     let graphs = env.graphs(Group::ExtLrn);
     let base = Baselines::build(&env.cfg, &env.mcu, env.seed);

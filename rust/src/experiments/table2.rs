@@ -7,6 +7,7 @@ use super::ExpEnv;
 use crate::energy;
 use crate::report::{sig, Table};
 
+/// Render the Table-2 qualitative comparison (quoted constants).
 pub fn run(_env: &ExpEnv) -> super::ExpResult {
     let mut q = Table::new(
         "Table 1 — qualitative comparison",

@@ -10,14 +10,21 @@ use crate::report::{sig, Table};
 use crate::util::stats;
 use crate::workloads::Workload;
 
+/// One architecture row of Table 5.
 pub struct Row {
+    /// Architecture name.
     pub name: String,
+    /// Measured (or quoted) throughput.
     pub mteps: f64,
+    /// Power in mW.
     pub power_mw: f64,
+    /// Area in mm².
     pub area_mm2: f64,
+    /// Process node in nm.
     pub tech_nm: u32,
 }
 
+/// Measure/collect every Table-5 row.
 pub fn rows(env: &ExpEnv) -> Vec<Row> {
     let graphs = env.graphs(Group::Lrn);
     let base = Baselines::build(&env.cfg, &env.mcu, env.seed);
@@ -68,6 +75,7 @@ pub fn rows(env: &ExpEnv) -> Vec<Row> {
     ]
 }
 
+/// Render the Table-5 efficiency report.
 pub fn run(env: &ExpEnv) -> super::ExpResult {
     let rows = rows(env);
     let mut t = Table::new(

@@ -9,6 +9,7 @@ use crate::graph::datasets::Group;
 use crate::report::{sig, Table};
 use crate::workloads::Workload;
 
+/// Render the Table-6 power/area breakdown report.
 pub fn run(env: &ExpEnv) -> super::ExpResult {
     let g = crate::graph::datasets::generate_one(Group::Lrn, 0, env.seed);
     let pair = CompiledPair::build(&g, &env.cfg, env.seed);

@@ -8,6 +8,7 @@ use crate::compiler::{compile, CompileOpts};
 use crate::graph::generate;
 use crate::report::{sig, Table};
 
+/// Render the Table-7 compiler-complexity report.
 pub fn run(env: &ExpEnv) -> super::ExpResult {
     let mut t = Table::new(
         "Table 7 — compiler phase scaling (measured)",

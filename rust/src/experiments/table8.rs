@@ -8,14 +8,21 @@ use crate::report::{sig, Table};
 use crate::util::stats;
 use crate::workloads::Workload;
 
+/// Mapping-quality aggregates for one dataset group.
 pub struct GroupQuality {
+    /// Dataset group.
     pub group: Group,
+    /// Mean routing length per arc.
     pub avg_routing_length: f64,
+    /// Mean packet wait in cycles.
     pub pkt_wait: f64,
+    /// Mean ALUin queue depth.
     pub aluin_depth: f64,
+    /// Mean collision-set arc count.
     pub congested_edges: f64,
 }
 
+/// Run the mapping-quality sweep over the on-chip groups.
 pub fn sweep(env: &ExpEnv) -> Vec<GroupQuality> {
     let mut out = Vec::new();
     for group in Group::ON_CHIP {
@@ -44,6 +51,7 @@ pub fn sweep(env: &ExpEnv) -> Vec<GroupQuality> {
     out
 }
 
+/// Render the Table-8 mapping-quality report.
 pub fn run(env: &ExpEnv) -> super::ExpResult {
     let rows = sweep(env);
     let mut t = Table::new(

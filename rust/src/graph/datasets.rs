@@ -14,18 +14,25 @@ use crate::util::Rng;
 /// The five dataset groups of Table 4.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Group {
+    /// Directed bounded-degree random trees (256 vertices).
     Tree,
+    /// Small road networks (64–107 vertices).
     Srn,
+    /// Large road networks (256 vertices).
     Lrn,
+    /// Low-diameter synthetic directed graphs (256 vertices).
     Syn,
+    /// Extended large road networks (16k vertices, off-chip swapping).
     ExtLrn,
 }
 
 impl Group {
+    /// Every Table-4 group.
     pub const ALL: [Group; 5] = [Group::Tree, Group::Srn, Group::Lrn, Group::Syn, Group::ExtLrn];
     /// The four on-chip groups used for the performance experiments.
     pub const ON_CHIP: [Group; 4] = [Group::Tree, Group::Srn, Group::Lrn, Group::Syn];
 
+    /// Table-4 display name.
     pub fn name(self) -> &'static str {
         match self {
             Group::Tree => "Tree",
@@ -36,6 +43,7 @@ impl Group {
         }
     }
 
+    /// Graphs per group in the paper's full sweep.
     pub fn paper_graph_count(self) -> usize {
         match self {
             Group::ExtLrn => 10,
@@ -43,6 +51,7 @@ impl Group {
         }
     }
 
+    /// Parse a CLI name.
     pub fn parse(s: &str) -> Option<Group> {
         match s.to_ascii_lowercase().as_str() {
             "tree" => Some(Group::Tree),

@@ -68,6 +68,7 @@ impl Graph {
         Graph { n, directed, logical_edges, offsets, targets, weights }
     }
 
+    /// Vertex count.
     #[inline]
     pub fn num_vertices(&self) -> usize {
         self.n
@@ -79,6 +80,7 @@ impl Graph {
         self.logical_edges
     }
 
+    /// True for directed graphs (CSR stores one arc per edge).
     #[inline]
     pub fn is_directed(&self) -> bool {
         self.directed
@@ -115,6 +117,7 @@ impl Graph {
         self.targets.len()
     }
 
+    /// Largest out-degree over all vertices.
     pub fn max_out_degree(&self) -> usize {
         (0..self.n as u32).map(|v| self.out_degree(v)).max().unwrap_or(0)
     }

@@ -105,6 +105,176 @@ pub fn undirected_reach_count(g: &Graph, src: u32) -> usize {
     count
 }
 
+// ---- PageRank (fixed-point integers, host-synchronized rounds) ----------
+//
+// The FLIP PageRank workload runs one *round* per simulator invocation:
+// every vertex scatters its damped, degree-normalized contribution, and
+// receivers accumulate with wrapping adds (commutative + associative, so
+// the result is independent of NoC delivery order). The host computes the
+// inter-round update. All arithmetic is integer fixed-point so the
+// simulated fabric and this oracle agree bit-for-bit.
+
+/// Total PageRank probability mass in fixed-point units (2^24 keeps
+/// per-vertex ranks well away from u32 wrap for every Table-4 graph size
+/// while leaving ~4 integer digits of per-edge precision).
+pub const PR_SCALE: u64 = 1 << 24;
+/// Damping factor numerator (d = 85/100 = 0.85, the textbook constant).
+pub const PR_DAMP_NUM: u64 = 85;
+/// Damping factor denominator.
+pub const PR_DAMP_DEN: u64 = 100;
+
+/// Uniform initial ranks: `PR_SCALE / n` each (floor; the lost remainder
+/// is < n units and fades under damping).
+pub fn pagerank_init(n: usize) -> Vec<u32> {
+    vec![(PR_SCALE / n as u64) as u32; n]
+}
+
+/// Damped, degree-normalized contribution each vertex sends along every
+/// out-arc this round: `⌊⌊rank·d⌋ / out_degree⌋` (0 for dangling vertices;
+/// their mass is redistributed by [`pagerank_next`]).
+pub fn pagerank_contribs(g: &Graph, ranks: &[u32]) -> Vec<u32> {
+    (0..g.num_vertices() as u32)
+        .map(|v| {
+            let deg = g.out_degree(v) as u64;
+            if deg == 0 {
+                0
+            } else {
+                ((ranks[v as usize] as u64 * PR_DAMP_NUM / PR_DAMP_DEN) / deg) as u32
+            }
+        })
+        .collect()
+}
+
+/// One message round exactly as the fabric computes it: every vertex ends
+/// at `contrib[v] ⊞ Σ_{u→v} contrib[u]` (wrapping adds — the simulator
+/// seeds each DRF attribute with the vertex's own contribution and
+/// accumulates arriving ones).
+pub fn pagerank_round(g: &Graph, contribs: &[u32]) -> Vec<u32> {
+    let mut out = contribs.to_vec();
+    for (u, v, _) in g.arcs() {
+        out[v as usize] = out[v as usize].wrapping_add(contribs[u as usize]);
+    }
+    out
+}
+
+/// Host-side inter-round update: new rank = teleport base + received mass
+/// (round output minus the self-seeded contribution) + the dangling-mass
+/// share. Pure integer math shared by the simulator driver
+/// ([`crate::workloads::pagerank`]) and [`pagerank`].
+pub fn pagerank_next(g: &Graph, ranks: &[u32], contribs: &[u32], round: &[u32]) -> Vec<u32> {
+    let n = g.num_vertices() as u64;
+    let base = ((PR_SCALE * (PR_DAMP_DEN - PR_DAMP_NUM) / PR_DAMP_DEN) / n) as u32;
+    let dangling: u64 = (0..g.num_vertices() as u32)
+        .filter(|&v| g.out_degree(v) == 0)
+        .map(|v| ranks[v as usize] as u64)
+        .sum();
+    let dangling_share = ((dangling * PR_DAMP_NUM / PR_DAMP_DEN) / n) as u32;
+    (0..g.num_vertices())
+        .map(|v| {
+            let received = round[v].wrapping_sub(contribs[v]);
+            base.wrapping_add(received).wrapping_add(dangling_share)
+        })
+        .collect()
+}
+
+/// Fixed-iteration PageRank oracle: `iters` rounds of the exact integer
+/// recurrence above. The FLIP run must reproduce this vector bit-for-bit.
+pub fn pagerank(g: &Graph, iters: usize) -> Vec<u32> {
+    let mut ranks = pagerank_init(g.num_vertices());
+    for _ in 0..iters {
+        let contribs = pagerank_contribs(g, &ranks);
+        let round = pagerank_round(g, &contribs);
+        ranks = pagerank_next(g, &ranks, &contribs, &round);
+    }
+    ranks
+}
+
+/// Float PageRank (textbook power iteration) for sanity-bounding the
+/// fixed-point pipeline; not an exactness oracle.
+pub fn pagerank_f64(g: &Graph, iters: usize) -> Vec<f64> {
+    let n = g.num_vertices();
+    let d = PR_DAMP_NUM as f64 / PR_DAMP_DEN as f64;
+    let mut ranks = vec![1.0 / n as f64; n];
+    for _ in 0..iters {
+        let mut next = vec![(1.0 - d) / n as f64; n];
+        let mut dangling = 0.0;
+        for v in 0..n as u32 {
+            let deg = g.out_degree(v);
+            if deg == 0 {
+                dangling += ranks[v as usize];
+                continue;
+            }
+            let share = d * ranks[v as usize] / deg as f64;
+            for (t, _) in g.neighbors(v) {
+                next[t as usize] += share;
+            }
+        }
+        for r in &mut next {
+            *r += d * dangling / n as f64;
+        }
+        ranks = next;
+    }
+    ranks
+}
+
+// ---- A* / ALT bounded navigation ----------------------------------------
+
+/// Goal-directed bounded relaxation oracle (the A* workload's fixpoint):
+/// Dijkstra in which a settled vertex `u` relaxes its out-edges only while
+/// `dist(u) + h(u) ≤ bound`. With an admissible `h` and any upper bound
+/// `bound ≥ d(s,t)` this leaves `dist[target]` exact while pruning the
+/// frontier away from the goal; it is the least fixpoint of the monotone
+/// guarded-relaxation system the asynchronous fabric iterates, so the
+/// simulated attributes must equal it exactly.
+pub fn astar_bounded(g: &Graph, src: u32, h: &[u32], bound: u32) -> Vec<u32> {
+    let mut dist = vec![INF; g.num_vertices()];
+    dist[src as usize] = 0;
+    let mut pq: BinaryHeap<std::cmp::Reverse<(u32, u32)>> = BinaryHeap::new();
+    pq.push(std::cmp::Reverse((0, src)));
+    while let Some(std::cmp::Reverse((d, u))) = pq.pop() {
+        if d > dist[u as usize] {
+            continue;
+        }
+        if d.saturating_add(h[u as usize]) > bound {
+            continue; // settled but outside the route budget: no scatter
+        }
+        for (v, w) in g.neighbors(u) {
+            let nd = d.saturating_add(w).min(INF - 1);
+            if nd < dist[v as usize] {
+                dist[v as usize] = nd;
+                pq.push(std::cmp::Reverse((nd, v)));
+            }
+        }
+    }
+    dist
+}
+
+// ---- Maximal independent set --------------------------------------------
+
+/// Greedy MIS by fixed priorities: process vertices in ascending `prio`
+/// (a permutation of `0..n`); a vertex joins the set iff no already-chosen
+/// neighbor exists. This is the unique fixpoint of the "all dominators
+/// OUT ⇒ IN / any dominator IN ⇒ OUT" rule the MIS vertex program
+/// iterates asynchronously ([`crate::workloads::mis`]). Arcs are treated
+/// as undirected. Returns 1 (in the set) / 0 per vertex.
+pub fn greedy_mis(g: &Graph, prio: &[u32]) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for (u, v, _) in g.arcs() {
+        adj[u as usize].push(v);
+        adj[v as usize].push(u);
+    }
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_unstable_by_key(|&v| prio[v as usize]);
+    let mut in_set = vec![0u32; n];
+    for v in order {
+        if adj[v as usize].iter().all(|&u| in_set[u as usize] == 0) {
+            in_set[v as usize] = 1;
+        }
+    }
+    in_set
+}
+
 /// Edges traversed by a frontier-driven run: every arc out of every vertex
 /// that is reached (the MTEPS numerator used across all architectures).
 pub fn traversed_edges(g: &Graph, levels_or_dist: &[u32]) -> usize {
@@ -167,5 +337,96 @@ mod tests {
         let lv = bfs_levels(&g, 0);
         // reached: 0,1,2 with out-degrees 1,1,0
         assert_eq!(traversed_edges(&g, &lv), 2);
+    }
+
+    #[test]
+    fn pagerank_mass_roughly_conserved() {
+        let g = Graph::from_edges(4, &[(0, 1, 1), (1, 2, 1), (2, 0, 1), (2, 3, 1)], true);
+        let r = pagerank(&g, 20);
+        let total: u64 = r.iter().map(|&x| x as u64).sum();
+        // floors lose a little mass each round, never gain it
+        assert!(total <= PR_SCALE, "total {total}");
+        assert!(total > PR_SCALE * 9 / 10, "total {total}");
+    }
+
+    #[test]
+    fn pagerank_tracks_float_power_iteration() {
+        let g = Graph::from_edges(
+            5,
+            &[(0, 1, 1), (1, 2, 1), (2, 0, 1), (2, 3, 1), (3, 4, 1), (4, 0, 1)],
+            true,
+        );
+        let fixed = pagerank(&g, 30);
+        let float = pagerank_f64(&g, 30);
+        for v in 0..5 {
+            let got = fixed[v] as f64 / PR_SCALE as f64;
+            assert!(
+                (got - float[v]).abs() < 1e-3,
+                "vertex {v}: fixed {got} vs float {}",
+                float[v]
+            );
+        }
+    }
+
+    #[test]
+    fn pagerank_hub_outranks_leaf() {
+        // star pointing into 0: vertex 0 must dominate
+        let g = Graph::from_edges(4, &[(1, 0, 1), (2, 0, 1), (3, 0, 1)], true);
+        let r = pagerank(&g, 20);
+        assert!(r[0] > r[1]);
+        assert_eq!(r[1], r[2]);
+    }
+
+    #[test]
+    fn astar_bounded_with_slack_is_dijkstra() {
+        let g = line(6);
+        let h = vec![0u32; 6];
+        assert_eq!(astar_bounded(&g, 0, &h, u32::MAX), dijkstra(&g, 0));
+    }
+
+    #[test]
+    fn astar_bounded_prunes_beyond_budget() {
+        // line 0-1-2-3-4 with weight 2: exact distance to target 2 is 4
+        let g = line(5);
+        // perfect heuristic towards target 2
+        let h: Vec<u32> = dijkstra(&g, 2);
+        let d = astar_bounded(&g, 0, &h, 4);
+        assert_eq!(d[2], 4, "target distance exact");
+        // vertex 4 lies past the target: g(4)=8, h(4)=4 > bound — its
+        // distance settles only as far as guarded relaxation allows
+        assert_eq!(d[3], 6, "on-path neighbor still relaxed from 2");
+        assert_eq!(d[4], INF, "beyond-budget vertex never relaxed");
+    }
+
+    #[test]
+    fn greedy_mis_path_alternates() {
+        let g = line(5);
+        let prio: Vec<u32> = (0..5).collect(); // identity priorities
+        assert_eq!(greedy_mis(&g, &prio), vec![1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn greedy_mis_is_independent_and_maximal() {
+        let g = Graph::from_edges(
+            6,
+            &[(0, 1, 1), (0, 2, 1), (1, 2, 1), (2, 3, 1), (3, 4, 1), (4, 5, 1), (5, 3, 1)],
+            false,
+        );
+        let prio = vec![3u32, 0, 5, 1, 4, 2];
+        let m = greedy_mis(&g, &prio);
+        for (u, v, _) in g.arcs() {
+            assert!(
+                !(m[u as usize] == 1 && m[v as usize] == 1),
+                "edge {u}-{v} inside the set"
+            );
+        }
+        for v in 0..6u32 {
+            if m[v as usize] == 0 {
+                assert!(
+                    g.neighbors(v).any(|(u, _)| m[u as usize] == 1),
+                    "vertex {v} could join"
+                );
+            }
+        }
     }
 }

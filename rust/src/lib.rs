@@ -15,6 +15,13 @@
 //!   relaxation golden model, AOT-lowered to HLO text in `artifacts/`.
 //! - **Runtime bridge** — [`runtime`] loads the artifacts via the PJRT CPU
 //!   client and cross-validates the simulator's functional outputs.
+//!
+//! Algorithms are expressed against the pluggable vertex-program layer
+//! ([`workloads::program::VertexProgram`], DESIGN.md §5): the paper trio
+//! (BFS/SSSP/WCC) plus PageRank, A*/ALT navigation and randomized MIS all
+//! run on the same unmodified simulator cores.
+
+#![warn(missing_docs)]
 
 pub mod arch;
 pub mod compiler;

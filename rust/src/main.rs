@@ -3,8 +3,10 @@
 //! ```text
 //! flip exp <id|all> [--graphs N] [--sources N] [--seed S] [--paper-scale]
 //!                   [--set key=val]... [--save]
-//! flip run --workload <bfs|sssp|wcc> --group <tree|srn|lrn|syn|extlrn>
-//!          [--idx I] [--source V] [--golden] [--set key=val]...
+//! flip run --workload <bfs|sssp|wcc|pagerank|astar|mis>
+//!          --group <tree|srn|lrn|syn|extlrn>
+//!          [--idx I] [--source V] [--target V] [--rounds N]
+//!          [--golden] [--set key=val]...
 //! flip compile --group <g> [--idx I]        mapping statistics
 //! flip golden --workload <w> --group <g>    validate sim vs PJRT artifacts
 //! flip info                                 configuration + artifact status
@@ -117,7 +119,8 @@ fn print_usage() {
     for (id, desc, _) in registry() {
         println!("      {id:<12} {desc}");
     }
-    println!("  run            single cycle-accurate run (--workload, --group, --idx, --source)");
+    println!("  run            single cycle-accurate run (--workload, --group, --idx, --source;");
+    println!("                 extended workloads: pagerank [--rounds], astar [--target], mis)");
     println!("  compile        mapping statistics (--group, --idx)");
     println!("  golden         validate simulator vs PJRT golden model");
     println!("  info           configuration and artifact status");
@@ -145,12 +148,22 @@ fn cmd_run(args: &Args) -> Result<()> {
     let idx: usize = args.flag("idx").unwrap_or("0").parse()?;
     let g = datasets::generate_one(group, idx, env.seed);
     let source: u32 = args.flag("source").unwrap_or("0").parse()?;
-    let pair = flip::experiments::harness::CompiledPair::build(&g, &env.cfg, env.seed);
     let opts = SimOptions {
         trace_parallelism: args.has("trace"),
         max_cycles: 2_000_000_000,
         watchdog: 5_000_000,
     };
+    if w.is_extended() {
+        if args.has("golden") {
+            return Err(format!(
+                "--golden: the dense min-plus golden model covers BFS/SSSP/WCC only (got {})",
+                w.name()
+            )
+            .into());
+        }
+        return cmd_run_extended(args, &env, w, &g, group, idx, source, &opts);
+    }
+    let pair = flip::experiments::harness::CompiledPair::build(&g, &env.cfg, env.seed);
     let r = flip::experiments::harness::run_flip_opts(&pair, w, source, &opts);
     println!(
         "{} on {} graph #{idx} (|V|={}, |E|={}), source {source}:",
@@ -181,6 +194,93 @@ fn cmd_run(args: &Args) -> Result<()> {
             }
             None => println!("  golden (PJRT)     : graph too large for dense artifacts"),
         }
+    }
+    Ok(())
+}
+
+/// Single-run driver for the extended vertex-program workloads
+/// (PageRank / A* / MIS) — their programs carry graph-derived state, so
+/// they bypass the trio's CompiledPair path.
+#[allow(clippy::too_many_arguments)]
+fn cmd_run_extended(
+    args: &Args,
+    env: &ExpEnv,
+    w: Workload,
+    g: &flip::graph::Graph,
+    group: Group,
+    idx: usize,
+    source: u32,
+    opts: &SimOptions,
+) -> Result<()> {
+    use flip::workloads::{mis, navigation, pagerank, Workload as W};
+    println!(
+        "{} on {} graph #{idx} (|V|={}, |E|={}):",
+        w.name(),
+        group.name(),
+        g.num_vertices(),
+        g.num_edges()
+    );
+    let copts = CompileOpts { seed: env.seed, ..Default::default() };
+    match w {
+        W::PageRank => {
+            let rounds: usize = args.flag("rounds").unwrap_or("10").parse()?;
+            let c = compile(g, &env.cfg, &copts);
+            let run = pagerank::run_rounds(&c, g, rounds, opts)?;
+            let mut top: Vec<(u32, u32)> =
+                run.ranks.iter().enumerate().map(|(v, &r)| (r, v as u32)).collect();
+            top.sort_unstable_by_key(|&(r, v)| (std::cmp::Reverse(r), v));
+            println!("  rounds            : {rounds}");
+            println!("  cycles (total)    : {}", run.cycles);
+            println!("  packets delivered : {}", run.delivered);
+            print!("  top ranks         :");
+            for &(r, v) in top.iter().take(5) {
+                print!(" v{v}={r}");
+            }
+            println!();
+        }
+        W::AStar => {
+            let target: u32 = args
+                .flag("target")
+                .unwrap_or(&format!("{}", g.num_vertices() as u32 - 1))
+                .parse()?;
+            if g.is_directed() {
+                return Err(format!(
+                    "A* navigation needs an undirected road network; group {} is directed \
+                     (try srn/lrn/extlrn)",
+                    group.name()
+                )
+                .into());
+            }
+            if target as usize >= g.num_vertices() || (source as usize) >= g.num_vertices() {
+                return Err(format!(
+                    "query {source} -> {target} out of range (|V| = {})",
+                    g.num_vertices()
+                )
+                .into());
+            }
+            let c = compile(g, &env.cfg, &copts);
+            let lm = navigation::Landmarks::build(g, 4);
+            let p = navigation::plan(&c, &lm, source, target, opts)?;
+            println!("  query             : {source} -> {target}");
+            println!("  distance          : {}", p.distance);
+            println!("  cycles            : {}", p.run.cycles);
+            println!("  packets delivered : {}", p.run.sim.packets_delivered);
+        }
+        W::Mis => {
+            let (m, view) = mis::Mis::build(g, env.seed);
+            let c = compile(&view, &env.cfg, &copts);
+            let r = mis::run(&c, &m, opts)?;
+            let size = r.attrs.iter().filter(|&&a| a == mis::ATTR_IN).count();
+            println!("  |MIS|             : {size} of {}", g.num_vertices());
+            println!("  cycles            : {}", r.cycles);
+            println!("  packets delivered : {}", r.sim.packets_delivered);
+            println!(
+                "  independent/max.  : {}/{}",
+                mis::is_independent(&view, &r.attrs),
+                mis::is_maximal(&view, &r.attrs)
+            );
+        }
+        _ => unreachable!("guarded by is_extended"),
     }
     Ok(())
 }

@@ -36,6 +36,7 @@ pub struct ActivityCounts {
 }
 
 impl ActivityCounts {
+    /// Accumulate another run's counters (sweep/multi-round aggregation).
     pub fn add(&mut self, o: &ActivityCounts) {
         self.alu_ops += o.alu_ops;
         self.intra_lookups += o.intra_lookups;

@@ -12,6 +12,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Start a table with a title and column headers.
     pub fn new(title: &str, header: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -20,12 +21,14 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header arity).
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
         assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
         self.rows.push(cells.to_vec());
         self
     }
 
+    /// Render as an aligned markdown-style text table.
     pub fn render(&self) -> String {
         let ncol = self.header.len();
         let mut width = vec![0usize; ncol];
@@ -93,14 +96,20 @@ pub fn times(x: f64) -> String {
 
 /// Minimal JSON value writer (enough for results files).
 pub enum Json {
+    /// A number (integers render without a fraction).
     Num(f64),
+    /// A string (escaped on render).
     Str(String),
+    /// A boolean.
     Bool(bool),
+    /// An array of values.
     Arr(Vec<Json>),
+    /// An object as ordered key/value pairs.
     Obj(Vec<(String, Json)>),
 }
 
 impl Json {
+    /// Serialize to compact JSON text.
     pub fn render(&self) -> String {
         match self {
             Json::Num(x) => {

@@ -51,22 +51,28 @@ pub fn artifacts_available(dir: &Path) -> bool {
 #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 fn dense_problem(view: &Graph, w: Workload, source: u32, pad: usize) -> (Vec<f32>, Vec<f32>) {
     let n = view.num_vertices();
-    // dense adjacency with +inf non-edges
+    // dense adjacency with +inf non-edges; the effective edge weight is
+    // the trio's combine semantics (hops / stored weight / labels)
     let mut wm = vec![f32::INFINITY; pad * pad];
     for (u, v, wt) in view.arcs() {
-        let eff = w.edge_weight(wt) as f32;
+        let eff = match w {
+            Workload::Bfs => 1.0,
+            Workload::Sssp => wt as f32,
+            Workload::Wcc => 0.0,
+            _ => unreachable!("golden_attrs rejects non-trio workloads"),
+        };
         let cell = &mut wm[u as usize * pad + v as usize];
         *cell = cell.min(eff);
     }
     let mut d0 = vec![f32::INFINITY; pad];
     match w {
-        Workload::Bfs | Workload::Sssp => d0[source as usize] = 0.0,
         Workload::Wcc => {
             for (v, cell) in d0.iter_mut().enumerate().take(n) {
                 *cell = v as f32;
             }
             // padding vertices keep +inf: isolated, never propagate
         }
+        _ => d0[source as usize] = 0.0,
     }
     (d0, wm)
 }
@@ -137,6 +143,7 @@ mod engine {
             self.sizes.iter().copied().find(|&s| s >= n)
         }
 
+        /// PJRT platform name (e.g. "cpu").
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
@@ -207,6 +214,12 @@ mod engine {
             w: Workload,
             source: u32,
         ) -> Result<Option<Vec<u32>>, String> {
+            if w.is_extended() {
+                return Err(format!(
+                    "the dense min-plus golden model covers BFS/SSSP/WCC only (got {})",
+                    w.name()
+                ));
+            }
             let view = crate::workloads::view_for(w, g);
             let n = view.num_vertices();
             let Some(pad) = self.padded_size(n) else { return Ok(None) };
@@ -237,6 +250,8 @@ mod engine {
          (enable the `pjrt` cargo feature and add the `xla` dependency)";
 
     impl GoldenEngine {
+        /// Always fails in the dependency-free build, telling the caller
+        /// whether artifacts or the PJRT feature is what's missing.
         pub fn load(dir: &Path) -> Result<GoldenEngine, String> {
             if artifacts_available(dir) {
                 Err(format!("artifacts present in {dir:?}, but {NO_PJRT}"))
@@ -247,22 +262,27 @@ mod engine {
             }
         }
 
+        /// Smallest artifact size ≥ n, if any.
         pub fn padded_size(&self, n: usize) -> Option<usize> {
             self.sizes.iter().copied().find(|&s| s >= n)
         }
 
+        /// Stub platform name ("unavailable").
         pub fn platform(&self) -> String {
             "unavailable".to_string()
         }
 
+        /// Unreachable in practice (`load` never succeeds here).
         pub fn relax_step(&self, _d: &[f32], _w: &[f32], _n: usize) -> Result<Vec<f32>, String> {
             Err(NO_PJRT.to_string())
         }
 
+        /// Unreachable in practice (`load` never succeeds here).
         pub fn relax_k8(&self, _d: &[f32], _w: &[f32], _n: usize) -> Result<Vec<f32>, String> {
             Err(NO_PJRT.to_string())
         }
 
+        /// Unreachable in practice (`load` never succeeds here).
         pub fn relax_fixpoint(
             &self,
             _d0: Vec<f32>,
@@ -272,6 +292,7 @@ mod engine {
             Err(NO_PJRT.to_string())
         }
 
+        /// Unreachable in practice (`load` never succeeds here).
         pub fn golden_attrs(
             &self,
             _g: &Graph,

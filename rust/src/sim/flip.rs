@@ -46,8 +46,8 @@
 
 use crate::arch::{isa, yx_route, Dir, Packet, PeCoord, Topology};
 use crate::compiler::CompiledGraph;
-use crate::graph::INF;
 use crate::metrics::{ActivityCounts, RunResult, SimMetrics};
+use crate::workloads::program::VertexProgram;
 use crate::workloads::Workload;
 use std::collections::VecDeque;
 
@@ -168,21 +168,30 @@ impl<T: Copy> RingArena<T> {
 }
 
 impl RingArena<AluinItem> {
-    /// Min-coalesce `item` into queue `q` if a message for the same
-    /// register is already queued. Returns true if merged.
+    /// Coalesce `item` into queue `q` at the first same-register entry,
+    /// using the vertex program's merge rule (`min` for relaxation,
+    /// wrapping `+` for PageRank, disabled for MIS). Returns `None` if no
+    /// same-register entry exists, else `Some(merged?)` — the first match
+    /// *decides*, so the caller must not scan further queues on
+    /// `Some(false)` (mirrors the naive core's single chained scan).
     #[inline]
-    fn coalesce(&mut self, q: usize, item: AluinItem) -> bool {
+    fn coalesce(&mut self, q: usize, item: AluinItem, vp: &dyn VertexProgram) -> Option<bool> {
         let cap = self.cap as usize;
         let base = q * cap;
         let (h, l) = (self.head[q] as usize, self.len[q] as usize);
         for i in 0..l {
             let e = &mut self.buf[base + (h + i) % cap];
             if e.reg == item.reg {
-                e.msg = e.msg.min(item.msg);
-                return true;
+                return Some(match vp.coalesce(e.msg, item.msg) {
+                    Some(m) => {
+                        e.msg = m;
+                        true
+                    }
+                    None => false,
+                });
             }
         }
-        false
+        None
     }
 }
 
@@ -287,7 +296,9 @@ struct Timing {
 /// The FLIP cycle-accurate simulator (event-driven core).
 pub struct FlipSim<'a> {
     c: &'a CompiledGraph,
-    workload: Workload,
+    vp: &'a dyn VertexProgram,
+    /// `vp.bound()` cached out of the per-message ALU hot path.
+    vp_bound: u32,
     opts: SimOptions,
     topo: Topology,
     tm: Timing,
@@ -350,7 +361,9 @@ pub struct FlipSim<'a> {
 }
 
 impl<'a> FlipSim<'a> {
-    pub fn new(c: &'a CompiledGraph, workload: Workload, opts: SimOptions) -> FlipSim<'a> {
+    /// Build a simulator instance for one vertex program over a compiled
+    /// graph. `vp` carries all algorithm-specific behaviour (DESIGN.md §5).
+    pub fn new(c: &'a CompiledGraph, vp: &'a dyn VertexProgram, opts: SimOptions) -> FlipSim<'a> {
         let cfg = &c.cfg;
         let num_pes = cfg.num_pes();
         let num_clusters = cfg.num_clusters();
@@ -367,7 +380,8 @@ impl<'a> FlipSim<'a> {
             num_copies,
         };
         FlipSim {
-            workload,
+            vp,
+            vp_bound: vp.bound(),
             opts,
             topo: Topology::new(cfg),
             pe: (0..num_pes).map(|_| PeScalars::new()).collect(),
@@ -507,12 +521,13 @@ impl<'a> FlipSim<'a> {
         self.topo.cluster_pes[cl].iter().all(|&i| self.compute_idle(i))
     }
 
-    /// Prepare initial state for a run from `source` (ignored for WCC).
+    /// Prepare initial state for a run from `source` (ignored by dense-
+    /// seeded programs).
     fn seed(&mut self, source: u32) {
         let cfg = &self.c.cfg;
         let n = self.c.placement.slots.len();
-        let w = self.workload;
-        self.attrs = (0..n as u32).map(|v| w.init_attr(v, n)).collect();
+        let vp = self.vp;
+        self.attrs = (0..n as u32).map(|v| vp.init_attr(v, n)).collect();
         // link credits = downstream input FIFO capacity
         for pe in 0..cfg.num_pes() {
             let coord = PeCoord::from_index(pe, cfg);
@@ -524,7 +539,7 @@ impl<'a> FlipSim<'a> {
         for cl in 0..self.tm.num_clusters {
             self.clusters[cl].resident = crate::compiler::Placement::slice_id(cfg, cl, 0);
         }
-        if self.workload.single_source() {
+        if self.vp.single_source() {
             // source's cluster loads the source's copy
             let s = self.c.placement.slots[source as usize];
             let cl = s.pe.cluster(cfg);
@@ -535,9 +550,13 @@ impl<'a> FlipSim<'a> {
             self.aluin_total += 1;
             self.activate(pe_idx);
         } else {
-            // WCC: every vertex scatters its initial label (host preload of
-            // the ALUout buffers; non-resident slices seed on swap-in).
+            // dense seeding (WCC/PageRank/MIS): every seeding vertex
+            // scatters its initial attribute (host preload of the ALUout
+            // buffers; non-resident slices seed on swap-in).
             for v in 0..n as u32 {
+                if !vp.seeds(v) {
+                    continue;
+                }
                 let s = self.c.placement.slots[v as usize];
                 let cl = s.pe.cluster(cfg);
                 let slice = crate::compiler::Placement::slice_id(cfg, cl, s.copy);
@@ -997,11 +1016,16 @@ impl<'a> FlipSim<'a> {
 
     // ---- local delivery (slice compare, Intra-Table, ALUin) ---------------
 
-    /// Min-coalesce into ALUin or the pending microqueue (same scan order
-    /// as the naive `VecDeque` chain). Returns true if merged.
+    /// Coalesce into ALUin or the pending microqueue (same scan order as
+    /// the naive `VecDeque` chain: the first same-register entry decides,
+    /// even when the program declines the merge). Returns true if merged.
     #[inline]
     fn try_coalesce(&mut self, pe_idx: usize, item: AluinItem) -> bool {
-        self.aluin.coalesce(pe_idx, item) || self.pending.coalesce(pe_idx, item)
+        let vp = self.vp;
+        match self.aluin.coalesce(pe_idx, item, vp) {
+            Some(merged) => merged,
+            None => self.pending.coalesce(pe_idx, item, vp).unwrap_or(false),
+        }
     }
 
     fn step_delivery(&mut self, pe_idx: usize) {
@@ -1098,7 +1122,7 @@ impl<'a> FlipSim<'a> {
             if m.src_vid != src_vid {
                 continue;
             }
-            let msg = q.pkt.attr.saturating_add(self.workload.edge_weight(m.weight)).min(INF - 1);
+            let msg = self.vp.combine(q.pkt.attr, m.weight);
             let item = AluinItem { reg: m.dst_reg, msg };
             if self.try_coalesce(pe_idx, item) {
                 // merged with a queued message for the same register
@@ -1214,8 +1238,9 @@ impl<'a> FlipSim<'a> {
         let vid = self.slice_cfg_of(pe_idx).vertices[item.reg as usize];
         debug_assert!(vid != u32::MAX, "ALUin item for empty DRF register");
         let attr = self.attrs[vid as usize];
-        let prog = self.workload.program();
-        let (res, new_attr) = isa::execute(prog, item.msg, attr);
+        let prog = self.vp.isa();
+        let ctx = isa::ExecCtx { aux: self.vp.aux(vid), bound: self.vp_bound };
+        let (res, new_attr) = isa::execute(prog, item.msg, attr, ctx);
         self.act.alu_ops += res.cycles;
         self.act.im_fetches += res.cycles;
         self.act.drf_reads += 1;
@@ -1264,15 +1289,28 @@ impl<'a> FlipSim<'a> {
     }
 }
 
-/// Convenience wrapper: compile must already be done; runs one workload
-/// invocation from `source`.
+/// Convenience wrapper for the paper trio: compile must already be done;
+/// runs one built-in workload invocation from `source`. Extended
+/// workloads construct their stateful programs and use [`run_program`].
 pub fn run(
     c: &CompiledGraph,
     workload: Workload,
     source: u32,
     opts: &SimOptions,
 ) -> Result<RunResult, String> {
-    FlipSim::new(c, workload, opts.clone()).run(source)
+    let vp = workload.builtin_program();
+    run_program(c, vp.as_ref(), source, opts)
+}
+
+/// Run an arbitrary vertex program (the extended-workload entry point).
+/// `source` is ignored by dense-seeded programs.
+pub fn run_program(
+    c: &CompiledGraph,
+    vp: &dyn VertexProgram,
+    source: u32,
+    opts: &SimOptions,
+) -> Result<RunResult, String> {
+    FlipSim::new(c, vp, opts.clone()).run(source)
 }
 
 #[cfg(test)]

@@ -20,6 +20,7 @@ pub struct CostModel {
 }
 
 impl CostModel {
+    /// Start a fresh cycle counter under `cfg`'s timings.
     pub fn new(cfg: McuConfig) -> CostModel {
         CostModel { cfg, cycles: 0 }
     }
@@ -52,6 +53,10 @@ pub fn run(w: Workload, g: &Graph, source: u32, cfg: &McuConfig) -> RunResult {
         Workload::Bfs => bfs(&mut cm, g, source),
         Workload::Sssp => dijkstra_heap(&mut cm, g, source),
         Workload::Wcc => wcc(&mut cm, g),
+        _ => unimplemented!(
+            "the MCU cost model covers the paper trio only (got {})",
+            w.name()
+        ),
     };
     RunResult {
         cycles: cm.cycles,

@@ -3,6 +3,10 @@
 //! equivalence property tests), the classic operation-centric CGRA baseline
 //! ([`opcentric`] over [`modulo`]-scheduled [`crate::workloads::dfgs`]),
 //! and the MCU cost-model baseline ([`mcu`]).
+//!
+//! Both FLIP cores execute any
+//! [`crate::workloads::program::VertexProgram`] (`flip::run_program`,
+//! `naive::run_program`); the `run` wrappers cover the paper trio.
 
 pub mod flip;
 pub mod mcu;

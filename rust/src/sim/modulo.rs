@@ -14,10 +14,12 @@ use crate::util::Rng;
 /// A modulo schedule: start cycle per op, plus derived quantities.
 #[derive(Debug, Clone)]
 pub struct Schedule {
+    /// Initiation interval achieved.
     pub ii: u32,
     /// Schedule length (makespan incl. final latency) — the serialized
     /// per-iteration cost when loop-carried memory deps prevent pipelining.
     pub length: u32,
+    /// Start cycle per op.
     pub start: Vec<u32>,
     /// Wall-clock seconds spent mapping (II search + SA placement).
     pub map_seconds: f64,

@@ -16,9 +16,9 @@
 
 use crate::arch::{isa, yx_route, Dir, Packet, PeCoord};
 use crate::compiler::CompiledGraph;
-use crate::graph::INF;
 use crate::metrics::{ActivityCounts, RunResult, SimMetrics};
 use crate::sim::SimOptions;
+use crate::workloads::program::VertexProgram;
 use crate::workloads::Workload;
 use std::collections::VecDeque;
 
@@ -75,18 +75,24 @@ struct PeState {
 }
 
 impl PeState {
-    /// Insert into ALUin with min-coalescing: a message for a register
-    /// that already has a queued message merges by `min` (min-plus
-    /// relaxation is idempotent and monotone, so this preserves the
-    /// fixpoint exactly). This is what keeps ALU contention negligible at
+    /// Insert into ALUin with coalescing: a message for a register that
+    /// already has a queued message merges by the vertex program's rule
+    /// (`min` for min-plus relaxation — idempotent and monotone, so the
+    /// fixpoint is preserved exactly; wrapping `+` for PageRank's sums;
+    /// disabled for MIS). This is what keeps ALU contention negligible at
     /// the paper's buffer sizes (§5.2.6; cf. GraphPulse's coalescer, which
     /// the paper contrasts — FLIP's is per-PE and 4 entries deep, not
     /// centralized). Returns true if merged (no new slot used).
-    fn try_coalesce(&mut self, item: AluinItem) -> bool {
+    fn try_coalesce(&mut self, item: AluinItem, vp: &dyn VertexProgram) -> bool {
         for q in self.aluin.iter_mut().chain(self.pending_matches.iter_mut()) {
             if q.reg == item.reg {
-                q.msg = q.msg.min(item.msg);
-                return true;
+                return match vp.coalesce(q.msg, item.msg) {
+                    Some(m) => {
+                        q.msg = m;
+                        true
+                    }
+                    None => false,
+                };
             }
         }
         false
@@ -190,7 +196,9 @@ impl HotCfg {
 /// The naive FLIP cycle-accurate reference simulator.
 pub struct NaiveFlipSim<'a> {
     c: &'a CompiledGraph,
-    workload: Workload,
+    vp: &'a dyn VertexProgram,
+    /// `vp.bound()` cached out of the per-message ALU path.
+    vp_bound: u32,
     opts: SimOptions,
     hot: HotCfg,
     pes: Vec<PeState>,
@@ -220,7 +228,13 @@ pub struct NaiveFlipSim<'a> {
 }
 
 impl<'a> NaiveFlipSim<'a> {
-    pub fn new(c: &'a CompiledGraph, workload: Workload, opts: SimOptions) -> NaiveFlipSim<'a> {
+    /// Build a naive stepper instance for one vertex program over a
+    /// compiled graph (mirror of [`crate::sim::FlipSim::new`]).
+    pub fn new(
+        c: &'a CompiledGraph,
+        vp: &'a dyn VertexProgram,
+        opts: SimOptions,
+    ) -> NaiveFlipSim<'a> {
         let cfg = &c.cfg;
         let num_pes = cfg.num_pes();
         let num_clusters = cfg.num_clusters();
@@ -233,7 +247,8 @@ impl<'a> NaiveFlipSim<'a> {
         }
         NaiveFlipSim {
             c,
-            workload,
+            vp,
+            vp_bound: vp.bound(),
             opts,
             hot: HotCfg::new(cfg),
             pes: (0..num_pes).map(|_| PeState::new()).collect(),
@@ -272,12 +287,13 @@ impl<'a> NaiveFlipSim<'a> {
         self.c.slice_cfg(self.resident_copy(cl), pe_idx)
     }
 
-    /// Prepare initial state for a run from `source` (ignored for WCC).
+    /// Prepare initial state for a run from `source` (ignored by dense-
+    /// seeded programs).
     fn seed(&mut self, source: u32) {
         let cfg = &self.c.cfg;
         let n = self.c.placement.slots.len();
-        let w = self.workload;
-        self.attrs = (0..n as u32).map(|v| w.init_attr(v, n)).collect();
+        let vp = self.vp;
+        self.attrs = (0..n as u32).map(|v| vp.init_attr(v, n)).collect();
         // link credits = downstream input FIFO capacity
         for pe in 0..cfg.num_pes() {
             let coord = PeCoord::from_index(pe, cfg);
@@ -290,7 +306,7 @@ impl<'a> NaiveFlipSim<'a> {
         for cl in 0..num_clusters {
             self.clusters[cl].resident = crate::compiler::Placement::slice_id(cfg, cl, 0);
         }
-        if self.workload.single_source() {
+        if self.vp.single_source() {
             // source's cluster loads the source's copy
             let s = self.c.placement.slots[source as usize];
             let cl = s.pe.cluster(cfg);
@@ -299,9 +315,13 @@ impl<'a> NaiveFlipSim<'a> {
             let pe_idx = s.pe.index(cfg);
             self.pes[pe_idx].aluin.push_back(AluinItem { reg: s.reg, msg: 0 });
         } else {
-            // WCC: every vertex scatters its initial label (host preload of
-            // the ALUout buffers; non-resident slices seed on swap-in).
+            // dense seeding (WCC/PageRank/MIS): every seeding vertex
+            // scatters its initial attribute (host preload of the ALUout
+            // buffers; non-resident slices seed on swap-in).
             for v in 0..n as u32 {
+                if !vp.seeds(v) {
+                    continue;
+                }
                 let s = self.c.placement.slots[v as usize];
                 let cl = s.pe.cluster(cfg);
                 let slice = crate::compiler::Placement::slice_id(cfg, cl, s.copy);
@@ -653,8 +673,9 @@ impl<'a> NaiveFlipSim<'a> {
         let mut must_park = false;
         if !self.pes[pe_idx].pending_matches.is_empty() {
             if self.pes[pe_idx].aluin.len() < self.hot.aluin_cap {
+                let vp = self.vp;
                 let item = self.pes[pe_idx].pending_matches.pop_front().unwrap();
-                if !self.pes[pe_idx].try_coalesce(item) {
+                if !self.pes[pe_idx].try_coalesce(item, vp) {
                     self.pes[pe_idx].aluin.push_back(item);
                 }
                 self.act.aluin_pushes += 1; // edge already counted at accept
@@ -759,9 +780,10 @@ impl<'a> NaiveFlipSim<'a> {
             if m.src_vid != src_vid {
                 continue;
             }
-            let msg = q.pkt.attr.saturating_add(self.workload.edge_weight(m.weight)).min(INF - 1);
+            let msg = self.vp.combine(q.pkt.attr, m.weight);
             let item = AluinItem { reg: m.dst_reg, msg };
-            if self.pes[pe_idx].try_coalesce(item) {
+            let vp = self.vp;
+            if self.pes[pe_idx].try_coalesce(item, vp) {
                 // merged with a queued message for the same register
                 self.edges += 1;
                 continue;
@@ -851,8 +873,9 @@ impl<'a> NaiveFlipSim<'a> {
         let vid = self.slice_cfg_of(pe_idx).vertices[item.reg as usize];
         debug_assert!(vid != u32::MAX, "ALUin item for empty DRF register");
         let attr = self.attrs[vid as usize];
-        let prog = self.workload.program();
-        let (res, new_attr) = isa::execute(prog, item.msg, attr);
+        let prog = self.vp.isa();
+        let ctx = isa::ExecCtx { aux: self.vp.aux(vid), bound: self.vp_bound };
+        let (res, new_attr) = isa::execute(prog, item.msg, attr, ctx);
         self.act.alu_ops += res.cycles;
         self.act.im_fetches += res.cycles;
         self.act.drf_reads += 1;
@@ -902,12 +925,25 @@ impl<'a> NaiveFlipSim<'a> {
     }
 }
 
-/// Run the naive reference stepper for one workload invocation.
+/// Run the naive reference stepper for one built-in (trio) workload
+/// invocation.
 pub fn run(
     c: &CompiledGraph,
     workload: Workload,
     source: u32,
     opts: &SimOptions,
 ) -> Result<RunResult, String> {
-    NaiveFlipSim::new(c, workload, opts.clone()).run(source)
+    let vp = workload.builtin_program();
+    run_program(c, vp.as_ref(), source, opts)
+}
+
+/// Run the naive reference stepper for an arbitrary vertex program
+/// (mirror of [`crate::sim::flip::run_program`]).
+pub fn run_program(
+    c: &CompiledGraph,
+    vp: &dyn VertexProgram,
+    source: u32,
+    opts: &SimOptions,
+) -> Result<RunResult, String> {
+    NaiveFlipSim::new(c, vp, opts.clone()).run(source)
 }

@@ -25,7 +25,9 @@ use std::collections::VecDeque;
 
 /// Mapped kernels + derived cost constants for one workload.
 pub struct OpCentricKernel {
+    /// The workload these kernels implement.
     pub workload: Workload,
+    /// One modulo schedule per loop-body DFG.
     pub schedules: Vec<Schedule>,
     /// Expected bank-conflict stall cycles per iteration, per kernel.
     pub conflict_stall: Vec<f64>,
@@ -82,6 +84,10 @@ pub fn run(k: &OpCentricKernel, g: &Graph, source: u32) -> RunResult {
         Workload::Bfs => run_bfs(k, g, source),
         Workload::Wcc => run_wcc(k, g),
         Workload::Sssp => run_sssp(k, g, source),
+        _ => unimplemented!(
+            "the op-centric baseline covers the paper trio only (got {})",
+            k.workload.name()
+        ),
     }
 }
 

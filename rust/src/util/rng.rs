@@ -11,6 +11,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seed a new generator (same seed ⇒ same stream, everywhere).
     pub fn new(seed: u64) -> Self {
         // SplitMix64 expansion of the seed into the xoshiro state.
         let mut sm = seed;
@@ -24,6 +25,7 @@ impl Rng {
         Rng { s: [next(), next(), next(), next()] }
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);

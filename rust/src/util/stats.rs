@@ -48,13 +48,19 @@ pub fn quantile(xs: &[f64], q: f64) -> f64 {
 /// Five-number summary (min, q25, median, q75, max) for box plots (Fig 11).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FiveNum {
+    /// Minimum.
     pub min: f64,
+    /// First quartile.
     pub q25: f64,
+    /// Median.
     pub median: f64,
+    /// Third quartile.
     pub q75: f64,
+    /// Maximum.
     pub max: f64,
 }
 
+/// Compute the five-number summary of a sample.
 pub fn five_num(xs: &[f64]) -> FiveNum {
     FiveNum {
         min: quantile(xs, 0.0),

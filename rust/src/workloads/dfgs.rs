@@ -28,6 +28,7 @@ pub enum OpCat {
 }
 
 impl OpCat {
+    /// Fig-3 category label.
     pub fn name(self) -> &'static str {
         match self {
             OpCat::MemAccess => "Memory Access",
@@ -41,6 +42,7 @@ impl OpCat {
 /// One DFG node.
 #[derive(Debug, Clone)]
 pub struct Op {
+    /// Operation category (Fig 3 census classes).
     pub cat: OpCat,
     /// Result latency in cycles (SPM load = 2, others = 1).
     pub latency: u32,
@@ -49,7 +51,9 @@ pub struct Op {
 /// A loop-body DFG plus its loop-carried recurrences.
 #[derive(Debug, Clone)]
 pub struct Dfg {
+    /// Kernel name (reports).
     pub name: String,
+    /// DFG nodes.
     pub ops: Vec<Op>,
     /// Intra-iteration dependencies (producer -> consumer).
     pub edges: Vec<(u32, u32)>,
@@ -69,6 +73,7 @@ pub struct Dfg {
 }
 
 impl Dfg {
+    /// Node count.
     pub fn num_ops(&self) -> usize {
         self.ops.len()
     }
@@ -348,12 +353,18 @@ pub fn sssp_update_dfg() -> Dfg {
     d
 }
 
-/// The DFG(s) the classic CGRA maps for a workload.
+/// The DFG(s) the classic CGRA maps for a workload. Only the paper trio
+/// has op-centric loop bodies (Fig 3); the extended vertex-program
+/// workloads exist solely in the data-centric mode.
 pub fn dfgs_for(w: Workload) -> Vec<Dfg> {
     match w {
         Workload::Bfs => vec![bfs_dfg()],
         Workload::Wcc => vec![wcc_dfg()],
         Workload::Sssp => vec![sssp_search_dfg(), sssp_update_dfg()],
+        _ => unimplemented!(
+            "no op-centric DFG for the extended workload {}",
+            w.name()
+        ),
     }
 }
 

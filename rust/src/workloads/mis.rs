@@ -1,0 +1,217 @@
+//! Randomized maximal independent set on the vertex-program layer
+//! (DESIGN.md §5.5) — edge scheduling/resource-arbitration style workload
+//! with frozen randomness.
+//!
+//! The algorithm is greedy MIS under a random vertex order: draw a
+//! priority permutation `π` once from the deterministic [`Rng`] (the
+//! [`VertexProgram`] determinism contract forbids in-flight randomness),
+//! then iterate the unique fixpoint of
+//!
+//! * some neighbor `u` with `π(u) < π(v)` is IN  ⇒  `v` is OUT,
+//! * every neighbor `u` with `π(u) < π(v)` is OUT ⇒  `v` is IN,
+//!
+//! asynchronously: each vertex counts its undecided *dominators*
+//! (smaller-`π` neighbors), decides when the count hits zero or a
+//! dominator joins the set, and announces its decision exactly once.
+//! Decisions are monotone (never revoked), so the fabric's
+//! timing-dependent delivery order cannot change the outcome — the result
+//! always equals [`reference::greedy_mis`].
+//!
+//! **Encoding.** Attributes: `0` = OUT, `1` = IN, `c + 2` = undecided
+//! with `c` undecided dominators. Messages (formed by `combine` from the
+//! sender's attribute and the arc's dominance flag): `0` = "a dominator
+//! is IN", `1` = "a dominator went OUT", `≥ 2` = discard. Dominance is
+//! baked into the compiled *view* ([`Mis::build`]): each undirected edge
+//! becomes two arcs whose stored edge attribute is 1 on the dominating
+//! direction and 0 on the other — the Intra-Table's edge attributes used
+//! as per-arc program inputs rather than path costs. ALUin coalescing is
+//! disabled: two OUT announcements must decrement the counter twice
+//! ([`isa::PROG_MIS`]).
+
+use crate::arch::isa::{self, Instr};
+use crate::compiler::CompiledGraph;
+use crate::graph::{reference, Graph};
+use crate::metrics::RunResult;
+use crate::sim::{flip, SimOptions};
+use crate::util::Rng;
+use crate::workloads::program::VertexProgram;
+
+/// Final attribute: vertex is outside the set.
+pub const ATTR_OUT: u32 = 0;
+/// Final attribute: vertex is in the independent set.
+pub const ATTR_IN: u32 = 1;
+
+/// A maximal-independent-set program instance: frozen priorities plus the
+/// precomputed initial dominator counts for its compiled view.
+#[derive(Debug, Clone)]
+pub struct Mis {
+    /// Priority permutation: `prio[v]` ranks vertex `v` (smaller wins).
+    pub prio: Vec<u32>,
+    /// Initial attribute per vertex (IN for local minima, dominator
+    /// count + 2 otherwise).
+    init: Vec<u32>,
+}
+
+impl Mis {
+    /// Freeze priorities from `seed` and build the dominance view of `g`
+    /// to compile: every undirected edge `{u,v}` becomes arcs `u→v` and
+    /// `v→u` whose weight flags whether the *source* dominates the
+    /// destination (`π(src) < π(dst)`). Directed inputs are first closed
+    /// into their undirected neighborhood (independence ignores arc
+    /// direction).
+    pub fn build(g: &Graph, seed: u64) -> (Mis, Graph) {
+        let n = g.num_vertices();
+        let mut prio: Vec<u32> = (0..n as u32).collect();
+        Rng::new(seed).shuffle(&mut prio);
+        let mut und: std::collections::BTreeSet<(u32, u32)> = Default::default();
+        for (u, v, _) in g.arcs() {
+            // a self-loop must not make a vertex its own (undecidable)
+            // dominator; independence only constrains distinct endpoints
+            if u != v {
+                und.insert((u.min(v), u.max(v)));
+            }
+        }
+        let mut edges = Vec::with_capacity(2 * und.len());
+        let mut dominators = vec![0u32; n];
+        for &(a, b) in &und {
+            let a_wins = prio[a as usize] < prio[b as usize];
+            edges.push((a, b, a_wins as u32));
+            edges.push((b, a, (!a_wins) as u32));
+            dominators[if a_wins { b } else { a } as usize] += 1;
+        }
+        let init = dominators
+            .iter()
+            .map(|&c| if c == 0 { ATTR_IN } else { c + 2 })
+            .collect();
+        (Mis { prio, init }, Graph::from_edges(n, &edges, true))
+    }
+}
+
+impl VertexProgram for Mis {
+    fn name(&self) -> &'static str {
+        "MIS"
+    }
+
+    fn isa(&self) -> &[Instr] {
+        isa::PROG_MIS
+    }
+
+    fn init_attr(&self, vid: u32, _n: usize) -> u32 {
+        self.init[vid as usize]
+    }
+
+    fn combine(&self, attr: u32, weight: u32) -> u32 {
+        if weight == 0 {
+            // sender does not dominate this vertex: discard
+            u32::MAX
+        } else {
+            match attr {
+                ATTR_IN => 0,  // "a dominator is IN"
+                ATTR_OUT => 1, // "a dominator went OUT"
+                _ => u32::MAX, // undecided seed scatter: discard
+            }
+        }
+    }
+
+    fn coalesce(&self, _queued: u32, _incoming: u32) -> Option<u32> {
+        // every decision message must be counted individually
+        None
+    }
+
+    fn single_source(&self) -> bool {
+        false
+    }
+
+    fn seeds(&self, vid: u32) -> bool {
+        // only initially-decided vertices (local priority minima) carry
+        // information; undecided seeds would be discarded at the receiver
+        self.init[vid as usize] == ATTR_IN
+    }
+
+    fn reference(&self, view: &Graph, _source: u32) -> Vec<u32> {
+        reference::greedy_mis(view, &self.prio)
+    }
+}
+
+/// Run one MIS instance on the fabric compiled for its dominance view.
+pub fn run(c: &CompiledGraph, mis: &Mis, opts: &SimOptions) -> Result<RunResult, String> {
+    flip::run_program(c, mis, 0, opts)
+}
+
+/// True if `attrs` (1 = in set) is independent on `g` (arcs read as
+/// undirected).
+pub fn is_independent(g: &Graph, attrs: &[u32]) -> bool {
+    g.arcs().all(|(u, v, _)| !(attrs[u as usize] == ATTR_IN && attrs[v as usize] == ATTR_IN))
+}
+
+/// True if every vertex outside the set has an in-set neighbor (arcs read
+/// as undirected).
+pub fn is_maximal(g: &Graph, attrs: &[u32]) -> bool {
+    let n = g.num_vertices();
+    let mut blocked = vec![false; n];
+    for (u, v, _) in g.arcs() {
+        if attrs[u as usize] == ATTR_IN {
+            blocked[v as usize] = true;
+        }
+        if attrs[v as usize] == ATTR_IN {
+            blocked[u as usize] = true;
+        }
+    }
+    (0..n).all(|v| attrs[v] == ATTR_IN || blocked[v])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOpts};
+    use crate::config::ArchConfig;
+    use crate::graph::generate;
+
+    fn run_mis(g: &Graph, seed: u64) -> (Mis, Graph, RunResult) {
+        let (mis, view) = Mis::build(g, seed);
+        let cfg = ArchConfig::default();
+        let c = compile(&view, &cfg, &CompileOpts::default());
+        let r = run(&c, &mis, &SimOptions::default()).unwrap();
+        (mis, view, r)
+    }
+
+    #[test]
+    fn simulated_mis_matches_greedy_oracle() {
+        let g = generate::road_network(64, 146, 166, 23);
+        let (mis, view, r) = run_mis(&g, 0xA11CE);
+        assert_eq!(r.attrs, mis.reference(&view, 0));
+        assert!(is_independent(&view, &r.attrs));
+        assert!(is_maximal(&view, &r.attrs));
+        assert!(r.attrs.iter().filter(|&&a| a == ATTR_IN).count() > 0);
+    }
+
+    #[test]
+    fn directed_inputs_use_undirected_independence() {
+        let g = generate::synthetic(48, 96, 29);
+        let (mis, view, r) = run_mis(&g, 7);
+        // the dominance view materializes both arcs of every edge
+        assert!(view.is_directed() && view.num_arcs() % 2 == 0);
+        assert_eq!(r.attrs, mis.reference(&view, 0));
+        assert!(is_independent(&view, &r.attrs));
+        assert!(is_maximal(&view, &r.attrs));
+    }
+
+    #[test]
+    fn priorities_are_deterministic_in_seed() {
+        let g = generate::road_network(64, 146, 166, 31);
+        let (a, _) = Mis::build(&g, 42);
+        let (b, _) = Mis::build(&g, 42);
+        assert_eq!(a.prio, b.prio);
+        let (c, _) = Mis::build(&g, 43);
+        assert_ne!(a.prio, c.prio, "different seed, different order");
+    }
+
+    #[test]
+    fn local_minima_seed_in() {
+        let g = Graph::from_edges(3, &[(0, 1, 1), (1, 2, 1)], false);
+        let (mis, _) = Mis::build(&g, 1);
+        let min_v =
+            (0..3u32).min_by_key(|&v| mis.prio[v as usize]).unwrap();
+        assert_eq!(mis.init_attr(min_v, 3), ATTR_IN, "global minimum starts IN");
+    }
+}

@@ -1,92 +1,125 @@
-//! Graph workloads (paper Table 3): BFS, SSSP, WCC in the vertex-centric
-//! programming model, plus the op-centric DFGs for the classic-CGRA
-//! baseline ([`dfgs`]).
+//! Graph workloads: the paper's Table-3 trio (BFS, SSSP, WCC) plus the
+//! extended scenarios built on the pluggable vertex-program layer
+//! ([`program`]) — PageRank rounds ([`pagerank`]), A*/ALT point-to-point
+//! navigation ([`navigation`]) and randomized maximal independent set
+//! ([`mis`]) — and the op-centric DFGs for the classic-CGRA baseline
+//! ([`dfgs`]).
+//!
+//! [`Workload`] is the *name*: a parseable identifier for CLIs, reports
+//! and sweeps. The *behaviour* lives in [`program::VertexProgram`]
+//! instances; the trio's are stateless and available via
+//! [`Workload::builtin_program`], while the extended workloads carry
+//! graph-derived state (contributions, heuristics, priorities) and are
+//! built by their modules' constructors.
 
 pub mod dfgs;
+pub mod mis;
+pub mod navigation;
+pub mod pagerank;
+pub mod program;
 
-use crate::arch::isa::{self, Instr};
-use crate::graph::{Graph, INF};
+use crate::graph::Graph;
+use program::{LabelProp, Relax, VertexProgram};
 
-/// The three evaluation workloads (Table 3).
+/// Workload identifier: the paper trio plus the extended scenarios.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Workload {
+    /// Breadth-first search levels (paper Table 3).
     Bfs,
+    /// Single-source shortest paths (paper Table 3).
     Sssp,
+    /// Weakly-connected components (paper Table 3).
     Wcc,
+    /// Fixed-iteration PageRank rounds ([`pagerank`]).
+    PageRank,
+    /// A*-style bounded point-to-point navigation ([`navigation`]).
+    AStar,
+    /// Randomized maximal independent set ([`mis`]).
+    Mis,
 }
 
 impl Workload {
+    /// The paper's three evaluation workloads (Table 3) — what the
+    /// figure/table experiment drivers and hardware baselines sweep.
     pub const ALL: [Workload; 3] = [Workload::Bfs, Workload::Sssp, Workload::Wcc];
 
+    /// The extended scenarios on the vertex-program layer (driven by the
+    /// `scenarios` experiment, not the paper-artifact sweeps).
+    pub const EXTENDED: [Workload; 3] = [Workload::PageRank, Workload::AStar, Workload::Mis];
+
+    /// Display name.
     pub fn name(self) -> &'static str {
         match self {
             Workload::Bfs => "BFS",
             Workload::Sssp => "SSSP",
             Workload::Wcc => "WCC",
+            Workload::PageRank => "PageRank",
+            Workload::AStar => "A*",
+            Workload::Mis => "MIS",
         }
     }
 
+    /// Parse a CLI name.
     pub fn parse(s: &str) -> Option<Workload> {
         match s.to_ascii_lowercase().as_str() {
             "bfs" => Some(Workload::Bfs),
             "sssp" => Some(Workload::Sssp),
             "wcc" => Some(Workload::Wcc),
+            "pagerank" | "pr" => Some(Workload::PageRank),
+            "astar" | "a*" | "nav" => Some(Workload::AStar),
+            "mis" => Some(Workload::Mis),
             _ => None,
         }
     }
 
-    /// The vertex program stored in every PE's Instruction Memory.
-    pub fn program(self) -> &'static [Instr] {
+    /// True for the extended scenarios whose programs carry graph-derived
+    /// state (see [`Workload::builtin_program`]).
+    pub fn is_extended(self) -> bool {
+        matches!(self, Workload::PageRank | Workload::AStar | Workload::Mis)
+    }
+
+    /// The stateless built-in program of a trio workload.
+    ///
+    /// Panics for the extended workloads: their programs need per-graph
+    /// state — construct them via [`pagerank::run_rounds`],
+    /// [`navigation::AStar::new`] / [`navigation::plan`] or
+    /// [`mis::Mis::build`] instead.
+    pub fn builtin_program(self) -> Box<dyn VertexProgram> {
         match self {
-            Workload::Bfs | Workload::Sssp => isa::PROG_RELAX,
-            Workload::Wcc => isa::PROG_WCC,
+            Workload::Bfs => Box::new(Relax::bfs()),
+            Workload::Sssp => Box::new(Relax::sssp()),
+            Workload::Wcc => Box::new(LabelProp),
+            _ => panic!(
+                "{} carries graph-derived state; build it via \
+                 workloads::{{pagerank, navigation, mis}}",
+                self.name()
+            ),
         }
     }
 
-    /// Effective edge weight seen by the Intra-Table stage: BFS counts
-    /// hops, SSSP uses the stored weight, WCC propagates labels unchanged.
-    #[inline]
-    pub fn edge_weight(self, stored_weight: u32) -> u32 {
-        match self {
-            Workload::Bfs => 1,
-            Workload::Sssp => stored_weight,
-            Workload::Wcc => 0,
-        }
-    }
-
-    /// Initial vertex attribute.
-    #[inline]
-    pub fn init_attr(self, vid: u32, _n: usize) -> u32 {
-        match self {
-            Workload::Bfs | Workload::Sssp => INF,
-            Workload::Wcc => vid,
-        }
-    }
-
-    /// True if the workload starts from a single source vertex (BFS/SSSP);
-    /// WCC starts with every vertex scattering its own label.
+    /// True if the workload starts from a single source vertex; dense-
+    /// seeded workloads (WCC/PageRank/MIS) ignore the source argument.
     pub fn single_source(self) -> bool {
-        !matches!(self, Workload::Wcc)
+        !matches!(self, Workload::Wcc | Workload::PageRank | Workload::Mis)
     }
 
     /// WCC must propagate over the undirected closure (weak connectivity);
-    /// BFS/SSSP follow the stored arc direction.
+    /// every other workload maps the graph (or its own view) as stored.
     pub fn needs_undirected(self) -> bool {
         matches!(self, Workload::Wcc)
     }
 
-    /// Functional reference output for validation (native Rust oracle).
+    /// Functional reference output of a trio workload (panics for the
+    /// extended ones — their oracles live on their program instances).
     pub fn reference(self, g: &Graph, source: u32) -> Vec<u32> {
-        match self {
-            Workload::Bfs => crate::graph::reference::bfs_levels(g, source),
-            Workload::Sssp => crate::graph::reference::dijkstra(g, source),
-            Workload::Wcc => crate::graph::reference::wcc_labels(g),
-        }
+        self.builtin_program().reference(g, source)
     }
 }
 
-/// The graph actually mapped for a workload: WCC uses the undirected
-/// closure of directed graphs so weak connectivity propagates.
+/// The graph actually mapped for a trio workload: WCC uses the undirected
+/// closure of directed graphs so weak connectivity propagates. (MIS
+/// compiles its own dominance view — see [`mis::Mis::build`]; PageRank
+/// and A* map the graph as stored.)
 pub fn view_for(workload: Workload, g: &Graph) -> Graph {
     if workload.needs_undirected() && g.is_directed() {
         let edges: Vec<(u32, u32, u32)> = g.arcs().collect();
@@ -101,16 +134,16 @@ mod tests {
     use super::*;
 
     #[test]
-    fn weights_per_workload() {
-        assert_eq!(Workload::Bfs.edge_weight(7), 1);
-        assert_eq!(Workload::Sssp.edge_weight(7), 7);
-        assert_eq!(Workload::Wcc.edge_weight(7), 0);
+    fn builtin_combine_semantics_per_workload() {
+        assert_eq!(Workload::Bfs.builtin_program().combine(3, 7), 4);
+        assert_eq!(Workload::Sssp.builtin_program().combine(3, 7), 10);
+        assert_eq!(Workload::Wcc.builtin_program().combine(3, 7), 3);
     }
 
     #[test]
-    fn init_attrs() {
-        assert_eq!(Workload::Bfs.init_attr(5, 10), INF);
-        assert_eq!(Workload::Wcc.init_attr(5, 10), 5);
+    fn builtin_init_attrs() {
+        assert_eq!(Workload::Bfs.builtin_program().init_attr(5, 10), crate::graph::INF);
+        assert_eq!(Workload::Wcc.builtin_program().init_attr(5, 10), 5);
     }
 
     #[test]
@@ -126,8 +159,25 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for w in Workload::ALL {
+        for w in Workload::ALL.into_iter().chain(Workload::EXTENDED) {
             assert_eq!(Workload::parse(w.name()), Some(w));
         }
+    }
+
+    #[test]
+    fn extended_flags_consistent() {
+        for w in Workload::EXTENDED {
+            assert!(w.is_extended());
+            assert!(!w.needs_undirected());
+        }
+        for w in Workload::ALL {
+            assert!(!w.is_extended());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "graph-derived state")]
+    fn extended_builtin_program_panics() {
+        let _ = Workload::PageRank.builtin_program();
     }
 }

@@ -1,0 +1,260 @@
+//! A*-style point-to-point navigation on the vertex-program layer
+//! (DESIGN.md §5.4) — the paper's §1 motivating scenario ("navigation in
+//! small robots") upgraded from plain SSSP to goal-directed search.
+//!
+//! A hardware NoC has no global priority queue, so the classic A* "expand
+//! best f first" ordering cannot be enforced across PEs. What *can* be
+//! enforced — per vertex, with only local state — is the ALT-style
+//! bounded-frontier rule: after relaxing to a new distance `g(v)`, a
+//! vertex re-scatters only while `g(v) + h(v) ≤ B`, where `h` is an
+//! admissible landmark heuristic and `B` an upper bound on `d(s,t)`
+//! ([`isa::PROG_ASTAR`]). Packets whose best-case route through `v`
+//! already exceeds the budget die at `v`, so the frontier collapses
+//! toward the goal instead of flooding the graph — the priority frontier
+//! realized as *pruning* rather than ordering. The guard is monotone in
+//! `g`, so the run converges to the unique least fixpoint computed by
+//! [`reference::astar_bounded`] regardless of delivery order, and
+//! `attrs[target]` is the exact shortest distance.
+//!
+//! Preprocessing ([`Landmarks::build`]) picks landmarks by farthest-point
+//! sampling and runs one host Dijkstra per landmark — the standard ALT
+//! preparation, done once per graph; [`Landmarks::query`] then derives a
+//! per-query program for free (the same "map once, query many"
+//! economics as `examples/navigation.rs`).
+
+use crate::arch::isa::{self, Instr};
+use crate::compiler::CompiledGraph;
+use crate::graph::{reference, Graph, INF};
+use crate::metrics::RunResult;
+use crate::sim::{flip, SimOptions};
+use crate::workloads::program::VertexProgram;
+
+/// Query-independent ALT preprocessing for one graph: the per-landmark
+/// distance vectors. Build once per mapped graph, derive one [`AStar`]
+/// program per query — the "map once, query many" economics.
+#[derive(Debug, Clone)]
+pub struct Landmarks {
+    /// One full Dijkstra distance vector per landmark.
+    dists: Vec<Vec<u32>>,
+}
+
+impl Landmarks {
+    /// Farthest-point sample `num_landmarks` landmarks on undirected `g`
+    /// (start at vertex 0, then repeatedly take the vertex maximizing the
+    /// distance to the current set; lowest id wins ties) and run one host
+    /// Dijkstra per landmark.
+    ///
+    /// Panics on directed graphs: landmark triangle bounds need symmetric
+    /// distances (road networks are undirected).
+    pub fn build(g: &Graph, num_landmarks: usize) -> Landmarks {
+        assert!(!g.is_directed(), "ALT landmarks need an undirected graph");
+        let n = g.num_vertices();
+        let mut dists: Vec<Vec<u32>> = vec![reference::dijkstra(g, 0)];
+        while dists.len() < num_landmarks.max(1).min(n) {
+            let far = (0..n as u32)
+                .max_by_key(|&v| {
+                    let d = dists
+                        .iter()
+                        .map(|dl| dl[v as usize])
+                        .filter(|&d| d != INF)
+                        .min()
+                        .unwrap_or(0);
+                    (d, std::cmp::Reverse(v))
+                })
+                .unwrap_or(0);
+            dists.push(reference::dijkstra(g, far));
+        }
+        Landmarks { dists }
+    }
+
+    /// Landmark count actually used.
+    pub fn num_landmarks(&self) -> usize {
+        self.dists.len()
+    }
+
+    /// Derive the bounded query program for `source → target`:
+    /// `h(v) = max_L |d(L,t) − d(L,v)|` (triangle lower bound) and
+    /// `B = min_L d(L,s) + d(L,t)` (triangle upper bound).
+    pub fn query(&self, source: u32, target: u32) -> AStar {
+        let n = self.dists[0].len();
+        assert!((source as usize) < n && (target as usize) < n, "query vertex out of range");
+        let h: Vec<u32> = (0..n)
+            .map(|v| {
+                self.dists
+                    .iter()
+                    .map(|dl| {
+                        let (dt, dv) = (dl[target as usize], dl[v]);
+                        if dt == INF || dv == INF {
+                            0
+                        } else {
+                            dt.abs_diff(dv)
+                        }
+                    })
+                    .max()
+                    .unwrap_or(0)
+            })
+            .collect();
+        let bound = self
+            .dists
+            .iter()
+            .map(|dl| {
+                let (ds, dt) = (dl[source as usize], dl[target as usize]);
+                if ds == INF || dt == INF {
+                    INF
+                } else {
+                    ds.saturating_add(dt)
+                }
+            })
+            .min()
+            .unwrap_or(INF);
+        AStar { target, h, bound }
+    }
+}
+
+/// A bounded goal-directed query program: SSSP relaxation with the
+/// `g + h ≤ B` scatter guard.
+#[derive(Debug, Clone)]
+pub struct AStar {
+    /// Query target (diagnostics; the guard encodes it via `h`).
+    pub target: u32,
+    /// Admissible per-vertex heuristic `h(v) ≤ d(v, target)`.
+    h: Vec<u32>,
+    /// Route budget `B ≥ d(source, target)`.
+    bound: u32,
+}
+
+impl AStar {
+    /// One-shot convenience: [`Landmarks::build`] + [`Landmarks::query`].
+    /// Prefer holding a [`Landmarks`] when serving several queries on one
+    /// graph.
+    pub fn new(g: &Graph, source: u32, target: u32, num_landmarks: usize) -> AStar {
+        Landmarks::build(g, num_landmarks).query(source, target)
+    }
+
+    /// The route budget this query prunes against.
+    pub fn route_budget(&self) -> u32 {
+        self.bound
+    }
+
+    /// The heuristic value of one vertex (diagnostics/tests).
+    pub fn heuristic(&self, v: u32) -> u32 {
+        self.h[v as usize]
+    }
+}
+
+impl VertexProgram for AStar {
+    fn name(&self) -> &'static str {
+        "A*"
+    }
+
+    fn isa(&self) -> &[Instr] {
+        isa::PROG_ASTAR
+    }
+
+    fn init_attr(&self, _vid: u32, _n: usize) -> u32 {
+        INF
+    }
+
+    fn combine(&self, attr: u32, weight: u32) -> u32 {
+        attr.saturating_add(weight).min(INF - 1)
+    }
+
+    fn aux(&self, vid: u32) -> u32 {
+        self.h[vid as usize]
+    }
+
+    fn bound(&self) -> u32 {
+        self.bound
+    }
+
+    fn single_source(&self) -> bool {
+        true
+    }
+
+    fn reference(&self, view: &Graph, source: u32) -> Vec<u32> {
+        reference::astar_bounded(view, source, &self.h, self.bound)
+    }
+}
+
+/// One answered navigation query.
+#[derive(Debug, Clone)]
+pub struct NavPlan {
+    /// Exact shortest distance `d(source, target)` (`INF` = unreachable).
+    pub distance: u32,
+    /// The full bounded run (cycles, packets, activity for energy).
+    pub run: RunResult,
+}
+
+/// Answer one point-to-point query on the compiled fabric. `lm` must be
+/// the [`Landmarks`] of the exact graph `c` was compiled from (built
+/// once, reused across queries).
+pub fn plan(
+    c: &CompiledGraph,
+    lm: &Landmarks,
+    source: u32,
+    target: u32,
+    opts: &SimOptions,
+) -> Result<NavPlan, String> {
+    let vp = lm.query(source, target);
+    let run = flip::run_program(c, &vp, source, opts)?;
+    Ok(NavPlan { distance: run.attrs[target as usize], run })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOpts};
+    use crate::config::ArchConfig;
+    use crate::graph::generate;
+    use crate::workloads::Workload;
+
+    #[test]
+    fn heuristic_is_admissible_and_bound_is_upper() {
+        let g = generate::road_network(64, 146, 166, 13);
+        let (s, t) = (3u32, 60u32);
+        let vp = AStar::new(&g, s, t, 4);
+        let exact = reference::dijkstra(&g, t); // d(v,t), undirected
+        for v in 0..64u32 {
+            assert!(
+                vp.heuristic(v) <= exact[v as usize],
+                "h({v}) = {} > d = {}",
+                vp.heuristic(v),
+                exact[v as usize]
+            );
+        }
+        let d_st = reference::dijkstra(&g, s)[t as usize];
+        assert!(vp.route_budget() >= d_st, "budget below true distance");
+    }
+
+    #[test]
+    fn plan_finds_exact_distance_with_fewer_packets() {
+        let g = generate::road_network(96, 219, 249, 17);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts::default());
+        let lm = Landmarks::build(&g, 4);
+        let (s, t) = (0u32, 90u32);
+        let p = plan(&c, &lm, s, t, &SimOptions::default()).unwrap();
+        assert_eq!(p.distance, reference::dijkstra(&g, s)[t as usize]);
+        // Goal-direction should prune the flood. Packet counts are not a
+        // strict invariant (A*'s longer ALU paths shift delivery timing,
+        // which changes how many messages coalesce), so allow 10% slack
+        // rather than asserting a hard subset.
+        let sssp = flip::run(&c, Workload::Sssp, s, &SimOptions::default()).unwrap();
+        assert!(
+            p.run.sim.packets_delivered <= sssp.sim.packets_delivered * 11 / 10,
+            "A* {} far exceeds SSSP {}",
+            p.run.sim.packets_delivered,
+            sssp.sim.packets_delivered
+        );
+    }
+
+    #[test]
+    fn simulated_attrs_equal_bounded_oracle() {
+        let g = generate::road_network(64, 146, 166, 19);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts::default());
+        let vp = AStar::new(&g, 5, 33, 4);
+        let r = flip::run_program(&c, &vp, 5, &SimOptions::default()).unwrap();
+        assert_eq!(r.attrs, vp.reference(&g, 5));
+    }
+}

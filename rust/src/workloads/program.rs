@@ -1,0 +1,230 @@
+//! The pluggable vertex-program layer (DESIGN.md §5).
+//!
+//! FLIP's defining idea is that the *vertex program* — not a fixed
+//! operator schedule — drives dynamic frontier evolution (paper §2). The
+//! seed reproduction hardcoded the three paper workloads (BFS/SSSP/WCC)
+//! across the ISA, both simulator cores, and the references; this module
+//! factors everything algorithm-specific into one [`VertexProgram`] trait
+//! so new workloads plug into the unchanged machine:
+//!
+//! * **initialisation** — the per-vertex attribute preloaded into the DRF
+//!   ([`VertexProgram::init_attr`]) and whether the run bootstraps from a
+//!   single source packet or a dense all-vertex scatter
+//!   ([`VertexProgram::single_source`]);
+//! * **the Intra-Table combine stage** — how an arriving packet's
+//!   attribute and the stored edge attribute form the ALU message
+//!   ([`VertexProgram::combine`], paper §3.1);
+//! * **ALUin coalescing** — whether two queued messages for the same DRF
+//!   register merge, and how ([`VertexProgram::coalesce`]; must be
+//!   semantics-preserving: `min` for min-plus relaxation, wrapping `+` for
+//!   PageRank's sums, disabled for MIS's counting automaton);
+//! * **the per-message ALU step** — the Instruction-Memory program
+//!   ([`VertexProgram::isa`]) plus its per-vertex auxiliary constant and
+//!   per-run bound register ([`VertexProgram::aux`],
+//!   [`VertexProgram::bound`], see [`crate::arch::isa::ExecCtx`]);
+//! * **the functional oracle** — a CPU reference computing the exact
+//!   fixpoint the asynchronous fabric must reach
+//!   ([`VertexProgram::reference`]).
+//!
+//! **Determinism contract.** The simulator delivers messages in a
+//! timing-dependent (but fully deterministic) order. A conforming program
+//! must make the final attribute vector independent of delivery order:
+//! its update must be monotone over a lattice (min-relaxation, monotone
+//! decision automata) or commutative-associative (wrapping sums), and any
+//! randomness must be frozen into per-vertex constants *before* the run
+//! (MIS draws its priorities from [`crate::util::Rng`] at build time).
+//! `tests/property.rs` enforces the contract by comparing both simulator
+//! cores and the CPU reference on random graphs.
+
+use crate::arch::isa::{self, Instr};
+use crate::graph::{Graph, INF};
+
+/// One graph algorithm expressed against FLIP's data-centric machine.
+///
+/// Implementations must be cheap to query: `combine`, `coalesce` and
+/// `aux` sit on the simulator's per-packet hot path.
+pub trait VertexProgram: Sync {
+    /// Human-readable name (reports, panics).
+    fn name(&self) -> &'static str;
+
+    /// The program loaded into every PE's Instruction Memory.
+    fn isa(&self) -> &[Instr];
+
+    /// Initial attribute of vertex `vid` (`n` = vertex count).
+    fn init_attr(&self, vid: u32, n: usize) -> u32;
+
+    /// Intra-Table combine stage (paper §3.1): the ALU message formed from
+    /// an arriving packet's attribute and the stored edge attribute.
+    fn combine(&self, attr: u32, weight: u32) -> u32;
+
+    /// Merge rule for two messages queued for the same DRF register:
+    /// `Some(merged)` coalesces (the default `min` preserves min-plus
+    /// fixpoints exactly), `None` keeps the messages separate.
+    fn coalesce(&self, queued: u32, incoming: u32) -> Option<u32> {
+        Some(queued.min(incoming))
+    }
+
+    /// Per-vertex auxiliary constant (second DRF lane) read by
+    /// [`Instr::AddAuxSat`]. Classic programs never read it.
+    fn aux(&self, _vid: u32) -> u32 {
+        0
+    }
+
+    /// Per-run bound register read by [`Instr::HaltGtBound`].
+    fn bound(&self) -> u32 {
+        u32::MAX
+    }
+
+    /// True if the run bootstraps from a single source packet; false for
+    /// dense seeding (seeding vertices' initial attributes are preloaded
+    /// into their ALUout and scattered, the WCC/PageRank/MIS pattern).
+    fn single_source(&self) -> bool;
+
+    /// Dense-seeding filter: whether vertex `vid` scatters its initial
+    /// attribute at boot (ignored for single-source programs). Default:
+    /// every vertex. MIS restricts this to its local priority minima —
+    /// the only vertices whose initial state carries information.
+    fn seeds(&self, _vid: u32) -> bool {
+        true
+    }
+
+    /// CPU oracle: the exact attribute vector the fabric must produce for
+    /// this program on `view` (the graph as compiled) from `source`
+    /// (ignored by dense-seeded programs).
+    fn reference(&self, view: &Graph, source: u32) -> Vec<u32>;
+}
+
+/// BFS / SSSP: min-plus relaxation from a single source. BFS counts hops
+/// (unit edge weight), SSSP adds the stored weight. Bit-identical to the
+/// pre-trait hardcoded implementation.
+#[derive(Debug, Clone, Copy)]
+pub struct Relax {
+    /// `false` = BFS (unit weights), `true` = SSSP (stored weights).
+    pub use_weights: bool,
+}
+
+impl Relax {
+    /// The BFS program (hop counting).
+    pub fn bfs() -> Relax {
+        Relax { use_weights: false }
+    }
+
+    /// The SSSP program (stored edge weights).
+    pub fn sssp() -> Relax {
+        Relax { use_weights: true }
+    }
+}
+
+impl VertexProgram for Relax {
+    fn name(&self) -> &'static str {
+        if self.use_weights {
+            "SSSP"
+        } else {
+            "BFS"
+        }
+    }
+
+    fn isa(&self) -> &[Instr] {
+        isa::PROG_RELAX
+    }
+
+    fn init_attr(&self, _vid: u32, _n: usize) -> u32 {
+        INF
+    }
+
+    fn combine(&self, attr: u32, weight: u32) -> u32 {
+        let w = if self.use_weights { weight } else { 1 };
+        attr.saturating_add(w).min(INF - 1)
+    }
+
+    fn single_source(&self) -> bool {
+        true
+    }
+
+    fn reference(&self, view: &Graph, source: u32) -> Vec<u32> {
+        if self.use_weights {
+            crate::graph::reference::dijkstra(view, source)
+        } else {
+            crate::graph::reference::bfs_levels(view, source)
+        }
+    }
+}
+
+/// WCC: minimum-label propagation over the undirected closure, seeded by
+/// every vertex scattering its own id. Bit-identical to the pre-trait
+/// hardcoded implementation.
+#[derive(Debug, Clone, Copy)]
+pub struct LabelProp;
+
+impl VertexProgram for LabelProp {
+    fn name(&self) -> &'static str {
+        "WCC"
+    }
+
+    fn isa(&self) -> &[Instr] {
+        isa::PROG_WCC
+    }
+
+    fn init_attr(&self, vid: u32, _n: usize) -> u32 {
+        vid
+    }
+
+    fn combine(&self, attr: u32, _weight: u32) -> u32 {
+        // labels propagate unchanged (effective edge weight 0)
+        attr.min(INF - 1)
+    }
+
+    fn single_source(&self) -> bool {
+        false
+    }
+
+    fn reference(&self, view: &Graph, _source: u32) -> Vec<u32> {
+        crate::graph::reference::wcc_labels(view)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relax_combine_matches_pre_trait_semantics() {
+        let bfs = Relax::bfs();
+        let sssp = Relax::sssp();
+        assert_eq!(bfs.combine(3, 7), 4, "BFS counts hops");
+        assert_eq!(sssp.combine(3, 7), 10, "SSSP adds stored weights");
+        // saturation clamps below INF so relaxed values stay comparable
+        assert_eq!(sssp.combine(INF - 1, 9), INF - 1);
+        assert_eq!(bfs.combine(INF, 1), INF - 1);
+    }
+
+    #[test]
+    fn label_prop_passes_labels_through() {
+        let wcc = LabelProp;
+        assert_eq!(wcc.combine(5, 7), 5, "weight ignored");
+        assert_eq!(wcc.init_attr(42, 100), 42, "own label");
+        assert!(!wcc.single_source());
+    }
+
+    #[test]
+    fn default_coalesce_is_min() {
+        let bfs = Relax::bfs();
+        assert_eq!(bfs.coalesce(4, 9), Some(4));
+        assert_eq!(bfs.coalesce(9, 4), Some(4));
+    }
+
+    #[test]
+    fn classic_programs_ignore_ctx() {
+        for vp in [&Relax::bfs() as &dyn VertexProgram, &Relax::sssp(), &LabelProp] {
+            assert_eq!(vp.aux(3), 0);
+            assert_eq!(vp.bound(), u32::MAX);
+        }
+    }
+
+    #[test]
+    fn init_attrs_match_pre_trait_semantics() {
+        assert_eq!(Relax::bfs().init_attr(5, 10), INF);
+        assert_eq!(Relax::sssp().init_attr(5, 10), INF);
+        assert_eq!(LabelProp.init_attr(5, 10), 5);
+    }
+}

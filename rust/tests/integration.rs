@@ -8,7 +8,8 @@ use flip::experiments::harness::{self, Baselines, CompiledPair, ExpEnv};
 use flip::graph::datasets::{self, Group};
 use flip::graph::{generate, reference, Graph};
 use flip::sim::flip::{self as flipsim, SimOptions};
-use flip::workloads::Workload;
+use flip::workloads::program::VertexProgram;
+use flip::workloads::{mis, navigation, pagerank, Workload};
 
 fn quick_env() -> ExpEnv {
     let mut env = ExpEnv::quick();
@@ -150,6 +151,78 @@ fn energy_model_orders_architectures_as_paper() {
         flip::energy::baseline_energy_uj(flip::energy::CGRA_POWER_MW, c.cycles, env.cfg.freq_mhz);
     // paper Fig 10b: FLIP needs 3-15% of classic CGRA energy
     assert!(e_flip < 0.5 * e_cgra, "FLIP {e_flip} µJ vs CGRA {e_cgra} µJ");
+}
+
+#[test]
+fn pagerank_rounds_match_oracle_on_datasets() {
+    // the full host-driven loop over the fabric reproduces the integer
+    // fixed-point oracle bit-for-bit, and lands near float PageRank
+    let env = quick_env();
+    for group in [Group::Lrn, Group::Syn] {
+        let g = datasets::generate_one(group, 0, env.seed);
+        let c = compile(&g, &env.cfg, &CompileOpts { seed: env.seed, ..Default::default() });
+        let run = pagerank::run_rounds(&c, &g, 10, &SimOptions::default()).unwrap();
+        assert_eq!(run.ranks, reference::pagerank(&g, 10), "{}", group.name());
+        let float = reference::pagerank_f64(&g, 10);
+        for v in 0..g.num_vertices() {
+            let got = run.ranks[v] as f64 / reference::PR_SCALE as f64;
+            assert!(
+                (got - float[v]).abs() < 2e-3,
+                "{} v{v}: fixed {got} vs float {}",
+                group.name(),
+                float[v]
+            );
+        }
+    }
+}
+
+#[test]
+fn astar_navigation_matches_reference_on_road_networks() {
+    let env = quick_env();
+    let g = datasets::generate_one(Group::Lrn, 1, env.seed);
+    let c = compile(&g, &env.cfg, &CompileOpts { seed: env.seed, ..Default::default() });
+    let lm = navigation::Landmarks::build(&g, 4);
+    let exact_from_7 = reference::dijkstra(&g, 7);
+    for target in [13u32, 101, 250] {
+        let p = navigation::plan(&c, &lm, 7, target, &SimOptions::default()).unwrap();
+        assert_eq!(p.distance, exact_from_7[target as usize], "7->{target}");
+        // simulated attrs equal the bounded-relaxation oracle exactly
+        let vp = lm.query(7, target);
+        let r = flipsim::run_program(&c, &vp, 7, &SimOptions::default()).unwrap();
+        assert_eq!(r.attrs, vp.reference(&g, 7));
+    }
+}
+
+#[test]
+fn mis_matches_reference_on_datasets() {
+    let env = quick_env();
+    for group in [Group::Srn, Group::Syn] {
+        let g = datasets::generate_one(group, 0, env.seed);
+        let (m, view) = mis::Mis::build(&g, 0x9115 ^ env.seed);
+        let c = compile(&view, &env.cfg, &CompileOpts { seed: env.seed, ..Default::default() });
+        let r = mis::run(&c, &m, &SimOptions::default()).unwrap();
+        assert_eq!(r.attrs, reference::greedy_mis(&view, &m.prio), "{}", group.name());
+        assert!(mis::is_independent(&view, &r.attrs));
+        assert!(mis::is_maximal(&view, &r.attrs));
+    }
+}
+
+#[test]
+fn extended_workloads_swap_path_end_to_end() {
+    // > 256 vertices forces 2 array copies: dense seeding + parked
+    // packets + slice swaps, for a stateful extended program
+    let g = generate::road_network(300, 690, 800, 41);
+    let cfg = ArchConfig::default();
+    let c = compile(&g, &cfg, &CompileOpts::default());
+    let opts = SimOptions { max_cycles: 1_000_000_000, watchdog: 5_000_000, ..Default::default() };
+    let run = pagerank::run_rounds(&c, &g, 3, &opts).unwrap();
+    assert_eq!(run.ranks, reference::pagerank(&g, 3), "PageRank under swapping");
+
+    let (m, view) = mis::Mis::build(&g, 99);
+    let cv = compile(&view, &cfg, &CompileOpts::default());
+    let r = mis::run(&cv, &m, &opts).unwrap();
+    assert_eq!(r.attrs, reference::greedy_mis(&view, &m.prio), "MIS under swapping");
+    assert!(r.sim.swaps > 0, "dominance view must span copies");
 }
 
 #[test]

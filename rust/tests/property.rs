@@ -7,7 +7,8 @@ use flip::graph::{reference, Graph};
 use flip::prop_assert;
 use flip::sim::flip::{self as flipsim, SimOptions};
 use flip::util::{proptest::check, Rng};
-use flip::workloads::{view_for, Workload};
+use flip::workloads::program::VertexProgram;
+use flip::workloads::{mis, navigation, pagerank, view_for, Workload};
 
 /// Random connected-ish weighted graph with n in [lo, hi].
 fn random_graph(rng: &mut Rng, lo: usize, hi: usize, directed: bool) -> Graph {
@@ -106,6 +107,118 @@ fn prop_event_core_equals_naive_with_swapping() {
         prop_assert!(fast.cycles == naive.cycles, "cycles {} != {}", fast.cycles, naive.cycles);
         prop_assert!(fast.attrs == naive.attrs, "attrs diverge under swapping");
         prop_assert!(fast.sim == naive.sim, "metrics diverge under swapping");
+        Ok(())
+    });
+}
+
+/// Build one of the three extended vertex programs plus the graph view it
+/// compiles against. Returns (program, view, source).
+fn random_extended_program(
+    rng: &mut Rng,
+    g: &Graph,
+) -> (Box<dyn VertexProgram>, Graph, u32) {
+    match rng.below(3) {
+        0 => {
+            // one realistic PageRank round (contributions of the uniform
+            // initial ranks)
+            let contribs =
+                reference::pagerank_contribs(g, &reference::pagerank_init(g.num_vertices()));
+            (Box::new(pagerank::PageRankRound { contribs }), g.clone(), 0)
+        }
+        1 => {
+            let s = rng.below(g.num_vertices() as u64) as u32;
+            let t = rng.below(g.num_vertices() as u64) as u32;
+            (Box::new(navigation::AStar::new(g, s, t, 3)), g.clone(), s)
+        }
+        _ => {
+            let (m, view) = mis::Mis::build(g, rng.next_u64());
+            (Box::new(m), view, 0)
+        }
+    }
+}
+
+#[test]
+fn prop_extended_programs_match_their_oracles() {
+    // the determinism contract of DESIGN.md §5: the asynchronous fabric
+    // reproduces each extended program's CPU oracle exactly
+    check("extended_matches_oracle", 30, |rng| {
+        let g = random_graph(rng, 8, 80, false);
+        let (vp, view, src) = random_extended_program(rng, &g);
+        let cfg = ArchConfig::default();
+        let c = compile(&view, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() });
+        let r = flipsim::run_program(&c, vp.as_ref(), src, &SimOptions::default())
+            .map_err(|e| format!("{}: {e}", vp.name()))?;
+        let want = vp.reference(&view, src);
+        prop_assert!(r.attrs == want, "{} oracle mismatch on |V|={}", vp.name(), g.num_vertices());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_core_equals_naive_extended() {
+    // scheduler equivalence (cycles, attrs, every metric) extends to the
+    // three new workloads on the vertex-program layer
+    check("event_equals_naive_extended", 24, |rng| {
+        let g = random_graph(rng, 8, 96, false);
+        let (vp, view, src) = random_extended_program(rng, &g);
+        let cfg = ArchConfig::default();
+        let c = compile(&view, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() });
+        let opts = SimOptions { trace_parallelism: rng.chance(0.3), ..Default::default() };
+        let fast = flipsim::run_program(&c, vp.as_ref(), src, &opts)
+            .map_err(|e| format!("event core ({}): {e}", vp.name()))?;
+        let naive = flip::sim::naive::run_program(&c, vp.as_ref(), src, &opts)
+            .map_err(|e| format!("naive core ({}): {e}", vp.name()))?;
+        prop_assert!(
+            fast.cycles == naive.cycles,
+            "{}: cycles {} != {}",
+            vp.name(),
+            fast.cycles,
+            naive.cycles
+        );
+        prop_assert!(fast.attrs == naive.attrs, "{}: attrs diverge", vp.name());
+        prop_assert!(
+            fast.edges_traversed == naive.edges_traversed,
+            "{}: edges {} != {}",
+            vp.name(),
+            fast.edges_traversed,
+            naive.edges_traversed
+        );
+        prop_assert!(fast.sim == naive.sim, "{}: metrics diverge", vp.name());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_core_equals_naive_extended_with_swapping() {
+    // same invariant across the swap engine / SPM parking path: the dense
+    // seeding of PageRank/MIS stresses the pending-seed release, A* the
+    // single-source parked path
+    check("event_equals_naive_extended_swapping", 4, |rng| {
+        let g = random_graph(rng, 260, 380, false);
+        let (vp, view, src) = random_extended_program(rng, &g);
+        let cfg = ArchConfig::default();
+        let c = compile(&view, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() });
+        prop_assert!(c.placement.num_copies >= 2, "expected replication");
+        let opts =
+            SimOptions { max_cycles: 1_000_000_000, watchdog: 5_000_000, ..Default::default() };
+        let fast = flipsim::run_program(&c, vp.as_ref(), src, &opts)
+            .map_err(|e| format!("event core ({}): {e}", vp.name()))?;
+        let naive = flip::sim::naive::run_program(&c, vp.as_ref(), src, &opts)
+            .map_err(|e| format!("naive core ({}): {e}", vp.name()))?;
+        prop_assert!(
+            fast.cycles == naive.cycles,
+            "{}: cycles {} != {}",
+            vp.name(),
+            fast.cycles,
+            naive.cycles
+        );
+        prop_assert!(fast.attrs == naive.attrs, "{}: attrs diverge under swapping", vp.name());
+        prop_assert!(fast.sim == naive.sim, "{}: metrics diverge under swapping", vp.name());
+        prop_assert!(
+            fast.attrs == vp.reference(&view, src),
+            "{}: oracle mismatch under swapping",
+            vp.name()
+        );
         Ok(())
     });
 }
