@@ -104,7 +104,7 @@ fn main() {
     let big = flip::graph::generate::road_network(384, 880, 1100, 9);
     let pair = CompiledPair::build(&big, &env.cfg, env.seed);
     let opts = SimOptions { max_cycles: 1_000_000_000, watchdog: 5_000_000, ..Default::default() };
-    let r = harness::run_flip_opts(&pair, Workload::Bfs, 0, &opts);
+    let r = harness::run_flip_opts(&pair, Workload::Bfs, 0, &opts).expect("swap-path run");
     assert_eq!(r.attrs, flip::graph::reference::bfs_levels(&big, 0));
     assert!(r.sim.swaps > 0, "swap path must trigger");
     println!("{}", table.render());

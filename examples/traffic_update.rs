@@ -1,65 +1,94 @@
-//! Dynamic graph attributes (paper §1.1, §3.3): "real-life traffic on road
-//! networks" — edge weights change but the structure doesn't, so FLIP
-//! updates the Intra-Table weights without recompiling or remapping.
+//! Traffic-aware route serving (paper §1.1, §3.3): the update→replan loop.
+//!
+//! The headline edge scenario end to end: a road network is compiled onto
+//! the fabric *once*, a query-serving `Engine` answers batches of
+//! point-to-point navigation queries off the mapped graph, and when
+//! traffic shifts, only the edge *weights* are patched — a `graph::Delta`
+//! applied in place to the generated Intra-Tables
+//! (`CompiledPair::apply_attr_updates`), no recompilation, no remapping.
+//! Each epoch rebuilds the engine so the ALT landmarks are recomputed
+//! against the current weights (the heuristic/bound are weight-dependent;
+//! the landmark Dijkstras are host-side preprocessing, orders of
+//! magnitude cheaper than a recompile).
 
-use flip::compiler::{compile, tablegen, CompileOpts};
 use flip::config::ArchConfig;
-use flip::graph::{reference, Graph};
-use flip::sim::flip as flipsim;
+use flip::experiments::harness::CompiledPair;
+use flip::graph::{reference, Delta};
+use flip::service::{Engine, Job};
 use flip::util::Rng;
-use flip::workloads::Workload;
 
-fn reweight(g: &Graph, rng: &mut Rng) -> Graph {
-    // rush hour: a third of the roads slow down 2-4x
-    let edges: Vec<(u32, u32, u32)> = g
-        .arcs()
-        .filter(|&(u, v, _)| u < v)
-        .map(|(u, v, w)| {
-            if rng.chance(0.33) {
-                (u, v, w * (2 + rng.below(3) as u32))
-            } else {
-                (u, v, w)
-            }
-        })
-        .collect();
-    Graph::from_edges(g.num_vertices(), &edges, false)
+/// Serve the commuter query set on the *current* weights, verify every
+/// answer against a host Dijkstra, and return the per-query distances.
+fn serve_epoch(name: &str, pair: &CompiledPair, queries: &[Job]) -> Vec<u32> {
+    // a fresh engine per epoch: landmarks must match the current weights
+    let mut engine = Engine::new(pair).with_workers(4).with_navigation(4);
+    let report = engine.serve(queries);
+    let mut dists = Vec::new();
+    for r in &report.results {
+        let q = r.as_ref().expect("query failed");
+        if let Job::Navigate { source, target } = q.job {
+            let want = reference::dijkstra(&pair.graph, source)[target as usize];
+            assert_eq!(q.distance, Some(want), "{name}: wrong plan {source} -> {target}");
+            dists.push(want);
+        }
+    }
+    println!(
+        "{name:9} : {} routes at {:>6.0} queries/s ({} workers, {:.1}M sim PE-cycles/s)",
+        dists.len(),
+        report.queries_per_s,
+        report.workers,
+        report.pe_cycles_per_s / 1e6
+    );
+    dists
 }
 
 fn main() {
     let g = flip::graph::generate::road_network(128, 292, 340, 3);
     let cfg = ArchConfig::default();
-    let mut compiled = compile(&g, &cfg, &CompileOpts::default());
-    let start = 5u32;
-    let dest = 100u32;
+    let t0 = std::time::Instant::now();
+    let mut pair = CompiledPair::build(&g, &cfg, 0xF11F);
+    let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!("mapped |V|={} |E|={} in {compile_ms:.1} ms (once)", g.num_vertices(), g.num_edges());
+
+    // a fixed commuter query set, re-planned every epoch
+    let mut rng = Rng::new(99);
+    let queries: Vec<Job> = (0..48)
+        .map(|_| Job::Navigate { source: rng.below(128) as u32, target: rng.below(128) as u32 })
+        .collect();
 
     // morning: free-flowing traffic
-    let r1 = flipsim::run(&compiled, Workload::Sssp, start, &flipsim::SimOptions::default())
-        .expect("sim");
-    assert_eq!(r1.attrs, reference::dijkstra(&g, start));
-    println!("free flow : {} -> {} costs {}", start, dest, r1.attrs[dest as usize]);
+    let free = serve_epoch("free flow", &pair, &queries);
 
-    // rush hour: weights change, structure doesn't — swap updated slices
-    // in (no recompilation, no remapping)
-    let mut rng = Rng::new(99);
-    let jammed = reweight(&g, &mut rng);
-    let t0 = std::time::Instant::now();
-    tablegen::update_edge_weights(&mut compiled, &jammed);
+    // rush hour: a third of the roads slow down 2-4x — patch weights into
+    // the live tables, no recompile/remap
+    let jammed: Vec<(u32, u32, u32)> = g
+        .arcs()
+        .filter(|&(u, v, _)| u < v)
+        .filter(|_| rng.chance(0.33))
+        .map(|(u, v, w)| (u, v, w * (2 + rng.below(3) as u32)))
+        .collect();
+    let original: Vec<(u32, u32, u32)> = jammed
+        .iter()
+        .map(|&(u, v, _)| {
+            let w = g.neighbors(u).find(|&(t, _)| t == v).expect("jammed edge exists").1;
+            (u, v, w)
+        })
+        .collect();
+    let t1 = std::time::Instant::now();
+    pair.apply_attr_updates(&Delta::from_edges(&g, &jammed)).expect("weight-only update");
     println!(
-        "traffic update applied in {:.2} ms (vs full recompile {:.0} ms)",
-        t0.elapsed().as_secs_f64() * 1e3,
-        compiled.stats.compile_seconds * 1e3
+        "{} roads jammed; tables patched in {:.2} ms (full recompile: {compile_ms:.1} ms)",
+        jammed.len(),
+        t1.elapsed().as_secs_f64() * 1e3
     );
-    let r2 = flipsim::run(&compiled, Workload::Sssp, start, &flipsim::SimOptions::default())
-        .expect("sim");
-    assert_eq!(r2.attrs, reference::dijkstra(&jammed, start), "post-update mismatch");
-    println!("rush hour : {} -> {} costs {}", start, dest, r2.attrs[dest as usize]);
-    assert!(r2.attrs[dest as usize] >= r1.attrs[dest as usize]);
+    let rush = serve_epoch("rush hour", &pair, &queries);
+    for (f, r) in free.iter().zip(&rush) {
+        assert!(r >= f, "jams can only lengthen routes");
+    }
 
-    // evening: traffic clears — swap the original weights back
-    tablegen::update_edge_weights(&mut compiled, &g);
-    let r3 = flipsim::run(&compiled, Workload::Sssp, start, &flipsim::SimOptions::default())
-        .expect("sim");
-    assert_eq!(r3.attrs, r1.attrs, "weights restored");
-    println!("restored  : {} -> {} costs {}", start, dest, r3.attrs[dest as usize]);
+    // evening: traffic clears — patch the original weights back
+    pair.apply_attr_updates(&Delta::from_edges(&g, &original)).expect("restore weights");
+    let evening = serve_epoch("evening", &pair, &queries);
+    assert_eq!(free, evening, "restored weights must restore every plan");
     println!("traffic_update OK");
 }

@@ -1,8 +1,11 @@
 //! Bench: cycle-accurate FLIP simulator throughput — the L3 hot path.
 //! Reports wall time per run and simulated PE-cycles/second (the §Perf
 //! target in DESIGN.md is ≥10M PE-cycles/s for the event-driven core),
-//! and compares against the retained naive reference stepper so the
-//! scheduler speedup is part of the recorded trajectory.
+//! compares against the retained naive reference stepper so the
+//! scheduler speedup is part of the recorded trajectory, and tracks the
+//! serve path: engine `queries_per_s` over all workers and the
+//! `reset_reuse_speedup` of a reused SimInstance vs per-query cold
+//! starts (DESIGN.md §6; expected ≥ 1.0×).
 //!
 //! Writes `BENCH_flip_sim.json` (override with `--json <path>`).
 
@@ -10,8 +13,10 @@ mod common;
 
 use flip::compiler::{compile, CompileOpts};
 use flip::config::ArchConfig;
+use flip::experiments::harness::CompiledPair;
 use flip::graph::datasets::{self, Group};
-use flip::sim::flip::{run, SimOptions};
+use flip::service::{Engine, Job};
+use flip::sim::flip::{run, SimInstance, SimOptions};
 use flip::sim::naive;
 use flip::workloads::Workload;
 
@@ -85,6 +90,60 @@ fn main() {
     println!("    -> fast-forward speedup {speedup:.2}x over naive on the swapping path");
     suite.add(fast).metric("speedup_vs_naive", speedup);
     suite.add(slow);
+
+    common::section("query-serving engine (compile once, serve many)");
+    let g = datasets::generate_one(Group::Lrn, 0, 42);
+    let pair = CompiledPair::build(&g, &cfg, 42);
+    let n = g.num_vertices() as u32;
+    let batch = 64usize;
+    let jobs: Vec<Job> = (0..batch)
+        .map(|i| {
+            Job::Workload([Workload::Bfs, Workload::Sssp][i % 2], (i as u32 * 13) % n)
+        })
+        .collect();
+    let mut engine = Engine::new(&pair);
+    let workers = engine.workers();
+    let mut batch_cycles = 0u64;
+    let r = common::bench(
+        &format!("engine: {batch} bfs/sssp queries ({workers} workers)"),
+        1,
+        5,
+        || {
+            let rep = engine.serve(&jobs);
+            assert!(rep.first_error().is_none(), "engine batch failed");
+            batch_cycles = rep.sim_cycles;
+        },
+    );
+    let queries_per_s = batch as f64 / (r.mean_ms / 1e3);
+    let engine_pe_cycles_per_s =
+        batch_cycles as f64 * cfg.num_pes() as f64 / (r.mean_ms / 1e3);
+    println!(
+        "    -> {queries_per_s:.0} queries/s, {:.1}M simulated PE-cycles/s across workers",
+        engine_pe_cycles_per_s / 1e6
+    );
+    suite
+        .add(r)
+        .metric("queries_per_s", queries_per_s)
+        .metric("engine_pe_cycles_per_s", engine_pe_cycles_per_s);
+
+    common::section("SimInstance reuse vs per-query cold start (Lrn SSSP x16)");
+    let sources: Vec<u32> = (0..16u32).map(|i| (i * 17) % n).collect();
+    let c = &pair.directed;
+    let mut inst = SimInstance::new(c);
+    let reuse = common::bench("reused SimInstance (reset per query)", 1, 5, || {
+        for &s in &sources {
+            inst.run(c, Workload::Sssp, s, &SimOptions::default()).unwrap();
+        }
+    });
+    let cold = common::bench("fresh machine per query (cold start)", 1, 5, || {
+        for &s in &sources {
+            run(c, Workload::Sssp, s, &SimOptions::default()).unwrap();
+        }
+    });
+    let reset_reuse_speedup = cold.mean_ms / reuse.mean_ms;
+    println!("    -> reset-reuse speedup {reset_reuse_speedup:.2}x over per-query cold start");
+    suite.add(reuse).metric("reset_reuse_speedup", reset_reuse_speedup);
+    suite.add(cold);
 
     suite.write().expect("write bench json");
 }

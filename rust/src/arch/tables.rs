@@ -73,6 +73,21 @@ impl IntraTable {
         &self.buckets[Self::bucket_of(src_vid)]
     }
 
+    /// Patch the weight of the `(src_vid, dst_reg)` entry in place — the
+    /// dynamic-attribute path (paper §1.1): the table layout, bucket
+    /// order, and every other entry are untouched, so timing-relevant
+    /// structure is bit-identical to a freshly generated table with the
+    /// same weights. Returns false if no such entry exists.
+    pub fn update_weight(&mut self, src_vid: u32, dst_reg: u8, weight: u32) -> bool {
+        for e in &mut self.buckets[Self::bucket_of(src_vid)] {
+            if e.src_vid == src_vid && e.dst_reg == dst_reg {
+                e.weight = weight;
+                return true;
+            }
+        }
+        false
+    }
+
     /// Look up all entries for `src_vid`. Returns `(matches, cycles)` where
     /// `cycles` is the list positions walked (hash head is O(1), then a
     /// sequential walk of the whole bucket list — matching entries for the

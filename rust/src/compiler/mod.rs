@@ -149,6 +149,53 @@ impl CompiledGraph {
     pub fn fits_on_chip(&self) -> bool {
         self.placement.num_copies == 1
     }
+
+    /// Patch a batch of edge-attribute (weight) changes directly into the
+    /// generated Intra-Tables — the paper's dynamic-attribute path (§1.1:
+    /// "FLIP also supports efficient attribute changing ... without
+    /// recompilation"). O(|delta|), no allocation.
+    ///
+    /// **Invariant: weight changes never move vertices.** Placement and
+    /// the Inter-Tables depend only on the graph *topology* (the compiler
+    /// ignores weights end to end — see [`place`], [`optimize`],
+    /// [`estimate`]), so a weight-only delta patched here produces a
+    /// machine image bit-identical to a full `compile()` of the reweighted
+    /// graph: same placement, same table layout, same cycle counts.
+    /// `tests/property.rs` (`attr_updates_equal_recompile`) enforces this.
+    ///
+    /// Atomic: the whole delta is validated against the tables before any
+    /// weight is written, so a change naming a missing arc is an error
+    /// and the machine image is untouched.
+    pub fn apply_attr_updates(&mut self, delta: &crate::graph::Delta) -> Result<(), String> {
+        let num_pes = self.cfg.num_pes();
+        // validate pass: every change must name an existing table entry
+        for &(u, v, _) in delta.arcs() {
+            if v as usize >= self.placement.slots.len() {
+                return Err(format!("delta arc ({u},{v}): vertex out of range"));
+            }
+            let sv = self.placement.slots[v as usize];
+            let dst_idx = sv.copy as usize * num_pes + sv.pe.index(&self.cfg);
+            let hit = self.pe_slices[dst_idx]
+                .intra
+                .bucket(u)
+                .iter()
+                .any(|e| e.src_vid == u && e.dst_reg == sv.reg);
+            if !hit {
+                return Err(format!(
+                    "no arc {u}->{v} in the compiled Intra-Tables: \
+                     weight-only updates cannot change the graph structure"
+                ));
+            }
+        }
+        // write pass (cannot fail after validation)
+        for &(u, v, w) in delta.arcs() {
+            let sv = self.placement.slots[v as usize];
+            let dst_idx = sv.copy as usize * num_pes + sv.pe.index(&self.cfg);
+            let hit = self.pe_slices[dst_idx].intra.update_weight(u, sv.reg, w);
+            debug_assert!(hit, "validated above");
+        }
+        Ok(())
+    }
 }
 
 /// Compiler options.

@@ -62,7 +62,10 @@ pub fn build_tables(
 /// Update edge *weights* in the Intra-Tables in place, without remapping —
 /// the paper's dynamic-attribute path (§1.1: "FLIP also supports efficient
 /// attribute changing ... without recompilation"). The graph structure
-/// (same arcs, same placement) must be unchanged.
+/// (same arcs, same placement) must be unchanged. This is the whole-graph
+/// rebuild; for incremental batches prefer
+/// [`crate::compiler::CompiledGraph::apply_attr_updates`] with a
+/// [`crate::graph::Delta`], which is O(|delta|).
 pub fn update_edge_weights(c: &mut crate::compiler::CompiledGraph, g: &Graph) {
     let num_pes = c.cfg.num_pes();
     // clear + re-insert intra entries with new weights (same placement)
@@ -99,6 +102,54 @@ mod tests {
             let (m, _) = c.slice_cfg(sv.copy, sv.pe.index(&cfg)).intra.lookup(u);
             assert!(m.iter().any(|e| e.dst_reg == sv.reg && e.weight == w));
         }
+    }
+
+    #[test]
+    fn apply_attr_updates_matches_whole_graph_rebuild() {
+        let g = generate::road_network(64, 146, 166, 78);
+        let cfg = ArchConfig::default();
+        let c0 = compile(&g, &cfg, &CompileOpts::default());
+        // reweight a deterministic subset of the edges
+        let changes: Vec<(u32, u32, u32)> = g
+            .arcs()
+            .filter(|&(u, v, _)| u < v && (u + v) % 3 == 0)
+            .map(|(u, v, w)| (u, v, w + 11))
+            .collect();
+        assert!(!changes.is_empty());
+        let delta = crate::graph::Delta::from_edges(&g, &changes);
+        let mut g2 = g.clone();
+        g2.apply_delta(&delta).unwrap();
+        // incremental patch vs whole-graph rebuild
+        let mut patched = c0.clone();
+        patched.apply_attr_updates(&delta).unwrap();
+        let mut rebuilt = c0.clone();
+        update_edge_weights(&mut rebuilt, &g2);
+        for (u, v, w) in g2.arcs() {
+            let sv = patched.placement.slots[v as usize];
+            for c in [&patched, &rebuilt] {
+                let (m, _) = c.slice_cfg(sv.copy, sv.pe.index(&cfg)).intra.lookup(u);
+                assert!(
+                    m.iter().any(|e| e.dst_reg == sv.reg && e.weight == w),
+                    "{u}->{v} weight {w} missing"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn apply_attr_updates_rejects_structure_changes() {
+        let g = generate::road_network(64, 146, 166, 79);
+        let cfg = ArchConfig::default();
+        let mut c = compile(&g, &cfg, &CompileOpts::default());
+        // an arc that does not exist: patching must fail loudly
+        let missing = (0..64u32)
+            .flat_map(|u| (0..64u32).map(move |v| (u, v)))
+            .find(|&(u, v)| u != v && !g.neighbors(u).any(|(t, _)| t == v))
+            .unwrap();
+        let mut delta = crate::graph::Delta::new();
+        delta.reweight(&g, missing.0, missing.1, 1);
+        let err = c.apply_attr_updates(&delta).unwrap_err();
+        assert!(err.contains("cannot change the graph structure"), "{err}");
     }
 
     fn compiled() -> (Graph, crate::compiler::CompiledGraph) {

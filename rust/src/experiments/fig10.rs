@@ -28,8 +28,9 @@ pub struct Cell {
     pub energy_flip_vs_cgra: f64,
 }
 
-/// Full sweep: returns one cell per (group, workload).
-pub fn sweep(env: &ExpEnv) -> Vec<Cell> {
+/// Full sweep: returns one cell per (group, workload). Simulator aborts
+/// surface as the `Err` (workers collect them as data; no thread panics).
+pub fn sweep(env: &ExpEnv) -> Result<Vec<Cell>, String> {
     let emodel = harness::calibrated_energy(env);
     let base = Baselines::build(&env.cfg, &env.mcu, env.seed);
     let mut cells = Vec::new();
@@ -53,10 +54,11 @@ pub fn sweep(env: &ExpEnv) -> Vec<Cell> {
                     (
                         base.run_mcu(w, g, src),
                         base.run_cgra(w, g, src),
-                        harness::run_flip(pair, w, src),
+                        harness::run_flip_opts(pair, w, src, &Default::default()),
                     )
                 });
                 for (m, c, f) in runs {
+                    let f = f?;
                     mcu_s.push(harness::seconds(m.cycles, env.mcu.freq_mhz));
                     cgra_s.push(harness::seconds(c.cycles, env.cfg.freq_mhz));
                     flip_s.push(harness::seconds(f.cycles, env.cfg.freq_mhz));
@@ -88,12 +90,12 @@ pub fn sweep(env: &ExpEnv) -> Vec<Cell> {
             });
         }
     }
-    cells
+    Ok(cells)
 }
 
 /// Render the Fig-10 performance/energy comparison report.
 pub fn run(env: &ExpEnv) -> super::ExpResult {
-    let cells = sweep(env);
+    let cells = sweep(env)?;
     let mut a = Table::new(
         "Fig 10(a) — speedup normalized to MCU (geomean; log-scale in paper)",
         &["group", "workload", "CGRA vs MCU", "FLIP vs MCU", "FLIP vs CGRA"],
@@ -149,7 +151,7 @@ mod tests {
         let mut env = ExpEnv::quick();
         env.graphs_per_group = 2;
         env.sources_per_graph = 2;
-        let cells = sweep(&env);
+        let cells = sweep(&env).unwrap();
         assert_eq!(cells.len(), 4 * 3);
         for c in &cells {
             // FLIP beats the MCU everywhere (paper: 25-393x)

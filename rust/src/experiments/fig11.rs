@@ -24,7 +24,7 @@ pub fn run(env: &ExpEnv) -> super::ExpResult {
                 let pair = CompiledPair::build(g, &env.cfg, env.seed);
                 let jobs: Vec<(Workload, u32)> =
                     env.sources(group, g, gi).iter().map(|&s| (w, s)).collect();
-                for r in harness::run_flip_many(&pair, &jobs, &SimOptions::default()) {
+                for r in harness::run_flip_many(&pair, &jobs, &SimOptions::default())? {
                     pars.push(r.sim.avg_parallelism);
                 }
                 // centered start (paper: parallelism reaches ~10.4)
@@ -35,7 +35,7 @@ pub fn run(env: &ExpEnv) -> super::ExpResult {
                         w,
                         center,
                         &SimOptions::default(),
-                    );
+                    )?;
                     centered_lrn.push(r.sim.avg_parallelism);
                 }
             }

@@ -93,6 +93,22 @@ impl CompiledPair {
             _ => &self.directed,
         }
     }
+
+    /// Patch a weight-only [`crate::graph::Delta`] into both the compiled
+    /// tables and the stored source graph, keeping the machine image and
+    /// the CPU oracles consistent — no recompilation, no remapping (see
+    /// [`CompiledGraph::apply_attr_updates`]). The WCC view is left
+    /// untouched: weak connectivity ignores weights entirely, so patching
+    /// it would be dead work.
+    ///
+    /// Atomic end to end: both component updates validate the full delta
+    /// before writing anything, and the tables were generated from exactly
+    /// this graph's arcs, so a delta either applies to both views or to
+    /// neither.
+    pub fn apply_attr_updates(&mut self, delta: &crate::graph::Delta) -> Result<(), String> {
+        self.directed.apply_attr_updates(delta)?;
+        self.graph.apply_delta(delta)
+    }
 }
 
 /// Run `f` over `items` on up to `available_parallelism` OS threads
@@ -140,40 +156,59 @@ where
     out.into_iter().map(|o| o.expect("missing result")).collect()
 }
 
-/// Thread-parallel multi-run driver: one FLIP simulation per (workload,
-/// source) job, spread across all cores, results in job order. The
-/// event-driven core made a single run cheap; this lets full figure/table
-/// sweeps exploit the remaining wall-clock across cores.
+/// Thread-parallel multi-run driver, routed through the query-serving
+/// [`crate::service::Engine`]: one reusable machine instance per worker,
+/// results in job order, bit-identical to sequential [`run_flip`].
+///
+/// Simulator failures surface as the returned `Err` instead of panicking
+/// inside worker threads (a panicking worker used to poison whole sweeps;
+/// now only the CLI boundary decides to abort).
 pub fn run_flip_many(
     pair: &CompiledPair,
     jobs: &[(Workload, u32)],
     opts: &flip::SimOptions,
-) -> Vec<RunResult> {
-    parallel_map(jobs, |&(w, src)| run_flip_opts(pair, w, src, opts))
+) -> Result<Vec<RunResult>, String> {
+    let jb: Vec<crate::service::Job> =
+        jobs.iter().map(|&(w, src)| crate::service::Job::Workload(w, src)).collect();
+    let mut engine = crate::service::Engine::new(pair).with_opts(opts.clone());
+    engine.serve(&jb).into_runs().map_err(|e| e.to_string())
 }
 
-/// Run FLIP (cycle-accurate) for one (workload, source).
+/// Run FLIP (cycle-accurate) for one (workload, source), panicking on
+/// simulator failure — a convenience for tests and experiment drivers
+/// where an abort is a bug in the setup. Serving/sweep paths use the
+/// `Result`-returning [`run_flip_opts`] / [`run_flip_many`] instead.
 pub fn run_flip(pair: &CompiledPair, w: Workload, source: u32) -> RunResult {
     run_flip_opts(pair, w, source, &flip::SimOptions::default())
+        .unwrap_or_else(|e| panic!("{e}"))
 }
 
-/// [`run_flip`] with explicit simulator options.
+/// [`run_flip`] with explicit simulator options, surfacing simulator
+/// aborts (watchdog, max-cycles) as an `Err` value.
 pub fn run_flip_opts(
     pair: &CompiledPair,
     w: Workload,
     source: u32,
     opts: &flip::SimOptions,
-) -> RunResult {
+) -> Result<RunResult, String> {
     let c = pair.for_workload(w);
     let r = flip::run(c, w, source, opts)
-        .unwrap_or_else(|e| panic!("FLIP sim failed ({}, src {source}): {e}", w.name()));
+        .map_err(|e| format!("FLIP sim failed ({}, src {source}): {e}", w.name()))?;
+    debug_check_reference(pair, w, source, &r);
+    Ok(r)
+}
+
+/// Debug-build functional-oracle check shared by every serve path
+/// (sequential [`run_flip_opts`] and the [`crate::service::Engine`]
+/// workers): the run's attributes must equal the CPU reference on the
+/// view `w` maps. Compiled out of release builds.
+pub(crate) fn debug_check_reference(pair: &CompiledPair, w: Workload, source: u32, r: &RunResult) {
     debug_assert_eq!(
         r.attrs,
         w.reference(if w.needs_undirected() { &pair.wcc_view } else { &pair.graph }, source),
         "functional mismatch {} src {source}",
         w.name()
     );
-    r
 }
 
 /// Cached op-centric kernels (one compile per workload per config).
@@ -258,13 +293,26 @@ mod tests {
             [(Workload::Bfs, 0), (Workload::Sssp, 3), (Workload::Wcc, 0), (Workload::Bfs, 5)]
                 .into_iter()
                 .collect();
-        let par = run_flip_many(&pair, &jobs, &flip::SimOptions::default());
+        let par = run_flip_many(&pair, &jobs, &flip::SimOptions::default()).unwrap();
         for (i, &(w, src)) in jobs.iter().enumerate() {
             let seq = run_flip(&pair, w, src);
             assert_eq!(par[i].cycles, seq.cycles, "{} src {src}", w.name());
             assert_eq!(par[i].attrs, seq.attrs);
             assert_eq!(par[i].sim, seq.sim);
         }
+    }
+
+    #[test]
+    fn run_flip_many_surfaces_aborts_without_panicking() {
+        let env = ExpEnv::quick();
+        let g = crate::graph::datasets::generate_one(Group::Srn, 0, env.seed);
+        let pair = CompiledPair::build(&g, &env.cfg, env.seed);
+        let jobs = vec![(Workload::Bfs, 0u32), (Workload::Sssp, 1)];
+        // one cycle can never drain a seeded machine: every job aborts,
+        // and the sweep reports it as a value instead of a thread panic
+        let tiny = flip::SimOptions { max_cycles: 1, ..Default::default() };
+        let err = run_flip_many(&pair, &jobs, &tiny).unwrap_err();
+        assert!(err.contains("max_cycles"), "{err}");
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub fn run(env: &ExpEnv) -> super::ExpResult {
     let opts = SimOptions { max_cycles: 2_000_000_000, watchdog: 5_000_000, ..Default::default() };
     // Ext. LRN graphs are the heaviest runs in the suite (16k vertices,
     // dozens of slice swaps each): compile + simulate one graph per core.
+    // Simulator aborts come back as data; a worker thread never panics.
     let idxs: Vec<usize> = (0..graphs.len()).collect();
     let results = harness::parallel_map(&idxs, |&gi| {
         let g = &graphs[gi];
@@ -34,6 +35,7 @@ pub fn run(env: &ExpEnv) -> super::ExpResult {
         (pair.directed.placement.num_copies, f, c, m)
     });
     for (gi, (copies, f, c, m)) in results.into_iter().enumerate() {
+        let f = f?;
         let g = &graphs[gi];
         let f_tput = f.mteps(env.cfg.freq_mhz);
         let c_tput = c.mteps(env.cfg.freq_mhz);

@@ -22,8 +22,9 @@ pub struct GroupQuality {
     pub congested_edges: f64,
 }
 
-/// Run the mapping-quality sweep over the on-chip groups.
-pub fn sweep(env: &ExpEnv) -> Vec<GroupQuality> {
+/// Run the mapping-quality sweep over the on-chip groups. Simulator
+/// aborts surface as the `Err` (no worker-thread panics).
+pub fn sweep(env: &ExpEnv) -> Result<Vec<GroupQuality>, String> {
     let mut out = Vec::new();
     for group in Group::ON_CHIP {
         let graphs = env.graphs(group);
@@ -32,9 +33,9 @@ pub fn sweep(env: &ExpEnv) -> Vec<GroupQuality> {
             let pair = CompiledPair::build(g, &env.cfg, env.seed);
             rl.push(pair.directed.stats.avg_routing_length);
             cong.push(pair.directed.stats.congested_edges as f64);
-            let runs = harness::parallel_map(&env.sources(group, g, gi), |&src| {
-                harness::run_flip(&pair, Workload::Sssp, src)
-            });
+            let jobs: Vec<(Workload, u32)> =
+                env.sources(group, g, gi).iter().map(|&s| (Workload::Sssp, s)).collect();
+            let runs = harness::run_flip_many(&pair, &jobs, &Default::default())?;
             for r in runs {
                 wait.push(r.sim.avg_pkt_wait);
                 depth.push(r.sim.avg_aluin_depth);
@@ -48,12 +49,12 @@ pub fn sweep(env: &ExpEnv) -> Vec<GroupQuality> {
             congested_edges: stats::mean(&cong),
         });
     }
-    out
+    Ok(out)
 }
 
 /// Render the Table-8 mapping-quality report.
 pub fn run(env: &ExpEnv) -> super::ExpResult {
-    let rows = sweep(env);
+    let rows = sweep(env)?;
     let mut t = Table::new(
         "Table 8 — SSSP mapping quality per group",
         &["group", "avg routing length", "pkt wait (cycles)", "ALUin depth", "congested arcs"],
@@ -83,7 +84,7 @@ mod tests {
         let mut env = ExpEnv::quick();
         env.graphs_per_group = 2;
         env.sources_per_graph = 2;
-        let rows = sweep(&env);
+        let rows = sweep(&env).unwrap();
         for r in &rows {
             assert!(
                 r.avg_routing_length < 4.0,

@@ -28,7 +28,8 @@ impl Graph {
     /// materialized in the CSR. Self-loops and duplicate edges are dropped
     /// (duplicates keep the minimum weight).
     pub fn from_edges(n: usize, edges: &[(u32, u32, u32)], directed: bool) -> Graph {
-        let mut uniq: std::collections::BTreeMap<(u32, u32), u32> = std::collections::BTreeMap::new();
+        let mut uniq: std::collections::BTreeMap<(u32, u32), u32> =
+            std::collections::BTreeMap::new();
         for &(u, v, w) in edges {
             assert!((u as usize) < n && (v as usize) < n, "edge ({u},{v}) out of range");
             if u == v {
@@ -155,6 +156,92 @@ impl Graph {
     pub fn is_connected_from(&self, src: u32) -> bool {
         reference::undirected_reach_count(self, src) == self.n
     }
+
+    /// CSR index of arc `u -> v`, or an error naming what is wrong with a
+    /// delta that refers to it (shared by the validate and write passes).
+    fn arc_index(&self, u: u32, v: u32) -> Result<usize, String> {
+        if u as usize >= self.n || v as usize >= self.n {
+            return Err(format!("delta arc ({u},{v}): vertex out of range"));
+        }
+        let lo = self.offsets[u as usize] as usize;
+        let hi = self.offsets[u as usize + 1] as usize;
+        // linear scan: edge-scale graphs have single-digit degrees
+        self.targets[lo..hi]
+            .iter()
+            .position(|&t| t == v)
+            .map(|i| lo + i)
+            .ok_or_else(|| format!("no arc {u}->{v}: weight-only deltas cannot change structure"))
+    }
+
+    /// Apply a weight-only [`Delta`] to the CSR in place. Atomic: the
+    /// whole delta is validated against the structure first, so a change
+    /// naming a missing arc is an error and the graph is untouched —
+    /// structure never changes. This is the host-side mirror of
+    /// [`crate::compiler::CompiledGraph::apply_attr_updates`] — keep both
+    /// views in sync so CPU oracles validate the patched fabric.
+    pub fn apply_delta(&mut self, delta: &Delta) -> Result<(), String> {
+        for &(u, v, _) in delta.arcs() {
+            self.arc_index(u, v)?;
+        }
+        for &(u, v, w) in delta.arcs() {
+            let i = self.arc_index(u, v).expect("validated above");
+            self.weights[i] = w;
+        }
+        Ok(())
+    }
+}
+
+/// A batch of edge-attribute (weight) changes, resolved to CSR arcs — the
+/// paper's dynamic-attribute scenario (§1.1: "real-life traffic on road
+/// networks"): weights drift, structure doesn't. Build one with
+/// [`Delta::from_edges`] (which expands undirected edges to both arcs),
+/// then patch the host graph via [`Graph::apply_delta`] and the mapped
+/// fabric via [`crate::compiler::CompiledGraph::apply_attr_updates`] —
+/// no recompilation, no remapping.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Delta {
+    arcs: Vec<(u32, u32, u32)>,
+}
+
+impl Delta {
+    /// Empty delta.
+    pub fn new() -> Delta {
+        Delta::default()
+    }
+
+    /// Resolve `(u, v, new_weight)` edge changes against `g`: one arc per
+    /// change for directed graphs, both arcs for undirected ones.
+    pub fn from_edges(g: &Graph, changes: &[(u32, u32, u32)]) -> Delta {
+        let mut d = Delta::new();
+        for &(u, v, w) in changes {
+            d.reweight(g, u, v, w);
+        }
+        d
+    }
+
+    /// Append one edge change (expanded to both arcs when `g` is
+    /// undirected).
+    pub fn reweight(&mut self, g: &Graph, u: u32, v: u32, w: u32) {
+        self.arcs.push((u, v, w));
+        if !g.is_directed() {
+            self.arcs.push((v, u, w));
+        }
+    }
+
+    /// The resolved per-arc changes `(src, dst, new_weight)`.
+    pub fn arcs(&self) -> &[(u32, u32, u32)] {
+        &self.arcs
+    }
+
+    /// Number of arc-level changes.
+    pub fn len(&self) -> usize {
+        self.arcs.len()
+    }
+
+    /// True when no changes are recorded.
+    pub fn is_empty(&self) -> bool {
+        self.arcs.is_empty()
+    }
 }
 
 #[cfg(test)]
@@ -208,6 +295,40 @@ mod tests {
         assert_eq!(g.center(), 2);
         assert_eq!(g.eccentricity(0), 4);
         assert_eq!(g.eccentricity(2), 2);
+    }
+
+    #[test]
+    fn delta_expands_undirected_edges_to_both_arcs() {
+        let g = Graph::from_edges(3, &[(0, 1, 5), (1, 2, 7)], false);
+        let d = Delta::from_edges(&g, &[(0, 1, 9)]);
+        assert_eq!(d.arcs(), &[(0, 1, 9), (1, 0, 9)]);
+        assert_eq!(d.len(), 2);
+        let gd = Graph::from_edges(3, &[(0, 1, 5), (1, 2, 7)], true);
+        let dd = Delta::from_edges(&gd, &[(0, 1, 9)]);
+        assert_eq!(dd.arcs(), &[(0, 1, 9)]);
+        assert!(Delta::new().is_empty());
+    }
+
+    #[test]
+    fn apply_delta_updates_weights_in_place() {
+        let mut g = Graph::from_edges(3, &[(0, 1, 5), (1, 2, 7)], false);
+        let d = Delta::from_edges(&g.clone(), &[(0, 1, 9)]);
+        g.apply_delta(&d).unwrap();
+        assert_eq!(g.neighbors(0).next(), Some((1, 9)));
+        assert!(g.neighbors(1).any(|e| e == (0, 9)));
+        assert!(g.neighbors(1).any(|e| e == (2, 7)), "untouched edge keeps its weight");
+    }
+
+    #[test]
+    fn apply_delta_rejects_structure_changes() {
+        let mut g = Graph::from_edges(3, &[(0, 1, 5)], false);
+        let mut d = Delta::new();
+        d.reweight(&g.clone(), 0, 2, 4); // arc 0->2 does not exist
+        let err = g.apply_delta(&d).unwrap_err();
+        assert!(err.contains("no arc 0->2"), "{err}");
+        let mut d2 = Delta::new();
+        d2.reweight(&g.clone(), 0, 9, 4); // vertex out of range
+        assert!(g.apply_delta(&d2).is_err());
     }
 
     #[test]

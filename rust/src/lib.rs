@@ -20,6 +20,13 @@
 //! ([`workloads::program::VertexProgram`], DESIGN.md §5): the paper trio
 //! (BFS/SSSP/WCC) plus PageRank, A*/ALT navigation and randomized MIS all
 //! run on the same unmodified simulator cores.
+//!
+//! Query serving follows the compile-once/serve-many split (DESIGN.md
+//! §6): the immutable machine image ([`compiler::CompiledGraph`]) is
+//! separated from the reusable run state ([`sim::SimInstance`]), the
+//! [`service::Engine`] fans query batches across worker threads, and
+//! weight-only traffic updates patch the mapped tables in place
+//! ([`graph::Delta`], `CompiledGraph::apply_attr_updates`).
 
 #![warn(missing_docs)]
 
@@ -32,6 +39,7 @@ pub mod graph;
 pub mod metrics;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod util;
 pub mod workloads;

@@ -7,6 +7,8 @@
 //!          --group <tree|srn|lrn|syn|extlrn>
 //!          [--idx I] [--source V] [--target V] [--rounds N]
 //!          [--golden] [--set key=val]...
+//! flip serve --group <g> [--idx I] [--queries N] [--threads T]
+//!            [--workload bfs|sssp|wcc|nav|mix] [--seed S] [--set key=val]...
 //! flip compile --group <g> [--idx I]        mapping statistics
 //! flip golden --workload <w> --group <g>    validate sim vs PJRT artifacts
 //! flip info                                 configuration + artifact status
@@ -102,6 +104,7 @@ fn real_main() -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("exp") => cmd_exp(&args),
         Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
         Some("compile") => cmd_compile(&args),
         Some("golden") => cmd_golden(&args),
         Some("info") => cmd_info(),
@@ -121,6 +124,9 @@ fn print_usage() {
     }
     println!("  run            single cycle-accurate run (--workload, --group, --idx, --source;");
     println!("                 extended workloads: pagerank [--rounds], astar [--target], mis)");
+    println!("  serve          query-serving engine: compile once, serve a random query batch");
+    println!("                 (--group, [--idx], [--queries N], [--threads T],");
+    println!("                 [--workload bfs|sssp|wcc|nav|mix])");
     println!("  compile        mapping statistics (--group, --idx)");
     println!("  golden         validate simulator vs PJRT golden model");
     println!("  info           configuration and artifact status");
@@ -164,7 +170,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         return cmd_run_extended(args, &env, w, &g, group, idx, source, &opts);
     }
     let pair = flip::experiments::harness::CompiledPair::build(&g, &env.cfg, env.seed);
-    let r = flip::experiments::harness::run_flip_opts(&pair, w, source, &opts);
+    let r = flip::experiments::harness::run_flip_opts(&pair, w, source, &opts)?;
     println!(
         "{} on {} graph #{idx} (|V|={}, |E|={}), source {source}:",
         w.name(),
@@ -281,6 +287,77 @@ fn cmd_run_extended(
             );
         }
         _ => unreachable!("guarded by is_extended"),
+    }
+    Ok(())
+}
+
+/// `flip serve` — the compile-once/serve-many path (DESIGN.md §6): build
+/// one engine over a mapped graph and drain a random query batch through
+/// it, reporting throughput. `--workload mix` interleaves BFS, SSSP and
+/// (on undirected road groups) point-to-point navigation.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use flip::service::{Engine, Job};
+    let env = args.env()?;
+    let group = args.group()?;
+    let idx: usize = args.flag("idx").unwrap_or("0").parse()?;
+    let queries: usize = args.flag("queries").unwrap_or("256").parse()?;
+    let threads: usize = match args.flag("threads") {
+        Some(t) => t.parse()?,
+        None => std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+    };
+    let kind = args.flag("workload").unwrap_or("mix");
+    let g = datasets::generate_one(group, idx, env.seed);
+    let nav_ok = !g.is_directed();
+    if matches!(kind, "nav" | "astar") && !nav_ok {
+        return Err(format!(
+            "navigation needs an undirected road network; group {} is directed \
+             (try srn/lrn/extlrn)",
+            group.name()
+        )
+        .into());
+    }
+    let n = g.num_vertices() as u64;
+    let mut rng = flip::util::Rng::new(env.seed ^ 0x5E21);
+    let jobs: Vec<Job> = (0..queries)
+        .map(|i| {
+            let s = rng.below(n) as u32;
+            let t = rng.below(n) as u32;
+            match kind {
+                "bfs" => Ok(Job::Workload(Workload::Bfs, s)),
+                "sssp" => Ok(Job::Workload(Workload::Sssp, s)),
+                "wcc" => Ok(Job::Workload(Workload::Wcc, s)),
+                "nav" | "astar" => Ok(Job::Navigate { source: s, target: t }),
+                "mix" => Ok(match i % 3 {
+                    0 => Job::Workload(Workload::Bfs, s),
+                    1 => Job::Workload(Workload::Sssp, s),
+                    _ if nav_ok => Job::Navigate { source: s, target: t },
+                    _ => Job::Workload(Workload::Wcc, s),
+                }),
+                other => Err(format!("unknown serve workload `{other}`")),
+            }
+        })
+        .collect::<std::result::Result<_, _>>()?;
+    println!(
+        "serving {queries} {kind} queries on {} graph #{idx} (|V|={}, |E|={}) \
+         with {threads} workers",
+        group.name(),
+        g.num_vertices(),
+        g.num_edges()
+    );
+    let t0 = std::time::Instant::now();
+    let pair = flip::experiments::harness::CompiledPair::build(&g, &env.cfg, env.seed);
+    println!("  compile + map     : {:.1} ms (once)", t0.elapsed().as_secs_f64() * 1e3);
+    let opts = SimOptions { max_cycles: 2_000_000_000, watchdog: 5_000_000, ..Default::default() };
+    let mut engine = Engine::new(&pair).with_workers(threads).with_opts(opts);
+    let report = engine.serve(&jobs);
+    let errors = report.results.iter().filter(|r| r.is_err()).count();
+    println!("  queries served    : {} ({} failed)", queries - errors, errors);
+    println!("  wall time         : {:.3} s", report.wall_seconds);
+    println!("  queries/s         : {:.1}", report.queries_per_s);
+    println!("  sim cycles        : {}", report.sim_cycles);
+    println!("  sim PE-cycles/s   : {:.1}M", report.pe_cycles_per_s / 1e6);
+    if let Some(e) = report.first_error() {
+        return Err(format!("first failed query: {e}").into());
     }
     Ok(())
 }

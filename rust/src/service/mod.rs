@@ -1,0 +1,333 @@
+//! The query-serving layer (DESIGN.md §6): compile once, serve many.
+//!
+//! The paper's headline edge scenario is navigation over a mapped road
+//! network: one graph is compiled onto the fabric, then serves a *stream*
+//! of route queries while edge costs drift with traffic. This module is
+//! that serving loop. An [`Engine`] owns a worker pool where each worker
+//! holds one reusable [`SimInstance`] over a shared
+//! [`CompiledPair`] — the compile/allocate work happens once, and every
+//! query after that touches only O(query) state
+//! ([`SimInstance::reset`]'s contract).
+//!
+//! **Determinism.** Each query runs on a private machine instance whose
+//! reset contract makes it indistinguishable from a cold start, so engine
+//! results are bit-identical to sequential [`crate::sim::flip::run`] —
+//! cycles, attributes, and every [`crate::metrics::SimMetrics`] counter —
+//! regardless of worker count or scheduling order (`tests/service.rs`).
+//!
+//! **Failure isolation.** A failing query (simulator abort, bad source,
+//! navigation on a directed graph) comes back as a [`QueryError`] *value*
+//! in the batch — worker threads never panic, so one poisoned query
+//! cannot take down a sweep (the repo's earlier behaviour).
+//!
+//! **Backpressure.** The engine is batch-synchronous: callers hand it a
+//! bounded job slice and block until the [`BatchReport`] is complete.
+//! There are no unbounded internal queues — admission control is the
+//! caller's batch size, which is the right shape for an edge device
+//! draining a request ring.
+//!
+//! **Traffic updates.** Weight-only deltas patch the shared
+//! [`CompiledPair`] in place via
+//! [`CompiledPair::apply_attr_updates`] *between* batches (the engine
+//! borrows the pair). ALT landmarks are weight-dependent, so rebuild the
+//! engine (or call [`Engine::with_navigation`] again) after a delta —
+//! `examples/traffic_update.rs` is the full update→replan loop.
+
+use crate::experiments::harness::CompiledPair;
+use crate::metrics::RunResult;
+use crate::sim::flip::{SimInstance, SimOptions};
+use crate::workloads::navigation::Landmarks;
+use crate::workloads::Workload;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// ALT landmarks per graph when navigation preprocessing is built lazily.
+const DEFAULT_LANDMARKS: usize = 4;
+
+/// One query job for the [`Engine`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Job {
+    /// A built-in trio workload (BFS/SSSP/WCC) from a source vertex
+    /// (ignored by WCC's dense seeding).
+    Workload(Workload, u32),
+    /// Point-to-point A*/ALT navigation (undirected graphs only).
+    Navigate {
+        /// Query origin vertex.
+        source: u32,
+        /// Query destination vertex.
+        target: u32,
+    },
+}
+
+impl Job {
+    /// Human-readable label for errors and reports.
+    pub fn describe(&self) -> String {
+        match *self {
+            Job::Workload(w, s) => format!("{} from {s}", w.name()),
+            Job::Navigate { source, target } => format!("navigate {source} -> {target}"),
+        }
+    }
+}
+
+/// A failed query, surfaced as data so one bad query cannot poison a
+/// batch or panic a worker thread.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QueryError {
+    /// The job that failed, rendered for diagnostics.
+    pub job: String,
+    /// The simulator/engine error message.
+    pub msg: String,
+}
+
+impl std::fmt::Display for QueryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.job, self.msg)
+    }
+}
+
+impl std::error::Error for QueryError {}
+
+/// One answered query.
+#[derive(Debug, Clone)]
+pub struct QueryResult {
+    /// The job this answers.
+    pub job: Job,
+    /// The full simulator run (cycles, attributes, metrics, energy
+    /// counters) — bit-identical to a sequential cold-start run.
+    pub run: RunResult,
+    /// For [`Job::Navigate`]: the exact shortest distance
+    /// ([`crate::graph::INF`] = unreachable).
+    pub distance: Option<u32>,
+}
+
+/// Throughput report for one served batch.
+#[derive(Debug, Clone)]
+pub struct BatchReport {
+    /// Per-job outcome, in job order.
+    pub results: Vec<Result<QueryResult, QueryError>>,
+    /// Wall-clock seconds for the whole batch.
+    pub wall_seconds: f64,
+    /// Queries served per wall-clock second.
+    pub queries_per_s: f64,
+    /// Total simulated fabric cycles across successful queries.
+    pub sim_cycles: u64,
+    /// Simulated PE-cycles per wall-clock second, summed over all workers.
+    pub pe_cycles_per_s: f64,
+    /// Worker threads actually used for this batch.
+    pub workers: usize,
+}
+
+impl BatchReport {
+    /// The first failed query of the batch, if any.
+    pub fn first_error(&self) -> Option<&QueryError> {
+        self.results.iter().find_map(|r| r.as_ref().err())
+    }
+
+    /// Unwrap every result into its raw run, in job order; the first
+    /// failure wins.
+    pub fn into_runs(self) -> Result<Vec<RunResult>, QueryError> {
+        self.results.into_iter().map(|r| r.map(|q| q.run)).collect()
+    }
+}
+
+/// A multi-threaded query-serving engine over one compiled graph pair.
+///
+/// Construction is cheap (no allocation until the first batch); worker
+/// instances are built on first use and reused across batches, so the
+/// steady state allocates nothing per query beyond each result's
+/// attribute vector.
+pub struct Engine<'a> {
+    pair: &'a CompiledPair,
+    /// One reusable machine per worker, created lazily and kept across
+    /// batches.
+    instances: Vec<SimInstance>,
+    /// ALT preprocessing shared by all Navigate jobs (weight-dependent:
+    /// invalidated by rebuilding the engine after a traffic delta).
+    landmarks: Option<Landmarks>,
+    opts: SimOptions,
+    workers: usize,
+}
+
+impl<'a> Engine<'a> {
+    /// An engine over `pair` using every available core.
+    pub fn new(pair: &'a CompiledPair) -> Engine<'a> {
+        let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let opts = SimOptions::default();
+        Engine { pair, instances: Vec::new(), landmarks: None, opts, workers }
+    }
+
+    /// Override the worker-thread count (clamped to ≥ 1).
+    pub fn with_workers(mut self, n: usize) -> Engine<'a> {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// Override the per-query simulator options.
+    pub fn with_opts(mut self, opts: SimOptions) -> Engine<'a> {
+        self.opts = opts;
+        self
+    }
+
+    /// Build the ALT landmarks now (panics on directed graphs, like
+    /// [`Landmarks::build`]). Without this, landmarks are built lazily
+    /// when the first [`Job::Navigate`] batch arrives.
+    pub fn with_navigation(mut self, num_landmarks: usize) -> Engine<'a> {
+        self.landmarks = Some(Landmarks::build(&self.pair.graph, num_landmarks));
+        self
+    }
+
+    /// Configured worker count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Serve one batch of jobs and report per-job results plus
+    /// throughput. Blocks until every job is answered; results are in job
+    /// order and bit-identical to sequential single-query runs.
+    pub fn serve(&mut self, jobs: &[Job]) -> BatchReport {
+        if self.landmarks.is_none()
+            && !self.pair.graph.is_directed()
+            && jobs.iter().any(|j| matches!(j, Job::Navigate { .. }))
+        {
+            self.landmarks = Some(Landmarks::build(&self.pair.graph, DEFAULT_LANDMARKS));
+        }
+        let want = self.workers.min(jobs.len()).max(1);
+        while self.instances.len() < want {
+            self.instances.push(SimInstance::new(&self.pair.directed));
+        }
+        let pair = self.pair;
+        let lm = self.landmarks.as_ref();
+        let opts = &self.opts;
+        let t0 = std::time::Instant::now();
+        let results: Vec<Result<QueryResult, QueryError>> = if want <= 1 {
+            let inst = &mut self.instances[0];
+            jobs.iter().map(|&j| answer(inst, pair, lm, opts, j)).collect()
+        } else {
+            let next = AtomicUsize::new(0);
+            let chunks: Vec<Vec<_>> = std::thread::scope(|s| {
+                    let handles: Vec<_> = self
+                        .instances
+                        .iter_mut()
+                        .take(want)
+                        .map(|inst| {
+                            let next = &next;
+                            s.spawn(move || {
+                                let mut local = Vec::new();
+                                loop {
+                                    let i = next.fetch_add(1, Ordering::Relaxed);
+                                    if i >= jobs.len() {
+                                        break;
+                                    }
+                                    local.push((i, answer(inst, pair, lm, opts, jobs[i])));
+                                }
+                                local
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("engine worker panicked"))
+                        .collect()
+                });
+            let mut out: Vec<Option<Result<QueryResult, QueryError>>> =
+                Vec::with_capacity(jobs.len());
+            out.resize_with(jobs.len(), || None);
+            for (i, r) in chunks.into_iter().flatten() {
+                out[i] = Some(r);
+            }
+            out.into_iter().map(|o| o.expect("missing engine result")).collect()
+        };
+        let wall = t0.elapsed().as_secs_f64();
+        let sim_cycles: u64 =
+            results.iter().filter_map(|r| r.as_ref().ok()).map(|q| q.run.cycles).sum();
+        let num_pes = pair.directed.cfg.num_pes() as f64;
+        BatchReport {
+            queries_per_s: if wall > 0.0 { jobs.len() as f64 / wall } else { 0.0 },
+            pe_cycles_per_s: if wall > 0.0 { sim_cycles as f64 * num_pes / wall } else { 0.0 },
+            sim_cycles,
+            wall_seconds: wall,
+            workers: want,
+            results,
+        }
+    }
+}
+
+/// Answer one job on a worker's machine instance.
+fn answer(
+    inst: &mut SimInstance,
+    pair: &CompiledPair,
+    lm: Option<&Landmarks>,
+    opts: &SimOptions,
+    job: Job,
+) -> Result<QueryResult, QueryError> {
+    let fail = |msg: String| QueryError { job: job.describe(), msg };
+    let n = pair.graph.num_vertices();
+    match job {
+        Job::Workload(w, source) => {
+            if w.is_extended() {
+                return Err(fail(format!(
+                    "{} carries graph-derived state; the engine serves the trio and Navigate jobs",
+                    w.name()
+                )));
+            }
+            if source as usize >= n {
+                return Err(fail(format!("source {source} out of range (|V| = {n})")));
+            }
+            let c = pair.for_workload(w);
+            let vp = w.builtin_program();
+            let run = inst.run_program(c, vp.as_ref(), source, opts).map_err(&fail)?;
+            crate::experiments::harness::debug_check_reference(pair, w, source, &run);
+            Ok(QueryResult { job, run, distance: None })
+        }
+        Job::Navigate { source, target } => {
+            if source as usize >= n || target as usize >= n {
+                return Err(fail(format!("query {source} -> {target} out of range (|V| = {n})")));
+            }
+            let lm = lm.ok_or_else(|| {
+                fail("navigation needs an undirected road network (no ALT landmarks)".to_string())
+            })?;
+            let vp = lm.query(source, target);
+            let run = inst.run_program(&pair.directed, &vp, source, opts).map_err(&fail)?;
+            let distance = run.attrs[target as usize];
+            Ok(QueryResult { job, run, distance: Some(distance) })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::graph::generate;
+
+    #[test]
+    fn job_describe_names_the_query() {
+        assert_eq!(Job::Workload(Workload::Bfs, 3).describe(), "BFS from 3");
+        assert_eq!(Job::Navigate { source: 1, target: 9 }.describe(), "navigate 1 -> 9");
+    }
+
+    #[test]
+    fn extended_workload_jobs_error_as_data() {
+        let g = generate::road_network(32, 70, 80, 3);
+        let pair = CompiledPair::build(&g, &ArchConfig::default(), 1);
+        let mut engine = Engine::new(&pair).with_workers(1);
+        let rep = engine.serve(&[Job::Workload(Workload::PageRank, 0)]);
+        let err = rep.first_error().expect("extended workloads are not servable");
+        assert!(err.msg.contains("graph-derived state"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_source_is_an_error_not_a_panic() {
+        let g = generate::road_network(32, 70, 80, 5);
+        let pair = CompiledPair::build(&g, &ArchConfig::default(), 1);
+        let mut engine = Engine::new(&pair).with_workers(2);
+        let jobs = [
+            Job::Workload(Workload::Bfs, 0),
+            Job::Workload(Workload::Bfs, 1_000),
+            Job::Workload(Workload::Sssp, 3),
+        ];
+        let rep = engine.serve(&jobs);
+        assert!(rep.results[0].is_ok());
+        assert!(rep.results[1].is_err(), "bad source must fail as data");
+        assert!(rep.results[2].is_ok(), "one bad query must not poison the batch");
+    }
+}

@@ -18,6 +18,22 @@
 //!   pending packet is swapped in (earliest-pending priority, §3.3;
 //!   ties break to the lowest slice id).
 //!
+//! ## Machine image vs. run state (DESIGN.md §6)
+//!
+//! The simulator is split along the paper's configure-once/run-many line:
+//! the **machine image** — routing tables, placement, DRF contents — is
+//! the immutable [`crate::compiler::CompiledGraph`], and everything the
+//! machine *mutates* while executing lives in a reusable [`SimInstance`]
+//! (ring arenas, per-PE scalars, SPM parking lists, scheduler worklists,
+//! metric counters). One instance serves an arbitrary stream of queries:
+//! after a completed run the fabric has drained itself (every FIFO empty,
+//! every credit returned), so [`SimInstance::reset`] only touches the
+//! per-PE scalars the previous run actually dirtied — O(touched state),
+//! with zero steady-state allocation for machine state (the returned
+//! [`RunResult`]'s attribute vector is the one per-query allocation). An
+//! *aborted* run (watchdog / max-cycles) leaves packets mid-flight; the
+//! next reset then does a full, still allocation-free, clear.
+//!
 //! ## Scheduling (DESIGN.md §Perf)
 //!
 //! The core is *active-set* scheduled: only PEs that hold a packet or any
@@ -44,8 +60,9 @@
 //! The functional result (final vertex attributes) must equal the native
 //! reference and the PJRT golden model exactly — checked in tests.
 
-use crate::arch::{isa, yx_route, Dir, Packet, PeCoord, Topology};
+use crate::arch::{isa, yx_route, Dir, Packet, Topology};
 use crate::compiler::CompiledGraph;
+use crate::config::ArchConfig;
 use crate::metrics::{ActivityCounts, RunResult, SimMetrics};
 use crate::workloads::program::VertexProgram;
 use crate::workloads::Workload;
@@ -165,6 +182,13 @@ impl<T: Copy> RingArena<T> {
         self.len[q] -= 1;
         Some(v)
     }
+
+    /// Empty every queue (hard reset). Head pointers are rewound too so
+    /// the arena is indistinguishable from a fresh one.
+    fn clear_all(&mut self) {
+        self.head.fill(0);
+        self.len.fill(0);
+    }
 }
 
 impl RingArena<AluinItem> {
@@ -282,6 +306,8 @@ struct ClusterState {
 }
 
 /// Timing and capacity scalars copied out of ArchConfig (hot-loop data).
+/// Everything here is a property of the *fabric*, not of any particular
+/// compiled graph, so it lives in the reusable [`SimInstance`].
 struct Timing {
     t_hop: u64,
     t_intra_lookup: u64,
@@ -290,16 +316,34 @@ struct Timing {
     aluin_cap: usize,
     aluout_cap: usize,
     num_clusters: usize,
-    num_copies: usize,
 }
 
-/// The FLIP cycle-accurate simulator (event-driven core).
-pub struct FlipSim<'a> {
+/// Per-run immutable context: the machine image being executed and the
+/// vertex program driving it. Borrowed for the duration of one query so
+/// the mutable [`SimInstance`] outlives every run.
+struct RunCtx<'a> {
     c: &'a CompiledGraph,
     vp: &'a dyn VertexProgram,
     /// `vp.bound()` cached out of the per-message ALU hot path.
     vp_bound: u32,
-    opts: SimOptions,
+    /// PE-array replicas of this compiled graph (slice layers).
+    num_copies: usize,
+    opts: &'a SimOptions,
+}
+
+/// The reusable per-fabric run state of the event-driven FLIP core.
+///
+/// Built once per (fabric, graph-family) from a [`CompiledGraph`], then
+/// driven through any number of queries via [`SimInstance::run`] /
+/// [`SimInstance::run_program`] — including queries against *other*
+/// compiled graphs of the same [`ArchConfig`] (e.g. a
+/// [`crate::experiments::harness::CompiledPair`]'s directed and
+/// undirected views; the per-slice SPM directories grow once to the
+/// largest copy count seen). Between queries [`SimInstance::reset`]
+/// restores pristine state in O(touched) — see the module docs.
+pub struct SimInstance {
+    /// The fabric this instance was built for (shape/timing guard).
+    cfg: ArchConfig,
     topo: Topology,
     tm: Timing,
     pe: Vec<PeScalars>,
@@ -336,6 +380,13 @@ pub struct FlipSim<'a> {
     in_work: Vec<bool>,
     /// Per-cluster count of parked packets + pending seeds.
     cluster_work: Vec<u32>,
+    /// PEs whose scalar state the current/previous run dirtied — the
+    /// reset() worklist (flag-deduplicated like `newly`).
+    touched: Vec<u32>,
+    is_touched: Vec<bool>,
+    /// True after an aborted run: packets may still be mid-flight, so the
+    /// next reset must clear the whole machine instead of `touched` only.
+    needs_hard_reset: bool,
     // ---- incrementally-maintained counters ------------------------------
     /// #ALUs in `Executing` (the per-cycle busy sample).
     execing: u32,
@@ -360,15 +411,15 @@ pub struct FlipSim<'a> {
     progress_at: u64,
 }
 
-impl<'a> FlipSim<'a> {
-    /// Build a simulator instance for one vertex program over a compiled
-    /// graph. `vp` carries all algorithm-specific behaviour (DESIGN.md §5).
-    pub fn new(c: &'a CompiledGraph, vp: &'a dyn VertexProgram, opts: SimOptions) -> FlipSim<'a> {
+impl SimInstance {
+    /// Allocate the full machine run state for the fabric `c` was
+    /// compiled for. This is the *only* allocating step of the serve
+    /// path; every subsequent query reuses these buffers.
+    pub fn new(c: &CompiledGraph) -> SimInstance {
         let cfg = &c.cfg;
         let num_pes = cfg.num_pes();
         let num_clusters = cfg.num_clusters();
-        let num_copies = c.placement.num_copies;
-        let num_slices = num_copies * num_clusters;
+        let num_slices = c.placement.num_copies * num_clusters;
         let tm = Timing {
             t_hop: cfg.t_hop,
             t_intra_lookup: cfg.t_intra_lookup,
@@ -377,12 +428,9 @@ impl<'a> FlipSim<'a> {
             aluin_cap: cfg.aluin_cap,
             aluout_cap: cfg.aluout_cap,
             num_clusters,
-            num_copies,
         };
-        FlipSim {
-            vp,
-            vp_bound: vp.bound(),
-            opts,
+        let mut inst = SimInstance {
+            cfg: cfg.clone(),
             topo: Topology::new(cfg),
             pe: (0..num_pes).map(|_| PeScalars::new()).collect(),
             inbuf: RingArena::new(num_pes * 4, cfg.input_buf_cap, ZERO_QPKT),
@@ -407,6 +455,9 @@ impl<'a> FlipSim<'a> {
             work_list: Vec::new(),
             in_work: vec![false; num_clusters],
             cluster_work: vec![0; num_clusters],
+            touched: Vec::with_capacity(num_pes),
+            is_touched: vec![false; num_pes],
+            needs_hard_reset: false,
             execing: 0,
             aluin_total: 0,
             parked_total: 0,
@@ -425,8 +476,170 @@ impl<'a> FlipSim<'a> {
             peak_par: 0,
             trace: vec![],
             progress_at: 0,
-            c,
             tm,
+        };
+        inst.init_credits();
+        inst
+    }
+
+    /// Run one built-in trio workload on this instance. Results are
+    /// bit-identical to a fresh [`run`] over the same inputs.
+    pub fn run(
+        &mut self,
+        c: &CompiledGraph,
+        workload: Workload,
+        source: u32,
+        opts: &SimOptions,
+    ) -> Result<RunResult, String> {
+        let vp = workload.builtin_program();
+        self.run_program(c, vp.as_ref(), source, opts)
+    }
+
+    /// Run an arbitrary vertex program on this instance. `c` must be
+    /// compiled for the same [`ArchConfig`] the instance was built with;
+    /// it may be a *different* compiled graph (the serve path reuses one
+    /// instance across a [`crate::experiments::harness::CompiledPair`]'s
+    /// views).
+    pub fn run_program(
+        &mut self,
+        c: &CompiledGraph,
+        vp: &dyn VertexProgram,
+        source: u32,
+        opts: &SimOptions,
+    ) -> Result<RunResult, String> {
+        if c.cfg != self.cfg {
+            return Err(
+                "SimInstance fabric mismatch: the compiled graph targets a different ArchConfig"
+                    .to_string(),
+            );
+        }
+        self.ensure_slice_capacity(c);
+        self.reset();
+        // until the run completes cleanly, assume packets are mid-flight
+        self.needs_hard_reset = true;
+        let cx = RunCtx { c, vp, vp_bound: vp.bound(), num_copies: c.placement.num_copies, opts };
+        let out = self.drive(&cx, source);
+        if out.is_ok() {
+            // the fabric drained itself: every queue empty, every credit
+            // returned — the next reset() is O(touched)
+            self.needs_hard_reset = false;
+        }
+        out
+    }
+
+    /// Restore pristine post-construction state. After a completed run
+    /// this is O(touched state): the fabric has drained itself, so only
+    /// the per-PE scalars the run dirtied (plus the per-run counters) are
+    /// rewritten. After an aborted run it clears the whole machine.
+    /// Either way nothing is allocated. Called automatically at the start
+    /// of every run; public for tests and explicit lifecycle management.
+    pub fn reset(&mut self) {
+        if self.needs_hard_reset {
+            self.hard_clear();
+        } else {
+            self.soft_clear();
+        }
+        self.needs_hard_reset = false;
+    }
+
+    /// O(touched): only valid when the previous run drained the machine.
+    fn soft_clear(&mut self) {
+        // take/restore the worklists so their buffers survive (no alloc)
+        let mut touched = std::mem::take(&mut self.touched);
+        for &pe_u in &touched {
+            let pe = pe_u as usize;
+            debug_assert!(self.pe[pe].queued == 0 && !self.pe[pe].active);
+            self.pe[pe] = PeScalars::new();
+            self.is_touched[pe] = false;
+        }
+        touched.clear();
+        self.touched = touched;
+        // stale work-list entries (their work drained on the final cycle,
+        // before the lazy compaction in step_swaps could drop them)
+        let mut work_list = std::mem::take(&mut self.work_list);
+        for &cl_u in &work_list {
+            let cl = cl_u as usize;
+            debug_assert_eq!(self.cluster_work[cl], 0);
+            self.in_work[cl] = false;
+        }
+        work_list.clear();
+        self.work_list = work_list;
+        self.reset_counters();
+    }
+
+    /// O(machine), allocation-free: valid from any state.
+    fn hard_clear(&mut self) {
+        for i in 0..self.pe.len() {
+            self.pe[i] = PeScalars::new();
+            self.is_touched[i] = false;
+            self.replay[i].clear();
+        }
+        self.touched.clear();
+        self.inbuf.clear_all();
+        self.local_q.clear_all();
+        self.aluin.clear_all();
+        self.pending.clear_all();
+        self.aluout.clear_all();
+        for cl in &mut self.clusters {
+            cl.swap = None; // resident is re-seeded at the next run start
+        }
+        self.init_credits();
+        for p in &mut self.parked {
+            p.list.clear();
+            p.min_at = u64::MAX;
+            p.dirty = false;
+        }
+        for s in &mut self.seeds {
+            s.clear();
+        }
+        self.active.clear();
+        self.newly.clear();
+        self.swap_clusters.clear();
+        self.work_list.clear();
+        self.in_work.fill(false);
+        self.cluster_work.fill(0);
+        self.reset_counters();
+    }
+
+    /// Zero every per-run counter and metric accumulator.
+    fn reset_counters(&mut self) {
+        self.execing = 0;
+        self.aluin_total = 0;
+        self.parked_total = 0;
+        self.seeds_total = 0;
+        self.now = 0;
+        self.act = Default::default();
+        self.edges = 0;
+        self.delivered = 0;
+        self.parked_count = 0;
+        self.swaps = 0;
+        self.swap_cycles = 0;
+        self.wait_sum = 0;
+        self.aluin_depth_sum = 0;
+        self.busy_cycles = 0;
+        self.busy_sum = 0;
+        self.peak_par = 0;
+        self.trace.clear();
+        self.progress_at = 0;
+    }
+
+    /// Link credits = downstream input FIFO capacity (mesh edges stay 0).
+    fn init_credits(&mut self) {
+        let cap = self.tm.input_buf_cap as u8;
+        for pe in 0..self.pe.len() {
+            for d in 0..4 {
+                self.credits[pe][d] = if self.topo.nbr[pe][d] != usize::MAX { cap } else { 0 };
+            }
+        }
+    }
+
+    /// Grow the per-slice SPM directories to cover `c`'s copy count
+    /// (one-time when a larger compiled graph is first served).
+    fn ensure_slice_capacity(&mut self, c: &CompiledGraph) {
+        let num_slices = c.placement.num_copies * self.tm.num_clusters;
+        if self.parked.len() < num_slices {
+            self.parked.resize_with(num_slices, SliceParked::new);
+            self.seeds.resize_with(num_slices, Vec::new);
         }
     }
 
@@ -438,9 +651,9 @@ impl<'a> FlipSim<'a> {
     /// Slice config of `pe_idx`'s currently resident slice, borrowed from
     /// the compiled graph (lifetime `'a`, independent of `&self`).
     #[inline]
-    fn slice_cfg_of(&self, pe_idx: usize) -> &'a crate::arch::PeSliceConfig {
+    fn slice_cfg_of<'a>(&self, cx: &RunCtx<'a>, pe_idx: usize) -> &'a crate::arch::PeSliceConfig {
         let cl = self.topo.cluster_of[pe_idx];
-        self.c.slice_cfg(self.resident_copy(cl), pe_idx)
+        cx.c.slice_cfg(self.resident_copy(cl), pe_idx)
     }
 
     // ---- scheduler bookkeeping -------------------------------------------
@@ -448,9 +661,15 @@ impl<'a> FlipSim<'a> {
     /// Put a PE on the worklist (no-op if already active). New work is
     /// only actionable next cycle (`t_hop ≥ 1`, replay/SPM latencies ≥ 0
     /// with the swap phase running before the sweep), so deferring the
-    /// merge preserves naive sweep order.
+    /// merge preserves naive sweep order. Also records the PE on the
+    /// reset() worklist: every path that dirties per-PE scalar state runs
+    /// through an activation of that PE.
     #[inline]
     fn activate(&mut self, pe_idx: usize) {
+        if !self.is_touched[pe_idx] {
+            self.is_touched[pe_idx] = true;
+            self.touched.push(pe_idx as u32);
+        }
         if !self.pe[pe_idx].active {
             self.pe[pe_idx].active = true;
             self.newly.push(pe_idx as u32);
@@ -523,25 +742,21 @@ impl<'a> FlipSim<'a> {
 
     /// Prepare initial state for a run from `source` (ignored by dense-
     /// seeded programs).
-    fn seed(&mut self, source: u32) {
-        let cfg = &self.c.cfg;
-        let n = self.c.placement.slots.len();
-        let vp = self.vp;
-        self.attrs = (0..n as u32).map(|v| vp.init_attr(v, n)).collect();
-        // link credits = downstream input FIFO capacity
-        for pe in 0..cfg.num_pes() {
-            let coord = PeCoord::from_index(pe, cfg);
-            for (d, _) in coord.neighbors(cfg) {
-                self.credits[pe][d as usize] = cfg.input_buf_cap as u8;
-            }
-        }
+    fn seed(&mut self, cx: &RunCtx, source: u32) {
+        let cfg = &cx.c.cfg;
+        let n = cx.c.placement.slots.len();
+        let vp = cx.vp;
+        // refill in place: the previous run's buffer was handed out with
+        // the RunResult, so this is the one per-query allocation
+        self.attrs.clear();
+        self.attrs.extend((0..n as u32).map(|v| vp.init_attr(v, n)));
         // initial resident slice per cluster: copy 0
         for cl in 0..self.tm.num_clusters {
             self.clusters[cl].resident = crate::compiler::Placement::slice_id(cfg, cl, 0);
         }
-        if self.vp.single_source() {
+        if vp.single_source() {
             // source's cluster loads the source's copy
-            let s = self.c.placement.slots[source as usize];
+            let s = cx.c.placement.slots[source as usize];
             let cl = s.pe.cluster(cfg);
             self.clusters[cl].resident = crate::compiler::Placement::slice_id(cfg, cl, s.copy);
             // bootstrap message: distance/level 0 delivered to the source
@@ -557,7 +772,7 @@ impl<'a> FlipSim<'a> {
                 if !vp.seeds(v) {
                     continue;
                 }
-                let s = self.c.placement.slots[v as usize];
+                let s = cx.c.placement.slots[v as usize];
                 let cl = s.pe.cluster(cfg);
                 let slice = crate::compiler::Placement::slice_id(cfg, cl, s.copy);
                 let pe_idx = s.pe.index(cfg);
@@ -583,22 +798,22 @@ impl<'a> FlipSim<'a> {
     }
 
     /// Run to termination; returns the functional result and metrics.
-    pub fn run(mut self, source: u32) -> Result<RunResult, String> {
-        self.seed(source);
+    fn drive(&mut self, cx: &RunCtx, source: u32) -> Result<RunResult, String> {
+        self.seed(cx, source);
         self.progress_at = 0;
         while !self.is_done() {
-            if self.now >= self.opts.max_cycles {
-                return Err(format!("exceeded max_cycles={}", self.opts.max_cycles));
+            if self.now >= cx.opts.max_cycles {
+                return Err(format!("exceeded max_cycles={}", cx.opts.max_cycles));
             }
-            if self.now - self.progress_at > self.opts.watchdog {
+            if self.now - self.progress_at > cx.opts.watchdog {
                 return Err(format!(
                     "no progress for {} cycles at cycle {} (deadlock?): {}",
-                    self.opts.watchdog,
+                    cx.opts.watchdog,
                     self.now,
                     self.diag()
                 ));
             }
-            self.step();
+            self.step(cx);
         }
         let cycles = self.now;
         let act = self.act;
@@ -653,10 +868,10 @@ impl<'a> FlipSim<'a> {
     }
 
     /// One cycle (possibly fast-forwarding over a stall at the end).
-    fn step(&mut self) {
+    fn step(&mut self, cx: &RunCtx) {
         let now = self.now;
         // ---- swap engine -------------------------------------------------
-        self.step_swaps();
+        self.step_swaps(cx);
         self.step_repatriate();
         // swap-phase activations are actionable this cycle (replay packets
         // arrive with ready_at = now): merge before the sweep.
@@ -671,15 +886,15 @@ impl<'a> FlipSim<'a> {
             let pe_idx = self.active[r] as usize;
             if self.pe[pe_idx].queued > 0 {
                 self.step_router(pe_idx);
-                self.step_delivery(pe_idx);
+                self.step_delivery(cx, pe_idx);
             } else if !self.pending.is_empty(pe_idx) {
-                self.step_delivery(pe_idx); // drain the match microqueue
+                self.step_delivery(cx, pe_idx); // drain the match microqueue
             }
             if !matches!(self.pe[pe_idx].alu, AluState::Idle) || !self.aluin.is_empty(pe_idx) {
-                self.step_alu(pe_idx);
+                self.step_alu(cx, pe_idx);
             }
             if !self.aluout.is_empty(pe_idx) {
-                self.step_scatter(pe_idx);
+                self.step_scatter(cx, pe_idx);
             }
             // retire fully-drained PEs; a later push re-activates them
             if self.fully_empty(pe_idx) {
@@ -697,7 +912,7 @@ impl<'a> FlipSim<'a> {
             self.busy_sum += busy as u64;
             self.peak_par = self.peak_par.max(busy);
         }
-        if self.opts.trace_parallelism {
+        if cx.opts.trace_parallelism {
             self.trace.push(busy as u16);
         }
         self.aluin_depth_sum += self.aluin_total;
@@ -715,8 +930,8 @@ impl<'a> FlipSim<'a> {
             // as the naive stepper.
             let t = self.next_event_after(now);
             let target = t
-                .min(self.opts.max_cycles)
-                .min(self.progress_at.saturating_add(self.opts.watchdog).saturating_add(1))
+                .min(cx.opts.max_cycles)
+                .min(self.progress_at.saturating_add(cx.opts.watchdog).saturating_add(1))
                 .max(now + 1);
             let skipped = target - (now + 1);
             if skipped > 0 {
@@ -724,7 +939,7 @@ impl<'a> FlipSim<'a> {
                     self.busy_cycles += skipped;
                     self.busy_sum += busy as u64 * skipped;
                 }
-                if self.opts.trace_parallelism {
+                if cx.opts.trace_parallelism {
                     let new_len = self.trace.len() + skipped as usize;
                     self.trace.resize(new_len, busy as u16);
                 }
@@ -793,7 +1008,7 @@ impl<'a> FlipSim<'a> {
     }
 
     // ---- swap engine (§3.3) ----------------------------------------------
-    fn step_swaps(&mut self) {
+    fn step_swaps(&mut self, cx: &RunCtx) {
         let now = self.now;
         // finish in-progress swaps
         let mut i = 0;
@@ -822,7 +1037,7 @@ impl<'a> FlipSim<'a> {
             if self.clusters[cl].swap.is_some() || !self.cluster_idle(cl) {
                 continue;
             }
-            self.try_start_swap(cl, now);
+            self.try_start_swap(cx, cl, now);
         }
     }
 
@@ -862,14 +1077,14 @@ impl<'a> FlipSim<'a> {
         self.touch();
     }
 
-    fn try_start_swap(&mut self, cl: usize, now: u64) {
+    fn try_start_swap(&mut self, cx: &RunCtx, cl: usize, now: u64) {
         let resident = self.clusters[cl].resident;
         let nc = self.tm.num_clusters;
         // candidate slices of this cluster, ascending slice id (so ties on
         // the earliest pending cycle resolve to the lowest slice — the
         // naive reference uses the same rule)
         let mut best: Option<(u64, u16)> = None; // (earliest pending, slice)
-        for copy in 0..self.tm.num_copies {
+        for copy in 0..cx.num_copies {
             let slice = (copy * nc + cl) as u16;
             if slice == resident {
                 continue;
@@ -887,14 +1102,14 @@ impl<'a> FlipSim<'a> {
         }
         if let Some((_, slice)) = best {
             // swap cost: write out current slice words + read in new
-            let cfg = &self.c.cfg;
+            let cfg = &cx.c.cfg;
             let out_copy = self.resident_copy(cl);
             let in_copy = (slice as usize / nc) as u16;
             let words: usize = self.topo.cluster_pes[cl]
                 .iter()
                 .map(|&i| {
-                    self.c.slice_cfg(out_copy, i).storage_words()
-                        + self.c.slice_cfg(in_copy, i).storage_words()
+                    cx.c.slice_cfg(out_copy, i).storage_words()
+                        + cx.c.slice_cfg(in_copy, i).storage_words()
                 })
                 .sum();
             let cost = words as u64 * cfg.t_swap_word + cfg.t_offchip_fixed;
@@ -1020,15 +1235,15 @@ impl<'a> FlipSim<'a> {
     /// the naive `VecDeque` chain: the first same-register entry decides,
     /// even when the program declines the merge). Returns true if merged.
     #[inline]
-    fn try_coalesce(&mut self, pe_idx: usize, item: AluinItem) -> bool {
-        let vp = self.vp;
+    fn try_coalesce(&mut self, cx: &RunCtx, pe_idx: usize, item: AluinItem) -> bool {
+        let vp = cx.vp;
         match self.aluin.coalesce(pe_idx, item, vp) {
             Some(merged) => merged,
             None => self.pending.coalesce(pe_idx, item, vp).unwrap_or(false),
         }
     }
 
-    fn step_delivery(&mut self, pe_idx: usize) {
+    fn step_delivery(&mut self, cx: &RunCtx, pe_idx: usize) {
         let now = self.now;
         if self.pe[pe_idx].deliver_busy_until > now {
             return;
@@ -1042,7 +1257,7 @@ impl<'a> FlipSim<'a> {
         if !self.pending.is_empty(pe_idx) {
             if self.aluin.len(pe_idx) < self.tm.aluin_cap {
                 let item = self.pending.pop_front(pe_idx).unwrap();
-                if !self.try_coalesce(pe_idx, item) {
+                if !self.try_coalesce(cx, pe_idx, item) {
                     self.aluin.push_back(pe_idx, item);
                     self.aluin_total += 1;
                 }
@@ -1086,9 +1301,9 @@ impl<'a> FlipSim<'a> {
             return;
         }
         // Intra-Table lookup (zero-copy bucket walk; borrowed from the
-        // compiled graph with lifetime 'a, so PE state stays mutable)
+        // compiled graph with its own lifetime, so PE state stays mutable)
         let copy = self.resident_copy(cl);
-        let bucket = self.c.slice_cfg(copy, pe_idx).intra.bucket(q.pkt.src_vid);
+        let bucket = cx.c.slice_cfg(copy, pe_idx).intra.bucket(q.pkt.src_vid);
         let walked = bucket.len().max(1) as u64;
         let src_vid = q.pkt.src_vid;
         let n_matches = bucket.iter().filter(|e| e.src_vid == src_vid).count();
@@ -1122,9 +1337,9 @@ impl<'a> FlipSim<'a> {
             if m.src_vid != src_vid {
                 continue;
             }
-            let msg = self.vp.combine(q.pkt.attr, m.weight);
+            let msg = cx.vp.combine(q.pkt.attr, m.weight);
             let item = AluinItem { reg: m.dst_reg, msg };
-            if self.try_coalesce(pe_idx, item) {
+            if self.try_coalesce(cx, pe_idx, item) {
                 // merged with a queued message for the same register
                 self.edges += 1;
                 continue;
@@ -1188,13 +1403,13 @@ impl<'a> FlipSim<'a> {
     }
 
     // ---- ALU ---------------------------------------------------------------
-    fn step_alu(&mut self, pe_idx: usize) {
+    fn step_alu(&mut self, cx: &RunCtx, pe_idx: usize) {
         let now = self.now;
         match self.pe[pe_idx].alu {
             AluState::Executing { until, reg, new_attr, scatter } => {
                 if until <= now {
                     // write back
-                    let vid = self.slice_cfg_of(pe_idx).vertices[reg as usize];
+                    let vid = self.slice_cfg_of(cx, pe_idx).vertices[reg as usize];
                     debug_assert!(vid != u32::MAX);
                     if self.attrs[vid as usize] != new_attr {
                         self.attrs[vid as usize] = new_attr;
@@ -1235,11 +1450,11 @@ impl<'a> FlipSim<'a> {
         }
         let Some(item) = self.aluin.pop_front(pe_idx) else { return };
         self.aluin_total -= 1;
-        let vid = self.slice_cfg_of(pe_idx).vertices[item.reg as usize];
+        let vid = self.slice_cfg_of(cx, pe_idx).vertices[item.reg as usize];
         debug_assert!(vid != u32::MAX, "ALUin item for empty DRF register");
         let attr = self.attrs[vid as usize];
-        let prog = self.vp.isa();
-        let ctx = isa::ExecCtx { aux: self.vp.aux(vid), bound: self.vp_bound };
+        let prog = cx.vp.isa();
+        let ctx = isa::ExecCtx { aux: cx.vp.aux(vid), bound: cx.vp_bound };
         let (res, new_attr) = isa::execute(prog, item.msg, attr, ctx);
         self.act.alu_ops += res.cycles;
         self.act.im_fetches += res.cycles;
@@ -1255,13 +1470,13 @@ impl<'a> FlipSim<'a> {
     }
 
     // ---- scatter (Inter-Table walk, farthest-first order) -------------------
-    fn step_scatter(&mut self, pe_idx: usize) {
+    fn step_scatter(&mut self, cx: &RunCtx, pe_idx: usize) {
         let now = self.now;
         if self.pe[pe_idx].scatter_next_at > now {
             return;
         }
         let Some(&(reg, attr)) = self.aluout.front(pe_idx) else { return };
-        let slice_cfg = self.slice_cfg_of(pe_idx);
+        let slice_cfg = self.slice_cfg_of(cx, pe_idx);
         let list = &slice_cfg.inter[reg as usize];
         let pos = self.pe[pe_idx].scatter_pos as usize;
         if pos >= list.len() {
@@ -1290,27 +1505,27 @@ impl<'a> FlipSim<'a> {
 }
 
 /// Convenience wrapper for the paper trio: compile must already be done;
-/// runs one built-in workload invocation from `source`. Extended
-/// workloads construct their stateful programs and use [`run_program`].
+/// runs one built-in workload invocation from `source` on a *fresh*
+/// machine (cold start). Query-serving paths hold a [`SimInstance`]
+/// instead and amortize this setup.
 pub fn run(
     c: &CompiledGraph,
     workload: Workload,
     source: u32,
     opts: &SimOptions,
 ) -> Result<RunResult, String> {
-    let vp = workload.builtin_program();
-    run_program(c, vp.as_ref(), source, opts)
+    SimInstance::new(c).run(c, workload, source, opts)
 }
 
-/// Run an arbitrary vertex program (the extended-workload entry point).
-/// `source` is ignored by dense-seeded programs.
+/// Run an arbitrary vertex program (the extended-workload entry point) on
+/// a fresh machine. `source` is ignored by dense-seeded programs.
 pub fn run_program(
     c: &CompiledGraph,
     vp: &dyn VertexProgram,
     source: u32,
     opts: &SimOptions,
 ) -> Result<RunResult, String> {
-    FlipSim::new(c, vp, opts.clone()).run(source)
+    SimInstance::new(c).run_program(c, vp, source, opts)
 }
 
 #[cfg(test)]
@@ -1448,5 +1663,87 @@ mod tests {
         assert_eq!(fast.attrs, naive.attrs);
         assert_eq!(fast.edges_traversed, naive.edges_traversed);
         assert_eq!(fast.sim, naive.sim);
+    }
+
+    #[test]
+    fn reused_instance_matches_fresh_runs() {
+        // the reset() contract: a reused machine is indistinguishable from
+        // a cold one across a mixed query stream, workload by workload
+        let g = generate::road_network(64, 146, 166, 7);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts::default());
+        let mut inst = SimInstance::new(&c);
+        let stream =
+            [(Workload::Bfs, 0u32), (Workload::Sssp, 5), (Workload::Bfs, 33), (Workload::Sssp, 0)];
+        for (w, src) in stream {
+            let reused = inst.run(&c, w, src, &SimOptions::default()).unwrap();
+            let fresh = run(&c, w, src, &SimOptions::default()).unwrap();
+            assert_eq!(reused.cycles, fresh.cycles, "{} src {src}", w.name());
+            assert_eq!(reused.attrs, fresh.attrs, "{} src {src}", w.name());
+            assert_eq!(reused.edges_traversed, fresh.edges_traversed);
+            assert_eq!(reused.sim, fresh.sim, "{} src {src}", w.name());
+        }
+    }
+
+    #[test]
+    fn reused_instance_matches_fresh_with_swapping() {
+        // reuse across the swap/SPM path: the dirtiest machine state
+        let g = generate::road_network(300, 690, 800, 17);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts::default());
+        let mut inst = SimInstance::new(&c);
+        for src in [0u32, 100, 299] {
+            let reused = inst.run(&c, Workload::Bfs, src, &SimOptions::default()).unwrap();
+            let fresh = run(&c, Workload::Bfs, src, &SimOptions::default()).unwrap();
+            assert_eq!(reused.cycles, fresh.cycles, "src {src}");
+            assert_eq!(reused.attrs, fresh.attrs);
+            assert_eq!(reused.sim, fresh.sim, "src {src}");
+        }
+    }
+
+    #[test]
+    fn instance_recovers_after_aborted_run() {
+        let g = generate::road_network(64, 146, 166, 9);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts::default());
+        let mut inst = SimInstance::new(&c);
+        // abort mid-flight: one cycle is never enough to drain a seed
+        let tiny = SimOptions { max_cycles: 1, ..Default::default() };
+        assert!(inst.run(&c, Workload::Bfs, 0, &tiny).is_err());
+        // the hard reset restores exact cold-start behaviour
+        let reused = inst.run(&c, Workload::Sssp, 12, &SimOptions::default()).unwrap();
+        let fresh = run(&c, Workload::Sssp, 12, &SimOptions::default()).unwrap();
+        assert_eq!(reused.cycles, fresh.cycles);
+        assert_eq!(reused.attrs, fresh.attrs);
+        assert_eq!(reused.sim, fresh.sim);
+    }
+
+    #[test]
+    fn instance_rejects_mismatched_fabric() {
+        let g = generate::synthetic(32, 64, 3);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts::default());
+        let other = ArchConfig { array_w: 4, array_h: 4, ..Default::default() };
+        let c4 = compile(&g, &other, &CompileOpts::default());
+        let mut inst = SimInstance::new(&c);
+        assert!(inst.run(&c4, Workload::Bfs, 0, &SimOptions::default()).is_err());
+    }
+
+    #[test]
+    fn instance_serves_multiple_compiled_views() {
+        // one worker instance alternates between a pair's directed and
+        // undirected machine images (the engine's steady-state pattern)
+        let g = generate::synthetic(48, 96, 11);
+        let cfg = ArchConfig::default();
+        let c_dir = compile(&g, &cfg, &CompileOpts::default());
+        let wcc_view = view_for(Workload::Wcc, &g);
+        let c_wcc = compile(&wcc_view, &cfg, &CompileOpts::default());
+        let mut inst = SimInstance::new(&c_dir);
+        for _ in 0..2 {
+            let b = inst.run(&c_dir, Workload::Bfs, 0, &SimOptions::default()).unwrap();
+            assert_eq!(b.attrs, reference::bfs_levels(&g, 0));
+            let w = inst.run(&c_wcc, Workload::Wcc, 0, &SimOptions::default()).unwrap();
+            assert_eq!(w.attrs, reference::wcc_labels(&wcc_view));
+        }
     }
 }

@@ -6,7 +6,11 @@
 //!
 //! Both FLIP cores execute any
 //! [`crate::workloads::program::VertexProgram`] (`flip::run_program`,
-//! `naive::run_program`); the `run` wrappers cover the paper trio.
+//! `naive::run_program`); the `run` wrappers cover the paper trio. Both
+//! also split the immutable machine image from the reusable run state
+//! (DESIGN.md §6): hold a [`SimInstance`] (or [`naive::NaiveInstance`])
+//! to serve many queries off one compiled graph without re-allocating
+//! the machine.
 
 pub mod flip;
 pub mod mcu;
@@ -14,4 +18,4 @@ pub mod modulo;
 pub mod naive;
 pub mod opcentric;
 
-pub use flip::{FlipSim, SimOptions};
+pub use flip::{SimInstance, SimOptions};

@@ -9,6 +9,13 @@
 //! this file boring: any behavioural change here must be mirrored in the
 //! fast core and vice versa.
 //!
+//! The machine-image/run-state split (DESIGN.md §6) is mirrored too:
+//! [`NaiveInstance`] owns the mutable machine state and can be reused
+//! across queries. Being the reference core, its [`NaiveInstance::reset`]
+//! is a deliberate full clear — O(machine), allocation-reusing — rather
+//! than the event core's O(touched) bookkeeping; both contracts produce
+//! machines indistinguishable from freshly built ones.
+//!
 //! One deliberate deviation from the seed version: swap-candidate
 //! selection used to iterate `HashMap`s, so ties between slices with equal
 //! earliest-pending cycles were broken by hash order — nondeterministic
@@ -16,6 +23,7 @@
 
 use crate::arch::{isa, yx_route, Dir, Packet, PeCoord};
 use crate::compiler::CompiledGraph;
+use crate::config::ArchConfig;
 use crate::metrics::{ActivityCounts, RunResult, SimMetrics};
 use crate::sim::SimOptions;
 use crate::workloads::program::VertexProgram;
@@ -115,6 +123,24 @@ impl PeState {
         }
     }
 
+    /// Return to the freshly-constructed state, keeping queue capacity.
+    fn clear(&mut self) {
+        for b in &mut self.inbuf {
+            b.clear();
+        }
+        self.local_q.clear();
+        self.replay_q.clear();
+        self.aluin.clear();
+        self.pending_matches.clear();
+        self.aluout.clear();
+        self.alu = AluState::Idle;
+        self.deliver_busy_until = 0;
+        self.scatter_pos = 0;
+        self.scatter_next_at = 0;
+        self.rr = [0; 5];
+        self.queued = 0;
+    }
+
     fn compute_idle(&self) -> bool {
         matches!(self.alu, AluState::Idle)
             && self.aluin.is_empty()
@@ -170,7 +196,7 @@ struct HotCfg {
 }
 
 impl HotCfg {
-    fn new(cfg: &crate::config::ArchConfig) -> HotCfg {
+    fn new(cfg: &ArchConfig) -> HotCfg {
         let mut nbr = vec![[usize::MAX; 4]; cfg.num_pes()];
         let mut cluster_of = vec![0usize; cfg.num_pes()];
         for i in 0..cfg.num_pes() {
@@ -193,13 +219,23 @@ impl HotCfg {
     }
 }
 
-/// The naive FLIP cycle-accurate reference simulator.
-pub struct NaiveFlipSim<'a> {
+/// Per-run immutable context for the naive stepper (mirror of the event
+/// core's private run context).
+struct RunCtx<'a> {
     c: &'a CompiledGraph,
     vp: &'a dyn VertexProgram,
     /// `vp.bound()` cached out of the per-message ALU path.
     vp_bound: u32,
-    opts: SimOptions,
+    opts: &'a SimOptions,
+}
+
+/// The reusable run state of the naive reference stepper (mirror of
+/// [`crate::sim::SimInstance`]). Reset is a full machine clear — the
+/// reference core favors obviousness over the event core's O(touched)
+/// bookkeeping — but still reuses every queue/map allocation.
+pub struct NaiveInstance {
+    /// The fabric this instance was built for (shape/timing guard).
+    cfg: ArchConfig,
     hot: HotCfg,
     pes: Vec<PeState>,
     clusters: Vec<ClusterState>,
@@ -227,14 +263,9 @@ pub struct NaiveFlipSim<'a> {
     progress_at: u64,
 }
 
-impl<'a> NaiveFlipSim<'a> {
-    /// Build a naive stepper instance for one vertex program over a
-    /// compiled graph (mirror of [`crate::sim::FlipSim::new`]).
-    pub fn new(
-        c: &'a CompiledGraph,
-        vp: &'a dyn VertexProgram,
-        opts: SimOptions,
-    ) -> NaiveFlipSim<'a> {
+impl NaiveInstance {
+    /// Allocate the naive machine state for the fabric `c` targets.
+    pub fn new(c: &CompiledGraph) -> NaiveInstance {
         let cfg = &c.cfg;
         let num_pes = cfg.num_pes();
         let num_clusters = cfg.num_clusters();
@@ -245,11 +276,8 @@ impl<'a> NaiveFlipSim<'a> {
             let cl = PeCoord::from_index(i, cfg).cluster(cfg);
             clusters[cl].pes.push(i);
         }
-        NaiveFlipSim {
-            c,
-            vp,
-            vp_bound: vp.bound(),
-            opts,
+        NaiveInstance {
+            cfg: cfg.clone(),
             hot: HotCfg::new(cfg),
             pes: (0..num_pes).map(|_| PeState::new()).collect(),
             clusters,
@@ -274,25 +302,84 @@ impl<'a> NaiveFlipSim<'a> {
         }
     }
 
-    fn cfg(&self) -> &crate::config::ArchConfig {
-        &self.c.cfg
+    /// Run one built-in trio workload on this instance.
+    pub fn run(
+        &mut self,
+        c: &CompiledGraph,
+        workload: Workload,
+        source: u32,
+        opts: &SimOptions,
+    ) -> Result<RunResult, String> {
+        let vp = workload.builtin_program();
+        self.run_program(c, vp.as_ref(), source, opts)
+    }
+
+    /// Run an arbitrary vertex program on this instance. `c` must target
+    /// the [`ArchConfig`] the instance was built with.
+    pub fn run_program(
+        &mut self,
+        c: &CompiledGraph,
+        vp: &dyn VertexProgram,
+        source: u32,
+        opts: &SimOptions,
+    ) -> Result<RunResult, String> {
+        if c.cfg != self.cfg {
+            return Err(
+                "NaiveInstance fabric mismatch: the compiled graph targets a different ArchConfig"
+                    .to_string(),
+            );
+        }
+        self.reset();
+        let cx = RunCtx { c, vp, vp_bound: vp.bound(), opts };
+        self.drive(&cx, source)
+    }
+
+    /// Full machine clear (allocation-reusing). Unlike the event core's
+    /// O(touched) soft reset, the reference core always clears everything
+    /// — O(machine), trivially correct from any state (including after an
+    /// aborted run).
+    pub fn reset(&mut self) {
+        for pe in &mut self.pes {
+            pe.clear();
+        }
+        for (cl, c) in self.clusters.iter_mut().enumerate() {
+            c.resident = cl as u16; // re-seeded at run start
+            c.swap = None;
+        }
+        self.parked.clear();
+        self.pending_seeds.clear();
+        // credits are re-initialized by seed() on every run
+        self.now = 0;
+        self.act = Default::default();
+        self.edges = 0;
+        self.delivered = 0;
+        self.parked_count = 0;
+        self.swaps = 0;
+        self.swap_cycles = 0;
+        self.wait_sum = 0;
+        self.aluin_depth_sum = 0;
+        self.busy_cycles = 0;
+        self.busy_sum = 0;
+        self.peak_par = 0;
+        self.trace.clear();
+        self.progress_at = 0;
     }
 
     fn resident_copy(&self, cluster: usize) -> u16 {
-        (self.clusters[cluster].resident as usize / self.cfg().num_clusters()) as u16
+        (self.clusters[cluster].resident as usize / self.cfg.num_clusters()) as u16
     }
 
-    fn slice_cfg_of(&self, pe_idx: usize) -> &crate::arch::PeSliceConfig {
+    fn slice_cfg_of<'a>(&self, cx: &RunCtx<'a>, pe_idx: usize) -> &'a crate::arch::PeSliceConfig {
         let cl = self.hot.cluster_of[pe_idx];
-        self.c.slice_cfg(self.resident_copy(cl), pe_idx)
+        cx.c.slice_cfg(self.resident_copy(cl), pe_idx)
     }
 
     /// Prepare initial state for a run from `source` (ignored by dense-
     /// seeded programs).
-    fn seed(&mut self, source: u32) {
-        let cfg = &self.c.cfg;
-        let n = self.c.placement.slots.len();
-        let vp = self.vp;
+    fn seed(&mut self, cx: &RunCtx, source: u32) {
+        let cfg = &cx.c.cfg;
+        let n = cx.c.placement.slots.len();
+        let vp = cx.vp;
         self.attrs = (0..n as u32).map(|v| vp.init_attr(v, n)).collect();
         // link credits = downstream input FIFO capacity
         for pe in 0..cfg.num_pes() {
@@ -306,9 +393,9 @@ impl<'a> NaiveFlipSim<'a> {
         for cl in 0..num_clusters {
             self.clusters[cl].resident = crate::compiler::Placement::slice_id(cfg, cl, 0);
         }
-        if self.vp.single_source() {
+        if vp.single_source() {
             // source's cluster loads the source's copy
-            let s = self.c.placement.slots[source as usize];
+            let s = cx.c.placement.slots[source as usize];
             let cl = s.pe.cluster(cfg);
             self.clusters[cl].resident = crate::compiler::Placement::slice_id(cfg, cl, s.copy);
             // bootstrap message: distance/level 0 delivered to the source
@@ -322,7 +409,7 @@ impl<'a> NaiveFlipSim<'a> {
                 if !vp.seeds(v) {
                     continue;
                 }
-                let s = self.c.placement.slots[v as usize];
+                let s = cx.c.placement.slots[v as usize];
                 let cl = s.pe.cluster(cfg);
                 let slice = crate::compiler::Placement::slice_id(cfg, cl, s.copy);
                 let pe_idx = s.pe.index(cfg);
@@ -347,22 +434,22 @@ impl<'a> NaiveFlipSim<'a> {
     }
 
     /// Run to termination; returns the functional result and metrics.
-    pub fn run(mut self, source: u32) -> Result<RunResult, String> {
-        self.seed(source);
+    fn drive(&mut self, cx: &RunCtx, source: u32) -> Result<RunResult, String> {
+        self.seed(cx, source);
         self.progress_at = 0;
         while !self.done() {
-            if self.now >= self.opts.max_cycles {
-                return Err(format!("exceeded max_cycles={}", self.opts.max_cycles));
+            if self.now >= cx.opts.max_cycles {
+                return Err(format!("exceeded max_cycles={}", cx.opts.max_cycles));
             }
-            if self.now - self.progress_at > self.opts.watchdog {
+            if self.now - self.progress_at > cx.opts.watchdog {
                 return Err(format!(
                     "no progress for {} cycles at cycle {} (deadlock?): {}",
-                    self.opts.watchdog,
+                    cx.opts.watchdog,
                     self.now,
                     self.diag()
                 ));
             }
-            self.step();
+            self.step(cx);
         }
         let cycles = self.now;
         let act = self.act;
@@ -415,10 +502,10 @@ impl<'a> NaiveFlipSim<'a> {
     }
 
     /// One cycle.
-    fn step(&mut self) {
+    fn step(&mut self, cx: &RunCtx) {
         let now = self.now;
         // ---- swap engine -------------------------------------------------
-        self.step_swaps();
+        self.step_swaps(cx);
         self.step_repatriate();
         // ---- per-PE: router outputs, delivery, ALU, scatter ---------------
         // Fast path: skip PEs with no queued packets and no compute state.
@@ -429,16 +516,16 @@ impl<'a> NaiveFlipSim<'a> {
             let pe = &self.pes[pe_idx];
             if pe.queued > 0 {
                 self.step_router(pe_idx);
-                self.step_delivery(pe_idx);
+                self.step_delivery(cx, pe_idx);
             } else if !pe.pending_matches.is_empty() {
-                self.step_delivery(pe_idx); // drain the match microqueue
+                self.step_delivery(cx, pe_idx); // drain the match microqueue
             }
             let pe = &self.pes[pe_idx];
             if !matches!(pe.alu, AluState::Idle) || !pe.aluin.is_empty() {
-                self.step_alu(pe_idx);
+                self.step_alu(cx, pe_idx);
             }
             if !self.pes[pe_idx].aluout.is_empty() {
-                self.step_scatter(pe_idx);
+                self.step_scatter(cx, pe_idx);
             }
         }
         // ---- metrics sampling ---------------------------------------------
@@ -452,7 +539,7 @@ impl<'a> NaiveFlipSim<'a> {
             self.busy_sum += busy as u64;
             self.peak_par = self.peak_par.max(busy);
         }
-        if self.opts.trace_parallelism {
+        if cx.opts.trace_parallelism {
             self.trace.push(busy as u16);
         }
         self.aluin_depth_sum +=
@@ -468,9 +555,9 @@ impl<'a> NaiveFlipSim<'a> {
     }
 
     // ---- swap engine (§3.3) ----------------------------------------------
-    fn step_swaps(&mut self) {
+    fn step_swaps(&mut self, cx: &RunCtx) {
         let now = self.now;
-        let num_clusters = self.cfg().num_clusters();
+        let num_clusters = self.cfg.num_clusters();
         for cl in 0..num_clusters {
             // finish in-progress swap
             if let Some((until, slice)) = self.clusters[cl].swap {
@@ -537,15 +624,15 @@ impl<'a> NaiveFlipSim<'a> {
             }
             if let Some((_, slice)) = best {
                 // swap cost: write out current slice words + read in new
-                let cfg = self.cfg();
+                let cfg = &cx.c.cfg;
                 let out_copy = self.resident_copy(cl);
                 let in_copy = (slice as usize / num_clusters) as u16;
                 let words: usize = self.clusters[cl]
                     .pes
                     .iter()
                     .map(|&i| {
-                        self.c.slice_cfg(out_copy, i).storage_words()
-                            + self.c.slice_cfg(in_copy, i).storage_words()
+                        cx.c.slice_cfg(out_copy, i).storage_words()
+                            + cx.c.slice_cfg(in_copy, i).storage_words()
                     })
                     .sum();
                 let cost = words as u64 * cfg.t_swap_word + cfg.t_offchip_fixed;
@@ -561,8 +648,8 @@ impl<'a> NaiveFlipSim<'a> {
     /// the other half of the memory-buffer escape path.
     fn step_repatriate(&mut self) {
         let now = self.now;
-        let aluin_cap = self.cfg().aluin_cap;
-        let num_clusters = self.cfg().num_clusters();
+        let aluin_cap = self.cfg.aluin_cap;
+        let num_clusters = self.cfg.num_clusters();
         let spm_latency = 2u64;
         for cl in 0..num_clusters {
             if self.clusters[cl].swap.is_some() {
@@ -660,7 +747,7 @@ impl<'a> NaiveFlipSim<'a> {
     }
 
     // ---- local delivery (slice compare, Intra-Table, ALUin) ---------------
-    fn step_delivery(&mut self, pe_idx: usize) {
+    fn step_delivery(&mut self, cx: &RunCtx, pe_idx: usize) {
         let now = self.now;
         if self.pes[pe_idx].deliver_busy_until > now {
             return;
@@ -673,7 +760,7 @@ impl<'a> NaiveFlipSim<'a> {
         let mut must_park = false;
         if !self.pes[pe_idx].pending_matches.is_empty() {
             if self.pes[pe_idx].aluin.len() < self.hot.aluin_cap {
-                let vp = self.vp;
+                let vp = cx.vp;
                 let item = self.pes[pe_idx].pending_matches.pop_front().unwrap();
                 if !self.pes[pe_idx].try_coalesce(item, vp) {
                     self.pes[pe_idx].aluin.push_back(item);
@@ -731,7 +818,7 @@ impl<'a> NaiveFlipSim<'a> {
         }
         // Intra-Table lookup (zero-copy bucket walk; borrow from the
         // compiled graph reference, not &self, so PE state stays mutable)
-        let compiled: &CompiledGraph = self.c;
+        let compiled: &CompiledGraph = cx.c;
         let copy = self.resident_copy(cl);
         let bucket = compiled.slice_cfg(copy, pe_idx).intra.bucket(q.pkt.src_vid);
         let walked = bucket.len().max(1) as u64;
@@ -780,9 +867,9 @@ impl<'a> NaiveFlipSim<'a> {
             if m.src_vid != src_vid {
                 continue;
             }
-            let msg = self.vp.combine(q.pkt.attr, m.weight);
+            let msg = cx.vp.combine(q.pkt.attr, m.weight);
             let item = AluinItem { reg: m.dst_reg, msg };
-            let vp = self.vp;
+            let vp = cx.vp;
             if self.pes[pe_idx].try_coalesce(item, vp) {
                 // merged with a queued message for the same register
                 self.edges += 1;
@@ -825,13 +912,13 @@ impl<'a> NaiveFlipSim<'a> {
     }
 
     // ---- ALU ---------------------------------------------------------------
-    fn step_alu(&mut self, pe_idx: usize) {
+    fn step_alu(&mut self, cx: &RunCtx, pe_idx: usize) {
         let now = self.now;
         match self.pes[pe_idx].alu {
             AluState::Executing { until, reg, new_attr, scatter } => {
                 if until <= now {
                     // write back
-                    let vid = self.slice_cfg_of(pe_idx).vertices[reg as usize];
+                    let vid = self.slice_cfg_of(cx, pe_idx).vertices[reg as usize];
                     debug_assert!(vid != u32::MAX);
                     if self.attrs[vid as usize] != new_attr {
                         self.attrs[vid as usize] = new_attr;
@@ -870,11 +957,11 @@ impl<'a> NaiveFlipSim<'a> {
             return;
         }
         let Some(item) = self.pes[pe_idx].aluin.pop_front() else { return };
-        let vid = self.slice_cfg_of(pe_idx).vertices[item.reg as usize];
+        let vid = self.slice_cfg_of(cx, pe_idx).vertices[item.reg as usize];
         debug_assert!(vid != u32::MAX, "ALUin item for empty DRF register");
         let attr = self.attrs[vid as usize];
-        let prog = self.vp.isa();
-        let ctx = isa::ExecCtx { aux: self.vp.aux(vid), bound: self.vp_bound };
+        let prog = cx.vp.isa();
+        let ctx = isa::ExecCtx { aux: cx.vp.aux(vid), bound: cx.vp_bound };
         let (res, new_attr) = isa::execute(prog, item.msg, attr, ctx);
         self.act.alu_ops += res.cycles;
         self.act.im_fetches += res.cycles;
@@ -889,13 +976,13 @@ impl<'a> NaiveFlipSim<'a> {
     }
 
     // ---- scatter (Inter-Table walk, farthest-first order) -------------------
-    fn step_scatter(&mut self, pe_idx: usize) {
+    fn step_scatter(&mut self, cx: &RunCtx, pe_idx: usize) {
         let now = self.now;
         if self.pes[pe_idx].scatter_next_at > now {
             return;
         }
         let Some(&(reg, attr)) = self.pes[pe_idx].aluout.front() else { return };
-        let slice_cfg = self.slice_cfg_of(pe_idx);
+        let slice_cfg = self.slice_cfg_of(cx, pe_idx);
         let list = &slice_cfg.inter[reg as usize];
         let pos = self.pes[pe_idx].scatter_pos;
         if pos >= list.len() {
@@ -926,24 +1013,45 @@ impl<'a> NaiveFlipSim<'a> {
 }
 
 /// Run the naive reference stepper for one built-in (trio) workload
-/// invocation.
+/// invocation on a fresh machine.
 pub fn run(
     c: &CompiledGraph,
     workload: Workload,
     source: u32,
     opts: &SimOptions,
 ) -> Result<RunResult, String> {
-    let vp = workload.builtin_program();
-    run_program(c, vp.as_ref(), source, opts)
+    NaiveInstance::new(c).run(c, workload, source, opts)
 }
 
-/// Run the naive reference stepper for an arbitrary vertex program
-/// (mirror of [`crate::sim::flip::run_program`]).
+/// Run the naive reference stepper for an arbitrary vertex program on a
+/// fresh machine (mirror of [`crate::sim::flip::run_program`]).
 pub fn run_program(
     c: &CompiledGraph,
     vp: &dyn VertexProgram,
     source: u32,
     opts: &SimOptions,
 ) -> Result<RunResult, String> {
-    NaiveFlipSim::new(c, vp, opts.clone()).run(source)
+    NaiveInstance::new(c).run_program(c, vp, source, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOpts};
+    use crate::graph::generate;
+
+    #[test]
+    fn reused_naive_instance_matches_fresh_runs() {
+        let g = generate::road_network(64, 146, 166, 5);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts::default());
+        let mut inst = NaiveInstance::new(&c);
+        for (w, src) in [(Workload::Bfs, 0u32), (Workload::Sssp, 7), (Workload::Bfs, 20)] {
+            let reused = inst.run(&c, w, src, &SimOptions::default()).unwrap();
+            let fresh = run(&c, w, src, &SimOptions::default()).unwrap();
+            assert_eq!(reused.cycles, fresh.cycles, "{} src {src}", w.name());
+            assert_eq!(reused.attrs, fresh.attrs);
+            assert_eq!(reused.sim, fresh.sim);
+        }
+    }
 }

@@ -93,9 +93,12 @@ pub fn run_rounds(
     let mut cycles = 0u64;
     let mut delivered = 0u64;
     let mut activity = ActivityCounts::default();
+    // one machine instance serves every round (DESIGN.md §6): the image
+    // is fixed, only the per-round program (contributions) changes
+    let mut inst = flip::SimInstance::new(c);
     for _ in 0..iters {
         let vp = PageRankRound { contribs: reference::pagerank_contribs(g, &ranks) };
-        let r = flip::run_program(c, &vp, 0, opts)?;
+        let r = inst.run_program(c, &vp, 0, opts)?;
         cycles += r.cycles;
         delivered += r.sim.packets_delivered;
         activity.add(&r.sim.activity);

@@ -3,7 +3,7 @@
 
 use flip::compiler::{compile, CompileOpts};
 use flip::config::ArchConfig;
-use flip::graph::{reference, Graph};
+use flip::graph::{reference, Delta, Graph};
 use flip::prop_assert;
 use flip::sim::flip::{self as flipsim, SimOptions};
 use flip::util::{proptest::check, Rng};
@@ -219,6 +219,137 @@ fn prop_event_core_equals_naive_extended_with_swapping() {
             "{}: oracle mismatch under swapping",
             vp.name()
         );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_instance_reuse_equals_fresh() {
+    // the SimInstance reset() contract (DESIGN.md §6): one reused machine
+    // serving a mixed query stream — across workloads AND across the
+    // directed/undirected compiled views — is bit-identical to a fresh
+    // cold-start machine per query
+    check("instance_reuse_equals_fresh", 14, |rng| {
+        let directed = rng.chance(0.5);
+        let g = random_graph(rng, 8, 96, directed);
+        let cfg = ArchConfig::default();
+        let pair = flip::experiments::harness::CompiledPair::build(&g, &cfg, rng.next_u64());
+        let mut inst = flip::sim::SimInstance::new(&pair.directed);
+        for _ in 0..4 {
+            let w = random_workload(rng);
+            let c = pair.for_workload(w);
+            let src = rng.below(g.num_vertices() as u64) as u32;
+            let opts = SimOptions { trace_parallelism: rng.chance(0.3), ..Default::default() };
+            let reused =
+                inst.run(c, w, src, &opts).map_err(|e| format!("reused ({}): {e}", w.name()))?;
+            let fresh =
+                flipsim::run(c, w, src, &opts).map_err(|e| format!("fresh ({}): {e}", w.name()))?;
+            prop_assert!(
+                reused.cycles == fresh.cycles,
+                "{} src {src}: cycles {} != {}",
+                w.name(),
+                reused.cycles,
+                fresh.cycles
+            );
+            prop_assert!(reused.attrs == fresh.attrs, "{} src {src}: attrs diverge", w.name());
+            prop_assert!(
+                reused.edges_traversed == fresh.edges_traversed,
+                "{} src {src}: edges diverge",
+                w.name()
+            );
+            prop_assert!(reused.sim == fresh.sim, "{} src {src}: metrics diverge", w.name());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_instance_reuse_equals_fresh_extended() {
+    // the same reuse contract under the extended vertex programs (dense
+    // seeding, aux/bound registers, coalescing disabled for MIS)
+    check("instance_reuse_equals_fresh_extended", 10, |rng| {
+        let g = random_graph(rng, 8, 80, false);
+        let cfg = ArchConfig::default();
+        let mut inst: Option<flip::sim::SimInstance> = None;
+        for _ in 0..2 {
+            let (vp, view, src) = random_extended_program(rng, &g);
+            let c =
+                compile(&view, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() });
+            let inst = inst.get_or_insert_with(|| flip::sim::SimInstance::new(&c));
+            let reused = inst
+                .run_program(&c, vp.as_ref(), src, &SimOptions::default())
+                .map_err(|e| format!("reused ({}): {e}", vp.name()))?;
+            let fresh = flipsim::run_program(&c, vp.as_ref(), src, &SimOptions::default())
+                .map_err(|e| format!("fresh ({}): {e}", vp.name()))?;
+            prop_assert!(reused.cycles == fresh.cycles, "{}: cycles diverge", vp.name());
+            prop_assert!(reused.attrs == fresh.attrs, "{}: attrs diverge", vp.name());
+            prop_assert!(reused.sim == fresh.sim, "{}: metrics diverge", vp.name());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_instance_reuse_equals_fresh_with_swapping() {
+    // reuse across the swap engine / SPM parking path: the machine ends a
+    // run with the dirtiest state (stale residents, drained SPM lists)
+    check("instance_reuse_equals_fresh_swapping", 4, |rng| {
+        let g = random_graph(rng, 260, 380, false);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() });
+        prop_assert!(c.placement.num_copies >= 2, "expected replication");
+        let opts =
+            SimOptions { max_cycles: 1_000_000_000, watchdog: 5_000_000, ..Default::default() };
+        let mut inst = flip::sim::SimInstance::new(&c);
+        for _ in 0..2 {
+            let src = rng.below(g.num_vertices() as u64) as u32;
+            let reused = inst.run(&c, Workload::Bfs, src, &opts).map_err(|e| e.to_string())?;
+            let fresh = flipsim::run(&c, Workload::Bfs, src, &opts).map_err(|e| e.to_string())?;
+            prop_assert!(reused.cycles == fresh.cycles, "src {src}: cycles diverge");
+            prop_assert!(reused.attrs == fresh.attrs, "src {src}: attrs diverge");
+            prop_assert!(reused.sim == fresh.sim, "src {src}: metrics diverge");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_attr_updates_equal_full_recompile() {
+    // the traffic-update invariant (DESIGN.md §6): placement depends only
+    // on topology, so a weight-only delta patched into the live tables is
+    // indistinguishable — placement, attrs, cycles, every metric — from a
+    // full recompile of the reweighted graph
+    check("attr_updates_equal_recompile", 10, |rng| {
+        let directed = rng.chance(0.5);
+        let g = random_graph(rng, 8, 120, directed);
+        let cfg = ArchConfig::default();
+        let seed = rng.next_u64();
+        let c0 = compile(&g, &cfg, &CompileOpts { seed, ..Default::default() });
+        let mut changes = Vec::new();
+        for (u, v, _) in g.arcs() {
+            if (directed || u < v) && rng.chance(0.4) {
+                changes.push((u, v, 1 + rng.below(19) as u32));
+            }
+        }
+        let delta = Delta::from_edges(&g, &changes);
+        let mut g2 = g.clone();
+        g2.apply_delta(&delta)?;
+        let mut patched = c0.clone();
+        patched.apply_attr_updates(&delta)?;
+        let full = compile(&g2, &cfg, &CompileOpts { seed, ..Default::default() });
+        prop_assert!(
+            patched.placement.slots == full.placement.slots,
+            "placement moved on a weight-only recompile"
+        );
+        let src = rng.below(g.num_vertices() as u64) as u32;
+        let a = flipsim::run(&patched, Workload::Sssp, src, &SimOptions::default())
+            .map_err(|e| e.to_string())?;
+        let b = flipsim::run(&full, Workload::Sssp, src, &SimOptions::default())
+            .map_err(|e| e.to_string())?;
+        prop_assert!(a.cycles == b.cycles, "cycles {} != {}", a.cycles, b.cycles);
+        prop_assert!(a.attrs == b.attrs, "attrs diverge");
+        prop_assert!(a.sim == b.sim, "metrics diverge");
+        prop_assert!(a.attrs == reference::dijkstra(&g2, src), "oracle mismatch on new weights");
         Ok(())
     });
 }

@@ -1,0 +1,156 @@
+//! Query-serving layer tests (DESIGN.md §6): the engine must be a pure
+//! throughput optimization — bit-identical to sequential single-query
+//! runs — and must surface failures as data instead of thread panics.
+
+use flip::experiments::harness::{self, CompiledPair, ExpEnv};
+use flip::graph::datasets::{self, Group};
+use flip::graph::{generate, reference, Delta};
+use flip::service::{Engine, Job};
+use flip::sim::flip::SimOptions;
+use flip::workloads::{navigation, Workload};
+
+#[test]
+fn engine_matches_sequential_run_flip() {
+    let env = ExpEnv::quick();
+    let g = datasets::generate_one(Group::Srn, 0, env.seed);
+    let pair = CompiledPair::build(&g, &env.cfg, env.seed);
+    let trio = [
+        (Workload::Bfs, 0u32),
+        (Workload::Sssp, 3),
+        (Workload::Wcc, 0),
+        (Workload::Bfs, 5),
+        (Workload::Sssp, 9),
+        (Workload::Wcc, 2),
+    ];
+    let jobs: Vec<Job> = trio.iter().map(|&(w, s)| Job::Workload(w, s)).collect();
+    let mut engine = Engine::new(&pair).with_workers(4);
+    let rep = engine.serve(&jobs);
+    assert_eq!(rep.results.len(), jobs.len());
+    for (r, &(w, s)) in rep.results.iter().zip(&trio) {
+        let q = r.as_ref().expect("query failed");
+        let seq = harness::run_flip(&pair, w, s);
+        assert_eq!(q.run.cycles, seq.cycles, "{} src {s}: cycles", w.name());
+        assert_eq!(q.run.attrs, seq.attrs, "{} src {s}: attrs", w.name());
+        assert_eq!(q.run.edges_traversed, seq.edges_traversed);
+        assert_eq!(q.run.sim, seq.sim, "{} src {s}: metrics", w.name());
+    }
+}
+
+#[test]
+fn engine_is_deterministic_across_worker_counts() {
+    let env = ExpEnv::quick();
+    let g = datasets::generate_one(Group::Srn, 1, env.seed);
+    let pair = CompiledPair::build(&g, &env.cfg, env.seed);
+    let jobs: Vec<Job> = (0..12)
+        .map(|i| Job::Workload([Workload::Bfs, Workload::Sssp][i % 2], (i * 3) as u32))
+        .collect();
+    let mut seq = Engine::new(&pair).with_workers(1);
+    let mut par = Engine::new(&pair).with_workers(8);
+    let a = seq.serve(&jobs);
+    let b = par.serve(&jobs);
+    for (x, y) in a.results.iter().zip(&b.results) {
+        let (x, y) = (x.as_ref().unwrap(), y.as_ref().unwrap());
+        assert_eq!(x.run.cycles, y.run.cycles);
+        assert_eq!(x.run.attrs, y.run.attrs);
+        assert_eq!(x.run.sim, y.run.sim);
+    }
+}
+
+#[test]
+fn engine_serves_navigation_exactly() {
+    let g = generate::road_network(96, 219, 249, 17);
+    let cfg = flip::config::ArchConfig::default();
+    let pair = CompiledPair::build(&g, &cfg, 17);
+    let endpoints = [(0u32, 90u32), (5, 60), (33, 2), (7, 7)];
+    let queries = endpoints.map(|(s, t)| Job::Navigate { source: s, target: t });
+    let mut engine = Engine::new(&pair).with_workers(3).with_navigation(4);
+    let rep = engine.serve(&queries);
+    // the engine's landmark setup mirrors navigation::plan exactly
+    let lm = navigation::Landmarks::build(&g, 4);
+    for (r, &(s, t)) in rep.results.iter().zip(&endpoints) {
+        let q = r.as_ref().expect("navigation query failed");
+        let want = reference::dijkstra(&g, s)[t as usize];
+        assert_eq!(q.distance, Some(want), "wrong distance {s} -> {t}");
+        let p = navigation::plan(&pair.directed, &lm, s, t, &SimOptions::default()).unwrap();
+        assert_eq!(q.run.cycles, p.run.cycles, "engine route {s}->{t} diverged from plan()");
+        assert_eq!(q.run.attrs, p.run.attrs);
+    }
+}
+
+#[test]
+fn navigation_on_directed_graph_is_an_error() {
+    let g = generate::synthetic(48, 96, 7); // directed
+    assert!(g.is_directed());
+    let pair = CompiledPair::build(&g, &flip::config::ArchConfig::default(), 7);
+    let mut engine = Engine::new(&pair).with_workers(2);
+    let rep = engine.serve(&[Job::Navigate { source: 0, target: 5 }]);
+    let err = rep.results[0].as_ref().unwrap_err();
+    assert!(err.msg.contains("undirected"), "{err}");
+}
+
+#[test]
+fn engine_surfaces_sim_aborts_without_poisoning_the_batch() {
+    let env = ExpEnv::quick();
+    let g = datasets::generate_one(Group::Srn, 0, env.seed);
+    let pair = CompiledPair::build(&g, &env.cfg, env.seed);
+    // every run aborts at cycle 1 — the batch still completes in order,
+    // with one QueryError value per job (no worker panic, no early exit)
+    let tiny = SimOptions { max_cycles: 1, ..Default::default() };
+    let jobs: Vec<Job> = (0..6).map(|i| Job::Workload(Workload::Bfs, i as u32)).collect();
+    let mut engine = Engine::new(&pair).with_workers(3).with_opts(tiny);
+    let rep = engine.serve(&jobs);
+    assert_eq!(rep.results.len(), 6);
+    for r in &rep.results {
+        let e = r.as_ref().unwrap_err();
+        assert!(e.msg.contains("max_cycles"), "{e}");
+    }
+    // and the same engine recovers for a normal batch (hard reset path)
+    let mut ok_engine = Engine::new(&pair).with_workers(3);
+    let rep2 = ok_engine.serve(&jobs);
+    assert!(rep2.first_error().is_none());
+}
+
+#[test]
+fn engine_reports_throughput() {
+    let env = ExpEnv::quick();
+    let g = datasets::generate_one(Group::Srn, 2, env.seed);
+    let pair = CompiledPair::build(&g, &env.cfg, env.seed);
+    let jobs: Vec<Job> = (0..8).map(|i| Job::Workload(Workload::Bfs, i as u32)).collect();
+    let mut engine = Engine::new(&pair);
+    let rep = engine.serve(&jobs);
+    assert!(rep.first_error().is_none());
+    assert!(rep.workers >= 1 && rep.workers <= jobs.len());
+    assert!(rep.wall_seconds > 0.0);
+    assert!(rep.queries_per_s > 0.0);
+    assert!(rep.sim_cycles > 0);
+    assert!(rep.pe_cycles_per_s > 0.0);
+}
+
+#[test]
+fn attr_updates_flow_through_the_engine() {
+    // compile once, serve, patch weights in place, serve again: the
+    // second batch must answer against the *new* costs exactly
+    let g = generate::road_network(64, 146, 166, 23);
+    let cfg = flip::config::ArchConfig::default();
+    let mut pair = CompiledPair::build(&g, &cfg, 23);
+    let jobs = [Job::Workload(Workload::Sssp, 4)];
+    let before = Engine::new(&pair).with_workers(1).serve(&jobs);
+    assert_eq!(
+        before.results[0].as_ref().unwrap().run.attrs,
+        reference::dijkstra(&g, 4)
+    );
+    // double the weight of every edge touching vertex 4's neighborhood
+    let changes: Vec<(u32, u32, u32)> =
+        g.arcs().filter(|&(u, v, _)| u < v && u < 8).map(|(u, v, w)| (u, v, w * 2)).collect();
+    assert!(!changes.is_empty());
+    let mut g2 = g.clone();
+    let delta = Delta::from_edges(&g, &changes);
+    pair.apply_attr_updates(&delta).unwrap();
+    g2.apply_delta(&delta).unwrap();
+    let after = Engine::new(&pair).with_workers(1).serve(&jobs);
+    assert_eq!(
+        after.results[0].as_ref().unwrap().run.attrs,
+        reference::dijkstra(&g2, 4),
+        "patched tables must answer against the new weights"
+    );
+}

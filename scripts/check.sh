@@ -5,6 +5,13 @@
 # exist.
 set -euo pipefail
 
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found on PATH." >&2
+    echo "       Install a Rust toolchain (https://rustup.rs) and re-run; the gate" >&2
+    echo "       needs rustfmt + clippy components (rustup component add rustfmt clippy)." >&2
+    exit 1
+fi
+
 cd "$(dirname "$0")/../rust"
 
 echo "== cargo fmt --check =="
