@@ -126,6 +126,45 @@ fn main() {
         .metric("queries_per_s", queries_per_s)
         .metric("engine_pe_cycles_per_s", engine_pe_cycles_per_s);
 
+    // same Lrn graph the engine section bound above
+    common::section("multi-chip sharded fabric (Lrn BFS, lockstep supersteps)");
+    for k in [2usize, 4] {
+        let m = flip::sim::multichip::ShardedMachine::build(&g, k, &cfg, 42);
+        let mut insts = m.new_instances();
+        let vp = Workload::Bfs.builtin_program();
+        let mut sharded_cycles = 0u64;
+        let mut chip_pkts = 0u64;
+        let mut traffic_pct = 0.0f64;
+        let mut sharded_mteps = 0.0f64;
+        let r = common::bench(&format!("BFS on {k} shards (|V|={})", g.num_vertices()), 1, 5, || {
+            let r = flip::sim::multichip::run_program(
+                &m,
+                &mut insts,
+                vp.as_ref(),
+                0,
+                &SimOptions::default(),
+            )
+            .unwrap();
+            sharded_cycles = r.result.cycles;
+            chip_pkts = r.result.sim.chip_packets;
+            traffic_pct = r.result.sim.chip_packets as f64
+                / r.result.sim.packets_delivered.max(1) as f64
+                * 100.0;
+            sharded_mteps = r.result.mteps(cfg.freq_mhz);
+        });
+        println!(
+            "    -> {sharded_cycles} lockstep cycles, {chip_pkts} inter-chip packets \
+             ({traffic_pct:.1}% of deliveries), {sharded_mteps:.2} MTEPS"
+        );
+        suite
+            .add(r)
+            .metric("shards", k as f64)
+            .metric("sharded_cycles", sharded_cycles as f64)
+            .metric("sharded_mteps", sharded_mteps)
+            .metric("chip_packets", chip_pkts as f64)
+            .metric("cut_traffic_pct", traffic_pct);
+    }
+
     common::section("SimInstance reuse vs per-query cold start (Lrn SSSP x16)");
     let sources: Vec<u32> = (0..16u32).map(|i| (i * 17) % n).collect();
     let c = &pair.directed;

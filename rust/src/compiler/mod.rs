@@ -228,6 +228,64 @@ impl Default for CompileOpts {
     }
 }
 
+/// Base offset of *ghost* source ids in sharded Intra-Tables: a cut arc
+/// `u → v` compiles, on `v`'s shard, into an Intra entry whose source id
+/// is `GHOST_BASE + u_global` — outside the local vertex id space, so
+/// inter-chip packets resolve through the ordinary delivery pipeline
+/// without colliding with local sources. Graphs must stay below
+/// `GHOST_BASE` vertices (edge-scale graphs are orders of magnitude
+/// smaller).
+pub const GHOST_BASE: u32 = 1 << 31;
+
+/// One inbound cut arc of a shard: `(global source, local destination,
+/// weight)` — the destination side of a
+/// [`crate::graph::partition::CutArc`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GhostArc {
+    /// Global id of the remote source vertex.
+    pub src_global: u32,
+    /// Local id of the destination vertex within this shard.
+    pub dst_local: u32,
+    /// Edge weight applied at delivery.
+    pub weight: u32,
+}
+
+/// Compile one shard of a partitioned graph: an ordinary [`compile`] of
+/// the local subgraph, plus one ghost Intra-Table entry per inbound cut
+/// arc so inter-chip frontier packets (source id `GHOST_BASE + global`)
+/// deliver through the unmodified pipeline — lookup, combine, coalescing,
+/// ALU. Ghost arcs never influence placement (remote sources are not
+/// placeable), but they do enlarge the affected slices' Intra-Tables and
+/// therefore their swap cost, exactly as stored tables would.
+///
+/// With an empty `ghosts` slice the result is bit-identical to
+/// [`compile`] — the `K = 1` sharding differentials rely on this.
+pub fn compile_sharded(
+    g: &Graph,
+    ghosts: &[GhostArc],
+    cfg: &ArchConfig,
+    opts: &CompileOpts,
+) -> CompiledGraph {
+    let mut c = compile(g, cfg, opts);
+    let num_pes = cfg.num_pes();
+    for gh in ghosts {
+        assert!(
+            (gh.dst_local as usize) < c.placement.slots.len(),
+            "ghost arc destination {} out of range",
+            gh.dst_local
+        );
+        assert!(gh.src_global < GHOST_BASE, "global id space exceeds GHOST_BASE");
+        let sv = c.placement.slots[gh.dst_local as usize];
+        let dst_idx = sv.copy as usize * num_pes + sv.pe.index(cfg);
+        c.pe_slices[dst_idx].intra.insert(crate::arch::tables::IntraEntry {
+            src_vid: GHOST_BASE + gh.src_global,
+            dst_reg: sv.reg,
+            weight: gh.weight,
+        });
+    }
+    c
+}
+
 /// Compile a graph for a FLIP instance (Algorithm 1 end to end).
 pub fn compile(g: &Graph, cfg: &ArchConfig, opts: &CompileOpts) -> CompiledGraph {
     let t0 = std::time::Instant::now();
@@ -290,6 +348,26 @@ mod tests {
                 assert!(seen.insert(Placement::slice_id(&cfg, cl, copy)));
             }
         }
+    }
+
+    #[test]
+    fn compile_sharded_adds_ghost_entries_without_moving_placement() {
+        let g = generate::synthetic(40, 90, 5);
+        let cfg = ArchConfig::default();
+        let plain = compile(&g, &cfg, &CompileOpts::default());
+        let none = compile_sharded(&g, &[], &cfg, &CompileOpts::default());
+        assert_eq!(plain.placement.slots, none.placement.slots, "empty ghosts = plain compile");
+        for (a, b) in plain.pe_slices.iter().zip(&none.pe_slices) {
+            assert_eq!(a.vertices, b.vertices);
+            assert_eq!(a.intra.num_entries(), b.intra.num_entries());
+        }
+        let ghosts = [GhostArc { src_global: 7, dst_local: 3, weight: 9 }];
+        let c = compile_sharded(&g, &ghosts, &cfg, &CompileOpts::default());
+        assert_eq!(plain.placement.slots, c.placement.slots, "ghosts never move placement");
+        let sv = c.placement.slots[3];
+        let sc = c.slice_cfg(sv.copy, sv.pe.index(&cfg));
+        let (m, _) = sc.intra.lookup(GHOST_BASE + 7);
+        assert!(m.iter().any(|e| e.dst_reg == sv.reg && e.weight == 9), "ghost entry present");
     }
 
     #[test]

@@ -31,18 +31,26 @@ pub fn build_tables(
         out[idx].vertices[s.reg as usize] = v as u32;
     }
 
-    // One Inter entry + one Intra entry per arc.
+    // One Intra entry per arc, but one Inter entry per *destination
+    // (PE, slice)* of each source vertex: the hardware resolves the
+    // concrete register(s) at the destination through its Intra-Table
+    // (`dst_vid` is diagnostic), and delivery matches a packet against
+    // every Intra entry of its source vertex on that PE. An entry per
+    // arc would therefore double-deliver whenever two out-neighbors of
+    // one vertex share a PE — harmless for min-plus programs but wrong
+    // for counting/summing ones (PageRank, MIS). `arcs()` iterates
+    // targets in ascending order, so the kept `dst_vid` is the smallest
+    // co-located destination (deterministic).
     for (u, v, w) in g.arcs() {
         let su = p.slots[u as usize];
         let sv = p.slots[v as usize];
         let (dx, dy) = su.pe.offset_to(sv.pe);
+        let slice = p.slice_of(cfg, v);
         let src_idx = su.copy as usize * num_pes + su.pe.index(cfg);
-        out[src_idx].inter[su.reg as usize].push(InterEntry {
-            dx,
-            dy,
-            slice: p.slice_of(cfg, v),
-            dst_vid: v,
-        });
+        let list = &mut out[src_idx].inter[su.reg as usize];
+        if !list.iter().any(|e| e.dx == dx && e.dy == dy && e.slice == slice) {
+            list.push(InterEntry { dx, dy, slice, dst_vid: v });
+        }
         let dst_idx = sv.copy as usize * num_pes + sv.pe.index(cfg);
         out[dst_idx].intra.insert(IntraEntry { src_vid: u, dst_reg: sv.reg, weight: w });
     }
@@ -167,13 +175,17 @@ mod tests {
         for (u, v, w) in g.arcs() {
             let su = p.slots[u as usize];
             let sv = p.slots[v as usize];
+            let (dx, dy) = su.pe.offset_to(sv.pe);
+            let slice = p.slice_of(cfg, v);
             let s_cfg = c.slice_cfg(su.copy, su.pe.index(cfg));
-            let entry = s_cfg.inter[su.reg as usize]
-                .iter()
-                .find(|e| e.dst_vid == v)
-                .unwrap_or_else(|| panic!("missing inter entry {u}->{v}"));
-            assert_eq!((entry.dx, entry.dy), su.pe.offset_to(sv.pe));
-            assert_eq!(entry.slice, p.slice_of(cfg, v));
+            // one entry per destination (PE, slice): the arc is covered by
+            // the entry routing to v's PE in v's slice
+            assert!(
+                s_cfg.inter[su.reg as usize]
+                    .iter()
+                    .any(|e| (e.dx, e.dy, e.slice) == (dx, dy, slice)),
+                "missing inter entry {u}->{v}"
+            );
             let d_cfg = c.slice_cfg(sv.copy, sv.pe.index(cfg));
             let (matches, _) = d_cfg.intra.lookup(u);
             let m = matches
@@ -181,6 +193,24 @@ mod tests {
                 .find(|e| e.dst_reg == sv.reg)
                 .unwrap_or_else(|| panic!("missing intra entry {u}->{v}"));
             assert_eq!(m.weight, w);
+        }
+    }
+
+    #[test]
+    fn inter_entries_unique_per_destination_pe_and_slice() {
+        // a packet delivers to every matching Intra entry, so a duplicate
+        // (dx, dy, slice) entry would double-deliver (fatal for PageRank
+        // sums and MIS counting)
+        let (_, c) = compiled();
+        for s_cfg in &c.pe_slices {
+            for list in &s_cfg.inter {
+                let mut seen: Vec<(i8, i8, u16)> = Vec::new();
+                for e in list {
+                    let key = (e.dx, e.dy, e.slice);
+                    assert!(!seen.contains(&key), "duplicate inter entry {key:?}");
+                    seen.push(key);
+                }
+            }
         }
     }
 

@@ -42,6 +42,14 @@ pub struct ArchConfig {
     pub t_swap_word: u64,
     /// Extra cycles to fetch a slice from off-chip memory (fixed cost).
     pub t_offchip_fixed: u64,
+    /// Inter-chip link latency in cycles (multi-chip sharding,
+    /// [`crate::sim::multichip`]): fixed cost before the first word of a
+    /// frontier packet reaches the neighbor chip's ingress.
+    pub t_chip_link: u64,
+    /// Inter-chip link serialization cost: cycles per 32-bit word. The
+    /// link bandwidth is `1 / t_chip_word` words per cycle — far below
+    /// the on-chip mesh, which moves a whole packet per `t_hop`.
+    pub t_chip_word: u64,
 }
 
 impl Default for ArchConfig {
@@ -64,6 +72,8 @@ impl Default for ArchConfig {
             offchip_bytes: 256 * 1024,
             t_swap_word: 1,
             t_offchip_fixed: 32,
+            t_chip_link: 64,
+            t_chip_word: 4,
         }
     }
 }
@@ -118,6 +128,8 @@ impl ArchConfig {
             "spm_banks" => self.spm_banks = vu,
             "t_swap_word" => self.t_swap_word = vu as u64,
             "t_offchip_fixed" => self.t_offchip_fixed = vu as u64,
+            "t_chip_link" => self.t_chip_link = vu as u64,
+            "t_chip_word" => self.t_chip_word = vu as u64,
             _ => return Err(format!("unknown config key `{k}`")),
         }
         Ok(())
@@ -184,6 +196,9 @@ mod tests {
         assert_eq!(c.t_inter_entry, 2);
         c.set("offchip_bytes=1024").unwrap();
         assert_eq!(c.offchip_bytes, 1024);
+        c.set("t_chip_link=128").unwrap();
+        c.set("t_chip_word=2").unwrap();
+        assert_eq!((c.t_chip_link, c.t_chip_word), (128, 2));
         assert!(c.set("bogus=1").is_err());
         assert!(c.set("aw").is_err());
         assert!(c.set("aw=x").is_err());

@@ -111,6 +111,48 @@ impl CompiledPair {
     }
 }
 
+/// One graph partitioned and compiled for both arc views on a K-chip
+/// machine — the multi-chip analog of [`CompiledPair`], consumed by
+/// [`crate::service::Engine::new_sharded`].
+pub struct ShardedPair {
+    /// The graph sharded as stored (BFS/SSSP/navigation view).
+    pub directed: crate::sim::multichip::ShardedMachine,
+    /// The undirected-closure machine WCC propagates over; `None` when
+    /// the graph is already undirected (the directed machine serves WCC).
+    pub undirected: Option<crate::sim::multichip::ShardedMachine>,
+    /// The source graph.
+    pub graph: Graph,
+    /// The undirected closure WCC propagates over.
+    pub wcc_view: Graph,
+}
+
+impl ShardedPair {
+    /// Partition and compile both views of one graph across `k` chips.
+    pub fn build(g: &Graph, k: usize, cfg: &ArchConfig, seed: u64) -> ShardedPair {
+        let directed = crate::sim::multichip::ShardedMachine::build(g, k, cfg, seed);
+        let wcc_view = view_for(Workload::Wcc, g);
+        let undirected = if g.is_directed() {
+            Some(crate::sim::multichip::ShardedMachine::build(&wcc_view, k, cfg, seed))
+        } else {
+            None
+        };
+        ShardedPair { directed, undirected, graph: g.clone(), wcc_view }
+    }
+
+    /// The sharded machine a trio workload runs on.
+    pub fn for_workload(&self, w: Workload) -> &crate::sim::multichip::ShardedMachine {
+        match (w.needs_undirected(), &self.undirected) {
+            (true, Some(u)) => u,
+            _ => &self.directed,
+        }
+    }
+
+    /// Shard (chip) count.
+    pub fn num_shards(&self) -> usize {
+        self.directed.num_shards()
+    }
+}
+
 /// Run `f` over `items` on up to `available_parallelism` OS threads
 /// (std scoped threads, work-stealing via an atomic cursor), preserving
 /// item order in the output. Every job must be independent — simulator
@@ -203,9 +245,22 @@ pub fn run_flip_opts(
 /// workers): the run's attributes must equal the CPU reference on the
 /// view `w` maps. Compiled out of release builds.
 pub(crate) fn debug_check_reference(pair: &CompiledPair, w: Workload, source: u32, r: &RunResult) {
+    debug_check_reference_views(&pair.graph, &pair.wcc_view, w, source, &r.attrs);
+}
+
+/// View-level form of [`debug_check_reference`], shared with the sharded
+/// serve path (which holds a [`ShardedPair`], not a [`CompiledPair`]) so
+/// both engines check functional correctness through one code path.
+pub(crate) fn debug_check_reference_views(
+    graph: &Graph,
+    wcc_view: &Graph,
+    w: Workload,
+    source: u32,
+    attrs: &[u32],
+) {
     debug_assert_eq!(
-        r.attrs,
-        w.reference(if w.needs_undirected() { &pair.wcc_view } else { &pair.graph }, source),
+        attrs,
+        w.reference(if w.needs_undirected() { wcc_view } else { graph }, source),
         "functional mismatch {} src {source}",
         w.name()
     );

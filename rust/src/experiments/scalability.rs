@@ -34,6 +34,7 @@ pub fn run(env: &ExpEnv) -> super::ExpResult {
         let m = base.run_mcu(Workload::Bfs, g, src);
         (pair.directed.placement.num_copies, f, c, m)
     });
+    let mut g0_bfs = None;
     for (gi, (copies, f, c, m)) in results.into_iter().enumerate() {
         let f = f?;
         let g = &graphs[gi];
@@ -52,14 +53,70 @@ pub fn run(env: &ExpEnv) -> super::ExpResult {
             format!("{}x", sig(f_tput / c_tput, 3)),
             format!("{}x", sig(f_tput / m_tput, 3)),
         ]);
+        if gi == 0 {
+            g0_bfs = Some(f);
+        }
     }
+    let sweep = match (graphs.first(), g0_bfs) {
+        (Some(g), Some(k1)) => shard_sweep(env, g, &k1)?,
+        _ => String::new(),
+    };
     Ok(format!(
         "{}\nShape check vs paper: throughput {}x classic CGRA (paper: 5.7x) and {}x MCU\n\
-         (paper: 49.1x) despite swap overhead.\n",
+         (paper: 49.1x) despite swap overhead.\n\n{sweep}",
         t.render(),
         sig(stats::geomean(&vs_cgra), 3),
         sig(stats::geomean(&vs_mcu), 3),
     ))
+}
+
+/// Multi-chip shard-count sweep (DESIGN.md §7): the same Ext. LRN graph
+/// run on K ∈ {1, 2, 4} chips, reporting lockstep MTEPS and the share of
+/// frontier traffic that crossed an inter-chip link. The K = 1 row comes
+/// from the single-chip run `k1` computed by the main table: a 1-shard
+/// lockstep run is bit-identical to it (the property-tested DESIGN.md §7
+/// invariant), so re-simulating the heaviest graph in the suite would
+/// only burn wall-clock.
+fn shard_sweep(
+    env: &ExpEnv,
+    g: &crate::graph::Graph,
+    k1: &crate::metrics::RunResult,
+) -> Result<String, String> {
+    use crate::sim::multichip;
+    let opts = SimOptions { max_cycles: 2_000_000_000, watchdog: 5_000_000, ..Default::default() };
+    let mut t = Table::new(
+        "Shard sweep (same Ext. LRN graph, BFS, K chips in lockstep)",
+        &["K", "cut arcs", "cut %", "supersteps", "chip pkts", "link cyc", "MTEPS", "traffic %"],
+    );
+    t.row(&[
+        "1".to_string(),
+        "0".to_string(),
+        "0%".to_string(),
+        "1".to_string(),
+        "0".to_string(),
+        "0".to_string(),
+        sig(k1.mteps(env.cfg.freq_mhz), 3),
+        "0%".to_string(),
+    ]);
+    for k in [2usize, 4] {
+        let m = multichip::ShardedMachine::build(g, k, &env.cfg, env.seed);
+        let r = multichip::run(&m, Workload::Bfs, 0, &opts)?;
+        let delivered = r.result.sim.packets_delivered.max(1);
+        t.row(&[
+            format!("{k}"),
+            format!("{}", m.part.cut.len()),
+            format!("{}%", sig(m.part.cut_fraction() * 100.0, 3)),
+            format!("{}", r.supersteps),
+            format!("{}", r.result.sim.chip_packets),
+            format!("{}", r.result.sim.chip_link_cycles),
+            sig(r.result.mteps(env.cfg.freq_mhz), 3),
+            format!(
+                "{}%",
+                sig(r.result.sim.chip_packets as f64 / delivered as f64 * 100.0, 3)
+            ),
+        ]);
+    }
+    Ok(t.render())
 }
 
 #[cfg(test)]

@@ -1,8 +1,11 @@
 //! Graph substrate: CSR graphs, generators for the Table-4 dataset groups,
-//! and native reference algorithms used for functional validation.
+//! the deterministic edge-cut partitioner for multi-chip sharding
+//! ([`partition`]), and native reference algorithms used for functional
+//! validation.
 
 pub mod datasets;
 pub mod generate;
+pub mod partition;
 pub mod reference;
 
 /// Attribute value meaning "unreached" (maps to +inf in the golden model).

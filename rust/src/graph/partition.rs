@@ -1,0 +1,340 @@
+//! Deterministic edge-cut graph partitioner for multi-chip sharding
+//! (DESIGN.md §7).
+//!
+//! [`partition`] splits a graph into `k` balanced vertex shards, builds
+//! one renumbered local subgraph per shard, and records every arc whose
+//! endpoints land on different shards in a **cut-arc manifest** — the
+//! wiring list the multi-chip fabric ([`crate::sim::multichip`]) uses to
+//! compile ghost Intra-Table entries and to route frontier packets over
+//! the inter-chip links.
+//!
+//! **Determinism.** The partition is a pure function of `(graph, k)`:
+//! membership comes from a BFS sweep (undirected reachability from vertex
+//! 0, neighbors visited in CSR order, remaining components rooted at the
+//! smallest unvisited id) chunked into `k` balanced blocks, so vertices
+//! that are close in the graph tend to share a shard — a cheap
+//! locality-preserving edge cut. Within a shard, vertices are renumbered
+//! by ascending *global* id; for `k = 1` the renumbering is therefore the
+//! identity and the single shard's CSR is bit-identical to the input
+//! graph, which is what makes the `K=1 ≡ single-chip` differential tests
+//! exact.
+
+use super::Graph;
+
+/// One arc crossing a shard boundary: the manifest entry the multi-chip
+/// layer turns into a ghost Intra-Table entry (destination side) and a
+/// link send-list entry (source side).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CutArc {
+    /// Global source vertex id.
+    pub src: u32,
+    /// Global destination vertex id.
+    pub dst: u32,
+    /// Shard holding the source.
+    pub src_shard: u16,
+    /// Shard holding the destination.
+    pub dst_shard: u16,
+    /// Local id of the source within its shard.
+    pub src_local: u32,
+    /// Local id of the destination within its shard.
+    pub dst_local: u32,
+    /// Edge weight (applied by the destination's ghost Intra entry).
+    pub weight: u32,
+}
+
+/// A complete `k`-way edge-cut partition: shard membership, per-shard
+/// renumbering tables, renumbered local subgraphs, and the cut-arc
+/// manifest (in global CSR arc order — the canonical link order).
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// Number of shards.
+    pub k: usize,
+    /// Global vertex count.
+    pub n: usize,
+    /// `shard_of[global]` — owning shard per vertex.
+    pub shard_of: Vec<u16>,
+    /// `local_of[global]` — id within the owning shard.
+    pub local_of: Vec<u32>,
+    /// `global_of[shard][local]` — inverse renumbering, ascending.
+    pub global_of: Vec<Vec<u32>>,
+    /// Renumbered local subgraph per shard (internal arcs only).
+    pub shards: Vec<Graph>,
+    /// Every arc crossing a shard boundary, in global CSR arc order.
+    pub cut: Vec<CutArc>,
+    /// Total arcs of the input graph (cut-fraction denominator).
+    pub total_arcs: usize,
+}
+
+impl Partition {
+    /// Shard sizes (vertices per shard).
+    pub fn sizes(&self) -> Vec<usize> {
+        self.global_of.iter().map(|g| g.len()).collect()
+    }
+
+    /// Fraction of arcs that cross a shard boundary, in `[0, 1]`.
+    pub fn cut_fraction(&self) -> f64 {
+        if self.total_arcs == 0 {
+            0.0
+        } else {
+            self.cut.len() as f64 / self.total_arcs as f64
+        }
+    }
+
+    /// Scatter shard-local attribute vectors back into global vertex
+    /// order. Panics if a shard vector has the wrong length.
+    pub fn gather_attrs(&self, per_shard: &[Vec<u32>]) -> Vec<u32> {
+        assert_eq!(per_shard.len(), self.k, "one attrs vector per shard");
+        let mut out = vec![0u32; self.n];
+        for (s, attrs) in per_shard.iter().enumerate() {
+            assert_eq!(attrs.len(), self.global_of[s].len(), "shard {s} attrs length");
+            for (l, &a) in attrs.iter().enumerate() {
+                out[self.global_of[s][l] as usize] = a;
+            }
+        }
+        out
+    }
+
+    /// Structural validation (tests): every vertex has exactly one home,
+    /// renumbering round-trips, and every input arc is either internal to
+    /// one shard or present in the manifest exactly once.
+    pub fn validate(&self, g: &Graph) -> Result<(), String> {
+        if self.n != g.num_vertices() || self.shard_of.len() != self.n {
+            return Err("vertex count mismatch".into());
+        }
+        for v in 0..self.n {
+            let s = self.shard_of[v] as usize;
+            if s >= self.k {
+                return Err(format!("vertex {v}: shard {s} out of range"));
+            }
+            let l = self.local_of[v] as usize;
+            if self.global_of[s].get(l) != Some(&(v as u32)) {
+                return Err(format!("vertex {v}: renumbering does not round-trip"));
+            }
+        }
+        let mut cut_seen = 0usize;
+        for (u, v, w) in g.arcs() {
+            let (su, sv) = (self.shard_of[u as usize], self.shard_of[v as usize]);
+            if su == sv {
+                let lu = self.local_of[u as usize];
+                let lv = self.local_of[v as usize];
+                if !self.shards[su as usize].neighbors(lu).any(|(t, tw)| t == lv && tw == w) {
+                    return Err(format!("internal arc {u}->{v} missing from shard {su}"));
+                }
+            } else {
+                let hits = self
+                    .cut
+                    .iter()
+                    .filter(|c| c.src == u && c.dst == v && c.weight == w)
+                    .count();
+                if hits != 1 {
+                    return Err(format!("cut arc {u}->{v}: {hits} manifest entries"));
+                }
+                cut_seen += 1;
+            }
+        }
+        if cut_seen != self.cut.len() {
+            return Err(format!(
+                "manifest has {} entries, graph has {cut_seen} cut arcs",
+                self.cut.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// BFS vertex order used for membership: undirected sweep from vertex 0,
+/// neighbors in ascending order, further components rooted at the
+/// smallest unvisited id.
+fn bfs_order(g: &Graph) -> Vec<u32> {
+    let n = g.num_vertices();
+    // only directed graphs need a materialized undirected union; an
+    // undirected CSR already stores the symmetric adjacency ascending
+    let adj: Option<Vec<Vec<u32>>> = if g.is_directed() {
+        let mut a: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (u, v, _) in g.arcs() {
+            a[u as usize].push(v);
+            a[v as usize].push(u);
+        }
+        for l in &mut a {
+            l.sort_unstable();
+            l.dedup();
+        }
+        Some(a)
+    } else {
+        None
+    };
+    let mut order = Vec::with_capacity(n);
+    let mut seen = vec![false; n];
+    let mut queue = std::collections::VecDeque::new();
+    for root in 0..n as u32 {
+        if seen[root as usize] {
+            continue;
+        }
+        seen[root as usize] = true;
+        queue.push_back(root);
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            let nbrs: &[u32] = match &adj {
+                Some(a) => &a[u as usize],
+                None => g.out_edges(u).0,
+            };
+            for &v in nbrs {
+                if !seen[v as usize] {
+                    seen[v as usize] = true;
+                    queue.push_back(v);
+                }
+            }
+        }
+    }
+    order
+}
+
+/// Partition `g` into `k` shards (clamped to `1..=|V|`). See the module
+/// docs for the determinism contract.
+pub fn partition(g: &Graph, k: usize) -> Partition {
+    let n = g.num_vertices();
+    let k = k.clamp(1, n.max(1));
+    // membership: balanced chunks of the BFS order
+    let mut shard_of = vec![0u16; n];
+    let order = bfs_order(g);
+    let base = n / k;
+    let extra = n % k;
+    let mut pos = 0usize;
+    for s in 0..k {
+        let size = base + usize::from(s < extra);
+        for &v in &order[pos..pos + size] {
+            shard_of[v as usize] = s as u16;
+        }
+        pos += size;
+    }
+    // renumbering: ascending global id within each shard (identity for k=1)
+    let mut global_of: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for v in 0..n as u32 {
+        global_of[shard_of[v as usize] as usize].push(v);
+    }
+    let mut local_of = vec![0u32; n];
+    for locals in &global_of {
+        for (l, &v) in locals.iter().enumerate() {
+            local_of[v as usize] = l as u32;
+        }
+    }
+    // local subgraphs + cut manifest, both in global CSR arc order
+    let mut edges: Vec<Vec<(u32, u32, u32)>> = vec![Vec::new(); k];
+    let mut cut = Vec::new();
+    for (u, v, w) in g.arcs() {
+        let (su, sv) = (shard_of[u as usize], shard_of[v as usize]);
+        if su == sv {
+            edges[su as usize].push((local_of[u as usize], local_of[v as usize], w));
+        } else {
+            cut.push(CutArc {
+                src: u,
+                dst: v,
+                src_shard: su,
+                dst_shard: sv,
+                src_local: local_of[u as usize],
+                dst_local: local_of[v as usize],
+                weight: w,
+            });
+        }
+    }
+    let shards = global_of
+        .iter()
+        .zip(&edges)
+        .map(|(locals, es)| Graph::from_edges(locals.len(), es, g.is_directed()))
+        .collect();
+    Partition {
+        k,
+        n,
+        shard_of,
+        local_of,
+        global_of,
+        shards,
+        cut,
+        total_arcs: g.num_arcs(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    #[test]
+    fn k1_is_the_identity_partition() {
+        let g = generate::road_network(64, 146, 166, 7);
+        let p = partition(&g, 1);
+        assert_eq!(p.k, 1);
+        assert!(p.cut.is_empty());
+        assert_eq!(p.cut_fraction(), 0.0);
+        assert_eq!(p.sizes(), vec![64]);
+        // identity renumbering and a bit-identical local CSR
+        for v in 0..64u32 {
+            assert_eq!(p.local_of[v as usize], v);
+            assert_eq!(p.global_of[0][v as usize], v);
+        }
+        let s = &p.shards[0];
+        assert_eq!(s.num_vertices(), g.num_vertices());
+        assert_eq!(s.num_edges(), g.num_edges());
+        assert_eq!(s.is_directed(), g.is_directed());
+        for v in 0..64u32 {
+            assert_eq!(s.out_edges(v), g.out_edges(v));
+        }
+        p.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn shards_are_balanced_and_valid() {
+        for (n, k) in [(64usize, 2usize), (65, 4), (33, 3), (200, 4)] {
+            let g = generate::road_network(n, (n as f64 * 2.2) as usize, n * 5 / 2, n as u64);
+            let p = partition(&g, k);
+            p.validate(&g).unwrap();
+            let sizes = p.sizes();
+            assert_eq!(sizes.iter().sum::<usize>(), n);
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "unbalanced sizes {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn cut_arcs_cover_both_directions_of_undirected_edges() {
+        let g = generate::road_network(48, 100, 120, 3);
+        let p = partition(&g, 2);
+        for c in &p.cut {
+            assert!(
+                p.cut.iter().any(|r| r.src == c.dst && r.dst == c.src),
+                "missing reverse cut arc {}->{}",
+                c.dst,
+                c.src
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_in_graph_and_k() {
+        let g = generate::synthetic(80, 200, 5);
+        let a = partition(&g, 4);
+        let b = partition(&g, 4);
+        assert_eq!(a.shard_of, b.shard_of);
+        assert_eq!(a.cut, b.cut);
+    }
+
+    #[test]
+    fn k_clamps_to_vertex_count() {
+        let g = crate::graph::Graph::from_edges(3, &[(0, 1, 1), (1, 2, 1)], false);
+        let p = partition(&g, 100);
+        assert_eq!(p.k, 3);
+        p.validate(&g).unwrap();
+        let p0 = partition(&g, 0);
+        assert_eq!(p0.k, 1);
+    }
+
+    #[test]
+    fn bfs_chunking_keeps_locality_on_a_path() {
+        // a path graph partitioned in 2 must cut exactly one edge
+        let edges: Vec<(u32, u32, u32)> = (0..19).map(|i| (i, i + 1, 1)).collect();
+        let g = crate::graph::Graph::from_edges(20, &edges, false);
+        let p = partition(&g, 2);
+        p.validate(&g).unwrap();
+        assert_eq!(p.cut.len(), 2, "one undirected edge = two cut arcs");
+    }
+}

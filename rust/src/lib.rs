@@ -27,6 +27,14 @@
 //! [`service::Engine`] fans query batches across worker threads, and
 //! weight-only traffic updates patch the mapped tables in place
 //! ([`graph::Delta`], `CompiledGraph::apply_attr_updates`).
+//!
+//! Scaling past one fabric is multi-chip sharding (DESIGN.md §7): a
+//! deterministic edge-cut partition ([`graph::partition`]) compiles one
+//! machine image per chip ([`compiler::compile_sharded`]), and
+//! [`sim::multichip`] steps the K chips in barrier-lockstep supersteps,
+//! exchanging frontier packets for cut arcs over a modeled inter-chip
+//! link; [`service::Engine::new_sharded`] serves the same job types
+//! against the sharded machine (`flip serve --shards K`).
 
 #![warn(missing_docs)]
 

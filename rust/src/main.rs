@@ -8,7 +8,8 @@
 //!          [--idx I] [--source V] [--target V] [--rounds N]
 //!          [--golden] [--set key=val]...
 //! flip serve --group <g> [--idx I] [--queries N] [--threads T]
-//!            [--workload bfs|sssp|wcc|nav|mix] [--seed S] [--set key=val]...
+//!            [--workload bfs|sssp|wcc|nav|mix] [--shards K] [--seed S]
+//!            [--set key=val]...
 //! flip compile --group <g> [--idx I]        mapping statistics
 //! flip golden --workload <w> --group <g>    validate sim vs PJRT artifacts
 //! flip info                                 configuration + artifact status
@@ -126,7 +127,8 @@ fn print_usage() {
     println!("                 extended workloads: pagerank [--rounds], astar [--target], mis)");
     println!("  serve          query-serving engine: compile once, serve a random query batch");
     println!("                 (--group, [--idx], [--queries N], [--threads T],");
-    println!("                 [--workload bfs|sssp|wcc|nav|mix])");
+    println!("                 [--workload bfs|sssp|wcc|nav|mix], [--shards K] for a");
+    println!("                 K-chip partitioned machine)");
     println!("  compile        mapping statistics (--group, --idx)");
     println!("  golden         validate simulator vs PJRT golden model");
     println!("  info           configuration and artifact status");
@@ -294,13 +296,16 @@ fn cmd_run_extended(
 /// `flip serve` — the compile-once/serve-many path (DESIGN.md §6): build
 /// one engine over a mapped graph and drain a random query batch through
 /// it, reporting throughput. `--workload mix` interleaves BFS, SSSP and
-/// (on undirected road groups) point-to-point navigation.
+/// (on undirected road groups) point-to-point navigation. `--shards K`
+/// serves against a K-chip partitioned machine (DESIGN.md §7) instead of
+/// a single fabric.
 fn cmd_serve(args: &Args) -> Result<()> {
     use flip::service::{Engine, Job};
     let env = args.env()?;
     let group = args.group()?;
     let idx: usize = args.flag("idx").unwrap_or("0").parse()?;
     let queries: usize = args.flag("queries").unwrap_or("256").parse()?;
+    let shards: usize = args.flag("shards").unwrap_or("0").parse()?;
     let threads: usize = match args.flag("threads") {
         Some(t) => t.parse()?,
         None => std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
@@ -345,11 +350,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         g.num_edges()
     );
     let t0 = std::time::Instant::now();
-    let pair = flip::experiments::harness::CompiledPair::build(&g, &env.cfg, env.seed);
-    println!("  compile + map     : {:.1} ms (once)", t0.elapsed().as_secs_f64() * 1e3);
     let opts = SimOptions { max_cycles: 2_000_000_000, watchdog: 5_000_000, ..Default::default() };
-    let mut engine = Engine::new(&pair).with_workers(threads).with_opts(opts);
-    let report = engine.serve(&jobs);
+    let report = if shards >= 1 {
+        let spair =
+            flip::experiments::harness::ShardedPair::build(&g, shards, &env.cfg, env.seed);
+        println!(
+            "  partition+compile : {:.1} ms (once; {} shards, {} cut arcs = {:.1}% of arcs)",
+            t0.elapsed().as_secs_f64() * 1e3,
+            spair.num_shards(),
+            spair.directed.part.cut.len(),
+            spair.directed.part.cut_fraction() * 100.0
+        );
+        let mut engine = Engine::new_sharded(&spair).with_workers(threads).with_opts(opts);
+        engine.serve(&jobs)
+    } else {
+        let pair = flip::experiments::harness::CompiledPair::build(&g, &env.cfg, env.seed);
+        println!("  compile + map     : {:.1} ms (once)", t0.elapsed().as_secs_f64() * 1e3);
+        let mut engine = Engine::new(&pair).with_workers(threads).with_opts(opts);
+        engine.serve(&jobs)
+    };
     let errors = report.results.iter().filter(|r| r.is_err()).count();
     println!("  queries served    : {} ({} failed)", queries - errors, errors);
     println!("  wall time         : {:.3} s", report.wall_seconds);

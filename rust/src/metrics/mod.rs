@@ -107,6 +107,12 @@ pub struct SimMetrics {
     pub avg_pkt_wait: f64,
     /// Mean ALUin queue depth sampled each cycle.
     pub avg_aluin_depth: f64,
+    /// Frontier packets exchanged over the modeled inter-chip links
+    /// ([`crate::sim::multichip`]); always zero for single-chip runs.
+    pub chip_packets: u64,
+    /// Inter-chip link busy cycles: serialization occupancy summed over
+    /// every directed link; always zero for single-chip runs.
+    pub chip_link_cycles: u64,
     /// Activity counters for the energy model.
     pub activity: ActivityCounts,
     /// Per-cycle busy-ALU counts (only kept when tracing is enabled).

@@ -32,10 +32,19 @@
 //! borrows the pair). ALT landmarks are weight-dependent, so rebuild the
 //! engine (or call [`Engine::with_navigation`] again) after a delta —
 //! `examples/traffic_update.rs` is the full update→replan loop.
+//!
+//! **Sharding.** [`Engine::new_sharded`] serves the same job types
+//! against a K-chip partitioned machine ([`crate::sim::multichip`],
+//! DESIGN.md §7): each worker holds one [`SimInstance`] per shard and
+//! every query runs as a lockstep multi-chip simulation. Results are
+//! functionally identical to the single-chip engine (the sharded
+//! differential battery in `tests/sharded.rs` proves it); cycle counts
+//! reflect the lockstep timing model.
 
-use crate::experiments::harness::CompiledPair;
+use crate::experiments::harness::{CompiledPair, ShardedPair};
 use crate::metrics::RunResult;
 use crate::sim::flip::{SimInstance, SimOptions};
+use crate::sim::multichip;
 use crate::workloads::navigation::Landmarks;
 use crate::workloads::Workload;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -129,17 +138,50 @@ impl BatchReport {
     }
 }
 
-/// A multi-threaded query-serving engine over one compiled graph pair.
+/// What an [`Engine`] serves against: one single-chip compiled pair, or
+/// a K-chip sharded pair ([`crate::sim::multichip`]).
+enum Target<'a> {
+    Single(&'a CompiledPair),
+    Sharded(&'a ShardedPair),
+}
+
+impl Target<'_> {
+    fn graph(&self) -> &crate::graph::Graph {
+        match self {
+            Target::Single(p) => &p.graph,
+            Target::Sharded(p) => &p.graph,
+        }
+    }
+
+    fn num_pes(&self) -> usize {
+        match self {
+            Target::Single(p) => p.directed.cfg.num_pes(),
+            // lockstep cycles run on every chip at once
+            Target::Sharded(p) => p.directed.cfg.num_pes() * p.num_shards(),
+        }
+    }
+}
+
+/// One worker's reusable machine state: a single-chip instance, or one
+/// instance per shard of the K-chip machine.
+enum WorkerMachine {
+    Single(SimInstance),
+    Sharded(Vec<SimInstance>),
+}
+
+/// A multi-threaded query-serving engine over one compiled graph pair —
+/// single-chip ([`Engine::new`]) or sharded across K chips
+/// ([`Engine::new_sharded`], `flip serve --shards K`).
 ///
 /// Construction is cheap (no allocation until the first batch); worker
 /// instances are built on first use and reused across batches, so the
 /// steady state allocates nothing per query beyond each result's
 /// attribute vector.
 pub struct Engine<'a> {
-    pair: &'a CompiledPair,
+    target: Target<'a>,
     /// One reusable machine per worker, created lazily and kept across
     /// batches.
-    instances: Vec<SimInstance>,
+    machines: Vec<WorkerMachine>,
     /// ALT preprocessing shared by all Navigate jobs (weight-dependent:
     /// invalidated by rebuilding the engine after a traffic delta).
     landmarks: Option<Landmarks>,
@@ -150,9 +192,20 @@ pub struct Engine<'a> {
 impl<'a> Engine<'a> {
     /// An engine over `pair` using every available core.
     pub fn new(pair: &'a CompiledPair) -> Engine<'a> {
+        Engine::over(Target::Single(pair))
+    }
+
+    /// An engine over a K-chip sharded machine: every job runs as a
+    /// lockstep multi-chip query ([`crate::sim::multichip::run_program`]),
+    /// with results functionally identical to the single-chip engine.
+    pub fn new_sharded(pair: &'a ShardedPair) -> Engine<'a> {
+        Engine::over(Target::Sharded(pair))
+    }
+
+    fn over(target: Target<'a>) -> Engine<'a> {
         let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
         let opts = SimOptions::default();
-        Engine { pair, instances: Vec::new(), landmarks: None, opts, workers }
+        Engine { target, machines: Vec::new(), landmarks: None, opts, workers }
     }
 
     /// Override the worker-thread count (clamped to ≥ 1).
@@ -167,11 +220,18 @@ impl<'a> Engine<'a> {
         self
     }
 
+    /// Change the per-query simulator options between batches (the worker
+    /// machines are kept; an aborted previous batch hard-resets them on
+    /// their next run).
+    pub fn set_opts(&mut self, opts: SimOptions) {
+        self.opts = opts;
+    }
+
     /// Build the ALT landmarks now (panics on directed graphs, like
     /// [`Landmarks::build`]). Without this, landmarks are built lazily
     /// when the first [`Job::Navigate`] batch arrives.
     pub fn with_navigation(mut self, num_landmarks: usize) -> Engine<'a> {
-        self.landmarks = Some(Landmarks::build(&self.pair.graph, num_landmarks));
+        self.landmarks = Some(Landmarks::build(self.target.graph(), num_landmarks));
         self
     }
 
@@ -185,30 +245,33 @@ impl<'a> Engine<'a> {
     /// order and bit-identical to sequential single-query runs.
     pub fn serve(&mut self, jobs: &[Job]) -> BatchReport {
         if self.landmarks.is_none()
-            && !self.pair.graph.is_directed()
+            && !self.target.graph().is_directed()
             && jobs.iter().any(|j| matches!(j, Job::Navigate { .. }))
         {
-            self.landmarks = Some(Landmarks::build(&self.pair.graph, DEFAULT_LANDMARKS));
+            self.landmarks = Some(Landmarks::build(self.target.graph(), DEFAULT_LANDMARKS));
         }
         let want = self.workers.min(jobs.len()).max(1);
-        while self.instances.len() < want {
-            self.instances.push(SimInstance::new(&self.pair.directed));
+        while self.machines.len() < want {
+            self.machines.push(match &self.target {
+                Target::Single(pair) => WorkerMachine::Single(SimInstance::new(&pair.directed)),
+                Target::Sharded(pair) => WorkerMachine::Sharded(pair.directed.new_instances()),
+            });
         }
-        let pair = self.pair;
+        let target = &self.target;
         let lm = self.landmarks.as_ref();
         let opts = &self.opts;
         let t0 = std::time::Instant::now();
         let results: Vec<Result<QueryResult, QueryError>> = if want <= 1 {
-            let inst = &mut self.instances[0];
-            jobs.iter().map(|&j| answer(inst, pair, lm, opts, j)).collect()
+            let m = &mut self.machines[0];
+            jobs.iter().map(|&j| answer(m, target, lm, opts, j)).collect()
         } else {
             let next = AtomicUsize::new(0);
             let chunks: Vec<Vec<_>> = std::thread::scope(|s| {
                     let handles: Vec<_> = self
-                        .instances
+                        .machines
                         .iter_mut()
                         .take(want)
-                        .map(|inst| {
+                        .map(|m| {
                             let next = &next;
                             s.spawn(move || {
                                 let mut local = Vec::new();
@@ -217,7 +280,7 @@ impl<'a> Engine<'a> {
                                     if i >= jobs.len() {
                                         break;
                                     }
-                                    local.push((i, answer(inst, pair, lm, opts, jobs[i])));
+                                    local.push((i, answer(m, target, lm, opts, jobs[i])));
                                 }
                                 local
                             })
@@ -239,7 +302,7 @@ impl<'a> Engine<'a> {
         let wall = t0.elapsed().as_secs_f64();
         let sim_cycles: u64 =
             results.iter().filter_map(|r| r.as_ref().ok()).map(|q| q.run.cycles).sum();
-        let num_pes = pair.directed.cfg.num_pes() as f64;
+        let num_pes = self.target.num_pes() as f64;
         BatchReport {
             queries_per_s: if wall > 0.0 { jobs.len() as f64 / wall } else { 0.0 },
             pe_cycles_per_s: if wall > 0.0 { sim_cycles as f64 * num_pes / wall } else { 0.0 },
@@ -251,16 +314,16 @@ impl<'a> Engine<'a> {
     }
 }
 
-/// Answer one job on a worker's machine instance.
+/// Answer one job on a worker's machine.
 fn answer(
-    inst: &mut SimInstance,
-    pair: &CompiledPair,
+    machine: &mut WorkerMachine,
+    target: &Target,
     lm: Option<&Landmarks>,
     opts: &SimOptions,
     job: Job,
 ) -> Result<QueryResult, QueryError> {
     let fail = |msg: String| QueryError { job: job.describe(), msg };
-    let n = pair.graph.num_vertices();
+    let n = target.graph().num_vertices();
     match job {
         Job::Workload(w, source) => {
             if w.is_extended() {
@@ -272,22 +335,51 @@ fn answer(
             if source as usize >= n {
                 return Err(fail(format!("source {source} out of range (|V| = {n})")));
             }
-            let c = pair.for_workload(w);
             let vp = w.builtin_program();
-            let run = inst.run_program(c, vp.as_ref(), source, opts).map_err(&fail)?;
-            crate::experiments::harness::debug_check_reference(pair, w, source, &run);
+            let run = match (machine, target) {
+                (WorkerMachine::Single(inst), &Target::Single(pair)) => {
+                    let c = pair.for_workload(w);
+                    let run = inst.run_program(c, vp.as_ref(), source, opts).map_err(&fail)?;
+                    crate::experiments::harness::debug_check_reference(pair, w, source, &run);
+                    run
+                }
+                (WorkerMachine::Sharded(insts), &Target::Sharded(pair)) => {
+                    let m = pair.for_workload(w);
+                    let sr = multichip::run_program(m, insts, vp.as_ref(), source, opts)
+                        .map_err(&fail)?;
+                    crate::experiments::harness::debug_check_reference_views(
+                        &pair.graph,
+                        &pair.wcc_view,
+                        w,
+                        source,
+                        &sr.result.attrs,
+                    );
+                    sr.result
+                }
+                _ => unreachable!("worker machine built from its own target"),
+            };
             Ok(QueryResult { job, run, distance: None })
         }
-        Job::Navigate { source, target } => {
-            if source as usize >= n || target as usize >= n {
-                return Err(fail(format!("query {source} -> {target} out of range (|V| = {n})")));
+        Job::Navigate { source, target: dst } => {
+            if source as usize >= n || dst as usize >= n {
+                return Err(fail(format!("query {source} -> {dst} out of range (|V| = {n})")));
             }
             let lm = lm.ok_or_else(|| {
                 fail("navigation needs an undirected road network (no ALT landmarks)".to_string())
             })?;
-            let vp = lm.query(source, target);
-            let run = inst.run_program(&pair.directed, &vp, source, opts).map_err(&fail)?;
-            let distance = run.attrs[target as usize];
+            let vp = lm.query(source, dst);
+            let run = match (machine, target) {
+                (WorkerMachine::Single(inst), &Target::Single(pair)) => {
+                    inst.run_program(&pair.directed, &vp, source, opts).map_err(&fail)?
+                }
+                (WorkerMachine::Sharded(insts), &Target::Sharded(pair)) => {
+                    multichip::run_program(&pair.directed, insts, &vp, source, opts)
+                        .map_err(&fail)?
+                        .result
+                }
+                _ => unreachable!("worker machine built from its own target"),
+            };
+            let distance = run.attrs[dst as usize];
             Ok(QueryResult { job, run, distance: Some(distance) })
         }
     }

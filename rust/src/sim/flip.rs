@@ -85,6 +85,29 @@ impl Default for SimOptions {
     }
 }
 
+/// One externally sourced frontier message for a resumed run
+/// ([`SimInstance::run_resumed`]) — the multi-chip ingress path: a remote
+/// chip's packet enters the destination PE's replay queue (the SPM-backed
+/// port every off-fabric message already uses) at `ready_at`, then flows
+/// through the ordinary delivery pipeline: Intra-Table lookup of
+/// `src_vid` (a ghost entry for a cut arc), edge-attribute combine,
+/// coalescing, ALU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Inject {
+    /// Destination vertex (an id of the compiled graph being run).
+    pub vid: u32,
+    /// Source id carried by the packet — for cut arcs this is the ghost
+    /// id ([`crate::compiler::GHOST_BASE`]` + global source id`) the
+    /// destination's Intra-Table was compiled with.
+    pub src_vid: u32,
+    /// Attribute payload (combined with the ghost entry's edge weight at
+    /// delivery, exactly like an on-chip packet).
+    pub attr: u32,
+    /// Cycle (local to the resumed run) at which the message becomes
+    /// deliverable — link latency + serialization slot.
+    pub ready_at: u64,
+}
+
 /// A packet in a FIFO, with its link-arrival time and provenance for the
 /// wait-time metric.
 #[derive(Debug, Clone, Copy)]
@@ -527,6 +550,75 @@ impl SimInstance {
         out
     }
 
+    /// Resume execution from an existing attribute state with externally
+    /// sourced messages — one multi-chip superstep ([`super::multichip`]):
+    /// no program seeding happens; `attrs` (one entry per vertex of `c`)
+    /// is installed as the DRF contents, every [`Inject`] enters its
+    /// destination PE's replay queue at its `ready_at`, and the fabric
+    /// runs to quiescence. With an empty `inbound` the run terminates
+    /// immediately at cycle 0 and hands `attrs` back unchanged.
+    pub fn run_resumed(
+        &mut self,
+        c: &CompiledGraph,
+        vp: &dyn VertexProgram,
+        attrs: Vec<u32>,
+        inbound: &[Inject],
+        opts: &SimOptions,
+    ) -> Result<RunResult, String> {
+        if c.cfg != self.cfg {
+            return Err(
+                "SimInstance fabric mismatch: the compiled graph targets a different ArchConfig"
+                    .to_string(),
+            );
+        }
+        if attrs.len() != c.placement.slots.len() {
+            return Err(format!(
+                "resumed attrs length {} != compiled vertex count {}",
+                attrs.len(),
+                c.placement.slots.len()
+            ));
+        }
+        for i in inbound {
+            if i.vid as usize >= c.placement.slots.len() {
+                return Err(format!("inject destination {} out of range", i.vid));
+            }
+        }
+        self.ensure_slice_capacity(c);
+        self.reset();
+        self.needs_hard_reset = true;
+        let cx = RunCtx { c, vp, vp_bound: vp.bound(), num_copies: c.placement.num_copies, opts };
+        let cfg = &c.cfg;
+        self.attrs = attrs;
+        // deterministic boot residency: copy 0 everywhere (the dense-seed
+        // rule; mismatched injections park and pull their slice in)
+        for cl in 0..self.tm.num_clusters {
+            self.clusters[cl].resident = crate::compiler::Placement::slice_id(cfg, cl, 0);
+        }
+        // replay queues are FIFOs, so each PE's injections must enter in
+        // arrival order; a full deterministic sort keeps the run a pure
+        // function of the inputs regardless of caller iteration order
+        let mut inj: Vec<Inject> = inbound.to_vec();
+        inj.sort_unstable_by_key(|i| (i.ready_at, i.vid, i.src_vid, i.attr));
+        for i in &inj {
+            let s = c.placement.slots[i.vid as usize];
+            let pe_idx = s.pe.index(cfg);
+            let slice = crate::compiler::Placement::slice_id(cfg, s.pe.cluster(cfg), s.copy);
+            self.replay[pe_idx].push_back(QPkt {
+                pkt: Packet { src_vid: i.src_vid, attr: i.attr, dx: 0, dy: 0, slice },
+                ready_at: i.ready_at,
+                created: i.ready_at,
+                route_hops: 0,
+            });
+            self.pe[pe_idx].queued += 1;
+            self.activate(pe_idx);
+        }
+        let out = self.drive_loop(&cx);
+        if out.is_ok() {
+            self.needs_hard_reset = false;
+        }
+        out
+    }
+
     /// Restore pristine post-construction state. After a completed run
     /// this is O(touched state): the fabric has drained itself, so only
     /// the per-PE scalars the run dirtied (plus the per-run counters) are
@@ -800,6 +892,13 @@ impl SimInstance {
     /// Run to termination; returns the functional result and metrics.
     fn drive(&mut self, cx: &RunCtx, source: u32) -> Result<RunResult, String> {
         self.seed(cx, source);
+        self.drive_loop(cx)
+    }
+
+    /// The termination loop shared by fresh ([`SimInstance::run_program`])
+    /// and resumed ([`SimInstance::run_resumed`]) runs; the caller has
+    /// already installed attributes and initial work.
+    fn drive_loop(&mut self, cx: &RunCtx) -> Result<RunResult, String> {
         self.progress_at = 0;
         while !self.is_done() {
             if self.now >= cx.opts.max_cycles {
@@ -843,6 +942,8 @@ impl SimInstance {
                 } else {
                     0.0
                 },
+                chip_packets: 0,
+                chip_link_cycles: 0,
                 activity: act,
                 parallelism_trace: std::mem::take(&mut self.trace),
             },

@@ -11,10 +11,16 @@
 //! (DESIGN.md §6): hold a [`SimInstance`] (or [`naive::NaiveInstance`])
 //! to serve many queries off one compiled graph without re-allocating
 //! the machine.
+//!
+//! The multi-chip layer ([`multichip`]) steps K partitioned fabrics in
+//! barrier-lockstep supersteps and exchanges frontier packets for cut
+//! arcs over a modeled inter-chip link (DESIGN.md §7); sharded results
+//! are differential-tested against the single-chip cores.
 
 pub mod flip;
 pub mod mcu;
 pub mod modulo;
+pub mod multichip;
 pub mod naive;
 pub mod opcentric;
 

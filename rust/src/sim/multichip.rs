@@ -1,0 +1,550 @@
+//! Multi-chip FLIP: K partitioned fabrics in lockstep (DESIGN.md §7).
+//!
+//! The paper scales past the 256-vertex fabric only by runtime data
+//! swapping (§5.2.5), which serializes every slice through one chip. This
+//! layer shards the graph across `K` chips instead: a deterministic
+//! edge-cut partition ([`crate::graph::partition`]) gives each chip its
+//! own compiled machine image ([`crate::compiler::compile_sharded`], with
+//! ghost Intra-Table entries for inbound cut arcs), and the chips run
+//! **barrier-lockstep supersteps**:
+//!
+//! 1. every chip runs its local fabric to quiescence (an ordinary
+//!    [`SimInstance`] run — swapping, parking and watchdogs included);
+//! 2. a barrier closes the superstep at the *slowest* chip's cycle count;
+//! 3. boundary vertices whose attribute changed (and whose program would
+//!    re-scatter the settled value — [`VertexProgram::announces`]) emit
+//!    one frontier packet per remote destination (PE, slice) over the
+//!    modeled inter-chip link; dense programs additionally ship their
+//!    initial seed scatter after superstep 0;
+//! 4. each packet arrives in the next superstep at
+//!    `t_chip_link + slot · CHIP_PKT_WORDS · t_chip_word` (per-link FIFO
+//!    serialization) and enters the destination PE's replay queue
+//!    ([`SimInstance::run_resumed`]), then flows through the unmodified
+//!    delivery pipeline via its ghost Intra entry.
+//!
+//! The loop ends at the first exchange with zero packets.
+//!
+//! **Correctness.** Cross-chip delivery reuses the exact on-chip
+//! semantics (Intra lookup, edge-attribute combine, coalescing, the
+//! program ISA), and every supported program is either monotone over a
+//! lattice or commutative-associative (the [`VertexProgram`] determinism
+//! contract), so the sharded fixpoint equals the single-chip one: final
+//! attributes match the single-chip event core and the CPU oracle for
+//! all six workloads — the spine of `tests/sharded.rs` and
+//! `tests/fuzz.rs`. For `K = 1` the partition is the identity, no cut
+//! arcs exist, and the run *is* a single-chip run: cycles and every
+//! metric are bit-identical to an unsharded [`SimInstance`].
+//!
+//! **Timing.** Total cycles = Σ over supersteps of the slowest chip's
+//! local cycles; link serialization overlaps the next superstep (packets
+//! carry their arrival cycle). Inter-chip traffic is counted in the new
+//! [`SimMetrics`] fields `chip_packets` / `chip_link_cycles`.
+
+use crate::compiler::{compile_sharded, CompileOpts, CompiledGraph, GhostArc, GHOST_BASE};
+use crate::config::ArchConfig;
+use crate::graph::partition::{partition, Partition};
+use crate::graph::Graph;
+use crate::metrics::{ActivityCounts, RunResult, SimMetrics};
+use crate::sim::flip::{Inject, SimInstance, SimOptions};
+use crate::workloads::program::VertexProgram;
+use crate::workloads::Workload;
+
+/// Words per inter-chip frontier packet: source id, attribute, and the
+/// destination routing word (slice + PE).
+pub const CHIP_PKT_WORDS: u64 = 3;
+
+/// One deduplicated remote destination of a boundary vertex: a single
+/// link packet covers every cut arc from the source into this
+/// (shard, PE, slice) — the destination resolves the concrete registers
+/// through its ghost Intra entries, mirroring the on-chip Inter-Table
+/// dedup rule.
+#[derive(Debug, Clone, Copy)]
+struct SendDest {
+    dst_shard: u16,
+    /// Representative destination vertex (local id) — names the (PE,
+    /// slice) the packet is addressed to.
+    dst_vid: u32,
+    pe: u32,
+    slice: u16,
+}
+
+/// A graph compiled onto `K` chips: the partition, one machine image per
+/// shard (ghost entries included), and the precomputed link send lists.
+pub struct ShardedMachine {
+    /// The per-chip fabric configuration (all chips identical).
+    pub cfg: ArchConfig,
+    /// The partition this machine was built from.
+    pub part: Partition,
+    /// One compiled image per shard.
+    pub shards: Vec<CompiledGraph>,
+    /// `send[shard][src_local]` — deduplicated remote destinations.
+    send: Vec<Vec<Vec<SendDest>>>,
+}
+
+impl ShardedMachine {
+    /// Partition `g` into `k` shards and compile each one (shared
+    /// `ArchConfig`, shared compile seed). For `k = 1` the single shard's
+    /// machine image is bit-identical to a plain
+    /// [`crate::compiler::compile`] of `g`.
+    pub fn build(g: &Graph, k: usize, cfg: &ArchConfig, seed: u64) -> ShardedMachine {
+        let part = partition(g, k);
+        let opts = CompileOpts { seed, ..Default::default() };
+        let shards: Vec<CompiledGraph> = (0..part.k)
+            .map(|s| {
+                let ghosts: Vec<GhostArc> = part
+                    .cut
+                    .iter()
+                    .filter(|c| c.dst_shard as usize == s)
+                    .map(|c| GhostArc {
+                        src_global: c.src,
+                        dst_local: c.dst_local,
+                        weight: c.weight,
+                    })
+                    .collect();
+                compile_sharded(&part.shards[s], &ghosts, cfg, &opts)
+            })
+            .collect();
+        let mut send: Vec<Vec<Vec<SendDest>>> =
+            part.shards.iter().map(|sh| vec![Vec::new(); sh.num_vertices()]).collect();
+        for c in &part.cut {
+            let dsh = &shards[c.dst_shard as usize];
+            let slot = dsh.placement.slots[c.dst_local as usize];
+            let pe = slot.pe.index(cfg) as u32;
+            let slice = dsh.placement.slice_of(cfg, c.dst_local);
+            let list = &mut send[c.src_shard as usize][c.src_local as usize];
+            if !list.iter().any(|d| d.dst_shard == c.dst_shard && d.pe == pe && d.slice == slice) {
+                list.push(SendDest { dst_shard: c.dst_shard, dst_vid: c.dst_local, pe, slice });
+            }
+        }
+        ShardedMachine { cfg: cfg.clone(), part, shards, send }
+    }
+
+    /// Shard count.
+    pub fn num_shards(&self) -> usize {
+        self.part.k
+    }
+
+    /// Allocate one reusable machine instance per shard (the serve-path
+    /// worker state; reused across queries like a single-chip
+    /// [`SimInstance`]).
+    pub fn new_instances(&self) -> Vec<SimInstance> {
+        self.shards.iter().map(SimInstance::new).collect()
+    }
+}
+
+/// Result of one sharded run.
+#[derive(Debug, Clone)]
+pub struct ShardedRun {
+    /// Merged run: global-order attributes, lockstep cycle count, summed
+    /// metrics with the inter-chip fields populated. For `K = 1` this is
+    /// exactly the single chip's [`RunResult`].
+    pub result: RunResult,
+    /// Lockstep supersteps executed (1 for a run with no cut traffic).
+    pub supersteps: u64,
+    /// Per-shard busy cycles summed over all supersteps (load balance
+    /// diagnostic; the lockstep total is the per-superstep max).
+    pub shard_cycles: Vec<u64>,
+}
+
+/// Local view of a global vertex program: translates shard-local vertex
+/// ids to global ones for every per-vertex hook, so programs keep global
+/// semantics (WCC labels, MIS priorities, A* heuristics, PageRank
+/// contributions) on renumbered shard graphs.
+struct ShardView<'a> {
+    inner: &'a dyn VertexProgram,
+    global_of: &'a [u32],
+    n_global: usize,
+}
+
+impl VertexProgram for ShardView<'_> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn isa(&self) -> &[crate::arch::isa::Instr] {
+        self.inner.isa()
+    }
+
+    fn init_attr(&self, vid: u32, _n: usize) -> u32 {
+        self.inner.init_attr(self.global_of[vid as usize], self.n_global)
+    }
+
+    fn combine(&self, attr: u32, weight: u32) -> u32 {
+        self.inner.combine(attr, weight)
+    }
+
+    fn coalesce(&self, queued: u32, incoming: u32) -> Option<u32> {
+        self.inner.coalesce(queued, incoming)
+    }
+
+    fn aux(&self, vid: u32) -> u32 {
+        self.inner.aux(self.global_of[vid as usize])
+    }
+
+    fn bound(&self) -> u32 {
+        self.inner.bound()
+    }
+
+    fn single_source(&self) -> bool {
+        self.inner.single_source()
+    }
+
+    fn seeds(&self, vid: u32) -> bool {
+        self.inner.seeds(self.global_of[vid as usize])
+    }
+
+    fn announces(&self, vid: u32, attr: u32) -> bool {
+        self.inner.announces(self.global_of[vid as usize], attr)
+    }
+
+    fn reference(&self, _view: &Graph, _source: u32) -> Vec<u32> {
+        unreachable!("shard views have no standalone oracle; validate against the global program")
+    }
+}
+
+/// Exact-sum metric accumulator across shards and supersteps. The f64
+/// averages are recombined with their own weights (packets for wait,
+/// cycles for depth/parallelism) — a documented approximation for K > 1;
+/// K = 1 bypasses the merge entirely.
+#[derive(Default)]
+struct Agg {
+    delivered: u64,
+    parked: u64,
+    swaps: u64,
+    swap_cycles: u64,
+    peak: u32,
+    wait_weighted: f64,
+    aluin_weighted: f64,
+    par_weighted: f64,
+    par_cycles: u64,
+    cycles_sum: u64,
+    edges: u64,
+    activity: ActivityCounts,
+}
+
+impl Agg {
+    fn add(&mut self, r: &RunResult) {
+        self.delivered += r.sim.packets_delivered;
+        self.parked += r.sim.packets_parked;
+        self.swaps += r.sim.swaps;
+        self.swap_cycles += r.sim.swap_cycles;
+        self.peak = self.peak.max(r.sim.peak_parallelism);
+        self.wait_weighted += r.sim.avg_pkt_wait * r.sim.packets_delivered as f64;
+        self.aluin_weighted += r.sim.avg_aluin_depth * r.cycles as f64;
+        if r.sim.avg_parallelism > 0.0 {
+            self.par_weighted += r.sim.avg_parallelism * r.cycles as f64;
+            self.par_cycles += r.cycles;
+        }
+        self.cycles_sum += r.cycles;
+        self.edges += r.edges_traversed;
+        self.activity.add(&r.sim.activity);
+    }
+
+    fn into_metrics(self, chip_packets: u64, chip_link_cycles: u64) -> SimMetrics {
+        SimMetrics {
+            packets_delivered: self.delivered,
+            packets_parked: self.parked,
+            swaps: self.swaps,
+            swap_cycles: self.swap_cycles,
+            avg_parallelism: if self.par_cycles > 0 {
+                self.par_weighted / self.par_cycles as f64
+            } else {
+                0.0
+            },
+            peak_parallelism: self.peak,
+            avg_pkt_wait: if self.delivered > 0 {
+                self.wait_weighted / self.delivered as f64
+            } else {
+                0.0
+            },
+            avg_aluin_depth: if self.cycles_sum > 0 {
+                self.aluin_weighted / self.cycles_sum as f64
+            } else {
+                0.0
+            },
+            chip_packets,
+            chip_link_cycles,
+            activity: self.activity,
+            parallelism_trace: Vec::new(),
+        }
+    }
+}
+
+/// Run an arbitrary vertex program on a sharded machine using the given
+/// per-shard instances (one [`SimInstance`] per shard, reusable across
+/// queries). `source` is a *global* vertex id (ignored by dense-seeded
+/// programs). A watchdog or max-cycles abort inside any shard surfaces
+/// as the returned `Err`; the instances hard-reset on their next run, so
+/// the machine stays serviceable.
+pub fn run_program(
+    m: &ShardedMachine,
+    insts: &mut [SimInstance],
+    vp: &dyn VertexProgram,
+    source: u32,
+    opts: &SimOptions,
+) -> Result<ShardedRun, String> {
+    let k = m.part.k;
+    let n = m.part.n;
+    if insts.len() != k {
+        return Err(format!("{} instances for {k} shards", insts.len()));
+    }
+    if vp.single_source() && source as usize >= n {
+        return Err(format!("source {source} out of range (|V| = {n})"));
+    }
+    let views: Vec<ShardView> = (0..k)
+        .map(|s| ShardView { inner: vp, global_of: &m.part.global_of[s], n_global: n })
+        .collect();
+    let words = CHIP_PKT_WORDS * m.cfg.t_chip_word;
+    let mut agg = Agg::default();
+    let mut shard_cycles = vec![0u64; k];
+    let mut attrs: Vec<Vec<u32>> = Vec::with_capacity(k);
+    let mut pre: Vec<Vec<u32>> = Vec::with_capacity(k);
+    let mut total_cycles = 0u64;
+    let mut chip_packets = 0u64;
+    let mut chip_link_cycles = 0u64;
+    let mut single_chip: Option<(u64, u64, SimMetrics)> = None;
+
+    // ---- superstep 0: seeded local runs ---------------------------------
+    let mut step_max = 0u64;
+    for s in 0..k {
+        let n_s = m.part.global_of[s].len();
+        let init: Vec<u32> = (0..n_s as u32).map(|l| views[s].init_attr(l, n_s)).collect();
+        let owner = !vp.single_source() || m.part.shard_of[source as usize] as usize == s;
+        if owner {
+            let local_src = if vp.single_source() { m.part.local_of[source as usize] } else { 0 };
+            let mut r = insts[s]
+                .run_program(&m.shards[s], &views[s], local_src, opts)
+                .map_err(|e| format!("shard {s}: {e}"))?;
+            step_max = step_max.max(r.cycles);
+            shard_cycles[s] += r.cycles;
+            if k == 1 {
+                single_chip = Some((r.cycles, r.edges_traversed, r.sim.clone()));
+            }
+            agg.add(&r);
+            attrs.push(std::mem::take(&mut r.attrs));
+        } else {
+            // a chip with no seed and no inbound packets yet never powers
+            // up this superstep
+            attrs.push(init.clone());
+        }
+        pre.push(init);
+    }
+    let mut supersteps = 1u64;
+    total_cycles += step_max;
+
+    // ---- exchange / resume loop -----------------------------------------
+    // Monotone programs settle within |V| value improvements, so a loop
+    // that outlives this bound is a program-contract violation — fail
+    // fast instead of spinning (the hung-lockstep watchdog).
+    let max_supersteps = 2 * n as u64 + 16;
+    let mut link_slots = vec![0u64; k * k];
+    loop {
+        // collect boundary messages of the superstep that just ended
+        link_slots.fill(0);
+        let mut inj: Vec<Vec<Inject>> = vec![Vec::new(); k];
+        let mut sent = 0u64;
+        for s in 0..k {
+            for l in 0..attrs[s].len() {
+                let dests = &m.send[s][l];
+                if dests.is_empty() {
+                    continue;
+                }
+                let global = m.part.global_of[s][l];
+                let ghost = GHOST_BASE + global;
+                let seed_send = supersteps == 1 && !vp.single_source() && vp.seeds(global);
+                let post = attrs[s][l];
+                let announce = post != pre[s][l] && vp.announces(global, post);
+                // a vertex can owe two packets after superstep 0: its seed
+                // scatter (dense programs) and its settled update — the
+                // same two scatters the single chip performs
+                let mut values: [Option<u32>; 2] = [None, None];
+                if seed_send {
+                    values[0] = Some(pre[s][l]);
+                }
+                if announce {
+                    values[1] = Some(post);
+                }
+                for value in values.into_iter().flatten() {
+                    for d in dests {
+                        let j = d.dst_shard as usize;
+                        link_slots[s * k + j] += 1;
+                        let arrival = m.cfg.t_chip_link + link_slots[s * k + j] * words;
+                        inj[j].push(Inject {
+                            vid: d.dst_vid,
+                            src_vid: ghost,
+                            attr: value,
+                            ready_at: arrival,
+                        });
+                        sent += 1;
+                        chip_link_cycles += words;
+                    }
+                }
+            }
+        }
+        if sent == 0 {
+            break;
+        }
+        chip_packets += sent;
+        // resume every chip that received packets (a chip with an empty
+        // inbox would provably run zero cycles and change nothing)
+        let mut step_max = 0u64;
+        for s in 0..k {
+            pre[s].clone_from(&attrs[s]);
+            if inj[s].is_empty() {
+                continue;
+            }
+            let mut r = insts[s]
+                .run_resumed(
+                    &m.shards[s],
+                    &views[s],
+                    std::mem::take(&mut attrs[s]),
+                    &inj[s],
+                    opts,
+                )
+                .map_err(|e| format!("shard {s}: {e}"))?;
+            step_max = step_max.max(r.cycles);
+            shard_cycles[s] += r.cycles;
+            agg.add(&r);
+            attrs[s] = std::mem::take(&mut r.attrs);
+        }
+        supersteps += 1;
+        total_cycles += step_max;
+        if total_cycles > opts.max_cycles {
+            return Err(format!(
+                "exceeded max_cycles={} across {supersteps} supersteps",
+                opts.max_cycles
+            ));
+        }
+        if supersteps > max_supersteps {
+            return Err(format!(
+                "lockstep did not converge within {max_supersteps} supersteps \
+                 (program violates the determinism contract?)"
+            ));
+        }
+    }
+
+    let global_attrs = m.part.gather_attrs(&attrs);
+    let result = if let Some((cycles, edges, sim)) = single_chip {
+        // K = 1: the merged result is the single run, bit-exact
+        RunResult { cycles, attrs: global_attrs, edges_traversed: edges, sim }
+    } else {
+        let edges = agg.edges;
+        RunResult {
+            cycles: total_cycles,
+            attrs: global_attrs,
+            edges_traversed: edges,
+            sim: agg.into_metrics(chip_packets, chip_link_cycles),
+        }
+    };
+    Ok(ShardedRun { result, supersteps, shard_cycles })
+}
+
+/// Run one built-in trio workload on a sharded machine with fresh
+/// instances (cold start). The machine must have been built on the
+/// workload's graph view (undirected closure for WCC), exactly like
+/// [`crate::compiler::compile`].
+pub fn run(
+    m: &ShardedMachine,
+    workload: Workload,
+    source: u32,
+    opts: &SimOptions,
+) -> Result<ShardedRun, String> {
+    let vp = workload.builtin_program();
+    let mut insts = m.new_instances();
+    run_program(m, &mut insts, vp.as_ref(), source, opts)
+}
+
+/// Drive host-synchronized PageRank rounds on a sharded machine — the
+/// multi-chip analog of [`crate::workloads::pagerank::run_rounds`]: the
+/// recurrence runs on the (global) host state, each round is one sharded
+/// dense run whose cut contributions cross the link once. `g` must be
+/// the exact graph the machine was built on. The ranks match
+/// [`crate::graph::reference::pagerank`] bit-for-bit.
+pub fn run_pagerank_rounds(
+    m: &ShardedMachine,
+    g: &Graph,
+    iters: usize,
+    opts: &SimOptions,
+) -> Result<crate::workloads::pagerank::PageRankRun, String> {
+    let mut insts = m.new_instances();
+    crate::workloads::pagerank::run_rounds_with(g, iters, |vp| {
+        run_program(m, &mut insts, vp, 0, opts).map(|r| r.result)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generate, reference};
+
+    #[test]
+    fn k1_run_is_bit_identical_to_single_chip() {
+        let g = generate::road_network(64, 146, 166, 7);
+        let cfg = ArchConfig::default();
+        let m = ShardedMachine::build(&g, 1, &cfg, 42);
+        let sharded = run(&m, Workload::Bfs, 0, &SimOptions::default()).unwrap();
+        let c = crate::compiler::compile(&g, &cfg, &CompileOpts { seed: 42, ..Default::default() });
+        let single = crate::sim::flip::run(&c, Workload::Bfs, 0, &SimOptions::default()).unwrap();
+        assert_eq!(sharded.supersteps, 1);
+        assert_eq!(sharded.result.cycles, single.cycles);
+        assert_eq!(sharded.result.attrs, single.attrs);
+        assert_eq!(sharded.result.edges_traversed, single.edges_traversed);
+        assert_eq!(sharded.result.sim, single.sim);
+    }
+
+    #[test]
+    fn two_shards_match_reference_on_trio() {
+        let g = generate::road_network(64, 146, 166, 9);
+        let cfg = ArchConfig::default();
+        for w in Workload::ALL {
+            let view = crate::workloads::view_for(w, &g);
+            let m = ShardedMachine::build(&view, 2, &cfg, 42);
+            assert!(!m.part.cut.is_empty(), "balanced 2-cut of a road network has cut arcs");
+            let r = run(&m, w, 5, &SimOptions::default()).unwrap();
+            assert_eq!(r.result.attrs, w.reference(&view, 5), "{}", w.name());
+            if w == Workload::Wcc {
+                // dense seeding guarantees every cut arc ships at least its
+                // seed scatter
+                assert!(r.result.sim.chip_packets > 0, "WCC: no cut traffic?");
+                assert!(r.result.sim.chip_link_cycles > 0);
+                assert!(r.supersteps >= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_instances_are_reusable_across_queries() {
+        let g = generate::road_network(64, 146, 166, 11);
+        let cfg = ArchConfig::default();
+        let m = ShardedMachine::build(&g, 2, &cfg, 42);
+        let mut insts = m.new_instances();
+        let vp = Workload::Bfs.builtin_program();
+        for src in [0u32, 17, 63, 0] {
+            let r = run_program(&m, &mut insts, vp.as_ref(), src, &SimOptions::default()).unwrap();
+            assert_eq!(r.result.attrs, reference::bfs_levels(&g, src), "src {src}");
+        }
+    }
+
+    #[test]
+    fn sharded_abort_is_an_error_and_machine_recovers() {
+        let g = generate::road_network(64, 146, 166, 13);
+        let cfg = ArchConfig::default();
+        let m = ShardedMachine::build(&g, 2, &cfg, 42);
+        let mut insts = m.new_instances();
+        let vp = Workload::Bfs.builtin_program();
+        let tiny = SimOptions { max_cycles: 1, ..Default::default() };
+        assert!(run_program(&m, &mut insts, vp.as_ref(), 0, &tiny).is_err());
+        // the same instances serve the next query correctly (hard reset)
+        let r = run_program(&m, &mut insts, vp.as_ref(), 0, &SimOptions::default()).unwrap();
+        assert_eq!(r.result.attrs, reference::bfs_levels(&g, 0));
+    }
+
+    #[test]
+    fn sharded_pagerank_rounds_match_fixed_point_oracle() {
+        let g = generate::road_network(64, 146, 166, 5);
+        let cfg = ArchConfig::default();
+        let m = ShardedMachine::build(&g, 2, &cfg, 42);
+        let run = run_pagerank_rounds(&m, &g, 4, &SimOptions::default()).unwrap();
+        assert_eq!(run.ranks, reference::pagerank(&g, 4), "fixed-point mismatch");
+    }
+}

@@ -478,6 +478,8 @@ impl NaiveInstance {
                 } else {
                     0.0
                 },
+                chip_packets: 0,
+                chip_link_cycles: 0,
                 activity: act,
                 parallelism_trace: std::mem::take(&mut self.trace),
             },

@@ -118,6 +118,13 @@ impl VertexProgram for Mis {
         None
     }
 
+    fn announces(&self, _vid: u32, attr: u32) -> bool {
+        // only the IN/OUT decision is announced (exactly once: decisions
+        // are final, so a decided attribute never changes again); counter
+        // updates stay local
+        attr <= ATTR_IN
+    }
+
     fn single_source(&self) -> bool {
         false
     }
@@ -204,6 +211,15 @@ mod tests {
         assert_eq!(a.prio, b.prio);
         let (c, _) = Mis::build(&g, 43);
         assert_ne!(a.prio, c.prio, "different seed, different order");
+    }
+
+    #[test]
+    fn only_decisions_announce_across_chips() {
+        let g = Graph::from_edges(3, &[(0, 1, 1), (1, 2, 1)], false);
+        let (mis, _) = Mis::build(&g, 1);
+        assert!(mis.announces(0, ATTR_IN));
+        assert!(mis.announces(0, ATTR_OUT));
+        assert!(!mis.announces(0, 5), "counter updates stay local");
     }
 
     #[test]

@@ -167,6 +167,13 @@ impl VertexProgram for AStar {
         self.bound
     }
 
+    fn announces(&self, vid: u32, attr: u32) -> bool {
+        // the ISA's goal-directed guard: re-scatter only while g + h ≤ B.
+        // Monotone in g, so the settled (smallest) value passes whenever
+        // any intermediate value did.
+        attr.saturating_add(self.h[vid as usize]) <= self.bound
+    }
+
     fn single_source(&self) -> bool {
         true
     }
@@ -246,6 +253,24 @@ mod tests {
             p.run.sim.packets_delivered,
             sssp.sim.packets_delivered
         );
+    }
+
+    #[test]
+    fn announce_guard_matches_the_isa_bound() {
+        let g = generate::road_network(64, 146, 166, 13);
+        let vp = AStar::new(&g, 3, 60, 4);
+        let b = vp.route_budget();
+        for v in 0..64u32 {
+            let h = vp.heuristic(v);
+            // the announce rule is exactly the ISA's g + h ≤ B scatter
+            // guard on the settled distance
+            if h <= b {
+                assert!(vp.announces(v, b - h), "g + h == B must announce");
+            }
+            if b < u32::MAX {
+                assert!(!vp.announces(v, (b - h.min(b)) + 1), "g + h > B must not");
+            }
+        }
     }
 
     #[test]

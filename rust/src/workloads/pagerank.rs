@@ -56,6 +56,12 @@ impl VertexProgram for PageRankRound {
         Some(queued.wrapping_add(incoming))
     }
 
+    fn announces(&self, _vid: u32, _attr: u32) -> bool {
+        // receivers accumulate and never re-scatter (PROG_PAGERANK has no
+        // scatter path): only the dense seed crosses chip boundaries
+        false
+    }
+
     fn single_source(&self) -> bool {
         false
     }
@@ -80,6 +86,30 @@ pub struct PageRankRun {
     pub activity: ActivityCounts,
 }
 
+/// The host-side round loop shared by every fabric backend: applies the
+/// inter-round recurrence around an arbitrary per-round runner (the
+/// single-chip instance in [`run_rounds`], the K-chip lockstep machine in
+/// [`crate::sim::multichip::run_pagerank_rounds`]) — one copy of the
+/// recurrence, so the backends cannot drift apart.
+pub fn run_rounds_with<F>(g: &Graph, iters: usize, mut round: F) -> Result<PageRankRun, String>
+where
+    F: FnMut(&PageRankRound) -> Result<crate::metrics::RunResult, String>,
+{
+    let mut ranks = reference::pagerank_init(g.num_vertices());
+    let mut cycles = 0u64;
+    let mut delivered = 0u64;
+    let mut activity = ActivityCounts::default();
+    for _ in 0..iters {
+        let vp = PageRankRound { contribs: reference::pagerank_contribs(g, &ranks) };
+        let r = round(&vp)?;
+        cycles += r.cycles;
+        delivered += r.sim.packets_delivered;
+        activity.add(&r.sim.activity);
+        ranks = reference::pagerank_next(g, &ranks, &vp.contribs, &r.attrs);
+    }
+    Ok(PageRankRun { ranks, rounds: iters, cycles, delivered, activity })
+}
+
 /// Drive `iters` PageRank rounds on the compiled fabric. `g` must be the
 /// exact graph `c` was compiled from. The result matches
 /// [`reference::pagerank`]`(g, iters)` bit-for-bit.
@@ -89,22 +119,10 @@ pub fn run_rounds(
     iters: usize,
     opts: &SimOptions,
 ) -> Result<PageRankRun, String> {
-    let mut ranks = reference::pagerank_init(g.num_vertices());
-    let mut cycles = 0u64;
-    let mut delivered = 0u64;
-    let mut activity = ActivityCounts::default();
     // one machine instance serves every round (DESIGN.md §6): the image
     // is fixed, only the per-round program (contributions) changes
     let mut inst = flip::SimInstance::new(c);
-    for _ in 0..iters {
-        let vp = PageRankRound { contribs: reference::pagerank_contribs(g, &ranks) };
-        let r = inst.run_program(c, &vp, 0, opts)?;
-        cycles += r.cycles;
-        delivered += r.sim.packets_delivered;
-        activity.add(&r.sim.activity);
-        ranks = reference::pagerank_next(g, &ranks, &vp.contribs, &r.attrs);
-    }
-    Ok(PageRankRun { ranks, rounds: iters, cycles, delivered, activity })
+    run_rounds_with(g, iters, |vp| inst.run_program(c, vp, 0, opts))
 }
 
 #[cfg(test)]
@@ -113,6 +131,14 @@ mod tests {
     use crate::compiler::{compile, CompileOpts};
     use crate::config::ArchConfig;
     use crate::graph::generate;
+
+    #[test]
+    fn pagerank_never_announces_across_chips() {
+        let vp = PageRankRound { contribs: vec![1, 2, 3] };
+        assert!(!vp.announces(0, 7), "accumulators must not re-scatter");
+        assert!(!vp.single_source());
+        assert!(vp.seeds(1), "every vertex ships its seed contribution");
+    }
 
     #[test]
     fn one_simulated_round_equals_round_oracle() {

@@ -88,6 +88,20 @@ pub trait VertexProgram: Sync {
         true
     }
 
+    /// Whether a vertex whose attribute *settled* at `attr` after
+    /// changing during a run segment propagates the new value onward —
+    /// the program ISA's scatter decision evaluated on the settled value.
+    /// The multi-chip layer ([`crate::sim::multichip`]) uses this to
+    /// decide which boundary vertices announce across cut arcs after a
+    /// lockstep superstep; it must match the ISA exactly or sharded runs
+    /// diverge from the single-chip fabric. Default: every change
+    /// propagates (min-plus relaxation always re-scatters an
+    /// improvement). PageRank never re-scatters, A* applies its
+    /// `g + h ≤ B` guard, MIS announces decisions only.
+    fn announces(&self, _vid: u32, _attr: u32) -> bool {
+        true
+    }
+
     /// CPU oracle: the exact attribute vector the fabric must produce for
     /// this program on `view` (the graph as compiled) from `source`
     /// (ignored by dense-seeded programs).

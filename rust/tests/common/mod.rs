@@ -1,0 +1,71 @@
+//! Shared integration-test helpers: the random-graph builder and the
+//! six-workload program factory used by both the sharding battery
+//! (`tests/sharded.rs`) and the fuzz suite (`tests/fuzz.rs`).
+//!
+//! Everything is parameterized over a `draw(n) -> uniform in [0, n)`
+//! closure, so each suite keeps its own independent RNG (xoshiro for the
+//! property battery, xorshift64* for the fuzzer) while the graph/program
+//! construction logic exists exactly once — adding a seventh workload
+//! here extends both suites' coverage at the same time.
+#![allow(dead_code)] // each test bin compiles its own copy
+
+use flip::graph::{reference, Graph};
+use flip::workloads::program::VertexProgram;
+use flip::workloads::{mis, navigation, pagerank, view_for, Workload};
+
+/// One workload case: (program, compiled view, source).
+pub type ProgramCase = (Box<dyn VertexProgram>, Graph, u32);
+
+/// Uniform-draw closure: `draw(n)` must return a value in `[0, n)`.
+pub type Draw<'a> = &'a mut dyn FnMut(u64) -> u64;
+
+/// Random connected weighted undirected graph with |V| in [lo, hi]: a
+/// random spanning tree (connectivity, so A*/ALT landmarks apply) plus
+/// up to 2·|V| extra edges.
+pub fn random_graph(draw: Draw<'_>, lo: usize, hi: usize) -> Graph {
+    let n = lo + draw((hi - lo + 1) as u64) as usize;
+    let extra = draw(2 * n as u64) as usize;
+    let mut edges = Vec::with_capacity(n - 1 + extra);
+    for v in 1..n as u32 {
+        let p = draw(v as u64) as u32;
+        edges.push((p, v, 1 + draw(9) as u32));
+    }
+    for _ in 0..extra {
+        let u = draw(n as u64) as u32;
+        let v = draw(n as u64) as u32;
+        if u != v {
+            edges.push((u, v, 1 + draw(9) as u32));
+        }
+    }
+    Graph::from_edges(n, &edges, false)
+}
+
+/// Build workload case `which % 6` for `g`: the paper trio, then
+/// PageRank round / A* / MIS. Returns (program, compiled view, source).
+pub fn program_case(which: u64, g: &Graph, draw: Draw<'_>) -> ProgramCase {
+    let n = g.num_vertices() as u64;
+    let src = draw(n) as u32;
+    match which % 6 {
+        0 => (Workload::Bfs.builtin_program(), g.clone(), src),
+        1 => (Workload::Sssp.builtin_program(), g.clone(), src),
+        2 => (Workload::Wcc.builtin_program(), view_for(Workload::Wcc, g), src),
+        3 => {
+            let contribs =
+                reference::pagerank_contribs(g, &reference::pagerank_init(g.num_vertices()));
+            (Box::new(pagerank::PageRankRound { contribs }), g.clone(), 0)
+        }
+        4 => {
+            let tgt = draw(n) as u32;
+            (Box::new(navigation::AStar::new(g, src, tgt, 3)), g.clone(), src)
+        }
+        _ => {
+            let (m, view) = mis::Mis::build(g, draw(u64::MAX));
+            (Box::new(m), view, 0)
+        }
+    }
+}
+
+/// All six workload programs for one (undirected) graph.
+pub fn six_programs(g: &Graph, draw: Draw<'_>) -> Vec<ProgramCase> {
+    (0..6).map(|which| program_case(which, g, &mut *draw)).collect()
+}

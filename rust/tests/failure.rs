@@ -1,0 +1,127 @@
+//! Failure-path coverage: aborts surface as data (never panics), the
+//! engine stays serviceable afterwards, and `Delta` edge cases behave —
+//! empty deltas are no-ops, duplicate reweights are last-wins, unknown
+//! arcs are rejected atomically.
+
+use flip::config::ArchConfig;
+use flip::experiments::harness::{CompiledPair, ShardedPair};
+use flip::graph::{generate, reference, Delta};
+use flip::service::{Engine, Job};
+use flip::sim::flip::SimOptions;
+use flip::workloads::Workload;
+
+fn tiny_opts() -> SimOptions {
+    SimOptions { max_cycles: 1, ..Default::default() }
+}
+
+#[test]
+fn sharded_watchdog_abort_is_a_query_error_and_engine_recovers() {
+    let g = generate::road_network(64, 146, 166, 3);
+    let cfg = ArchConfig::default();
+    let spair = ShardedPair::build(&g, 2, &cfg, 3);
+    let mut engine = Engine::new_sharded(&spair).with_workers(2);
+    // batch 1: impossible cycle budget — every query aborts inside a
+    // shard and must come back as a QueryError value
+    engine.set_opts(tiny_opts());
+    let jobs = [Job::Workload(Workload::Bfs, 0), Job::Workload(Workload::Sssp, 5)];
+    let rep = engine.serve(&jobs);
+    assert!(rep.results.iter().all(|r| r.is_err()), "aborts must surface as errors");
+    assert!(rep.first_error().unwrap().msg.contains("max_cycles"));
+    // batch 2: same engine, sane budget — the worker machines hard-reset
+    // and serve exact results
+    engine.set_opts(SimOptions::default());
+    let rep = engine.serve(&jobs);
+    for (r, (w, src)) in rep.results.iter().zip([(Workload::Bfs, 0u32), (Workload::Sssp, 5)]) {
+        let q = r.as_ref().unwrap_or_else(|e| panic!("{} still failing: {e}", w.name()));
+        let want = match w {
+            Workload::Bfs => reference::bfs_levels(&g, src),
+            _ => reference::dijkstra(&g, src),
+        };
+        assert_eq!(q.run.attrs, want, "{} after recovery", w.name());
+    }
+}
+
+#[test]
+fn single_chip_abort_also_recovers_through_the_engine() {
+    let g = generate::road_network(48, 100, 120, 5);
+    let pair = CompiledPair::build(&g, &ArchConfig::default(), 5);
+    let mut engine = Engine::new(&pair).with_workers(1);
+    engine.set_opts(tiny_opts());
+    let rep = engine.serve(&[Job::Workload(Workload::Bfs, 0)]);
+    assert!(rep.results[0].is_err());
+    engine.set_opts(SimOptions::default());
+    let rep = engine.serve(&[Job::Workload(Workload::Bfs, 0)]);
+    assert_eq!(rep.results[0].as_ref().unwrap().run.attrs, reference::bfs_levels(&g, 0));
+}
+
+#[test]
+fn engine_batch_where_every_job_fails_reports_cleanly() {
+    let g = generate::road_network(32, 70, 80, 7);
+    let pair = CompiledPair::build(&g, &ArchConfig::default(), 7);
+    let mut engine = Engine::new(&pair).with_workers(2);
+    let jobs = [
+        Job::Workload(Workload::Bfs, 1_000),          // out of range
+        Job::Workload(Workload::PageRank, 0),         // not servable
+        Job::Workload(Workload::Sssp, 9_999),         // out of range
+        Job::Navigate { source: 0, target: 40_000 },  // out of range
+    ];
+    let rep = engine.serve(&jobs);
+    assert_eq!(rep.results.len(), jobs.len());
+    assert!(rep.results.iter().all(|r| r.is_err()), "every job must fail as data");
+    assert_eq!(rep.sim_cycles, 0, "no successful query, no simulated cycles");
+    assert!(rep.queries_per_s.is_finite());
+    // the engine still works afterwards
+    let ok = engine.serve(&[Job::Workload(Workload::Bfs, 0)]);
+    assert!(ok.results[0].is_ok());
+}
+
+#[test]
+fn empty_delta_is_a_no_op_everywhere() {
+    let g = generate::road_network(48, 100, 120, 9);
+    let mut pair = CompiledPair::build(&g, &ArchConfig::default(), 9);
+    let before = flip::experiments::harness::run_flip(&pair, Workload::Sssp, 0);
+    pair.apply_attr_updates(&Delta::new()).unwrap();
+    let after = flip::experiments::harness::run_flip(&pair, Workload::Sssp, 0);
+    assert_eq!(before.cycles, after.cycles);
+    assert_eq!(before.attrs, after.attrs);
+    assert_eq!(before.sim, after.sim);
+}
+
+#[test]
+fn duplicate_reweight_is_last_wins_in_graph_and_tables() {
+    let g = generate::road_network(48, 100, 120, 11);
+    let (u, v, _) = g.arcs().next().expect("graph has arcs");
+    // the same edge named twice: the second write must win in both the
+    // host graph and the mapped Intra-Tables
+    let delta = Delta::from_edges(&g, &[(u, v, 3), (u, v, 17)]);
+    let mut pair = CompiledPair::build(&g, &ArchConfig::default(), 11);
+    pair.apply_attr_updates(&delta).unwrap();
+    assert!(pair.graph.neighbors(u).any(|e| e == (v, 17)), "host graph last-wins");
+    let mut g2 = g.clone();
+    g2.apply_delta(&delta).unwrap();
+    let r = flip::experiments::harness::run_flip(&pair, Workload::Sssp, 0);
+    assert_eq!(r.attrs, reference::dijkstra(&g2, 0), "tables agree with last-wins oracle");
+}
+
+#[test]
+fn unknown_arc_in_a_delta_is_rejected_atomically() {
+    let g = generate::road_network(32, 70, 80, 13);
+    let mut pair = CompiledPair::build(&g, &ArchConfig::default(), 13);
+    let (u, v, w0) = g.arcs().next().unwrap();
+    let missing = (0..32u32)
+        .flat_map(|a| (0..32u32).map(move |b| (a, b)))
+        .find(|&(a, b)| a != b && !g.neighbors(a).any(|(t, _)| t == b))
+        .expect("sparse graph has a missing arc");
+    let mut delta = Delta::new();
+    delta.reweight(&g, u, v, 999); // valid change...
+    delta.reweight(&g, missing.0, missing.1, 1); // ...then an invalid one
+    let err = pair.apply_attr_updates(&delta).unwrap_err();
+    assert!(err.contains("structure"), "{err}");
+    // atomic: the valid change must NOT have been applied
+    assert!(
+        pair.graph.neighbors(u).any(|e| e == (v, w0)),
+        "graph must be untouched after a rejected delta"
+    );
+    let r = flip::experiments::harness::run_flip(&pair, Workload::Sssp, 0);
+    assert_eq!(r.attrs, reference::dijkstra(&g, 0), "tables untouched too");
+}

@@ -1,0 +1,249 @@
+//! Deterministic, dependency-free fuzz suite: an in-crate xorshift
+//! generator drives random graphs, `Delta` batches and `Job` mixes
+//! through the system's differentials —
+//!
+//! * sharded (K ∈ {1, 2, 4}) vs single-chip event core vs CPU oracle,
+//! * event core vs naive reference stepper (cycles, attrs, metrics),
+//! * weight-delta patching vs full recompilation,
+//! * engine batches vs sequential runs.
+//!
+//! Every case derives from one 64-bit seed. On a mismatch the panic
+//! names that seed; re-run just it with
+//! `FLIP_FUZZ_SEED=0x<seed> cargo test -q --test fuzz` (one-line repro:
+//! the env var narrows every suite to exactly that seed).
+
+mod common;
+
+use flip::compiler::{compile, CompileOpts};
+use flip::config::ArchConfig;
+use flip::graph::{reference, Delta, Graph};
+use flip::sim::flip as flipsim;
+use flip::sim::flip::SimOptions;
+use flip::sim::multichip::{self, ShardedMachine};
+use flip::sim::naive;
+use flip::workloads::program::VertexProgram;
+use flip::workloads::Workload;
+
+/// xorshift64* — tiny, deterministic, and independent of the crate's
+/// xoshiro [`flip::util::Rng`] so fuzz inputs cannot covary with any
+/// in-crate randomness.
+struct XorShift {
+    s: u64,
+}
+
+impl XorShift {
+    fn new(seed: u64) -> XorShift {
+        // avoid the all-zero fixed point
+        XorShift { s: seed | 1 }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.s;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.s = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    fn chance(&mut self, p_percent: u64) -> bool {
+        self.below(100) < p_percent
+    }
+}
+
+/// The per-suite seed list: `cases` seeds derived from `salt`, or just
+/// the user's `FLIP_FUZZ_SEED` when set (the one-line repro path).
+fn seeds(salt: u64, cases: usize) -> Vec<u64> {
+    if let Ok(s) = std::env::var("FLIP_FUZZ_SEED") {
+        let s = s.trim();
+        let parsed = match s.strip_prefix("0x") {
+            Some(h) => u64::from_str_radix(h, 16),
+            None => s.parse::<u64>(),
+        };
+        return vec![parsed.unwrap_or_else(|_| panic!("bad FLIP_FUZZ_SEED `{s}`"))];
+    }
+    let mut x = XorShift::new(0xF1_1F ^ salt);
+    (0..cases).map(|_| x.next_u64()).collect()
+}
+
+/// Run one fuzz case, panicking with the repro seed on failure.
+fn drive(name: &str, salt: u64, cases: usize, f: impl Fn(&mut XorShift) -> Result<(), String>) {
+    for seed in seeds(salt, cases) {
+        let mut x = XorShift::new(seed);
+        if let Err(msg) = f(&mut x) {
+            panic!(
+                "fuzz `{name}` failed: {msg}\n  one-line repro: \
+                 FLIP_FUZZ_SEED={seed:#x} cargo test -q --test fuzz {name}"
+            );
+        }
+    }
+}
+
+/// Random connected undirected weighted graph, |V| in [lo, hi] (shared
+/// builder, drawing from this suite's xorshift stream).
+fn fuzz_graph(x: &mut XorShift, lo: usize, hi: usize) -> Graph {
+    common::random_graph(&mut |n| x.below(n), lo, hi)
+}
+
+/// One of the six workload programs, with its compiled view and source.
+fn fuzz_program(x: &mut XorShift, g: &Graph) -> common::ProgramCase {
+    let which = x.below(6);
+    common::program_case(which, g, &mut |n| x.below(n))
+}
+
+/// Random weight-only delta over existing edges (may name the same edge
+/// twice — last write must win).
+fn fuzz_delta(x: &mut XorShift, g: &Graph) -> Delta {
+    let undirected_edges: Vec<(u32, u32)> = g
+        .arcs()
+        .filter(|&(u, v, _)| g.is_directed() || u < v)
+        .map(|(u, v, _)| (u, v))
+        .collect();
+    let mut changes = Vec::new();
+    for &(u, v) in &undirected_edges {
+        if x.chance(35) {
+            changes.push((u, v, 1 + x.below(19) as u32));
+            if x.chance(20) {
+                // duplicate: exercises last-wins
+                changes.push((u, v, 1 + x.below(19) as u32));
+            }
+        }
+    }
+    Delta::from_edges(g, &changes)
+}
+
+#[test]
+fn fuzz_sharded_vs_single_vs_oracle() {
+    drive("fuzz_sharded_vs_single_vs_oracle", 0x51, 8, |x| {
+        let g = fuzz_graph(x, 10, 64);
+        let (vp, view, src) = fuzz_program(x, &g);
+        let seed = x.next_u64();
+        let cfg = ArchConfig::default();
+        let c = compile(&view, &cfg, &CompileOpts { seed, ..Default::default() });
+        let single = flipsim::run_program(&c, vp.as_ref(), src, &SimOptions::default())
+            .map_err(|e| format!("single ({}): {e}", vp.name()))?;
+        let want = vp.reference(&view, src);
+        if single.attrs != want {
+            return Err(format!("{}: single-chip vs oracle", vp.name()));
+        }
+        let k = [1usize, 2, 4][x.below(3) as usize];
+        let m = ShardedMachine::build(&view, k, &cfg, seed);
+        let mut insts = m.new_instances();
+        let r = multichip::run_program(&m, &mut insts, vp.as_ref(), src, &SimOptions::default())
+            .map_err(|e| format!("sharded K={k} ({}): {e}", vp.name()))?;
+        if r.result.attrs != want {
+            return Err(format!("{} K={k}: sharded vs oracle", vp.name()));
+        }
+        if k == 1 && (r.result.cycles != single.cycles || r.result.sim != single.sim) {
+            return Err(format!("{} K=1: not metric-identical", vp.name()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fuzz_event_core_vs_naive_stepper() {
+    drive("fuzz_event_core_vs_naive_stepper", 0xE7, 8, |x| {
+        let g = fuzz_graph(x, 10, 72);
+        let (vp, view, src) = fuzz_program(x, &g);
+        let seed = x.next_u64();
+        let cfg = ArchConfig::default();
+        let c = compile(&view, &cfg, &CompileOpts { seed, ..Default::default() });
+        let opts = SimOptions { trace_parallelism: x.chance(30), ..Default::default() };
+        let fast = flipsim::run_program(&c, vp.as_ref(), src, &opts)
+            .map_err(|e| format!("event ({}): {e}", vp.name()))?;
+        let slow = naive::run_program(&c, vp.as_ref(), src, &opts)
+            .map_err(|e| format!("naive ({}): {e}", vp.name()))?;
+        if fast.cycles != slow.cycles {
+            return Err(format!("{}: cycles {} != {}", vp.name(), fast.cycles, slow.cycles));
+        }
+        if fast.attrs != slow.attrs {
+            return Err(format!("{}: attrs diverge", vp.name()));
+        }
+        if fast.sim != slow.sim {
+            return Err(format!("{}: metrics diverge", vp.name()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fuzz_delta_patch_vs_recompile() {
+    drive("fuzz_delta_patch_vs_recompile", 0xD3, 6, |x| {
+        let g = fuzz_graph(x, 10, 80);
+        let seed = x.next_u64();
+        let cfg = ArchConfig::default();
+        let c0 = compile(&g, &cfg, &CompileOpts { seed, ..Default::default() });
+        let delta = fuzz_delta(x, &g);
+        let mut g2 = g.clone();
+        g2.apply_delta(&delta)?;
+        let mut patched = c0.clone();
+        patched.apply_attr_updates(&delta)?;
+        let full = compile(&g2, &cfg, &CompileOpts { seed, ..Default::default() });
+        let src = x.below(g.num_vertices() as u64) as u32;
+        let a = flipsim::run(&patched, Workload::Sssp, src, &SimOptions::default())
+            .map_err(|e| e.to_string())?;
+        let b = flipsim::run(&full, Workload::Sssp, src, &SimOptions::default())
+            .map_err(|e| e.to_string())?;
+        if a.cycles != b.cycles || a.attrs != b.attrs || a.sim != b.sim {
+            return Err("patched tables diverge from full recompile".into());
+        }
+        if a.attrs != reference::dijkstra(&g2, src) {
+            return Err("patched run diverges from oracle on new weights".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fuzz_engine_job_mixes() {
+    drive("fuzz_engine_job_mixes", 0x90, 4, |x| {
+        use flip::experiments::harness::{CompiledPair, ShardedPair};
+        use flip::service::{Engine, Job};
+        let g = fuzz_graph(x, 12, 48);
+        let seed = x.next_u64();
+        let cfg = ArchConfig::default();
+        let n = g.num_vertices() as u64;
+        let jobs: Vec<Job> = (0..x.range(3, 9))
+            .map(|_| {
+                let s = x.below(n) as u32;
+                let t = x.below(n) as u32;
+                match x.below(4) {
+                    0 => Job::Workload(Workload::Bfs, s),
+                    1 => Job::Workload(Workload::Sssp, s),
+                    2 => Job::Workload(Workload::Wcc, s),
+                    _ => Job::Navigate { source: s, target: t },
+                }
+            })
+            .collect();
+        let pair = CompiledPair::build(&g, &cfg, seed);
+        let spair = ShardedPair::build(&g, 1 + x.below(3) as usize, &cfg, seed);
+        let mut single = Engine::new(&pair).with_workers(2).with_navigation(3);
+        let mut sharded = Engine::new_sharded(&spair).with_workers(2).with_navigation(3);
+        let a = single.serve(&jobs);
+        let b = sharded.serve(&jobs);
+        for (i, (ra, rb)) in a.results.iter().zip(&b.results).enumerate() {
+            match (ra, rb) {
+                (Ok(qa), Ok(qb)) => {
+                    if qa.run.attrs != qb.run.attrs {
+                        return Err(format!("job {i} ({:?}): attrs diverge", jobs[i]));
+                    }
+                    if qa.distance != qb.distance {
+                        return Err(format!("job {i}: distances diverge"));
+                    }
+                }
+                (Err(_), Err(_)) => {}
+                _ => return Err(format!("job {i}: one engine failed, the other did not")),
+            }
+        }
+        Ok(())
+    });
+}

@@ -362,17 +362,21 @@ fn prop_placement_structurally_valid() {
         let cfg = ArchConfig::default();
         let c = compile(&g, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() });
         c.placement.validate(&g, &cfg)?;
-        // every arc has an inter entry and a matching intra entry
+        // every arc is covered by an inter entry to its destination
+        // (PE, slice) — entries are deduplicated per destination, since a
+        // packet delivers to every matching intra entry — and has its own
+        // matching intra entry
         for (u, v, wt) in g.arcs() {
             let su = c.placement.slots[u as usize];
             let sv = c.placement.slots[v as usize];
+            let (dx, dy) = su.pe.offset_to(sv.pe);
+            let slice = c.placement.slice_of(&cfg, v);
             let sc = c.slice_cfg(su.copy, su.pe.index(&cfg));
-            let e = sc.inter[su.reg as usize].iter().find(|e| e.dst_vid == v);
-            prop_assert!(e.is_some(), "missing inter entry {u}->{v}");
-            let e = e.unwrap();
             prop_assert!(
-                (e.dx, e.dy) == su.pe.offset_to(sv.pe),
-                "offset wrong for {u}->{v}"
+                sc.inter[su.reg as usize]
+                    .iter()
+                    .any(|e| (e.dx, e.dy, e.slice) == (dx, dy, slice)),
+                "missing inter entry {u}->{v}"
             );
             let dc = c.slice_cfg(sv.copy, sv.pe.index(&cfg));
             let (m, _) = dc.intra.lookup(u);

@@ -1,0 +1,183 @@
+//! The sharding differential battery (DESIGN.md §7): K-chip lockstep
+//! runs must converge to vertex attributes equal to the single-chip
+//! event core AND the CPU oracle, for all six workloads, for
+//! K ∈ {1, 2, 4} — with K = 1 additionally bit-identical in cycles and
+//! every metric to an unsharded run. Swapping shards and aborted runs
+//! are part of the battery.
+
+mod common;
+
+use flip::compiler::{compile, CompileOpts};
+use flip::config::ArchConfig;
+use flip::graph::{partition, reference, Graph};
+use flip::prop_assert;
+use flip::sim::flip as flipsim;
+use flip::sim::flip::SimOptions;
+use flip::sim::multichip::{self, ShardedMachine};
+use flip::util::{proptest::check, Rng};
+use flip::workloads::program::VertexProgram;
+use flip::workloads::Workload;
+
+/// Random connected weighted undirected graph (shared builder, drawing
+/// from this suite's xoshiro stream).
+fn random_graph(rng: &mut Rng, lo: usize, hi: usize) -> Graph {
+    common::random_graph(&mut |n| rng.below(n), lo, hi)
+}
+
+/// All six workload programs for one (undirected) graph.
+fn six_programs(rng: &mut Rng, g: &Graph) -> Vec<common::ProgramCase> {
+    common::six_programs(g, &mut |n| rng.below(n))
+}
+
+#[test]
+fn prop_sharded_equals_single_chip_and_oracle_all_six_workloads() {
+    // the headline invariant: K-shard attrs == single-chip event-core
+    // attrs == CPU oracle for every workload, K ∈ {1, 2, 4}; K = 1 is
+    // additionally metric-identical to the unsharded machine
+    check("sharded_all_six", 5, |rng| {
+        let g = random_graph(rng, 12, 72);
+        let seed = rng.next_u64();
+        let cfg = ArchConfig::default();
+        let opts = SimOptions::default();
+        for (vp, view, src) in six_programs(rng, &g) {
+            let c = compile(&view, &cfg, &CompileOpts { seed, ..Default::default() });
+            let single = flipsim::run_program(&c, vp.as_ref(), src, &opts)
+                .map_err(|e| format!("single-chip {}: {e}", vp.name()))?;
+            let want = vp.reference(&view, src);
+            prop_assert!(
+                single.attrs == want,
+                "{}: single-chip oracle mismatch (|V|={})",
+                vp.name(),
+                view.num_vertices()
+            );
+            for k in [1usize, 2, 4] {
+                let m = ShardedMachine::build(&view, k, &cfg, seed);
+                let mut insts = m.new_instances();
+                let r = multichip::run_program(&m, &mut insts, vp.as_ref(), src, &opts)
+                    .map_err(|e| format!("{} K={k}: {e}", vp.name()))?;
+                prop_assert!(
+                    r.result.attrs == want,
+                    "{} K={k}: sharded attrs diverge from oracle (|V|={})",
+                    vp.name(),
+                    view.num_vertices()
+                );
+                if k == 1 {
+                    prop_assert!(
+                        r.result.cycles == single.cycles,
+                        "{} K=1: cycles {} != {}",
+                        vp.name(),
+                        r.result.cycles,
+                        single.cycles
+                    );
+                    prop_assert!(
+                        r.result.edges_traversed == single.edges_traversed,
+                        "{} K=1: edges diverge",
+                        vp.name()
+                    );
+                    prop_assert!(
+                        r.result.sim == single.sim,
+                        "{} K=1: metrics diverge",
+                        vp.name()
+                    );
+                    prop_assert!(r.supersteps == 1, "K=1 must finish in one superstep");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_with_intra_shard_swapping_matches_oracle() {
+    // shards bigger than one array copy: the per-chip swap engine runs
+    // inside the lockstep loop
+    check("sharded_swapping", 3, |rng| {
+        let g = random_graph(rng, 540, 650);
+        let cfg = ArchConfig::default();
+        let m = ShardedMachine::build(&g, 2, &cfg, rng.next_u64());
+        prop_assert!(
+            m.shards.iter().any(|c| c.placement.num_copies >= 2),
+            "expected at least one multi-copy shard (|V|={})",
+            g.num_vertices()
+        );
+        let opts =
+            SimOptions { max_cycles: 1_000_000_000, watchdog: 5_000_000, ..Default::default() };
+        let r = multichip::run(&m, Workload::Bfs, 0, &opts).map_err(|e| e.to_string())?;
+        prop_assert!(r.result.sim.swaps > 0, "expected intra-shard data swapping");
+        prop_assert!(
+            r.result.attrs == reference::bfs_levels(&g, 0),
+            "BFS mismatch under sharding + swapping"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_engine_matches_single_engine() {
+    // the serving layer on top: one sharded engine and one single-chip
+    // engine answer the same mixed batch with identical attributes and
+    // navigation distances
+    check("sharded_engine", 4, |rng| {
+        use flip::experiments::harness::{CompiledPair, ShardedPair};
+        use flip::service::{Engine, Job};
+        let g = random_graph(rng, 16, 64);
+        let seed = rng.next_u64();
+        let cfg = ArchConfig::default();
+        let n = g.num_vertices() as u64;
+        let jobs: Vec<Job> = (0..6)
+            .map(|i| {
+                let s = rng.below(n) as u32;
+                let t = rng.below(n) as u32;
+                match i % 3 {
+                    0 => Job::Workload(Workload::Bfs, s),
+                    1 => Job::Workload(Workload::Wcc, s),
+                    _ => Job::Navigate { source: s, target: t },
+                }
+            })
+            .collect();
+        let pair = CompiledPair::build(&g, &cfg, seed);
+        let spair = ShardedPair::build(&g, 2, &cfg, seed);
+        let mut single = Engine::new(&pair).with_workers(2).with_navigation(3);
+        let mut sharded = Engine::new_sharded(&spair).with_workers(2).with_navigation(3);
+        let a = single.serve(&jobs);
+        let b = sharded.serve(&jobs);
+        for (i, (ra, rb)) in a.results.iter().zip(&b.results).enumerate() {
+            let (qa, qb) = match (ra, rb) {
+                (Ok(qa), Ok(qb)) => (qa, qb),
+                _ => return Err(format!("job {i}: unexpected failure {ra:?} / {rb:?}")),
+            };
+            prop_assert!(qa.run.attrs == qb.run.attrs, "job {i}: attrs diverge");
+            prop_assert!(qa.distance == qb.distance, "job {i}: distance diverges");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sharded_abort_surfaces_as_error_and_instances_recover() {
+    // part of the battery: a watchdog/max-cycles abort inside one shard
+    // is an Err value, and the same instances then serve correct results
+    let mut rng = Rng::new(0x5AAB);
+    let g = random_graph(&mut rng, 48, 64);
+    let cfg = ArchConfig::default();
+    let m = ShardedMachine::build(&g, 4, &cfg, 7);
+    let mut insts = m.new_instances();
+    let vp = Workload::Sssp.builtin_program();
+    let tiny = SimOptions { max_cycles: 1, ..Default::default() };
+    assert!(multichip::run_program(&m, &mut insts, vp.as_ref(), 0, &tiny).is_err());
+    let r = multichip::run_program(&m, &mut insts, vp.as_ref(), 0, &SimOptions::default())
+        .unwrap();
+    assert_eq!(r.result.attrs, reference::dijkstra(&g, 0));
+}
+
+#[test]
+fn partition_validates_on_random_graphs() {
+    check("partition_valid", 20, |rng| {
+        let g = random_graph(rng, 8, 120);
+        for k in [1usize, 2, 3, 4, 7] {
+            let p = partition::partition(&g, k);
+            p.validate(&g).map_err(|e| format!("k={k}: {e}"))?;
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,254 @@
+//! Golden snapshot tests: committed JSON fixtures of cycles, attributes
+//! and the integer `SimMetrics` counters for all six workloads on one
+//! small fixed graph, compared field-by-field so a regression shows a
+//! readable `key: fixture X, run Y` diff instead of a blob mismatch.
+//!
+//! The fixture lives at `tests/fixtures/golden_runs.json`. When it is
+//! absent the test SKIPs visibly (the repo's PJRT-golden pattern) —
+//! record it once with a working toolchain:
+//!
+//! ```text
+//! FLIP_SNAPSHOT_WRITE=1 cargo test -q --test snapshot
+//! ```
+//!
+//! The fixture format is a flat JSON object: `"<workload>.<field>"` →
+//! integer or integer array. Everything recorded is deterministic
+//! (fixed graph, fixed seeds, cycle-exact simulator), so exact equality
+//! is the right comparison.
+
+use flip::compiler::{compile, CompileOpts};
+use flip::config::ArchConfig;
+use flip::graph::{generate, reference, Graph};
+use flip::metrics::RunResult;
+use flip::sim::flip as flipsim;
+use flip::sim::flip::SimOptions;
+use flip::workloads::{mis, navigation, pagerank, view_for, Workload};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// A fixture value: one integer or an integer vector (attrs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Val {
+    Num(u64),
+    Arr(Vec<u64>),
+}
+
+impl Val {
+    fn render(&self) -> String {
+        match self {
+            Val::Num(n) => n.to_string(),
+            Val::Arr(v) => {
+                let items: Vec<String> = v.iter().map(|n| n.to_string()).collect();
+                format!("[{}]", items.join(", "))
+            }
+        }
+    }
+}
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/golden_runs.json")
+}
+
+// ---- minimal flat-JSON reader/writer (no serde offline) -----------------
+
+fn write_fixture(map: &BTreeMap<String, Val>, path: &std::path::Path) -> std::io::Result<()> {
+    let mut out = String::from("{\n");
+    let last = map.len().saturating_sub(1);
+    for (i, (k, v)) in map.iter().enumerate() {
+        out.push_str(&format!("  \"{k}\": {}", v.render()));
+        out.push_str(if i == last { "\n" } else { ",\n" });
+    }
+    out.push_str("}\n");
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, out)
+}
+
+/// Parse the flat `{"key": int | [int, ...]}` fixture subset. Panics on
+/// malformed input — a broken fixture should fail loudly, not skip.
+fn parse_fixture(text: &str) -> BTreeMap<String, Val> {
+    let mut map = BTreeMap::new();
+    let b: Vec<char> = text.chars().collect();
+    let mut i = 0usize;
+    let skip_ws = |b: &[char], i: &mut usize| {
+        while *i < b.len() && b[*i].is_whitespace() {
+            *i += 1;
+        }
+    };
+    let parse_num = |b: &[char], i: &mut usize| -> u64 {
+        let start = *i;
+        while *i < b.len() && b[*i].is_ascii_digit() {
+            *i += 1;
+        }
+        assert!(*i > start, "expected digit at offset {start}");
+        b[start..*i].iter().collect::<String>().parse().expect("integer fixture value")
+    };
+    skip_ws(&b, &mut i);
+    assert_eq!(b.get(i), Some(&'{'), "fixture must be a JSON object");
+    i += 1;
+    loop {
+        skip_ws(&b, &mut i);
+        match b.get(i) {
+            Some('}') => break,
+            Some(',') => {
+                i += 1;
+                continue;
+            }
+            Some('"') => {}
+            other => panic!("unexpected {other:?} at offset {i}"),
+        }
+        i += 1;
+        let kstart = i;
+        while b[i] != '"' {
+            i += 1;
+        }
+        let key: String = b[kstart..i].iter().collect();
+        i += 1;
+        skip_ws(&b, &mut i);
+        assert_eq!(b.get(i), Some(&':'), "expected `:` after key {key}");
+        i += 1;
+        skip_ws(&b, &mut i);
+        let val = if b[i] == '[' {
+            i += 1;
+            let mut items = Vec::new();
+            loop {
+                skip_ws(&b, &mut i);
+                match b[i] {
+                    ']' => {
+                        i += 1;
+                        break;
+                    }
+                    ',' => i += 1,
+                    _ => items.push(parse_num(&b, &mut i)),
+                }
+            }
+            Val::Arr(items)
+        } else {
+            Val::Num(parse_num(&b, &mut i))
+        };
+        map.insert(key, val);
+    }
+    map
+}
+
+// ---- the six recorded runs ----------------------------------------------
+
+/// The small fixed graph every snapshot runs on (24 vertices, undirected
+/// road network, fixed seed — small enough that a diff of `attrs` is
+/// readable).
+fn snapshot_graph() -> Graph {
+    generate::road_network(24, 50, 58, 0xF11F)
+}
+
+fn record(map: &mut BTreeMap<String, Val>, name: &str, r: &RunResult) {
+    map.insert(format!("{name}.cycles"), Val::Num(r.cycles));
+    map.insert(format!("{name}.edges_traversed"), Val::Num(r.edges_traversed));
+    map.insert(
+        format!("{name}.attrs"),
+        Val::Arr(r.attrs.iter().map(|&a| a as u64).collect()),
+    );
+    map.insert(format!("{name}.packets_delivered"), Val::Num(r.sim.packets_delivered));
+    map.insert(format!("{name}.packets_parked"), Val::Num(r.sim.packets_parked));
+    map.insert(format!("{name}.swaps"), Val::Num(r.sim.swaps));
+    map.insert(format!("{name}.swap_cycles"), Val::Num(r.sim.swap_cycles));
+    map.insert(
+        format!("{name}.peak_parallelism"),
+        Val::Num(r.sim.peak_parallelism as u64),
+    );
+    map.insert(format!("{name}.chip_packets"), Val::Num(r.sim.chip_packets));
+    map.insert(format!("{name}.chip_link_cycles"), Val::Num(r.sim.chip_link_cycles));
+    map.insert(format!("{name}.alu_ops"), Val::Num(r.sim.activity.alu_ops));
+    map.insert(format!("{name}.intra_lookups"), Val::Num(r.sim.activity.intra_lookups));
+    map.insert(format!("{name}.inter_walked"), Val::Num(r.sim.activity.inter_walked));
+    map.insert(format!("{name}.switch_grants"), Val::Num(r.sim.activity.switch_grants));
+    map.insert(format!("{name}.swap_words"), Val::Num(r.sim.activity.swap_words));
+}
+
+/// Run all six workloads on the fixed graph and record every field.
+fn current_snapshot() -> BTreeMap<String, Val> {
+    let g = snapshot_graph();
+    let cfg = ArchConfig::default();
+    let copts = CompileOpts::default();
+    let opts = SimOptions::default();
+    let mut map = BTreeMap::new();
+    for w in Workload::ALL {
+        let view = view_for(w, &g);
+        let c = compile(&view, &cfg, &copts);
+        let r = flipsim::run(&c, w, 0, &opts).expect("trio snapshot run");
+        record(&mut map, w.name(), &r);
+    }
+    let c = compile(&g, &cfg, &copts);
+    let pr = pagerank::PageRankRound {
+        contribs: reference::pagerank_contribs(&g, &reference::pagerank_init(g.num_vertices())),
+    };
+    let r = flipsim::run_program(&c, &pr, 0, &opts).expect("pagerank snapshot run");
+    record(&mut map, "PageRank", &r);
+    let astar = navigation::AStar::new(&g, 0, g.num_vertices() as u32 - 1, 3);
+    let r = flipsim::run_program(&c, &astar, 0, &opts).expect("astar snapshot run");
+    record(&mut map, "A*", &r);
+    let (m, mview) = mis::Mis::build(&g, 0xA11CE);
+    let cm = compile(&mview, &cfg, &copts);
+    let r = flipsim::run_program(&cm, &m, 0, &opts).expect("mis snapshot run");
+    record(&mut map, "MIS", &r);
+    map
+}
+
+#[test]
+fn golden_snapshot_all_six_workloads() {
+    let path = fixture_path();
+    let current = current_snapshot();
+    if std::env::var("FLIP_SNAPSHOT_WRITE").is_ok() {
+        write_fixture(&current, &path).expect("write fixture");
+        eprintln!("recorded snapshot fixture at {}", path.display());
+        return;
+    }
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        eprintln!(
+            "SKIP golden_snapshot_all_six_workloads: no fixture at {} — record one with \
+             FLIP_SNAPSHOT_WRITE=1 cargo test -q --test snapshot",
+            path.display()
+        );
+        return;
+    };
+    let fixture = parse_fixture(&text);
+    let mut diffs = Vec::new();
+    for (k, want) in &fixture {
+        match current.get(k) {
+            None => diffs.push(format!("{k}: in fixture but not produced by the run")),
+            Some(got) if got != want => {
+                diffs.push(format!("{k}: fixture {}, run {}", want.render(), got.render()))
+            }
+            _ => {}
+        }
+    }
+    for k in current.keys() {
+        if !fixture.contains_key(k) {
+            diffs.push(format!(
+                "{k}: produced by the run but missing from the fixture (re-record?)"
+            ));
+        }
+    }
+    assert!(
+        diffs.is_empty(),
+        "golden snapshot diverged ({} fields):\n  {}",
+        diffs.len(),
+        diffs.join("\n  ")
+    );
+}
+
+#[test]
+fn fixture_parser_roundtrips() {
+    // the reader/writer pair is itself tested so a future fixture is
+    // trusted infrastructure, not hope
+    let mut map = BTreeMap::new();
+    map.insert("BFS.cycles".to_string(), Val::Num(123));
+    map.insert("BFS.attrs".to_string(), Val::Arr(vec![0, 4294967295, 7]));
+    map.insert("MIS.swaps".to_string(), Val::Num(0));
+    let tmp = std::env::temp_dir().join(format!("flip_snapshot_test_{}.json", std::process::id()));
+    write_fixture(&map, &tmp).unwrap();
+    let text = std::fs::read_to_string(&tmp).unwrap();
+    let parsed = parse_fixture(&text);
+    std::fs::remove_file(&tmp).ok();
+    assert_eq!(parsed, map);
+}

@@ -29,7 +29,17 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 echo "== cargo build --examples =="
 cargo build --examples
 
-echo "== cargo test -q =="
-cargo test -q
+# Wall-clock cap on the test step: a hung lockstep/simulator loop must
+# fail the gate fast instead of eating the whole CI budget. Override with
+# TEST_TIMEOUT_SECS; falls back to an uncapped run where coreutils
+# `timeout` is unavailable.
+TEST_TIMEOUT_SECS="${TEST_TIMEOUT_SECS:-1500}"
+echo "== cargo test -q (wall-clock cap ${TEST_TIMEOUT_SECS}s) =="
+if command -v timeout >/dev/null 2>&1; then
+    timeout -k 30 "${TEST_TIMEOUT_SECS}" cargo test -q
+else
+    echo "warning: coreutils 'timeout' not found; running tests uncapped" >&2
+    cargo test -q
+fi
 
 echo "all checks passed"
