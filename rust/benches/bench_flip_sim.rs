@@ -5,7 +5,11 @@
 //! scheduler speedup is part of the recorded trajectory, and tracks the
 //! serve path: engine `queries_per_s` over all workers and the
 //! `reset_reuse_speedup` of a reused SimInstance vs per-query cold
-//! starts (DESIGN.md §6; expected ≥ 1.0×).
+//! starts (DESIGN.md §6; expected ≥ 1.0×). The dispatch-and-layout
+//! section records `dyn_vs_mono_speedup` (monomorphized event core vs
+//! its own dyn-shim instantiation, incl. the 16k Ext. LRN graph) and
+//! `table_scan_ns_per_delivery` (host ns per delivered packet — the CSR
+//! slab walk cost).
 //!
 //! Writes `BENCH_flip_sim.json` (override with `--json <path>`).
 
@@ -16,9 +20,57 @@ use flip::config::ArchConfig;
 use flip::experiments::harness::CompiledPair;
 use flip::graph::datasets::{self, Group};
 use flip::service::{Engine, Job};
-use flip::sim::flip::{run, SimInstance, SimOptions};
+use flip::sim::flip::{run, run_program, SimInstance, SimOptions};
 use flip::sim::naive;
-use flip::workloads::Workload;
+use flip::workloads::program::VertexProgram;
+use flip::workloads::{with_builtin, Workload};
+
+/// One dispatch-and-layout datapoint: time the monomorphized
+/// (`with_builtin`) run path against its dyn-shim instantiation on one
+/// (compiled graph, workload) config and record `dyn_vs_mono_speedup`,
+/// `table_scan_ns_per_delivery` — host wall-ns per *delivered packet* on
+/// the mono core, an end-to-end per-delivery figure whose dominant
+/// per-packet table cost is the CSR bucket walk (it also includes ALU,
+/// scatter and scheduler time) — and `pe_cycles_per_s`. One derivation,
+/// so the Lrn and 16k Ext. LRN JSON entries cannot drift apart.
+fn bench_dispatch_layout(
+    suite: &mut common::Suite,
+    cfg: &ArchConfig,
+    c: &flip::compiler::CompiledGraph,
+    w: Workload,
+    opts: &SimOptions,
+    mono_label: &str,
+    reps: (u32, u32),
+) {
+    let (warmup, iters) = reps;
+    let mut delivered = 0u64;
+    let mut cycles = 0u64;
+    let mono = common::bench(mono_label, warmup, iters, || {
+        let r = with_builtin(w, |p| run_program(c, p, 0, opts)).unwrap();
+        delivered = r.sim.packets_delivered;
+        cycles = r.cycles;
+    });
+    let vp: Box<dyn VertexProgram> = w.builtin_program();
+    // unique JSON entry name per config: the sink is diffed PR-over-PR
+    let shim_label = format!("{mono_label}, dyn-shim");
+    let shim = common::bench(&shim_label, warmup, iters, || {
+        run_program(c, vp.as_ref(), 0, opts).unwrap();
+    });
+    let dyn_vs_mono = shim.mean_ms / mono.mean_ms;
+    let scan_ns = mono.mean_ms * 1e6 / delivered.max(1) as f64;
+    let pe_cycles_per_s = cycles as f64 * cfg.num_pes() as f64 / (mono.mean_ms / 1e3);
+    println!(
+        "    -> dyn/mono {dyn_vs_mono:.2}x, {scan_ns:.0} ns per delivered packet \
+         ({delivered} deliveries), {:.1}M simulated PE-cycles/s",
+        pe_cycles_per_s / 1e6
+    );
+    suite
+        .add(mono)
+        .metric("dyn_vs_mono_speedup", dyn_vs_mono)
+        .metric("table_scan_ns_per_delivery", scan_ns)
+        .metric("pe_cycles_per_s", pe_cycles_per_s);
+    suite.add(shim);
+}
 
 fn main() {
     let cfg = ArchConfig::default();
@@ -90,6 +142,28 @@ fn main() {
     println!("    -> fast-forward speedup {speedup:.2}x over naive on the swapping path");
     suite.add(fast).metric("speedup_vs_naive", speedup);
     suite.add(slow);
+
+    common::section("dispatch & layout: monomorphized core vs dyn shim (Lrn BFS)");
+    let g = datasets::generate_one(Group::Lrn, 0, 42);
+    let c = compile(&g, &cfg, &CompileOpts::default());
+    bench_dispatch_layout(
+        &mut suite,
+        &cfg,
+        &c,
+        Workload::Bfs,
+        &SimOptions::default(),
+        "monomorphized run path (with_builtin)",
+        (2, 8),
+    );
+
+    common::section("dispatch & layout at scale: 16k Ext. LRN (SSSP, swapping)");
+    let g16 = datasets::generate_one(Group::ExtLrn, 0, 42);
+    let c16 = compile(&g16, &cfg, &CompileOpts::default());
+    let opts16 =
+        SimOptions { max_cycles: 2_000_000_000, watchdog: 5_000_000, ..Default::default() };
+    let label16 =
+        format!("monomorphized (|V|={}, {} copies)", g16.num_vertices(), c16.placement.num_copies);
+    bench_dispatch_layout(&mut suite, &cfg, &c16, Workload::Sssp, &opts16, &label16, (0, 2));
 
     common::section("query-serving engine (compile once, serve many)");
     let g = datasets::generate_one(Group::Lrn, 0, 42);

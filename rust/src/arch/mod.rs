@@ -6,7 +6,7 @@ pub mod packet;
 pub mod tables;
 
 pub use packet::Packet;
-pub use tables::{InterEntry, IntraTable, PeSliceConfig, SliceId};
+pub use tables::{InterEntry, IntraEntry, SliceId, TableSlabs};
 
 use crate::config::ArchConfig;
 

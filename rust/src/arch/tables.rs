@@ -1,5 +1,22 @@
-//! Inter-PE and Intra-PE routing tables (paper §3.2, Fig 7) and the per-PE
-//! slice configuration loaded on data swap.
+//! Inter-PE and Intra-PE routing tables (paper §3.2, Fig 7), stored
+//! host-side as chip-wide CSR slabs.
+//!
+//! The hardware structures are fixed-size per-PE tables: the Inter-Table
+//! keeps per-source linked lists (§3.2.1), the Intra-Table 8 hash lists
+//! (`src_id % 8`, §3.2.2). The simulator *charges* exactly that model —
+//! one cycle per list entry walked — but hosts the entries in two flat
+//! slabs with CSR offset rows instead of per-PE `Vec`-of-`Vec`s: a
+//! delivery resolves its bucket with two index loads and a short
+//! contiguous slice walk, no pointer chasing, no per-bucket heap
+//! allocations. Entry order within each bucket/list is the insertion
+//! order the old nested-`Vec` layout had, so modeled timing is
+//! bit-identical.
+//!
+//! The offset rows are private by design: every read goes through an
+//! accessor that derives the range on the spot, so no caller can cache a
+//! raw offset across a weight patch
+//! ([`crate::compiler::CompiledGraph::apply_attr_updates`]) and serve
+//! stale table data.
 
 /// Global slice identifier. The paper's Slice-ID register is 8-bit (on-chip
 /// graphs need ≤ #copies × #clusters ids); we widen to u16 so the Ext. LRN
@@ -7,12 +24,20 @@
 /// fits without loss of fidelity.
 pub type SliceId = u16;
 
+/// Hash-bucket count of the Intra-Table (`src_id % 8`, §3.2.2).
+pub const NUM_BUCKETS: usize = 8;
+
+#[inline]
+fn bucket_of(src_vid: u32) -> usize {
+    (src_vid as usize) % NUM_BUCKETS
+}
+
 /// One Inter-Table entry: where (one of) vertex `src_reg`'s out-edges goes.
 ///
 /// The hardware stores per-source linked lists with the four head entries at
-/// the headmost positions (§3.2.1); we store each list as a Vec in layout
-/// order (farthest-first after §4.3 sorting) — the simulator charges one
-/// cycle per entry walked, which is exactly the linked-list behaviour.
+/// the headmost positions (§3.2.1); we store each list in layout order
+/// (farthest-first after §4.3 sorting) — the simulator charges one cycle
+/// per entry walked, which is exactly the linked-list behaviour.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct InterEntry {
     /// X hop offset to the destination PE.
@@ -46,40 +71,213 @@ pub struct IntraEntry {
     pub weight: u32,
 }
 
-/// The Intra-Table: `NUM_BUCKETS` hash lists (hash = src_id % 8, §3.2.2).
-#[derive(Debug, Clone, Default)]
-pub struct IntraTable {
-    buckets: [Vec<IntraEntry>; IntraTable::NUM_BUCKETS],
+/// Build-time staging for [`TableSlabs`]: per-(config, bucket) and
+/// per-(config, register) insertion lists that [`SlabBuilder::freeze`]
+/// flattens into the CSR slabs exactly once, preserving insertion order.
+/// A *config* is one (array copy, PE) slice configuration, indexed
+/// `copy * num_pes + pe`.
+#[derive(Debug)]
+pub struct SlabBuilder {
+    num_cfgs: usize,
+    drf_size: usize,
+    vertices: Vec<u32>,
+    intra: Vec<Vec<IntraEntry>>,
+    inter: Vec<Vec<InterEntry>>,
 }
 
-impl IntraTable {
-    /// Hash-bucket count (`src_id % 8`, §3.2.2).
-    pub const NUM_BUCKETS: usize = 8;
+impl SlabBuilder {
+    /// Empty staging area for `num_cfgs` slice configurations with
+    /// `drf_size` DRF registers each (vertices preset to `u32::MAX` =
+    /// empty register).
+    pub fn new(num_cfgs: usize, drf_size: usize) -> SlabBuilder {
+        SlabBuilder {
+            num_cfgs,
+            drf_size,
+            vertices: vec![u32::MAX; num_cfgs * drf_size],
+            intra: (0..num_cfgs * NUM_BUCKETS).map(|_| Vec::new()).collect(),
+            inter: (0..num_cfgs * drf_size).map(|_| Vec::new()).collect(),
+        }
+    }
 
+    /// Assign DRF register `reg` of config `cfg_idx` to vertex `vid`.
+    pub fn set_vertex(&mut self, cfg_idx: usize, reg: u8, vid: u32) {
+        self.vertices[cfg_idx * self.drf_size + reg as usize] = vid;
+    }
+
+    /// Append one Intra entry to its hash bucket (insertion order is the
+    /// hardware list order).
+    pub fn push_intra(&mut self, cfg_idx: usize, e: IntraEntry) {
+        self.intra[cfg_idx * NUM_BUCKETS + bucket_of(e.src_vid)].push(e);
+    }
+
+    /// Append an Inter entry to register `reg`'s list unless an entry for
+    /// the same destination (PE offset, slice) already exists — delivery
+    /// hands a packet to *every* matching Intra entry, so a duplicate
+    /// would double-deliver (fatal for PageRank sums and MIS counting).
+    pub fn push_inter_dedup(&mut self, cfg_idx: usize, reg: u8, e: InterEntry) {
+        let list = &mut self.inter[cfg_idx * self.drf_size + reg as usize];
+        if !list.iter().any(|x| x.dx == e.dx && x.dy == e.dy && x.slice == e.slice) {
+            list.push(e);
+        }
+    }
+
+    /// Farthest-first layout (§4.3): scatter issues entries in list order,
+    /// so the longest route starts first. Stable sort keeps determinism.
+    pub fn sort_inter_farthest_first(&mut self) {
+        for list in &mut self.inter {
+            list.sort_by_key(|e| std::cmp::Reverse((e.hops(), e.dst_vid)));
+        }
+    }
+
+    /// Flatten the staged lists into the immutable CSR slabs.
+    pub fn freeze(self) -> TableSlabs {
+        let mut intra_entries = Vec::with_capacity(self.intra.iter().map(Vec::len).sum());
+        let mut intra_off = Vec::with_capacity(self.intra.len() + 1);
+        intra_off.push(0u32);
+        for list in &self.intra {
+            intra_entries.extend_from_slice(list);
+            intra_off.push(intra_entries.len() as u32);
+        }
+        let mut inter_entries = Vec::with_capacity(self.inter.iter().map(Vec::len).sum());
+        let mut inter_off = Vec::with_capacity(self.inter.len() + 1);
+        inter_off.push(0u32);
+        for list in &self.inter {
+            inter_entries.extend_from_slice(list);
+            inter_off.push(inter_entries.len() as u32);
+        }
+        let words = (0..self.num_cfgs)
+            .map(|i| {
+                let intra: usize =
+                    (0..NUM_BUCKETS).map(|b| self.intra[i * NUM_BUCKETS + b].len()).sum();
+                let inter: usize =
+                    (0..self.drf_size).map(|r| self.inter[i * self.drf_size + r].len()).sum();
+                (self.drf_size + intra + inter) as u32
+            })
+            .collect();
+        TableSlabs {
+            num_cfgs: self.num_cfgs,
+            drf_size: self.drf_size,
+            vertices: self.vertices,
+            intra_entries,
+            intra_off,
+            inter_entries,
+            inter_off,
+            words,
+        }
+    }
+}
+
+/// The chip-wide routing tables of one compiled graph in CSR form: one
+/// contiguous entry slab per table kind plus per-(config, bucket) /
+/// per-(config, register) offset rows, and the flat DRF contents. See the
+/// module docs for why the offsets are private.
+#[derive(Debug, Clone)]
+pub struct TableSlabs {
+    num_cfgs: usize,
+    drf_size: usize,
+    /// `vertices[cfg * drf_size + reg]`, `u32::MAX` = empty register.
+    vertices: Vec<u32>,
+    intra_entries: Vec<IntraEntry>,
+    /// CSR row pointers over (cfg, bucket): `num_cfgs * NUM_BUCKETS + 1`.
+    intra_off: Vec<u32>,
+    inter_entries: Vec<InterEntry>,
+    /// CSR row pointers over (cfg, reg): `num_cfgs * drf_size + 1`.
+    inter_off: Vec<u32>,
+    /// Per-config storage words (drives swap cost), precomputed.
+    words: Vec<u32>,
+}
+
+impl TableSlabs {
+    /// Number of slice configurations (array copies × PEs).
+    pub fn num_cfgs(&self) -> usize {
+        self.num_cfgs
+    }
+
+    /// DRF registers per configuration.
+    pub fn drf_size(&self) -> usize {
+        self.drf_size
+    }
+
+    /// The Intra-Table hash bucket `src_vid` falls into on config
+    /// `cfg_idx` — the delivery hot path: two index loads and a
+    /// contiguous slice.
     #[inline]
-    fn bucket_of(src_vid: u32) -> usize {
-        (src_vid as usize) % Self::NUM_BUCKETS
+    pub fn intra_bucket(&self, cfg_idx: usize, src_vid: u32) -> &[IntraEntry] {
+        let row = cfg_idx * NUM_BUCKETS + bucket_of(src_vid);
+        &self.intra_entries[self.intra_off[row] as usize..self.intra_off[row + 1] as usize]
     }
 
-    /// Insert one entry into its hash bucket.
-    pub fn insert(&mut self, e: IntraEntry) {
-        self.buckets[Self::bucket_of(e.src_vid)].push(e);
-    }
-
-    /// Zero-copy access to the hash bucket of `src_vid` (hot path: the
-    /// simulator filters matches inline without allocating).
+    /// The Inter-Table list of DRF register `reg` on config `cfg_idx`
+    /// (layout order — the scatter walk).
     #[inline]
-    pub fn bucket(&self, src_vid: u32) -> &[IntraEntry] {
-        &self.buckets[Self::bucket_of(src_vid)]
+    pub fn inter_list(&self, cfg_idx: usize, reg: u8) -> &[InterEntry] {
+        // an out-of-range register would alias the next config's row 0;
+        // keep the loud failure the old per-PE Vec indexing had
+        debug_assert!((reg as usize) < self.drf_size, "register {reg} out of DRF");
+        let row = cfg_idx * self.drf_size + reg as usize;
+        &self.inter_entries[self.inter_off[row] as usize..self.inter_off[row + 1] as usize]
     }
 
-    /// Patch the weight of the `(src_vid, dst_reg)` entry in place — the
-    /// dynamic-attribute path (paper §1.1): the table layout, bucket
-    /// order, and every other entry are untouched, so timing-relevant
-    /// structure is bit-identical to a freshly generated table with the
-    /// same weights. Returns false if no such entry exists.
-    pub fn update_weight(&mut self, src_vid: u32, dst_reg: u8, weight: u32) -> bool {
-        for e in &mut self.buckets[Self::bucket_of(src_vid)] {
+    /// Vertex id stored in DRF register `reg` of config `cfg_idx`
+    /// (`u32::MAX` = empty).
+    #[inline]
+    pub fn vertex(&self, cfg_idx: usize, reg: u8) -> u32 {
+        debug_assert!((reg as usize) < self.drf_size, "register {reg} out of DRF");
+        self.vertices[cfg_idx * self.drf_size + reg as usize]
+    }
+
+    /// The full DRF contents of config `cfg_idx`.
+    pub fn vertices_of(&self, cfg_idx: usize) -> &[u32] {
+        &self.vertices[cfg_idx * self.drf_size..(cfg_idx + 1) * self.drf_size]
+    }
+
+    /// DRF register of `vid` on config `cfg_idx`, if mapped there.
+    pub fn reg_of(&self, cfg_idx: usize, vid: u32) -> Option<u8> {
+        self.vertices_of(cfg_idx).iter().position(|&v| v == vid).map(|r| r as u8)
+    }
+
+    /// Storage words occupied by config `cfg_idx` (vertex attrs + inter
+    /// entries + intra entries); drives swap cost.
+    #[inline]
+    pub fn storage_words(&self, cfg_idx: usize) -> usize {
+        self.words[cfg_idx] as usize
+    }
+
+    /// Total Intra entries of config `cfg_idx` across all buckets.
+    pub fn num_intra_entries(&self, cfg_idx: usize) -> usize {
+        (self.intra_off[(cfg_idx + 1) * NUM_BUCKETS] - self.intra_off[cfg_idx * NUM_BUCKETS])
+            as usize
+    }
+
+    /// Look up all entries for `src_vid` on config `cfg_idx`. Returns
+    /// `(matches, cycles)` where `cycles` is the list positions walked
+    /// (hash head is O(1), then a sequential walk of the whole bucket
+    /// list — matching entries for the same source can sit anywhere in
+    /// it). Diagnostic/test helper; the simulator walks the bucket slice
+    /// inline.
+    pub fn intra_lookup(&self, cfg_idx: usize, src_vid: u32) -> (Vec<IntraEntry>, u64) {
+        let bucket = self.intra_bucket(cfg_idx, src_vid);
+        let matches: Vec<IntraEntry> =
+            bucket.iter().copied().filter(|e| e.src_vid == src_vid).collect();
+        (matches, bucket.len().max(1) as u64)
+    }
+
+    /// Patch the weight of the `(src_vid, dst_reg)` entry of config
+    /// `cfg_idx` in place — the dynamic-attribute path (paper §1.1): the
+    /// slab layout, bucket order, and every other entry are untouched, so
+    /// timing-relevant structure is bit-identical to freshly generated
+    /// tables with the same weights. Returns false if no such entry
+    /// exists.
+    pub(crate) fn update_weight(
+        &mut self,
+        cfg_idx: usize,
+        src_vid: u32,
+        dst_reg: u8,
+        weight: u32,
+    ) -> bool {
+        let row = cfg_idx * NUM_BUCKETS + bucket_of(src_vid);
+        let range = self.intra_off[row] as usize..self.intra_off[row + 1] as usize;
+        for e in &mut self.intra_entries[range] {
             if e.src_vid == src_vid && e.dst_reg == dst_reg {
                 e.weight = weight;
                 return true;
@@ -88,59 +286,31 @@ impl IntraTable {
         false
     }
 
-    /// Look up all entries for `src_vid`. Returns `(matches, cycles)` where
-    /// `cycles` is the list positions walked (hash head is O(1), then a
-    /// sequential walk of the whole bucket list — matching entries for the
-    /// same source can sit anywhere in it).
-    pub fn lookup(&self, src_vid: u32) -> (Vec<IntraEntry>, u64) {
-        let bucket = &self.buckets[Self::bucket_of(src_vid)];
-        let matches: Vec<IntraEntry> =
-            bucket.iter().copied().filter(|e| e.src_vid == src_vid).collect();
-        (matches, bucket.len().max(1) as u64)
-    }
-
-    /// Average bucket-list length (paper: < 2 for edge graphs).
-    pub fn avg_list_len(&self) -> f64 {
-        let nonempty: Vec<usize> =
-            self.buckets.iter().map(|b| b.len()).filter(|&l| l > 0).collect();
-        if nonempty.is_empty() {
-            0.0
-        } else {
-            nonempty.iter().sum::<usize>() as f64 / nonempty.len() as f64
+    /// Rewrite Intra weights by replaying the original insertion order:
+    /// `arcs` must yield `(cfg_idx, src_vid, dst_reg, weight)` in exactly
+    /// the order the entries were pushed at build time (the whole-graph
+    /// reweight path in [`crate::compiler::tablegen::update_edge_weights`]).
+    /// Entries past the replayed prefix of a bucket — ghost entries of a
+    /// sharded compile — keep their weights. O(|arcs|), no allocation
+    /// beyond the cursor row.
+    pub(crate) fn patch_weights_in_order(
+        &mut self,
+        arcs: impl Iterator<Item = (usize, u32, u8, u32)>,
+    ) {
+        let mut cursor: Vec<u32> = self.intra_off[..self.num_cfgs * NUM_BUCKETS].to_vec();
+        for (cfg_idx, src_vid, dst_reg, weight) in arcs {
+            let row = cfg_idx * NUM_BUCKETS + bucket_of(src_vid);
+            let i = cursor[row] as usize;
+            cursor[row] += 1;
+            debug_assert!(i < self.intra_off[row + 1] as usize, "reweight past bucket end");
+            let e = &mut self.intra_entries[i];
+            debug_assert_eq!(
+                (e.src_vid, e.dst_reg),
+                (src_vid, dst_reg),
+                "reweight order diverges from build order"
+            );
+            e.weight = weight;
         }
-    }
-
-    /// Total entries across all buckets.
-    pub fn num_entries(&self) -> usize {
-        self.buckets.iter().map(|b| b.len()).sum()
-    }
-}
-
-/// Everything a PE must hold for one slice: the vertices in its DRF, the
-/// Inter-Table lists (one per DRF register) and the Intra-Table. Loaded
-/// from SPM/off-chip when the slice is swapped in.
-#[derive(Debug, Clone, Default)]
-pub struct PeSliceConfig {
-    /// `vertices[reg]` = vertex id stored in DRF register `reg`.
-    pub vertices: Vec<u32>,
-    /// Inter-Table: per DRF register, out-edge entries in layout order.
-    pub inter: Vec<Vec<InterEntry>>,
-    /// Intra-Table for packets destined to this PE in this slice.
-    pub intra: IntraTable,
-}
-
-impl PeSliceConfig {
-    /// DRF register of `vid`, if mapped here.
-    pub fn reg_of(&self, vid: u32) -> Option<u8> {
-        self.vertices.iter().position(|&v| v == vid).map(|r| r as u8)
-    }
-
-    /// Storage words occupied by this slice config on one PE
-    /// (vertex attrs + inter entries + intra entries); drives swap cost.
-    pub fn storage_words(&self) -> usize {
-        self.vertices.len()
-            + self.inter.iter().map(|l| l.len()).sum::<usize>()
-            + self.intra.num_entries()
     }
 }
 
@@ -148,51 +318,81 @@ impl PeSliceConfig {
 mod tests {
     use super::*;
 
+    fn slab_with(entries: &[IntraEntry]) -> TableSlabs {
+        let mut b = SlabBuilder::new(1, 4);
+        for &e in entries {
+            b.push_intra(0, e);
+        }
+        b.freeze()
+    }
+
     #[test]
     fn intra_lookup_finds_all_matches() {
-        let mut t = IntraTable::default();
-        t.insert(IntraEntry { src_vid: 3, dst_reg: 0, weight: 5 });
-        t.insert(IntraEntry { src_vid: 11, dst_reg: 1, weight: 7 }); // same bucket (3 % 8 == 11 % 8)
-        t.insert(IntraEntry { src_vid: 3, dst_reg: 2, weight: 9 });
-        let (m, cycles) = t.lookup(3);
+        let t = slab_with(&[
+            IntraEntry { src_vid: 3, dst_reg: 0, weight: 5 },
+            IntraEntry { src_vid: 11, dst_reg: 1, weight: 7 }, // same bucket (3 % 8 == 11 % 8)
+            IntraEntry { src_vid: 3, dst_reg: 2, weight: 9 },
+        ]);
+        let (m, cycles) = t.intra_lookup(0, 3);
         assert_eq!(m.len(), 2);
         assert_eq!(cycles, 3); // walks whole bucket list
-        let (m11, _) = t.lookup(11);
+        let (m11, _) = t.intra_lookup(0, 11);
         assert_eq!(m11.len(), 1);
         assert_eq!(m11[0].dst_reg, 1);
+        // bucket order is insertion order (the hardware list order)
+        assert_eq!(t.intra_bucket(0, 3).len(), 3);
+        assert_eq!(t.intra_bucket(0, 3)[1].src_vid, 11);
     }
 
     #[test]
     fn intra_miss_costs_at_least_one_cycle() {
-        let t = IntraTable::default();
-        let (m, cycles) = t.lookup(42);
+        let t = slab_with(&[]);
+        let (m, cycles) = t.intra_lookup(0, 42);
         assert!(m.is_empty());
         assert_eq!(cycles, 1);
     }
 
     #[test]
-    fn avg_list_len_counts_nonempty_buckets() {
-        let mut t = IntraTable::default();
-        t.insert(IntraEntry { src_vid: 0, dst_reg: 0, weight: 1 });
-        t.insert(IntraEntry { src_vid: 8, dst_reg: 1, weight: 1 });
-        t.insert(IntraEntry { src_vid: 1, dst_reg: 0, weight: 1 });
-        assert_eq!(t.avg_list_len(), 1.5); // buckets: [2, 1]
+    fn slab_storage_words_and_drf_contents() {
+        let mut b = SlabBuilder::new(2, 2);
+        b.set_vertex(0, 0, 10);
+        b.set_vertex(0, 1, 20);
+        b.push_inter_dedup(0, 0, InterEntry { dx: 1, dy: 0, slice: 0, dst_vid: 20 });
+        b.push_intra(0, IntraEntry { src_vid: 10, dst_reg: 1, weight: 2 });
+        let t = b.freeze();
+        assert_eq!(t.reg_of(0, 20), Some(1));
+        assert_eq!(t.reg_of(0, 99), None);
+        assert_eq!(t.vertex(0, 0), 10);
+        assert_eq!(t.vertex(1, 0), u32::MAX, "other config untouched");
+        assert_eq!(t.storage_words(0), 2 + 1 + 1);
+        assert_eq!(t.storage_words(1), 2, "empty config still counts its DRF words");
+        assert_eq!(t.num_intra_entries(0), 1);
+        assert_eq!(t.num_intra_entries(1), 0);
     }
 
     #[test]
-    fn slice_config_storage() {
-        let mut cfg = PeSliceConfig {
-            vertices: vec![10, 20],
-            inter: vec![
-                vec![InterEntry { dx: 1, dy: 0, slice: 0, dst_vid: 20 }],
-                vec![],
-            ],
-            intra: IntraTable::default(),
-        };
-        cfg.intra.insert(IntraEntry { src_vid: 10, dst_reg: 1, weight: 2 });
-        assert_eq!(cfg.reg_of(20), Some(1));
-        assert_eq!(cfg.reg_of(99), None);
-        assert_eq!(cfg.storage_words(), 2 + 1 + 1);
+    fn inter_dedup_drops_same_destination() {
+        let mut b = SlabBuilder::new(1, 2);
+        let e = InterEntry { dx: 1, dy: 0, slice: 0, dst_vid: 5 };
+        b.push_inter_dedup(0, 0, e);
+        b.push_inter_dedup(0, 0, InterEntry { dst_vid: 6, ..e }); // same (dx, dy, slice)
+        b.push_inter_dedup(0, 0, InterEntry { dx: 2, ..e });
+        let t = b.freeze();
+        assert_eq!(t.inter_list(0, 0).len(), 2);
+        assert_eq!(t.inter_list(0, 1).len(), 0);
+    }
+
+    #[test]
+    fn update_weight_patches_in_place() {
+        let mut t = slab_with(&[
+            IntraEntry { src_vid: 3, dst_reg: 0, weight: 5 },
+            IntraEntry { src_vid: 3, dst_reg: 2, weight: 9 },
+        ]);
+        assert!(t.update_weight(0, 3, 2, 100));
+        assert!(!t.update_weight(0, 3, 7, 1), "missing entry reports false");
+        let (m, _) = t.intra_lookup(0, 3);
+        assert_eq!(m.iter().find(|e| e.dst_reg == 2).unwrap().weight, 100);
+        assert_eq!(m.iter().find(|e| e.dst_reg == 0).unwrap().weight, 5, "others untouched");
     }
 
     #[test]

@@ -16,7 +16,8 @@ pub mod optimize;
 pub mod place;
 pub mod tablegen;
 
-use crate::arch::{PeCoord, PeSliceConfig, SliceId};
+use crate::arch::tables::TableSlabs;
+use crate::arch::{InterEntry, IntraEntry, PeCoord, SliceId};
 use crate::config::ArchConfig;
 use crate::graph::Graph;
 use crate::util::Rng;
@@ -119,25 +120,95 @@ pub struct MappingStats {
     pub swaps_applied: usize,
 }
 
-/// The compiler's output: placement + per-(copy, PE) slice configurations.
+/// The compiler's output: placement + the chip-wide routing-table slabs.
+///
+/// The slabs are a private field on purpose (the slab-invalidation hazard
+/// class): every read goes through an accessor that derives the CSR range
+/// on the spot, so no caller can cache a raw offset/range across an
+/// [`CompiledGraph::apply_attr_updates`] patch and serve stale table
+/// data. Rust's borrow rules then guarantee any borrowed entry slice is
+/// dead before the next mutation.
 #[derive(Debug, Clone)]
 pub struct CompiledGraph {
     /// The architecture the graph was compiled for.
     pub cfg: ArchConfig,
     /// The vertex → slot mapping.
     pub placement: Placement,
-    /// `pe_slices[copy * num_pes + pe]` — the slice config loaded into
-    /// that PE when array-copy `copy` is resident.
-    pub pe_slices: Vec<PeSliceConfig>,
+    /// Chip-wide CSR table slabs; config `copy * num_pes + pe` is the
+    /// slice loaded into that PE when array-copy `copy` is resident.
+    tables: TableSlabs,
     /// Mapping-quality statistics (Table 8 inputs, Fig 13 timing).
     pub stats: MappingStats,
 }
 
 impl CompiledGraph {
-    /// Slice configuration of PE `pe_idx` when `copy` is resident.
+    /// Slab config index of PE `pe_idx` when `copy` is resident.
     #[inline]
-    pub fn slice_cfg(&self, copy: u16, pe_idx: usize) -> &PeSliceConfig {
-        &self.pe_slices[copy as usize * self.cfg.num_pes() + pe_idx]
+    fn cfg_idx(&self, copy: u16, pe_idx: usize) -> usize {
+        copy as usize * self.cfg.num_pes() + pe_idx
+    }
+
+    /// The Intra-Table hash bucket `src_vid` falls into on PE `pe_idx`
+    /// when `copy` is resident — the delivery hot path: two index loads
+    /// and a contiguous slice walk.
+    #[inline]
+    pub fn intra_bucket(&self, copy: u16, pe_idx: usize, src_vid: u32) -> &[IntraEntry] {
+        self.tables.intra_bucket(self.cfg_idx(copy, pe_idx), src_vid)
+    }
+
+    /// The Inter-Table list of DRF register `reg` on PE `pe_idx` when
+    /// `copy` is resident (layout order — the scatter walk).
+    #[inline]
+    pub fn inter_list(&self, copy: u16, pe_idx: usize, reg: u8) -> &[InterEntry] {
+        self.tables.inter_list(self.cfg_idx(copy, pe_idx), reg)
+    }
+
+    /// Vertex id in DRF register `reg` of PE `pe_idx` when `copy` is
+    /// resident (`u32::MAX` = empty register).
+    #[inline]
+    pub fn vertex_at(&self, copy: u16, pe_idx: usize, reg: u8) -> u32 {
+        self.tables.vertex(self.cfg_idx(copy, pe_idx), reg)
+    }
+
+    /// The full DRF contents of PE `pe_idx` when `copy` is resident.
+    pub fn drf_vertices(&self, copy: u16, pe_idx: usize) -> &[u32] {
+        self.tables.vertices_of(self.cfg_idx(copy, pe_idx))
+    }
+
+    /// DRF register of `vid` on PE `pe_idx` when `copy` is resident, if
+    /// mapped there.
+    pub fn reg_of(&self, copy: u16, pe_idx: usize, vid: u32) -> Option<u8> {
+        self.tables.reg_of(self.cfg_idx(copy, pe_idx), vid)
+    }
+
+    /// Storage words of PE `pe_idx`'s slice when `copy` is resident
+    /// (vertex attrs + inter entries + intra entries); drives swap cost.
+    #[inline]
+    pub fn storage_words(&self, copy: u16, pe_idx: usize) -> usize {
+        self.tables.storage_words(self.cfg_idx(copy, pe_idx))
+    }
+
+    /// Total Intra entries of PE `pe_idx`'s slice when `copy` is resident.
+    pub fn num_intra_entries(&self, copy: u16, pe_idx: usize) -> usize {
+        self.tables.num_intra_entries(self.cfg_idx(copy, pe_idx))
+    }
+
+    /// All Intra entries for `src_vid` on PE `pe_idx` when `copy` is
+    /// resident, plus the modeled walk cycles (diagnostics/tests; the
+    /// simulators walk [`CompiledGraph::intra_bucket`] inline).
+    pub fn intra_lookup(&self, copy: u16, pe_idx: usize, src_vid: u32) -> (Vec<IntraEntry>, u64) {
+        self.tables.intra_lookup(self.cfg_idx(copy, pe_idx), src_vid)
+    }
+
+    /// Number of slab configs (= copies × PEs).
+    pub fn num_pe_cfgs(&self) -> usize {
+        self.tables.num_cfgs()
+    }
+
+    /// Mutable slab access for the compiler-internal reweight paths
+    /// (never exposed publicly — see the struct docs).
+    pub(crate) fn tables_mut(&mut self) -> &mut TableSlabs {
+        &mut self.tables
     }
 
     /// Total slices = copies × clusters.
@@ -167,17 +238,14 @@ impl CompiledGraph {
     /// weight is written, so a change naming a missing arc is an error
     /// and the machine image is untouched.
     pub fn apply_attr_updates(&mut self, delta: &crate::graph::Delta) -> Result<(), String> {
-        let num_pes = self.cfg.num_pes();
         // validate pass: every change must name an existing table entry
         for &(u, v, _) in delta.arcs() {
             if v as usize >= self.placement.slots.len() {
                 return Err(format!("delta arc ({u},{v}): vertex out of range"));
             }
             let sv = self.placement.slots[v as usize];
-            let dst_idx = sv.copy as usize * num_pes + sv.pe.index(&self.cfg);
-            let hit = self.pe_slices[dst_idx]
-                .intra
-                .bucket(u)
+            let hit = self
+                .intra_bucket(sv.copy, sv.pe.index(&self.cfg), u)
                 .iter()
                 .any(|e| e.src_vid == u && e.dst_reg == sv.reg);
             if !hit {
@@ -190,8 +258,8 @@ impl CompiledGraph {
         // write pass (cannot fail after validation)
         for &(u, v, w) in delta.arcs() {
             let sv = self.placement.slots[v as usize];
-            let dst_idx = sv.copy as usize * num_pes + sv.pe.index(&self.cfg);
-            let hit = self.pe_slices[dst_idx].intra.update_weight(u, sv.reg, w);
+            let dst_idx = sv.copy as usize * self.cfg.num_pes() + sv.pe.index(&self.cfg);
+            let hit = self.tables.update_weight(dst_idx, u, sv.reg, w);
             debug_assert!(hit, "validated above");
         }
         Ok(())
@@ -266,28 +334,25 @@ pub fn compile_sharded(
     cfg: &ArchConfig,
     opts: &CompileOpts,
 ) -> CompiledGraph {
-    let mut c = compile(g, cfg, opts);
-    let num_pes = cfg.num_pes();
-    for gh in ghosts {
-        assert!(
-            (gh.dst_local as usize) < c.placement.slots.len(),
-            "ghost arc destination {} out of range",
-            gh.dst_local
-        );
-        assert!(gh.src_global < GHOST_BASE, "global id space exceeds GHOST_BASE");
-        let sv = c.placement.slots[gh.dst_local as usize];
-        let dst_idx = sv.copy as usize * num_pes + sv.pe.index(cfg);
-        c.pe_slices[dst_idx].intra.insert(crate::arch::tables::IntraEntry {
-            src_vid: GHOST_BASE + gh.src_global,
-            dst_reg: sv.reg,
-            weight: gh.weight,
-        });
-    }
-    c
+    // the ghost id/range invariants are asserted in tablegen::build_tables,
+    // next to the entry emission
+    compile_with_ghosts(g, ghosts, cfg, opts)
 }
 
 /// Compile a graph for a FLIP instance (Algorithm 1 end to end).
 pub fn compile(g: &Graph, cfg: &ArchConfig, opts: &CompileOpts) -> CompiledGraph {
+    compile_with_ghosts(g, &[], cfg, opts)
+}
+
+/// Shared compile pipeline: placement and local optimization see only the
+/// local graph; the ghost arcs (if any) are appended by table generation
+/// as extra Intra entries, after every local arc of their buckets.
+fn compile_with_ghosts(
+    g: &Graph,
+    ghosts: &[GhostArc],
+    cfg: &ArchConfig,
+    opts: &CompileOpts,
+) -> CompiledGraph {
     let t0 = std::time::Instant::now();
     let mut placement = place::initial_placement(g, cfg, opts);
     let place_seconds = t0.elapsed().as_secs_f64();
@@ -300,7 +365,7 @@ pub fn compile(g: &Graph, cfg: &ArchConfig, opts: &CompileOpts) -> CompiledGraph
     }
     let optimize_seconds = t1.elapsed().as_secs_f64();
 
-    let pe_slices = tablegen::build_tables(g, &placement, cfg, opts);
+    let tables = tablegen::build_tables(g, ghosts, &placement, cfg, opts);
     let stats = MappingStats {
         total_routing_length: placement.total_routing_length(g),
         avg_routing_length: placement.avg_routing_length(g),
@@ -311,7 +376,7 @@ pub fn compile(g: &Graph, cfg: &ArchConfig, opts: &CompileOpts) -> CompiledGraph
         swaps_applied: swaps,
     };
     debug_assert!(placement.validate(g, cfg).is_ok());
-    CompiledGraph { cfg: cfg.clone(), placement, pe_slices, stats }
+    CompiledGraph { cfg: cfg.clone(), placement, tables, stats }
 }
 
 #[cfg(test)]
@@ -326,7 +391,7 @@ mod tests {
         let c = compile(&g, &cfg, &CompileOpts::default());
         assert!(c.placement.validate(&g, &cfg).is_ok());
         assert!(c.fits_on_chip());
-        assert_eq!(c.pe_slices.len(), cfg.num_pes());
+        assert_eq!(c.num_pe_cfgs(), cfg.num_pes());
     }
 
     #[test]
@@ -357,16 +422,17 @@ mod tests {
         let plain = compile(&g, &cfg, &CompileOpts::default());
         let none = compile_sharded(&g, &[], &cfg, &CompileOpts::default());
         assert_eq!(plain.placement.slots, none.placement.slots, "empty ghosts = plain compile");
-        for (a, b) in plain.pe_slices.iter().zip(&none.pe_slices) {
-            assert_eq!(a.vertices, b.vertices);
-            assert_eq!(a.intra.num_entries(), b.intra.num_entries());
+        for copy in 0..plain.placement.num_copies as u16 {
+            for pe in 0..cfg.num_pes() {
+                assert_eq!(plain.drf_vertices(copy, pe), none.drf_vertices(copy, pe));
+                assert_eq!(plain.num_intra_entries(copy, pe), none.num_intra_entries(copy, pe));
+            }
         }
         let ghosts = [GhostArc { src_global: 7, dst_local: 3, weight: 9 }];
         let c = compile_sharded(&g, &ghosts, &cfg, &CompileOpts::default());
         assert_eq!(plain.placement.slots, c.placement.slots, "ghosts never move placement");
         let sv = c.placement.slots[3];
-        let sc = c.slice_cfg(sv.copy, sv.pe.index(&cfg));
-        let (m, _) = sc.intra.lookup(GHOST_BASE + 7);
+        let (m, _) = c.intra_lookup(sv.copy, sv.pe.index(&cfg), GHOST_BASE + 7);
         assert!(m.iter().any(|e| e.dst_reg == sv.reg && e.weight == 9), "ghost entry present");
     }
 

@@ -1,34 +1,33 @@
 //! Phase 3 — routing-table generation (paper §3.2, Fig 7) with the
-//! farthest-first Inter-Table data layout (§4.3).
+//! farthest-first Inter-Table data layout (§4.3), emitted directly into
+//! the chip-wide CSR slabs ([`crate::arch::tables::TableSlabs`]).
 
-use super::{CompileOpts, Placement};
-use crate::arch::tables::{IntraEntry, PeSliceConfig};
+use super::{CompileOpts, GhostArc, Placement, GHOST_BASE};
+use crate::arch::tables::{IntraEntry, SlabBuilder, TableSlabs};
 use crate::arch::InterEntry;
 use crate::config::ArchConfig;
 use crate::graph::Graph;
 
-/// Build per-(copy, PE) slice configurations: DRF contents, Inter-Table
-/// lists (one per DRF register, farthest-first unless disabled), and the
-/// Intra-Table.
+/// Build the per-(copy, PE) slice configurations as one frozen slab set:
+/// DRF contents, Inter-Table lists (one per DRF register, farthest-first
+/// unless disabled), and the Intra-Table buckets. `ghosts` adds one Intra
+/// entry per inbound cut arc of a sharded compile
+/// ([`crate::compiler::compile_sharded`]), appended *after* every local
+/// arc so bucket order matches the historical insert-after-compile
+/// behaviour bit for bit; pass `&[]` for a single-chip compile.
 pub fn build_tables(
     g: &Graph,
+    ghosts: &[GhostArc],
     p: &Placement,
     cfg: &ArchConfig,
     opts: &CompileOpts,
-) -> Vec<PeSliceConfig> {
+) -> TableSlabs {
     let num_pes = cfg.num_pes();
-    let mut out: Vec<PeSliceConfig> = (0..p.num_copies * num_pes)
-        .map(|_| PeSliceConfig {
-            vertices: vec![u32::MAX; cfg.drf_size],
-            inter: vec![Vec::new(); cfg.drf_size],
-            intra: Default::default(),
-        })
-        .collect();
+    let mut b = SlabBuilder::new(p.num_copies * num_pes, cfg.drf_size);
 
     // DRF contents.
     for (v, s) in p.slots.iter().enumerate() {
-        let idx = s.copy as usize * num_pes + s.pe.index(cfg);
-        out[idx].vertices[s.reg as usize] = v as u32;
+        b.set_vertex(s.copy as usize * num_pes + s.pe.index(cfg), s.reg, v as u32);
     }
 
     // One Intra entry per arc, but one Inter entry per *destination
@@ -37,9 +36,9 @@ pub fn build_tables(
     // (`dst_vid` is diagnostic), and delivery matches a packet against
     // every Intra entry of its source vertex on that PE. An entry per
     // arc would therefore double-deliver whenever two out-neighbors of
-    // one vertex share a PE — harmless for min-plus programs but wrong
-    // for counting/summing ones (PageRank, MIS). `arcs()` iterates
-    // targets in ascending order, so the kept `dst_vid` is the smallest
+    // one vertex share a PE — harmless for min-plus but wrong for
+    // counting/summing ones (PageRank, MIS). `arcs()` iterates targets
+    // in ascending order, so the kept `dst_vid` is the smallest
     // co-located destination (deterministic).
     for (u, v, w) in g.arcs() {
         let su = p.slots[u as usize];
@@ -47,50 +46,66 @@ pub fn build_tables(
         let (dx, dy) = su.pe.offset_to(sv.pe);
         let slice = p.slice_of(cfg, v);
         let src_idx = su.copy as usize * num_pes + su.pe.index(cfg);
-        let list = &mut out[src_idx].inter[su.reg as usize];
-        if !list.iter().any(|e| e.dx == dx && e.dy == dy && e.slice == slice) {
-            list.push(InterEntry { dx, dy, slice, dst_vid: v });
-        }
+        b.push_inter_dedup(src_idx, su.reg, InterEntry { dx, dy, slice, dst_vid: v });
         let dst_idx = sv.copy as usize * num_pes + sv.pe.index(cfg);
-        out[dst_idx].intra.insert(IntraEntry { src_vid: u, dst_reg: sv.reg, weight: w });
+        b.push_intra(dst_idx, IntraEntry { src_vid: u, dst_reg: sv.reg, weight: w });
     }
 
-    // Farthest-first layout (§4.3): scatter issues entries in list order,
-    // so the longest route starts first. Stable sort keeps determinism.
-    if !opts.skip_layout_sort {
-        for cfg_pe in &mut out {
-            for list in &mut cfg_pe.inter {
-                list.sort_by_key(|e| std::cmp::Reverse((e.hops(), e.dst_vid)));
-            }
-        }
+    // Ghost Intra entries for inbound cut arcs (sharded compiles): remote
+    // sources resolve through the ordinary delivery pipeline under their
+    // `GHOST_BASE + global` id. They sit after every local entry in their
+    // buckets and never touch the Inter-Tables or the placement. The id
+    // invariants are enforced here, next to the emission: a wrapped ghost
+    // id would alias a real local vertex and corrupt deliveries.
+    for gh in ghosts {
+        assert!(
+            (gh.dst_local as usize) < p.slots.len(),
+            "ghost arc destination {} out of range",
+            gh.dst_local
+        );
+        assert!(gh.src_global < GHOST_BASE, "global id space exceeds GHOST_BASE");
+        let sv = p.slots[gh.dst_local as usize];
+        let dst_idx = sv.copy as usize * num_pes + sv.pe.index(cfg);
+        b.push_intra(
+            dst_idx,
+            IntraEntry { src_vid: GHOST_BASE + gh.src_global, dst_reg: sv.reg, weight: gh.weight },
+        );
     }
-    out
+
+    if !opts.skip_layout_sort {
+        b.sort_inter_farthest_first();
+    }
+    b.freeze()
 }
 
-/// Update edge *weights* in the Intra-Tables in place, without remapping —
+/// Update edge *weights* in the Intra slabs in place, without remapping —
 /// the paper's dynamic-attribute path (§1.1: "FLIP also supports efficient
 /// attribute changing ... without recompilation"). The graph structure
-/// (same arcs, same placement) must be unchanged. This is the whole-graph
-/// rebuild; for incremental batches prefer
-/// [`crate::compiler::CompiledGraph::apply_attr_updates`] with a
-/// [`crate::graph::Delta`], which is O(|delta|).
+/// (same arcs, same placement) must be unchanged; the weights are replayed
+/// in the exact order [`build_tables`] inserted them, so the patched slab
+/// is bit-identical to a fresh build over the reweighted graph (ghost
+/// entries of a sharded compile keep their weights — they are not part of
+/// the local graph). This is the whole-graph rebuild; for incremental
+/// batches prefer [`crate::compiler::CompiledGraph::apply_attr_updates`]
+/// with a [`crate::graph::Delta`], which is O(|delta|).
 pub fn update_edge_weights(c: &mut crate::compiler::CompiledGraph, g: &Graph) {
     let num_pes = c.cfg.num_pes();
-    // clear + re-insert intra entries with new weights (same placement)
-    for cfg_pe in &mut c.pe_slices {
-        cfg_pe.intra = Default::default();
-    }
-    for (u, v, w) in g.arcs() {
-        let sv = c.placement.slots[v as usize];
-        let dst_idx = sv.copy as usize * num_pes + sv.pe.index(&c.cfg);
-        c.pe_slices[dst_idx].intra.insert(IntraEntry { src_vid: u, dst_reg: sv.reg, weight: w });
-    }
+    // staged first: the placement/cfg borrows must end before the slab is
+    // borrowed mutably (this is the cold whole-graph rebuild path)
+    let items: Vec<(usize, u32, u8, u32)> = g
+        .arcs()
+        .map(|(u, v, w)| {
+            let sv = c.placement.slots[v as usize];
+            (sv.copy as usize * num_pes + sv.pe.index(&c.cfg), u, sv.reg, w)
+        })
+        .collect();
+    c.tables_mut().patch_weights_in_order(items.into_iter());
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compiler::{compile, CompileOpts};
+    use crate::compiler::{compile, CompileOpts, CompiledGraph};
     use crate::graph::generate;
 
     #[test]
@@ -107,7 +122,7 @@ mod tests {
         assert_eq!(c.placement.slots, placement_before, "no remapping");
         for (u, v, w) in g2.arcs() {
             let sv = c.placement.slots[v as usize];
-            let (m, _) = c.slice_cfg(sv.copy, sv.pe.index(&cfg)).intra.lookup(u);
+            let (m, _) = c.intra_lookup(sv.copy, sv.pe.index(&cfg), u);
             assert!(m.iter().any(|e| e.dst_reg == sv.reg && e.weight == w));
         }
     }
@@ -135,7 +150,7 @@ mod tests {
         for (u, v, w) in g2.arcs() {
             let sv = patched.placement.slots[v as usize];
             for c in [&patched, &rebuilt] {
-                let (m, _) = c.slice_cfg(sv.copy, sv.pe.index(&cfg)).intra.lookup(u);
+                let (m, _) = c.intra_lookup(sv.copy, sv.pe.index(&cfg), u);
                 assert!(
                     m.iter().any(|e| e.dst_reg == sv.reg && e.weight == w),
                     "{u}->{v} weight {w} missing"
@@ -160,7 +175,7 @@ mod tests {
         assert!(err.contains("cannot change the graph structure"), "{err}");
     }
 
-    fn compiled() -> (Graph, crate::compiler::CompiledGraph) {
+    fn compiled() -> (Graph, CompiledGraph) {
         let g = generate::road_network(64, 146, 166, 31);
         let cfg = ArchConfig::default();
         let c = compile(&g, &cfg, &CompileOpts::default());
@@ -177,22 +192,31 @@ mod tests {
             let sv = p.slots[v as usize];
             let (dx, dy) = su.pe.offset_to(sv.pe);
             let slice = p.slice_of(cfg, v);
-            let s_cfg = c.slice_cfg(su.copy, su.pe.index(cfg));
             // one entry per destination (PE, slice): the arc is covered by
             // the entry routing to v's PE in v's slice
             assert!(
-                s_cfg.inter[su.reg as usize]
+                c.inter_list(su.copy, su.pe.index(cfg), su.reg)
                     .iter()
                     .any(|e| (e.dx, e.dy, e.slice) == (dx, dy, slice)),
                 "missing inter entry {u}->{v}"
             );
-            let d_cfg = c.slice_cfg(sv.copy, sv.pe.index(cfg));
-            let (matches, _) = d_cfg.intra.lookup(u);
+            let (matches, _) = c.intra_lookup(sv.copy, sv.pe.index(cfg), u);
             let m = matches
                 .iter()
                 .find(|e| e.dst_reg == sv.reg)
                 .unwrap_or_else(|| panic!("missing intra entry {u}->{v}"));
             assert_eq!(m.weight, w);
+        }
+    }
+
+    /// Visit every (copy, pe, reg) Inter list of a compiled graph.
+    fn for_each_inter_list(c: &CompiledGraph, mut f: impl FnMut(&[InterEntry])) {
+        for copy in 0..c.placement.num_copies as u16 {
+            for pe in 0..c.cfg.num_pes() {
+                for reg in 0..c.cfg.drf_size {
+                    f(c.inter_list(copy, pe, reg as u8));
+                }
+            }
         }
     }
 
@@ -202,16 +226,14 @@ mod tests {
         // (dx, dy, slice) entry would double-deliver (fatal for PageRank
         // sums and MIS counting)
         let (_, c) = compiled();
-        for s_cfg in &c.pe_slices {
-            for list in &s_cfg.inter {
-                let mut seen: Vec<(i8, i8, u16)> = Vec::new();
-                for e in list {
-                    let key = (e.dx, e.dy, e.slice);
-                    assert!(!seen.contains(&key), "duplicate inter entry {key:?}");
-                    seen.push(key);
-                }
+        for_each_inter_list(&c, |list| {
+            let mut seen: Vec<(i8, i8, u16)> = Vec::new();
+            for e in list {
+                let key = (e.dx, e.dy, e.slice);
+                assert!(!seen.contains(&key), "duplicate inter entry {key:?}");
+                seen.push(key);
             }
-        }
+        });
     }
 
     #[test]
@@ -219,22 +241,19 @@ mod tests {
         let (g, c) = compiled();
         for v in 0..g.num_vertices() as u32 {
             let s = c.placement.slots[v as usize];
-            let s_cfg = c.slice_cfg(s.copy, s.pe.index(&c.cfg));
-            assert_eq!(s_cfg.vertices[s.reg as usize], v);
-            assert_eq!(s_cfg.reg_of(v), Some(s.reg));
+            assert_eq!(c.vertex_at(s.copy, s.pe.index(&c.cfg), s.reg), v);
+            assert_eq!(c.reg_of(s.copy, s.pe.index(&c.cfg), v), Some(s.reg));
         }
     }
 
     #[test]
     fn inter_lists_are_farthest_first() {
         let (_, c) = compiled();
-        for s_cfg in &c.pe_slices {
-            for list in &s_cfg.inter {
-                for w in list.windows(2) {
-                    assert!(w[0].hops() >= w[1].hops(), "layout not farthest-first");
-                }
+        for_each_inter_list(&c, |list| {
+            for w in list.windows(2) {
+                assert!(w[0].hops() >= w[1].hops(), "layout not farthest-first");
             }
-        }
+        });
     }
 
     #[test]
@@ -245,13 +264,20 @@ mod tests {
         let unsorted =
             compile(&g, &cfg, &CompileOpts { skip_layout_sort: true, ..Default::default() });
         // same multiset of entries per register either way
-        for (a, b) in sorted.pe_slices.iter().zip(&unsorted.pe_slices) {
-            for (la, lb) in a.inter.iter().zip(&b.inter) {
-                let mut sa: Vec<u32> = la.iter().map(|e| e.dst_vid).collect();
-                let mut sb: Vec<u32> = lb.iter().map(|e| e.dst_vid).collect();
-                sa.sort_unstable();
-                sb.sort_unstable();
-                assert_eq!(sa, sb);
+        for copy in 0..sorted.placement.num_copies as u16 {
+            for pe in 0..cfg.num_pes() {
+                for reg in 0..cfg.drf_size {
+                    let mut sa: Vec<u32> =
+                        sorted.inter_list(copy, pe, reg as u8).iter().map(|e| e.dst_vid).collect();
+                    let mut sb: Vec<u32> = unsorted
+                        .inter_list(copy, pe, reg as u8)
+                        .iter()
+                        .map(|e| e.dst_vid)
+                        .collect();
+                    sa.sort_unstable();
+                    sb.sort_unstable();
+                    assert_eq!(sa, sb);
+                }
             }
         }
     }

@@ -14,6 +14,12 @@
 //! flip golden --workload <w> --group <g>    validate sim vs PJRT artifacts
 //! flip info                                 configuration + artifact status
 //! ```
+//!
+//! Every simulator-facing subcommand dispatches trio workloads through
+//! `workloads::with_builtin` (via the harness/engine layers), so CLI
+//! runs execute on the event core's monomorphized path; the extended
+//! workloads pass their concrete program types directly (DESIGN.md
+//! §Perf "dispatch & layout").
 
 use flip::compiler::{compile, CompileOpts};
 use flip::experiments::{registry, run_by_id, ExpEnv};

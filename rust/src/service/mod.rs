@@ -335,18 +335,18 @@ fn answer(
             if source as usize >= n {
                 return Err(fail(format!("source {source} out of range (|V| = {n})")));
             }
-            let vp = w.builtin_program();
-            let run = match (machine, target) {
+            // the with_builtin visitor keeps engine workers on the
+            // monomorphized event-core path (DESIGN.md §Perf)
+            let run = crate::workloads::with_builtin(w, |vp| match (machine, target) {
                 (WorkerMachine::Single(inst), &Target::Single(pair)) => {
                     let c = pair.for_workload(w);
-                    let run = inst.run_program(c, vp.as_ref(), source, opts).map_err(&fail)?;
+                    let run = inst.run_program(c, vp, source, opts).map_err(&fail)?;
                     crate::experiments::harness::debug_check_reference(pair, w, source, &run);
-                    run
+                    Ok(run)
                 }
                 (WorkerMachine::Sharded(insts), &Target::Sharded(pair)) => {
                     let m = pair.for_workload(w);
-                    let sr = multichip::run_program(m, insts, vp.as_ref(), source, opts)
-                        .map_err(&fail)?;
+                    let sr = multichip::run_program(m, insts, vp, source, opts).map_err(&fail)?;
                     crate::experiments::harness::debug_check_reference_views(
                         &pair.graph,
                         &pair.wcc_view,
@@ -354,10 +354,10 @@ fn answer(
                         source,
                         &sr.result.attrs,
                     );
-                    sr.result
+                    Ok(sr.result)
                 }
                 _ => unreachable!("worker machine built from its own target"),
-            };
+            })?;
             Ok(QueryResult { job, run, distance: None })
         }
         Job::Navigate { source, target: dst } => {

@@ -57,6 +57,20 @@
 //! replay queue stays a `VecDeque`: it is SPM-backed and unbounded by
 //! design (a swap-in can dump an arbitrarily long parked list).
 //!
+//! ## Dispatch & layout (DESIGN.md §Perf)
+//!
+//! The whole run path is generic over `P: VertexProgram + ?Sized`:
+//! concrete callers ([`crate::workloads::with_builtin`], the extended
+//! workload drivers) get a fully monomorphized core where `combine` /
+//! `coalesce` / `aux` inline into the delivery and ALU loops, while
+//! `P = dyn VertexProgram` *is* the retained thin dyn-shim — the same
+//! functions instantiated once more with virtual calls, for `Box<dyn>`
+//! holders and the naive oracle comparisons. Table reads go through
+//! [`CompiledGraph`]'s CSR-slab accessors (two index loads + one
+//! contiguous slice per delivery/scatter); the *modeled* cost is
+//! unchanged — one cycle per entry walked, the linked-list hardware
+//! model — only the host-side representation is flat.
+//!
 //! The functional result (final vertex attributes) must equal the native
 //! reference and the PJRT golden model exactly — checked in tests.
 
@@ -222,7 +236,12 @@ impl RingArena<AluinItem> {
     /// *decides*, so the caller must not scan further queues on
     /// `Some(false)` (mirrors the naive core's single chained scan).
     #[inline]
-    fn coalesce(&mut self, q: usize, item: AluinItem, vp: &dyn VertexProgram) -> Option<bool> {
+    fn coalesce<P: VertexProgram + ?Sized>(
+        &mut self,
+        q: usize,
+        item: AluinItem,
+        vp: &P,
+    ) -> Option<bool> {
         let cap = self.cap as usize;
         let base = q * cap;
         let (h, l) = (self.head[q] as usize, self.len[q] as usize);
@@ -343,10 +362,12 @@ struct Timing {
 
 /// Per-run immutable context: the machine image being executed and the
 /// vertex program driving it. Borrowed for the duration of one query so
-/// the mutable [`SimInstance`] outlives every run.
-struct RunCtx<'a> {
+/// the mutable [`SimInstance`] outlives every run. Generic over the
+/// program type: `P = dyn VertexProgram` is the dyn-shim instantiation,
+/// a concrete `P` monomorphizes the whole drive loop.
+struct RunCtx<'a, P: VertexProgram + ?Sized> {
     c: &'a CompiledGraph,
-    vp: &'a dyn VertexProgram,
+    vp: &'a P,
     /// `vp.bound()` cached out of the per-message ALU hot path.
     vp_bound: u32,
     /// PE-array replicas of this compiled graph (slice layers).
@@ -506,7 +527,9 @@ impl SimInstance {
     }
 
     /// Run one built-in trio workload on this instance. Results are
-    /// bit-identical to a fresh [`run`] over the same inputs.
+    /// bit-identical to a fresh [`run`] over the same inputs. Dispatches
+    /// through [`crate::workloads::with_builtin`], so the run executes on
+    /// the monomorphized `P = BuiltinProgram` path.
     pub fn run(
         &mut self,
         c: &CompiledGraph,
@@ -514,19 +537,21 @@ impl SimInstance {
         source: u32,
         opts: &SimOptions,
     ) -> Result<RunResult, String> {
-        let vp = workload.builtin_program();
-        self.run_program(c, vp.as_ref(), source, opts)
+        crate::workloads::with_builtin(workload, |vp| self.run_program(c, vp, source, opts))
     }
 
     /// Run an arbitrary vertex program on this instance. `c` must be
     /// compiled for the same [`ArchConfig`] the instance was built with;
     /// it may be a *different* compiled graph (the serve path reuses one
     /// instance across a [`crate::experiments::harness::CompiledPair`]'s
-    /// views).
-    pub fn run_program(
+    /// views). A concrete `P` monomorphizes the whole event loop (no
+    /// virtual calls on the per-packet path); passing a
+    /// `&dyn VertexProgram` instantiates the same code as the thin
+    /// dyn-shim.
+    pub fn run_program<P: VertexProgram + ?Sized>(
         &mut self,
         c: &CompiledGraph,
-        vp: &dyn VertexProgram,
+        vp: &P,
         source: u32,
         opts: &SimOptions,
     ) -> Result<RunResult, String> {
@@ -557,10 +582,10 @@ impl SimInstance {
     /// destination PE's replay queue at its `ready_at`, and the fabric
     /// runs to quiescence. With an empty `inbound` the run terminates
     /// immediately at cycle 0 and hands `attrs` back unchanged.
-    pub fn run_resumed(
+    pub fn run_resumed<P: VertexProgram + ?Sized>(
         &mut self,
         c: &CompiledGraph,
-        vp: &dyn VertexProgram,
+        vp: &P,
         attrs: Vec<u32>,
         inbound: &[Inject],
         opts: &SimOptions,
@@ -740,12 +765,12 @@ impl SimInstance {
         (self.clusters[cluster].resident as usize / self.tm.num_clusters) as u16
     }
 
-    /// Slice config of `pe_idx`'s currently resident slice, borrowed from
-    /// the compiled graph (lifetime `'a`, independent of `&self`).
+    /// Array copy of `pe_idx`'s currently resident slice — the copy half
+    /// of the slab-config coordinates the [`CompiledGraph`] accessors
+    /// take (the pe half is `pe_idx` itself).
     #[inline]
-    fn slice_cfg_of<'a>(&self, cx: &RunCtx<'a>, pe_idx: usize) -> &'a crate::arch::PeSliceConfig {
-        let cl = self.topo.cluster_of[pe_idx];
-        cx.c.slice_cfg(self.resident_copy(cl), pe_idx)
+    fn resident_at(&self, pe_idx: usize) -> u16 {
+        self.resident_copy(self.topo.cluster_of[pe_idx])
     }
 
     // ---- scheduler bookkeeping -------------------------------------------
@@ -834,7 +859,7 @@ impl SimInstance {
 
     /// Prepare initial state for a run from `source` (ignored by dense-
     /// seeded programs).
-    fn seed(&mut self, cx: &RunCtx, source: u32) {
+    fn seed<P: VertexProgram + ?Sized>(&mut self, cx: &RunCtx<P>, source: u32) {
         let cfg = &cx.c.cfg;
         let n = cx.c.placement.slots.len();
         let vp = cx.vp;
@@ -890,7 +915,11 @@ impl SimInstance {
     }
 
     /// Run to termination; returns the functional result and metrics.
-    fn drive(&mut self, cx: &RunCtx, source: u32) -> Result<RunResult, String> {
+    fn drive<P: VertexProgram + ?Sized>(
+        &mut self,
+        cx: &RunCtx<P>,
+        source: u32,
+    ) -> Result<RunResult, String> {
         self.seed(cx, source);
         self.drive_loop(cx)
     }
@@ -898,7 +927,10 @@ impl SimInstance {
     /// The termination loop shared by fresh ([`SimInstance::run_program`])
     /// and resumed ([`SimInstance::run_resumed`]) runs; the caller has
     /// already installed attributes and initial work.
-    fn drive_loop(&mut self, cx: &RunCtx) -> Result<RunResult, String> {
+    fn drive_loop<P: VertexProgram + ?Sized>(
+        &mut self,
+        cx: &RunCtx<P>,
+    ) -> Result<RunResult, String> {
         self.progress_at = 0;
         while !self.is_done() {
             if self.now >= cx.opts.max_cycles {
@@ -969,7 +1001,7 @@ impl SimInstance {
     }
 
     /// One cycle (possibly fast-forwarding over a stall at the end).
-    fn step(&mut self, cx: &RunCtx) {
+    fn step<P: VertexProgram + ?Sized>(&mut self, cx: &RunCtx<P>) {
         let now = self.now;
         // ---- swap engine -------------------------------------------------
         self.step_swaps(cx);
@@ -1109,7 +1141,7 @@ impl SimInstance {
     }
 
     // ---- swap engine (§3.3) ----------------------------------------------
-    fn step_swaps(&mut self, cx: &RunCtx) {
+    fn step_swaps<P: VertexProgram + ?Sized>(&mut self, cx: &RunCtx<P>) {
         let now = self.now;
         // finish in-progress swaps
         let mut i = 0;
@@ -1178,7 +1210,7 @@ impl SimInstance {
         self.touch();
     }
 
-    fn try_start_swap(&mut self, cx: &RunCtx, cl: usize, now: u64) {
+    fn try_start_swap<P: VertexProgram + ?Sized>(&mut self, cx: &RunCtx<P>, cl: usize, now: u64) {
         let resident = self.clusters[cl].resident;
         let nc = self.tm.num_clusters;
         // candidate slices of this cluster, ascending slice id (so ties on
@@ -1208,10 +1240,7 @@ impl SimInstance {
             let in_copy = (slice as usize / nc) as u16;
             let words: usize = self.topo.cluster_pes[cl]
                 .iter()
-                .map(|&i| {
-                    cx.c.slice_cfg(out_copy, i).storage_words()
-                        + cx.c.slice_cfg(in_copy, i).storage_words()
-                })
+                .map(|&i| cx.c.storage_words(out_copy, i) + cx.c.storage_words(in_copy, i))
                 .sum();
             let cost = words as u64 * cfg.t_swap_word + cfg.t_offchip_fixed;
             self.act.swap_words += words as u64;
@@ -1336,7 +1365,12 @@ impl SimInstance {
     /// the naive `VecDeque` chain: the first same-register entry decides,
     /// even when the program declines the merge). Returns true if merged.
     #[inline]
-    fn try_coalesce(&mut self, cx: &RunCtx, pe_idx: usize, item: AluinItem) -> bool {
+    fn try_coalesce<P: VertexProgram + ?Sized>(
+        &mut self,
+        cx: &RunCtx<P>,
+        pe_idx: usize,
+        item: AluinItem,
+    ) -> bool {
         let vp = cx.vp;
         match self.aluin.coalesce(pe_idx, item, vp) {
             Some(merged) => merged,
@@ -1344,7 +1378,7 @@ impl SimInstance {
         }
     }
 
-    fn step_delivery(&mut self, cx: &RunCtx, pe_idx: usize) {
+    fn step_delivery<P: VertexProgram + ?Sized>(&mut self, cx: &RunCtx<P>, pe_idx: usize) {
         let now = self.now;
         if self.pe[pe_idx].deliver_busy_until > now {
             return;
@@ -1401,10 +1435,11 @@ impl SimInstance {
             self.park_pkt(pe_idx, src, &q, now);
             return;
         }
-        // Intra-Table lookup (zero-copy bucket walk; borrowed from the
-        // compiled graph with its own lifetime, so PE state stays mutable)
+        // Intra-Table lookup: two index loads into the CSR slab and a
+        // contiguous bucket walk (borrowed from the compiled graph with
+        // its own lifetime, so PE state stays mutable)
         let copy = self.resident_copy(cl);
-        let bucket = cx.c.slice_cfg(copy, pe_idx).intra.bucket(q.pkt.src_vid);
+        let bucket = cx.c.intra_bucket(copy, pe_idx, q.pkt.src_vid);
         let walked = bucket.len().max(1) as u64;
         let src_vid = q.pkt.src_vid;
         let n_matches = bucket.iter().filter(|e| e.src_vid == src_vid).count();
@@ -1504,13 +1539,13 @@ impl SimInstance {
     }
 
     // ---- ALU ---------------------------------------------------------------
-    fn step_alu(&mut self, cx: &RunCtx, pe_idx: usize) {
+    fn step_alu<P: VertexProgram + ?Sized>(&mut self, cx: &RunCtx<P>, pe_idx: usize) {
         let now = self.now;
         match self.pe[pe_idx].alu {
             AluState::Executing { until, reg, new_attr, scatter } => {
                 if until <= now {
                     // write back
-                    let vid = self.slice_cfg_of(cx, pe_idx).vertices[reg as usize];
+                    let vid = cx.c.vertex_at(self.resident_at(pe_idx), pe_idx, reg);
                     debug_assert!(vid != u32::MAX);
                     if self.attrs[vid as usize] != new_attr {
                         self.attrs[vid as usize] = new_attr;
@@ -1551,7 +1586,7 @@ impl SimInstance {
         }
         let Some(item) = self.aluin.pop_front(pe_idx) else { return };
         self.aluin_total -= 1;
-        let vid = self.slice_cfg_of(cx, pe_idx).vertices[item.reg as usize];
+        let vid = cx.c.vertex_at(self.resident_at(pe_idx), pe_idx, item.reg);
         debug_assert!(vid != u32::MAX, "ALUin item for empty DRF register");
         let attr = self.attrs[vid as usize];
         let prog = cx.vp.isa();
@@ -1571,14 +1606,14 @@ impl SimInstance {
     }
 
     // ---- scatter (Inter-Table walk, farthest-first order) -------------------
-    fn step_scatter(&mut self, cx: &RunCtx, pe_idx: usize) {
+    fn step_scatter<P: VertexProgram + ?Sized>(&mut self, cx: &RunCtx<P>, pe_idx: usize) {
         let now = self.now;
         if self.pe[pe_idx].scatter_next_at > now {
             return;
         }
         let Some(&(reg, attr)) = self.aluout.front(pe_idx) else { return };
-        let slice_cfg = self.slice_cfg_of(cx, pe_idx);
-        let list = &slice_cfg.inter[reg as usize];
+        let copy = self.resident_at(pe_idx);
+        let list = cx.c.inter_list(copy, pe_idx, reg);
         let pos = self.pe[pe_idx].scatter_pos as usize;
         if pos >= list.len() {
             self.aluout.pop_front(pe_idx);
@@ -1587,7 +1622,7 @@ impl SimInstance {
             return;
         }
         let entry = list[pos];
-        let vid = slice_cfg.vertices[reg as usize];
+        let vid = cx.c.vertex_at(copy, pe_idx, reg);
         if self.local_q.len(pe_idx) >= self.tm.input_buf_cap {
             return; // injection stall
         }
@@ -1619,10 +1654,12 @@ pub fn run(
 }
 
 /// Run an arbitrary vertex program (the extended-workload entry point) on
-/// a fresh machine. `source` is ignored by dense-seeded programs.
-pub fn run_program(
+/// a fresh machine. `source` is ignored by dense-seeded programs. Generic
+/// like [`SimInstance::run_program`]: a concrete `P` monomorphizes the
+/// core, `P = dyn VertexProgram` is the dyn-shim.
+pub fn run_program<P: VertexProgram + ?Sized>(
     c: &CompiledGraph,
-    vp: &dyn VertexProgram,
+    vp: &P,
     source: u32,
     opts: &SimOptions,
 ) -> Result<RunResult, String> {

@@ -6,7 +6,12 @@
 //!
 //! Both FLIP cores execute any
 //! [`crate::workloads::program::VertexProgram`] (`flip::run_program`,
-//! `naive::run_program`); the `run` wrappers cover the paper trio. Both
+//! `naive::run_program`); the `run` wrappers cover the paper trio via the
+//! [`crate::workloads::with_builtin`] visitor. The event core's run path
+//! is generic over `P: VertexProgram + ?Sized` — concrete programs
+//! monomorphize the per-packet hot path, `P = dyn VertexProgram` is the
+//! retained dyn-shim, and the naive core stays dyn-dispatched as the slow
+//! oracle (DESIGN.md §Perf "dispatch & layout"). Both
 //! also split the immutable machine image from the reusable run state
 //! (DESIGN.md §6): hold a [`SimInstance`] (or [`naive::NaiveInstance`])
 //! to serve many queries off one compiled graph without re-allocating

@@ -149,14 +149,17 @@ pub struct ShardedRun {
 /// Local view of a global vertex program: translates shard-local vertex
 /// ids to global ones for every per-vertex hook, so programs keep global
 /// semantics (WCC labels, MIS priorities, A* heuristics, PageRank
-/// contributions) on renumbered shard graphs.
-struct ShardView<'a> {
-    inner: &'a dyn VertexProgram,
+/// contributions) on renumbered shard graphs. Generic over the wrapped
+/// program so a concrete `P` keeps the per-shard [`SimInstance`] runs on
+/// the monomorphized event-core path (the view's hooks are thin inlinable
+/// forwards, not virtual calls).
+struct ShardView<'a, P: VertexProgram + ?Sized> {
+    inner: &'a P,
     global_of: &'a [u32],
     n_global: usize,
 }
 
-impl VertexProgram for ShardView<'_> {
+impl<P: VertexProgram + ?Sized> VertexProgram for ShardView<'_, P> {
     fn name(&self) -> &'static str {
         self.inner.name()
     }
@@ -276,10 +279,10 @@ impl Agg {
 /// programs). A watchdog or max-cycles abort inside any shard surfaces
 /// as the returned `Err`; the instances hard-reset on their next run, so
 /// the machine stays serviceable.
-pub fn run_program(
+pub fn run_program<P: VertexProgram + ?Sized>(
     m: &ShardedMachine,
     insts: &mut [SimInstance],
-    vp: &dyn VertexProgram,
+    vp: &P,
     source: u32,
     opts: &SimOptions,
 ) -> Result<ShardedRun, String> {
@@ -291,7 +294,7 @@ pub fn run_program(
     if vp.single_source() && source as usize >= n {
         return Err(format!("source {source} out of range (|V| = {n})"));
     }
-    let views: Vec<ShardView> = (0..k)
+    let views: Vec<ShardView<P>> = (0..k)
         .map(|s| ShardView { inner: vp, global_of: &m.part.global_of[s], n_global: n })
         .collect();
     let words = CHIP_PKT_WORDS * m.cfg.t_chip_word;
@@ -442,16 +445,17 @@ pub fn run_program(
 /// Run one built-in trio workload on a sharded machine with fresh
 /// instances (cold start). The machine must have been built on the
 /// workload's graph view (undirected closure for WCC), exactly like
-/// [`crate::compiler::compile`].
+/// [`crate::compiler::compile`]. Dispatches through
+/// [`crate::workloads::with_builtin`], so every shard runs on the
+/// monomorphized event-core path.
 pub fn run(
     m: &ShardedMachine,
     workload: Workload,
     source: u32,
     opts: &SimOptions,
 ) -> Result<ShardedRun, String> {
-    let vp = workload.builtin_program();
     let mut insts = m.new_instances();
-    run_program(m, &mut insts, vp.as_ref(), source, opts)
+    crate::workloads::with_builtin(workload, |vp| run_program(m, &mut insts, vp, source, opts))
 }
 
 /// Drive host-synchronized PageRank rounds on a sharded machine — the

@@ -16,6 +16,13 @@
 //! than the event core's O(touched) bookkeeping; both contracts produce
 //! machines indistinguishable from freshly built ones.
 //!
+//! The naive core deliberately stays on `&dyn VertexProgram` dispatch —
+//! it is the slow oracle, and keeping it on the un-specialized path means
+//! the monomorphization of the event core ([`super::flip`]) is itself
+//! covered by the equivalence battery. Table reads share the compiled
+//! graph's CSR-slab accessors (the modeled walk costs are identical by
+//! construction).
+//!
 //! One deliberate deviation from the seed version: swap-candidate
 //! selection used to iterate `HashMap`s, so ties between slices with equal
 //! earliest-pending cycles were broken by hash order — nondeterministic
@@ -369,9 +376,10 @@ impl NaiveInstance {
         (self.clusters[cluster].resident as usize / self.cfg.num_clusters()) as u16
     }
 
-    fn slice_cfg_of<'a>(&self, cx: &RunCtx<'a>, pe_idx: usize) -> &'a crate::arch::PeSliceConfig {
-        let cl = self.hot.cluster_of[pe_idx];
-        cx.c.slice_cfg(self.resident_copy(cl), pe_idx)
+    /// Array copy of `pe_idx`'s currently resident slice (the copy half
+    /// of the [`CompiledGraph`] slab-accessor coordinates).
+    fn resident_at(&self, pe_idx: usize) -> u16 {
+        self.resident_copy(self.hot.cluster_of[pe_idx])
     }
 
     /// Prepare initial state for a run from `source` (ignored by dense-
@@ -632,10 +640,7 @@ impl NaiveInstance {
                 let words: usize = self.clusters[cl]
                     .pes
                     .iter()
-                    .map(|&i| {
-                        cx.c.slice_cfg(out_copy, i).storage_words()
-                            + cx.c.slice_cfg(in_copy, i).storage_words()
-                    })
+                    .map(|&i| cx.c.storage_words(out_copy, i) + cx.c.storage_words(in_copy, i))
                     .sum();
                 let cost = words as u64 * cfg.t_swap_word + cfg.t_offchip_fixed;
                 self.act.swap_words += words as u64;
@@ -818,11 +823,11 @@ impl NaiveInstance {
             self.touch();
             return;
         }
-        // Intra-Table lookup (zero-copy bucket walk; borrow from the
+        // Intra-Table lookup (zero-copy CSR bucket walk; borrow from the
         // compiled graph reference, not &self, so PE state stays mutable)
         let compiled: &CompiledGraph = cx.c;
         let copy = self.resident_copy(cl);
-        let bucket = compiled.slice_cfg(copy, pe_idx).intra.bucket(q.pkt.src_vid);
+        let bucket = compiled.intra_bucket(copy, pe_idx, q.pkt.src_vid);
         let walked = bucket.len().max(1) as u64;
         let src_vid = q.pkt.src_vid;
         let n_matches = bucket.iter().filter(|e| e.src_vid == src_vid).count();
@@ -920,7 +925,7 @@ impl NaiveInstance {
             AluState::Executing { until, reg, new_attr, scatter } => {
                 if until <= now {
                     // write back
-                    let vid = self.slice_cfg_of(cx, pe_idx).vertices[reg as usize];
+                    let vid = cx.c.vertex_at(self.resident_at(pe_idx), pe_idx, reg);
                     debug_assert!(vid != u32::MAX);
                     if self.attrs[vid as usize] != new_attr {
                         self.attrs[vid as usize] = new_attr;
@@ -959,7 +964,7 @@ impl NaiveInstance {
             return;
         }
         let Some(item) = self.pes[pe_idx].aluin.pop_front() else { return };
-        let vid = self.slice_cfg_of(cx, pe_idx).vertices[item.reg as usize];
+        let vid = cx.c.vertex_at(self.resident_at(pe_idx), pe_idx, item.reg);
         debug_assert!(vid != u32::MAX, "ALUin item for empty DRF register");
         let attr = self.attrs[vid as usize];
         let prog = cx.vp.isa();
@@ -984,8 +989,8 @@ impl NaiveInstance {
             return;
         }
         let Some(&(reg, attr)) = self.pes[pe_idx].aluout.front() else { return };
-        let slice_cfg = self.slice_cfg_of(cx, pe_idx);
-        let list = &slice_cfg.inter[reg as usize];
+        let copy = self.resident_at(pe_idx);
+        let list = cx.c.inter_list(copy, pe_idx, reg);
         let pos = self.pes[pe_idx].scatter_pos;
         if pos >= list.len() {
             self.pes[pe_idx].aluout.pop_front();
@@ -994,7 +999,7 @@ impl NaiveInstance {
             return;
         }
         let entry = list[pos];
-        let vid = slice_cfg.vertices[reg as usize];
+        let vid = cx.c.vertex_at(copy, pe_idx, reg);
         if self.pes[pe_idx].local_q.len() >= self.hot.input_buf_cap {
             return; // injection stall
         }

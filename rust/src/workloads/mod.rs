@@ -85,16 +85,10 @@ impl Workload {
     /// [`navigation::AStar::new`] / [`navigation::plan`] or
     /// [`mis::Mis::build`] instead.
     pub fn builtin_program(self) -> Box<dyn VertexProgram> {
-        match self {
-            Workload::Bfs => Box::new(Relax::bfs()),
-            Workload::Sssp => Box::new(Relax::sssp()),
-            Workload::Wcc => Box::new(LabelProp),
-            _ => panic!(
-                "{} carries graph-derived state; build it via \
-                 workloads::{{pagerank, navigation, mis}}",
-                self.name()
-            ),
-        }
+        // one workload→program mapping: the boxed form wraps the same
+        // [`BuiltinProgram`] the monomorphized path runs on (the enum
+        // answers every hook identically — tested below)
+        Box::new(BuiltinProgram::new(self))
     }
 
     /// True if the workload starts from a single source vertex; dense-
@@ -114,6 +108,105 @@ impl Workload {
     pub fn reference(self, g: &Graph, source: u32) -> Vec<u32> {
         self.builtin_program().reference(g, source)
     }
+}
+
+/// The trio's stateless built-in programs as one concrete type, so a
+/// *dynamically* chosen workload (a CLI flag, an engine [`crate::service::Job`])
+/// still reaches the simulator's monomorphized run path
+/// ([`crate::sim::SimInstance::run_program`] with `P = BuiltinProgram`):
+/// every [`VertexProgram`] hook is a two-way match the compiler inlines,
+/// not a virtual call through a `Box<dyn VertexProgram>`.
+#[derive(Debug, Clone, Copy)]
+pub enum BuiltinProgram {
+    /// BFS / SSSP min-plus relaxation.
+    Relax(Relax),
+    /// WCC minimum-label propagation.
+    LabelProp(LabelProp),
+}
+
+impl BuiltinProgram {
+    /// The built-in program of a trio workload. Panics for the extended
+    /// workloads, exactly like [`Workload::builtin_program`].
+    pub fn new(w: Workload) -> BuiltinProgram {
+        match w {
+            Workload::Bfs => BuiltinProgram::Relax(Relax::bfs()),
+            Workload::Sssp => BuiltinProgram::Relax(Relax::sssp()),
+            Workload::Wcc => BuiltinProgram::LabelProp(LabelProp),
+            _ => panic!(
+                "{} carries graph-derived state; build it via \
+                 workloads::{{pagerank, navigation, mis}}",
+                w.name()
+            ),
+        }
+    }
+}
+
+/// Delegate every trait hook to the wrapped program through a two-way
+/// match (static dispatch; each arm inlines the concrete method).
+macro_rules! builtin_delegate {
+    ($self:ident, $p:ident, $body:expr) => {
+        match $self {
+            BuiltinProgram::Relax($p) => $body,
+            BuiltinProgram::LabelProp($p) => $body,
+        }
+    };
+}
+
+impl VertexProgram for BuiltinProgram {
+    fn name(&self) -> &'static str {
+        builtin_delegate!(self, p, p.name())
+    }
+
+    fn isa(&self) -> &[crate::arch::isa::Instr] {
+        builtin_delegate!(self, p, p.isa())
+    }
+
+    fn init_attr(&self, vid: u32, n: usize) -> u32 {
+        builtin_delegate!(self, p, p.init_attr(vid, n))
+    }
+
+    fn combine(&self, attr: u32, weight: u32) -> u32 {
+        builtin_delegate!(self, p, p.combine(attr, weight))
+    }
+
+    fn coalesce(&self, queued: u32, incoming: u32) -> Option<u32> {
+        builtin_delegate!(self, p, p.coalesce(queued, incoming))
+    }
+
+    fn aux(&self, vid: u32) -> u32 {
+        builtin_delegate!(self, p, p.aux(vid))
+    }
+
+    fn bound(&self) -> u32 {
+        builtin_delegate!(self, p, p.bound())
+    }
+
+    fn single_source(&self) -> bool {
+        builtin_delegate!(self, p, p.single_source())
+    }
+
+    fn seeds(&self, vid: u32) -> bool {
+        builtin_delegate!(self, p, p.seeds(vid))
+    }
+
+    fn announces(&self, vid: u32, attr: u32) -> bool {
+        builtin_delegate!(self, p, p.announces(vid, attr))
+    }
+
+    fn reference(&self, g: &Graph, source: u32) -> Vec<u32> {
+        builtin_delegate!(self, p, p.reference(g, source))
+    }
+}
+
+/// Run `f` with the concrete [`BuiltinProgram`] of a trio workload — the
+/// monomorphized-dispatch mirror of [`Workload::builtin_program`]. Every
+/// dynamic-workload call site (CLI subcommands, [`crate::service::Engine`]
+/// workers, experiment sweeps, [`crate::sim::multichip`]) funnels through
+/// this visitor so the event core's generic run path is instantiated once
+/// at `P = BuiltinProgram` instead of falling back to `dyn` dispatch.
+/// Panics for the extended workloads, like [`Workload::builtin_program`].
+pub fn with_builtin<R>(workload: Workload, f: impl FnOnce(&BuiltinProgram) -> R) -> R {
+    f(&BuiltinProgram::new(workload))
 }
 
 /// The graph actually mapped for a trio workload: WCC uses the undirected
@@ -179,5 +272,36 @@ mod tests {
     #[should_panic(expected = "graph-derived state")]
     fn extended_builtin_program_panics() {
         let _ = Workload::PageRank.builtin_program();
+    }
+
+    #[test]
+    #[should_panic(expected = "graph-derived state")]
+    fn extended_with_builtin_panics() {
+        with_builtin(Workload::Mis, |_| ());
+    }
+
+    #[test]
+    fn builtin_enum_matches_boxed_dyn_hooks() {
+        // the monomorphized dispatch path must answer every hook exactly
+        // like the Box<dyn VertexProgram> it replaces on the hot path
+        for w in Workload::ALL {
+            let dy = w.builtin_program();
+            with_builtin(w, |mono| {
+                assert_eq!(mono.name(), dy.name());
+                assert_eq!(mono.isa().len(), dy.isa().len());
+                for (a, b) in [(0u32, 0u32), (3, 7), (9, 4), (u32::MAX, 1)] {
+                    assert_eq!(mono.combine(a, b), dy.combine(a, b), "{}", w.name());
+                    assert_eq!(mono.coalesce(a, b), dy.coalesce(a, b), "{}", w.name());
+                }
+                for v in [0u32, 5, 41] {
+                    assert_eq!(mono.init_attr(v, 100), dy.init_attr(v, 100));
+                    assert_eq!(mono.aux(v), dy.aux(v));
+                    assert_eq!(mono.seeds(v), dy.seeds(v));
+                    assert_eq!(mono.announces(v, 3), dy.announces(v, 3));
+                }
+                assert_eq!(mono.bound(), dy.bound());
+                assert_eq!(mono.single_source(), dy.single_source());
+            });
+        }
     }
 }

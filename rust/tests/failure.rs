@@ -3,11 +3,12 @@
 //! empty deltas are no-ops, duplicate reweights are last-wins, unknown
 //! arcs are rejected atomically.
 
+use flip::compiler::{compile, CompileOpts};
 use flip::config::ArchConfig;
 use flip::experiments::harness::{CompiledPair, ShardedPair};
 use flip::graph::{generate, reference, Delta};
 use flip::service::{Engine, Job};
-use flip::sim::flip::SimOptions;
+use flip::sim::flip::{SimInstance, SimOptions};
 use flip::workloads::Workload;
 
 fn tiny_opts() -> SimOptions {
@@ -101,6 +102,68 @@ fn duplicate_reweight_is_last_wins_in_graph_and_tables() {
     g2.apply_delta(&delta).unwrap();
     let r = flip::experiments::harness::run_flip(&pair, Workload::Sssp, 0);
     assert_eq!(r.attrs, reference::dijkstra(&g2, 0), "tables agree with last-wins oracle");
+}
+
+#[test]
+fn attr_update_racing_a_reused_instance_is_fully_visible() {
+    // the slab-invalidation hazard class: a SimInstance borrows table
+    // ranges only for the duration of one run (the CompiledGraph slab
+    // offsets are private, every read re-derives its CSR range), so a
+    // weight patch applied between two queries on the SAME live instance
+    // must be completely visible to the second query — no stale ranges,
+    // no cached weights
+    let g = generate::road_network(48, 100, 120, 17);
+    let cfg = ArchConfig::default();
+    let copts = CompileOpts { seed: 17, ..Default::default() };
+    let mut c = compile(&g, &cfg, &copts);
+    let mut inst = SimInstance::new(&c);
+    let before = inst.run(&c, Workload::Sssp, 0, &SimOptions::default()).unwrap();
+    assert_eq!(before.attrs, reference::dijkstra(&g, 0));
+    // reweight a subset of the edges while the instance stays live
+    let changes: Vec<(u32, u32, u32)> = g
+        .arcs()
+        .filter(|&(u, v, _)| u < v && (u + v) % 2 == 0)
+        .map(|(u, v, w)| (u, v, w + 5))
+        .collect();
+    assert!(!changes.is_empty());
+    let delta = Delta::from_edges(&g, &changes);
+    let mut g2 = g.clone();
+    g2.apply_delta(&delta).unwrap();
+    c.apply_attr_updates(&delta).unwrap();
+    let after = inst.run(&c, Workload::Sssp, 0, &SimOptions::default()).unwrap();
+    assert_eq!(after.attrs, reference::dijkstra(&g2, 0), "stale table data served after patch");
+    // and the reused instance over the patched slab is bit-identical to a
+    // cold machine over a full recompile of the reweighted graph
+    let full = compile(&g2, &cfg, &copts);
+    let fresh = flip::sim::flip::run(&full, Workload::Sssp, 0, &SimOptions::default()).unwrap();
+    assert_eq!(after.cycles, fresh.cycles);
+    assert_eq!(after.attrs, fresh.attrs);
+    assert_eq!(after.sim, fresh.sim);
+}
+
+#[test]
+fn rejected_delta_leaves_the_slab_bitwise_untouched() {
+    // failure path of the same hazard class: a delta that fails
+    // validation mid-batch must leave the live slab byte-identical — the
+    // next query on a reused instance reproduces the pre-delta run exactly
+    let g = generate::road_network(48, 100, 120, 19);
+    let cfg = ArchConfig::default();
+    let mut c = compile(&g, &cfg, &CompileOpts { seed: 19, ..Default::default() });
+    let mut inst = SimInstance::new(&c);
+    let before = inst.run(&c, Workload::Sssp, 0, &SimOptions::default()).unwrap();
+    let (u, v, _) = g.arcs().next().unwrap();
+    let missing = (0..48u32)
+        .flat_map(|a| (0..48u32).map(move |b| (a, b)))
+        .find(|&(a, b)| a != b && !g.neighbors(a).any(|(t, _)| t == b))
+        .expect("sparse graph has a missing arc");
+    let mut delta = Delta::new();
+    delta.reweight(&g, u, v, 999); // valid change...
+    delta.reweight(&g, missing.0, missing.1, 1); // ...then an invalid one
+    assert!(c.apply_attr_updates(&delta).is_err());
+    let after = inst.run(&c, Workload::Sssp, 0, &SimOptions::default()).unwrap();
+    assert_eq!(before.cycles, after.cycles, "rejected delta changed the machine");
+    assert_eq!(before.attrs, after.attrs);
+    assert_eq!(before.sim, after.sim);
 }
 
 #[test]

@@ -111,6 +111,104 @@ fn prop_event_core_equals_naive_with_swapping() {
     });
 }
 
+/// Run one program through the monomorphized path (`P` concrete), the
+/// retained dyn-shim (`P = dyn VertexProgram` — the same generic function
+/// instantiated at the trait object) and the dyn-dispatched naive oracle.
+/// All three must agree bitwise on cycles, attrs, edges, and every
+/// SimMetrics counter — the PR-5 monomorphization invariant.
+fn assert_mono_dyn_naive<P: VertexProgram>(
+    c: &flip::compiler::CompiledGraph,
+    vp: &P,
+    src: u32,
+    opts: &SimOptions,
+) -> Result<(), String> {
+    let mono = flipsim::run_program(c, vp, src, opts).map_err(|e| format!("mono: {e}"))?;
+    let shim = flipsim::run_program(c, vp as &dyn VertexProgram, src, opts)
+        .map_err(|e| format!("dyn shim: {e}"))?;
+    let naive =
+        flip::sim::naive::run_program(c, vp, src, opts).map_err(|e| format!("naive: {e}"))?;
+    for (path, r) in [("dyn shim", &shim), ("naive oracle", &naive)] {
+        if mono.cycles != r.cycles {
+            return Err(format!(
+                "{}: {path} cycles {} != mono {}",
+                vp.name(),
+                r.cycles,
+                mono.cycles
+            ));
+        }
+        if mono.attrs != r.attrs {
+            return Err(format!("{}: {path} attrs diverge from mono", vp.name()));
+        }
+        if mono.edges_traversed != r.edges_traversed {
+            return Err(format!("{}: {path} edge counts diverge from mono", vp.name()));
+        }
+        if mono.sim != r.sim {
+            return Err(format!("{}: {path} metrics diverge from mono", vp.name()));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_mono_path_equals_dyn_shim_and_naive() {
+    // all six workloads: monomorphized run ≡ dyn-shim run ≡ naive oracle,
+    // bitwise (cycles, attrs, SimMetrics)
+    check("mono_equals_dyn_and_naive", 18, |rng| {
+        let g = random_graph(rng, 8, 80, false);
+        let cfg = ArchConfig::default();
+        let seed = rng.next_u64();
+        let opts = SimOptions::default();
+        let n = g.num_vertices() as u64;
+        match rng.below(6) {
+            w @ 0..=2 => {
+                let wl = Workload::ALL[w as usize];
+                let view = view_for(wl, &g);
+                let c = compile(&view, &cfg, &CompileOpts { seed, ..Default::default() });
+                let src = rng.below(n) as u32;
+                flip::workloads::with_builtin(wl, |p| assert_mono_dyn_naive(&c, p, src, &opts))?;
+            }
+            3 => {
+                let contribs =
+                    reference::pagerank_contribs(&g, &reference::pagerank_init(g.num_vertices()));
+                let vp = pagerank::PageRankRound { contribs };
+                let c = compile(&g, &cfg, &CompileOpts { seed, ..Default::default() });
+                assert_mono_dyn_naive(&c, &vp, 0, &opts)?;
+            }
+            4 => {
+                let (s, t) = (rng.below(n) as u32, rng.below(n) as u32);
+                let vp = navigation::AStar::new(&g, s, t, 3);
+                let c = compile(&g, &cfg, &CompileOpts { seed, ..Default::default() });
+                assert_mono_dyn_naive(&c, &vp, s, &opts)?;
+            }
+            _ => {
+                let (m, view) = mis::Mis::build(&g, rng.next_u64());
+                let c = compile(&view, &cfg, &CompileOpts { seed, ..Default::default() });
+                assert_mono_dyn_naive(&c, &m, 0, &opts)?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mono_path_equals_dyn_shim_with_swapping() {
+    // the same three-way invariant across the swap engine / SPM parking
+    // path (multi-copy graphs)
+    check("mono_equals_dyn_swapping", 3, |rng| {
+        let g = random_graph(rng, 260, 380, false);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() });
+        prop_assert!(c.placement.num_copies >= 2, "expected replication");
+        let opts =
+            SimOptions { max_cycles: 1_000_000_000, watchdog: 5_000_000, ..Default::default() };
+        let src = rng.below(g.num_vertices() as u64) as u32;
+        flip::workloads::with_builtin(Workload::Bfs, |p| {
+            assert_mono_dyn_naive(&c, p, src, &opts)
+        })?;
+        Ok(())
+    });
+}
+
 /// Build one of the three extended vertex programs plus the graph view it
 /// compiles against. Returns (program, view, source).
 fn random_extended_program(
@@ -371,15 +469,13 @@ fn prop_placement_structurally_valid() {
             let sv = c.placement.slots[v as usize];
             let (dx, dy) = su.pe.offset_to(sv.pe);
             let slice = c.placement.slice_of(&cfg, v);
-            let sc = c.slice_cfg(su.copy, su.pe.index(&cfg));
             prop_assert!(
-                sc.inter[su.reg as usize]
+                c.inter_list(su.copy, su.pe.index(&cfg), su.reg)
                     .iter()
                     .any(|e| (e.dx, e.dy, e.slice) == (dx, dy, slice)),
                 "missing inter entry {u}->{v}"
             );
-            let dc = c.slice_cfg(sv.copy, sv.pe.index(&cfg));
-            let (m, _) = dc.intra.lookup(u);
+            let (m, _) = c.intra_lookup(sv.copy, sv.pe.index(&cfg), u);
             prop_assert!(
                 m.iter().any(|x| x.dst_reg == sv.reg && x.weight == wt),
                 "missing intra entry {u}->{v}"
@@ -395,10 +491,13 @@ fn prop_inter_lists_farthest_first() {
         let g = random_graph(rng, 8, 128, false);
         let cfg = ArchConfig::default();
         let c = compile(&g, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() });
-        for sc in &c.pe_slices {
-            for list in &sc.inter {
-                for w in list.windows(2) {
-                    prop_assert!(w[0].hops() >= w[1].hops(), "layout not farthest-first");
+        for copy in 0..c.placement.num_copies as u16 {
+            for pe in 0..cfg.num_pes() {
+                for reg in 0..cfg.drf_size {
+                    let list = c.inter_list(copy, pe, reg as u8);
+                    for w in list.windows(2) {
+                        prop_assert!(w[0].hops() >= w[1].hops(), "layout not farthest-first");
+                    }
                 }
             }
         }

@@ -154,6 +154,41 @@ fn prop_sharded_engine_matches_single_engine() {
 }
 
 #[test]
+fn prop_sharded_mono_path_equals_dyn_shim() {
+    // the monomorphization differential on the multi-chip layer: the
+    // with_builtin (concrete-P) lockstep run must be bit-identical —
+    // cycles, attrs, metrics, superstep count — to the dyn-shim run, for
+    // K ∈ {1, 2, 4}
+    check("sharded_mono_equals_dyn", 4, |rng| {
+        let g = random_graph(rng, 12, 72);
+        let seed = rng.next_u64();
+        let cfg = ArchConfig::default();
+        let opts = SimOptions::default();
+        let src = rng.below(g.num_vertices() as u64) as u32;
+        for k in [1usize, 2, 4] {
+            let m = ShardedMachine::build(&g, k, &cfg, seed);
+            // multichip::run dispatches through with_builtin (mono path)
+            let mono = multichip::run(&m, Workload::Sssp, src, &opts)
+                .map_err(|e| format!("mono K={k}: {e}"))?;
+            let vp = Workload::Sssp.builtin_program();
+            let mut insts = m.new_instances();
+            let shim = multichip::run_program(&m, &mut insts, vp.as_ref(), src, &opts)
+                .map_err(|e| format!("dyn K={k}: {e}"))?;
+            prop_assert!(
+                mono.result.cycles == shim.result.cycles,
+                "K={k}: cycles {} != {}",
+                mono.result.cycles,
+                shim.result.cycles
+            );
+            prop_assert!(mono.result.attrs == shim.result.attrs, "K={k}: attrs diverge");
+            prop_assert!(mono.result.sim == shim.result.sim, "K={k}: metrics diverge");
+            prop_assert!(mono.supersteps == shim.supersteps, "K={k}: supersteps diverge");
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn sharded_abort_surfaces_as_error_and_instances_recover() {
     // part of the battery: a watchdog/max-cycles abort inside one shard
     // is an Err value, and the same instances then serve correct results

@@ -29,6 +29,12 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 echo "== cargo build --examples =="
 cargo build --examples
 
+# Compile-check the bench binaries without running them: cheap, and it
+# catches bench rot (stale APIs in benches/) that clippy's --all-targets
+# lint pass would only flag, not link.
+echo "== cargo bench --no-run =="
+cargo bench --no-run
+
 # Wall-clock cap on the test step: a hung lockstep/simulator loop must
 # fail the gate fast instead of eating the whole CI budget. Override with
 # TEST_TIMEOUT_SECS; falls back to an uncapped run where coreutils
