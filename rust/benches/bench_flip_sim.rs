@@ -9,7 +9,11 @@
 //! section records `dyn_vs_mono_speedup` (monomorphized event core vs
 //! its own dyn-shim instantiation, incl. the 16k Ext. LRN graph) and
 //! `table_scan_ns_per_delivery` (host ns per delivered packet — the CSR
-//! slab walk cost).
+//! slab walk cost). The fault-model section records `fault_overhead_pct`
+//! (host cost of the quiet active plan's seq+checksum handshake on the
+//! 16k Ext. LRN sharded run; expected ≈ 0) and, for a seeded lossy-link
+//! serving run, `retry_success_rate` / `deadline_abort_pct` from the
+//! engine's batch report (DESIGN.md §8).
 //!
 //! Writes `BENCH_flip_sim.json` (override with `--json <path>`).
 
@@ -19,8 +23,9 @@ use flip::compiler::{compile, CompileOpts};
 use flip::config::ArchConfig;
 use flip::experiments::harness::CompiledPair;
 use flip::graph::datasets::{self, Group};
-use flip::service::{Engine, Job};
+use flip::service::{Engine, Job, ServePolicy};
 use flip::sim::flip::{run, run_program, SimInstance, SimOptions};
+use flip::sim::FaultPlan;
 use flip::sim::naive;
 use flip::workloads::program::VertexProgram;
 use flip::workloads::{with_builtin, Workload};
@@ -257,6 +262,64 @@ fn main() {
     println!("    -> reset-reuse speedup {reset_reuse_speedup:.2}x over per-query cold start");
     suite.add(reuse).metric("reset_reuse_speedup", reset_reuse_speedup);
     suite.add(cold);
+
+    common::section("fault machinery overhead: quiet active plan (16k Ext. LRN, 2 shards)");
+    let m16 = flip::sim::multichip::ShardedMachine::build(&g16, 2, &cfg, 42);
+    let vp16 = Workload::Sssp.builtin_program();
+    let mut insts16 = m16.new_instances();
+    let plain = common::bench("sharded 16k SSSP, no fault plan", 0, 2, || {
+        flip::sim::multichip::run_program(&m16, &mut insts16, vp16.as_ref(), 0, &opts16).unwrap();
+    });
+    // rates 0.0: the seq/checksum handshake and recovery bookkeeping run
+    // on every cut packet, but nothing fires — overhead should be noise
+    let quiet16 = SimOptions {
+        faults: FaultPlan::seeded(42).with_link_rate(0.0).with_stall_rate(0.0),
+        ..opts16.clone()
+    };
+    let quiet = common::bench("  same, quiet active plan (seq+checksum handshake)", 0, 2, || {
+        flip::sim::multichip::run_program(&m16, &mut insts16, vp16.as_ref(), 0, &quiet16).unwrap();
+    });
+    let fault_overhead_pct = (quiet.mean_ms / plain.mean_ms - 1.0) * 100.0;
+    println!("    -> fault handshake overhead {fault_overhead_pct:+.1}% host time");
+    suite.add(plain).metric("fault_overhead_pct", fault_overhead_pct);
+    suite.add(quiet);
+
+    common::section("deadline-budgeted serving on a lossy fabric (Lrn, 2 shards)");
+    let spair = flip::experiments::harness::ShardedPair::build(&g, 2, &cfg, 42);
+    // budget each query at 4x a clean SSSP, so most retries fit but an
+    // unlucky streak aborts on its deadline instead of hanging
+    let probe = flip::sim::multichip::run(&spair.directed, Workload::Sssp, 0, &SimOptions::default())
+        .unwrap()
+        .result
+        .cycles;
+    let lossy = FaultPlan::seeded(0xFA17).with_link_rate(0.35).with_max_retransmits(1);
+    let mut engine = Engine::new_sharded(&spair)
+        .with_opts(SimOptions { faults: lossy, ..Default::default() })
+        .with_policy(ServePolicy { deadline: Some(4 * probe), max_retries: 3 });
+    let jobs: Vec<Job> = (0..32usize)
+        .map(|i| Job::Workload([Workload::Bfs, Workload::Sssp][i % 2], (i as u32 * 29) % n))
+        .collect();
+    let mut served_ok = 0usize;
+    let mut aborts = 0u64;
+    let mut batch_retries = 0u64;
+    let r = common::bench("engine: 32 queries, lossy links, 3 retries", 1, 3, || {
+        let rep = engine.serve(&jobs);
+        served_ok = rep.results.iter().filter(|r| r.is_ok()).count();
+        aborts = rep.deadline_aborts;
+        batch_retries = rep.retries;
+    });
+    let retry_success_rate = served_ok as f64 / jobs.len() as f64;
+    let deadline_abort_pct = aborts as f64 / jobs.len() as f64 * 100.0;
+    println!(
+        "    -> {served_ok}/{} answered ({batch_retries} retries), \
+         {deadline_abort_pct:.1}% deadline aborts",
+        jobs.len()
+    );
+    suite
+        .add(r)
+        .metric("retry_success_rate", retry_success_rate)
+        .metric("deadline_abort_pct", deadline_abort_pct)
+        .metric("retries", batch_retries as f64);
 
     suite.write().expect("write bench json");
 }

@@ -234,8 +234,10 @@ pub fn beam_search_initial(g: &Graph, cfg: &ArchConfig, opts: &CompileOpts) -> P
                     .collect();
                 ranked.sort_unstable();
                 for &(add, pi) in ranked.iter().take(P_CAN_CAP) {
-                    let copy = pick_copy(&node.occupancy, pi, num_pes, num_copies, drf)
-                        .expect("filtered for capacity");
+                    let Some(copy) = pick_copy(&node.occupancy, pi, num_pes, num_copies, drf)
+                    else {
+                        unreachable!("p_can was filtered for capacity");
+                    };
                     let pe = PeCoord::from_index(pi, cfg);
                     let reg = node.occupancy[copy as usize * num_pes + pi];
                     succs.push((bi, v, Slot { copy, pe, reg }, node.cost + add));
@@ -265,10 +267,12 @@ pub fn beam_search_initial(g: &Graph, cfg: &ArchConfig, opts: &CompileOpts) -> P
         beam = next;
     }
 
-    let best = beam.into_iter().min_by_key(|b| b.cost).unwrap();
+    let Some(best) = beam.into_iter().min_by_key(|b| b.cost) else {
+        unreachable!("beam is never empty: it starts seeded and every step re-fills it");
+    };
     Placement {
         num_copies,
-        slots: best.slots.into_iter().map(|s| s.unwrap()).collect(),
+        slots: best.slots.into_iter().flatten().collect(),
     }
 }
 

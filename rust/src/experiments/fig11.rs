@@ -61,9 +61,11 @@ pub fn run(env: &ExpEnv) -> super::ExpResult {
         if let Some(k) =
             crate::sim::opcentric::compile_kernel(Workload::Bfs, &env.cfg, u, env.seed)
         {
-            let base =
+            let Some(base) =
                 crate::sim::opcentric::compile_kernel(Workload::Bfs, &env.cfg, 1, env.seed)
-                    .unwrap();
+            else {
+                unreachable!("unroll-1 BFS kernel maps whenever unroll-{u} does");
+            };
             let (mut cu, mut c1) = (0.0, 0.0);
             for g in &graphs {
                 cu += crate::sim::opcentric::run(&k, g, 0).cycles as f64;

@@ -188,14 +188,19 @@ where
                 })
             })
             .collect();
-        workers.into_iter().map(|w| w.join().expect("worker panicked")).collect()
+        workers
+            .into_iter()
+            .map(|w| w.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
+            .collect()
     });
     let mut out: Vec<Option<R>> = Vec::with_capacity(n);
     out.resize_with(n, || None);
     for (i, r) in chunks.into_iter().flatten() {
         out[i] = Some(r);
     }
-    out.into_iter().map(|o| o.expect("missing result")).collect()
+    out.into_iter()
+        .map(|o| o.unwrap_or_else(|| unreachable!("every index is claimed exactly once")))
+        .collect()
 }
 
 /// Thread-parallel multi-run driver, routed through the query-serving
@@ -209,11 +214,11 @@ pub fn run_flip_many(
     pair: &CompiledPair,
     jobs: &[(Workload, u32)],
     opts: &flip::SimOptions,
-) -> Result<Vec<RunResult>, String> {
+) -> Result<Vec<RunResult>, crate::service::QueryError> {
     let jb: Vec<crate::service::Job> =
         jobs.iter().map(|&(w, src)| crate::service::Job::Workload(w, src)).collect();
     let mut engine = crate::service::Engine::new(pair).with_opts(opts.clone());
-    engine.serve(&jb).into_runs().map_err(|e| e.to_string())
+    engine.serve(&jb).into_runs()
 }
 
 /// Run FLIP (cycle-accurate) for one (workload, source), panicking on
@@ -222,20 +227,22 @@ pub fn run_flip_many(
 /// `Result`-returning [`run_flip_opts`] / [`run_flip_many`] instead.
 pub fn run_flip(pair: &CompiledPair, w: Workload, source: u32) -> RunResult {
     run_flip_opts(pair, w, source, &flip::SimOptions::default())
-        .unwrap_or_else(|e| panic!("{e}"))
+        .unwrap_or_else(|e| panic!("FLIP sim failed ({}, src {source}): {e}", w.name()))
 }
 
 /// [`run_flip`] with explicit simulator options, surfacing simulator
-/// aborts (watchdog, max-cycles) as an `Err` value.
+/// aborts (watchdog, max-cycles, deadline) as a typed
+/// [`crate::sim::SimError`]. Experiment drivers with `String` error
+/// channels still get the rendered message for free through
+/// `From<SimError> for String`.
 pub fn run_flip_opts(
     pair: &CompiledPair,
     w: Workload,
     source: u32,
     opts: &flip::SimOptions,
-) -> Result<RunResult, String> {
+) -> Result<RunResult, crate::sim::SimError> {
     let c = pair.for_workload(w);
-    let r = flip::run(c, w, source, opts)
-        .map_err(|e| format!("FLIP sim failed ({}, src {source}): {e}", w.name()))?;
+    let r = flip::run(c, w, source, opts)?;
     debug_check_reference(pair, w, source, &r);
     Ok(r)
 }
@@ -280,7 +287,9 @@ impl Baselines {
         let kernels = Workload::ALL
             .iter()
             .map(|&w| {
-                (w, opcentric::compile_kernel(w, cfg, 1, seed).expect("baseline kernel maps"))
+                let k = opcentric::compile_kernel(w, cfg, 1, seed)
+                    .unwrap_or_else(|| panic!("baseline kernel for {} must map", w.name()));
+                (w, k)
             })
             .collect();
         Baselines { kernels, mcu: mcu.clone() }
@@ -288,7 +297,10 @@ impl Baselines {
 
     /// The cached kernel for one trio workload.
     pub fn kernel(&self, w: Workload) -> &opcentric::OpCentricKernel {
-        &self.kernels.iter().find(|(k, _)| *k == w).unwrap().1
+        match self.kernels.iter().find(|(k, _)| *k == w) {
+            Some((_, kernel)) => kernel,
+            None => unreachable!("Baselines::build compiles every trio workload"),
+        }
     }
 
     /// Run the classic-CGRA baseline.
@@ -367,7 +379,8 @@ mod tests {
         // and the sweep reports it as a value instead of a thread panic
         let tiny = flip::SimOptions { max_cycles: 1, ..Default::default() };
         let err = run_flip_many(&pair, &jobs, &tiny).unwrap_err();
-        assert!(err.contains("max_cycles"), "{err}");
+        assert!(err.msg.contains("max_cycles"), "{err}");
+        assert_eq!(err.kind, crate::service::QueryErrorKind::Fatal);
     }
 
     #[test]

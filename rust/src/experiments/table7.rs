@@ -39,7 +39,10 @@ pub fn run(env: &ExpEnv) -> super::ExpResult {
     a.row(&["  get collision set".into(), "O(C)".into()]);
     a.row(&["  get candidate vertex pairs".into(), "O(C^2)".into()]);
     a.row(&["  time estimation for all edges of a pair".into(), "O(|E|/|V|)".into()]);
-    let growth = per_edge.last().unwrap() / per_edge.first().unwrap();
+    let growth = match (per_edge.last(), per_edge.first()) {
+        (Some(last), Some(first)) => last / first,
+        _ => unreachable!("the sweep always measures at least one graph"),
+    };
     Ok(format!(
         "{}\n{}\nScaling check: beam-search time per edge grows {}x from |V|=32 to 256\n\
          (≈O(|E|) would be ~1x; beam candidate sets add a mild superlinear factor).\n",

@@ -187,7 +187,7 @@ impl Graph {
             self.arc_index(u, v)?;
         }
         for &(u, v, w) in delta.arcs() {
-            let i = self.arc_index(u, v).expect("validated above");
+            let i = self.arc_index(u, v)?;
             self.weights[i] = w;
         }
         Ok(())

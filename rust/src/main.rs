@@ -9,6 +9,7 @@
 //!          [--golden] [--set key=val]...
 //! flip serve --group <g> [--idx I] [--queries N] [--threads T]
 //!            [--workload bfs|sssp|wcc|nav|mix] [--shards K] [--seed S]
+//!            [--faults SEED] [--deadline CYCLES] [--retries N]
 //!            [--set key=val]...
 //! flip compile --group <g> [--idx I]        mapping statistics
 //! flip golden --workload <w> --group <g>    validate sim vs PJRT artifacts
@@ -134,7 +135,8 @@ fn print_usage() {
     println!("  serve          query-serving engine: compile once, serve a random query batch");
     println!("                 (--group, [--idx], [--queries N], [--threads T],");
     println!("                 [--workload bfs|sssp|wcc|nav|mix], [--shards K] for a");
-    println!("                 K-chip partitioned machine)");
+    println!("                 K-chip partitioned machine; [--faults SEED] lossy links,");
+    println!("                 [--deadline CYCLES] per-query budget, [--retries N])");
     println!("  compile        mapping statistics (--group, --idx)");
     println!("  golden         validate simulator vs PJRT golden model");
     println!("  info           configuration and artifact status");
@@ -166,6 +168,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         trace_parallelism: args.has("trace"),
         max_cycles: 2_000_000_000,
         watchdog: 5_000_000,
+        ..Default::default()
     };
     if w.is_extended() {
         if args.has("golden") {
@@ -304,14 +307,21 @@ fn cmd_run_extended(
 /// it, reporting throughput. `--workload mix` interleaves BFS, SSSP and
 /// (on undirected road groups) point-to-point navigation. `--shards K`
 /// serves against a K-chip partitioned machine (DESIGN.md §7) instead of
-/// a single fabric.
+/// a single fabric. `--faults <seed>` makes the inter-chip links lossy
+/// under a seeded fault plan, `--deadline <cycles>` gives every query a
+/// modeled-cycle budget and `--retries <n>` bounds per-query retries of
+/// transient faults (DESIGN.md §8); with either knob active the batch
+/// runs in partial-results mode instead of aborting on the first error.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use flip::service::{Engine, Job};
+    use flip::service::{Engine, Job, ServePolicy};
     let env = args.env()?;
     let group = args.group()?;
     let idx: usize = args.flag("idx").unwrap_or("0").parse()?;
     let queries: usize = args.flag("queries").unwrap_or("256").parse()?;
     let shards: usize = args.flag("shards").unwrap_or("0").parse()?;
+    let faults: Option<u64> = args.flag("faults").map(|s| s.parse()).transpose()?;
+    let deadline: Option<u64> = args.flag("deadline").map(|s| s.parse()).transpose()?;
+    let retries: u32 = args.flag("retries").unwrap_or("0").parse()?;
     let threads: usize = match args.flag("threads") {
         Some(t) => t.parse()?,
         None => std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
@@ -356,7 +366,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         g.num_edges()
     );
     let t0 = std::time::Instant::now();
-    let opts = SimOptions { max_cycles: 2_000_000_000, watchdog: 5_000_000, ..Default::default() };
+    let mut opts =
+        SimOptions { max_cycles: 2_000_000_000, watchdog: 5_000_000, ..Default::default() };
+    if let Some(seed) = faults {
+        opts.faults = flip::sim::FaultPlan::seeded(seed);
+        println!("  fault plan        : seed {seed} ({:?})", opts.faults);
+    }
+    let policy = ServePolicy { deadline, max_retries: retries };
     let report = if shards >= 1 {
         let spair =
             flip::experiments::harness::ShardedPair::build(&g, shards, &env.cfg, env.seed);
@@ -367,12 +383,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             spair.directed.part.cut.len(),
             spair.directed.part.cut_fraction() * 100.0
         );
-        let mut engine = Engine::new_sharded(&spair).with_workers(threads).with_opts(opts);
+        let mut engine = Engine::new_sharded(&spair)
+            .with_workers(threads)
+            .with_opts(opts)
+            .with_policy(policy);
         engine.serve(&jobs)
     } else {
         let pair = flip::experiments::harness::CompiledPair::build(&g, &env.cfg, env.seed);
         println!("  compile + map     : {:.1} ms (once)", t0.elapsed().as_secs_f64() * 1e3);
-        let mut engine = Engine::new(&pair).with_workers(threads).with_opts(opts);
+        let mut engine =
+            Engine::new(&pair).with_workers(threads).with_opts(opts).with_policy(policy);
         engine.serve(&jobs)
     };
     let errors = report.results.iter().filter(|r| r.is_err()).count();
@@ -381,7 +401,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  queries/s         : {:.1}", report.queries_per_s);
     println!("  sim cycles        : {}", report.sim_cycles);
     println!("  sim PE-cycles/s   : {:.1}M", report.pe_cycles_per_s / 1e6);
-    if let Some(e) = report.first_error() {
+    if faults.is_some() || deadline.is_some() {
+        // lossy/budgeted serving: report partial results instead of
+        // failing the whole batch on the first transient
+        println!("  retries           : {}", report.retries);
+        println!("  deadline aborts   : {}", report.deadline_aborts);
+        let (ok, bad) = report.partial();
+        println!("  partial results   : {} answered, {} failed", ok.len(), bad.len());
+        for e in bad.iter().take(5) {
+            println!("    [{:?}] {e}", e.kind);
+        }
+        if bad.len() > 5 {
+            println!("    ... and {} more", bad.len() - 5);
+        }
+    } else if let Some(e) = report.first_error() {
         return Err(format!("first failed query: {e}").into());
     }
     Ok(())

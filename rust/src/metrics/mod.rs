@@ -113,6 +113,14 @@ pub struct SimMetrics {
     /// Inter-chip link busy cycles: serialization occupancy summed over
     /// every directed link; always zero for single-chip runs.
     pub chip_link_cycles: u64,
+    /// Link-layer retransmissions performed by the multi-chip recovery
+    /// protocol ([`crate::sim::fault`]); always zero without an active
+    /// fault plan.
+    pub link_retransmits: u64,
+    /// Modeled cycles spent recovering from injected faults: retransmit
+    /// serialization + backoff, delay absorption, and rolled-back
+    /// superstep replays; always zero without an active fault plan.
+    pub fault_recovery_cycles: u64,
     /// Activity counters for the energy model.
     pub activity: ActivityCounts,
     /// Per-cycle busy-ALU counts (only kept when tracing is enabled).

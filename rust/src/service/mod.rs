@@ -18,7 +18,20 @@
 //! **Failure isolation.** A failing query (simulator abort, bad source,
 //! navigation on a directed graph) comes back as a [`QueryError`] *value*
 //! in the batch — worker threads never panic, so one poisoned query
-//! cannot take down a sweep (the repo's earlier behaviour).
+//! cannot take down a sweep (the repo's earlier behaviour). Every error
+//! carries a [`QueryErrorKind`] so callers can tell retryable transients
+//! from fatal aborts, and [`BatchReport::partial`] splits a mixed batch
+//! into answers-plus-failures for partial-results consumers.
+//!
+//! **Deadlines & retries (DESIGN.md §8).** A [`ServePolicy`] gives each
+//! query a modeled-cycle deadline budget and a bounded retry count for
+//! transient faults (lossy links, chip stalls under an active
+//! [`crate::sim::FaultPlan`]). Attempts run with the *remaining* budget
+//! as their simulator deadline; a failed attempt's consumed cycles are
+//! charged against the budget before the retry, and each retry reseeds
+//! the fault plan so it does not deterministically replay the same
+//! fault. The default policy (no deadline, zero retries) reproduces the
+//! pre-policy engine bit-exactly.
 //!
 //! **Backpressure.** The engine is batch-synchronous: callers hand it a
 //! bounded job slice and block until the [`BatchReport`] is complete.
@@ -43,6 +56,7 @@
 
 use crate::experiments::harness::{CompiledPair, ShardedPair};
 use crate::metrics::RunResult;
+use crate::sim::error::SimError;
 use crate::sim::flip::{SimInstance, SimOptions};
 use crate::sim::multichip;
 use crate::workloads::navigation::Landmarks;
@@ -77,14 +91,44 @@ impl Job {
     }
 }
 
+/// Why a query failed — the caller-facing retryability contract
+/// (DESIGN.md §8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueryErrorKind {
+    /// The job itself is unservable (out-of-range source, extended
+    /// workload, missing landmarks): retrying cannot help and no cycles
+    /// were simulated.
+    Rejected,
+    /// A transient fault (a lossy link gave up, a chip stalled): a retry
+    /// under a reseeded fault plan may succeed.
+    Transient,
+    /// The per-query deadline budget was exhausted.
+    Deadline,
+    /// A non-transient simulator abort (max-cycles safety net, a
+    /// program-contract violation): retrying would reproduce it.
+    Fatal,
+}
+
 /// A failed query, surfaced as data so one bad query cannot poison a
 /// batch or panic a worker thread.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct QueryError {
     /// The job that failed, rendered for diagnostics.
     pub job: String,
+    /// Failure classification: what a caller may do about it.
+    pub kind: QueryErrorKind,
+    /// Modeled cycles the failed attempt consumed before aborting (what
+    /// retry budgeting subtracts); zero for rejected jobs.
+    pub cycles: u64,
     /// The simulator/engine error message.
     pub msg: String,
+}
+
+impl QueryError {
+    /// Whether an engine-level retry is worth attempting.
+    pub fn is_retryable(&self) -> bool {
+        self.kind == QueryErrorKind::Transient
+    }
 }
 
 impl std::fmt::Display for QueryError {
@@ -94,6 +138,14 @@ impl std::fmt::Display for QueryError {
 }
 
 impl std::error::Error for QueryError {}
+
+/// Render into legacy `String`-error channels (experiment drivers, CLI)
+/// so `?` keeps working across the typed boundary.
+impl From<QueryError> for String {
+    fn from(e: QueryError) -> String {
+        e.to_string()
+    }
+}
 
 /// One answered query.
 #[derive(Debug, Clone)]
@@ -123,6 +175,11 @@ pub struct BatchReport {
     pub pe_cycles_per_s: f64,
     /// Worker threads actually used for this batch.
     pub workers: usize,
+    /// Retries performed across the batch under the [`ServePolicy`]
+    /// (counted whether or not the retried query eventually succeeded).
+    pub retries: u64,
+    /// Queries that aborted on their per-query deadline.
+    pub deadline_aborts: u64,
 }
 
 impl BatchReport {
@@ -136,6 +193,37 @@ impl BatchReport {
     pub fn into_runs(self) -> Result<Vec<RunResult>, QueryError> {
         self.results.into_iter().map(|r| r.map(|q| q.run)).collect()
     }
+
+    /// Partial-results mode: the successful answers (in job order) plus
+    /// the failures alongside — one poisoned query never fails a batch.
+    pub fn partial(self) -> (Vec<QueryResult>, Vec<QueryError>) {
+        let mut ok = Vec::new();
+        let mut bad = Vec::new();
+        for r in self.results {
+            match r {
+                Ok(q) => ok.push(q),
+                Err(e) => bad.push(e),
+            }
+        }
+        (ok, bad)
+    }
+}
+
+/// Per-batch serving policy: the deadline budget each query gets and how
+/// many times a *retryable* failure is retried within that budget. The
+/// default policy (no deadline, no retries) reproduces the pre-policy
+/// engine exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ServePolicy {
+    /// Modeled-cycle budget per query, spent across all its attempts
+    /// (each attempt runs with the remaining budget as its simulator
+    /// deadline). `None` = no deadline. Overrides any deadline already
+    /// present in the engine's [`SimOptions`].
+    pub deadline: Option<u64>,
+    /// Retries allowed per query for [`QueryErrorKind::Transient`]
+    /// failures; each retry reseeds the fault plan
+    /// ([`crate::sim::fault::FaultPlan::reseeded`]).
+    pub max_retries: u32,
 }
 
 /// What an [`Engine`] serves against: one single-chip compiled pair, or
@@ -186,6 +274,7 @@ pub struct Engine<'a> {
     /// invalidated by rebuilding the engine after a traffic delta).
     landmarks: Option<Landmarks>,
     opts: SimOptions,
+    policy: ServePolicy,
     workers: usize,
 }
 
@@ -205,7 +294,8 @@ impl<'a> Engine<'a> {
     fn over(target: Target<'a>) -> Engine<'a> {
         let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
         let opts = SimOptions::default();
-        Engine { target, machines: Vec::new(), landmarks: None, opts, workers }
+        let policy = ServePolicy::default();
+        Engine { target, machines: Vec::new(), landmarks: None, opts, policy, workers }
     }
 
     /// Override the worker-thread count (clamped to ≥ 1).
@@ -225,6 +315,17 @@ impl<'a> Engine<'a> {
     /// their next run).
     pub fn set_opts(&mut self, opts: SimOptions) {
         self.opts = opts;
+    }
+
+    /// Set the per-query deadline/retry policy ([`ServePolicy`]).
+    pub fn with_policy(mut self, policy: ServePolicy) -> Engine<'a> {
+        self.policy = policy;
+        self
+    }
+
+    /// Change the serving policy between batches.
+    pub fn set_policy(&mut self, policy: ServePolicy) {
+        self.policy = policy;
     }
 
     /// Build the ALT landmarks now (panics on directed graphs, like
@@ -260,10 +361,18 @@ impl<'a> Engine<'a> {
         let target = &self.target;
         let lm = self.landmarks.as_ref();
         let opts = &self.opts;
+        let policy = self.policy;
         let t0 = std::time::Instant::now();
+        let mut retries = 0u64;
         let results: Vec<Result<QueryResult, QueryError>> = if want <= 1 {
             let m = &mut self.machines[0];
-            jobs.iter().map(|&j| answer(m, target, lm, opts, j)).collect()
+            jobs.iter()
+                .map(|&j| {
+                    let (r, result) = answer_budgeted(m, target, lm, opts, policy, j);
+                    retries += u64::from(r);
+                    result
+                })
+                .collect()
         } else {
             let next = AtomicUsize::new(0);
             let chunks: Vec<Vec<_>> = std::thread::scope(|s| {
@@ -280,7 +389,9 @@ impl<'a> Engine<'a> {
                                     if i >= jobs.len() {
                                         break;
                                     }
-                                    local.push((i, answer(m, target, lm, opts, jobs[i])));
+                                    let (r, result) =
+                                        answer_budgeted(m, target, lm, opts, policy, jobs[i]);
+                                    local.push((i, r, result));
                                 }
                                 local
                             })
@@ -288,20 +399,31 @@ impl<'a> Engine<'a> {
                         .collect();
                     handles
                         .into_iter()
-                        .map(|h| h.join().expect("engine worker panicked"))
+                        .map(|h| {
+                            h.join().unwrap_or_else(|_| {
+                                unreachable!("engine workers surface failures as QueryError")
+                            })
+                        })
                         .collect()
                 });
             let mut out: Vec<Option<Result<QueryResult, QueryError>>> =
                 Vec::with_capacity(jobs.len());
             out.resize_with(jobs.len(), || None);
-            for (i, r) in chunks.into_iter().flatten() {
-                out[i] = Some(r);
+            for (i, r, result) in chunks.into_iter().flatten() {
+                retries += u64::from(r);
+                out[i] = Some(result);
             }
-            out.into_iter().map(|o| o.expect("missing engine result")).collect()
+            out.into_iter()
+                .map(|o| o.unwrap_or_else(|| unreachable!("every job index is claimed once")))
+                .collect()
         };
         let wall = t0.elapsed().as_secs_f64();
         let sim_cycles: u64 =
             results.iter().filter_map(|r| r.as_ref().ok()).map(|q| q.run.cycles).sum();
+        let deadline_aborts = results
+            .iter()
+            .filter(|r| matches!(r, Err(e) if e.kind == QueryErrorKind::Deadline))
+            .count() as u64;
         let num_pes = self.target.num_pes() as f64;
         BatchReport {
             queries_per_s: if wall > 0.0 { jobs.len() as f64 / wall } else { 0.0 },
@@ -309,12 +431,74 @@ impl<'a> Engine<'a> {
             sim_cycles,
             wall_seconds: wall,
             workers: want,
+            retries,
+            deadline_aborts,
             results,
         }
     }
 }
 
-/// Answer one job on a worker's machine.
+/// Classify a simulator abort for the caller-facing retry contract.
+fn kind_of(e: &SimError) -> QueryErrorKind {
+    if matches!(e, SimError::DeadlineExceeded { .. }) {
+        QueryErrorKind::Deadline
+    } else if e.is_retryable() {
+        QueryErrorKind::Transient
+    } else {
+        QueryErrorKind::Fatal
+    }
+}
+
+/// Answer one job under the engine's [`ServePolicy`]: deadline-budgeted
+/// attempts with bounded retries for transient faults. Returns the retry
+/// count alongside the final outcome.
+///
+/// The budget is spent across attempts: each attempt runs with the
+/// *remaining* budget as its simulator deadline, and a failed attempt's
+/// consumed cycles ([`SimError::cycles_consumed`]) are subtracted before
+/// the next. Retries reseed the fault plan
+/// ([`crate::sim::fault::FaultPlan::reseeded`]) so a retry does not
+/// deterministically replay the fault that killed the last attempt.
+fn answer_budgeted(
+    machine: &mut WorkerMachine,
+    target: &Target,
+    lm: Option<&Landmarks>,
+    opts: &SimOptions,
+    policy: ServePolicy,
+    job: Job,
+) -> (u32, Result<QueryResult, QueryError>) {
+    let mut remaining = policy.deadline;
+    let mut attempt = 0u32;
+    loop {
+        let mut a_opts = opts.clone();
+        if policy.deadline.is_some() {
+            a_opts.deadline = remaining;
+        }
+        a_opts.faults = opts.faults.reseeded(attempt);
+        let result = answer(machine, target, lm, &a_opts, job);
+        match result {
+            Err(ref e) if e.is_retryable() && attempt < policy.max_retries => {
+                if let Some(budget) = remaining {
+                    let left = budget.saturating_sub(e.cycles);
+                    if left == 0 {
+                        // budget exhausted by the failed attempts: the
+                        // transient fault is now a deadline abort
+                        let e = e.clone();
+                        return (
+                            attempt,
+                            Err(QueryError { kind: QueryErrorKind::Deadline, ..e }),
+                        );
+                    }
+                    remaining = Some(left);
+                }
+                attempt += 1;
+            }
+            _ => return (attempt, result),
+        }
+    }
+}
+
+/// Answer one job on a worker's machine (a single attempt).
 fn answer(
     machine: &mut WorkerMachine,
     target: &Target,
@@ -322,7 +506,20 @@ fn answer(
     opts: &SimOptions,
     job: Job,
 ) -> Result<QueryResult, QueryError> {
-    let fail = |msg: String| QueryError { job: job.describe(), msg };
+    // unservable job: no cycles simulated, retrying cannot help
+    let fail = |msg: String| QueryError {
+        job: job.describe(),
+        kind: QueryErrorKind::Rejected,
+        cycles: 0,
+        msg,
+    };
+    // simulator abort: classify it and record the cycles it burned
+    let sim_fail = |e: SimError| QueryError {
+        job: job.describe(),
+        kind: kind_of(&e),
+        cycles: e.cycles_consumed(),
+        msg: e.to_string(),
+    };
     let n = target.graph().num_vertices();
     match job {
         Job::Workload(w, source) => {
@@ -340,13 +537,14 @@ fn answer(
             let run = crate::workloads::with_builtin(w, |vp| match (machine, target) {
                 (WorkerMachine::Single(inst), &Target::Single(pair)) => {
                     let c = pair.for_workload(w);
-                    let run = inst.run_program(c, vp, source, opts).map_err(&fail)?;
+                    let run = inst.run_program(c, vp, source, opts).map_err(&sim_fail)?;
                     crate::experiments::harness::debug_check_reference(pair, w, source, &run);
                     Ok(run)
                 }
                 (WorkerMachine::Sharded(insts), &Target::Sharded(pair)) => {
                     let m = pair.for_workload(w);
-                    let sr = multichip::run_program(m, insts, vp, source, opts).map_err(&fail)?;
+                    let sr =
+                        multichip::run_program(m, insts, vp, source, opts).map_err(&sim_fail)?;
                     crate::experiments::harness::debug_check_reference_views(
                         &pair.graph,
                         &pair.wcc_view,
@@ -370,11 +568,11 @@ fn answer(
             let vp = lm.query(source, dst);
             let run = match (machine, target) {
                 (WorkerMachine::Single(inst), &Target::Single(pair)) => {
-                    inst.run_program(&pair.directed, &vp, source, opts).map_err(&fail)?
+                    inst.run_program(&pair.directed, &vp, source, opts).map_err(&sim_fail)?
                 }
                 (WorkerMachine::Sharded(insts), &Target::Sharded(pair)) => {
                     multichip::run_program(&pair.directed, insts, &vp, source, opts)
-                        .map_err(&fail)?
+                        .map_err(&sim_fail)?
                         .result
                 }
                 _ => unreachable!("worker machine built from its own target"),

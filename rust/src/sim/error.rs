@@ -1,0 +1,185 @@
+//! Typed simulator errors (DESIGN.md §8).
+//!
+//! Every sim-layer result path (`flip`, `naive`, `multichip`) returns
+//! [`SimError`] instead of a bare `String`, so callers — the serving
+//! engine above all — can distinguish *retryable* failures (a faulty
+//! link gave up, a chip stalled transiently) from *fatal* ones (budget
+//! exhausted, malformed input, a program-contract violation). The
+//! `Display` text keeps the exact phrasing the string errors used
+//! (`"exceeded max_cycles=…"`, `"shard {s}: …"`) so diagnostics and
+//! log-scraping tests are unchanged.
+
+/// A failed simulator run, classified.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SimError {
+    /// The run exceeded [`super::SimOptions::max_cycles`] (safety net).
+    MaxCycles {
+        /// The configured cycle ceiling.
+        limit: u64,
+    },
+    /// The no-progress watchdog fired: nothing changed for `watchdog`
+    /// consecutive cycles (a deadlock, or an injected transient stall).
+    WatchdogStall {
+        /// The configured watchdog window.
+        watchdog: u64,
+        /// Modeled cycle at which the watchdog fired.
+        cycle: u64,
+        /// Machine-state diagnostic snapshot (in-flight packet counts).
+        diag: String,
+    },
+    /// The run exceeded its per-query deadline
+    /// ([`super::SimOptions::deadline`]) in modeled cycles.
+    DeadlineExceeded {
+        /// The modeled-cycle budget that was exhausted.
+        deadline: u64,
+    },
+    /// An inter-chip link packet stayed undeliverable after the bounded
+    /// retransmit budget ([`super::fault::FaultPlan::max_retransmits`]).
+    LinkFault {
+        /// Source shard of the directed link.
+        src: u16,
+        /// Destination shard of the directed link.
+        dst: u16,
+        /// Per-link sequence number of the poisoned packet.
+        seq: u64,
+        /// Transmission attempts made (initial send + retransmits).
+        attempts: u32,
+        /// Modeled cycle count already consumed when the link gave up.
+        at_cycle: u64,
+    },
+    /// A shard of a multi-chip run failed; `cause` is the underlying
+    /// error (an injected stall that exhausted its replay budget, or any
+    /// single-chip abort inside the shard).
+    ChipFailed {
+        /// The failing shard.
+        shard: u16,
+        /// The underlying per-chip error.
+        cause: Box<SimError>,
+    },
+    /// The compiled graph targets a different [`crate::config::ArchConfig`]
+    /// than the machine instance was built with.
+    FabricMismatch,
+    /// Malformed caller input (out-of-range source, attribute-vector
+    /// length mismatch, wrong instance count).
+    InvalidInput(String),
+    /// The multi-chip lockstep loop outlived its superstep bound — a
+    /// program-contract violation, never a transient condition.
+    NoConvergence {
+        /// The superstep bound that was exceeded.
+        supersteps: u64,
+    },
+}
+
+impl SimError {
+    /// Convenience constructor for [`SimError::InvalidInput`].
+    pub fn invalid(msg: impl Into<String>) -> SimError {
+        SimError::InvalidInput(msg.into())
+    }
+
+    /// Would an identical retry plausibly succeed? Link faults and
+    /// transient stalls are environmental (a reseeded fault plan, or none
+    /// at all, clears them); budget/input/contract errors are not.
+    pub fn is_retryable(&self) -> bool {
+        match self {
+            SimError::LinkFault { .. } | SimError::WatchdogStall { .. } => true,
+            SimError::ChipFailed { cause, .. } => cause.is_retryable(),
+            _ => false,
+        }
+    }
+
+    /// Modeled cycles the failed run consumed before aborting — what an
+    /// engine-level retry must subtract from the remaining deadline
+    /// budget. Zero for errors raised before any cycle was simulated.
+    pub fn cycles_consumed(&self) -> u64 {
+        match self {
+            SimError::MaxCycles { limit } => *limit,
+            SimError::WatchdogStall { cycle, .. } => *cycle,
+            SimError::DeadlineExceeded { deadline } => *deadline,
+            SimError::LinkFault { at_cycle, .. } => *at_cycle,
+            SimError::ChipFailed { cause, .. } => cause.cycles_consumed(),
+            SimError::FabricMismatch
+            | SimError::InvalidInput(_)
+            | SimError::NoConvergence { .. } => 0,
+        }
+    }
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::MaxCycles { limit } => write!(f, "exceeded max_cycles={limit}"),
+            SimError::WatchdogStall { watchdog, cycle, diag } => {
+                write!(f, "no progress for {watchdog} cycles at cycle {cycle} (deadlock?): {diag}")
+            }
+            SimError::DeadlineExceeded { deadline } => {
+                write!(f, "deadline of {deadline} modeled cycles exceeded")
+            }
+            SimError::LinkFault { src, dst, seq, attempts, .. } => write!(
+                f,
+                "link {src}->{dst}: packet seq {seq} undeliverable after {attempts} attempts"
+            ),
+            SimError::ChipFailed { shard, cause } => write!(f, "shard {shard}: {cause}"),
+            SimError::FabricMismatch => {
+                write!(f, "fabric mismatch: the compiled graph targets a different ArchConfig")
+            }
+            SimError::InvalidInput(msg) => write!(f, "{msg}"),
+            SimError::NoConvergence { supersteps } => write!(
+                f,
+                "lockstep did not converge within {supersteps} supersteps \
+                 (program violates the determinism contract?)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// Driver-level code (`experiments`, the CLI) still aggregates
+/// human-readable strings; `?` keeps working across the typed boundary.
+impl From<SimError> for String {
+    fn from(e: SimError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_keeps_the_grep_anchors() {
+        assert!(SimError::MaxCycles { limit: 7 }.to_string().contains("max_cycles=7"));
+        let chip = SimError::ChipFailed {
+            shard: 3,
+            cause: Box::new(SimError::MaxCycles { limit: 1 }),
+        };
+        assert_eq!(chip.to_string(), "shard 3: exceeded max_cycles=1");
+    }
+
+    #[test]
+    fn retryability_classifies_transients() {
+        let stall = SimError::WatchdogStall { watchdog: 1, cycle: 2, diag: String::new() };
+        assert!(stall.is_retryable());
+        assert!(SimError::LinkFault { src: 0, dst: 1, seq: 0, attempts: 3, at_cycle: 9 }
+            .is_retryable());
+        assert!(SimError::ChipFailed { shard: 0, cause: Box::new(stall) }.is_retryable());
+        assert!(!SimError::MaxCycles { limit: 1 }.is_retryable());
+        assert!(!SimError::DeadlineExceeded { deadline: 1 }.is_retryable());
+        assert!(!SimError::invalid("x").is_retryable());
+        assert!(!SimError::ChipFailed {
+            shard: 0,
+            cause: Box::new(SimError::MaxCycles { limit: 1 })
+        }
+        .is_retryable());
+    }
+
+    #[test]
+    fn budget_accounting_propagates_through_chip_failed() {
+        let e = SimError::ChipFailed {
+            shard: 1,
+            cause: Box::new(SimError::LinkFault { src: 0, dst: 1, seq: 4, attempts: 8, at_cycle: 123 }),
+        };
+        assert_eq!(e.cycles_consumed(), 123);
+        assert_eq!(SimError::invalid("x").cycles_consumed(), 0);
+    }
+}

@@ -1,0 +1,272 @@
+//! Deterministic fault injection for the multi-chip fabric (DESIGN.md §8).
+//!
+//! A [`FaultPlan`] is a pure function from *event coordinates* to fault
+//! decisions: whether transmission attempt `a` of packet `seq` on the
+//! directed link `src → dst` is dropped, corrupted or delayed, and
+//! whether chip `shard` suffers a transient stall during superstep
+//! `step`. Decisions are derived by seeding an independent
+//! [`crate::util::rng::Rng`] stream per event (SplitMix-style mixing of
+//! the coordinates into the plan seed), **not** by consuming a shared
+//! stream — so the injector's answers do not depend on simulator call
+//! order, replays of a superstep re-ask the same questions and get the
+//! same answers, and a one-line seed reproduces any failure.
+//!
+//! [`FaultPlan::none`] is inert: every query short-circuits to "no
+//! fault" before touching the RNG, and the multi-chip layer skips the
+//! recovery bookkeeping entirely, so a `none()` run is bitwise identical
+//! — cycles, attributes, every metric — to the pre-fault-layer
+//! simulator (`tests/fault.rs` proves it).
+//!
+//! Corruption detection is modeled honestly: each link packet carries a
+//! [`checksum`] over `(src, seq, payload)`, and the receiver recomputes
+//! it over what arrived. The checksum XORs the payload into a hash of
+//! the header, so any payload delta flips the same bits of the sum —
+//! injected corruption is detected with certainty, never by oracle
+//! knowledge.
+
+use crate::util::rng::Rng;
+
+/// What happened to one link-packet transmission attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkFault {
+    /// The packet never arrived (receiver times out waiting for `seq`,
+    /// nacks, sender retransmits).
+    Drop,
+    /// The packet arrived with the given payload bit flipped; the
+    /// checksum mismatch triggers a nack + retransmit.
+    Corrupt {
+        /// Which payload bit (0..32) the link flipped.
+        bit: u32,
+    },
+    /// The packet arrived intact but late by `cycles` (charged to the
+    /// superstep barrier, not retransmitted).
+    Delay {
+        /// Extra modeled cycles of link latency.
+        cycles: u64,
+    },
+}
+
+/// A seeded, deterministic fault-injection plan threaded through
+/// [`super::SimOptions`]. Construct with [`FaultPlan::none`] (inert) or
+/// [`FaultPlan::seeded`] (default rates), then tune with the builder
+/// methods.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    seed: u64,
+    active: bool,
+    /// Probability each link-packet transmission attempt is faulted.
+    pub p_link: f64,
+    /// Probability a (superstep, shard, attempt) suffers a transient
+    /// stall forcing a checkpoint rollback + replay.
+    pub p_stall: f64,
+    /// Retransmission budget per packet; one more failed attempt is a
+    /// [`super::SimError::LinkFault`].
+    pub max_retransmits: u32,
+    /// Superstep replay budget per shard per superstep; one more
+    /// injected stall is a [`super::SimError::ChipFailed`].
+    pub max_replays: u32,
+}
+
+/// Domain-separation salts for the per-event streams.
+const SALT_LINK: u64 = 0x6C69_6E6B; // "link"
+const SALT_STALL: u64 = 0x7374_616C; // "stal"
+
+impl FaultPlan {
+    /// The inert plan: injects nothing, costs nothing. Runs under this
+    /// plan are bitwise identical to runs predating the fault layer.
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            active: false,
+            p_link: 0.0,
+            p_stall: 0.0,
+            max_retransmits: 0,
+            max_replays: 0,
+        }
+    }
+
+    /// An active plan with the default fault mix: 5% lossy links, 2%
+    /// transient chip stalls, 8 retransmits, 4 replays.
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            active: true,
+            p_link: 0.05,
+            p_stall: 0.02,
+            max_retransmits: 8,
+            max_replays: 4,
+        }
+    }
+
+    /// Override the per-attempt link fault probability.
+    pub fn with_link_rate(mut self, p: f64) -> FaultPlan {
+        self.p_link = p;
+        self
+    }
+
+    /// Override the per-superstep chip stall probability.
+    pub fn with_stall_rate(mut self, p: f64) -> FaultPlan {
+        self.p_stall = p;
+        self
+    }
+
+    /// Override the retransmission budget.
+    pub fn with_max_retransmits(mut self, n: u32) -> FaultPlan {
+        self.max_retransmits = n;
+        self
+    }
+
+    /// Override the superstep replay budget.
+    pub fn with_max_replays(mut self, n: u32) -> FaultPlan {
+        self.max_replays = n;
+        self
+    }
+
+    /// Whether this plan can inject anything at all.
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// The plan seed (0 for the inert plan).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Derive the plan an engine-level retry should run under: attempt 0
+    /// is this plan verbatim, later attempts re-mix the attempt index
+    /// into the seed so a deterministic retry does not replay the exact
+    /// fault pattern that just killed the query.
+    pub fn reseeded(&self, attempt: u32) -> FaultPlan {
+        if attempt == 0 || !self.active {
+            return *self;
+        }
+        let mut p = *self;
+        p.seed = mix(self.seed, 0x7265_7472, attempt as u64, 0); // "retr"
+        p
+    }
+
+    /// One independent RNG stream per event coordinate.
+    fn event_rng(&self, salt: u64, a: u64, b: u64) -> Rng {
+        Rng::new(mix(self.seed, salt, a, b))
+    }
+
+    /// Fault decision for transmission attempt `attempt` (0 = initial
+    /// send) of packet `seq` on the directed link `src → dst`.
+    pub fn link_fault(&self, src: u16, dst: u16, seq: u64, attempt: u32) -> Option<LinkFault> {
+        if !self.active {
+            return None;
+        }
+        let a = ((src as u64) << 48) | ((dst as u64) << 32) | attempt as u64;
+        let mut r = self.event_rng(SALT_LINK, a, seq);
+        if !r.chance(self.p_link) {
+            return None;
+        }
+        Some(match r.below(3) {
+            0 => LinkFault::Drop,
+            1 => LinkFault::Corrupt { bit: r.below(32) as u32 },
+            _ => LinkFault::Delay { cycles: 1 + r.below(64) },
+        })
+    }
+
+    /// Injected transient-stall duration (in modeled cycles) for replay
+    /// `attempt` of superstep `step` on `shard`, if any.
+    pub fn chip_stall(&self, step: u64, shard: u16, attempt: u32) -> Option<u64> {
+        if !self.active {
+            return None;
+        }
+        let a = ((shard as u64) << 32) | attempt as u64;
+        let mut r = self.event_rng(SALT_STALL, a, step);
+        if !r.chance(self.p_stall) {
+            return None;
+        }
+        Some(16 + r.below(256))
+    }
+}
+
+/// SplitMix-style mix of (seed, salt, a, b) into one stream seed.
+fn mix(seed: u64, salt: u64, a: u64, b: u64) -> u64 {
+    let mut h = seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    h = (h ^ a.rotate_left(17)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h = (h ^ b.rotate_left(41)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    h ^ (h >> 29)
+}
+
+/// Link-packet checksum over `(src, seq, payload)`. The payload is
+/// XORed into a hash of the header, so `checksum(src, seq, x) ==
+/// checksum(src, seq, y)` iff `x == y` — every injected payload
+/// corruption is detected at the receiver.
+pub fn checksum(src_vid: u32, seq: u64, attr: u32) -> u32 {
+    let mut h = (src_vid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ seq.rotate_left(32);
+    h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    attr ^ (h as u32) ^ ((h >> 32) as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_fires() {
+        let p = FaultPlan::none();
+        assert!(!p.is_active());
+        for seq in 0..200 {
+            assert_eq!(p.link_fault(0, 1, seq, 0), None);
+            assert_eq!(p.chip_stall(seq, 0, 0), None);
+        }
+    }
+
+    #[test]
+    fn decisions_are_pure_functions_of_coordinates() {
+        let p = FaultPlan::seeded(0xDEAD).with_link_rate(0.5).with_stall_rate(0.5);
+        for seq in 0..100 {
+            assert_eq!(p.link_fault(1, 2, seq, 3), p.link_fault(1, 2, seq, 3));
+            assert_eq!(p.chip_stall(seq, 1, 0), p.chip_stall(seq, 1, 0));
+        }
+        // distinct coordinates get independent streams: over 200 events at
+        // p = 0.5 both outcomes must occur
+        let fired = (0..200).filter(|&s| p.link_fault(0, 1, s, 0).is_some()).count();
+        assert!(fired > 20 && fired < 180, "fired {fired}/200");
+    }
+
+    #[test]
+    fn all_three_fault_kinds_occur() {
+        let p = FaultPlan::seeded(7).with_link_rate(1.0);
+        let mut seen = [false; 3];
+        for seq in 0..200 {
+            match p.link_fault(0, 1, seq, 0) {
+                Some(LinkFault::Drop) => seen[0] = true,
+                Some(LinkFault::Corrupt { bit }) => {
+                    assert!(bit < 32);
+                    seen[1] = true;
+                }
+                Some(LinkFault::Delay { cycles }) => {
+                    assert!(cycles >= 1);
+                    seen[2] = true;
+                }
+                None => panic!("p_link = 1.0 must always fault"),
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "kinds seen: {seen:?}");
+    }
+
+    #[test]
+    fn reseeding_changes_the_pattern_only_after_attempt_zero() {
+        let p = FaultPlan::seeded(42).with_link_rate(0.5);
+        assert_eq!(p.reseeded(0), p);
+        let r1 = p.reseeded(1);
+        assert_ne!(r1.seed(), p.seed());
+        let differs = (0..200).any(|s| p.link_fault(0, 1, s, 0) != r1.link_fault(0, 1, s, 0));
+        assert!(differs, "reseeded plan replayed the identical fault pattern");
+    }
+
+    #[test]
+    fn checksum_detects_every_payload_delta() {
+        for seq in 0..50u64 {
+            let base = checksum(17, seq, 0xABCD_1234);
+            for bit in 0..32 {
+                assert_ne!(base, checksum(17, seq, 0xABCD_1234 ^ (1 << bit)), "bit {bit}");
+            }
+            assert_eq!(base, checksum(17, seq, 0xABCD_1234));
+        }
+    }
+}

@@ -78,6 +78,8 @@ use crate::arch::{isa, yx_route, Dir, Packet, Topology};
 use crate::compiler::CompiledGraph;
 use crate::config::ArchConfig;
 use crate::metrics::{ActivityCounts, RunResult, SimMetrics};
+use crate::sim::error::SimError;
+use crate::sim::fault::FaultPlan;
 use crate::workloads::program::VertexProgram;
 use crate::workloads::Workload;
 use std::collections::VecDeque;
@@ -91,11 +93,27 @@ pub struct SimOptions {
     pub max_cycles: u64,
     /// No-progress watchdog: abort after this many stalled cycles.
     pub watchdog: u64,
+    /// Per-query deadline in modeled cycles: the run aborts with
+    /// [`SimError::DeadlineExceeded`] the cycle it reaches this budget
+    /// (checked alongside max-cycles/watchdog, and clamped into the
+    /// event core's idle fast-forward so both cores abort on exactly the
+    /// same modeled cycle). `None` = no deadline.
+    pub deadline: Option<u64>,
+    /// Fault-injection plan for multi-chip runs ([`crate::sim::fault`]).
+    /// Single-chip cores have no modeled links and ignore it;
+    /// [`FaultPlan::none`] (the default) is bitwise inert everywhere.
+    pub faults: FaultPlan,
 }
 
 impl Default for SimOptions {
     fn default() -> Self {
-        SimOptions { trace_parallelism: false, max_cycles: 500_000_000, watchdog: 100_000 }
+        SimOptions {
+            trace_parallelism: false,
+            max_cycles: 500_000_000,
+            watchdog: 100_000,
+            deadline: None,
+            faults: FaultPlan::none(),
+        }
     }
 }
 
@@ -536,7 +554,7 @@ impl SimInstance {
         workload: Workload,
         source: u32,
         opts: &SimOptions,
-    ) -> Result<RunResult, String> {
+    ) -> Result<RunResult, SimError> {
         crate::workloads::with_builtin(workload, |vp| self.run_program(c, vp, source, opts))
     }
 
@@ -554,12 +572,9 @@ impl SimInstance {
         vp: &P,
         source: u32,
         opts: &SimOptions,
-    ) -> Result<RunResult, String> {
+    ) -> Result<RunResult, SimError> {
         if c.cfg != self.cfg {
-            return Err(
-                "SimInstance fabric mismatch: the compiled graph targets a different ArchConfig"
-                    .to_string(),
-            );
+            return Err(SimError::FabricMismatch);
         }
         self.ensure_slice_capacity(c);
         self.reset();
@@ -589,23 +604,20 @@ impl SimInstance {
         attrs: Vec<u32>,
         inbound: &[Inject],
         opts: &SimOptions,
-    ) -> Result<RunResult, String> {
+    ) -> Result<RunResult, SimError> {
         if c.cfg != self.cfg {
-            return Err(
-                "SimInstance fabric mismatch: the compiled graph targets a different ArchConfig"
-                    .to_string(),
-            );
+            return Err(SimError::FabricMismatch);
         }
         if attrs.len() != c.placement.slots.len() {
-            return Err(format!(
+            return Err(SimError::invalid(format!(
                 "resumed attrs length {} != compiled vertex count {}",
                 attrs.len(),
                 c.placement.slots.len()
-            ));
+            )));
         }
         for i in inbound {
             if i.vid as usize >= c.placement.slots.len() {
-                return Err(format!("inject destination {} out of range", i.vid));
+                return Err(SimError::invalid(format!("inject destination {} out of range", i.vid)));
             }
         }
         self.ensure_slice_capacity(c);
@@ -919,7 +931,7 @@ impl SimInstance {
         &mut self,
         cx: &RunCtx<P>,
         source: u32,
-    ) -> Result<RunResult, String> {
+    ) -> Result<RunResult, SimError> {
         self.seed(cx, source);
         self.drive_loop(cx)
     }
@@ -930,19 +942,23 @@ impl SimInstance {
     fn drive_loop<P: VertexProgram + ?Sized>(
         &mut self,
         cx: &RunCtx<P>,
-    ) -> Result<RunResult, String> {
+    ) -> Result<RunResult, SimError> {
         self.progress_at = 0;
         while !self.is_done() {
+            if let Some(d) = cx.opts.deadline {
+                if self.now >= d {
+                    return Err(SimError::DeadlineExceeded { deadline: d });
+                }
+            }
             if self.now >= cx.opts.max_cycles {
-                return Err(format!("exceeded max_cycles={}", cx.opts.max_cycles));
+                return Err(SimError::MaxCycles { limit: cx.opts.max_cycles });
             }
             if self.now - self.progress_at > cx.opts.watchdog {
-                return Err(format!(
-                    "no progress for {} cycles at cycle {} (deadlock?): {}",
-                    cx.opts.watchdog,
-                    self.now,
-                    self.diag()
-                ));
+                return Err(SimError::WatchdogStall {
+                    watchdog: cx.opts.watchdog,
+                    cycle: self.now,
+                    diag: self.diag(),
+                });
             }
             self.step(cx);
         }
@@ -976,6 +992,8 @@ impl SimInstance {
                 },
                 chip_packets: 0,
                 chip_link_cycles: 0,
+                link_retransmits: 0,
+                fault_recovery_cycles: 0,
                 activity: act,
                 parallelism_trace: std::mem::take(&mut self.trace),
             },
@@ -1059,11 +1077,12 @@ impl SimInstance {
             // Nothing changed this cycle: every cycle until the next timed
             // deadline is identical, so jump straight there, replicating
             // the per-cycle samples in closed form. Capped so the loop-top
-            // max_cycles / watchdog checks fire on exactly the same cycle
-            // as the naive stepper.
+            // max_cycles / watchdog / per-query-deadline checks fire on
+            // exactly the same cycle as the naive stepper.
             let t = self.next_event_after(now);
             let target = t
                 .min(cx.opts.max_cycles)
+                .min(cx.opts.deadline.unwrap_or(u64::MAX))
                 .min(self.progress_at.saturating_add(cx.opts.watchdog).saturating_add(1))
                 .max(now + 1);
             let skipped = target - (now + 1);
@@ -1147,7 +1166,9 @@ impl SimInstance {
         let mut i = 0;
         while i < self.swap_clusters.len() {
             let cl = self.swap_clusters[i] as usize;
-            let (until, slice) = self.clusters[cl].swap.expect("swap_clusters out of sync");
+            let Some((until, slice)) = self.clusters[cl].swap else {
+                unreachable!("swap_clusters out of sync");
+            };
             if until <= now {
                 self.swap_clusters.swap_remove(i);
                 self.finish_swap(cl, slice, now);
@@ -1328,14 +1349,15 @@ impl SimInstance {
             debug_assert!(nbr_idx != usize::MAX, "YX routed off the mesh");
             granted[od] = true;
             grants += 1;
+            let granted_head = || -> QPkt { unreachable!("granted source has a head") };
             let q = if src < 4 {
-                let q = self.inbuf.pop_front(pe_idx * 4 + src).unwrap();
+                let q = self.inbuf.pop_front(pe_idx * 4 + src).unwrap_or_else(granted_head);
                 // return a credit upstream: the sender sits in direction `src`
                 let up = self.topo.nbr[pe_idx][src];
                 self.credits[up][Dir::SIDES[src].opposite() as usize] += 1;
                 q
             } else {
-                self.local_q.pop_front(pe_idx).unwrap()
+                self.local_q.pop_front(pe_idx).unwrap_or_else(granted_head)
             };
             self.pe[pe_idx].queued -= 1;
             self.credits[pe_idx][od] -= 1;
@@ -1391,7 +1413,10 @@ impl SimInstance {
         let mut must_park = false;
         if !self.pending.is_empty(pe_idx) {
             if self.aluin.len(pe_idx) < self.tm.aluin_cap {
-                let item = self.pending.pop_front(pe_idx).unwrap();
+                let item = self
+                    .pending
+                    .pop_front(pe_idx)
+                    .unwrap_or_else(|| unreachable!("is_empty checked above"));
                 if !self.try_coalesce(cx, pe_idx, item) {
                     self.aluin.push_back(pe_idx, item);
                     self.aluin_total += 1;
@@ -1422,11 +1447,12 @@ impl SimInstance {
             }
         }
         let Some(src) = chosen else { return };
-        let q = *match src {
-            0..=3 => self.inbuf.front(pe_idx * 4 + src).unwrap(),
-            4 => self.local_q.front(pe_idx).unwrap(),
-            _ => self.replay[pe_idx].front().unwrap(),
+        let head = match src {
+            0..=3 => self.inbuf.front(pe_idx * 4 + src),
+            4 => self.local_q.front(pe_idx),
+            _ => self.replay[pe_idx].front(),
         };
+        let q = *head.unwrap_or_else(|| unreachable!("chosen source has a head"));
         self.act.slice_compares += 1;
         // swap in progress, slice mismatch, or blocked microqueue -> park
         let swapping = self.clusters[cl].swap.is_some();
@@ -1649,7 +1675,7 @@ pub fn run(
     workload: Workload,
     source: u32,
     opts: &SimOptions,
-) -> Result<RunResult, String> {
+) -> Result<RunResult, SimError> {
     SimInstance::new(c).run(c, workload, source, opts)
 }
 
@@ -1662,7 +1688,7 @@ pub fn run_program<P: VertexProgram + ?Sized>(
     vp: &P,
     source: u32,
     opts: &SimOptions,
-) -> Result<RunResult, String> {
+) -> Result<RunResult, SimError> {
     SimInstance::new(c).run_program(c, vp, source, opts)
 }
 

@@ -21,7 +21,17 @@
 //! barrier-lockstep supersteps and exchanges frontier packets for cut
 //! arcs over a modeled inter-chip link (DESIGN.md §7); sharded results
 //! are differential-tested against the single-chip cores.
+//!
+//! Failures are typed ([`error::SimError`]) so callers can tell
+//! retryable faults from fatal aborts, and the inter-chip links can be
+//! made lossy under a deterministic seeded [`fault::FaultPlan`]
+//! (DESIGN.md §8): the multi-chip layer detects drops/corruption via
+//! per-packet sequence numbers + checksums, retransmits with bounded
+//! backoff, and rolls a stalled chip back to its per-superstep attribute
+//! checkpoint instead of aborting the run.
 
+pub mod error;
+pub mod fault;
 pub mod flip;
 pub mod mcu;
 pub mod modulo;
@@ -29,4 +39,6 @@ pub mod multichip;
 pub mod naive;
 pub mod opcentric;
 
+pub use error::SimError;
+pub use fault::FaultPlan;
 pub use flip::{SimInstance, SimOptions};

@@ -132,16 +132,15 @@ fn try_schedule(d: &Dfg, num_pes: usize, ii: u32) -> Option<Vec<u32>> {
     let mut slots = std::collections::HashMap::<u32, usize>::new(); // t mod II -> count
     let mut remaining: std::collections::BTreeSet<usize> = (0..n).collect();
     while !remaining.is_empty() {
-        let &op = order
-            .iter()
-            .find(|&&i| {
-                remaining.contains(&i) && preds[i].iter().all(|&p| start[p as usize].is_some())
-            })
-            .expect("acyclic DFG always has a ready op");
+        let Some(&op) = order.iter().find(|&&i| {
+            remaining.contains(&i) && preds[i].iter().all(|&p| start[p as usize].is_some())
+        }) else {
+            unreachable!("acyclic DFG always has a ready op");
+        };
         remaining.remove(&op);
         let est: u32 = preds[op]
             .iter()
-            .map(|&p| start[p as usize].unwrap() + d.ops[p as usize].latency)
+            .map(|&p| start[p as usize].unwrap_or(0) + d.ops[p as usize].latency)
             .max()
             .unwrap_or(0);
         // find a resource slot within [est, est + ii)
@@ -159,7 +158,7 @@ fn try_schedule(d: &Dfg, num_pes: usize, ii: u32) -> Option<Vec<u32>> {
             return None;
         }
     }
-    let start: Vec<u32> = start.into_iter().map(|s| s.unwrap()).collect();
+    let start: Vec<u32> = start.into_iter().flatten().collect();
     // recurrence deadline check: start[cons] + dist*II >= start[prod]+lat
     for &(prod, cons, dist) in &d.recurrences {
         if start[cons as usize] + dist * ii

@@ -39,12 +39,31 @@
 //! local cycles; link serialization overlaps the next superstep (packets
 //! carry their arrival cycle). Inter-chip traffic is counted in the new
 //! [`SimMetrics`] fields `chip_packets` / `chip_link_cycles`.
+//!
+//! **Fault tolerance (DESIGN.md §8).** Under an active
+//! [`crate::sim::fault::FaultPlan`] the modeled links become lossy and
+//! chips can stall. The recovery protocol is link-level
+//! sequence-number + checksum ack/retransmit with bounded exponential
+//! backoff, and per-superstep attribute checkpoints (`pre[s]` — the same
+//! vectors the announce rule already keeps) that a stalled chip rolls
+//! back to and replays. Because the lockstep barrier only closes when
+//! every packet of the superstep is acked, recovery time is charged to
+//! the barrier ([`SimMetrics::fault_recovery_cycles`], plus
+//! [`SimMetrics::link_retransmits`]) while the *architectural* packet
+//! schedule — slot-serialized arrival cycles, payloads, delivery order —
+//! is unchanged. Every recoverable fault therefore reproduces the
+//! fault-free attributes, edge counts and per-chip metrics bit-exactly;
+//! only the cycle total and the recovery counters differ
+//! (`tests/fault.rs`). Exhausted budgets surface as typed, retryable
+//! errors: [`SimError::LinkFault`] / [`SimError::ChipFailed`].
 
 use crate::compiler::{compile_sharded, CompileOpts, CompiledGraph, GhostArc, GHOST_BASE};
 use crate::config::ArchConfig;
 use crate::graph::partition::{partition, Partition};
 use crate::graph::Graph;
 use crate::metrics::{ActivityCounts, RunResult, SimMetrics};
+use crate::sim::error::SimError;
+use crate::sim::fault::{self, LinkFault};
 use crate::sim::flip::{Inject, SimInstance, SimOptions};
 use crate::workloads::program::VertexProgram;
 use crate::workloads::Workload;
@@ -243,7 +262,13 @@ impl Agg {
         self.activity.add(&r.sim.activity);
     }
 
-    fn into_metrics(self, chip_packets: u64, chip_link_cycles: u64) -> SimMetrics {
+    fn into_metrics(
+        self,
+        chip_packets: u64,
+        chip_link_cycles: u64,
+        link_retransmits: u64,
+        fault_recovery_cycles: u64,
+    ) -> SimMetrics {
         SimMetrics {
             packets_delivered: self.delivered,
             packets_parked: self.parked,
@@ -267,9 +292,23 @@ impl Agg {
             },
             chip_packets,
             chip_link_cycles,
+            link_retransmits,
+            fault_recovery_cycles,
             activity: self.activity,
             parallelism_trace: Vec::new(),
         }
+    }
+}
+
+/// Wrap a shard-local error for the top level: a per-query deadline
+/// abort inside a shard *is* the query's deadline abort; anything else
+/// is a chip failure attributed to the shard.
+fn shard_err(shard: usize, opts: &SimOptions, e: SimError) -> SimError {
+    match e {
+        SimError::DeadlineExceeded { .. } => {
+            SimError::DeadlineExceeded { deadline: opts.deadline.unwrap_or(0) }
+        }
+        e => SimError::ChipFailed { shard: shard as u16, cause: Box::new(e) },
     }
 }
 
@@ -285,19 +324,21 @@ pub fn run_program<P: VertexProgram + ?Sized>(
     vp: &P,
     source: u32,
     opts: &SimOptions,
-) -> Result<ShardedRun, String> {
+) -> Result<ShardedRun, SimError> {
     let k = m.part.k;
     let n = m.part.n;
     if insts.len() != k {
-        return Err(format!("{} instances for {k} shards", insts.len()));
+        return Err(SimError::invalid(format!("{} instances for {k} shards", insts.len())));
     }
     if vp.single_source() && source as usize >= n {
-        return Err(format!("source {source} out of range (|V| = {n})"));
+        return Err(SimError::invalid(format!("source {source} out of range (|V| = {n})")));
     }
     let views: Vec<ShardView<P>> = (0..k)
         .map(|s| ShardView { inner: vp, global_of: &m.part.global_of[s], n_global: n })
         .collect();
     let words = CHIP_PKT_WORDS * m.cfg.t_chip_word;
+    let plan = opts.faults;
+    let faulty = plan.is_active();
     let mut agg = Agg::default();
     let mut shard_cycles = vec![0u64; k];
     let mut attrs: Vec<Vec<u32>> = Vec::with_capacity(k);
@@ -305,9 +346,24 @@ pub fn run_program<P: VertexProgram + ?Sized>(
     let mut total_cycles = 0u64;
     let mut chip_packets = 0u64;
     let mut chip_link_cycles = 0u64;
+    // fault-recovery accounting (all zero under an inert plan)
+    let mut link_retransmits = 0u64;
+    let mut recovery_total = 0u64;
+    let mut seq = vec![0u64; k * k];
     let mut single_chip: Option<(u64, u64, SimMetrics)> = None;
 
+    // Remaining per-query deadline budget for the shard runs of one
+    // superstep: each chip may spend at most what is left of the global
+    // budget after the cycles already committed at the barrier. `None`
+    // deadline passes `opts` through untouched (no per-superstep clone).
+    let mk_step_opts = |spent: u64| -> Option<SimOptions> {
+        opts.deadline
+            .map(|d| SimOptions { deadline: Some(d.saturating_sub(spent)), ..opts.clone() })
+    };
+
     // ---- superstep 0: seeded local runs ---------------------------------
+    let so0 = mk_step_opts(0);
+    let step_opts = so0.as_ref().unwrap_or(opts);
     let mut step_max = 0u64;
     for s in 0..k {
         let n_s = m.part.global_of[s].len();
@@ -315,10 +371,42 @@ pub fn run_program<P: VertexProgram + ?Sized>(
         let owner = !vp.single_source() || m.part.shard_of[source as usize] as usize == s;
         if owner {
             let local_src = if vp.single_source() { m.part.local_of[source as usize] } else { 0 };
-            let mut r = insts[s]
-                .run_program(&m.shards[s], &views[s], local_src, opts)
-                .map_err(|e| format!("shard {s}: {e}"))?;
-            step_max = step_max.max(r.cycles);
+            // bounded replay loop: an injected transient stall rolls the
+            // chip back to its checkpoint (superstep 0's checkpoint is the
+            // seeded init state, so a rerun *is* the rollback) and replays
+            let mut replays = 0u32;
+            let mut s_rec = 0u64;
+            let mut r = loop {
+                let r = insts[s]
+                    .run_program(&m.shards[s], &views[s], local_src, step_opts)
+                    .map_err(|e| shard_err(s, opts, e))?;
+                if !faulty {
+                    break r;
+                }
+                match plan.chip_stall(0, s as u16, replays) {
+                    None => break r,
+                    Some(stall) => {
+                        replays += 1;
+                        s_rec += r.cycles + stall;
+                        if replays > plan.max_replays {
+                            return Err(SimError::ChipFailed {
+                                shard: s as u16,
+                                cause: Box::new(SimError::WatchdogStall {
+                                    watchdog: stall,
+                                    cycle: total_cycles + s_rec,
+                                    diag: format!(
+                                        "injected transient stall exhausted {} replays \
+                                         at superstep 0",
+                                        plan.max_replays
+                                    ),
+                                }),
+                            });
+                        }
+                    }
+                }
+            };
+            step_max = step_max.max(r.cycles + s_rec);
+            recovery_total += s_rec;
             shard_cycles[s] += r.cycles;
             if k == 1 {
                 single_chip = Some((r.cycles, r.edges_traversed, r.sim.clone()));
@@ -370,8 +458,58 @@ pub fn run_program<P: VertexProgram + ?Sized>(
                 for value in values.into_iter().flatten() {
                     for d in dests {
                         let j = d.dst_shard as usize;
-                        link_slots[s * k + j] += 1;
-                        let arrival = m.cfg.t_chip_link + link_slots[s * k + j] * words;
+                        let li = s * k + j;
+                        link_slots[li] += 1;
+                        let arrival = m.cfg.t_chip_link + link_slots[li] * words;
+                        if faulty {
+                            // Reliable-link handshake: the packet carries a
+                            // sequence number and a checksum over
+                            // (src, seq, payload); the receiver acks an
+                            // intact copy, and a timeout (drop) or checksum
+                            // mismatch (corruption) triggers a bounded
+                            // backoff retransmit. The barrier waits for the
+                            // ack, so recovery cost lands on the superstep
+                            // — the architectural arrival slot is unchanged.
+                            let sq = seq[li];
+                            seq[li] += 1;
+                            let want = fault::checksum(ghost, sq, value);
+                            let mut attempt = 0u32;
+                            loop {
+                                let (rx, arrived) =
+                                    match plan.link_fault(s as u16, j as u16, sq, attempt) {
+                                        None => (value, true),
+                                        Some(LinkFault::Drop) => (value, false),
+                                        Some(LinkFault::Corrupt { bit }) => {
+                                            (value ^ (1u32 << bit), true)
+                                        }
+                                        Some(LinkFault::Delay { cycles }) => {
+                                            // intact but late: the ack delays
+                                            // the barrier, nothing retransmits
+                                            recovery_total += cycles;
+                                            total_cycles += cycles;
+                                            (value, true)
+                                        }
+                                    };
+                                if arrived && fault::checksum(ghost, sq, rx) == want {
+                                    break;
+                                }
+                                link_retransmits += 1;
+                                // reserialization + exponential backoff
+                                let cost = words + (words << attempt.min(6));
+                                recovery_total += cost;
+                                total_cycles += cost;
+                                attempt += 1;
+                                if attempt > plan.max_retransmits {
+                                    return Err(SimError::LinkFault {
+                                        src: s as u16,
+                                        dst: j as u16,
+                                        seq: sq,
+                                        attempts: attempt,
+                                        at_cycle: total_cycles,
+                                    });
+                                }
+                            }
+                        }
                         inj[j].push(Inject {
                             vid: d.dst_vid,
                             src_vid: ghost,
@@ -390,53 +528,92 @@ pub fn run_program<P: VertexProgram + ?Sized>(
         chip_packets += sent;
         // resume every chip that received packets (a chip with an empty
         // inbox would provably run zero cycles and change nothing)
+        let so = mk_step_opts(total_cycles);
+        let step_opts = so.as_ref().unwrap_or(opts);
         let mut step_max = 0u64;
         for s in 0..k {
             pre[s].clone_from(&attrs[s]);
             if inj[s].is_empty() {
                 continue;
             }
-            let mut r = insts[s]
-                .run_resumed(
-                    &m.shards[s],
-                    &views[s],
-                    std::mem::take(&mut attrs[s]),
-                    &inj[s],
-                    opts,
-                )
-                .map_err(|e| format!("shard {s}: {e}"))?;
-            step_max = step_max.max(r.cycles);
+            // bounded replay loop: a stalled chip rolls back to the
+            // `pre[s]` checkpoint taken at the superstep boundary and
+            // replays the identical inbox
+            let mut replays = 0u32;
+            let mut s_rec = 0u64;
+            let mut r = loop {
+                // under an inert plan, hand the attribute vector over
+                // without copying (the fast path); an active plan keeps
+                // the checkpoint intact for a possible rollback
+                let input = if faulty {
+                    pre[s].clone()
+                } else {
+                    std::mem::take(&mut attrs[s])
+                };
+                let r = insts[s]
+                    .run_resumed(&m.shards[s], &views[s], input, &inj[s], step_opts)
+                    .map_err(|e| shard_err(s, opts, e))?;
+                if !faulty {
+                    break r;
+                }
+                match plan.chip_stall(supersteps, s as u16, replays) {
+                    None => break r,
+                    Some(stall) => {
+                        replays += 1;
+                        s_rec += r.cycles + stall;
+                        if replays > plan.max_replays {
+                            return Err(SimError::ChipFailed {
+                                shard: s as u16,
+                                cause: Box::new(SimError::WatchdogStall {
+                                    watchdog: stall,
+                                    cycle: total_cycles + s_rec,
+                                    diag: format!(
+                                        "injected transient stall exhausted {} replays \
+                                         at superstep {supersteps}",
+                                        plan.max_replays
+                                    ),
+                                }),
+                            });
+                        }
+                    }
+                }
+            };
+            step_max = step_max.max(r.cycles + s_rec);
+            recovery_total += s_rec;
             shard_cycles[s] += r.cycles;
             agg.add(&r);
             attrs[s] = std::mem::take(&mut r.attrs);
         }
         supersteps += 1;
         total_cycles += step_max;
+        if let Some(d) = opts.deadline {
+            if total_cycles > d {
+                return Err(SimError::DeadlineExceeded { deadline: d });
+            }
+        }
         if total_cycles > opts.max_cycles {
-            return Err(format!(
-                "exceeded max_cycles={} across {supersteps} supersteps",
-                opts.max_cycles
-            ));
+            return Err(SimError::MaxCycles { limit: opts.max_cycles });
         }
         if supersteps > max_supersteps {
-            return Err(format!(
-                "lockstep did not converge within {max_supersteps} supersteps \
-                 (program violates the determinism contract?)"
-            ));
+            return Err(SimError::NoConvergence { supersteps: max_supersteps });
         }
     }
 
     let global_attrs = m.part.gather_attrs(&attrs);
-    let result = if let Some((cycles, edges, sim)) = single_chip {
-        // K = 1: the merged result is the single run, bit-exact
-        RunResult { cycles, attrs: global_attrs, edges_traversed: edges, sim }
+    let result = if let Some((_, edges, mut sim)) = single_chip {
+        // K = 1: the merged result is the single run, bit-exact (with an
+        // inert plan total_cycles == the run's cycles and both recovery
+        // counters are zero; injected stalls only add recovery on top)
+        sim.link_retransmits = link_retransmits;
+        sim.fault_recovery_cycles = recovery_total;
+        RunResult { cycles: total_cycles, attrs: global_attrs, edges_traversed: edges, sim }
     } else {
         let edges = agg.edges;
         RunResult {
             cycles: total_cycles,
             attrs: global_attrs,
             edges_traversed: edges,
-            sim: agg.into_metrics(chip_packets, chip_link_cycles),
+            sim: agg.into_metrics(chip_packets, chip_link_cycles, link_retransmits, recovery_total),
         }
     };
     Ok(ShardedRun { result, supersteps, shard_cycles })
@@ -453,7 +630,7 @@ pub fn run(
     workload: Workload,
     source: u32,
     opts: &SimOptions,
-) -> Result<ShardedRun, String> {
+) -> Result<ShardedRun, SimError> {
     let mut insts = m.new_instances();
     crate::workloads::with_builtin(workload, |vp| run_program(m, &mut insts, vp, source, opts))
 }
@@ -469,7 +646,7 @@ pub fn run_pagerank_rounds(
     g: &Graph,
     iters: usize,
     opts: &SimOptions,
-) -> Result<crate::workloads::pagerank::PageRankRun, String> {
+) -> Result<crate::workloads::pagerank::PageRankRun, SimError> {
     let mut insts = m.new_instances();
     crate::workloads::pagerank::run_rounds_with(g, iters, |vp| {
         run_program(m, &mut insts, vp, 0, opts).map(|r| r.result)

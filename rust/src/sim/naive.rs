@@ -32,6 +32,7 @@ use crate::arch::{isa, yx_route, Dir, Packet, PeCoord};
 use crate::compiler::CompiledGraph;
 use crate::config::ArchConfig;
 use crate::metrics::{ActivityCounts, RunResult, SimMetrics};
+use crate::sim::error::SimError;
 use crate::sim::SimOptions;
 use crate::workloads::program::VertexProgram;
 use crate::workloads::Workload;
@@ -316,7 +317,7 @@ impl NaiveInstance {
         workload: Workload,
         source: u32,
         opts: &SimOptions,
-    ) -> Result<RunResult, String> {
+    ) -> Result<RunResult, SimError> {
         let vp = workload.builtin_program();
         self.run_program(c, vp.as_ref(), source, opts)
     }
@@ -329,12 +330,9 @@ impl NaiveInstance {
         vp: &dyn VertexProgram,
         source: u32,
         opts: &SimOptions,
-    ) -> Result<RunResult, String> {
+    ) -> Result<RunResult, SimError> {
         if c.cfg != self.cfg {
-            return Err(
-                "NaiveInstance fabric mismatch: the compiled graph targets a different ArchConfig"
-                    .to_string(),
-            );
+            return Err(SimError::FabricMismatch);
         }
         self.reset();
         let cx = RunCtx { c, vp, vp_bound: vp.bound(), opts };
@@ -442,20 +440,24 @@ impl NaiveInstance {
     }
 
     /// Run to termination; returns the functional result and metrics.
-    fn drive(&mut self, cx: &RunCtx, source: u32) -> Result<RunResult, String> {
+    fn drive(&mut self, cx: &RunCtx, source: u32) -> Result<RunResult, SimError> {
         self.seed(cx, source);
         self.progress_at = 0;
         while !self.done() {
+            if let Some(d) = cx.opts.deadline {
+                if self.now >= d {
+                    return Err(SimError::DeadlineExceeded { deadline: d });
+                }
+            }
             if self.now >= cx.opts.max_cycles {
-                return Err(format!("exceeded max_cycles={}", cx.opts.max_cycles));
+                return Err(SimError::MaxCycles { limit: cx.opts.max_cycles });
             }
             if self.now - self.progress_at > cx.opts.watchdog {
-                return Err(format!(
-                    "no progress for {} cycles at cycle {} (deadlock?): {}",
-                    cx.opts.watchdog,
-                    self.now,
-                    self.diag()
-                ));
+                return Err(SimError::WatchdogStall {
+                    watchdog: cx.opts.watchdog,
+                    cycle: self.now,
+                    diag: self.diag(),
+                });
             }
             self.step(cx);
         }
@@ -488,6 +490,8 @@ impl NaiveInstance {
                 },
                 chip_packets: 0,
                 chip_link_cycles: 0,
+                link_retransmits: 0,
+                fault_recovery_cycles: 0,
                 activity: act,
                 parallelism_trace: std::mem::take(&mut self.trace),
             },
@@ -723,14 +727,15 @@ impl NaiveInstance {
             debug_assert!(nbr_idx != usize::MAX, "YX routed off the mesh");
             granted[od] = true;
             grants += 1;
+            let granted_head = || -> QPkt { unreachable!("granted source has a head") };
             let q = if src < 4 {
-                let q = self.pes[pe_idx].inbuf[src].pop_front().unwrap();
+                let q = self.pes[pe_idx].inbuf[src].pop_front().unwrap_or_else(granted_head);
                 // return a credit upstream: the sender sits in direction `src`
                 let up = self.hot.nbr[pe_idx][src];
                 self.credits[up][Dir::SIDES[src].opposite() as usize] += 1;
                 q
             } else {
-                self.pes[pe_idx].local_q.pop_front().unwrap()
+                self.pes[pe_idx].local_q.pop_front().unwrap_or_else(granted_head)
             };
             self.pes[pe_idx].queued -= 1;
             self.credits[pe_idx][od] -= 1;
@@ -768,7 +773,10 @@ impl NaiveInstance {
         if !self.pes[pe_idx].pending_matches.is_empty() {
             if self.pes[pe_idx].aluin.len() < self.hot.aluin_cap {
                 let vp = cx.vp;
-                let item = self.pes[pe_idx].pending_matches.pop_front().unwrap();
+                let item = self.pes[pe_idx]
+                    .pending_matches
+                    .pop_front()
+                    .unwrap_or_else(|| unreachable!("is_empty checked above"));
                 if !self.pes[pe_idx].try_coalesce(item, vp) {
                     self.pes[pe_idx].aluin.push_back(item);
                 }
@@ -798,11 +806,12 @@ impl NaiveInstance {
             }
         }
         let Some(src) = chosen else { return };
-        let q = *match src {
-            0..=3 => self.pes[pe_idx].inbuf[src].front().unwrap(),
-            4 => self.pes[pe_idx].local_q.front().unwrap(),
-            _ => self.pes[pe_idx].replay_q.front().unwrap(),
+        let head = match src {
+            0..=3 => self.pes[pe_idx].inbuf[src].front(),
+            4 => self.pes[pe_idx].local_q.front(),
+            _ => self.pes[pe_idx].replay_q.front(),
         };
+        let q = *head.unwrap_or_else(|| unreachable!("chosen source has a head"));
         self.act.slice_compares += 1;
         // swap in progress, slice mismatch, or blocked microqueue -> park
         let swapping = self.clusters[cl].swap.is_some();
@@ -1026,7 +1035,7 @@ pub fn run(
     workload: Workload,
     source: u32,
     opts: &SimOptions,
-) -> Result<RunResult, String> {
+) -> Result<RunResult, SimError> {
     NaiveInstance::new(c).run(c, workload, source, opts)
 }
 
@@ -1037,7 +1046,7 @@ pub fn run_program(
     vp: &dyn VertexProgram,
     source: u32,
     opts: &SimOptions,
-) -> Result<RunResult, String> {
+) -> Result<RunResult, SimError> {
     NaiveInstance::new(c).run_program(c, vp, source, opts)
 }
 

@@ -138,8 +138,10 @@ impl Dfg {
                     st
                 } else {
                     // the same store op in the previous lane
-                    d.per_edge_ops[(lane - 1) * self.per_edge_ops.len()
-                        + self.per_edge_ops.iter().position(|&x| x == st).unwrap()]
+                    let Some(pos) = self.per_edge_ops.iter().position(|&x| x == st) else {
+                        unreachable!("store op came from per_edge_ops");
+                    };
+                    d.per_edge_ops[(lane - 1) * self.per_edge_ops.len() + pos]
                 };
                 d.edges.push((prev_store, remap[&ld]));
             }
@@ -334,10 +336,10 @@ pub fn sssp_update_dfg() -> Dfg {
     c.fork(w_ld);
     let add = c.push(OpCat::Compute, 1); // dist[u] + w
     c.fork(dist_ld);
-    c.push(OpCat::Compute, 1); // cmp (also depends on add)
-    c.d.edges.push((add, c.last.unwrap()));
-    c.push(OpCat::Compute, 1); // select
-    c.d.edges.push((mask, c.last.unwrap()));
+    let cmp = c.push(OpCat::Compute, 1); // cmp (also depends on add)
+    c.d.edges.push((add, cmp));
+    let select = c.push(OpCat::Compute, 1); // select
+    c.d.edges.push((mask, select));
     c.push(OpCat::Compute, 1); // flag
     c.push(OpCat::AddrGen, 1);
     let st = c.push(OpCat::MemAccess, 2); // store dist[v]

@@ -32,7 +32,7 @@ use crate::arch::isa::{self, Instr};
 use crate::compiler::CompiledGraph;
 use crate::graph::{reference, Graph};
 use crate::metrics::RunResult;
-use crate::sim::{flip, SimOptions};
+use crate::sim::{flip, SimError, SimOptions};
 use crate::util::Rng;
 use crate::workloads::program::VertexProgram;
 
@@ -141,7 +141,7 @@ impl VertexProgram for Mis {
 }
 
 /// Run one MIS instance on the fabric compiled for its dominance view.
-pub fn run(c: &CompiledGraph, mis: &Mis, opts: &SimOptions) -> Result<RunResult, String> {
+pub fn run(c: &CompiledGraph, mis: &Mis, opts: &SimOptions) -> Result<RunResult, SimError> {
     flip::run_program(c, mis, 0, opts)
 }
 

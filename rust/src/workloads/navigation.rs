@@ -26,7 +26,7 @@ use crate::arch::isa::{self, Instr};
 use crate::compiler::CompiledGraph;
 use crate::graph::{reference, Graph, INF};
 use crate::metrics::RunResult;
-use crate::sim::{flip, SimOptions};
+use crate::sim::{flip, SimError, SimOptions};
 use crate::workloads::program::VertexProgram;
 
 /// Query-independent ALT preprocessing for one graph: the per-landmark
@@ -201,7 +201,7 @@ pub fn plan(
     source: u32,
     target: u32,
     opts: &SimOptions,
-) -> Result<NavPlan, String> {
+) -> Result<NavPlan, SimError> {
     let vp = lm.query(source, target);
     let run = flip::run_program(c, &vp, source, opts)?;
     Ok(NavPlan { distance: run.attrs[target as usize], run })

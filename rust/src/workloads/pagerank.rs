@@ -22,7 +22,7 @@ use crate::arch::isa::{self, Instr};
 use crate::compiler::CompiledGraph;
 use crate::graph::{reference, Graph};
 use crate::metrics::ActivityCounts;
-use crate::sim::{flip, SimOptions};
+use crate::sim::{flip, SimError, SimOptions};
 use crate::workloads::program::VertexProgram;
 
 /// One PageRank round as a vertex program: attributes are this round's
@@ -91,9 +91,13 @@ pub struct PageRankRun {
 /// single-chip instance in [`run_rounds`], the K-chip lockstep machine in
 /// [`crate::sim::multichip::run_pagerank_rounds`]) — one copy of the
 /// recurrence, so the backends cannot drift apart.
-pub fn run_rounds_with<F>(g: &Graph, iters: usize, mut round: F) -> Result<PageRankRun, String>
+pub fn run_rounds_with<F>(
+    g: &Graph,
+    iters: usize,
+    mut round: F,
+) -> Result<PageRankRun, SimError>
 where
-    F: FnMut(&PageRankRound) -> Result<crate::metrics::RunResult, String>,
+    F: FnMut(&PageRankRound) -> Result<crate::metrics::RunResult, SimError>,
 {
     let mut ranks = reference::pagerank_init(g.num_vertices());
     let mut cycles = 0u64;
@@ -118,7 +122,7 @@ pub fn run_rounds(
     g: &Graph,
     iters: usize,
     opts: &SimOptions,
-) -> Result<PageRankRun, String> {
+) -> Result<PageRankRun, SimError> {
     // one machine instance serves every round (DESIGN.md §6): the image
     // is fixed, only the per-round program (contributions) changes
     let mut inst = flip::SimInstance::new(c);

@@ -233,7 +233,8 @@ fn watchdog_reports_instead_of_hanging() {
     // absurdly small max_cycles triggers the safety net, not a hang
     let opts = SimOptions { max_cycles: 2, ..Default::default() };
     let err = flipsim::run(&c, Workload::Bfs, 0, &opts).unwrap_err();
-    assert!(err.contains("max_cycles"));
+    assert!(matches!(err, flip::sim::SimError::MaxCycles { limit: 2 }), "{err:?}");
+    assert!(err.to_string().contains("max_cycles"));
 }
 
 #[test]

@@ -158,6 +158,11 @@ fn record(map: &mut BTreeMap<String, Val>, name: &str, r: &RunResult) {
     );
     map.insert(format!("{name}.chip_packets"), Val::Num(r.sim.chip_packets));
     map.insert(format!("{name}.chip_link_cycles"), Val::Num(r.sim.chip_link_cycles));
+    map.insert(format!("{name}.link_retransmits"), Val::Num(r.sim.link_retransmits));
+    map.insert(
+        format!("{name}.fault_recovery_cycles"),
+        Val::Num(r.sim.fault_recovery_cycles),
+    );
     map.insert(format!("{name}.alu_ops"), Val::Num(r.sim.activity.alu_ops));
     map.insert(format!("{name}.intra_lookups"), Val::Num(r.sim.activity.intra_lookups));
     map.insert(format!("{name}.inter_walked"), Val::Num(r.sim.activity.inter_walked));

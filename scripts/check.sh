@@ -20,6 +20,13 @@ cargo fmt --check
 echo "== cargo clippy -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
+# Production code (lib + bins) must not panic through unwrap/expect —
+# typed SimError/QueryError paths exist for every failure (DESIGN.md §8).
+# Scoping to --lib --bins keeps the ban out of #[cfg(test)] modules,
+# tests/ and benches/, where unwrap-on-known-good is the right idiom.
+echo "== cargo clippy --lib --bins (deny unwrap/expect) =="
+cargo clippy --lib --bins -- -D warnings -D clippy::unwrap_used -D clippy::expect_used
+
 echo "== cargo build --release =="
 cargo build --release
 
