@@ -321,5 +321,59 @@ fn main() {
         .metric("deadline_abort_pct", deadline_abort_pct)
         .metric("retries", batch_retries as f64);
 
+    common::section("streaming server: admission, epochs, frontier sharing (Lrn)");
+    use flip::graph::Delta;
+    use flip::service::stream::{EpochStore, StreamConfig, StreamServer};
+    // 96 queries in runs of 4 identical (epoch, job) pairs — the sharing
+    // fan-out the admission queue is built for — with an epoch published
+    // (and a batch drained) every 24 submits so updates race queries
+    let stream_n = 96usize;
+    let sjobs: Vec<Job> = (0..stream_n)
+        .map(|i| Job::Workload([Workload::Bfs, Workload::Sssp][(i / 4) % 2], ((i as u32 / 4) * 13) % n))
+        .collect();
+    let mut stream_qps = 0.0f64;
+    let mut p99_cycles = 0u64;
+    let mut apply_overhead_pct = 0.0f64;
+    let mut shared_hits = 0u64;
+    let mut sim_runs = 0u64;
+    let r = common::bench("stream: 96 queries, 4 epochs, sharing on", 1, 3, || {
+        let mut srv =
+            StreamServer::new(EpochStore::new_single(pair.clone()), StreamConfig::default());
+        let t0 = std::time::Instant::now();
+        for (i, &job) in sjobs.iter().enumerate() {
+            srv.submit(job).unwrap();
+            if i % 24 == 23 {
+                let d = {
+                    let pin = srv.store().pin();
+                    let (u, v, _) = pin.graph().arcs().next().unwrap();
+                    Delta::from_edges(pin.graph(), &[(u, v, (i as u32 % 90) + 1)])
+                };
+                srv.apply_update(&d).unwrap();
+                srv.drain_batch();
+            }
+        }
+        srv.drain_all();
+        let wall = t0.elapsed().as_secs_f64();
+        let st = srv.stats();
+        assert_eq!(st.failed, 0, "streaming bench queries must all answer");
+        stream_qps = st.completed() as f64 / wall;
+        p99_cycles = st.cycles.p99();
+        apply_overhead_pct = st.epoch_apply_us as f64 / (wall * 1e6) * 100.0;
+        shared_hits = st.shared_hits;
+        sim_runs = st.sim_runs;
+    });
+    println!(
+        "    -> {stream_qps:.0} completed queries/s, p99 {p99_cycles} modeled cycles, \
+         {shared_hits} of {stream_n} answers fanned out of {sim_runs} runs, \
+         epoch apply {apply_overhead_pct:.2}% of wall"
+    );
+    suite
+        .add(r)
+        .metric("stream_qps", stream_qps)
+        .metric("p99_cycles", p99_cycles as f64)
+        .metric("epoch_apply_overhead_pct", apply_overhead_pct)
+        .metric("shared_hits", shared_hits as f64)
+        .metric("sim_runs", sim_runs as f64);
+
     suite.write().expect("write bench json");
 }

@@ -139,6 +139,12 @@ pub struct CompiledGraph {
     tables: TableSlabs,
     /// Mapping-quality statistics (Table 8 inputs, Fig 13 timing).
     pub stats: MappingStats,
+    /// Attribute epoch: 0 at compile time, +1 per successful
+    /// [`CompiledGraph::apply_attr_updates`]. Mirrors
+    /// [`crate::graph::Graph::version`] when host graph and machine image
+    /// are patched in lockstep; the streaming layer
+    /// ([`crate::service::stream`]) publishes snapshots under this number.
+    pub epoch: u64,
 }
 
 impl CompiledGraph {
@@ -239,6 +245,25 @@ impl CompiledGraph {
     /// and the machine image is untouched.
     pub fn apply_attr_updates(&mut self, delta: &crate::graph::Delta) -> Result<(), String> {
         // validate pass: every change must name an existing table entry
+        self.validate_attr_updates(delta)?;
+        // write pass (cannot fail after validation)
+        for &(u, v, w) in delta.arcs() {
+            let sv = self.placement.slots[v as usize];
+            let dst_idx = sv.copy as usize * self.cfg.num_pes() + sv.pe.index(&self.cfg);
+            let hit = self.tables.update_weight(dst_idx, u, sv.reg, w);
+            debug_assert!(hit, "validated above");
+        }
+        self.epoch += 1;
+        Ok(())
+    }
+
+    /// The validate pass of [`CompiledGraph::apply_attr_updates`] alone:
+    /// check every change names an existing Intra-Table entry, writing
+    /// nothing. Split out so multi-image owners — the sharded delta router
+    /// [`crate::sim::multichip::ShardedMachine::apply_attr_updates`] —
+    /// can validate *every* shard's delta before patching *any* shard,
+    /// keeping cross-shard application atomic.
+    pub fn validate_attr_updates(&self, delta: &crate::graph::Delta) -> Result<(), String> {
         for &(u, v, _) in delta.arcs() {
             if v as usize >= self.placement.slots.len() {
                 return Err(format!("delta arc ({u},{v}): vertex out of range"));
@@ -254,13 +279,6 @@ impl CompiledGraph {
                      weight-only updates cannot change the graph structure"
                 ));
             }
-        }
-        // write pass (cannot fail after validation)
-        for &(u, v, w) in delta.arcs() {
-            let sv = self.placement.slots[v as usize];
-            let dst_idx = sv.copy as usize * self.cfg.num_pes() + sv.pe.index(&self.cfg);
-            let hit = self.tables.update_weight(dst_idx, u, sv.reg, w);
-            debug_assert!(hit, "validated above");
         }
         Ok(())
     }
@@ -376,7 +394,7 @@ fn compile_with_ghosts(
         swaps_applied: swaps,
     };
     debug_assert!(placement.validate(g, cfg).is_ok());
-    CompiledGraph { cfg: cfg.clone(), placement, tables, stats }
+    CompiledGraph { cfg: cfg.clone(), placement, tables, stats, epoch: 0 }
 }
 
 #[cfg(test)]

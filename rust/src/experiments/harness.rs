@@ -64,7 +64,10 @@ impl ExpEnv {
 }
 
 /// One graph compiled for both arc views (directed for BFS/SSSP, undirected
-/// closure for WCC).
+/// closure for WCC). `Clone` is a memcpy of the slabs — the streaming
+/// epoch store ([`crate::service::stream`]) clones the current pair to
+/// build the next epoch off the hot path.
+#[derive(Clone)]
 pub struct CompiledPair {
     /// The graph compiled as stored (BFS/SSSP view).
     pub directed: CompiledGraph,
@@ -113,7 +116,9 @@ impl CompiledPair {
 
 /// One graph partitioned and compiled for both arc views on a K-chip
 /// machine — the multi-chip analog of [`CompiledPair`], consumed by
-/// [`crate::service::Engine::new_sharded`].
+/// [`crate::service::Engine::new_sharded`]. `Clone` serves the same
+/// RCU epoch-building role as [`CompiledPair`]'s.
+#[derive(Clone)]
 pub struct ShardedPair {
     /// The graph sharded as stored (BFS/SSSP/navigation view).
     pub directed: crate::sim::multichip::ShardedMachine,
@@ -150,6 +155,18 @@ impl ShardedPair {
     /// Shard (chip) count.
     pub fn num_shards(&self) -> usize {
         self.directed.num_shards()
+    }
+
+    /// Patch a weight-only [`crate::graph::Delta`] into the sharded
+    /// machine and the stored source graph — the multi-chip mirror of
+    /// [`CompiledPair::apply_attr_updates`], same atomicity, same
+    /// untouched WCC view (weak connectivity ignores weights). The delta
+    /// names *global* vertex ids; routing to shard-local and ghost
+    /// entries happens in
+    /// [`crate::sim::multichip::ShardedMachine::apply_attr_updates`].
+    pub fn apply_attr_updates(&mut self, delta: &crate::graph::Delta) -> Result<(), String> {
+        self.directed.apply_attr_updates(delta)?;
+        self.graph.apply_delta(delta)
     }
 }
 

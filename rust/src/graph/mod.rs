@@ -24,6 +24,7 @@ pub struct Graph {
     offsets: Vec<u32>,
     targets: Vec<u32>,
     weights: Vec<u32>,
+    version: u64,
 }
 
 impl Graph {
@@ -69,7 +70,16 @@ impl Graph {
                 push(&mut cursor, v, u, w);
             }
         }
-        Graph { n, directed, logical_edges, offsets, targets, weights }
+        Graph { n, directed, logical_edges, offsets, targets, weights, version: 0 }
+    }
+
+    /// Attribute version: 0 at construction, +1 per successful
+    /// [`Graph::apply_delta`]. The streaming layer's epoch numbers
+    /// ([`crate::service::stream`]) mirror this stamp, so a snapshot's
+    /// graph always reports which delta chain produced it.
+    #[inline]
+    pub fn version(&self) -> u64 {
+        self.version
     }
 
     /// Vertex count.
@@ -190,6 +200,7 @@ impl Graph {
             let i = self.arc_index(u, v)?;
             self.weights[i] = w;
         }
+        self.version += 1;
         Ok(())
     }
 }
@@ -229,6 +240,14 @@ impl Delta {
         if !g.is_directed() {
             self.arcs.push((v, u, w));
         }
+    }
+
+    /// Append one raw arc change without undirected expansion. For callers
+    /// that have already resolved edges to arcs themselves — the sharded
+    /// delta router ([`crate::sim::multichip::ShardedMachine::apply_attr_updates`])
+    /// uses this to emit shard-local and ghost (`GHOST_BASE`-tagged) arcs.
+    pub fn push_arc(&mut self, u: u32, v: u32, w: u32) {
+        self.arcs.push((u, v, w));
     }
 
     /// The resolved per-arc changes `(src, dst, new_weight)`.
@@ -332,6 +351,21 @@ mod tests {
         let mut d2 = Delta::new();
         d2.reweight(&g.clone(), 0, 9, 4); // vertex out of range
         assert!(g.apply_delta(&d2).is_err());
+    }
+
+    #[test]
+    fn apply_delta_bumps_version_only_on_success() {
+        let mut g = Graph::from_edges(3, &[(0, 1, 5), (1, 2, 7)], false);
+        assert_eq!(g.version(), 0);
+        let d = Delta::from_edges(&g.clone(), &[(0, 1, 9)]);
+        g.apply_delta(&d).unwrap();
+        assert_eq!(g.version(), 1);
+        let mut bad = Delta::new();
+        bad.push_arc(0, 2, 4); // arc 0->2 does not exist
+        assert!(g.apply_delta(&bad).is_err());
+        assert_eq!(g.version(), 1, "failed delta leaves the version stamp alone");
+        g.apply_delta(&d).unwrap();
+        assert_eq!(g.version(), 2);
     }
 
     #[test]

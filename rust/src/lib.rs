@@ -35,6 +35,15 @@
 //! exchanging frontier packets for cut arcs over a modeled inter-chip
 //! link; [`service::Engine::new_sharded`] serves the same job types
 //! against the sharded machine (`flip serve --shards K`).
+//!
+//! Continuous serving is the streaming layer (DESIGN.md §9):
+//! [`service::stream::StreamServer`] admits queries into a bounded queue
+//! against RCU epoch-versioned snapshots ([`service::stream::EpochStore`]
+//! — in-flight queries keep the graph state they pinned; updates build
+//! the next epoch off the hot path, bit-identical to a stop-the-world
+//! recompile), shares one fabric run across identical queries, and
+//! reports the SLO surface ([`metrics::StreamStats`]) behind
+//! `flip serve --duration --qps-target --update-rate`.
 
 #![warn(missing_docs)]
 

@@ -10,7 +10,9 @@
 //! flip serve --group <g> [--idx I] [--queries N] [--threads T]
 //!            [--workload bfs|sssp|wcc|nav|mix] [--shards K] [--seed S]
 //!            [--faults SEED] [--deadline CYCLES] [--retries N]
-//!            [--set key=val]...
+//!            [--json PATH] [--set key=val]...
+//! flip serve --duration SECS [--qps-target N] [--update-rate R]
+//!            [--queue-depth D] ...     sustained-load streaming mode
 //! flip compile --group <g> [--idx I]        mapping statistics
 //! flip golden --workload <w> --group <g>    validate sim vs PJRT artifacts
 //! flip info                                 configuration + artifact status
@@ -136,7 +138,12 @@ fn print_usage() {
     println!("                 (--group, [--idx], [--queries N], [--threads T],");
     println!("                 [--workload bfs|sssp|wcc|nav|mix], [--shards K] for a");
     println!("                 K-chip partitioned machine; [--faults SEED] lossy links,");
-    println!("                 [--deadline CYCLES] per-query budget, [--retries N])");
+    println!("                 [--deadline CYCLES] per-query budget, [--retries N],");
+    println!("                 [--json PATH] machine-readable report;");
+    println!("                 [--duration SECS] switches to the streaming server:");
+    println!("                 open-loop admission at [--qps-target N] with weight deltas");
+    println!("                 racing queries at [--update-rate R] per second over RCU");
+    println!("                 epoch snapshots, [--queue-depth D] bounded admission)");
     println!("  compile        mapping statistics (--group, --idx)");
     println!("  golden         validate simulator vs PJRT golden model");
     println!("  info           configuration and artifact status");
@@ -314,6 +321,9 @@ fn cmd_run_extended(
 /// runs in partial-results mode instead of aborting on the first error.
 fn cmd_serve(args: &Args) -> Result<()> {
     use flip::service::{Engine, Job, ServePolicy};
+    if args.flag("duration").is_some() {
+        return cmd_serve_stream(args);
+    }
     let env = args.env()?;
     let group = args.group()?;
     let idx: usize = args.flag("idx").unwrap_or("0").parse()?;
@@ -401,6 +411,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  queries/s         : {:.1}", report.queries_per_s);
     println!("  sim cycles        : {}", report.sim_cycles);
     println!("  sim PE-cycles/s   : {:.1}M", report.pe_cycles_per_s / 1e6);
+    if let Some(path) = args.flag("json") {
+        let mut sink = report::MetricsSink::new("serve");
+        sink.result("batch")
+            .metric("queries", queries as f64)
+            .metric("served", (queries - errors) as f64)
+            .metric("failed", errors as f64)
+            .metric("wall_seconds", report.wall_seconds)
+            .metric("queries_per_s", report.queries_per_s)
+            .metric("sim_cycles", report.sim_cycles as f64)
+            .metric("pe_cycles_per_s", report.pe_cycles_per_s)
+            .metric("retries", report.retries as f64)
+            .metric("deadline_aborts", report.deadline_aborts as f64);
+        sink.write_to(std::path::Path::new(path))?;
+        println!("  [json written to {path}]");
+    }
     if faults.is_some() || deadline.is_some() {
         // lossy/budgeted serving: report partial results instead of
         // failing the whole batch on the first transient
@@ -416,6 +441,230 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     } else if let Some(e) = report.first_error() {
         return Err(format!("first failed query: {e}").into());
+    }
+    Ok(())
+}
+
+/// `flip serve --duration SECS` — the sustained-load streaming server
+/// (DESIGN.md §9): open-loop query admission at `--qps-target` against a
+/// bounded queue, weight deltas racing queries at `--update-rate` per
+/// second over RCU epoch snapshots, and a tail-latency SLO report
+/// (p50/p99/p999 modeled-cycle and wall-clock, throughput, queue depth,
+/// epoch lag). `--json PATH` writes the report in the bench-sink shape so
+/// CI asserts on `p99_cycles`/`deadline_aborts` instead of scraping text.
+fn cmd_serve_stream(args: &Args) -> Result<()> {
+    use flip::graph::Delta;
+    use flip::service::stream::{EpochStore, StreamConfig, StreamServer};
+    use flip::service::{Job, ServePolicy};
+    let env = args.env()?;
+    let group = args.group()?;
+    let idx: usize = args.flag("idx").unwrap_or("0").parse()?;
+    let duration: f64 = args.flag("duration").unwrap_or("5").parse()?;
+    let qps_target: f64 = args.flag("qps-target").unwrap_or("100").parse()?;
+    let update_rate: f64 = args.flag("update-rate").unwrap_or("0").parse()?;
+    let queue_depth: usize = args.flag("queue-depth").unwrap_or("1024").parse()?;
+    let shards: usize = args.flag("shards").unwrap_or("0").parse()?;
+    let faults: Option<u64> = args.flag("faults").map(|s| s.parse()).transpose()?;
+    let deadline: Option<u64> = args.flag("deadline").map(|s| s.parse()).transpose()?;
+    let retries: u32 = args.flag("retries").unwrap_or("0").parse()?;
+    let threads: usize = match args.flag("threads") {
+        Some(t) => t.parse()?,
+        None => std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+    };
+    let kind = args.flag("workload").unwrap_or("mix");
+    let g = datasets::generate_one(group, idx, env.seed);
+    let nav_ok = !g.is_directed();
+    if matches!(kind, "nav" | "astar") && !nav_ok {
+        return Err(format!(
+            "navigation needs an undirected road network; group {} is directed \
+             (try srn/lrn/extlrn)",
+            group.name()
+        )
+        .into());
+    }
+    let t0 = std::time::Instant::now();
+    let store = if shards >= 1 {
+        let spair = flip::experiments::harness::ShardedPair::build(&g, shards, &env.cfg, env.seed);
+        println!(
+            "  partition+compile : {:.1} ms (once; {} shards)",
+            t0.elapsed().as_secs_f64() * 1e3,
+            spair.num_shards()
+        );
+        EpochStore::new_sharded(spair)
+    } else {
+        let pair = flip::experiments::harness::CompiledPair::build(&g, &env.cfg, env.seed);
+        println!("  compile + map     : {:.1} ms (once)", t0.elapsed().as_secs_f64() * 1e3);
+        EpochStore::new_single(pair)
+    };
+    let wants_nav = nav_ok && matches!(kind, "nav" | "astar" | "mix");
+    let store = if wants_nav { store.with_navigation(4) } else { store };
+    let mut opts =
+        SimOptions { max_cycles: 2_000_000_000, watchdog: 5_000_000, ..Default::default() };
+    if let Some(seed) = faults {
+        opts.faults = flip::sim::FaultPlan::seeded(seed);
+        println!("  fault plan        : seed {seed}");
+    }
+    let cfg = StreamConfig {
+        queue_depth,
+        workers: threads,
+        policy: ServePolicy { deadline, max_retries: retries },
+        opts,
+        ..Default::default()
+    };
+    let mut srv = StreamServer::new(store, cfg);
+    println!(
+        "streaming {kind} queries on {} graph #{idx} (|V|={}, |E|={}) for {duration}s \
+         at {qps_target} qps target, {update_rate} updates/s, {threads} workers",
+        group.name(),
+        g.num_vertices(),
+        g.num_edges()
+    );
+
+    let n = g.num_vertices() as u64;
+    let mut rng = flip::util::Rng::new(env.seed ^ 0x5E22);
+    let mk_job = |i: u64, rng: &mut flip::util::Rng| -> Result<Job> {
+        let s = rng.below(n) as u32;
+        let t = rng.below(n) as u32;
+        Ok(match kind {
+            "bfs" => Job::Workload(Workload::Bfs, s),
+            "sssp" => Job::Workload(Workload::Sssp, s),
+            "wcc" => Job::Workload(Workload::Wcc, s),
+            "nav" | "astar" => Job::Navigate { source: s, target: t },
+            "mix" => match i % 3 {
+                0 => Job::Workload(Workload::Bfs, s),
+                1 => Job::Workload(Workload::Sssp, s),
+                _ if nav_ok => Job::Navigate { source: s, target: t },
+                _ => Job::Workload(Workload::Wcc, s),
+            },
+            other => return Err(format!("unknown serve workload `{other}`").into()),
+        })
+    };
+    // reweight one random existing edge of the *current* epoch's graph
+    let mk_delta = |srv: &StreamServer, rng: &mut flip::util::Rng| -> Delta {
+        let pin = srv.store().pin();
+        let graph = pin.graph();
+        loop {
+            let u = rng.below(graph.num_vertices() as u64) as u32;
+            let (targets, _) = graph.out_edges(u);
+            if targets.is_empty() {
+                continue;
+            }
+            let v = targets[rng.below(targets.len() as u64) as usize];
+            let w = rng.below(100) as u32 + 1;
+            return Delta::from_edges(graph, &[(u, v, w)]);
+        }
+    };
+
+    let start = std::time::Instant::now();
+    let mut submitted = 0u64;
+    let mut updates_due_done = 0u64;
+    loop {
+        let elapsed = start.elapsed().as_secs_f64();
+        if elapsed >= duration {
+            break;
+        }
+        // open-loop admission: whatever the wall clock says is due gets
+        // submitted now; a full queue refuses (and counts) the overflow
+        let due = (elapsed * qps_target) as u64;
+        while submitted < due {
+            let job = mk_job(submitted, &mut rng)?;
+            let _ = srv.submit(job);
+            submitted += 1;
+        }
+        let upd_due = (elapsed * update_rate) as u64;
+        while updates_due_done < upd_due {
+            let d = mk_delta(&srv, &mut rng);
+            srv.apply_update(&d)?;
+            updates_due_done += 1;
+        }
+        if srv.pending() > 0 {
+            srv.drain_batch();
+        } else {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+    srv.drain_all();
+    let wall = start.elapsed().as_secs_f64();
+    let stats = srv.stats().clone();
+    let completed = stats.completed();
+    let qps = if wall > 0.0 { completed as f64 / wall } else { 0.0 };
+    let apply_overhead_pct =
+        if wall > 0.0 { stats.epoch_apply_us as f64 / (wall * 1e6) * 100.0 } else { 0.0 };
+    println!("  wall time         : {wall:.3} s");
+    println!("  submitted         : {submitted} ({} rejected at admission)", stats.rejected);
+    println!("  served / failed   : {} / {}", stats.served, stats.failed);
+    println!("  throughput        : {qps:.1} completed queries/s");
+    println!(
+        "  latency (cycles)  : p50 {}  p99 {}  p999 {}  max {}",
+        stats.cycles.p50(),
+        stats.cycles.p99(),
+        stats.cycles.p999(),
+        stats.cycles.max()
+    );
+    println!(
+        "  latency (wall us) : p50 {}  p99 {}  p999 {}  max {}",
+        stats.wall_us.p50(),
+        stats.wall_us.p99(),
+        stats.wall_us.p999(),
+        stats.wall_us.max()
+    );
+    println!(
+        "  queue depth       : p50 {}  max {} (bound {queue_depth})",
+        stats.queue_depth.p50(),
+        stats.queue_depth.max()
+    );
+    println!(
+        "  epoch lag         : p50 {}  max {} (epochs published {})",
+        stats.epoch_lag.p50(),
+        stats.epoch_lag.max(),
+        stats.epochs_published
+    );
+    println!(
+        "  frontier sharing  : {} of {} queries fanned out of {} sim runs",
+        stats.shared_hits, completed, stats.sim_runs
+    );
+    println!(
+        "  epoch apply       : {} us total ({apply_overhead_pct:.2}% of wall)",
+        stats.epoch_apply_us
+    );
+    println!(
+        "  retries / aborts  : {} retries, {} deadline aborts",
+        stats.retries, stats.deadline_aborts
+    );
+    println!(
+        "  epochs live       : {:?} (retired {})",
+        srv.store().live_epochs(),
+        srv.store().retired_count()
+    );
+    if let Some(path) = args.flag("json") {
+        let mut sink = report::MetricsSink::new("serve");
+        sink.result("stream")
+            .metric("duration_s", wall)
+            .metric("qps_target", qps_target)
+            .metric("update_rate", update_rate)
+            .metric("stream_qps", qps)
+            .metric("submitted", submitted as f64)
+            .metric("served", stats.served as f64)
+            .metric("failed", stats.failed as f64)
+            .metric("rejected", stats.rejected as f64)
+            .metric("p50_cycles", stats.cycles.p50() as f64)
+            .metric("p99_cycles", stats.cycles.p99() as f64)
+            .metric("p999_cycles", stats.cycles.p999() as f64)
+            .metric("p50_wall_us", stats.wall_us.p50() as f64)
+            .metric("p99_wall_us", stats.wall_us.p99() as f64)
+            .metric("p999_wall_us", stats.wall_us.p999() as f64)
+            .metric("queue_depth_p50", stats.queue_depth.p50() as f64)
+            .metric("queue_depth_max", stats.queue_depth.max() as f64)
+            .metric("epoch_lag_p50", stats.epoch_lag.p50() as f64)
+            .metric("epoch_lag_max", stats.epoch_lag.max() as f64)
+            .metric("epochs_published", stats.epochs_published as f64)
+            .metric("epoch_apply_overhead_pct", apply_overhead_pct)
+            .metric("sim_runs", stats.sim_runs as f64)
+            .metric("shared_hits", stats.shared_hits as f64)
+            .metric("retries", stats.retries as f64)
+            .metric("deadline_aborts", stats.deadline_aborts as f64);
+        sink.write_to(std::path::Path::new(path))?;
+        println!("  [json written to {path}]");
     }
     Ok(())
 }

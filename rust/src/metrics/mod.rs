@@ -127,9 +127,231 @@ pub struct SimMetrics {
     pub parallelism_trace: Vec<u16>,
 }
 
+/// Histogram bucket count: bucket 0 holds the value 0, bucket `b ≥ 1`
+/// holds values in `[2^(b-1), 2^b)` — 64 value buckets cover all of
+/// `u64`.
+const HIST_BUCKETS: usize = 65;
+
+/// Power-of-two bucketed latency histogram for the streaming serving
+/// layer's SLO metrics (DESIGN.md §9): O(1) record, fixed memory, and
+/// *deterministic* quantiles — a quantile returns its bucket's upper
+/// bound (clamped to the observed max), so p50/p99/p999 over
+/// modeled-cycle samples are exact functions of the sample multiset and
+/// safe to assert on in tests. Bucket resolution is a factor of two;
+/// that is the published contract, not an implementation accident.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram { counts: vec![0; HIST_BUCKETS], total: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    /// Bucket index of `v`: 0 for 0, else `floor(log2 v) + 1`.
+    #[inline]
+    fn bucket(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket(v)] += 1;
+        self.total += 1;
+        self.sum += u128::from(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold another histogram into this one (shard/worker merge).
+    pub fn merge(&mut self, o: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&o.counts) {
+            *a += b;
+        }
+        self.total += o.total;
+        self.sum += o.sum;
+        self.min = self.min.min(o.min);
+        self.max = self.max.max(o.max);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Smallest recorded sample (0 on an empty histogram).
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded sample.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean of all samples (0.0 on an empty histogram).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// The `q`-quantile (`0.0 < q ≤ 1.0`): the upper bound of the bucket
+    /// holding the ⌈q·total⌉-th smallest sample, clamped to the observed
+    /// max. Returns 0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let upper = if b == 0 {
+                    0
+                } else if b >= 64 {
+                    u64::MAX
+                } else {
+                    (1u64 << b) - 1
+                };
+                return upper.min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Median (bucket-resolution, see [`LatencyHistogram::quantile`]).
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    /// 99th percentile.
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// 99.9th percentile.
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+}
+
+/// Aggregate counters of one streaming serving session
+/// ([`crate::service::stream::StreamServer`]): the SLO surface the CLI
+/// report, the bench JSON sink and the CI smoke artifact all read
+/// (DESIGN.md §9 defines each metric).
+#[derive(Debug, Clone, Default)]
+pub struct StreamStats {
+    /// Modeled-cycle latency per answered query (deterministic).
+    pub cycles: LatencyHistogram,
+    /// Host wall-clock latency per answered query, microseconds,
+    /// admission → completion (includes queue wait; nondeterministic).
+    pub wall_us: LatencyHistogram,
+    /// Queue depth sampled at each successful admission.
+    pub queue_depth: LatencyHistogram,
+    /// Epoch lag per query: published epochs between the epoch a query
+    /// pinned at admission and the current epoch at its completion.
+    pub epoch_lag: LatencyHistogram,
+    /// Queries answered successfully.
+    pub served: u64,
+    /// Queries that completed with a [`crate::service::QueryError`].
+    pub failed: u64,
+    /// Queries refused at admission (bounded queue full).
+    pub rejected: u64,
+    /// Simulator runs actually executed (≤ `served + failed` when
+    /// cross-query frontier sharing fans one run out to many callers).
+    pub sim_runs: u64,
+    /// Queries answered from another query's run (sharing fan-out).
+    pub shared_hits: u64,
+    /// Engine-level retries spent under the serve policy.
+    pub retries: u64,
+    /// Queries aborted on their modeled-cycle deadline.
+    pub deadline_aborts: u64,
+    /// Epochs published by `apply_update` (excludes epoch 0).
+    pub epochs_published: u64,
+    /// Host microseconds spent building next-epoch snapshots (the
+    /// off-hot-path RCU copy+patch cost).
+    pub epoch_apply_us: u64,
+}
+
+impl StreamStats {
+    /// Completed queries (answered + failed).
+    pub fn completed(&self) -> u64 {
+        self.served + self.failed
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn histogram_quantiles_are_bucket_upper_bounds() {
+        let mut h = LatencyHistogram::new();
+        for v in [0u64, 1, 2, 3, 5, 8, 100, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 1000);
+        // rank ⌈0.5·8⌉ = 4 → the sample 3, bucket [2,4) → upper bound 3
+        assert_eq!(h.p50(), 3);
+        // p99/p999 land in the top bucket, clamped to the observed max
+        assert_eq!(h.p99(), 1000);
+        assert_eq!(h.p999(), 1000);
+        assert_eq!(h.quantile(1.0), 1000);
+        assert!((h.mean() - 1119.0 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_empty_and_merge() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.p99(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.mean(), 0.0);
+        let mut a = LatencyHistogram::new();
+        a.record(4);
+        let mut b = LatencyHistogram::new();
+        b.record(64);
+        b.record(2);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.min(), 2);
+        assert_eq!(a.max(), 64);
+        let mut c = LatencyHistogram::new();
+        c.record(4);
+        c.record(64);
+        c.record(2);
+        assert_eq!(a, c, "merge equals recording the union");
+    }
+
+    #[test]
+    fn histogram_single_sample_quantiles_are_exact() {
+        let mut h = LatencyHistogram::new();
+        h.record(777);
+        assert_eq!(h.p50(), 777);
+        assert_eq!(h.p99(), 777);
+        assert_eq!(h.p999(), 777);
+    }
 
     #[test]
     fn mteps_basic() {

@@ -135,6 +135,67 @@ impl Json {
     }
 }
 
+/// A machine-readable results file in the bench-sink shape —
+/// `{"suite": ..., "created_unix": ..., "results": [{"name": ..., <metric>: <num>, ...}]}`
+/// — the same layout `benches/common` writes to `BENCH_<suite>.json`, so
+/// CI reads CLI output (`flip serve --json`) and bench output with one
+/// parser and one artifact glob.
+pub struct MetricsSink {
+    suite: String,
+    results: Vec<(String, Vec<(String, f64)>)>,
+}
+
+impl MetricsSink {
+    /// An empty sink for one suite.
+    pub fn new(suite: &str) -> MetricsSink {
+        MetricsSink { suite: suite.to_string(), results: Vec::new() }
+    }
+
+    /// Start a new named result object; subsequent [`MetricsSink::metric`]
+    /// calls attach to it.
+    pub fn result(&mut self, name: &str) -> &mut MetricsSink {
+        self.results.push((name.to_string(), Vec::new()));
+        self
+    }
+
+    /// Attach one numeric metric to the most recently started result.
+    pub fn metric(&mut self, key: &str, value: f64) -> &mut MetricsSink {
+        if let Some((_, metrics)) = self.results.last_mut() {
+            metrics.push((key.to_string(), value));
+        }
+        self
+    }
+
+    /// Serialize to the bench-sink [`Json`] shape.
+    pub fn to_json(&self) -> Json {
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|(name, metrics)| {
+                let mut obj = vec![("name".to_string(), Json::Str(name.clone()))];
+                for (k, v) in metrics {
+                    obj.push((k.clone(), Json::Num(*v)));
+                }
+                Json::Obj(obj)
+            })
+            .collect();
+        let unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs() as f64)
+            .unwrap_or(0.0);
+        Json::Obj(vec![
+            ("suite".to_string(), Json::Str(self.suite.clone())),
+            ("created_unix".to_string(), Json::Num(unix)),
+            ("results".to_string(), Json::Arr(results)),
+        ])
+    }
+
+    /// Write the JSON file to `path`.
+    pub fn write_to(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().render() + "\n")
+    }
+}
+
 /// Write a report file under `reports/` (created on demand); returns path.
 pub fn write_report(name: &str, content: &str) -> std::io::Result<std::path::PathBuf> {
     let dir = std::path::PathBuf::from("reports");
@@ -171,6 +232,17 @@ mod tests {
         assert_eq!(sig(0.012345, 3), "0.0123");
         assert_eq!(sig(1.5, 2), "1.5");
         assert_eq!(times(36.0), "36.0x");
+    }
+
+    #[test]
+    fn metrics_sink_matches_bench_shape() {
+        let mut s = MetricsSink::new("serve");
+        s.result("stream").metric("stream_qps", 120.0).metric("p99_cycles", 4096.0);
+        s.result("other").metric("x", 1.5);
+        let txt = s.to_json().render();
+        assert!(txt.starts_with(r#"{"suite":"serve","created_unix":"#), "{txt}");
+        assert!(txt.contains(r#"{"name":"stream","stream_qps":120,"p99_cycles":4096}"#), "{txt}");
+        assert!(txt.contains(r#"{"name":"other","x":1.5}"#), "{txt}");
     }
 
     #[test]

@@ -37,7 +37,10 @@
 //! bounded job slice and block until the [`BatchReport`] is complete.
 //! There are no unbounded internal queues — admission control is the
 //! caller's batch size, which is the right shape for an edge device
-//! draining a request ring.
+//! draining a request ring. For continuous traffic where updates race
+//! queries, the [`stream`] submodule layers a bounded admission queue,
+//! RCU epoch snapshots, and cross-query frontier sharing on top of this
+//! same serve path (DESIGN.md §9).
 //!
 //! **Traffic updates.** Weight-only deltas patch the shared
 //! [`CompiledPair`] in place via
@@ -53,6 +56,8 @@
 //! functionally identical to the single-chip engine (the sharded
 //! differential battery in `tests/sharded.rs` proves it); cycle counts
 //! reflect the lockstep timing model.
+
+pub mod stream;
 
 use crate::experiments::harness::{CompiledPair, ShardedPair};
 use crate::metrics::RunResult;

@@ -1,0 +1,680 @@
+//! Streaming serving layer (DESIGN.md §9): continuous admission, RCU
+//! epoch snapshots, and cross-query frontier sharing.
+//!
+//! [`super::Engine`] is batch-in/batch-out: callers assemble a job slice,
+//! block for the [`super::BatchReport`], and apply traffic deltas
+//! *between* batches. Real traffic is a continuous stream where updates
+//! race queries. This module closes that gap with three pieces:
+//!
+//! **Admission queue.** A [`StreamServer`] owns a bounded queue
+//! ([`StreamConfig::queue_depth`]); [`StreamServer::submit`] either
+//! admits a job (pinning the current epoch, see below) or refuses it with
+//! a typed [`AdmissionError`] — backpressure is a *value*, never an
+//! unbounded buffer. [`StreamServer::drain_batch`] pops up to
+//! [`StreamConfig::max_batch`] admitted queries and answers them on the
+//! worker pool, reusing the engine's budgeted serve path
+//! ([`super::ServePolicy`] deadlines and retries included).
+//!
+//! **Epoch-versioned snapshots (RCU).** An [`EpochStore`] publishes an
+//! immutable [`EpochSnapshot`] (compiled pair + ALT landmarks) under a
+//! monotonically increasing version. Admission pins the then-current
+//! epoch (an `Arc` clone — wait-free, O(1));
+//! [`EpochStore::apply_attr_updates`] clones the current target, patches
+//! it *off the hot path*, and publishes the result as the next epoch in
+//! one pointer swap. In-flight queries keep serving the snapshot they
+//! pinned; an epoch retires (frees its memory) exactly when its last pin
+//! drops — observable through [`EpochStore::live_epochs`] /
+//! [`EpochStore::retired_count`] via the store's `Weak` history. Because
+//! weight-only deltas never move placement, tables, or the partition
+//! (the [`crate::compiler::CompiledGraph::apply_attr_updates`]
+//! invariant), every published epoch is bit-identical to a stop-the-world
+//! recompile of the reweighted graph — the spine of `tests/stream.rs`.
+//!
+//! **Cross-query frontier sharing.** Queries are deduplicated per drained
+//! batch by `(epoch version, job)`: N identical SSSP/A*/BFS queries
+//! pinned to the same epoch run the fabric *once* and fan the result out
+//! to all N callers. The contract is strict identity — same job, same
+//! source, same target (A* prunes toward its target, so "same source,
+//! different target" must *not* share), same epoch — so a shared answer
+//! is bitwise the answer each caller would have computed alone
+//! (simulator determinism), never an approximation. Sharing is
+//! observable ([`StreamOutcome::shared`], [`StreamStats::shared_hits`])
+//! and can be disabled ([`StreamConfig::share_frontiers`]) for
+//! differential testing.
+//!
+//! Every completion feeds the [`StreamStats`] SLO surface
+//! (p50/p99/p999 modeled-cycle and wall-clock latency, throughput,
+//! queue depth, epoch lag) consumed by `flip serve --duration`, the
+//! bench JSON sink, and the CI smoke artifact.
+
+use super::{answer_budgeted, Job, QueryError, QueryErrorKind, QueryResult, ServePolicy, Target, WorkerMachine};
+use crate::experiments::harness::{CompiledPair, ShardedPair};
+use crate::graph::{Delta, Graph};
+use crate::metrics::StreamStats;
+use crate::sim::flip::{SimInstance, SimOptions};
+use crate::workloads::navigation::Landmarks;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+/// Owned serving target of one epoch: the streaming analog of the
+/// engine's borrowed [`Target`].
+enum EpochTarget {
+    Single(CompiledPair),
+    Sharded(ShardedPair),
+}
+
+impl EpochTarget {
+    fn graph(&self) -> &Graph {
+        match self {
+            EpochTarget::Single(p) => &p.graph,
+            EpochTarget::Sharded(p) => &p.graph,
+        }
+    }
+
+    /// Borrow as the engine-internal [`Target`] so the streaming workers
+    /// run the exact serve path batch queries do.
+    fn as_target(&self) -> Target<'_> {
+        match self {
+            EpochTarget::Single(p) => Target::Single(p),
+            EpochTarget::Sharded(p) => Target::Sharded(p),
+        }
+    }
+
+    fn clone_target(&self) -> EpochTarget {
+        match self {
+            EpochTarget::Single(p) => EpochTarget::Single(p.clone()),
+            EpochTarget::Sharded(p) => EpochTarget::Sharded(p.clone()),
+        }
+    }
+
+    fn apply(&mut self, delta: &Delta) -> Result<(), String> {
+        match self {
+            EpochTarget::Single(p) => p.apply_attr_updates(delta),
+            EpochTarget::Sharded(p) => p.apply_attr_updates(delta),
+        }
+    }
+}
+
+/// One immutable published epoch: a compiled serving target plus its
+/// weight-dependent ALT landmarks, frozen under a version number. Readers
+/// hold it through a [`PinnedEpoch`]; it is never mutated after publish.
+pub struct EpochSnapshot {
+    /// Epoch number — equal to the snapshot graph's
+    /// [`Graph::version`] (delta count since compile).
+    pub version: u64,
+    target: EpochTarget,
+    landmarks: Option<Landmarks>,
+}
+
+/// A reader's pin on one epoch: as long as any clone of this pin lives,
+/// [`EpochStore`] keeps the snapshot alive (it is an `Arc` clone).
+/// Dropping the last pin retires the epoch.
+#[derive(Clone)]
+pub struct PinnedEpoch(Arc<EpochSnapshot>);
+
+impl PinnedEpoch {
+    /// The pinned epoch's version.
+    pub fn version(&self) -> u64 {
+        self.0.version
+    }
+
+    /// The pinned snapshot's graph (the state queries answered against).
+    pub fn graph(&self) -> &Graph {
+        self.0.target.graph()
+    }
+}
+
+/// Lock a mutex, riding through poisoning: every critical section here
+/// is a handful of pointer operations that leave the store consistent,
+/// so a panicking peer cannot have torn the state.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// RCU-style epoch store: one current snapshot, swapped atomically by
+/// [`EpochStore::apply_attr_updates`], with a `Weak` history that makes
+/// retirement observable without ever extending a snapshot's life.
+///
+/// Readers ([`EpochStore::pin`]) take the lock only long enough to clone
+/// an `Arc`. The single writer builds the next epoch entirely outside
+/// the lock; concurrent writers must serialize externally
+/// ([`StreamServer`] does, by `&mut self`).
+pub struct EpochStore {
+    current: Mutex<Arc<EpochSnapshot>>,
+    /// `(version, weak)` per superseded epoch, publish order. A dead
+    /// `Weak` is a retired epoch.
+    history: Mutex<Vec<(u64, Weak<EpochSnapshot>)>>,
+    /// Landmarks count to rebuild per epoch (ALT is weight-dependent);
+    /// `None` = no navigation preprocessing.
+    navigation: Option<usize>,
+}
+
+impl EpochStore {
+    fn over(target: EpochTarget) -> EpochStore {
+        let version = target.graph().version();
+        EpochStore {
+            current: Mutex::new(Arc::new(EpochSnapshot { version, target, landmarks: None })),
+            history: Mutex::new(Vec::new()),
+            navigation: None,
+        }
+    }
+
+    /// A store whose epoch 0 is `pair` (single-chip).
+    pub fn new_single(pair: CompiledPair) -> EpochStore {
+        EpochStore::over(EpochTarget::Single(pair))
+    }
+
+    /// A store whose epoch 0 is `pair` (K-chip sharded).
+    pub fn new_sharded(pair: ShardedPair) -> EpochStore {
+        EpochStore::over(EpochTarget::Sharded(pair))
+    }
+
+    /// Build ALT landmarks for the current epoch and every future one
+    /// (panics on directed graphs, like [`Landmarks::build`]). Navigate
+    /// jobs are rejected without this.
+    pub fn with_navigation(self, num_landmarks: usize) -> EpochStore {
+        {
+            let mut cur = lock(&self.current);
+            let lm = Landmarks::build(cur.target.graph(), num_landmarks);
+            *cur = Arc::new(EpochSnapshot {
+                version: cur.version,
+                target: cur.target.clone_target(),
+                landmarks: Some(lm),
+            });
+        }
+        EpochStore { navigation: Some(num_landmarks), ..self }
+    }
+
+    /// Pin the current epoch: O(1), wait-free but for a pointer-clone
+    /// critical section. The snapshot stays alive until the last clone
+    /// of the returned pin drops.
+    pub fn pin(&self) -> PinnedEpoch {
+        PinnedEpoch(Arc::clone(&lock(&self.current)))
+    }
+
+    /// The current (latest published) epoch version.
+    pub fn version(&self) -> u64 {
+        lock(&self.current).version
+    }
+
+    /// Build and publish the next epoch: clone the current target, patch
+    /// the weight-only `delta` into it (tables + host graph, sharded
+    /// ghost entries included), rebuild landmarks if navigation is on,
+    /// and swap it in as current. Readers pinned to older epochs are
+    /// untouched. Returns the new epoch version.
+    ///
+    /// The build runs entirely off the hot path — admission and drains
+    /// proceed against the old epoch throughout — and the published
+    /// image is bit-identical to a stop-the-world recompile of the
+    /// reweighted graph (`tests/stream.rs`, `epoch_chain` property).
+    /// A delta that fails validation publishes nothing.
+    pub fn apply_attr_updates(&self, delta: &Delta) -> Result<u64, String> {
+        let base = Arc::clone(&lock(&self.current));
+        let mut target = base.target.clone_target();
+        target.apply(delta)?;
+        let landmarks = self.navigation.map(|k| Landmarks::build(target.graph(), k));
+        let next =
+            Arc::new(EpochSnapshot { version: target.graph().version(), target, landmarks });
+        let version = next.version;
+        let old = {
+            let mut cur = lock(&self.current);
+            std::mem::replace(&mut *cur, next)
+        };
+        lock(&self.history).push((old.version, Arc::downgrade(&old)));
+        drop(old); // the store's own reference; pins may keep it alive
+        Ok(version)
+    }
+
+    /// Versions still alive (current + every superseded epoch some pin
+    /// still holds), ascending.
+    pub fn live_epochs(&self) -> Vec<u64> {
+        let mut v = vec![lock(&self.current).version];
+        for (ver, w) in lock(&self.history).iter() {
+            if w.upgrade().is_some() {
+                v.push(*ver);
+            }
+        }
+        v.sort_unstable();
+        v
+    }
+
+    /// Superseded epochs whose memory has been reclaimed (their last pin
+    /// dropped).
+    pub fn retired_count(&self) -> usize {
+        lock(&self.history).iter().filter(|(_, w)| w.upgrade().is_none()).count()
+    }
+}
+
+/// Why [`StreamServer::submit`] refused a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// The bounded admission queue is at capacity; retry after a drain.
+    QueueFull {
+        /// The configured queue depth the submit ran into.
+        depth: usize,
+    },
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            AdmissionError::QueueFull { depth } => {
+                write!(f, "admission queue full (depth {depth})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Streaming-server knobs.
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    /// Bounded admission-queue depth; submits beyond it are refused
+    /// ([`AdmissionError::QueueFull`]).
+    pub queue_depth: usize,
+    /// Max queries popped per [`StreamServer::drain_batch`].
+    pub max_batch: usize,
+    /// Deduplicate identical `(epoch, job)` queries into one sim run
+    /// (see the module docs for the strict-identity contract).
+    pub share_frontiers: bool,
+    /// Worker threads for a drain (clamped to ≥ 1).
+    pub workers: usize,
+    /// Per-query deadline/retry policy (the engine's).
+    pub policy: ServePolicy,
+    /// Per-query simulator options.
+    pub opts: SimOptions,
+}
+
+impl Default for StreamConfig {
+    fn default() -> StreamConfig {
+        StreamConfig {
+            queue_depth: 1024,
+            max_batch: 64,
+            share_frontiers: true,
+            workers: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+            policy: ServePolicy::default(),
+            opts: SimOptions::default(),
+        }
+    }
+}
+
+/// One admitted, not-yet-drained query.
+struct Admitted {
+    id: u64,
+    job: Job,
+    epoch: Arc<EpochSnapshot>,
+    admitted_at: std::time::Instant,
+}
+
+/// One completed query, fanned back out of its (possibly shared) run.
+#[derive(Debug, Clone)]
+pub struct StreamOutcome {
+    /// Ticket returned by [`StreamServer::submit`].
+    pub id: u64,
+    /// The job answered.
+    pub job: Job,
+    /// Epoch version the query pinned at admission (and was answered
+    /// against).
+    pub epoch: u64,
+    /// True when this answer was fanned out of a run shared with other
+    /// identical queries.
+    pub shared: bool,
+    /// Epochs published between this query's admission and its
+    /// completion (0 = answered against the then-current state).
+    pub lag: u64,
+    /// The engine-identical result: bitwise what a solo run against the
+    /// pinned epoch returns.
+    pub result: Result<QueryResult, QueryError>,
+}
+
+/// The continuous streaming server: bounded admission over an
+/// [`EpochStore`], epoch-pinned queries, shared-frontier drains, and the
+/// [`StreamStats`] SLO surface. See the module docs for the full
+/// contract; `tests/stream.rs` is the differential battery behind it.
+pub struct StreamServer {
+    store: EpochStore,
+    cfg: StreamConfig,
+    queue: VecDeque<Admitted>,
+    /// One reusable machine per worker, lazily built, kept across drains
+    /// (weight-only epochs never change machine shape, so instances
+    /// serve every epoch).
+    machines: Vec<WorkerMachine>,
+    stats: StreamStats,
+    next_id: u64,
+}
+
+impl StreamServer {
+    /// A server over `store` with the given knobs.
+    pub fn new(store: EpochStore, cfg: StreamConfig) -> StreamServer {
+        StreamServer {
+            store,
+            cfg,
+            queue: VecDeque::new(),
+            machines: Vec::new(),
+            stats: StreamStats::default(),
+            next_id: 0,
+        }
+    }
+
+    /// The epoch store (pin/version/liveness observability).
+    pub fn store(&self) -> &EpochStore {
+        &self.store
+    }
+
+    /// Accumulated SLO statistics.
+    pub fn stats(&self) -> &StreamStats {
+        &self.stats
+    }
+
+    /// Queries admitted and not yet drained.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Admit one query: pin the current epoch and enqueue, or refuse with
+    /// [`AdmissionError::QueueFull`]. Returns the ticket id that will
+    /// come back on the [`StreamOutcome`].
+    pub fn submit(&mut self, job: Job) -> Result<u64, AdmissionError> {
+        if self.queue.len() >= self.cfg.queue_depth {
+            self.stats.rejected += 1;
+            return Err(AdmissionError::QueueFull { depth: self.cfg.queue_depth });
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Admitted {
+            id,
+            job,
+            epoch: self.store.pin().0,
+            admitted_at: std::time::Instant::now(),
+        });
+        self.stats.queue_depth.record(self.queue.len() as u64);
+        Ok(id)
+    }
+
+    /// Publish the next epoch from a weight-only delta (see
+    /// [`EpochStore::apply_attr_updates`]); queries already admitted keep
+    /// their pinned epoch. Records the off-hot-path build cost in
+    /// [`StreamStats::epoch_apply_us`].
+    pub fn apply_update(&mut self, delta: &Delta) -> Result<u64, String> {
+        let t0 = std::time::Instant::now();
+        let v = self.store.apply_attr_updates(delta)?;
+        self.stats.epoch_apply_us += t0.elapsed().as_micros() as u64;
+        self.stats.epochs_published += 1;
+        Ok(v)
+    }
+
+    /// Pop up to [`StreamConfig::max_batch`] admitted queries, group
+    /// identical `(epoch, job)` pairs into single sim runs, answer the
+    /// groups on the worker pool, and fan results back out in admission
+    /// order. Dropping a drained query's pin is what retires old epochs.
+    pub fn drain_batch(&mut self) -> Vec<StreamOutcome> {
+        let take = self.cfg.max_batch.min(self.queue.len());
+        if take == 0 {
+            return Vec::new();
+        }
+        let batch: Vec<Admitted> = self.queue.drain(..take).collect();
+        // group by strict (epoch version, job) identity — linear scan,
+        // batches are small and Job is a tiny Copy enum
+        let mut groups: Vec<(Arc<EpochSnapshot>, Job, usize)> = Vec::new();
+        let mut assign: Vec<usize> = Vec::with_capacity(batch.len());
+        for a in &batch {
+            let found = if self.cfg.share_frontiers {
+                groups
+                    .iter()
+                    .position(|(s, j, _)| s.version == a.epoch.version && *j == a.job)
+            } else {
+                None
+            };
+            match found {
+                Some(i) => {
+                    groups[i].2 += 1;
+                    assign.push(i);
+                }
+                None => {
+                    groups.push((Arc::clone(&a.epoch), a.job, 1));
+                    assign.push(groups.len() - 1);
+                }
+            }
+        }
+        let want = self.cfg.workers.min(groups.len()).max(1);
+        while self.machines.len() < want {
+            self.machines.push(match &self.store.pin().0.target {
+                EpochTarget::Single(p) => WorkerMachine::Single(SimInstance::new(&p.directed)),
+                EpochTarget::Sharded(p) => WorkerMachine::Sharded(p.directed.new_instances()),
+            });
+        }
+        let opts = &self.cfg.opts;
+        let policy = self.cfg.policy;
+        let groups_ref = &groups;
+        let answers: Vec<(u32, Result<QueryResult, QueryError>)> = if want <= 1 {
+            let m = &mut self.machines[0];
+            groups_ref
+                .iter()
+                .map(|(snap, job, _)| {
+                    let target = snap.target.as_target();
+                    answer_budgeted(m, &target, snap.landmarks.as_ref(), opts, policy, *job)
+                })
+                .collect()
+        } else {
+            let next = AtomicUsize::new(0);
+            let chunks: Vec<Vec<_>> = std::thread::scope(|s| {
+                let handles: Vec<_> = self
+                    .machines
+                    .iter_mut()
+                    .take(want)
+                    .map(|m| {
+                        let next = &next;
+                        s.spawn(move || {
+                            let mut local = Vec::new();
+                            loop {
+                                let i = next.fetch_add(1, Ordering::Relaxed);
+                                if i >= groups_ref.len() {
+                                    break;
+                                }
+                                let (snap, job, _) = &groups_ref[i];
+                                let target = snap.target.as_target();
+                                let (r, result) = answer_budgeted(
+                                    m,
+                                    &target,
+                                    snap.landmarks.as_ref(),
+                                    opts,
+                                    policy,
+                                    *job,
+                                );
+                                local.push((i, r, result));
+                            }
+                            local
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join().unwrap_or_else(|_| {
+                            unreachable!("stream workers surface failures as QueryError")
+                        })
+                    })
+                    .collect()
+            });
+            let mut out: Vec<Option<(u32, Result<QueryResult, QueryError>)>> =
+                Vec::with_capacity(groups_ref.len());
+            out.resize_with(groups_ref.len(), || None);
+            for (i, r, result) in chunks.into_iter().flatten() {
+                out[i] = Some((r, result));
+            }
+            out.into_iter()
+                .map(|o| o.unwrap_or_else(|| unreachable!("every group index is claimed once")))
+                .collect()
+        };
+        // account per-group costs once (one sim run per group)
+        self.stats.sim_runs += groups.len() as u64;
+        self.stats.shared_hits += (batch.len() - groups.len()) as u64;
+        for (retries, _) in &answers {
+            self.stats.retries += u64::from(*retries);
+        }
+        // fan out per-query outcomes in admission order
+        let now_version = self.store.version();
+        let mut outcomes = Vec::with_capacity(batch.len());
+        for (bi, a) in batch.into_iter().enumerate() {
+            let gi = assign[bi];
+            let (_, ref result) = answers[gi];
+            let result = result.clone();
+            match &result {
+                Ok(q) => {
+                    self.stats.served += 1;
+                    self.stats.cycles.record(q.run.cycles);
+                }
+                Err(e) => {
+                    self.stats.failed += 1;
+                    if e.kind == QueryErrorKind::Deadline {
+                        self.stats.deadline_aborts += 1;
+                    }
+                }
+            }
+            self.stats.wall_us.record(a.admitted_at.elapsed().as_micros() as u64);
+            let lag = now_version.saturating_sub(a.epoch.version);
+            self.stats.epoch_lag.record(lag);
+            outcomes.push(StreamOutcome {
+                id: a.id,
+                job: a.job,
+                epoch: a.epoch.version,
+                shared: groups[gi].2 > 1,
+                lag,
+                result,
+            });
+            // `a` (and its pin) drops here: the last drained query of an
+            // old epoch is what retires it
+        }
+        outcomes
+    }
+
+    /// Drain until the queue is empty, concatenating batch outcomes.
+    pub fn drain_all(&mut self) -> Vec<StreamOutcome> {
+        let mut all = Vec::new();
+        while !self.queue.is_empty() {
+            all.extend(self.drain_batch());
+        }
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::graph::generate;
+    use crate::workloads::Workload;
+
+    fn server(seed: u64, cfg: StreamConfig) -> (StreamServer, Graph) {
+        let g = generate::road_network(64, 146, 166, seed);
+        let pair = CompiledPair::build(&g, &ArchConfig::default(), 42);
+        (StreamServer::new(EpochStore::new_single(pair), cfg), g)
+    }
+
+    #[test]
+    fn streamed_answers_match_the_engine() {
+        let (mut srv, g) = server(31, StreamConfig { workers: 2, ..Default::default() });
+        for job in [Job::Workload(Workload::Bfs, 0), Job::Workload(Workload::Sssp, 7)] {
+            srv.submit(job).unwrap();
+        }
+        let out = srv.drain_all();
+        assert_eq!(out.len(), 2);
+        let pair = CompiledPair::build(&g, &ArchConfig::default(), 42);
+        let mut engine = super::super::Engine::new(&pair).with_workers(1);
+        let rep =
+            engine.serve(&[Job::Workload(Workload::Bfs, 0), Job::Workload(Workload::Sssp, 7)]);
+        for (o, r) in out.iter().zip(&rep.results) {
+            let (a, b) = (o.result.as_ref().unwrap(), r.as_ref().unwrap());
+            assert_eq!(a.run.cycles, b.run.cycles);
+            assert_eq!(a.run.attrs, b.run.attrs);
+            assert_eq!(a.run.sim, b.run.sim);
+            assert_eq!(o.epoch, 0);
+            assert_eq!(o.lag, 0);
+        }
+        assert_eq!(srv.stats().served, 2);
+        assert_eq!(srv.stats().sim_runs, 2);
+        assert_eq!(srv.stats().shared_hits, 0);
+    }
+
+    #[test]
+    fn identical_queries_share_one_run() {
+        let (mut srv, _) = server(33, StreamConfig { workers: 1, ..Default::default() });
+        let job = Job::Workload(Workload::Sssp, 5);
+        for _ in 0..4 {
+            srv.submit(job).unwrap();
+        }
+        srv.submit(Job::Workload(Workload::Sssp, 6)).unwrap();
+        let out = srv.drain_all();
+        assert_eq!(out.len(), 5);
+        assert_eq!(srv.stats().sim_runs, 2, "4 identical + 1 distinct = 2 runs");
+        assert_eq!(srv.stats().shared_hits, 3);
+        let first = out[0].result.as_ref().unwrap();
+        for o in &out[..4] {
+            assert!(o.shared);
+            let q = o.result.as_ref().unwrap();
+            assert_eq!(q.run.cycles, first.run.cycles);
+            assert_eq!(q.run.attrs, first.run.attrs);
+        }
+        assert!(!out[4].shared);
+    }
+
+    #[test]
+    fn queue_full_is_a_typed_refusal_and_recovers() {
+        let cfg = StreamConfig { queue_depth: 2, workers: 1, ..Default::default() };
+        let (mut srv, _) = server(35, cfg);
+        let job = Job::Workload(Workload::Bfs, 0);
+        srv.submit(job).unwrap();
+        srv.submit(job).unwrap();
+        assert_eq!(srv.submit(job), Err(AdmissionError::QueueFull { depth: 2 }));
+        assert_eq!(srv.stats().rejected, 1);
+        assert_eq!(srv.drain_all().len(), 2);
+        srv.submit(job).unwrap();
+        assert_eq!(srv.pending(), 1, "queue frees up after a drain");
+    }
+
+    #[test]
+    fn updates_race_queries_without_moving_pinned_epochs() {
+        let (mut srv, g) = server(37, StreamConfig { workers: 1, ..Default::default() });
+        let job = Job::Workload(Workload::Sssp, 3);
+        srv.submit(job).unwrap();
+        let (u, v, _) = g.arcs().next().unwrap();
+        let d = Delta::from_edges(&g, &[(u, v, 99)]);
+        srv.apply_update(&d).unwrap();
+        srv.submit(job).unwrap();
+        let out = srv.drain_all();
+        assert_eq!(out[0].epoch, 0, "admitted before the update");
+        assert_eq!(out[0].lag, 1);
+        assert_eq!(out[1].epoch, 1, "admitted after the update");
+        assert_eq!(out[1].lag, 0);
+        assert!(!out[0].shared && !out[1].shared, "different epochs never share");
+        // the old epoch retired when its last query drained
+        assert_eq!(srv.store().live_epochs(), vec![1]);
+        assert_eq!(srv.store().retired_count(), 1);
+        // and the answers differ iff the reweighted edge matters
+        let mut g1 = g.clone();
+        g1.apply_delta(&d).unwrap();
+        let a0 = out[0].result.as_ref().unwrap();
+        let a1 = out[1].result.as_ref().unwrap();
+        assert_eq!(a0.run.attrs, crate::graph::reference::sssp(&g, 3));
+        assert_eq!(a1.run.attrs, crate::graph::reference::sssp(&g1, 3));
+    }
+
+    #[test]
+    fn pinned_epoch_survives_until_last_pin_drops() {
+        let (srv, g) = server(39, StreamConfig::default());
+        let store = srv.store;
+        let pin_a = store.pin();
+        let pin_b = pin_a.clone();
+        let (u, v, _) = g.arcs().next().unwrap();
+        store.apply_attr_updates(&Delta::from_edges(&g, &[(u, v, 50)])).unwrap();
+        assert_eq!(store.live_epochs(), vec![0, 1]);
+        drop(pin_a);
+        assert_eq!(store.live_epochs(), vec![0, 1], "second pin keeps epoch 0 alive");
+        assert_eq!(store.retired_count(), 0);
+        drop(pin_b);
+        assert_eq!(store.live_epochs(), vec![1]);
+        assert_eq!(store.retired_count(), 1);
+    }
+}

@@ -1,0 +1,548 @@
+//! Streaming-server differential battery (DESIGN.md §9).
+//!
+//! The streaming layer promises that continuous serving is a pure
+//! scheduling optimization — never a semantic one:
+//!
+//! * every streamed answer is bitwise the answer a solo batch engine
+//!   computes against a stop-the-world recompile of the graph state the
+//!   query pinned at admission (the RCU epoch contract);
+//! * frontier sharing is invisible: a server that deduplicates identical
+//!   `(epoch, job)` queries returns exactly what a non-sharing server
+//!   returns, query by query — it only runs the fabric fewer times;
+//! * an epoch chain of N weight-only deltas, one stop-the-world merged
+//!   apply, and a full recompile of the final graph are bitwise
+//!   interchangeable, for all six workloads at K ∈ {1, 2, 4};
+//! * epoch retirement tracks pins exactly: a snapshot is freed at the
+//!   drop of its last pin, never before, never late;
+//! * admission is conserved arithmetic: submitted = served + failed +
+//!   still-queued, rejected is typed backpressure, and the SLO
+//!   histograms account for every completion.
+//!
+//! Randomized suites derive from one 64-bit seed; on failure the panic
+//! names it. Re-run just that case with
+//! `FLIP_STREAM_SEED=0x<seed> cargo test -q --test stream`.
+
+mod common;
+
+use flip::compiler::{compile, CompileOpts};
+use flip::config::ArchConfig;
+use flip::experiments::harness::CompiledPair;
+use flip::graph::{Delta, Graph};
+use flip::service::stream::{EpochStore, StreamConfig, StreamOutcome, StreamServer};
+use flip::service::{Engine, Job};
+use flip::sim::flip as flipsim;
+use flip::sim::flip::SimOptions;
+use flip::sim::multichip::{self, ShardedMachine};
+use flip::workloads::Workload;
+use std::collections::VecDeque;
+
+/// xorshift64* — the battery's generator, independent of the crate's
+/// xoshiro so test inputs cannot covary with compile-time streams.
+struct XorShift {
+    s: u64,
+}
+
+impl XorShift {
+    fn new(seed: u64) -> XorShift {
+        XorShift { s: seed | 1 }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.s;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.s = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+}
+
+/// The per-suite seed list: `cases` seeds derived from `salt`, or just
+/// the user's `FLIP_STREAM_SEED` when set (the one-line repro path).
+fn seeds(salt: u64, cases: usize) -> Vec<u64> {
+    if let Ok(s) = std::env::var("FLIP_STREAM_SEED") {
+        let s = s.trim();
+        let parsed = match s.strip_prefix("0x") {
+            Some(h) => u64::from_str_radix(h, 16),
+            None => s.parse::<u64>(),
+        };
+        return vec![parsed.unwrap_or_else(|_| panic!("bad FLIP_STREAM_SEED `{s}`"))];
+    }
+    let mut x = XorShift::new(0x57_2E_A7 ^ salt);
+    (0..cases).map(|_| x.next_u64()).collect()
+}
+
+/// Run one randomized case, panicking with the repro seed on failure.
+fn drive(name: &str, salt: u64, cases: usize, f: impl Fn(&mut XorShift) -> Result<(), String>) {
+    for seed in seeds(salt, cases) {
+        let mut x = XorShift::new(seed);
+        if let Err(msg) = f(&mut x) {
+            panic!(
+                "stream battery `{name}` failed: {msg}\n  one-line repro: \
+                 FLIP_STREAM_SEED={seed:#x} cargo test -q --test stream {name}"
+            );
+        }
+    }
+}
+
+/// A weight-only delta reweighting one random existing arc of `g`.
+fn random_weight_delta(g: &Graph, x: &mut XorShift) -> Delta {
+    let arcs: Vec<(u32, u32, u32)> = g.arcs().collect();
+    let (u, v, _) = arcs[x.below(arcs.len() as u64) as usize];
+    Delta::from_edges(g, &[(u, v, 1 + x.below(99) as u32)])
+}
+
+// ---- 1. epoch pinning: streamed ≡ engine over a recompile ---------------
+
+/// Random interleavings of submits, weight updates, and partial drains:
+/// every outcome must report the epoch that was current at its
+/// admission, and its answer must be bitwise what a fresh batch
+/// [`Engine`] computes over a stop-the-world recompile of that epoch's
+/// oracle graph. The server's final graph must equal the sequential
+/// delta oracle.
+#[test]
+fn interleaved_updates_never_move_a_pinned_query() {
+    drive("interleaved_updates_never_move_a_pinned_query", 0x171, 3, |x| {
+        let g0 = common::random_graph(&mut |n| x.below(n), 24, 48);
+        let n = g0.num_vertices() as u64;
+        let cfg = ArchConfig::default();
+        let cseed = x.next_u64();
+        let pair = CompiledPair::build(&g0, &cfg, cseed);
+        let mut srv = StreamServer::new(
+            EpochStore::new_single(pair),
+            StreamConfig { workers: 2, max_batch: 5, ..Default::default() },
+        );
+        // oracle[v] = the graph state epoch v serves
+        let mut oracle = vec![g0.clone()];
+        let mut expected: Vec<(u64, u64, Job)> = Vec::new(); // (ticket, epoch, job)
+        let mut outcomes: Vec<StreamOutcome> = Vec::new();
+        for _ in 0..40 {
+            match x.below(10) {
+                0..=5 => {
+                    let w = [Workload::Bfs, Workload::Sssp, Workload::Wcc]
+                        [x.below(3) as usize];
+                    let job = Job::Workload(w, x.below(n) as u32);
+                    if let Ok(id) = srv.submit(job) {
+                        expected.push((id, srv.store().version(), job));
+                    }
+                }
+                6..=7 => {
+                    let cur = oracle[oracle.len() - 1].clone();
+                    let d = random_weight_delta(&cur, x);
+                    let mut next = cur;
+                    next.apply_delta(&d)?;
+                    srv.apply_update(&d)?;
+                    oracle.push(next);
+                }
+                _ => outcomes.extend(srv.drain_batch()),
+            }
+        }
+        outcomes.extend(srv.drain_all());
+        if outcomes.len() != expected.len() {
+            return Err(format!(
+                "{} outcomes for {} admitted queries",
+                outcomes.len(),
+                expected.len()
+            ));
+        }
+        // outcomes come back in admission order (FIFO queue)
+        for (o, (id, epoch, job)) in outcomes.iter().zip(&expected) {
+            if o.id != *id || o.job != *job {
+                return Err(format!("outcome order diverged at ticket {id}"));
+            }
+            if o.epoch != *epoch {
+                return Err(format!(
+                    "ticket {id} answered at epoch {} but pinned {epoch}",
+                    o.epoch
+                ));
+            }
+        }
+        // per epoch: a fresh engine over a recompile of the oracle graph
+        for v in 0..oracle.len() as u64 {
+            let jobs: Vec<Job> =
+                expected.iter().filter(|(_, e, _)| *e == v).map(|&(_, _, j)| j).collect();
+            if jobs.is_empty() {
+                continue;
+            }
+            let opair = CompiledPair::build(&oracle[v as usize], &cfg, cseed);
+            let rep = Engine::new(&opair).with_workers(1).serve(&jobs);
+            let got = outcomes.iter().filter(|o| o.epoch == v);
+            for (o, want) in got.zip(&rep.results) {
+                let a = o.result.as_ref().map_err(|e| format!("streamed query failed: {e}"))?;
+                let b = want.as_ref().map_err(|e| format!("oracle query failed: {e}"))?;
+                if a.run.cycles != b.run.cycles
+                    || a.run.attrs != b.run.attrs
+                    || a.run.sim != b.run.sim
+                {
+                    return Err(format!(
+                        "epoch {v} ticket {}: streamed answer != engine over recompile",
+                        o.id
+                    ));
+                }
+            }
+        }
+        // final server state == sequential delta oracle
+        let pin = srv.store().pin();
+        if pin.version() != (oracle.len() - 1) as u64 {
+            return Err("final epoch != number of published deltas".into());
+        }
+        let got: Vec<_> = pin.graph().arcs().collect();
+        let want: Vec<_> = oracle[oracle.len() - 1].arcs().collect();
+        if got != want {
+            return Err("final graph != sequential delta oracle".into());
+        }
+        Ok(())
+    });
+}
+
+// ---- 2. frontier sharing is invisible -----------------------------------
+
+/// One recorded op script replayed on a sharing and a non-sharing
+/// server: identical outcomes ticket-for-ticket (epochs, lags, bitwise
+/// results), with the sharing server doing strictly the same-or-less
+/// simulation work and the non-sharing server never reporting a hit.
+#[test]
+fn frontier_sharing_equals_independent_runs() {
+    enum Op {
+        Submit(Job),
+        Update(usize, u32),
+        Drain,
+    }
+    fn replay(
+        ops: &[Op],
+        share: bool,
+        g: &Graph,
+        cseed: u64,
+    ) -> Result<(Vec<StreamOutcome>, flip::metrics::StreamStats), String> {
+        let pair = CompiledPair::build(g, &ArchConfig::default(), cseed);
+        let cfg = StreamConfig {
+            workers: 2,
+            max_batch: 8,
+            share_frontiers: share,
+            ..Default::default()
+        };
+        let mut srv = StreamServer::new(EpochStore::new_single(pair), cfg);
+        let mut out = Vec::new();
+        for op in ops {
+            match *op {
+                Op::Submit(job) => {
+                    srv.submit(job).map_err(|e| e.to_string())?;
+                }
+                Op::Update(arc, w) => {
+                    let d = {
+                        let pin = srv.store().pin();
+                        let arcs: Vec<(u32, u32, u32)> = pin.graph().arcs().collect();
+                        let (u, v, _) = arcs[arc % arcs.len()];
+                        Delta::from_edges(pin.graph(), &[(u, v, w)])
+                    };
+                    srv.apply_update(&d)?;
+                }
+                Op::Drain => out.extend(srv.drain_batch()),
+            }
+        }
+        out.extend(srv.drain_all());
+        Ok((out, srv.stats().clone()))
+    }
+    drive("frontier_sharing_equals_independent_runs", 0x5AE, 3, |x| {
+        let g = common::random_graph(&mut |n| x.below(n), 24, 48);
+        let n = g.num_vertices() as u64;
+        let cseed = x.next_u64();
+        // sources drawn from a 4-slot pool so duplicates are guaranteed
+        let pool: Vec<u32> = (0..4).map(|_| x.below(n) as u32).collect();
+        let ops: Vec<Op> = (0..36)
+            .map(|_| match x.below(10) {
+                0..=6 => Op::Submit(Job::Workload(
+                    [Workload::Bfs, Workload::Sssp][x.below(2) as usize],
+                    pool[x.below(4) as usize],
+                )),
+                7 => Op::Update(x.next_u64() as usize, 1 + x.below(99) as u32),
+                _ => Op::Drain,
+            })
+            .collect();
+        let (on, on_stats) = replay(&ops, true, &g, cseed)?;
+        let (off, off_stats) = replay(&ops, false, &g, cseed)?;
+        if on.len() != off.len() {
+            return Err("sharing changed the number of outcomes".into());
+        }
+        for (a, b) in on.iter().zip(&off) {
+            if a.id != b.id || a.epoch != b.epoch || a.lag != b.lag {
+                return Err(format!("ticket {} metadata diverged under sharing", a.id));
+            }
+            let (ra, rb) = (
+                a.result.as_ref().map_err(|e| e.to_string())?,
+                b.result.as_ref().map_err(|e| e.to_string())?,
+            );
+            if ra.run.cycles != rb.run.cycles
+                || ra.run.attrs != rb.run.attrs
+                || ra.run.sim != rb.run.sim
+            {
+                return Err(format!("ticket {}: shared answer != independent run", a.id));
+            }
+        }
+        if off_stats.shared_hits != 0 {
+            return Err("non-sharing server reported shared hits".into());
+        }
+        if on_stats.sim_runs > off_stats.sim_runs {
+            return Err("sharing ran MORE simulations than independent serving".into());
+        }
+        if on_stats.sim_runs + on_stats.shared_hits != on_stats.completed() {
+            return Err("sharing accounting: runs + hits != completions".into());
+        }
+        Ok(())
+    });
+}
+
+// ---- 3. retirement tracks pins exactly ----------------------------------
+
+/// Fuzzed pin lifecycles: queued queries and explicitly held
+/// [`flip::service::stream::PinnedEpoch`]s are the only things keeping
+/// superseded epochs alive. After every op, the store's live-epoch set
+/// must equal {current} ∪ {queued pins} ∪ {held pins}, and the retired
+/// count must cover exactly the rest of the publish history.
+#[test]
+fn retirement_never_frees_a_pinned_snapshot() {
+    drive("retirement_never_frees_a_pinned_snapshot", 0x2E7, 3, |x| {
+        let g = common::random_graph(&mut |n| x.below(n), 16, 32);
+        let n = g.num_vertices() as u64;
+        let cseed = x.next_u64();
+        let pair = CompiledPair::build(&g, &ArchConfig::default(), cseed);
+        let cfg =
+            StreamConfig { workers: 1, max_batch: 3, queue_depth: 8, ..Default::default() };
+        let mut srv = StreamServer::new(EpochStore::new_single(pair), cfg);
+        let mut queued: VecDeque<u64> = VecDeque::new(); // epoch per queued query
+        let mut held: Vec<(u64, flip::service::stream::PinnedEpoch)> = Vec::new();
+        for _ in 0..50 {
+            match x.below(10) {
+                0..=3 => {
+                    let job = Job::Workload(Workload::Bfs, x.below(n) as u32);
+                    if srv.submit(job).is_ok() {
+                        queued.push_back(srv.store().version());
+                    }
+                }
+                4..=5 => {
+                    let d = random_weight_delta(&srv.store().pin().graph().clone(), x);
+                    srv.apply_update(&d)?;
+                }
+                6 => {
+                    let pin = srv.store().pin();
+                    held.push((pin.version(), pin));
+                }
+                7 => {
+                    if !held.is_empty() {
+                        let i = x.below(held.len() as u64) as usize;
+                        held.swap_remove(i);
+                    }
+                }
+                _ => {
+                    let drained = srv.drain_batch().len();
+                    for _ in 0..drained {
+                        queued.pop_front();
+                    }
+                }
+            }
+            let cur = srv.store().version();
+            let mut want: Vec<u64> = std::iter::once(cur)
+                .chain(queued.iter().copied())
+                .chain(held.iter().map(|(v, _)| *v))
+                .collect();
+            want.sort_unstable();
+            want.dedup();
+            let live = srv.store().live_epochs();
+            if live != want {
+                return Err(format!("live epochs {live:?}, want {want:?}"));
+            }
+            // publish history holds versions 0..cur; retired = the rest
+            let want_retired = cur as usize - (want.len() - 1);
+            if srv.store().retired_count() != want_retired {
+                return Err(format!(
+                    "retired {} epochs, want {want_retired} (cur {cur}, live {live:?})",
+                    srv.store().retired_count()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---- 4. epoch chain ≡ stop-the-world ≡ recompile ------------------------
+
+/// The RCU correctness spine: for all six workloads at K ∈ {1, 2, 4},
+/// a chain of N weight-only deltas applied epoch by epoch, the same
+/// deltas merged into one stop-the-world apply, and a full recompile of
+/// the final graph produce bitwise identical machines-in-effect — same
+/// run results, same supersteps, on the sharded fabric and the flat
+/// single-chip compile alike. Shard epochs advance in lockstep.
+#[test]
+fn epoch_chain_matches_stop_the_world_and_recompile() {
+    drive("epoch_chain_matches_stop_the_world_and_recompile", 0xC4A, 2, |x| {
+        let g = common::random_graph(&mut |n| x.below(n), 10, 40);
+        let cfg = ArchConfig::default();
+        for (vp, view, src) in common::six_programs(&g, &mut |n| x.below(n)) {
+            let arcs: Vec<(u32, u32, u32)> = view.arcs().collect();
+            let nd = if arcs.is_empty() { 0 } else { 1 + x.below(3) as usize };
+            let mut deltas: Vec<Delta> = Vec::new();
+            for _ in 0..nd {
+                let (u, v, _) = arcs[x.below(arcs.len() as u64) as usize];
+                let mut d = Delta::new();
+                d.push_arc(u, v, 1 + x.below(99) as u32);
+                deltas.push(d);
+            }
+            let mut view_final = view.clone();
+            let mut merged = Delta::new();
+            for d in &deltas {
+                view_final.apply_delta(d)?;
+                for &(u, v, w) in d.arcs() {
+                    merged.push_arc(u, v, w);
+                }
+            }
+            let seed = x.next_u64();
+            let opts = SimOptions::default();
+            // flat single-chip compile path
+            let copts = CompileOpts { seed, ..Default::default() };
+            let mut chain_c = compile(&view, &cfg, &copts);
+            for d in &deltas {
+                chain_c.apply_attr_updates(d)?;
+            }
+            if chain_c.epoch != deltas.len() as u64 {
+                return Err("flat chain epoch != delta count".into());
+            }
+            let rebuilt_c = compile(&view_final, &cfg, &copts);
+            let ra = flipsim::run_program(&chain_c, &*vp, src, &opts)
+                .map_err(|e| format!("flat chain run failed: {e}"))?;
+            let rb = flipsim::run_program(&rebuilt_c, &*vp, src, &opts)
+                .map_err(|e| format!("flat rebuilt run failed: {e}"))?;
+            if ra != rb {
+                return Err("flat: delta chain != full recompile".into());
+            }
+            // sharded fabric at K ∈ {1, 2, 4}
+            for k in [1usize, 2, 4] {
+                let mut chain = ShardedMachine::build(&view, k, &cfg, seed);
+                for d in &deltas {
+                    chain.apply_attr_updates(d)?;
+                }
+                if chain.shards.iter().any(|s| s.epoch != deltas.len() as u64) {
+                    return Err(format!("K={k}: shard epochs not in lockstep"));
+                }
+                let mut stw = ShardedMachine::build(&view, k, &cfg, seed);
+                if !merged.is_empty() {
+                    stw.apply_attr_updates(&merged)?;
+                }
+                let rebuilt = ShardedMachine::build(&view_final, k, &cfg, seed);
+                let mut ia = chain.new_instances();
+                let a = multichip::run_program(&chain, &mut ia, &*vp, src, &opts)
+                    .map_err(|e| format!("K={k} chain run failed: {e}"))?;
+                let mut ib = stw.new_instances();
+                let b = multichip::run_program(&stw, &mut ib, &*vp, src, &opts)
+                    .map_err(|e| format!("K={k} stop-the-world run failed: {e}"))?;
+                let mut ic = rebuilt.new_instances();
+                let c = multichip::run_program(&rebuilt, &mut ic, &*vp, src, &opts)
+                    .map_err(|e| format!("K={k} rebuilt run failed: {e}"))?;
+                if a.result != b.result || a.supersteps != b.supersteps {
+                    return Err(format!("K={k}: delta chain != stop-the-world apply"));
+                }
+                if a.result != c.result || a.supersteps != c.supersteps {
+                    return Err(format!("K={k}: delta chain != full recompile"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---- 5. navigation rides epochs -----------------------------------------
+
+/// Navigate queries need per-epoch ALT landmarks (weights move the
+/// lower bounds): a store built `with_navigation` must answer each
+/// Navigate bitwise like a batch engine over that epoch's recompiled
+/// graph, before and after a weight update.
+#[test]
+fn navigation_follows_epochs() {
+    drive("navigation_follows_epochs", 0xA57, 2, |x| {
+        let g = common::random_graph(&mut |n| x.below(n), 24, 40);
+        let n = g.num_vertices() as u64;
+        let cseed = x.next_u64();
+        let job = Job::Navigate {
+            source: x.below(n) as u32,
+            target: x.below(n) as u32,
+        };
+        let pair = CompiledPair::build(&g, &ArchConfig::default(), cseed);
+        let store = EpochStore::new_single(pair).with_navigation(4);
+        let mut srv =
+            StreamServer::new(store, StreamConfig { workers: 1, ..Default::default() });
+        srv.submit(job).map_err(|e| e.to_string())?;
+        let d = random_weight_delta(&g, x);
+        srv.apply_update(&d)?;
+        srv.submit(job).map_err(|e| e.to_string())?;
+        let out = srv.drain_all();
+        let mut g1 = g.clone();
+        g1.apply_delta(&d)?;
+        for (o, oracle_g) in out.iter().zip([&g, &g1]) {
+            let opair = CompiledPair::build(oracle_g, &ArchConfig::default(), cseed);
+            let rep = Engine::new(&opair).with_workers(1).serve(&[job]);
+            let a = o.result.as_ref().map_err(|e| e.to_string())?;
+            let b = rep.results[0].as_ref().map_err(|e| e.to_string())?;
+            if a.run.cycles != b.run.cycles || a.run.attrs != b.run.attrs {
+                return Err(format!(
+                    "epoch {}: streamed Navigate != engine over recompile",
+                    o.epoch
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---- 6. admission accounting and SLO stats ------------------------------
+
+/// Backpressure arithmetic: every submit either lands in the queue or is
+/// a typed rejection, drains conserve the count, and the SLO histograms
+/// account for exactly the completions.
+#[test]
+fn admission_and_slo_accounting_are_conserved() {
+    let mut x = XorShift::new(0xACC7);
+    let g = common::random_graph(&mut |n| x.below(n), 16, 32);
+    let n = g.num_vertices() as u64;
+    let pair = CompiledPair::build(&g, &ArchConfig::default(), 7);
+    let cfg = StreamConfig { workers: 2, max_batch: 4, queue_depth: 6, ..Default::default() };
+    let mut srv = StreamServer::new(EpochStore::new_single(pair), cfg);
+    let (mut admitted, mut rejected) = (0u64, 0u64);
+    let mut outcomes = Vec::new();
+    for i in 0..60 {
+        let job = Job::Workload(Workload::Bfs, x.below(n) as u32);
+        match srv.submit(job) {
+            Ok(_) => admitted += 1,
+            Err(_) => rejected += 1,
+        }
+        if i % 9 == 8 {
+            let d = random_weight_delta(&srv.store().pin().graph().clone(), &mut x);
+            srv.apply_update(&d).expect("weight-only delta applies");
+            outcomes.extend(srv.drain_batch());
+        }
+    }
+    outcomes.extend(srv.drain_all());
+    assert!(rejected > 0, "a depth-6 queue under 60 submits must push back");
+    let st = srv.stats();
+    assert_eq!(st.rejected, rejected);
+    assert_eq!(st.completed(), admitted, "every admitted query completes");
+    assert_eq!(outcomes.len() as u64, admitted);
+    assert_eq!(st.served + st.failed, st.completed());
+    assert_eq!(st.failed, 0, "all jobs were valid");
+    // histograms cover exactly the completions
+    assert_eq!(st.cycles.count(), st.served);
+    assert_eq!(st.wall_us.count(), st.completed());
+    assert_eq!(st.epoch_lag.count(), st.completed());
+    assert_eq!(st.queue_depth.count(), admitted);
+    assert!(st.queue_depth.max() <= 6, "recorded depth beyond the bound");
+    // quantiles are monotone and bounded by the observed extremes
+    for h in [&st.cycles, &st.wall_us, &st.epoch_lag, &st.queue_depth] {
+        assert!(h.min() <= h.p50() && h.p50() <= h.p99());
+        assert!(h.p99() <= h.p999() && h.p999() <= h.max());
+    }
+    // epoch lag never exceeds the number of epochs published
+    assert!(st.epoch_lag.max() <= st.epochs_published);
+    assert_eq!(st.sim_runs + st.shared_hits, st.completed());
+}

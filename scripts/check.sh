@@ -55,4 +55,20 @@ else
     cargo test -q
 fi
 
+# Short sustained-load smoke of the streaming server (DESIGN.md §9):
+# 5 seconds of open-loop admission with weight updates racing queries.
+# The JSON lands as BENCH_serve_smoke.json so CI's bench-artifact glob
+# uploads it, and the gate asserts on it instead of scraping text:
+# zero failed queries, zero deadline aborts (no deadline configured),
+# and a recorded p99 modeled-cycle latency.
+echo "== flip serve --duration smoke (streaming SLO) =="
+./target/release/flip serve --group srn --duration 5 --qps-target 40 \
+    --update-rate 4 --threads 2 --json BENCH_serve_smoke.json
+grep -q '"failed":0,' BENCH_serve_smoke.json \
+    || { echo "error: streaming smoke reported failed queries" >&2; exit 1; }
+grep -q '"deadline_aborts":0' BENCH_serve_smoke.json \
+    || { echo "error: streaming smoke reported deadline aborts" >&2; exit 1; }
+grep -q '"p99_cycles":' BENCH_serve_smoke.json \
+    || { echo "error: streaming smoke JSON is missing p99_cycles" >&2; exit 1; }
+
 echo "all checks passed"
