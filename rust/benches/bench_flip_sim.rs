@@ -13,7 +13,13 @@
 //! (host cost of the quiet active plan's seq+checksum handshake on the
 //! 16k Ext. LRN sharded run; expected ≈ 0) and, for a seeded lossy-link
 //! serving run, `retry_success_rate` / `deadline_abort_pct` from the
-//! engine's batch report (DESIGN.md §8).
+//! engine's batch report (DESIGN.md §8). The batching section
+//! (DESIGN.md §Perf.2) records `batch_speedup` (one fused 8-lane
+//! `BatchInstance` pass vs 8 sequential reused-`SimInstance` runs on the
+//! 16k Ext. LRN graph), `delivery_ns_per_entry` (host ns per intra-table
+//! entry walked on the fused pass), and `superstep_parallel_speedup`
+//! (pooled vs serial lockstep supersteps on a 4-shard fabric, with a
+//! bitwise-equality gate on the pooled merge).
 //!
 //! Writes `BENCH_flip_sim.json` (override with `--json <path>`).
 
@@ -24,9 +30,11 @@ use flip::config::ArchConfig;
 use flip::experiments::harness::CompiledPair;
 use flip::graph::datasets::{self, Group};
 use flip::service::{Engine, Job, ServePolicy};
+use flip::sim::batch::BatchInstance;
 use flip::sim::flip::{run, run_program, SimInstance, SimOptions};
 use flip::sim::FaultPlan;
 use flip::sim::naive;
+use flip::util::WorkerPool;
 use flip::workloads::program::VertexProgram;
 use flip::workloads::{with_builtin, Workload};
 
@@ -374,6 +382,59 @@ fn main() {
         .metric("epoch_apply_overhead_pct", apply_overhead_pct)
         .metric("shared_hits", shared_hits as f64)
         .metric("sim_runs", sim_runs as f64);
+
+    common::section("fused batch lanes vs sequential reuse (16k Ext. LRN SSSP x8)");
+    let n16 = g16.num_vertices() as u32;
+    let bsources: Vec<u32> = (0..8u32).map(|i| (i * 1021) % n16).collect();
+    let mut seq_inst = SimInstance::new(&c16);
+    let seq = common::bench("sequential: reused SimInstance, 8 queries", 0, 2, || {
+        for &s in &bsources {
+            seq_inst.run(&c16, Workload::Sssp, s, &opts16).unwrap();
+        }
+    });
+    let mut batch16 = BatchInstance::new(&c16, bsources.len());
+    let mut fused_walked = 0u64;
+    let fused = common::bench("fused: one 8-lane BatchInstance pass", 0, 2, || {
+        let out = batch16.run_workload_batch(&c16, Workload::Sssp, &bsources, &opts16);
+        fused_walked =
+            out.iter().map(|r| r.as_ref().unwrap().sim.activity.intra_walked).sum();
+    });
+    let batch_speedup = seq.mean_ms / fused.mean_ms;
+    // host ns per delivered intra-table entry across the whole fused
+    // sweep — the branchless fixed-stride delivery loop's unit cost
+    let delivery_ns_per_entry = fused.mean_ms * 1e6 / fused_walked.max(1) as f64;
+    println!(
+        "    -> fused 8-lane pass {batch_speedup:.2}x vs sequential reuse, \
+         {delivery_ns_per_entry:.1} ns per intra-table entry walked"
+    );
+    suite
+        .add(fused)
+        .metric("batch_speedup", batch_speedup)
+        .metric("delivery_ns_per_entry", delivery_ns_per_entry);
+    suite.add(seq);
+
+    common::section("pooled supersteps vs serial lockstep (Lrn BFS, 4 shards)");
+    let m4 = flip::sim::multichip::ShardedMachine::build(&g, 4, &cfg, 42);
+    let serial = common::bench("serial supersteps (4 shards)", 1, 5, || {
+        flip::sim::multichip::run(&m4, Workload::Bfs, 0, &SimOptions::default()).unwrap();
+    });
+    let wpool = WorkerPool::new(4);
+    let pooled = common::bench("  same, pooled supersteps (4 workers)", 1, 5, || {
+        flip::sim::multichip::run_on(&m4, Workload::Bfs, 0, &SimOptions::default(), Some(&wpool))
+            .unwrap();
+    });
+    // determinism gate: the pooled barrier merge must be bitwise
+    // identical to the serial shard loop, not just statistically close
+    let ser = flip::sim::multichip::run(&m4, Workload::Bfs, 0, &SimOptions::default()).unwrap();
+    let par =
+        flip::sim::multichip::run_on(&m4, Workload::Bfs, 0, &SimOptions::default(), Some(&wpool))
+            .unwrap();
+    assert_eq!(ser.result.cycles, par.result.cycles, "pooled supersteps must be deterministic");
+    assert_eq!(ser.result.attrs, par.result.attrs, "pooled supersteps must be deterministic");
+    let superstep_parallel_speedup = serial.mean_ms / pooled.mean_ms;
+    println!("    -> pooled supersteps {superstep_parallel_speedup:.2}x vs serial lockstep");
+    suite.add(pooled).metric("superstep_parallel_speedup", superstep_parallel_speedup);
+    suite.add(serial);
 
     suite.write().expect("write bench json");
 }

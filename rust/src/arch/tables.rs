@@ -138,6 +138,11 @@ impl SlabBuilder {
             intra_entries.extend_from_slice(list);
             intra_off.push(intra_entries.len() as u32);
         }
+        // SoA key plane: src_vid of every Intra entry, same slab order.
+        // Weight patches never rewrite keys, so this plane can never go
+        // stale (update_weight / patch_weights_in_order touch weights
+        // only).
+        let intra_keys = intra_entries.iter().map(|e| e.src_vid).collect();
         let mut inter_entries = Vec::with_capacity(self.inter.iter().map(Vec::len).sum());
         let mut inter_off = Vec::with_capacity(self.inter.len() + 1);
         inter_off.push(0u32);
@@ -159,6 +164,7 @@ impl SlabBuilder {
             drf_size: self.drf_size,
             vertices: self.vertices,
             intra_entries,
+            intra_keys,
             intra_off,
             inter_entries,
             inter_off,
@@ -178,6 +184,13 @@ pub struct TableSlabs {
     /// `vertices[cfg * drf_size + reg]`, `u32::MAX` = empty register.
     vertices: Vec<u32>,
     intra_entries: Vec<IntraEntry>,
+    /// SoA key plane parallel to `intra_entries`: `intra_keys[i] ==
+    /// intra_entries[i].src_vid`. The delivery inner loop scans this
+    /// contiguous `u32` plane for its source-id compares (branchless,
+    /// auto-vectorizable) instead of striding through the full records.
+    /// Built once in [`SlabBuilder::freeze`]; weight patches never touch
+    /// keys, so the plane cannot go stale.
+    intra_keys: Vec<u32>,
     /// CSR row pointers over (cfg, bucket): `num_cfgs * NUM_BUCKETS + 1`.
     intra_off: Vec<u32>,
     inter_entries: Vec<InterEntry>,
@@ -205,6 +218,18 @@ impl TableSlabs {
     pub fn intra_bucket(&self, cfg_idx: usize, src_vid: u32) -> &[IntraEntry] {
         let row = cfg_idx * NUM_BUCKETS + bucket_of(src_vid);
         &self.intra_entries[self.intra_off[row] as usize..self.intra_off[row + 1] as usize]
+    }
+
+    /// Like [`TableSlabs::intra_bucket`], but split into its SoA planes:
+    /// `keys[i] == entries[i].src_vid` for every `i`. The delivery inner
+    /// loop counts and locates matches by scanning the contiguous `u32`
+    /// key plane (a branchless compare loop the compiler can vectorize)
+    /// and touches the fixed-stride full records only for the matches.
+    #[inline]
+    pub fn intra_bucket_keyed(&self, cfg_idx: usize, src_vid: u32) -> (&[u32], &[IntraEntry]) {
+        let row = cfg_idx * NUM_BUCKETS + bucket_of(src_vid);
+        let (a, b) = (self.intra_off[row] as usize, self.intra_off[row + 1] as usize);
+        (&self.intra_keys[a..b], &self.intra_entries[a..b])
     }
 
     /// The Inter-Table list of DRF register `reg` on config `cfg_idx`
@@ -393,6 +418,28 @@ mod tests {
         let (m, _) = t.intra_lookup(0, 3);
         assert_eq!(m.iter().find(|e| e.dst_reg == 2).unwrap().weight, 100);
         assert_eq!(m.iter().find(|e| e.dst_reg == 0).unwrap().weight, 5, "others untouched");
+    }
+
+    #[test]
+    fn keyed_bucket_planes_stay_parallel() {
+        let mut t = slab_with(&[
+            IntraEntry { src_vid: 3, dst_reg: 0, weight: 5 },
+            IntraEntry { src_vid: 11, dst_reg: 1, weight: 7 },
+            IntraEntry { src_vid: 3, dst_reg: 2, weight: 9 },
+        ]);
+        let (keys, entries) = t.intra_bucket_keyed(0, 3);
+        assert_eq!(keys.len(), entries.len());
+        for (k, e) in keys.iter().zip(entries) {
+            assert_eq!(*k, e.src_vid);
+        }
+        assert_eq!(keys, &[3, 11, 3]);
+        // a weight patch must leave the key plane valid
+        assert!(t.update_weight(0, 3, 2, 100));
+        let (keys, entries) = t.intra_bucket_keyed(0, 3);
+        assert_eq!(keys, &[3, 11, 3]);
+        assert_eq!(entries[2].weight, 100);
+        // both accessors see the same slice
+        assert_eq!(entries, t.intra_bucket(0, 3));
     }
 
     #[test]

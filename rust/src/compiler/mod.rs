@@ -162,6 +162,21 @@ impl CompiledGraph {
         self.tables.intra_bucket(self.cfg_idx(copy, pe_idx), src_vid)
     }
 
+    /// [`CompiledGraph::intra_bucket`] split into its SoA planes
+    /// (`keys[i] == entries[i].src_vid`): the event core scans the
+    /// contiguous key plane for its source-id compares and strides into
+    /// the full records only at the matches
+    /// ([`crate::arch::tables::TableSlabs::intra_bucket_keyed`]).
+    #[inline]
+    pub fn intra_bucket_keyed(
+        &self,
+        copy: u16,
+        pe_idx: usize,
+        src_vid: u32,
+    ) -> (&[u32], &[IntraEntry]) {
+        self.tables.intra_bucket_keyed(self.cfg_idx(copy, pe_idx), src_vid)
+    }
+
     /// The Inter-Table list of DRF register `reg` on PE `pe_idx` when
     /// `copy` is resident (layout order — the scatter walk).
     #[inline]

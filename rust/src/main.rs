@@ -10,7 +10,7 @@
 //! flip serve --group <g> [--idx I] [--queries N] [--threads T]
 //!            [--workload bfs|sssp|wcc|nav|mix] [--shards K] [--seed S]
 //!            [--faults SEED] [--deadline CYCLES] [--retries N]
-//!            [--json PATH] [--set key=val]...
+//!            [--batch-lanes B] [--json PATH] [--set key=val]...
 //! flip serve --duration SECS [--qps-target N] [--update-rate R]
 //!            [--queue-depth D] ...     sustained-load streaming mode
 //! flip compile --group <g> [--idx I]        mapping statistics
@@ -332,6 +332,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let faults: Option<u64> = args.flag("faults").map(|s| s.parse()).transpose()?;
     let deadline: Option<u64> = args.flag("deadline").map(|s| s.parse()).transpose()?;
     let retries: u32 = args.flag("retries").unwrap_or("0").parse()?;
+    let batch_lanes: usize = match args.flag("batch-lanes") {
+        Some(b) => b.parse()?,
+        None => flip::service::DEFAULT_BATCH_LANES,
+    };
     let threads: usize = match args.flag("threads") {
         Some(t) => t.parse()?,
         None => std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
@@ -395,14 +399,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         let mut engine = Engine::new_sharded(&spair)
             .with_workers(threads)
+            .with_batch_lanes(batch_lanes)
             .with_opts(opts)
             .with_policy(policy);
         engine.serve(&jobs)
     } else {
         let pair = flip::experiments::harness::CompiledPair::build(&g, &env.cfg, env.seed);
         println!("  compile + map     : {:.1} ms (once)", t0.elapsed().as_secs_f64() * 1e3);
-        let mut engine =
-            Engine::new(&pair).with_workers(threads).with_opts(opts).with_policy(policy);
+        let mut engine = Engine::new(&pair)
+            .with_workers(threads)
+            .with_batch_lanes(batch_lanes)
+            .with_opts(opts)
+            .with_policy(policy);
         engine.serve(&jobs)
     };
     let errors = report.results.iter().filter(|r| r.is_err()).count();
@@ -467,6 +475,10 @@ fn cmd_serve_stream(args: &Args) -> Result<()> {
     let faults: Option<u64> = args.flag("faults").map(|s| s.parse()).transpose()?;
     let deadline: Option<u64> = args.flag("deadline").map(|s| s.parse()).transpose()?;
     let retries: u32 = args.flag("retries").unwrap_or("0").parse()?;
+    let batch_lanes: usize = match args.flag("batch-lanes") {
+        Some(b) => b.parse()?,
+        None => flip::service::DEFAULT_BATCH_LANES,
+    };
     let threads: usize = match args.flag("threads") {
         Some(t) => t.parse()?,
         None => std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
@@ -509,6 +521,7 @@ fn cmd_serve_stream(args: &Args) -> Result<()> {
         workers: threads,
         policy: ServePolicy { deadline, max_retries: retries },
         opts,
+        batch_lanes,
         ..Default::default()
     };
     let mut srv = StreamServer::new(store, cfg);
@@ -620,8 +633,8 @@ fn cmd_serve_stream(args: &Args) -> Result<()> {
         stats.epochs_published
     );
     println!(
-        "  frontier sharing  : {} of {} queries fanned out of {} sim runs",
-        stats.shared_hits, completed, stats.sim_runs
+        "  frontier sharing  : {} of {} queries fanned out of {} lanes in {} sim passes",
+        stats.shared_hits, completed, stats.lane_count, stats.sim_runs
     );
     println!(
         "  epoch apply       : {} us total ({apply_overhead_pct:.2}% of wall)",
@@ -661,6 +674,7 @@ fn cmd_serve_stream(args: &Args) -> Result<()> {
             .metric("epoch_apply_overhead_pct", apply_overhead_pct)
             .metric("sim_runs", stats.sim_runs as f64)
             .metric("shared_hits", stats.shared_hits as f64)
+            .metric("lane_count", stats.lane_count as f64)
             .metric("retries", stats.retries as f64)
             .metric("deadline_aborts", stats.deadline_aborts as f64);
         sink.write_to(std::path::Path::new(path))?;

@@ -277,11 +277,18 @@ pub struct StreamStats {
     pub failed: u64,
     /// Queries refused at admission (bounded queue full).
     pub rejected: u64,
-    /// Simulator runs actually executed (≤ `served + failed` when
-    /// cross-query frontier sharing fans one run out to many callers).
+    /// Simulator passes actually executed: one per distinct query on the
+    /// legacy path, one per *fused multi-lane batch*
+    /// ([`crate::sim::batch::BatchInstance`]) when batched drains group
+    /// same-epoch same-workload queries into lanes. ≤ `lane_count`.
     pub sim_runs: u64,
     /// Queries answered from another query's run (sharing fan-out).
     pub shared_hits: u64,
+    /// Queries that executed on their own simulation lane (distinct
+    /// after frontier-sharing dedup, whether fused or legacy).
+    /// Conservation invariant, asserted by the CI streaming smoke:
+    /// `served + failed == shared_hits + lane_count`.
+    pub lane_count: u64,
     /// Engine-level retries spent under the serve policy.
     pub retries: u64,
     /// Queries aborted on their modeled-cycle deadline.

@@ -33,6 +33,16 @@
 //! fault. The default policy (no deadline, zero retries) reproduces the
 //! pre-policy engine bit-exactly.
 //!
+//! **Batched lanes (DESIGN.md §Perf.2).** On a single-chip target the
+//! engine groups trio [`Job::Workload`] queries by workload kind,
+//! deduplicates identical `(workload, source)` jobs, and fuses the
+//! distinct sources into multi-lane [`crate::sim::batch::BatchInstance`]
+//! passes of [`Engine::with_batch_lanes`] width — one walk over the
+//! shared table slabs serves every lane. Fused results are bitwise the
+//! sequential results (the batch layer's contract), so the determinism
+//! statement above is unchanged. Navigate and sharded jobs keep the
+//! per-query path; `batch_lanes <= 1` disables fusing entirely.
+//!
 //! **Backpressure.** The engine is batch-synchronous: callers hand it a
 //! bounded job slice and block until the [`BatchReport`] is complete.
 //! There are no unbounded internal queues — admission control is the
@@ -61,15 +71,21 @@ pub mod stream;
 
 use crate::experiments::harness::{CompiledPair, ShardedPair};
 use crate::metrics::RunResult;
+use crate::sim::batch::BatchInstance;
 use crate::sim::error::SimError;
 use crate::sim::flip::{SimInstance, SimOptions};
 use crate::sim::multichip;
+use crate::util::WorkerPool;
 use crate::workloads::navigation::Landmarks;
 use crate::workloads::Workload;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// ALT landmarks per graph when navigation preprocessing is built lazily.
 const DEFAULT_LANDMARKS: usize = 4;
+
+/// Default fused-batch lane width (see [`Engine::with_batch_lanes`]).
+pub const DEFAULT_BATCH_LANES: usize = 8;
 
 /// One query job for the [`Engine`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -281,6 +297,14 @@ pub struct Engine<'a> {
     opts: SimOptions,
     policy: ServePolicy,
     workers: usize,
+    /// Lane width for fused batched serving (≤ 1 disables fusing).
+    batch_lanes: usize,
+    /// Reusable lane bank for fused batches, created on first use.
+    batcher: Option<BatchInstance>,
+    /// Persistent worker pool for per-query fan-out and (single-job)
+    /// multichip superstep parallelism; created lazily, kept across
+    /// batches so the steady state spawns no threads.
+    pool: Option<WorkerPool>,
 }
 
 impl<'a> Engine<'a> {
@@ -300,12 +324,32 @@ impl<'a> Engine<'a> {
         let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
         let opts = SimOptions::default();
         let policy = ServePolicy::default();
-        Engine { target, machines: Vec::new(), landmarks: None, opts, policy, workers }
+        Engine {
+            target,
+            machines: Vec::new(),
+            landmarks: None,
+            opts,
+            policy,
+            workers,
+            batch_lanes: DEFAULT_BATCH_LANES,
+            batcher: None,
+            pool: None,
+        }
     }
 
     /// Override the worker-thread count (clamped to ≥ 1).
     pub fn with_workers(mut self, n: usize) -> Engine<'a> {
         self.workers = n.max(1);
+        self.pool = None; // resized lazily on the next batch
+        self
+    }
+
+    /// Override the fused-batch lane width ([`crate::sim::batch`]): up to
+    /// this many distinct same-workload queries run in one fused pass
+    /// over the shared slabs. `n <= 1` disables fusing (every query runs
+    /// the legacy per-query path).
+    pub fn with_batch_lanes(mut self, n: usize) -> Engine<'a> {
+        self.batch_lanes = n.max(1);
         self
     }
 
@@ -356,72 +400,137 @@ impl<'a> Engine<'a> {
         {
             self.landmarks = Some(Landmarks::build(self.target.graph(), DEFAULT_LANDMARKS));
         }
-        let want = self.workers.min(jobs.len()).max(1);
-        while self.machines.len() < want {
-            self.machines.push(match &self.target {
-                Target::Single(pair) => WorkerMachine::Single(SimInstance::new(&pair.directed)),
-                Target::Sharded(pair) => WorkerMachine::Sharded(pair.directed.new_instances()),
-            });
-        }
-        let target = &self.target;
-        let lm = self.landmarks.as_ref();
-        let opts = &self.opts;
-        let policy = self.policy;
         let t0 = std::time::Instant::now();
         let mut retries = 0u64;
-        let results: Vec<Result<QueryResult, QueryError>> = if want <= 1 {
-            let m = &mut self.machines[0];
-            jobs.iter()
-                .map(|&j| {
-                    let (r, result) = answer_budgeted(m, target, lm, opts, policy, j);
-                    retries += u64::from(r);
-                    result
-                })
-                .collect()
-        } else {
-            let next = AtomicUsize::new(0);
-            let chunks: Vec<Vec<_>> = std::thread::scope(|s| {
-                    let handles: Vec<_> = self
-                        .machines
-                        .iter_mut()
-                        .take(want)
-                        .map(|m| {
-                            let next = &next;
-                            s.spawn(move || {
-                                let mut local = Vec::new();
-                                loop {
-                                    let i = next.fetch_add(1, Ordering::Relaxed);
-                                    if i >= jobs.len() {
-                                        break;
-                                    }
-                                    let (r, result) =
-                                        answer_budgeted(m, target, lm, opts, policy, jobs[i]);
-                                    local.push((i, r, result));
-                                }
-                                local
-                            })
-                        })
-                        .collect();
-                    handles
-                        .into_iter()
-                        .map(|h| {
-                            h.join().unwrap_or_else(|_| {
-                                unreachable!("engine workers surface failures as QueryError")
-                            })
-                        })
-                        .collect()
-                });
-            let mut out: Vec<Option<Result<QueryResult, QueryError>>> =
-                Vec::with_capacity(jobs.len());
-            out.resize_with(jobs.len(), || None);
-            for (i, r, result) in chunks.into_iter().flatten() {
-                retries += u64::from(r);
-                out[i] = Some(result);
+        let mut slots: Vec<Option<Result<QueryResult, QueryError>>> =
+            Vec::with_capacity(jobs.len());
+        slots.resize_with(jobs.len(), || None);
+
+        // ---- fused batched lanes (single-chip trio jobs) ----------------
+        // group by workload kind, dedupe identical (workload, source)
+        // jobs, fuse the distinct sources into multi-lane passes; every
+        // other job falls through to the per-query path below
+        let mut rest: Vec<usize> = Vec::with_capacity(jobs.len());
+        match (&self.target, self.batch_lanes > 1) {
+            (&Target::Single(pair), true) => {
+                let n = pair.graph.num_vertices();
+                // (workload, distinct sources, job indices per source)
+                let mut kinds: Vec<(Workload, Vec<u32>, Vec<Vec<usize>>)> = Vec::new();
+                for (i, &job) in jobs.iter().enumerate() {
+                    let Job::Workload(w, s) = job else {
+                        rest.push(i);
+                        continue;
+                    };
+                    if w.is_extended() || s as usize >= n {
+                        rest.push(i); // rejected with the per-query diagnostics
+                        continue;
+                    }
+                    let k = match kinds.iter().position(|(kw, _, _)| *kw == w) {
+                        Some(k) => k,
+                        None => {
+                            kinds.push((w, Vec::new(), Vec::new()));
+                            kinds.len() - 1
+                        }
+                    };
+                    let (_, uniq, members) = &mut kinds[k];
+                    match uniq.iter().position(|&u| u == s) {
+                        Some(l) => members[l].push(i),
+                        None => {
+                            uniq.push(s);
+                            members.push(vec![i]);
+                        }
+                    }
+                }
+                let lanes = self.batch_lanes;
+                let batcher = self
+                    .batcher
+                    .get_or_insert_with(|| BatchInstance::new(&pair.directed, lanes));
+                for (w, uniq, members) in kinds {
+                    let lane_results =
+                        serve_fused(batcher, pair, w, &uniq, &self.opts, self.policy, lanes);
+                    for (idxs, r) in members.iter().zip(lane_results) {
+                        for &i in idxs {
+                            slots[i] = Some(r.clone());
+                        }
+                    }
+                }
             }
-            out.into_iter()
-                .map(|o| o.unwrap_or_else(|| unreachable!("every job index is claimed once")))
-                .collect()
-        };
+            _ => rest.extend(0..jobs.len()),
+        }
+
+        // ---- per-query path (Navigate, sharded, rejected, legacy) -------
+        if !rest.is_empty() {
+            let want = self.workers.min(rest.len()).max(1);
+            while self.machines.len() < want {
+                self.machines.push(match &self.target {
+                    Target::Single(pair) => {
+                        WorkerMachine::Single(SimInstance::new(&pair.directed))
+                    }
+                    Target::Sharded(pair) => WorkerMachine::Sharded(pair.directed.new_instances()),
+                });
+            }
+            if self.workers > 1 && self.pool.is_none() {
+                self.pool = Some(WorkerPool::new(self.workers));
+            }
+            let target = &self.target;
+            let lm = self.landmarks.as_ref();
+            let opts = &self.opts;
+            let policy = self.policy;
+            if want <= 1 {
+                // a single-job sharded query may still use the (idle)
+                // pool for intra-superstep shard parallelism
+                let pool = self.pool.as_ref();
+                let m = &mut self.machines[0];
+                for &i in &rest {
+                    let (r, result) = answer_budgeted(m, target, lm, opts, policy, jobs[i], pool);
+                    retries += u64::from(r);
+                    slots[i] = Some(result);
+                }
+            } else {
+                let next = AtomicUsize::new(0);
+                let claim = AtomicUsize::new(0);
+                let found: Mutex<Vec<(usize, u32, Result<QueryResult, QueryError>)>> =
+                    Mutex::new(Vec::with_capacity(rest.len()));
+                let mslots: Vec<Mutex<&mut WorkerMachine>> =
+                    self.machines.iter_mut().take(want).map(Mutex::new).collect();
+                let rest_ref = &rest;
+                let pool = self
+                    .pool
+                    .as_ref()
+                    .unwrap_or_else(|| unreachable!("pool built above for workers > 1"));
+                pool.run(&|| {
+                    let wi = claim.fetch_add(1, Ordering::Relaxed);
+                    if wi >= mslots.len() {
+                        return; // more pool threads than machines
+                    }
+                    let mut m = mslots[wi].lock().unwrap_or_else(|p| p.into_inner());
+                    let mut local = Vec::new();
+                    loop {
+                        let t = next.fetch_add(1, Ordering::Relaxed);
+                        if t >= rest_ref.len() {
+                            break;
+                        }
+                        let i = rest_ref[t];
+                        // never-nest: the pool is busy with this fan-out,
+                        // so shard stepping inside a query stays serial
+                        let (r, result) =
+                            answer_budgeted(&mut m, target, lm, opts, policy, jobs[i], None);
+                        local.push((i, r, result));
+                    }
+                    let mut f = found.lock().unwrap_or_else(|p| p.into_inner());
+                    f.extend(local);
+                });
+                let answered = found.into_inner().unwrap_or_else(|p| p.into_inner());
+                for (i, r, result) in answered {
+                    retries += u64::from(r);
+                    slots[i] = Some(result);
+                }
+            }
+        }
+        let results: Vec<Result<QueryResult, QueryError>> = slots
+            .into_iter()
+            .map(|o| o.unwrap_or_else(|| unreachable!("every job is answered exactly once")))
+            .collect();
         let wall = t0.elapsed().as_secs_f64();
         let sim_cycles: u64 =
             results.iter().filter_map(|r| r.as_ref().ok()).map(|q| q.run.cycles).sum();
@@ -435,7 +544,7 @@ impl<'a> Engine<'a> {
             pe_cycles_per_s: if wall > 0.0 { sim_cycles as f64 * num_pes / wall } else { 0.0 },
             sim_cycles,
             wall_seconds: wall,
-            workers: want,
+            workers: self.workers.min(jobs.len()).max(1),
             retries,
             deadline_aborts,
             results,
@@ -454,16 +563,61 @@ fn kind_of(e: &SimError) -> QueryErrorKind {
     }
 }
 
+/// Classify a simulator abort of `job` into the caller-facing error
+/// value (shared by the per-query path and the fused batched lanes).
+fn sim_query_error(job: Job, e: &SimError) -> QueryError {
+    QueryError {
+        job: job.describe(),
+        kind: kind_of(e),
+        cycles: e.cycles_consumed(),
+        msg: e.to_string(),
+    }
+}
+
+/// Run one fused group — distinct `sources` of trio workload `w` on a
+/// single-chip `pair` — through the lane bank, chunked at `lane_width`
+/// lanes per pass. Applies the attempt-0 semantics of [`answer_budgeted`]
+/// (full deadline budget, fault plan reseeded for attempt 0), which is
+/// exact here: single-chip runs never produce transient faults, so the
+/// budgeted path would never retry them. Results per source, in order,
+/// bitwise equal to sequential per-query serving.
+fn serve_fused(
+    batcher: &mut BatchInstance,
+    pair: &CompiledPair,
+    w: Workload,
+    sources: &[u32],
+    opts: &SimOptions,
+    policy: ServePolicy,
+    lane_width: usize,
+) -> Vec<Result<QueryResult, QueryError>> {
+    let mut a_opts = opts.clone();
+    if policy.deadline.is_some() {
+        a_opts.deadline = policy.deadline;
+    }
+    a_opts.faults = opts.faults.reseeded(0);
+    let c = pair.for_workload(w);
+    let mut out = Vec::with_capacity(sources.len());
+    for chunk in sources.chunks(lane_width.max(1)) {
+        for (&src, r) in chunk.iter().zip(batcher.run_workload_batch(c, w, chunk, &a_opts)) {
+            let job = Job::Workload(w, src);
+            out.push(match r {
+                Ok(run) => {
+                    crate::experiments::harness::debug_check_reference(pair, w, src, &run);
+                    Ok(QueryResult { job, run, distance: None })
+                }
+                Err(e) => Err(sim_query_error(job, &e)),
+            });
+        }
+    }
+    out
+}
+
 /// Answer one job under the engine's [`ServePolicy`]: deadline-budgeted
 /// attempts with bounded retries for transient faults. Returns the retry
-/// count alongside the final outcome.
-///
-/// The budget is spent across attempts: each attempt runs with the
-/// *remaining* budget as its simulator deadline, and a failed attempt's
-/// consumed cycles ([`SimError::cycles_consumed`]) are subtracted before
-/// the next. Retries reseed the fault plan
-/// ([`crate::sim::fault::FaultPlan::reseeded`]) so a retry does not
-/// deterministically replay the fault that killed the last attempt.
+/// count alongside the final outcome. With `Some(pool)`, sharded jobs
+/// step their supersteps' shards on the pool
+/// ([`multichip::run_program_on`]) — callers must only pass a pool that
+/// is idle (never from inside the same pool's fan-out).
 fn answer_budgeted(
     machine: &mut WorkerMachine,
     target: &Target,
@@ -471,6 +625,7 @@ fn answer_budgeted(
     opts: &SimOptions,
     policy: ServePolicy,
     job: Job,
+    pool: Option<&WorkerPool>,
 ) -> (u32, Result<QueryResult, QueryError>) {
     let mut remaining = policy.deadline;
     let mut attempt = 0u32;
@@ -480,7 +635,7 @@ fn answer_budgeted(
             a_opts.deadline = remaining;
         }
         a_opts.faults = opts.faults.reseeded(attempt);
-        let result = answer(machine, target, lm, &a_opts, job);
+        let result = answer(machine, target, lm, &a_opts, job, pool);
         match result {
             Err(ref e) if e.is_retryable() && attempt < policy.max_retries => {
                 if let Some(budget) = remaining {
@@ -510,6 +665,7 @@ fn answer(
     lm: Option<&Landmarks>,
     opts: &SimOptions,
     job: Job,
+    pool: Option<&WorkerPool>,
 ) -> Result<QueryResult, QueryError> {
     // unservable job: no cycles simulated, retrying cannot help
     let fail = |msg: String| QueryError {
@@ -519,12 +675,7 @@ fn answer(
         msg,
     };
     // simulator abort: classify it and record the cycles it burned
-    let sim_fail = |e: SimError| QueryError {
-        job: job.describe(),
-        kind: kind_of(&e),
-        cycles: e.cycles_consumed(),
-        msg: e.to_string(),
-    };
+    let sim_fail = |e: SimError| sim_query_error(job, &e);
     let n = target.graph().num_vertices();
     match job {
         Job::Workload(w, source) => {
@@ -548,8 +699,8 @@ fn answer(
                 }
                 (WorkerMachine::Sharded(insts), &Target::Sharded(pair)) => {
                     let m = pair.for_workload(w);
-                    let sr =
-                        multichip::run_program(m, insts, vp, source, opts).map_err(&sim_fail)?;
+                    let sr = multichip::run_program_on(m, insts, vp, source, opts, pool)
+                        .map_err(&sim_fail)?;
                     crate::experiments::harness::debug_check_reference_views(
                         &pair.graph,
                         &pair.wcc_view,
@@ -576,7 +727,7 @@ fn answer(
                     inst.run_program(&pair.directed, &vp, source, opts).map_err(&sim_fail)?
                 }
                 (WorkerMachine::Sharded(insts), &Target::Sharded(pair)) => {
-                    multichip::run_program(&pair.directed, insts, &vp, source, opts)
+                    multichip::run_program_on(&pair.directed, insts, &vp, source, opts, pool)
                         .map_err(&sim_fail)?
                         .result
                 }
@@ -608,6 +759,27 @@ mod tests {
         let rep = engine.serve(&[Job::Workload(Workload::PageRank, 0)]);
         let err = rep.first_error().expect("extended workloads are not servable");
         assert!(err.msg.contains("graph-derived state"), "{err}");
+    }
+
+    #[test]
+    fn fused_serving_is_bitwise_sequential() {
+        let g = generate::road_network(32, 70, 80, 7);
+        let pair = CompiledPair::build(&g, &ArchConfig::default(), 1);
+        let jobs = vec![
+            Job::Workload(Workload::Bfs, 0),
+            Job::Workload(Workload::Sssp, 3),
+            Job::Workload(Workload::Bfs, 0), // duplicate fans out of one lane
+            Job::Workload(Workload::Bfs, 9),
+            Job::Workload(Workload::Wcc, 0),
+        ];
+        let a = Engine::new(&pair).with_workers(1).with_batch_lanes(4).serve(&jobs);
+        let b = Engine::new(&pair).with_workers(1).with_batch_lanes(1).serve(&jobs);
+        for (x, y) in a.results.iter().zip(&b.results) {
+            let (x, y) = (x.as_ref().unwrap(), y.as_ref().unwrap());
+            assert_eq!(x.run.cycles, y.run.cycles);
+            assert_eq!(x.run.attrs, y.run.attrs);
+            assert_eq!(x.run.sim, y.run.sim);
+        }
     }
 
     #[test]

@@ -42,16 +42,34 @@
 //! and can be disabled ([`StreamConfig::share_frontiers`]) for
 //! differential testing.
 //!
+//! **Batched lanes (DESIGN.md §Perf.2).** Frontier sharing collapses
+//! *identical* queries; batching generalizes it to *distinct* ones: the
+//! deduplicated units of a drain are further grouped by
+//! `(epoch version, workload kind)` and fused into multi-lane
+//! [`crate::sim::batch::BatchInstance`] passes of
+//! [`StreamConfig::batch_lanes`] width — one walk over the epoch's
+//! shared slabs serves every lane, bitwise equal to running each unit
+//! alone. [`StreamStats::lane_count`] counts the distinct units, so
+//! `served + failed == shared_hits + lane_count` holds per drain (the CI
+//! smoke asserts it); [`StreamStats::sim_runs`] counts fused passes.
+//! Drains dispatch on a *persistent* worker pool owned by the server
+//! (spawned once at construction, not per drain).
+//!
 //! Every completion feeds the [`StreamStats`] SLO surface
 //! (p50/p99/p999 modeled-cycle and wall-clock latency, throughput,
 //! queue depth, epoch lag) consumed by `flip serve --duration`, the
 //! bench JSON sink, and the CI smoke artifact.
 
-use super::{answer_budgeted, Job, QueryError, QueryErrorKind, QueryResult, ServePolicy, Target, WorkerMachine};
+use super::{
+    answer_budgeted, serve_fused, Job, QueryError, QueryErrorKind, QueryResult, ServePolicy,
+    Target, WorkerMachine, DEFAULT_BATCH_LANES,
+};
 use crate::experiments::harness::{CompiledPair, ShardedPair};
 use crate::graph::{Delta, Graph};
 use crate::metrics::StreamStats;
+use crate::sim::batch::BatchInstance;
 use crate::sim::flip::{SimInstance, SimOptions};
+use crate::util::WorkerPool;
 use crate::workloads::navigation::Landmarks;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -281,6 +299,10 @@ pub struct StreamConfig {
     pub share_frontiers: bool,
     /// Worker threads for a drain (clamped to ≥ 1).
     pub workers: usize,
+    /// Fused-batch lane width: distinct same-epoch same-workload units
+    /// of a drain run as one multi-lane pass ([`crate::sim::batch`]).
+    /// `<= 1` disables fusing (every unit runs the per-query path).
+    pub batch_lanes: usize,
     /// Per-query deadline/retry policy (the engine's).
     pub policy: ServePolicy,
     /// Per-query simulator options.
@@ -294,6 +316,7 @@ impl Default for StreamConfig {
             max_batch: 64,
             share_frontiers: true,
             workers: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+            batch_lanes: DEFAULT_BATCH_LANES,
             policy: ServePolicy::default(),
             opts: SimOptions::default(),
         }
@@ -341,6 +364,13 @@ pub struct StreamServer {
     /// (weight-only epochs never change machine shape, so instances
     /// serve every epoch).
     machines: Vec<WorkerMachine>,
+    /// Reusable lane bank for fused batched drains, created on first use
+    /// (same shape-invariance argument as `machines`).
+    batcher: Option<BatchInstance>,
+    /// Persistent drain pool: spawned once here, reused by every
+    /// [`StreamServer::drain_batch`] (previously a per-drain
+    /// `thread::scope`, i.e. O(workers) thread churn per drain).
+    pool: Option<WorkerPool>,
     stats: StreamStats,
     next_id: u64,
 }
@@ -348,11 +378,14 @@ pub struct StreamServer {
 impl StreamServer {
     /// A server over `store` with the given knobs.
     pub fn new(store: EpochStore, cfg: StreamConfig) -> StreamServer {
+        let pool = (cfg.workers > 1).then(|| WorkerPool::new(cfg.workers));
         StreamServer {
             store,
             cfg,
             queue: VecDeque::new(),
             machines: Vec::new(),
+            batcher: None,
+            pool,
             stats: StreamStats::default(),
             next_id: 0,
         }
@@ -438,7 +471,41 @@ impl StreamServer {
                 }
             }
         }
-        let want = self.cfg.workers.min(groups.len()).max(1);
+        // partition the distinct units into fused lane sets — same epoch,
+        // same trio workload, single-chip target — and legacy per-unit
+        // runs; a singleton set has nothing to fuse
+        let mut fused: Vec<(u64, crate::workloads::Workload, Vec<usize>)> = Vec::new();
+        let mut legacy: Vec<usize> = Vec::new();
+        if self.cfg.batch_lanes > 1 {
+            for (ui, (snap, job, _)) in groups.iter().enumerate() {
+                let fusable = match (*job, &snap.target) {
+                    (Job::Workload(w, s), EpochTarget::Single(_)) => {
+                        !w.is_extended() && (s as usize) < snap.target.graph().num_vertices()
+                    }
+                    _ => false,
+                };
+                if !fusable {
+                    legacy.push(ui);
+                    continue;
+                }
+                let Job::Workload(w, _) = *job else { unreachable!("checked fusable above") };
+                match fused.iter().position(|&(v, fw, _)| v == snap.version && fw == w) {
+                    Some(f) => fused[f].2.push(ui),
+                    None => fused.push((snap.version, w, vec![ui])),
+                }
+            }
+            fused.retain(|(_, _, units)| {
+                if units.len() >= 2 {
+                    true
+                } else {
+                    legacy.push(units[0]);
+                    false
+                }
+            });
+        } else {
+            legacy.extend(0..groups.len());
+        }
+        let want = self.cfg.workers.min(legacy.len()).max(1);
         while self.machines.len() < want {
             self.machines.push(match &self.store.pin().0.target {
                 EpochTarget::Single(p) => WorkerMachine::Single(SimInstance::new(&p.directed)),
@@ -448,68 +515,110 @@ impl StreamServer {
         let opts = &self.cfg.opts;
         let policy = self.cfg.policy;
         let groups_ref = &groups;
-        let answers: Vec<(u32, Result<QueryResult, QueryError>)> = if want <= 1 {
-            let m = &mut self.machines[0];
-            groups_ref
-                .iter()
-                .map(|(snap, job, _)| {
+        let mut answers: Vec<Option<(u32, Result<QueryResult, QueryError>)>> =
+            Vec::with_capacity(groups.len());
+        answers.resize_with(groups.len(), || None);
+        if !legacy.is_empty() {
+            if want <= 1 {
+                // a lone sharded unit may still step its shards on the
+                // (idle) persistent pool
+                let pool = self.pool.as_ref();
+                let m = &mut self.machines[0];
+                for &ui in &legacy {
+                    let (snap, job, _) = &groups_ref[ui];
                     let target = snap.target.as_target();
-                    answer_budgeted(m, &target, snap.landmarks.as_ref(), opts, policy, *job)
-                })
-                .collect()
-        } else {
-            let next = AtomicUsize::new(0);
-            let chunks: Vec<Vec<_>> = std::thread::scope(|s| {
-                let handles: Vec<_> = self
-                    .machines
-                    .iter_mut()
-                    .take(want)
-                    .map(|m| {
-                        let next = &next;
-                        s.spawn(move || {
-                            let mut local = Vec::new();
-                            loop {
-                                let i = next.fetch_add(1, Ordering::Relaxed);
-                                if i >= groups_ref.len() {
-                                    break;
-                                }
-                                let (snap, job, _) = &groups_ref[i];
-                                let target = snap.target.as_target();
-                                let (r, result) = answer_budgeted(
-                                    m,
-                                    &target,
-                                    snap.landmarks.as_ref(),
-                                    opts,
-                                    policy,
-                                    *job,
-                                );
-                                local.push((i, r, result));
-                            }
-                            local
-                        })
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| {
-                        h.join().unwrap_or_else(|_| {
-                            unreachable!("stream workers surface failures as QueryError")
-                        })
-                    })
-                    .collect()
-            });
-            let mut out: Vec<Option<(u32, Result<QueryResult, QueryError>)>> =
-                Vec::with_capacity(groups_ref.len());
-            out.resize_with(groups_ref.len(), || None);
-            for (i, r, result) in chunks.into_iter().flatten() {
-                out[i] = Some((r, result));
+                    answers[ui] = Some(answer_budgeted(
+                        m,
+                        &target,
+                        snap.landmarks.as_ref(),
+                        opts,
+                        policy,
+                        *job,
+                        pool,
+                    ));
+                }
+            } else {
+                let next = AtomicUsize::new(0);
+                let claim = AtomicUsize::new(0);
+                let found: Mutex<Vec<(usize, (u32, Result<QueryResult, QueryError>))>> =
+                    Mutex::new(Vec::with_capacity(legacy.len()));
+                let mslots: Vec<Mutex<&mut WorkerMachine>> =
+                    self.machines.iter_mut().take(want).map(Mutex::new).collect();
+                let legacy_ref = &legacy;
+                let pool = self
+                    .pool
+                    .as_ref()
+                    .unwrap_or_else(|| unreachable!("want > 1 implies workers > 1"));
+                pool.run(&|| {
+                    let wi = claim.fetch_add(1, Ordering::Relaxed);
+                    if wi >= mslots.len() {
+                        return; // more pool threads than machines
+                    }
+                    let mut m = mslots[wi].lock().unwrap_or_else(|p| p.into_inner());
+                    let mut local = Vec::new();
+                    loop {
+                        let t = next.fetch_add(1, Ordering::Relaxed);
+                        if t >= legacy_ref.len() {
+                            break;
+                        }
+                        let ui = legacy_ref[t];
+                        let (snap, job, _) = &groups_ref[ui];
+                        let target = snap.target.as_target();
+                        // never-nest: the pool is busy with this fan-out,
+                        // so shard stepping inside a unit stays serial
+                        local.push((
+                            ui,
+                            answer_budgeted(
+                                &mut m,
+                                &target,
+                                snap.landmarks.as_ref(),
+                                opts,
+                                policy,
+                                *job,
+                                None,
+                            ),
+                        ));
+                    }
+                    let mut f = found.lock().unwrap_or_else(|p| p.into_inner());
+                    f.extend(local);
+                });
+                for (ui, ans) in found.into_inner().unwrap_or_else(|p| p.into_inner()) {
+                    answers[ui] = Some(ans);
+                }
             }
-            out.into_iter()
-                .map(|o| o.unwrap_or_else(|| unreachable!("every group index is claimed once")))
-                .collect()
-        };
-        // account per-group costs once (one sim run per group)
-        self.stats.sim_runs += groups.len() as u64;
+        }
+        // fused passes run on the drain thread: the lanes themselves are
+        // the parallel-efficiency play (one slab walk serves all of them)
+        let mut passes = 0u64;
+        for (version, w, units) in &fused {
+            let snap = &groups_ref[units[0]].0;
+            debug_assert_eq!(snap.version, *version, "units grouped by epoch version");
+            let EpochTarget::Single(pair) = &snap.target else {
+                unreachable!("only single-chip units are fused")
+            };
+            let sources: Vec<u32> = units
+                .iter()
+                .map(|&ui| match groups_ref[ui].1 {
+                    Job::Workload(_, s) => s,
+                    Job::Navigate { .. } => unreachable!("only trio workloads are fused"),
+                })
+                .collect();
+            let lanes = self.cfg.batch_lanes;
+            let batcher =
+                self.batcher.get_or_insert_with(|| BatchInstance::new(&pair.directed, lanes));
+            passes += sources.chunks(lanes).count() as u64;
+            let rs = serve_fused(batcher, pair, *w, &sources, opts, policy, lanes);
+            for (&ui, r) in units.iter().zip(rs) {
+                answers[ui] = Some((0, r));
+            }
+        }
+        let answers: Vec<(u32, Result<QueryResult, QueryError>)> = answers
+            .into_iter()
+            .map(|o| o.unwrap_or_else(|| unreachable!("every unit answered exactly once")))
+            .collect();
+        // account per-unit costs once; a fused multi-lane pass is one run
+        self.stats.sim_runs += legacy.len() as u64 + passes;
+        self.stats.lane_count += groups.len() as u64;
         self.stats.shared_hits += (batch.len() - groups.len()) as u64;
         for (retries, _) in &answers {
             self.stats.retries += u64::from(*retries);
@@ -594,8 +703,9 @@ mod tests {
             assert_eq!(o.lag, 0);
         }
         assert_eq!(srv.stats().served, 2);
-        assert_eq!(srv.stats().sim_runs, 2);
+        assert_eq!(srv.stats().sim_runs, 2, "different workloads never fuse");
         assert_eq!(srv.stats().shared_hits, 0);
+        assert_eq!(srv.stats().lane_count, 2);
     }
 
     #[test]
@@ -608,8 +718,16 @@ mod tests {
         srv.submit(Job::Workload(Workload::Sssp, 6)).unwrap();
         let out = srv.drain_all();
         assert_eq!(out.len(), 5);
-        assert_eq!(srv.stats().sim_runs, 2, "4 identical + 1 distinct = 2 runs");
+        // 4 identical queries dedupe to one lane, the distinct source is a
+        // second lane, and both lanes fuse into a single batched pass
+        assert_eq!(srv.stats().sim_runs, 1, "two lanes, one fused pass");
+        assert_eq!(srv.stats().lane_count, 2);
         assert_eq!(srv.stats().shared_hits, 3);
+        assert_eq!(
+            srv.stats().served + srv.stats().failed,
+            srv.stats().shared_hits + srv.stats().lane_count,
+            "conservation"
+        );
         let first = out[0].result.as_ref().unwrap();
         for o in &out[..4] {
             assert!(o.shared);
@@ -618,6 +736,45 @@ mod tests {
             assert_eq!(q.run.attrs, first.run.attrs);
         }
         assert!(!out[4].shared);
+    }
+
+    #[test]
+    fn fused_drains_match_unbatched_drains_bitwise() {
+        let jobs = [
+            Job::Workload(Workload::Sssp, 5),
+            Job::Workload(Workload::Sssp, 9),
+            Job::Workload(Workload::Bfs, 0),
+            Job::Workload(Workload::Sssp, 5), // shares with the first
+            Job::Workload(Workload::Wcc, 0),
+            Job::Workload(Workload::Sssp, 13),
+        ];
+        let (mut fused, _) =
+            server(41, StreamConfig { workers: 1, batch_lanes: 2, ..Default::default() });
+        let (mut plain, _) =
+            server(41, StreamConfig { workers: 1, batch_lanes: 1, ..Default::default() });
+        for j in jobs {
+            fused.submit(j).unwrap();
+            plain.submit(j).unwrap();
+        }
+        let (a, b) = (fused.drain_all(), plain.drain_all());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.shared, y.shared, "sharing is orthogonal to fusing");
+            let (x, y) = (x.result.as_ref().unwrap(), y.result.as_ref().unwrap());
+            assert_eq!(x.run.cycles, y.run.cycles);
+            assert_eq!(x.run.attrs, y.run.attrs);
+            assert_eq!(x.run.sim, y.run.sim);
+        }
+        // 5 distinct units either way; fused: SSSP's 3 lanes in 2 passes
+        // (width 2) + BFS and WCC singletons on the legacy path
+        assert_eq!(fused.stats().lane_count, 5);
+        assert_eq!(plain.stats().lane_count, 5);
+        assert_eq!(fused.stats().sim_runs, 4);
+        assert_eq!(plain.stats().sim_runs, 5);
+        assert_eq!(fused.stats().shared_hits, 1);
+        assert_eq!(
+            fused.stats().served + fused.stats().failed,
+            fused.stats().shared_hits + fused.stats().lane_count
+        );
     }
 
     #[test]

@@ -253,6 +253,12 @@ impl RingArena<AluinItem> {
     /// same-register entry exists, else `Some(merged?)` — the first match
     /// *decides*, so the caller must not scan further queues on
     /// `Some(false)` (mirrors the naive core's single chained scan).
+    ///
+    /// The scan is branchless: the ring's at most two contiguous chunks
+    /// are walked with a compare-select (`min` over matching logical
+    /// indices) instead of an early return, so the register-compare loop
+    /// is auto-vectorizable. `min` keeps the *lowest* logical index, which
+    /// preserves the first-match-decides rule exactly.
     #[inline]
     fn coalesce<P: VertexProgram + ?Sized>(
         &mut self,
@@ -263,19 +269,28 @@ impl RingArena<AluinItem> {
         let cap = self.cap as usize;
         let base = q * cap;
         let (h, l) = (self.head[q] as usize, self.len[q] as usize);
-        for i in 0..l {
-            let e = &mut self.buf[base + (h + i) % cap];
-            if e.reg == item.reg {
-                return Some(match vp.coalesce(e.msg, item.msg) {
-                    Some(m) => {
-                        e.msg = m;
-                        true
-                    }
-                    None => false,
-                });
+        let end = h + l;
+        let mut hit = usize::MAX;
+        for (i, e) in self.buf[base + h..base + end.min(cap)].iter().enumerate() {
+            hit = hit.min(if e.reg == item.reg { i } else { usize::MAX });
+        }
+        if hit == usize::MAX && end > cap {
+            let lo = cap - h; // logical index of the wrapped chunk's start
+            for (i, e) in self.buf[base..base + end - cap].iter().enumerate() {
+                hit = hit.min(if e.reg == item.reg { lo + i } else { usize::MAX });
             }
         }
-        None
+        if hit == usize::MAX {
+            return None;
+        }
+        let e = &mut self.buf[base + (h + hit) % cap];
+        Some(match vp.coalesce(e.msg, item.msg) {
+            Some(m) => {
+                e.msg = m;
+                true
+            }
+            None => false,
+        })
     }
 }
 
@@ -382,8 +397,10 @@ struct Timing {
 /// vertex program driving it. Borrowed for the duration of one query so
 /// the mutable [`SimInstance`] outlives every run. Generic over the
 /// program type: `P = dyn VertexProgram` is the dyn-shim instantiation,
-/// a concrete `P` monomorphizes the whole drive loop.
-struct RunCtx<'a, P: VertexProgram + ?Sized> {
+/// a concrete `P` monomorphizes the whole drive loop. `pub(crate)` so
+/// [`crate::sim::batch`] can interleave lane steps through the same
+/// guarded stepper the sequential drive loop uses.
+pub(crate) struct RunCtx<'a, P: VertexProgram + ?Sized> {
     c: &'a CompiledGraph,
     vp: &'a P,
     /// `vp.bound()` cached out of the per-message ALU hot path.
@@ -573,6 +590,22 @@ impl SimInstance {
         source: u32,
         opts: &SimOptions,
     ) -> Result<RunResult, SimError> {
+        let cx = self.start_program(c, vp, source, opts)?;
+        self.drive_loop(&cx)
+    }
+
+    /// Validate, reset and seed a run without driving it — the setup half
+    /// of [`SimInstance::run_program`], split out so the batched runner
+    /// ([`crate::sim::batch`]) can interleave many lanes cycle-for-cycle
+    /// through [`SimInstance::step_guarded`]. The returned context borrows
+    /// only the machine image / program / options, never the instance.
+    pub(crate) fn start_program<'a, P: VertexProgram + ?Sized>(
+        &mut self,
+        c: &'a CompiledGraph,
+        vp: &'a P,
+        source: u32,
+        opts: &'a SimOptions,
+    ) -> Result<RunCtx<'a, P>, SimError> {
         if c.cfg != self.cfg {
             return Err(SimError::FabricMismatch);
         }
@@ -581,13 +614,8 @@ impl SimInstance {
         // until the run completes cleanly, assume packets are mid-flight
         self.needs_hard_reset = true;
         let cx = RunCtx { c, vp, vp_bound: vp.bound(), num_copies: c.placement.num_copies, opts };
-        let out = self.drive(&cx, source);
-        if out.is_ok() {
-            // the fabric drained itself: every queue empty, every credit
-            // returned — the next reset() is O(touched)
-            self.needs_hard_reset = false;
-        }
-        out
+        self.seed(&cx, source);
+        Ok(cx)
     }
 
     /// Resume execution from an existing attribute state with externally
@@ -649,11 +677,7 @@ impl SimInstance {
             self.pe[pe_idx].queued += 1;
             self.activate(pe_idx);
         }
-        let out = self.drive_loop(&cx);
-        if out.is_ok() {
-            self.needs_hard_reset = false;
-        }
-        out
+        self.drive_loop(&cx)
     }
 
     /// Restore pristine post-construction state. After a completed run
@@ -926,16 +950,6 @@ impl SimInstance {
             && self.swap_clusters.is_empty()
     }
 
-    /// Run to termination; returns the functional result and metrics.
-    fn drive<P: VertexProgram + ?Sized>(
-        &mut self,
-        cx: &RunCtx<P>,
-        source: u32,
-    ) -> Result<RunResult, SimError> {
-        self.seed(cx, source);
-        self.drive_loop(cx)
-    }
-
     /// The termination loop shared by fresh ([`SimInstance::run_program`])
     /// and resumed ([`SimInstance::run_resumed`]) runs; the caller has
     /// already installed attributes and initial work.
@@ -944,28 +958,53 @@ impl SimInstance {
         cx: &RunCtx<P>,
     ) -> Result<RunResult, SimError> {
         self.progress_at = 0;
-        while !self.is_done() {
-            if let Some(d) = cx.opts.deadline {
-                if self.now >= d {
-                    return Err(SimError::DeadlineExceeded { deadline: d });
-                }
-            }
-            if self.now >= cx.opts.max_cycles {
-                return Err(SimError::MaxCycles { limit: cx.opts.max_cycles });
-            }
-            if self.now - self.progress_at > cx.opts.watchdog {
-                return Err(SimError::WatchdogStall {
-                    watchdog: cx.opts.watchdog,
-                    cycle: self.now,
-                    diag: self.diag(),
-                });
-            }
-            self.step(cx);
+        while self.step_guarded(cx)? {}
+        Ok(self.finish_run())
+    }
+
+    /// Advance the run by one guarded cycle: `Ok(false)` once the run has
+    /// terminated (call [`SimInstance::finish_run`] to collect the
+    /// result), `Ok(true)` after stepping, `Err` on a tripped deadline /
+    /// max-cycles / watchdog guard — exactly the per-iteration body of the
+    /// sequential drive loop, so any interleaving of instances that steps
+    /// each one through here until `Ok(false)` reproduces its sequential
+    /// run bit-for-bit.
+    pub(crate) fn step_guarded<P: VertexProgram + ?Sized>(
+        &mut self,
+        cx: &RunCtx<P>,
+    ) -> Result<bool, SimError> {
+        if self.is_done() {
+            return Ok(false);
         }
+        if let Some(d) = cx.opts.deadline {
+            if self.now >= d {
+                return Err(SimError::DeadlineExceeded { deadline: d });
+            }
+        }
+        if self.now >= cx.opts.max_cycles {
+            return Err(SimError::MaxCycles { limit: cx.opts.max_cycles });
+        }
+        if self.now - self.progress_at > cx.opts.watchdog {
+            return Err(SimError::WatchdogStall {
+                watchdog: cx.opts.watchdog,
+                cycle: self.now,
+                diag: self.diag(),
+            });
+        }
+        self.step(cx);
+        Ok(true)
+    }
+
+    /// Package a terminated run (`is_done()` holds): the fabric has
+    /// drained itself — every queue empty, every credit returned — so the
+    /// next [`SimInstance::reset`] is O(touched).
+    pub(crate) fn finish_run(&mut self) -> RunResult {
+        debug_assert!(self.is_done(), "finish_run on a live run");
+        self.needs_hard_reset = false;
         let cycles = self.now;
         let act = self.act;
         let num_pes = self.pe.len() as u64;
-        Ok(RunResult {
+        RunResult {
             cycles,
             attrs: std::mem::take(&mut self.attrs),
             edges_traversed: self.edges,
@@ -997,7 +1036,7 @@ impl SimInstance {
                 activity: act,
                 parallelism_trace: std::mem::take(&mut self.trace),
             },
-        })
+        }
     }
 
     fn diag(&self) -> String {
@@ -1463,12 +1502,15 @@ impl SimInstance {
         }
         // Intra-Table lookup: two index loads into the CSR slab and a
         // contiguous bucket walk (borrowed from the compiled graph with
-        // its own lifetime, so PE state stays mutable)
+        // its own lifetime, so PE state stays mutable). The source-id
+        // compares scan the SoA key plane — a dense u32 stream with a
+        // branchless compare-accumulate the compiler can vectorize — and
+        // only the matches touch the fixed-stride full records.
         let copy = self.resident_copy(cl);
-        let bucket = cx.c.intra_bucket(copy, pe_idx, q.pkt.src_vid);
+        let (keys, bucket) = cx.c.intra_bucket_keyed(copy, pe_idx, q.pkt.src_vid);
         let walked = bucket.len().max(1) as u64;
         let src_vid = q.pkt.src_vid;
-        let n_matches = bucket.iter().filter(|e| e.src_vid == src_vid).count();
+        let n_matches: usize = keys.iter().map(|&k| usize::from(k == src_vid)).sum();
         if n_matches == 0 {
             // no edge into this slice config (can happen transiently after
             // re-route of parked packets) — drop with accounting
@@ -1495,10 +1537,11 @@ impl SimInstance {
         self.act.intra_lookups += 1;
         self.act.intra_walked += walked;
         let mut first = true;
-        for m in bucket {
-            if m.src_vid != src_vid {
+        for (i, &k) in keys.iter().enumerate() {
+            if k != src_vid {
                 continue;
             }
+            let m = &bucket[i];
             let msg = cx.vp.combine(q.pkt.attr, m.weight);
             let item = AluinItem { reg: m.dst_reg, msg };
             if self.try_coalesce(cx, pe_idx, item) {

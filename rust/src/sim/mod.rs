@@ -20,7 +20,15 @@
 //! The multi-chip layer ([`multichip`]) steps K partitioned fabrics in
 //! barrier-lockstep supersteps and exchanges frontier packets for cut
 //! arcs over a modeled inter-chip link (DESIGN.md §7); sharded results
-//! are differential-tested against the single-chip cores.
+//! are differential-tested against the single-chip cores. Inside a
+//! superstep the shards are data-independent, so they can step on a
+//! persistent worker pool with a deterministic barrier merge
+//! ([`multichip::run_program_on`]) — bitwise identical to the serial
+//! schedule.
+//!
+//! The batched layer ([`batch`]) fuses B independent same-epoch queries
+//! into one pass over a shared machine image (per-query lanes in SoA
+//! layout; DESIGN.md §Perf.2), bit-exact to B sequential runs.
 //!
 //! Failures are typed ([`error::SimError`]) so callers can tell
 //! retryable faults from fatal aborts, and the inter-chip links can be
@@ -30,6 +38,7 @@
 //! backoff, and rolls a stalled chip back to its per-superstep attribute
 //! checkpoint instead of aborting the run.
 
+pub mod batch;
 pub mod error;
 pub mod fault;
 pub mod flip;
@@ -39,6 +48,7 @@ pub mod multichip;
 pub mod naive;
 pub mod opcentric;
 
+pub use batch::BatchInstance;
 pub use error::SimError;
 pub use fault::FaultPlan;
 pub use flip::{SimInstance, SimOptions};

@@ -65,8 +65,11 @@ use crate::metrics::{ActivityCounts, RunResult, SimMetrics};
 use crate::sim::error::SimError;
 use crate::sim::fault::{self, LinkFault};
 use crate::sim::flip::{Inject, SimInstance, SimOptions};
+use crate::util::WorkerPool;
 use crate::workloads::program::VertexProgram;
 use crate::workloads::Workload;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Words per inter-chip frontier packet: source id, attribute, and the
 /// destination routing word (slice + PE).
@@ -381,18 +384,81 @@ fn shard_err(shard: usize, opts: &SimOptions, e: SimError) -> SimError {
     }
 }
 
+/// Per-shard outcome of one superstep: `Ok(None)` for a chip that never
+/// powered up this superstep (no seed, empty inbox), `Ok(Some((run,
+/// recovery)))` for a completed local run plus its fault-replay recovery
+/// cycles, `Err` for a shard abort.
+type StepOut = Result<Option<(RunResult, u64)>, SimError>;
+
+/// Ride out slot poisoning: a panicked shard closure is re-raised by the
+/// pool's barrier before any non-panic path reads the slot.
+fn slot_inner<T>(m: Mutex<T>) -> T {
+    m.into_inner().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Visit every shard of a superstep exactly once. With a pool (and more
+/// than one shard and one thread) the shard indices are claimed
+/// work-stealing style by the pool's threads; otherwise this is a plain
+/// shard-order loop. Claim order is nondeterministic under a pool, which
+/// is safe because each shard's closure only touches its own slot —
+/// every cross-shard accumulation happens in the serial shard-order
+/// merge afterwards, so the merged results are bitwise identical to the
+/// serial schedule.
+fn for_each_shard(pool: Option<&WorkerPool>, k: usize, f: &(dyn Fn(usize) + Sync)) {
+    match pool {
+        Some(p) if k > 1 && p.parallelism() > 1 => {
+            let cursor = AtomicUsize::new(0);
+            p.run(&|| loop {
+                let s = cursor.fetch_add(1, Ordering::Relaxed);
+                if s >= k {
+                    break;
+                }
+                f(s);
+            });
+        }
+        _ => {
+            for s in 0..k {
+                f(s);
+            }
+        }
+    }
+}
+
 /// Run an arbitrary vertex program on a sharded machine using the given
 /// per-shard instances (one [`SimInstance`] per shard, reusable across
 /// queries). `source` is a *global* vertex id (ignored by dense-seeded
 /// programs). A watchdog or max-cycles abort inside any shard surfaces
 /// as the returned `Err`; the instances hard-reset on their next run, so
-/// the machine stays serviceable.
+/// the machine stays serviceable. Serial shard schedule — equivalent to
+/// [`run_program_on`] with no pool.
 pub fn run_program<P: VertexProgram + ?Sized>(
     m: &ShardedMachine,
     insts: &mut [SimInstance],
     vp: &P,
     source: u32,
     opts: &SimOptions,
+) -> Result<ShardedRun, SimError> {
+    run_program_on(m, insts, vp, source, opts, None)
+}
+
+/// [`run_program`] with optional intra-superstep shard parallelism:
+/// inside a superstep the K shards are data-independent (they exchange
+/// packets only at the barrier), so with `Some(pool)` each superstep's
+/// local runs step concurrently on the persistent [`WorkerPool`]. All
+/// cross-shard state — metric aggregation, the lockstep `step_max`,
+/// attribute gathers, error precedence — is merged serially in shard
+/// order after the barrier, so the result is **bitwise identical** to
+/// the serial schedule (`tests/batch.rs` proves it per workload and K).
+/// The packet-exchange phase stays serial: it is O(cut) bookkeeping on
+/// shared link state. Callers must not invoke this from inside the same
+/// pool's `run` (the pool is not reentrant).
+pub fn run_program_on<P: VertexProgram + ?Sized>(
+    m: &ShardedMachine,
+    insts: &mut [SimInstance],
+    vp: &P,
+    source: u32,
+    opts: &SimOptions,
+    pool: Option<&WorkerPool>,
 ) -> Result<ShardedRun, SimError> {
     let k = m.part.k;
     let n = m.part.n;
@@ -433,27 +499,36 @@ pub fn run_program<P: VertexProgram + ?Sized>(
     // ---- superstep 0: seeded local runs ---------------------------------
     let so0 = mk_step_opts(0);
     let step_opts = so0.as_ref().unwrap_or(opts);
-    let mut step_max = 0u64;
-    for s in 0..k {
-        let n_s = m.part.global_of[s].len();
-        let init: Vec<u32> = (0..n_s as u32).map(|l| views[s].init_attr(l, n_s)).collect();
-        let owner = !vp.single_source() || m.part.shard_of[source as usize] as usize == s;
-        if owner {
+    let inits: Vec<Vec<u32>> = (0..k)
+        .map(|s| {
+            let n_s = m.part.global_of[s].len();
+            (0..n_s as u32).map(|l| views[s].init_attr(l, n_s)).collect()
+        })
+        .collect();
+    let mut step0_out: Vec<StepOut> = Vec::with_capacity(k);
+    {
+        let step0 = |s: usize, inst: &mut SimInstance| -> StepOut {
+            let owner = !vp.single_source() || m.part.shard_of[source as usize] as usize == s;
+            if !owner {
+                // a chip with no seed and no inbound packets yet never
+                // powers up this superstep
+                return Ok(None);
+            }
             let local_src = if vp.single_source() { m.part.local_of[source as usize] } else { 0 };
             // bounded replay loop: an injected transient stall rolls the
             // chip back to its checkpoint (superstep 0's checkpoint is the
             // seeded init state, so a rerun *is* the rollback) and replays
             let mut replays = 0u32;
             let mut s_rec = 0u64;
-            let mut r = loop {
-                let r = insts[s]
+            loop {
+                let r = inst
                     .run_program(&m.shards[s], &views[s], local_src, step_opts)
                     .map_err(|e| shard_err(s, opts, e))?;
                 if !faulty {
-                    break r;
+                    return Ok(Some((r, s_rec)));
                 }
                 match plan.chip_stall(0, s as u16, replays) {
-                    None => break r,
+                    None => return Ok(Some((r, s_rec))),
                     Some(stall) => {
                         replays += 1;
                         s_rec += r.cycles + stall;
@@ -462,7 +537,7 @@ pub fn run_program<P: VertexProgram + ?Sized>(
                                 shard: s as u16,
                                 cause: Box::new(SimError::WatchdogStall {
                                     watchdog: stall,
-                                    cycle: total_cycles + s_rec,
+                                    cycle: s_rec,
                                     diag: format!(
                                         "injected transient stall exhausted {} replays \
                                          at superstep 0",
@@ -473,19 +548,36 @@ pub fn run_program<P: VertexProgram + ?Sized>(
                         }
                     }
                 }
-            };
-            step_max = step_max.max(r.cycles + s_rec);
-            recovery_total += s_rec;
-            shard_cycles[s] += r.cycles;
-            if k == 1 {
-                single_chip = Some((r.cycles, r.edges_traversed, r.sim.clone()));
             }
-            agg.add(&r);
-            attrs.push(std::mem::take(&mut r.attrs));
-        } else {
-            // a chip with no seed and no inbound packets yet never powers
-            // up this superstep
-            attrs.push(init.clone());
+        };
+        let slots: Vec<Mutex<(&mut SimInstance, Option<StepOut>)>> =
+            insts.iter_mut().map(|i| Mutex::new((i, None))).collect();
+        for_each_shard(pool, k, &|s| {
+            let mut slot = slots[s].lock().unwrap_or_else(|p| p.into_inner());
+            let (inst, out) = &mut *slot;
+            *out = Some(step0(s, inst));
+        });
+        for slot in slots {
+            let (_, out) = slot_inner(slot);
+            step0_out.push(out.unwrap_or_else(|| unreachable!("every shard stepped")));
+        }
+    }
+    // serial shard-order merge: identical accumulation order (and error
+    // precedence) to the serial schedule, whatever order shards ran in
+    let mut step_max = 0u64;
+    for (s, (out, init)) in step0_out.into_iter().zip(inits).enumerate() {
+        match out? {
+            Some((mut r, s_rec)) => {
+                step_max = step_max.max(r.cycles + s_rec);
+                recovery_total += s_rec;
+                shard_cycles[s] += r.cycles;
+                if k == 1 {
+                    single_chip = Some((r.cycles, r.edges_traversed, r.sim.clone()));
+                }
+                agg.add(&r);
+                attrs.push(std::mem::take(&mut r.attrs));
+            }
+            None => attrs.push(init.clone()),
         }
         pre.push(init);
     }
@@ -599,59 +691,88 @@ pub fn run_program<P: VertexProgram + ?Sized>(
         // inbox would provably run zero cycles and change nothing)
         let so = mk_step_opts(total_cycles);
         let step_opts = so.as_ref().unwrap_or(opts);
-        let mut step_max = 0u64;
-        for s in 0..k {
-            pre[s].clone_from(&attrs[s]);
-            if inj[s].is_empty() {
-                continue;
-            }
-            // bounded replay loop: a stalled chip rolls back to the
-            // `pre[s]` checkpoint taken at the superstep boundary and
-            // replays the identical inbox
-            let mut replays = 0u32;
-            let mut s_rec = 0u64;
-            let mut r = loop {
-                // under an inert plan, hand the attribute vector over
-                // without copying (the fast path); an active plan keeps
-                // the checkpoint intact for a possible rollback
-                let input = if faulty {
-                    pre[s].clone()
-                } else {
-                    std::mem::take(&mut attrs[s])
-                };
-                let r = insts[s]
-                    .run_resumed(&m.shards[s], &views[s], input, &inj[s], step_opts)
-                    .map_err(|e| shard_err(s, opts, e))?;
-                if !faulty {
-                    break r;
-                }
-                match plan.chip_stall(supersteps, s as u16, replays) {
-                    None => break r,
-                    Some(stall) => {
-                        replays += 1;
-                        s_rec += r.cycles + stall;
-                        if replays > plan.max_replays {
-                            return Err(SimError::ChipFailed {
-                                shard: s as u16,
-                                cause: Box::new(SimError::WatchdogStall {
-                                    watchdog: stall,
-                                    cycle: total_cycles + s_rec,
-                                    diag: format!(
-                                        "injected transient stall exhausted {} replays \
-                                         at superstep {supersteps}",
-                                        plan.max_replays
-                                    ),
-                                }),
-                            });
+        // cycles committed at the barrier so far — a captured constant
+        // for this superstep's (possibly concurrent) shard closures
+        let committed = total_cycles;
+        let mut step_out: Vec<StepOut> = Vec::with_capacity(k);
+        {
+            let resume =
+                |s: usize, inst: &mut SimInstance, pre_s: &mut Vec<u32>, attrs_s: &mut Vec<u32>| -> StepOut {
+                    pre_s.clone_from(attrs_s);
+                    if inj[s].is_empty() {
+                        return Ok(None);
+                    }
+                    // bounded replay loop: a stalled chip rolls back to the
+                    // `pre[s]` checkpoint taken at the superstep boundary
+                    // and replays the identical inbox
+                    let mut replays = 0u32;
+                    let mut s_rec = 0u64;
+                    loop {
+                        // under an inert plan, hand the attribute vector
+                        // over without copying (the fast path); an active
+                        // plan keeps the checkpoint intact for a possible
+                        // rollback
+                        let input =
+                            if faulty { pre_s.clone() } else { std::mem::take(attrs_s) };
+                        let mut r = inst
+                            .run_resumed(&m.shards[s], &views[s], input, &inj[s], step_opts)
+                            .map_err(|e| shard_err(s, opts, e))?;
+                        if !faulty {
+                            *attrs_s = std::mem::take(&mut r.attrs);
+                            return Ok(Some((r, s_rec)));
+                        }
+                        match plan.chip_stall(supersteps, s as u16, replays) {
+                            None => {
+                                *attrs_s = std::mem::take(&mut r.attrs);
+                                return Ok(Some((r, s_rec)));
+                            }
+                            Some(stall) => {
+                                replays += 1;
+                                s_rec += r.cycles + stall;
+                                if replays > plan.max_replays {
+                                    return Err(SimError::ChipFailed {
+                                        shard: s as u16,
+                                        cause: Box::new(SimError::WatchdogStall {
+                                            watchdog: stall,
+                                            cycle: committed + s_rec,
+                                            diag: format!(
+                                                "injected transient stall exhausted {} replays \
+                                                 at superstep {supersteps}",
+                                                plan.max_replays
+                                            ),
+                                        }),
+                                    });
+                                }
+                            }
                         }
                     }
-                }
-            };
-            step_max = step_max.max(r.cycles + s_rec);
-            recovery_total += s_rec;
-            shard_cycles[s] += r.cycles;
-            agg.add(&r);
-            attrs[s] = std::mem::take(&mut r.attrs);
+                };
+            let slots: Vec<Mutex<(&mut SimInstance, &mut Vec<u32>, &mut Vec<u32>, Option<StepOut>)>> =
+                insts
+                    .iter_mut()
+                    .zip(pre.iter_mut())
+                    .zip(attrs.iter_mut())
+                    .map(|((i, p), a)| Mutex::new((i, p, a, None)))
+                    .collect();
+            for_each_shard(pool, k, &|s| {
+                let mut slot = slots[s].lock().unwrap_or_else(|p| p.into_inner());
+                let (inst, pre_s, attrs_s, out) = &mut *slot;
+                *out = Some(resume(s, inst, pre_s, attrs_s));
+            });
+            for slot in slots {
+                let (_, _, _, out) = slot_inner(slot);
+                step_out.push(out.unwrap_or_else(|| unreachable!("every shard stepped")));
+            }
+        }
+        // serial shard-order merge (see superstep 0)
+        let mut step_max = 0u64;
+        for (s, out) in step_out.into_iter().enumerate() {
+            if let Some((r, s_rec)) = out? {
+                step_max = step_max.max(r.cycles + s_rec);
+                recovery_total += s_rec;
+                shard_cycles[s] += r.cycles;
+                agg.add(&r);
+            }
         }
         supersteps += 1;
         total_cycles += step_max;
@@ -700,8 +821,23 @@ pub fn run(
     source: u32,
     opts: &SimOptions,
 ) -> Result<ShardedRun, SimError> {
+    run_on(m, workload, source, opts, None)
+}
+
+/// [`run`] with optional intra-superstep shard parallelism on a
+/// persistent [`WorkerPool`] (see [`run_program_on`]); results are
+/// bitwise identical to the serial [`run`].
+pub fn run_on(
+    m: &ShardedMachine,
+    workload: Workload,
+    source: u32,
+    opts: &SimOptions,
+    pool: Option<&WorkerPool>,
+) -> Result<ShardedRun, SimError> {
     let mut insts = m.new_instances();
-    crate::workloads::with_builtin(workload, |vp| run_program(m, &mut insts, vp, source, opts))
+    crate::workloads::with_builtin(workload, |vp| {
+        run_program_on(m, &mut insts, vp, source, opts, pool)
+    })
 }
 
 /// Drive host-synchronized PageRank rounds on a sharded machine — the
@@ -758,6 +894,26 @@ mod tests {
                 assert!(r.result.sim.chip_packets > 0, "WCC: no cut traffic?");
                 assert!(r.result.sim.chip_link_cycles > 0);
                 assert!(r.supersteps >= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_supersteps_are_bitwise_identical_to_serial() {
+        let g = generate::road_network(64, 146, 166, 17);
+        let cfg = ArchConfig::default();
+        let pool = crate::util::WorkerPool::new(3);
+        for k in [1usize, 2, 4] {
+            for w in [Workload::Bfs, Workload::Sssp, Workload::Wcc] {
+                let view = crate::workloads::view_for(w, &g);
+                let m = ShardedMachine::build(&view, k, &cfg, 42);
+                let serial = run(&m, w, 5, &SimOptions::default()).unwrap();
+                let pooled = run_on(&m, w, 5, &SimOptions::default(), Some(&pool)).unwrap();
+                assert_eq!(pooled.result.cycles, serial.result.cycles, "K={k} {}", w.name());
+                assert_eq!(pooled.result.attrs, serial.result.attrs, "K={k} {}", w.name());
+                assert_eq!(pooled.result.sim, serial.result.sim, "K={k} {}", w.name());
+                assert_eq!(pooled.shard_cycles, serial.shard_cycles);
+                assert_eq!(pooled.supersteps, serial.supersteps);
             }
         }
     }

@@ -1,7 +1,10 @@
-//! Shared utilities: deterministic RNG, statistics, in-house property tests.
+//! Shared utilities: deterministic RNG, statistics, in-house property
+//! tests, and the persistent worker pool the serving layers dispatch on.
 
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
 
+pub use pool::WorkerPool;
 pub use rng::Rng;

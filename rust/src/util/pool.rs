@@ -1,0 +1,254 @@
+//! A tiny persistent worker pool for the serving and multichip layers.
+//!
+//! `std::thread::scope` spawns (and joins) one OS thread per worker on
+//! *every* call, so a serving drain that fans out over a scoped pool
+//! pays O(threads) thread churn per drain. A [`WorkerPool`] spawns its
+//! workers once and re-dispatches them per call: [`WorkerPool::run`]
+//! hands every worker (plus the calling thread) the same shared closure
+//! and returns only when all of them have finished — the same barrier
+//! semantics as a scope, at O(work) steady-state cost.
+//!
+//! The closure is shared by reference (`&dyn Fn() + Sync`), so callers
+//! split work with their own atomics/mutexes exactly as they did under
+//! `thread::scope`. Worker panics are caught, forwarded, and re-raised
+//! on the calling thread after the barrier, matching scope semantics.
+//!
+//! Safety: the pool erases the closure's borrow lifetime to hand it to
+//! long-lived workers (one documented `transmute`). This is sound
+//! because `run` blocks until every worker has finished executing the
+//! closure — the erased reference never outlives the call frame that
+//! owns the borrow, exactly the guarantee `thread::scope` encodes in
+//! its API.
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+/// The erased job slot. `&'static (dyn Fn() + Sync)` is `Send + Copy`
+/// for free (`&T: Send` when `T: Sync`), so no manual `Send` impl is
+/// needed; the lifetime erasure happens once, in [`WorkerPool::run`].
+type Job = &'static (dyn Fn() + Sync);
+
+struct State {
+    /// Dispatch generation: bumped once per `run` so a worker never
+    /// executes the same job twice.
+    gen: u64,
+    /// Workers still executing the current job.
+    running: usize,
+    job: Option<Job>,
+    shutdown: bool,
+    /// First worker panic of the current job (re-raised by `run`).
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+struct Shared {
+    m: Mutex<State>,
+    start: Condvar,
+    done: Condvar,
+}
+
+/// Ride out lock poisoning: a panicked peer is already being reported
+/// through the `panic` slot / propagated by the caller, and `State` is
+/// valid at every store (no torn invariants to protect).
+fn lock(m: &Mutex<State>) -> MutexGuard<'_, State> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// A persistent bank of worker threads with scope-style barrier
+/// dispatch. See the module docs. Sized at construction; dropping the
+/// pool shuts the workers down and joins them.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Build a pool with a total parallelism of `threads`: the calling
+    /// thread participates in every [`WorkerPool::run`], so
+    /// `threads.saturating_sub(1)` background workers are spawned.
+    /// `threads <= 1` yields a pool with no workers (`run` degenerates
+    /// to a plain call). If the OS refuses a spawn the pool degrades to
+    /// fewer workers rather than failing.
+    pub fn new(threads: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            m: Mutex::new(State {
+                gen: 0,
+                running: 0,
+                job: None,
+                shutdown: false,
+                panic: None,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let mut workers = Vec::new();
+        for i in 0..threads.saturating_sub(1) {
+            let sh = Arc::clone(&shared);
+            let b = std::thread::Builder::new().name(format!("flip-pool-{i}"));
+            if let Ok(h) = b.spawn(move || worker_loop(&sh)) {
+                workers.push(h);
+            }
+        }
+        WorkerPool { shared, workers }
+    }
+
+    /// Total parallelism of the pool (workers + the calling thread).
+    pub fn parallelism(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Execute `f` on every worker *and* the calling thread, returning
+    /// once all of them have finished (barrier semantics). If any worker
+    /// panicked, the first panic is re-raised here after the barrier —
+    /// like a scoped join. Not reentrant: `f` must not call `run` on the
+    /// same pool (the serving layers enforce a never-nest rule).
+    pub fn run(&self, f: &(dyn Fn() + Sync)) {
+        if self.workers.is_empty() {
+            f();
+            return;
+        }
+        {
+            let mut st = lock(&self.shared.m);
+            debug_assert!(st.running == 0, "WorkerPool::run is not reentrant");
+            // SAFETY: every worker finishes executing the job before
+            // `run` returns (the `running` barrier below), so the
+            // 'static-erased borrow never outlives this call frame.
+            let erased: Job = unsafe {
+                std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync)>(f)
+            };
+            st.job = Some(erased);
+            st.gen = st.gen.wrapping_add(1);
+            st.running = self.workers.len();
+            self.shared.start.notify_all();
+        }
+        // catch the caller's own share too: the barrier below must
+        // complete even if `f` panics here, or the erased borrow could
+        // outlive its frame while workers still run
+        let caller = catch_unwind(AssertUnwindSafe(f));
+        let mut st = lock(&self.shared.m);
+        while st.running > 0 {
+            st = self.shared.done.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+        st.job = None;
+        let worker_panic = st.panic.take();
+        drop(st);
+        if let Err(p) = caller {
+            resume_unwind(p);
+        }
+        if let Some(p) = worker_panic {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.shared.m);
+            st.shutdown = true;
+            self.shared.start.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = lock(&shared.m);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                match st.job {
+                    Some(job) if st.gen != seen => {
+                        seen = st.gen;
+                        break job;
+                    }
+                    _ => {}
+                }
+                st = shared.start.wait(st).unwrap_or_else(|p| p.into_inner());
+            }
+        };
+        let r = catch_unwind(AssertUnwindSafe(job));
+        let mut st = lock(&shared.m);
+        if let Err(p) = r {
+            if st.panic.is_none() {
+                st.panic = Some(p);
+            }
+        }
+        st.running -= 1;
+        if st.running == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_work_stealing_sum() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.parallelism(), 4);
+        let next = AtomicUsize::new(0);
+        let sum = AtomicUsize::new(0);
+        pool.run(&|| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= 1000 {
+                break;
+            }
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_runs() {
+        let pool = WorkerPool::new(3);
+        for round in 1..=5usize {
+            let hits = AtomicUsize::new(0);
+            pool.run(&|| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            // every worker plus the caller ran the closure exactly once
+            assert_eq!(hits.load(Ordering::Relaxed), pool.parallelism(), "round {round}");
+        }
+    }
+
+    #[test]
+    fn single_threaded_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        let hits = AtomicUsize::new(0);
+        pool.run(&|| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn worker_panic_propagates_after_barrier() {
+        let pool = WorkerPool::new(2);
+        let armed = AtomicUsize::new(0);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&|| {
+                if armed.fetch_add(1, Ordering::Relaxed) == 1 {
+                    panic!("worker boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must cross the barrier");
+        // the pool stays usable afterwards
+        let hits = AtomicUsize::new(0);
+        pool.run(&|| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+}

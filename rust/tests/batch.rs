@@ -1,0 +1,185 @@
+//! Batched-simulation battery (DESIGN.md §Perf.2): the fused multi-lane
+//! pass and the pooled lockstep supersteps are *performance* features,
+//! so their whole contract is bitwise equality with the sequential
+//! paths they replace. This suite proves it with the in-house property
+//! harness (`flip::util::proptest`):
+//!
+//! - `prop_batched_equals_sequential` — all six workload programs
+//!   (trio + PageRank round / A* / MIS) × B ∈ {1, 2, 8} lanes: every
+//!   lane of a fused [`BatchInstance`] pass must match its own
+//!   sequential run on attrs, per-lane cycles, edges traversed, and
+//!   every `SimMetrics` counter.
+//! - the same invariant across the slice-swapping configs (graphs big
+//!   enough to replicate), where the fast-forward interleave is busiest;
+//! - a lane-abort case: a batch whose lanes all trip `max_cycles` must
+//!   leave the lane bank reusable, with the next batch still bit-exact;
+//! - `prop_pooled_supersteps_equal_serial` — K ∈ {1, 2, 4} shards × the
+//!   trio workloads: `multichip::run_on` with a [`WorkerPool`] must be
+//!   bitwise identical to the serial `multichip::run` merge (cycles,
+//!   attrs, metrics, per-shard busy cycles, superstep count).
+
+mod common;
+
+use flip::compiler::{compile, CompileOpts};
+use flip::config::ArchConfig;
+use flip::prop_assert;
+use flip::sim::flip::{self as flipsim, SimOptions};
+use flip::sim::multichip::{self, ShardedMachine};
+use flip::sim::{BatchInstance, SimError};
+use flip::util::{proptest::check, Rng, WorkerPool};
+use flip::workloads::program::VertexProgram;
+use flip::workloads::Workload;
+
+#[test]
+fn prop_batched_equals_sequential() {
+    check("batched_equals_sequential", 16, |rng| {
+        let g = common::random_graph(&mut |n| rng.below(n), 8, 90);
+        let cfg = ArchConfig::default();
+        let copts = CompileOpts { seed: rng.next_u64(), ..Default::default() };
+        let b = [1usize, 2, 8][rng.below(3) as usize];
+        let opts = SimOptions::default();
+        let cases = common::six_programs(&g, &mut |n| rng.below(n));
+        for (which, (vp, view, src)) in cases.iter().enumerate() {
+            let c = compile(view, &cfg, &copts);
+            // the trio programs (cases 0-2) are source-parametric, so
+            // their lanes get distinct draws; the extended programs
+            // embed their roles (A* target, MIS priorities, PageRank
+            // contributions), so their lanes repeat the one query
+            let n = view.num_vertices() as u64;
+            let sources: Vec<u32> = (0..b)
+                .map(|i| if which < 3 && i > 0 { rng.below(n) as u32 } else { *src })
+                .collect();
+            let queries: Vec<(&dyn VertexProgram, u32)> =
+                sources.iter().map(|&s| (vp.as_ref(), s)).collect();
+            let mut batch = BatchInstance::new(&c, b);
+            let fused = batch.run_batch(&c, &queries, &opts);
+            for (lane, (&s, f)) in sources.iter().zip(&fused).enumerate() {
+                let seq = flipsim::run_program(&c, vp.as_ref(), s, &opts)
+                    .map_err(|e| format!("case {which} sequential: {e}"))?;
+                let f = f.as_ref().map_err(|e| format!("case {which} lane {lane}: {e}"))?;
+                prop_assert!(
+                    f.cycles == seq.cycles,
+                    "case {} lane {} cycles {} != {}",
+                    which,
+                    lane,
+                    f.cycles,
+                    seq.cycles
+                );
+                prop_assert!(f.attrs == seq.attrs, "case {} lane {} attrs diverge", which, lane);
+                prop_assert!(
+                    f.edges_traversed == seq.edges_traversed,
+                    "case {} lane {} edges {} != {}",
+                    which,
+                    lane,
+                    f.edges_traversed,
+                    seq.edges_traversed
+                );
+                prop_assert!(
+                    f.sim == seq.sim,
+                    "case {} lane {} metrics diverge: fused {:?} seq {:?}",
+                    which,
+                    lane,
+                    f.sim,
+                    seq.sim
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batched_equals_sequential_with_swapping() {
+    // same invariant on graphs large enough for slice replication, where
+    // each lane's idle-cycle fast-forward interleaves with the others'
+    check("batched_equals_sequential_swapping", 4, |rng| {
+        let g = common::random_graph(&mut |n| rng.below(n), 260, 380);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts { seed: rng.next_u64(), ..Default::default() });
+        prop_assert!(c.placement.num_copies >= 2, "expected replication");
+        let opts =
+            SimOptions { max_cycles: 1_000_000_000, watchdog: 5_000_000, ..Default::default() };
+        let sources: Vec<u32> =
+            (0..4).map(|_| rng.below(g.num_vertices() as u64) as u32).collect();
+        let mut batch = BatchInstance::new(&c, sources.len());
+        let fused = batch.run_workload_batch(&c, Workload::Sssp, &sources, &opts);
+        for (lane, (&s, f)) in sources.iter().zip(&fused).enumerate() {
+            let seq = flipsim::run(&c, Workload::Sssp, s, &opts).map_err(|e| e.to_string())?;
+            let f = f.as_ref().map_err(|e| format!("lane {lane}: {e}"))?;
+            prop_assert!(f.cycles == seq.cycles, "lane {} cycles diverge under swapping", lane);
+            prop_assert!(f.attrs == seq.attrs, "lane {} attrs diverge under swapping", lane);
+            prop_assert!(f.sim == seq.sim, "lane {} metrics diverge under swapping", lane);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn aborted_lanes_reset_cleanly_for_the_next_batch() {
+    let mut rng = Rng::new(0xBA7C);
+    let g = common::random_graph(&mut |n| rng.below(n), 40, 60);
+    let cfg = ArchConfig::default();
+    let c = compile(&g, &cfg, &CompileOpts::default());
+    let sources = [0u32, 3, 7];
+    let mut batch = BatchInstance::new(&c, sources.len());
+    // an impossible cycle budget aborts every lane mid-sweep...
+    let tight = SimOptions { max_cycles: 1, ..Default::default() };
+    for r in batch.run_workload_batch(&c, Workload::Sssp, &sources, &tight) {
+        assert!(matches!(r, Err(SimError::MaxCycles { .. })), "expected a lane abort, got {r:?}");
+    }
+    // ...and the reused lane bank must still answer the next batch
+    // bit-exact, proving aborts leave no residue in lane state
+    let opts = SimOptions::default();
+    let after = batch.run_workload_batch(&c, Workload::Sssp, &sources, &opts);
+    for (&s, f) in sources.iter().zip(&after) {
+        let seq = flipsim::run(&c, Workload::Sssp, s, &opts).unwrap();
+        let f = f.as_ref().unwrap();
+        assert_eq!(f.cycles, seq.cycles, "post-abort lane cycles diverged");
+        assert_eq!(f.attrs, seq.attrs, "post-abort lane attrs diverged");
+        assert_eq!(f.sim, seq.sim, "post-abort lane metrics diverged");
+    }
+}
+
+#[test]
+fn prop_pooled_supersteps_equal_serial() {
+    // 3 workers against K in {1, 2, 4} shards on purpose: worker count
+    // not dividing the shard count exercises the work-stealing cursor
+    let pool = WorkerPool::new(3);
+    check("pooled_supersteps_equal_serial", 9, |rng| {
+        let g = common::random_graph(&mut |n| rng.below(n), 24, 120);
+        let cfg = ArchConfig::default();
+        let k = [1usize, 2, 4][rng.below(3) as usize];
+        let m = ShardedMachine::build(&g, k, &cfg, rng.next_u64());
+        let w = Workload::ALL[rng.below(3) as usize];
+        let src = rng.below(g.num_vertices() as u64) as u32;
+        let opts = SimOptions::default();
+        let ser = multichip::run(&m, w, src, &opts).map_err(|e| format!("serial: {e}"))?;
+        let par = multichip::run_on(&m, w, src, &opts, Some(&pool))
+            .map_err(|e| format!("pooled: {e}"))?;
+        prop_assert!(
+            ser.result.cycles == par.result.cycles,
+            "K={} {} cycles {} != {}",
+            k,
+            w.name(),
+            ser.result.cycles,
+            par.result.cycles
+        );
+        prop_assert!(ser.result.attrs == par.result.attrs, "K={} {} attrs diverge", k, w.name());
+        prop_assert!(ser.result.sim == par.result.sim, "K={} {} metrics diverge", k, w.name());
+        prop_assert!(
+            ser.shard_cycles == par.shard_cycles,
+            "K={} {} shard busy cycles diverge",
+            k,
+            w.name()
+        );
+        prop_assert!(
+            ser.supersteps == par.supersteps,
+            "K={} {} supersteps {} != {}",
+            k,
+            w.name(),
+            ser.supersteps,
+            par.supersteps
+        );
+        Ok(())
+    });
+}

@@ -71,4 +71,23 @@ grep -q '"deadline_aborts":0' BENCH_serve_smoke.json \
 grep -q '"p99_cycles":' BENCH_serve_smoke.json \
     || { echo "error: streaming smoke JSON is missing p99_cycles" >&2; exit 1; }
 
+# Batched-drain accounting (DESIGN.md §Perf.2): every completed query is
+# either a lane of a (possibly fused) sim pass or a frontier-sharing
+# fan-out, never both and never neither:
+#   served + failed == shared_hits + lane_count
+smoke_num() {
+    grep -o "\"$1\":[0-9]*" BENCH_serve_smoke.json | head -1 | cut -d: -f2
+}
+served="$(smoke_num served)"; failed="$(smoke_num failed)"
+hits="$(smoke_num shared_hits)"; lanes="$(smoke_num lane_count)"
+if [ -z "$served" ] || [ -z "$failed" ] || [ -z "$hits" ] || [ -z "$lanes" ]; then
+    echo "error: streaming smoke JSON is missing lane accounting fields" >&2
+    exit 1
+fi
+if [ "$((served + failed))" -ne "$((hits + lanes))" ]; then
+    echo "error: lane conservation violated: served($served) + failed($failed)" >&2
+    echo "       != shared_hits($hits) + lane_count($lanes)" >&2
+    exit 1
+fi
+
 echo "all checks passed"
