@@ -436,5 +436,59 @@ fn main() {
     suite.add(pooled).metric("superstep_parallel_speedup", superstep_parallel_speedup);
     suite.add(serial);
 
+    common::section("beam-search ANN: query throughput and recall@10 (clustered, |V|=256)");
+    use flip::graph::{generate, reference};
+    use flip::workloads::ann::{self, AnnIndex, AnnParams, AnnSearcher};
+    let (ag, emb) = generate::ann_graph(256, 8, 6, 42);
+    let aparams = AnnParams { k: 10, beam: 48, deg: 6, ..AnnParams::default() };
+    let ix = AnnIndex::build(&ag, &emb, 1, &cfg, 42, aparams);
+    let aopts = SimOptions { max_cycles: 2_000_000_000, watchdog: 5_000_000, ..Default::default() };
+    let aqueries: Vec<Vec<u8>> =
+        (0..16u32).map(|i| emb.vector((i * 37) % 256).to_vec()).collect();
+    let mut searcher = AnnSearcher::new(&ix);
+    let mut recall_sum = 0.0f64;
+    let mut ann_cycles = 0u64;
+    let r = common::bench("ANN: 16 queries, beam 48, reused searcher", 1, 5, || {
+        recall_sum = 0.0;
+        ann_cycles = 0;
+        for qv in &aqueries {
+            let r = searcher.search(&ix, qv, &aopts).unwrap();
+            recall_sum +=
+                reference::recall(&r.neighbors, &reference::knn_exact(&emb, qv, aparams.k));
+            ann_cycles += r.cycles;
+        }
+    });
+    let ann_qps = aqueries.len() as f64 / (r.mean_ms / 1e3);
+    let ann_recall_at_10 = recall_sum / aqueries.len() as f64;
+    // the fabric is bitwise the CPU oracle, so recall is a pure property
+    // of (embeddings, graph, beam) — recorded to catch index regressions
+    println!(
+        "    -> {ann_qps:.0} queries/s, recall@10 {ann_recall_at_10:.3}, \
+         {ann_cycles} sim cycles over the batch"
+    );
+    suite
+        .add(r)
+        .metric("ann_qps", ann_qps)
+        .metric("ann_recall_at_10", ann_recall_at_10)
+        .metric("ann_sim_cycles", ann_cycles as f64);
+    {
+        // fused lanes: same 16 queries through one 8-lane BatchInstance
+        let fq: Vec<ann::AnnQuery> =
+            aqueries.iter().map(|qv| (qv.clone(), ix.probe(qv))).collect();
+        let mut ab = BatchInstance::new(&ix.base().compiled, 8);
+        let fused = common::bench("  same, fused 8-lane batch passes", 1, 5, || {
+            for chunk in fq.chunks(8) {
+                for r in
+                    ann::search_batch(&mut ab, &ix.base().compiled, &ag, &emb, chunk, &aparams, &aopts)
+                {
+                    r.unwrap();
+                }
+            }
+        });
+        let ann_batch_speedup = r.mean_ms / fused.mean_ms;
+        println!("    -> fused lanes {ann_batch_speedup:.2}x vs reused per-query searcher");
+        suite.add(fused).metric("ann_batch_speedup", ann_batch_speedup);
+    }
+
     suite.write().expect("write bench json");
 }

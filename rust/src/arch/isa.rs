@@ -198,6 +198,25 @@ pub const PROG_ASTAR: &[Instr] = &[
     Instr::Halt,
 ];
 
+/// Beam-search ANN program (6 cycles on discovery, 3 when the candidate
+/// lies outside the beam radius, 4 when already seen). The incoming
+/// message is always 0 ([`crate::workloads::ann::BeamStep`]'s
+/// `combine`); `AddAuxSat` materializes the vertex's exact distance to
+/// the query from the `aux` DRF lane (the PE-local distance compute over
+/// the stored embedding), `HaltGtBound` prunes against the frozen beam
+/// radius in the bound register, and `CmpHaltGe` is the visited/dedupe
+/// guard (a discovered vertex's attribute *is* its distance, so any
+/// re-delivery compares equal and halts without a store). Receivers
+/// never scatter — expansion is host-synchronized per superstep.
+pub const PROG_ANN: &[Instr] = &[
+    Instr::Load,        // 0: acc = current attribute (INF = unseen)
+    Instr::AddAuxSat,   // 1: m = 0 + dist²(query, emb[v])
+    Instr::HaltGtBound, // 2: outside the beam radius — discard
+    Instr::CmpHaltGe,   // 3: already stored (m == acc) — no update
+    Instr::Store,       // 4: record the distance
+    Instr::Halt,        // 5
+];
+
 /// MIS decision automaton (see [`crate::workloads::mis`] for the attribute
 /// and message encodings). Paths: ignore 1 cycle, already-decided 3,
 /// become-OUT 7, decrement 8, become-IN 9.
@@ -313,6 +332,42 @@ mod tests {
         assert_eq!(attr, 4);
         assert_eq!(r.scatter, None);
         assert_eq!(r.cycles, 4);
+    }
+
+    #[test]
+    fn ann_discovery_path_is_6_cycles() {
+        // unseen vertex at distance 42, radius 100: store, never scatter
+        let ctx = ExecCtx { aux: 42, bound: 100 };
+        let (r, attr) = execute(PROG_ANN, 0, u32::MAX, ctx);
+        assert_eq!(attr, 42);
+        assert_eq!(r.scatter, None, "ANN receivers are host-expanded, never re-scatter");
+        assert_eq!(r.cycles, 6);
+    }
+
+    #[test]
+    fn ann_radius_prune_path_is_3_cycles() {
+        let ctx = ExecCtx { aux: 101, bound: 100 };
+        let (r, attr) = execute(PROG_ANN, 0, u32::MAX, ctx);
+        assert_eq!(attr, u32::MAX, "pruned candidate stays unseen");
+        assert_eq!(r.scatter, None);
+        assert_eq!(r.cycles, 3);
+    }
+
+    #[test]
+    fn ann_reseen_path_is_4_cycles() {
+        // attribute already holds the distance: CmpHaltGe dedupes the store
+        let ctx = ExecCtx { aux: 42, bound: 100 };
+        let (r, attr) = execute(PROG_ANN, 0, 42, ctx);
+        assert_eq!(attr, 42);
+        assert_eq!(r.scatter, None);
+        assert_eq!(r.cycles, 4);
+    }
+
+    #[test]
+    fn ann_boundary_distance_equal_to_radius_is_kept() {
+        let ctx = ExecCtx { aux: 100, bound: 100 };
+        let (_, attr) = execute(PROG_ANN, 0, u32::MAX, ctx);
+        assert_eq!(attr, 100, "radius is inclusive, matching the oracle's d <= radius");
     }
 
     #[test]

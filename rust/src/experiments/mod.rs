@@ -15,11 +15,13 @@
 //! | `table8`      | mapping quality | [`table8`] |
 //! | `scalability` | §5.2.5 Ext. LRN swapping | [`scalability`] |
 //! | `scenarios`   | extended workloads (beyond the paper) | [`scenarios`] |
+//! | `ann`         | beam-search ANN recall vs throughput (beyond the paper) | [`ann`] |
 //!
 //! Paper-fidelity note: the paper averages 100 graphs × 100 random
 //! sources per cell; the default [`ExpEnv`] uses a smaller sweep for
 //! iteration speed. `--paper-scale` restores the full counts.
 
+pub mod ann;
 pub mod fig03;
 pub mod fig04;
 pub mod fig10;
@@ -60,6 +62,7 @@ pub fn registry() -> Vec<(&'static str, &'static str, Driver)> {
         ("table8", "mapping quality: routing length, pkt wait, ALUin depth", table8::run),
         ("scalability", "Ext. LRN with runtime data swapping (§5.2.5)", scalability::run),
         ("scenarios", "extended workloads: PageRank, A* navigation, MIS", scenarios::run),
+        ("ann", "beam-search ANN: recall@10 vs MTEPS across beam widths", ann::run),
     ]
 }
 
@@ -90,7 +93,7 @@ mod tests {
         let ids: Vec<&str> = registry().iter().map(|(n, _, _)| *n).collect();
         for want in [
             "fig3", "fig4", "fig10", "fig11", "fig12", "fig13", "table2", "table5", "table6",
-            "table7", "table8", "scalability", "scenarios",
+            "table7", "table8", "scalability", "scenarios", "ann",
         ] {
             assert!(ids.contains(&want), "missing experiment {want}");
         }

@@ -1,0 +1,342 @@
+//! Quantized vertex embeddings and the candidate-set primitives of the
+//! beam-search ANN workload family (DESIGN.md §10).
+//!
+//! Everything here is deliberately *below* the workload layer: the CPU
+//! beam-search oracle in [`crate::graph::reference`] and the fabric
+//! driver in `crate::workloads::ann` share these exact types, so the two
+//! implementations can only differ in *who walks the graph*, never in
+//! distance math, candidate ordering or entry selection — the property
+//! the bitwise differential battery (`tests/ann.rs`) relies on.
+//!
+//! * [`Embeddings`] — one `u8`-quantized vector per vertex (the DRF-side
+//!   payload a PE holds next to its routing slice);
+//! * [`dist2`] — squared Euclidean distance, the workload's metric;
+//! * [`SmallestK`] — the bounded best-candidate set (catapult-db's
+//!   `SmallestK` semantics), totally ordered by `(dist, vid)` so every
+//!   backend evicts identically;
+//! * [`EntryHash`] — signed-random-projection (hyperplane) LSH buckets
+//!   for entry-point seeding, probed in deterministic Hamming order.
+
+use crate::graph::INF;
+use crate::util::Rng;
+use std::collections::BTreeMap;
+
+/// Squared Euclidean distance between two quantized vectors, clamped to
+/// `INF - 1` so `INF` stays the unambiguous *unseen* attribute encoding.
+/// (`dim · 255²` fits u32 up to dim ≈ 66 000; the clamp guards the API,
+/// not realistic inputs.)
+pub fn dist2(a: &[u8], b: &[u8]) -> u32 {
+    debug_assert_eq!(a.len(), b.len(), "dimension mismatch");
+    let mut acc = 0u64;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        let d = x as i64 - y as i64;
+        acc += (d * d) as u64;
+    }
+    acc.min((INF - 1) as u64) as u32
+}
+
+/// One `u8`-quantized embedding per vertex, row-major.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Embeddings {
+    dim: usize,
+    data: Vec<u8>,
+}
+
+impl Embeddings {
+    /// Wrap raw row-major data (`data.len()` must divide into `dim` rows).
+    pub fn new(dim: usize, data: Vec<u8>) -> Embeddings {
+        assert!(dim > 0, "embedding dimension must be positive");
+        assert_eq!(data.len() % dim, 0, "data length not a multiple of dim");
+        Embeddings { dim, data }
+    }
+
+    /// Clustered random embeddings: `centers` seed points uniform in the
+    /// quantized cube, each vertex = its (round-robin) center plus small
+    /// clamped noise. Deterministic in `seed`; cluster structure makes
+    /// both the kNN graph and the hyperplane buckets meaningful, which is
+    /// what the recall property tests sample.
+    pub fn clustered(n: usize, dim: usize, centers: usize, seed: u64) -> Embeddings {
+        let mut rng = Rng::new(seed);
+        let c = centers.max(1);
+        let mut ctr = vec![0u8; c * dim];
+        for x in ctr.iter_mut() {
+            *x = rng.below(256) as u8;
+        }
+        let mut data = vec![0u8; n * dim];
+        for v in 0..n {
+            let base = &ctr[(v % c) * dim..(v % c + 1) * dim];
+            for d in 0..dim {
+                // noise in [-24, 24], clamped into the quantized range
+                let noise = rng.below(49) as i32 - 24;
+                data[v * dim + d] = (base[d] as i32 + noise).clamp(0, 255) as u8;
+            }
+        }
+        Embeddings { dim, data }
+    }
+
+    /// Number of vectors.
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    /// True when no vectors are stored.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Vector dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The quantized vector of vertex `v`.
+    pub fn vector(&self, v: u32) -> &[u8] {
+        let i = v as usize * self.dim;
+        &self.data[i..i + self.dim]
+    }
+
+    /// Squared distance from vertex `v` to `query` (clamped below `INF`).
+    pub fn dist_to(&self, v: u32, query: &[u8]) -> u32 {
+        dist2(self.vector(v), query)
+    }
+
+    /// The sub-embedding of `ids` (row `i` = vector of `ids[i]`) — the
+    /// per-level embedding table of a hierarchical ANN index.
+    pub fn gather(&self, ids: &[u32]) -> Embeddings {
+        let mut data = Vec::with_capacity(ids.len() * self.dim);
+        for &v in ids {
+            data.extend_from_slice(self.vector(v));
+        }
+        Embeddings { dim: self.dim, data }
+    }
+}
+
+/// Bounded best-candidate set: keeps the `cap` smallest `(dist, vid)`
+/// pairs ever inserted, totally ordered by the tuple so ties break on
+/// vertex id. Insertion order never changes the final contents — the
+/// property that lets the host loop absorb a superstep's discoveries in
+/// any deterministic order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SmallestK {
+    cap: usize,
+    /// Ascending `(dist, vid)`.
+    items: Vec<(u32, u32)>,
+}
+
+impl SmallestK {
+    /// An empty set keeping at most `cap` candidates.
+    pub fn new(cap: usize) -> SmallestK {
+        assert!(cap > 0, "candidate set capacity must be positive");
+        SmallestK { cap, items: Vec::with_capacity(cap + 1) }
+    }
+
+    /// Insert a candidate; returns false when it was evicted immediately
+    /// (the set is full of strictly better `(dist, vid)` pairs).
+    pub fn insert(&mut self, dist: u32, vid: u32) -> bool {
+        let key = (dist, vid);
+        if self.items.len() == self.cap {
+            match self.items.last() {
+                Some(&worst) if key >= worst => return false,
+                _ => {}
+            }
+        }
+        let pos = self.items.partition_point(|&it| it < key);
+        if self.items.get(pos) == Some(&key) {
+            return true; // already present — idempotent
+        }
+        self.items.insert(pos, key);
+        self.items.truncate(self.cap);
+        true
+    }
+
+    /// True once `cap` candidates are held.
+    pub fn is_full(&self) -> bool {
+        self.items.len() == self.cap
+    }
+
+    /// Candidates held.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True when nothing was kept yet.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// The shrinking beam radius: the worst kept distance once the set is
+    /// full, else `u32::MAX` (no pruning while the beam is filling). This
+    /// is the value the fabric's bound register is loaded with.
+    pub fn radius(&self) -> u32 {
+        if self.is_full() {
+            self.items.last().map(|&(d, _)| d).unwrap_or(u32::MAX)
+        } else {
+            u32::MAX
+        }
+    }
+
+    /// Kept candidates in ascending `(dist, vid)` order.
+    pub fn items(&self) -> &[(u32, u32)] {
+        &self.items
+    }
+
+    /// The best `k` candidates as `(vid, dist)` rows — the ANN answer
+    /// shape shared with [`crate::graph::reference::knn_exact`].
+    pub fn top_k(&self, k: usize) -> Vec<(u32, u32)> {
+        self.items.iter().take(k).map(|&(d, v)| (v, d)).collect()
+    }
+}
+
+/// Hyperplane-hash entry selection: `planes` signed random projections
+/// bucket every vertex by its sign signature; a query probes buckets in
+/// ascending `(hamming distance, signature)` order until it has collected
+/// `want` entry points. Fully deterministic in the build seed.
+#[derive(Debug, Clone)]
+pub struct EntryHash {
+    planes: Vec<Vec<i32>>,
+    buckets: BTreeMap<u32, Vec<u32>>,
+}
+
+impl EntryHash {
+    /// Hash every vector of `emb` under `planes` seeded hyperplanes
+    /// (capped at 24 — buckets beyond `2^24` signatures stop helping).
+    pub fn build(emb: &Embeddings, planes: usize, seed: u64) -> EntryHash {
+        let planes = planes.clamp(1, 24);
+        let mut rng = Rng::new(seed ^ 0xA11_5EED);
+        let dims = emb.dim();
+        let planes: Vec<Vec<i32>> = (0..planes)
+            .map(|_| (0..dims).map(|_| rng.below(15) as i32 - 7).collect())
+            .collect();
+        let mut buckets: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+        let hash = EntryHash { planes, buckets: BTreeMap::new() };
+        for v in 0..emb.len() as u32 {
+            buckets.entry(hash.signature(emb.vector(v))).or_default().push(v);
+        }
+        // vertex ids arrive ascending, so every bucket list is sorted
+        EntryHash { planes: hash.planes, buckets }
+    }
+
+    /// The sign signature of a vector: bit `p` set iff the centered dot
+    /// product with plane `p` is non-negative.
+    pub fn signature(&self, x: &[u8]) -> u32 {
+        let mut sig = 0u32;
+        for (p, plane) in self.planes.iter().enumerate() {
+            let dot: i64 =
+                plane.iter().zip(x.iter()).map(|(&w, &v)| w as i64 * (v as i64 - 128)).sum();
+            if dot >= 0 {
+                sig |= 1 << p;
+            }
+        }
+        sig
+    }
+
+    /// Up to `want` entry-point vertex ids for `query`: occupied buckets
+    /// visited in ascending `(hamming(sig, qsig), sig)` order, vertices in
+    /// id order inside each bucket. Never empty for a non-empty index.
+    pub fn probe(&self, query: &[u8], want: usize) -> Vec<u32> {
+        let qsig = self.signature(query);
+        let mut order: Vec<(u32, u32)> =
+            self.buckets.keys().map(|&s| ((s ^ qsig).count_ones(), s)).collect();
+        order.sort_unstable();
+        let mut out = Vec::with_capacity(want);
+        for (_, sig) in order {
+            for &v in &self.buckets[&sig] {
+                if out.len() == want {
+                    return out;
+                }
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist2_is_squared_euclidean_and_symmetric() {
+        assert_eq!(dist2(&[0, 3], &[4, 0]), 25);
+        assert_eq!(dist2(&[4, 0], &[0, 3]), 25);
+        assert_eq!(dist2(&[7, 7, 7], &[7, 7, 7]), 0);
+        // extreme coordinates stay below INF
+        assert!(dist2(&[0; 64], &[255; 64]) < INF);
+    }
+
+    #[test]
+    fn embeddings_shape_and_determinism() {
+        let a = Embeddings::clustered(20, 8, 4, 9);
+        let b = Embeddings::clustered(20, 8, 4, 9);
+        assert_eq!(a, b, "generation must be deterministic");
+        assert_eq!(a.len(), 20);
+        assert_eq!(a.dim(), 8);
+        assert_eq!(a.vector(3).len(), 8);
+        // round-robin clustering keeps same-cluster points close
+        let near = dist2(a.vector(0), a.vector(4));
+        let far = (1..4).map(|c| dist2(a.vector(0), a.vector(c))).min().unwrap();
+        assert!(near <= far, "cluster siblings should be nearer than other centers");
+    }
+
+    #[test]
+    fn gather_selects_rows() {
+        let e = Embeddings::new(2, vec![1, 2, 3, 4, 5, 6]);
+        let g = e.gather(&[2, 0]);
+        assert_eq!(g.vector(0), &[5, 6]);
+        assert_eq!(g.vector(1), &[1, 2]);
+    }
+
+    #[test]
+    fn smallest_k_orders_and_evicts_by_dist_then_vid() {
+        let mut s = SmallestK::new(3);
+        assert_eq!(s.radius(), u32::MAX, "unfilled beam never prunes");
+        assert!(s.insert(9, 1));
+        assert!(s.insert(5, 2));
+        assert!(s.insert(5, 0));
+        assert!(s.is_full());
+        assert_eq!(s.radius(), 9);
+        // ties break on vid: (5,1) beats (5,2), evicting (9,1)
+        assert!(s.insert(5, 1));
+        assert_eq!(s.items(), &[(5, 0), (5, 1), (5, 2)]);
+        assert_eq!(s.radius(), 5);
+        assert!(!s.insert(5, 3), "worse tie must be rejected");
+        assert!(!s.insert(6, 0));
+        assert_eq!(s.top_k(2), vec![(0, 5), (1, 5)]);
+    }
+
+    #[test]
+    fn smallest_k_is_insertion_order_independent() {
+        let items = [(4u32, 7u32), (2, 9), (4, 1), (8, 0), (2, 2), (6, 6)];
+        let mut a = SmallestK::new(3);
+        let mut b = SmallestK::new(3);
+        for &(d, v) in &items {
+            a.insert(d, v);
+        }
+        for &(d, v) in items.iter().rev() {
+            b.insert(d, v);
+        }
+        assert_eq!(a.items(), b.items());
+    }
+
+    #[test]
+    fn entry_hash_probe_is_deterministic_and_query_aware() {
+        let emb = Embeddings::clustered(64, 8, 4, 3);
+        let h = EntryHash::build(&emb, 6, 11);
+        let q = emb.vector(5).to_vec();
+        let a = h.probe(&q, 8);
+        let b = h.probe(&q, 8);
+        assert_eq!(a, b, "probing must be deterministic");
+        assert_eq!(a.len(), 8);
+        // the query vertex's own bucket is at Hamming distance 0, so the
+        // probe must surface a same-bucket (= same-signature) vertex first
+        let sig5 = h.signature(emb.vector(5));
+        assert_eq!(h.signature(emb.vector(a[0])), sig5);
+        // asking for more entries than vertices returns everything once
+        let all = h.probe(&q, 1000);
+        assert_eq!(all.len(), 64);
+        let mut sorted = all.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 64, "no vertex may be listed twice");
+    }
+}

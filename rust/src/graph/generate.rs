@@ -7,7 +7,7 @@
 //! whose degree distribution and diameter class match road networks
 //! (avg degree ≈ 2.3–3.5, high diameter, planar-ish locality).
 
-use super::Graph;
+use super::{embed, Graph};
 use crate::util::Rng;
 
 /// Edge weights for road networks: travel costs 1..=9 (SSSP uses them;
@@ -237,6 +237,47 @@ fn adjust_edges(g: &Graph, lo: usize, hi: usize, rng: &mut Rng) -> Graph {
     g2
 }
 
+/// Undirected k-nearest-neighbor proximity graph over an embedding
+/// table: every vertex links to its `deg` nearest neighbors by
+/// `(dist², vid)` (the [`embed::SmallestK`] total order), deduped as
+/// undirected pairs, plus the consecutive-id backbone chain `v — v+1`
+/// that guarantees connectivity (ids are generation-ordered, so chain
+/// hops are usually cluster-local). Edge weights are 1: the ANN vertex
+/// program recomputes exact distances receiver-locally and never reads
+/// stored weights. Fully deterministic in `emb`.
+pub fn knn_graph(emb: &embed::Embeddings, deg: usize) -> Graph {
+    let n = emb.len();
+    let deg = deg.max(1);
+    let mut pairs = std::collections::BTreeSet::new();
+    for u in 0..n as u32 {
+        let mut near = embed::SmallestK::new(deg);
+        let uv = emb.vector(u);
+        for v in 0..n as u32 {
+            if v != u {
+                near.insert(embed::dist2(uv, emb.vector(v)), v);
+            }
+        }
+        for &(v, _) in &near.top_k(deg) {
+            pairs.insert((u.min(v), u.max(v)));
+        }
+    }
+    for v in 1..n as u32 {
+        pairs.insert((v - 1, v));
+    }
+    let edges: Vec<(u32, u32, u32)> = pairs.into_iter().map(|(u, v)| (u, v, 1)).collect();
+    Graph::from_edges(n, &edges, false)
+}
+
+/// The ANN workload's dataset pair: clustered quantized embeddings
+/// ([`embed::Embeddings::clustered`], 4 centers) and their degree-`deg`
+/// [`knn_graph`] — the proximity graph beam search navigates and the
+/// embedding table the PEs hold. Deterministic in `seed`.
+pub fn ann_graph(n: usize, dim: usize, deg: usize, seed: u64) -> (Graph, embed::Embeddings) {
+    let emb = embed::Embeddings::clustered(n, dim, 4, seed);
+    let g = knn_graph(&emb, deg);
+    (g, emb)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -293,5 +334,34 @@ mod tests {
         let a = synthetic(64, 128, 9);
         let b = synthetic(64, 128, 9);
         assert_eq!(a.arcs().collect::<Vec<_>>(), b.arcs().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn knn_graph_is_connected_undirected_and_proximal() {
+        let emb = embed::Embeddings::clustered(48, 8, 4, 17);
+        let g = knn_graph(&emb, 4);
+        assert_eq!(g.num_vertices(), 48);
+        assert!(!g.is_directed());
+        assert!(g.is_connected_from(0), "backbone chain guarantees connectivity");
+        // every vertex's nearest neighbor must be linked (it is in the
+        // top-k list of at least one endpoint)
+        for u in 0..48u32 {
+            let nn = (0..48u32)
+                .filter(|&v| v != u)
+                .min_by_key(|&v| (embed::dist2(emb.vector(u), emb.vector(v)), v))
+                .unwrap();
+            let linked = g.neighbors(u).any(|(v, _)| v == nn) || nn == u + 1 || nn + 1 == u;
+            assert!(linked, "vertex {u} not linked to nearest neighbor {nn}");
+        }
+    }
+
+    #[test]
+    fn ann_graph_deterministic_and_weighted_unit() {
+        let (g1, e1) = ann_graph(32, 8, 4, 23);
+        let (g2, e2) = ann_graph(32, 8, 4, 23);
+        assert_eq!(e1, e2);
+        assert_eq!(g1.arcs().collect::<Vec<_>>(), g2.arcs().collect::<Vec<_>>());
+        assert_eq!(e1.len(), 32);
+        assert!(g1.arcs().all(|(_, _, w)| w == 1), "ANN edges carry unit weights");
     }
 }

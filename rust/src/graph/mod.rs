@@ -1,9 +1,11 @@
 //! Graph substrate: CSR graphs, generators for the Table-4 dataset groups,
 //! the deterministic edge-cut partitioner for multi-chip sharding
-//! ([`partition`]), and native reference algorithms used for functional
-//! validation.
+//! ([`partition`]), quantized vertex embeddings and candidate-set
+//! primitives for the ANN workload family ([`embed`]), and native
+//! reference algorithms used for functional validation.
 
 pub mod datasets;
+pub mod embed;
 pub mod generate;
 pub mod partition;
 pub mod reference;

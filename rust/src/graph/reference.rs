@@ -4,7 +4,7 @@
 //! and the dense PJRT golden model: every FLIP run's final vertex
 //! attributes must equal these outputs exactly.
 
-use super::{Graph, INF};
+use super::{embed, Graph, INF};
 use std::collections::BinaryHeap;
 use std::collections::VecDeque;
 
@@ -275,6 +275,129 @@ pub fn greedy_mis(g: &Graph, prio: &[u32]) -> Vec<u32> {
     in_set
 }
 
+// ---- Approximate nearest neighbors (beam search over a proximity graph)
+
+/// Exact k-nearest-neighbors by brute force: the `k` smallest
+/// `(dist, vid)` pairs over every stored vector, returned as
+/// `(vid, dist)` rows. The ground truth the ANN battery scores recall
+/// against — and, for `k = |V|`, a total ordering of the whole dataset.
+pub fn knn_exact(emb: &embed::Embeddings, query: &[u8], k: usize) -> Vec<(u32, u32)> {
+    let mut best = embed::SmallestK::new(k.max(1));
+    for v in 0..emb.len() as u32 {
+        best.insert(emb.dist_to(v, query), v);
+    }
+    best.top_k(k)
+}
+
+/// Fraction of `exact` ids present in `got` (recall@k when both lists
+/// hold k rows). Recall is a property of the *algorithm* — the simulator
+/// is bit-exact to [`beam_search`], which is itself approximate.
+pub fn recall(got: &[(u32, u32)], exact: &[(u32, u32)]) -> f64 {
+    if exact.is_empty() {
+        return 1.0;
+    }
+    let hit = exact.iter().filter(|(v, _)| got.iter().any(|(g, _)| g == v)).count();
+    hit as f64 / exact.len() as f64
+}
+
+/// Full outcome of one CPU beam search: the answer, the final per-vertex
+/// distance attributes (`INF` = never discovered) and the superstep
+/// count. The fabric run must reproduce *all three* bitwise.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BeamTrace {
+    /// Best `k` candidates as `(vid, dist)`, ascending `(dist, vid)`.
+    pub neighbors: Vec<(u32, u32)>,
+    /// Final attributes: discovered vertices hold their exact distance.
+    pub attrs: Vec<u32>,
+    /// Host-synchronized expansion supersteps executed.
+    pub supersteps: u64,
+}
+
+/// One beam-search superstep exactly as the fabric computes it: every
+/// *expanding* vertex scatters along its out-arcs; a receiver `v` stores
+/// its distance `d = dist²(query, emb[v])` iff `d ≤ radius` (the frozen
+/// bound register) and `d < attrs[v]` (the `CmpBrGe` dedupe guard).
+/// Order-independent: `d` depends only on the receiver, so duplicate
+/// deliveries are idempotent — the determinism contract of the ANN
+/// vertex program (`workloads::ann::BeamStep::reference` calls this).
+pub fn beam_superstep(
+    g: &Graph,
+    emb: &embed::Embeddings,
+    query: &[u8],
+    attrs: &[u32],
+    expand: &[bool],
+    radius: u32,
+) -> Vec<u32> {
+    let mut out = attrs.to_vec();
+    for (u, v, _) in g.arcs() {
+        if !expand[u as usize] {
+            continue;
+        }
+        let d = emb.dist_to(v, query);
+        if d <= radius && d < attrs[v as usize] {
+            out[v as usize] = d;
+        }
+    }
+    out
+}
+
+/// Deterministic CPU beam search — the reference the simulated fabric
+/// must match *bitwise* (`tests/ann.rs`). Entry points seed the
+/// candidate set with their exact distances; each superstep expands
+/// every not-yet-visited beam member at once (the batch-beam rule: one
+/// fabric invocation per superstep, all frontier scatter in parallel)
+/// under the radius frozen at superstep start; discoveries re-enter the
+/// [`embed::SmallestK`] beam, shrinking the radius monotonically. Ends
+/// when the beam holds no unvisited candidate.
+pub fn beam_search(
+    g: &Graph,
+    emb: &embed::Embeddings,
+    query: &[u8],
+    entries: &[u32],
+    beam: usize,
+    k: usize,
+) -> BeamTrace {
+    let n = g.num_vertices();
+    assert_eq!(emb.len(), n, "one embedding per vertex");
+    let mut attrs = vec![INF; n];
+    let mut visited = vec![false; n];
+    let mut cand = embed::SmallestK::new(beam.max(1));
+    for &e in entries {
+        if attrs[e as usize] != INF {
+            continue; // duplicate entry
+        }
+        let d = emb.dist_to(e, query);
+        attrs[e as usize] = d;
+        cand.insert(d, e);
+    }
+    let mut expand = vec![false; n];
+    let mut supersteps = 0u64;
+    loop {
+        expand.iter_mut().for_each(|x| *x = false);
+        let mut any = false;
+        for &(_, v) in cand.items() {
+            if !visited[v as usize] {
+                visited[v as usize] = true;
+                expand[v as usize] = true;
+                any = true;
+            }
+        }
+        if !any {
+            break;
+        }
+        let radius = cand.radius();
+        let next = beam_superstep(g, emb, query, &attrs, &expand, radius);
+        for v in 0..n {
+            if next[v] != attrs[v] {
+                cand.insert(next[v], v as u32);
+            }
+        }
+        attrs = next;
+        supersteps += 1;
+    }
+    BeamTrace { neighbors: cand.top_k(k), attrs, supersteps }
+}
+
 /// Edges traversed by a frontier-driven run: every arc out of every vertex
 /// that is reached (the MTEPS numerator used across all architectures).
 pub fn traversed_edges(g: &Graph, levels_or_dist: &[u32]) -> usize {
@@ -396,6 +519,55 @@ mod tests {
         // distance settles only as far as guarded relaxation allows
         assert_eq!(d[3], 6, "on-path neighbor still relaxed from 2");
         assert_eq!(d[4], INF, "beyond-budget vertex never relaxed");
+    }
+
+    #[test]
+    fn knn_exact_orders_by_dist_then_vid() {
+        // 1-D vectors at 0, 10, 10, 200
+        let emb = embed::Embeddings::new(1, vec![0, 10, 10, 200]);
+        let got = knn_exact(&emb, &[9], 3);
+        assert_eq!(got, vec![(1, 1), (2, 1), (0, 81)]);
+        assert_eq!(recall(&got, &got), 1.0);
+        assert_eq!(recall(&got[..1], &got), 1.0 / 3.0);
+    }
+
+    #[test]
+    fn beam_search_on_path_graph_finds_exact_neighbors() {
+        // path 0-1-2-3-4 with 1-D embeddings equal to 10·vid: the graph
+        // respects embedding locality, so a wide-enough beam is exact
+        let g = line(5);
+        let emb = embed::Embeddings::new(1, vec![0, 10, 20, 30, 40]);
+        let t = beam_search(&g, &emb, &[22], &[0], 5, 3);
+        assert_eq!(t.neighbors, knn_exact(&emb, &[22], 3));
+        assert!(t.attrs.iter().all(|&a| a != INF), "beam 5 visits the whole path");
+        assert!(t.supersteps >= 2, "expansion must walk hop by hop");
+    }
+
+    #[test]
+    fn beam_search_radius_prunes_far_vertices() {
+        // beam 1 greedy descent from the far end: once the beam holds the
+        // best candidate, vertices past the radius are never stored
+        let g = line(5);
+        let emb = embed::Embeddings::new(1, vec![0, 10, 20, 30, 40]);
+        let t = beam_search(&g, &emb, &[0], &[4], 1, 1);
+        assert_eq!(t.neighbors, vec![(0, 0)]);
+        assert_eq!(t.attrs[0], 0, "query vertex reached");
+        let trace2 = beam_search(&g, &emb, &[0], &[4], 1, 1);
+        assert_eq!(t, trace2, "oracle must be deterministic");
+    }
+
+    #[test]
+    fn beam_superstep_is_expansion_order_independent() {
+        let g = Graph::from_edges(4, &[(0, 2, 1), (1, 2, 1), (2, 3, 1)], false);
+        let emb = embed::Embeddings::new(1, vec![0, 4, 8, 12]);
+        let attrs = vec![16, 25, INF, INF];
+        let expand = vec![true, true, false, false];
+        let out = beam_superstep(&g, &emb, &[0], &attrs, &expand, 100);
+        // both 0 and 1 deliver to 2; d(2) = 64 stored once
+        assert_eq!(out, vec![16, 25, 64, INF]);
+        // radius pruning suppresses the store, attrs unchanged
+        let pruned = beam_superstep(&g, &emb, &[0], &attrs, &expand, 63);
+        assert_eq!(pruned, attrs);
     }
 
     #[test]

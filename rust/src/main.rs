@@ -3,12 +3,14 @@
 //! ```text
 //! flip exp <id|all> [--graphs N] [--sources N] [--seed S] [--paper-scale]
 //!                   [--set key=val]... [--save]
-//! flip run --workload <bfs|sssp|wcc|pagerank|astar|mis>
+//! flip run --workload <bfs|sssp|wcc|pagerank|astar|mis|ann>
 //!          --group <tree|srn|lrn|syn|extlrn>
 //!          [--idx I] [--source V] [--target V] [--rounds N]
 //!          [--golden] [--set key=val]...
+//! flip run --workload ann [--n N] [--dim D] [--deg K] [--queries Q]
+//!          [--k K] [--beam B] [--levels L] [--seed S] [--json PATH]
 //! flip serve --group <g> [--idx I] [--queries N] [--threads T]
-//!            [--workload bfs|sssp|wcc|nav|mix] [--shards K] [--seed S]
+//!            [--workload bfs|sssp|wcc|nav|ann|mix] [--shards K] [--seed S]
 //!            [--faults SEED] [--deadline CYCLES] [--retries N]
 //!            [--batch-lanes B] [--json PATH] [--set key=val]...
 //! flip serve --duration SECS [--qps-target N] [--update-rate R]
@@ -133,10 +135,12 @@ fn print_usage() {
         println!("      {id:<12} {desc}");
     }
     println!("  run            single cycle-accurate run (--workload, --group, --idx, --source;");
-    println!("                 extended workloads: pagerank [--rounds], astar [--target], mis)");
+    println!("                 extended workloads: pagerank [--rounds], astar [--target], mis;");
+    println!("                 ann ignores --group and takes [--n] [--dim] [--deg] [--queries]");
+    println!("                 [--k] [--beam] [--levels] [--json] over clustered embeddings)");
     println!("  serve          query-serving engine: compile once, serve a random query batch");
     println!("                 (--group, [--idx], [--queries N], [--threads T],");
-    println!("                 [--workload bfs|sssp|wcc|nav|mix], [--shards K] for a");
+    println!("                 [--workload bfs|sssp|wcc|nav|ann|mix], [--shards K] for a");
     println!("                 K-chip partitioned machine; [--faults SEED] lossy links,");
     println!("                 [--deadline CYCLES] per-query budget, [--retries N],");
     println!("                 [--json PATH] machine-readable report;");
@@ -166,8 +170,13 @@ fn cmd_exp(args: &Args) -> Result<()> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let env = args.env()?;
-    let group = args.group()?;
     let w = args.workload()?;
+    if matches!(w, Workload::Ann) {
+        // ANN runs over a generated embedding/proximity pair, not a
+        // dataset group (the groups carry no embedding tables)
+        return cmd_run_ann(args, &env);
+    }
+    let group = args.group()?;
     let idx: usize = args.flag("idx").unwrap_or("0").parse()?;
     let g = datasets::generate_one(group, idx, env.seed);
     let source: u32 = args.flag("source").unwrap_or("0").parse()?;
@@ -309,6 +318,83 @@ fn cmd_run_extended(
     Ok(())
 }
 
+/// `flip run --workload ann` — one-shot ANN driver (DESIGN.md §10):
+/// generate clustered embeddings plus their kNN proximity graph, compile
+/// an [`flip::workloads::ann::AnnIndex`] (one machine image per level),
+/// drive a seeded query batch through the hierarchy, and report mean
+/// recall@k against exact k-NN alongside fabric throughput. `--json
+/// PATH` writes the `ann_recall_at_10` / `ann_qps` metrics the CI smoke
+/// asserts on.
+fn cmd_run_ann(args: &Args, env: &ExpEnv) -> Result<()> {
+    use flip::graph::{generate, reference};
+    use flip::workloads::ann::{AnnIndex, AnnParams, AnnSearcher};
+    let n: usize = args.flag("n").unwrap_or("256").parse()?;
+    let dim: usize = args.flag("dim").unwrap_or("8").parse()?;
+    let deg: usize = args.flag("deg").unwrap_or("6").parse()?;
+    let queries: usize = args.flag("queries").unwrap_or("16").parse()?;
+    let k: usize = args.flag("k").unwrap_or("10").parse()?;
+    let beam: usize = args.flag("beam").unwrap_or("48").parse()?;
+    let levels: usize = args.flag("levels").unwrap_or("1").parse()?;
+    let opts = SimOptions {
+        trace_parallelism: args.has("trace"),
+        max_cycles: 2_000_000_000,
+        watchdog: 5_000_000,
+        ..Default::default()
+    };
+    let (g, emb) = generate::ann_graph(n, dim, deg, env.seed);
+    let params = AnnParams { k, beam, deg, ..AnnParams::default() };
+    let t0 = std::time::Instant::now();
+    let ix = AnnIndex::build(&g, &emb, levels, &env.cfg, env.seed, params);
+    let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let mut searcher = AnnSearcher::new(&ix);
+    let mut rng = flip::util::Rng::new(env.seed ^ 0xA22);
+    let t1 = std::time::Instant::now();
+    let mut total_recall = 0.0;
+    let (mut cycles, mut edges, mut steps) = (0u64, 0u64, 0u64);
+    for _ in 0..queries.max(1) {
+        let qv = emb.vector(rng.below(n as u64) as u32).to_vec();
+        let r = searcher.search(&ix, &qv, &opts)?;
+        total_recall += reference::recall(&r.neighbors, &reference::knn_exact(&emb, &qv, k));
+        cycles += r.cycles;
+        edges += r.edges;
+        steps += r.supersteps;
+    }
+    let wall = t1.elapsed().as_secs_f64();
+    let nq = queries.max(1) as f64;
+    let mean_recall = total_recall / nq;
+    let qps = if wall > 0.0 { nq / wall } else { 0.0 };
+    let mteps = if cycles > 0 {
+        edges as f64 / 1e6 / (cycles as f64 / (env.cfg.freq_mhz as f64 * 1e6))
+    } else {
+        0.0
+    };
+    println!(
+        "ANN over clustered embeddings (|V|={n}, dim={dim}, deg={deg}, {} level(s)):",
+        ix.levels.len()
+    );
+    println!("  index build       : {build_ms:.1} ms (once)");
+    println!("  queries           : {} (beam {beam}, k {k})", queries.max(1));
+    println!("  mean recall@{k}   : {mean_recall:.3}");
+    println!("  supersteps/query  : {:.1}", steps as f64 / nq);
+    println!("  sim cycles        : {cycles}");
+    println!("  MTEPS             : {mteps:.2}");
+    println!("  queries/s (wall)  : {qps:.1}");
+    if let Some(path) = args.flag("json") {
+        let mut sink = report::MetricsSink::new("ann");
+        sink.result("batch")
+            .metric("queries", nq)
+            .metric(&format!("ann_recall_at_{k}"), mean_recall)
+            .metric("ann_qps", qps)
+            .metric("mteps", mteps)
+            .metric("sim_cycles", cycles as f64)
+            .metric("supersteps", steps as f64)
+            .metric("levels", ix.levels.len() as f64);
+        sink.write_to(std::path::Path::new(path))?;
+        println!("  [json written to {path}]");
+    }
+    Ok(())
+}
+
 /// `flip serve` — the compile-once/serve-many path (DESIGN.md §6): build
 /// one engine over a mapped graph and drain a random query batch through
 /// it, reporting throughput. `--workload mix` interleaves BFS, SSSP and
@@ -351,6 +437,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         )
         .into());
     }
+    if kind == "ann" && shards >= 1 {
+        return Err("ANN serving needs a single-chip engine (omit --shards)".into());
+    }
     let n = g.num_vertices() as u64;
     let mut rng = flip::util::Rng::new(env.seed ^ 0x5E21);
     let jobs: Vec<Job> = (0..queries)
@@ -362,6 +451,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 "sssp" => Ok(Job::Workload(Workload::Sssp, s)),
                 "wcc" => Ok(Job::Workload(Workload::Wcc, s)),
                 "nav" | "astar" => Ok(Job::Navigate { source: s, target: t }),
+                "ann" => Ok(Job::AnnSearch(s)),
                 "mix" => Ok(match i % 3 {
                     0 => Job::Workload(Workload::Bfs, s),
                     1 => Job::Workload(Workload::Sssp, s),
@@ -406,11 +496,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         let pair = flip::experiments::harness::CompiledPair::build(&g, &env.cfg, env.seed);
         println!("  compile + map     : {:.1} ms (once)", t0.elapsed().as_secs_f64() * 1e3);
+        // ANN queries need an index: synthetic clustered embeddings over
+        // the served graph's vertices, single-level (DESIGN.md §10)
+        let ann_ix = (kind == "ann").then(|| {
+            let emb =
+                flip::graph::embed::Embeddings::clustered(g.num_vertices(), 8, 4, env.seed);
+            flip::workloads::ann::AnnIndex::build(
+                &g,
+                &emb,
+                1,
+                &env.cfg,
+                env.seed,
+                flip::workloads::ann::AnnParams::default(),
+            )
+        });
         let mut engine = Engine::new(&pair)
             .with_workers(threads)
             .with_batch_lanes(batch_lanes)
             .with_opts(opts)
             .with_policy(policy);
+        if let Some(ix) = ann_ix.as_ref() {
+            engine = engine.with_ann(ix);
+        }
         engine.serve(&jobs)
     };
     let errors = report.results.iter().filter(|r| r.is_err()).count();
@@ -525,6 +632,21 @@ fn cmd_serve_stream(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let mut srv = StreamServer::new(store, cfg);
+    if kind == "ann" {
+        if shards >= 1 {
+            return Err("ANN serving needs a single-chip engine (omit --shards)".into());
+        }
+        let emb = flip::graph::embed::Embeddings::clustered(g.num_vertices(), 8, 4, env.seed);
+        let ix = flip::workloads::ann::AnnIndex::build(
+            &g,
+            &emb,
+            1,
+            &env.cfg,
+            env.seed,
+            flip::workloads::ann::AnnParams::default(),
+        );
+        srv = srv.with_ann(std::sync::Arc::new(ix));
+    }
     println!(
         "streaming {kind} queries on {} graph #{idx} (|V|={}, |E|={}) for {duration}s \
          at {qps_target} qps target, {update_rate} updates/s, {threads} workers",
@@ -543,6 +665,7 @@ fn cmd_serve_stream(args: &Args) -> Result<()> {
             "sssp" => Job::Workload(Workload::Sssp, s),
             "wcc" => Job::Workload(Workload::Wcc, s),
             "nav" | "astar" => Job::Navigate { source: s, target: t },
+            "ann" => Job::AnnSearch(s),
             "mix" => match i % 3 {
                 0 => Job::Workload(Workload::Bfs, s),
                 1 => Job::Workload(Workload::Sssp, s),

@@ -43,6 +43,20 @@
 //! statement above is unchanged. Navigate and sharded jobs keep the
 //! per-query path; `batch_lanes <= 1` disables fusing entirely.
 //!
+//! **ANN queries (DESIGN.md §10).** With an index attached
+//! ([`Engine::with_ann`]), [`Job::AnnSearch`] jobs run the beam-search
+//! ANN workload family ([`crate::workloads::ann`]) on the driver thread:
+//! the beam loop is host-synchronized, so the per-superstep fabric passes
+//! are the parallel work — on a single-level index with `batch_lanes > 1`
+//! same-batch ANN queries fuse into the same [`BatchInstance`] lane bank
+//! the trio uses ([`crate::workloads::ann::search_batch`]), and each
+//! query's answer is bitwise the sequential [`crate::workloads::ann::search`]
+//! result. Hierarchical indexes take the per-query resume-port path on a
+//! cached [`AnnSearcher`]. Without an index (or on a sharded target) ANN
+//! jobs reject as data — the sharded ANN path is
+//! [`crate::workloads::ann::search_sharded`], proven equivalent in
+//! `tests/ann.rs`.
+//!
 //! **Backpressure.** The engine is batch-synchronous: callers hand it a
 //! bounded job slice and block until the [`BatchReport`] is complete.
 //! There are no unbounded internal queues — admission control is the
@@ -70,12 +84,13 @@
 pub mod stream;
 
 use crate::experiments::harness::{CompiledPair, ShardedPair};
-use crate::metrics::RunResult;
+use crate::metrics::{RunResult, SimMetrics};
 use crate::sim::batch::BatchInstance;
 use crate::sim::error::SimError;
 use crate::sim::flip::{SimInstance, SimOptions};
 use crate::sim::multichip;
 use crate::util::WorkerPool;
+use crate::workloads::ann::{self, AnnIndex, AnnSearcher};
 use crate::workloads::navigation::Landmarks;
 use crate::workloads::Workload;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -100,6 +115,11 @@ pub enum Job {
         /// Query destination vertex.
         target: u32,
     },
+    /// Approximate-nearest-neighbor search ([`crate::workloads::ann`]):
+    /// the `k` stored vertices nearest to this base-graph vertex's
+    /// embedding, under the attached index's parameters. Requires
+    /// [`Engine::with_ann`] and a single-chip target.
+    AnnSearch(u32),
 }
 
 impl Job {
@@ -108,6 +128,7 @@ impl Job {
         match *self {
             Job::Workload(w, s) => format!("{} from {s}", w.name()),
             Job::Navigate { source, target } => format!("navigate {source} -> {target}"),
+            Job::AnnSearch(q) => format!("ANN near {q}"),
         }
     }
 }
@@ -179,6 +200,10 @@ pub struct QueryResult {
     /// For [`Job::Navigate`]: the exact shortest distance
     /// ([`crate::graph::INF`] = unreachable).
     pub distance: Option<u32>,
+    /// For [`Job::AnnSearch`]: the best `(vid, dist)` rows, ascending
+    /// `(dist, vid)` — the [`crate::workloads::ann::AnnResult::neighbors`]
+    /// shape.
+    pub neighbors: Option<Vec<(u32, u32)>>,
 }
 
 /// Throughput report for one served batch.
@@ -301,6 +326,11 @@ pub struct Engine<'a> {
     batch_lanes: usize,
     /// Reusable lane bank for fused batches, created on first use.
     batcher: Option<BatchInstance>,
+    /// ANN index served by [`Job::AnnSearch`] jobs ([`Engine::with_ann`]).
+    ann: Option<&'a AnnIndex>,
+    /// Reusable per-level machine instances for hierarchical ANN queries,
+    /// created on the first such query and kept across batches.
+    ann_searcher: Option<AnnSearcher>,
     /// Persistent worker pool for per-query fan-out and (single-job)
     /// multichip superstep parallelism; created lazily, kept across
     /// batches so the steady state spawns no threads.
@@ -333,6 +363,8 @@ impl<'a> Engine<'a> {
             workers,
             batch_lanes: DEFAULT_BATCH_LANES,
             batcher: None,
+            ann: None,
+            ann_searcher: None,
             pool: None,
         }
     }
@@ -377,6 +409,16 @@ impl<'a> Engine<'a> {
         self.policy = policy;
     }
 
+    /// Attach a compiled ANN index ([`crate::workloads::ann::AnnIndex`]):
+    /// [`Job::AnnSearch`] jobs resolve against it. The index's base level
+    /// must be built over this engine's graph (one embedding per vertex);
+    /// a size mismatch rejects the queries as data.
+    pub fn with_ann(mut self, ix: &'a AnnIndex) -> Engine<'a> {
+        self.ann = Some(ix);
+        self.ann_searcher = None; // rebuilt lazily for the new index
+        self
+    }
+
     /// Build the ALT landmarks now (panics on directed graphs, like
     /// [`Landmarks::build`]). Without this, landmarks are built lazily
     /// when the first [`Job::Navigate`] batch arrives.
@@ -406,6 +448,9 @@ impl<'a> Engine<'a> {
             Vec::with_capacity(jobs.len());
         slots.resize_with(jobs.len(), || None);
 
+        // ---- ANN jobs (driver-thread beam search, DESIGN.md §10) --------
+        self.serve_ann(jobs, &mut slots);
+
         // ---- fused batched lanes (single-chip trio jobs) ----------------
         // group by workload kind, dedupe identical (workload, source)
         // jobs, fuse the distinct sources into multi-lane passes; every
@@ -417,6 +462,9 @@ impl<'a> Engine<'a> {
                 // (workload, distinct sources, job indices per source)
                 let mut kinds: Vec<(Workload, Vec<u32>, Vec<Vec<usize>>)> = Vec::new();
                 for (i, &job) in jobs.iter().enumerate() {
+                    if slots[i].is_some() {
+                        continue; // answered by the ANN path above
+                    }
                     let Job::Workload(w, s) = job else {
                         rest.push(i);
                         continue;
@@ -455,7 +503,7 @@ impl<'a> Engine<'a> {
                     }
                 }
             }
-            _ => rest.extend(0..jobs.len()),
+            _ => rest.extend((0..jobs.len()).filter(|&i| slots[i].is_none())),
         }
 
         // ---- per-query path (Navigate, sharded, rejected, legacy) -------
@@ -550,6 +598,181 @@ impl<'a> Engine<'a> {
             results,
         }
     }
+
+    /// Answer every [`Job::AnnSearch`] in `jobs` into `slots` — see
+    /// [`serve_ann_queries`] for the routing contract (fused lanes on a
+    /// single-level index, cached [`AnnSearcher`] otherwise, rejections
+    /// as data).
+    fn serve_ann(&mut self, jobs: &[Job], slots: &mut [Option<Result<QueryResult, QueryError>>]) {
+        let ann_jobs: Vec<(usize, u32)> = jobs
+            .iter()
+            .enumerate()
+            .filter_map(|(i, j)| match *j {
+                Job::AnnSearch(q) => Some((i, q)),
+                _ => None,
+            })
+            .collect();
+        if ann_jobs.is_empty() {
+            return;
+        }
+        let queries: Vec<u32> = ann_jobs.iter().map(|&(_, q)| q).collect();
+        let (results, _passes) = serve_ann_queries(
+            self.ann,
+            matches!(self.target, Target::Single(_)),
+            self.target.graph().num_vertices(),
+            &mut self.batcher,
+            &mut self.ann_searcher,
+            self.batch_lanes,
+            &self.opts,
+            self.policy,
+            &queries,
+        );
+        for (&(i, _), r) in ann_jobs.iter().zip(results) {
+            slots[i] = Some(r);
+        }
+    }
+}
+
+/// Answer a list of ANN query vertices against `ix` — the one ANN serve
+/// path shared by the batch [`Engine`] and the streaming
+/// [`stream::StreamServer`]. ANN runs on the caller's thread: the beam
+/// loop is host-synchronized, so the per-superstep fabric passes are the
+/// parallel work — on a single-level index with `lanes > 1` the queries
+/// fuse into [`BatchInstance`] lane passes ([`ann::search_batch`],
+/// chunked at lane width), each answer bitwise the sequential
+/// [`ann::search`] result; hierarchical indexes take the per-query
+/// resume-port path on the cached [`AnnSearcher`]. No index, a sharded
+/// target (`!single_chip`), an index/graph size mismatch, or an
+/// out-of-range query vertex reject as data. Returns per-query results
+/// in order plus the fabric invocations performed (a fused pass counts
+/// once — the streaming `sim_runs` accounting).
+#[allow(clippy::too_many_arguments)]
+fn serve_ann_queries(
+    ix: Option<&AnnIndex>,
+    single_chip: bool,
+    n: usize,
+    batcher: &mut Option<BatchInstance>,
+    searcher: &mut Option<AnnSearcher>,
+    lanes: usize,
+    opts: &SimOptions,
+    policy: ServePolicy,
+    queries: &[u32],
+) -> (Vec<Result<QueryResult, QueryError>>, u64) {
+    let reject = |q: u32, msg: String| {
+        Err(QueryError {
+            job: Job::AnnSearch(q).describe(),
+            kind: QueryErrorKind::Rejected,
+            cycles: 0,
+            msg,
+        })
+    };
+    let Some(ix) = ix else {
+        let out = queries
+            .iter()
+            .map(|&q| reject(q, "no ANN index attached (with_ann)".to_string()))
+            .collect();
+        return (out, 0);
+    };
+    if !single_chip {
+        let out = queries
+            .iter()
+            .map(|&q| {
+                reject(
+                    q,
+                    "ANN serving needs a single-chip target \
+                     (sharded search: workloads::ann::search_sharded)"
+                        .to_string(),
+                )
+            })
+            .collect();
+        return (out, 0);
+    }
+    let base = ix.base();
+    if base.emb.len() != n {
+        let out = queries
+            .iter()
+            .map(|&q| {
+                reject(
+                    q,
+                    format!("ANN index over {} vertices, serving graph has {n}", base.emb.len()),
+                )
+            })
+            .collect();
+        return (out, 0);
+    }
+    // attempt-0 semantics of answer_budgeted (full deadline budget,
+    // reseeded fault plan), like the fused trio path
+    let mut a_opts = opts.clone();
+    if policy.deadline.is_some() {
+        a_opts.deadline = policy.deadline;
+    }
+    a_opts.faults = opts.faults.reseeded(0);
+    let mut out: Vec<Option<Result<QueryResult, QueryError>>> = Vec::with_capacity(queries.len());
+    out.resize_with(queries.len(), || None);
+    let mut live: Vec<(usize, u32)> = Vec::with_capacity(queries.len());
+    for (i, &q) in queries.iter().enumerate() {
+        if q as usize >= n {
+            out[i] = Some(reject(q, format!("query vertex {q} out of range (|V| = {n})")));
+        } else {
+            live.push((i, q));
+        }
+    }
+    let mut passes = 0u64;
+    if ix.levels.len() == 1 && lanes > 1 {
+        let b = batcher.get_or_insert_with(|| BatchInstance::new(&base.compiled, lanes));
+        for chunk in live.chunks(lanes.max(1)) {
+            let qs: Vec<ann::AnnQuery> = chunk
+                .iter()
+                .map(|&(_, q)| {
+                    let qv = base.emb.vector(q).to_vec();
+                    let entries = ix.probe(&qv);
+                    (qv, entries)
+                })
+                .collect();
+            let rs =
+                ann::search_batch(b, &base.compiled, &base.graph, &base.emb, &qs, &ix.params, &a_opts);
+            passes += 1;
+            for (&(i, q), r) in chunk.iter().zip(rs) {
+                out[i] = Some(ann_outcome(q, r));
+            }
+        }
+    } else {
+        let s = searcher.get_or_insert_with(|| AnnSearcher::new(ix));
+        for &(i, q) in &live {
+            let qv = base.emb.vector(q).to_vec();
+            out[i] = Some(ann_outcome(q, s.search(ix, &qv, &a_opts)));
+            passes += 1;
+        }
+    }
+    let out = out
+        .into_iter()
+        .map(|o| o.unwrap_or_else(|| unreachable!("every ANN query answered exactly once")))
+        .collect();
+    (out, passes)
+}
+
+/// Convert one ANN search outcome into the serving-layer result shape:
+/// the summed supersteps synthesize one run (total cycles, final
+/// attributes, delivered packets, traversed edges, activity counters)
+/// and the ranked answer rides in [`QueryResult::neighbors`].
+fn ann_outcome(q: u32, r: Result<ann::AnnResult, SimError>) -> Result<QueryResult, QueryError> {
+    let job = Job::AnnSearch(q);
+    match r {
+        Ok(a) => {
+            let run = RunResult {
+                cycles: a.cycles,
+                attrs: a.attrs,
+                edges_traversed: a.edges,
+                sim: SimMetrics {
+                    packets_delivered: a.delivered,
+                    activity: a.activity,
+                    ..SimMetrics::default()
+                },
+            };
+            Ok(QueryResult { job, run, distance: None, neighbors: Some(a.neighbors) })
+        }
+        Err(e) => Err(sim_query_error(job, &e)),
+    }
 }
 
 /// Classify a simulator abort for the caller-facing retry contract.
@@ -603,7 +826,7 @@ fn serve_fused(
             out.push(match r {
                 Ok(run) => {
                     crate::experiments::harness::debug_check_reference(pair, w, src, &run);
-                    Ok(QueryResult { job, run, distance: None })
+                    Ok(QueryResult { job, run, distance: None, neighbors: None })
                 }
                 Err(e) => Err(sim_query_error(job, &e)),
             });
@@ -712,7 +935,7 @@ fn answer(
                 }
                 _ => unreachable!("worker machine built from its own target"),
             })?;
-            Ok(QueryResult { job, run, distance: None })
+            Ok(QueryResult { job, run, distance: None, neighbors: None })
         }
         Job::Navigate { source, target: dst } => {
             if source as usize >= n || dst as usize >= n {
@@ -734,8 +957,14 @@ fn answer(
                 _ => unreachable!("worker machine built from its own target"),
             };
             let distance = run.attrs[dst as usize];
-            Ok(QueryResult { job, run, distance: Some(distance) })
+            Ok(QueryResult { job, run, distance: Some(distance), neighbors: None })
         }
+        // unreachable from serve() — serve_ann answers every AnnSearch
+        // slot before the per-query path collects unanswered jobs — but
+        // kept as a hard reject for direct callers and exhaustiveness
+        Job::AnnSearch(_) => Err(fail(
+            "ANN queries are answered on the serve() driver path (Engine::with_ann)".to_string(),
+        )),
     }
 }
 
@@ -749,6 +978,58 @@ mod tests {
     fn job_describe_names_the_query() {
         assert_eq!(Job::Workload(Workload::Bfs, 3).describe(), "BFS from 3");
         assert_eq!(Job::Navigate { source: 1, target: 9 }.describe(), "navigate 1 -> 9");
+        assert_eq!(Job::AnnSearch(4).describe(), "ANN near 4");
+    }
+
+    #[test]
+    fn ann_without_index_rejects_and_does_not_poison_the_batch() {
+        let (g, _emb) = generate::ann_graph(32, 8, 4, 3);
+        let pair = CompiledPair::build(&g, &ArchConfig::default(), 1);
+        let mut engine = Engine::new(&pair).with_workers(1);
+        let rep = engine.serve(&[Job::AnnSearch(0), Job::Workload(Workload::Bfs, 0)]);
+        let err = rep.results[0].as_ref().expect_err("no index attached");
+        assert_eq!(err.kind, QueryErrorKind::Rejected);
+        assert!(err.msg.contains("with_ann"), "{err}");
+        assert!(rep.results[1].is_ok(), "ANN rejection must not poison the batch");
+    }
+
+    #[test]
+    fn ann_serving_is_bitwise_the_direct_search_fused_or_not() {
+        use crate::workloads::ann::AnnParams;
+        let (g, emb) = generate::ann_graph(48, 8, 4, 19);
+        let pair = CompiledPair::build(&g, &ArchConfig::default(), 1);
+        let params = AnnParams { beam: 8, k: 4, ..AnnParams::default() };
+        let ix = ann::AnnIndex::build(&g, &emb, 1, &ArchConfig::default(), 7, params);
+        let jobs = vec![
+            Job::AnnSearch(5),
+            Job::Workload(Workload::Bfs, 2), // trio fusing coexists with ANN
+            Job::AnnSearch(30),
+            Job::AnnSearch(44),
+            Job::AnnSearch(5_000), // out of range: rejected as data
+        ];
+        let a = Engine::new(&pair).with_ann(&ix).with_batch_lanes(4).serve(&jobs);
+        let b = Engine::new(&pair).with_ann(&ix).with_batch_lanes(1).serve(&jobs);
+        assert!(a.results[1].is_ok() && b.results[1].is_ok());
+        let bad = a.results[4].as_ref().expect_err("out-of-range query vertex");
+        assert_eq!(bad.kind, QueryErrorKind::Rejected);
+        let opts = SimOptions::default();
+        for (job, (x, y)) in jobs.iter().zip(a.results.iter().zip(&b.results)) {
+            let Job::AnnSearch(q) = *job else { continue };
+            if q as usize >= g.num_vertices() {
+                continue;
+            }
+            let (x, y) = (x.as_ref().unwrap(), y.as_ref().unwrap());
+            assert_eq!(x.run.cycles, y.run.cycles);
+            assert_eq!(x.run.attrs, y.run.attrs);
+            assert_eq!(x.neighbors, y.neighbors, "fused must equal per-query serving");
+            let qv = emb.vector(q).to_vec();
+            let want =
+                ann::search(&ix.base().compiled, &g, &emb, &qv, &ix.probe(&qv), &params, &opts)
+                    .unwrap_or_else(|e| panic!("direct search failed: {e:?}"));
+            assert_eq!(x.neighbors.as_deref(), Some(want.neighbors.as_slice()));
+            assert_eq!(x.run.attrs, want.attrs);
+            assert_eq!(x.run.cycles, want.cycles);
+        }
     }
 
     #[test]

@@ -55,6 +55,17 @@
 //! Drains dispatch on a *persistent* worker pool owned by the server
 //! (spawned once at construction, not per drain).
 //!
+//! **ANN queries (DESIGN.md §10).** With an index attached
+//! ([`StreamServer::with_ann`]), [`Job::AnnSearch`] submissions ride the
+//! engine's ANN serve path: drained ANN units run on the drain thread
+//! (the beam loop is host-synchronized) and fuse into the shared
+//! [`BatchInstance`] lanes on a single-level index, bitwise equal to
+//! solo [`crate::workloads::ann::search`] runs. The index is built from
+//! embeddings, which weight-only deltas never touch, so one index serves
+//! the whole epoch chain; identical `(epoch, query)` submissions share
+//! one run like any other job, and the per-drain conservation identity
+//! above is unchanged.
+//!
 //! Every completion feeds the [`StreamStats`] SLO surface
 //! (p50/p99/p999 modeled-cycle and wall-clock latency, throughput,
 //! queue depth, epoch lag) consumed by `flip serve --duration`, the
@@ -70,6 +81,7 @@ use crate::metrics::StreamStats;
 use crate::sim::batch::BatchInstance;
 use crate::sim::flip::{SimInstance, SimOptions};
 use crate::util::WorkerPool;
+use crate::workloads::ann::{AnnIndex, AnnSearcher};
 use crate::workloads::navigation::Landmarks;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -367,6 +379,11 @@ pub struct StreamServer {
     /// Reusable lane bank for fused batched drains, created on first use
     /// (same shape-invariance argument as `machines`).
     batcher: Option<BatchInstance>,
+    /// ANN index served by [`Job::AnnSearch`] submissions
+    /// ([`StreamServer::with_ann`]); embedding-based, so epoch-invariant.
+    ann: Option<Arc<AnnIndex>>,
+    /// Reusable per-level machine instances for hierarchical ANN queries.
+    ann_searcher: Option<AnnSearcher>,
     /// Persistent drain pool: spawned once here, reused by every
     /// [`StreamServer::drain_batch`] (previously a per-drain
     /// `thread::scope`, i.e. O(workers) thread churn per drain).
@@ -385,10 +402,22 @@ impl StreamServer {
             queue: VecDeque::new(),
             machines: Vec::new(),
             batcher: None,
+            ann: None,
+            ann_searcher: None,
             pool,
             stats: StreamStats::default(),
             next_id: 0,
         }
+    }
+
+    /// Attach a compiled ANN index ([`crate::workloads::ann::AnnIndex`]):
+    /// [`Job::AnnSearch`] submissions resolve against it on every epoch
+    /// (embeddings are weight-independent, so one index serves the whole
+    /// epoch chain). The index's base level must match the serving graph.
+    pub fn with_ann(mut self, ix: Arc<AnnIndex>) -> StreamServer {
+        self.ann = Some(ix);
+        self.ann_searcher = None; // rebuilt lazily for the new index
+        self
     }
 
     /// The epoch store (pin/version/liveness observability).
@@ -476,8 +505,15 @@ impl StreamServer {
         // runs; a singleton set has nothing to fuse
         let mut fused: Vec<(u64, crate::workloads::Workload, Vec<usize>)> = Vec::new();
         let mut legacy: Vec<usize> = Vec::new();
+        // ANN units always take the drain-thread serve path (shared with
+        // the engine), never the worker fan-out or the trio lane sets
+        let mut ann_units: Vec<usize> = Vec::new();
         if self.cfg.batch_lanes > 1 {
             for (ui, (snap, job, _)) in groups.iter().enumerate() {
+                if matches!(*job, Job::AnnSearch(_)) {
+                    ann_units.push(ui);
+                    continue;
+                }
                 let fusable = match (*job, &snap.target) {
                     (Job::Workload(w, s), EpochTarget::Single(_)) => {
                         !w.is_extended() && (s as usize) < snap.target.graph().num_vertices()
@@ -503,7 +539,13 @@ impl StreamServer {
                 }
             });
         } else {
-            legacy.extend(0..groups.len());
+            for (ui, (_, job, _)) in groups.iter().enumerate() {
+                if matches!(*job, Job::AnnSearch(_)) {
+                    ann_units.push(ui);
+                } else {
+                    legacy.push(ui);
+                }
+            }
         }
         let want = self.cfg.workers.min(legacy.len()).max(1);
         while self.machines.len() < want {
@@ -600,7 +642,7 @@ impl StreamServer {
                 .iter()
                 .map(|&ui| match groups_ref[ui].1 {
                     Job::Workload(_, s) => s,
-                    Job::Navigate { .. } => unreachable!("only trio workloads are fused"),
+                    _ => unreachable!("only trio workloads are fused"),
                 })
                 .collect();
             let lanes = self.cfg.batch_lanes;
@@ -612,12 +654,42 @@ impl StreamServer {
                 answers[ui] = Some((0, r));
             }
         }
+        // ANN units answer on the drain thread — the beam loop is
+        // host-synchronized, so the per-superstep lane passes are the
+        // parallel work (the engine's shared serve path)
+        let mut ann_passes = 0u64;
+        if !ann_units.is_empty() {
+            let qs: Vec<u32> = ann_units
+                .iter()
+                .map(|&ui| match groups_ref[ui].1 {
+                    Job::AnnSearch(q) => q,
+                    _ => unreachable!("partitioned as an ANN unit above"),
+                })
+                .collect();
+            let snap0 = &groups_ref[ann_units[0]].0;
+            let single = matches!(snap0.target, EpochTarget::Single(_));
+            let (rs, p) = super::serve_ann_queries(
+                self.ann.as_deref(),
+                single,
+                snap0.target.graph().num_vertices(),
+                &mut self.batcher,
+                &mut self.ann_searcher,
+                self.cfg.batch_lanes,
+                opts,
+                policy,
+                &qs,
+            );
+            ann_passes = p;
+            for (&ui, r) in ann_units.iter().zip(rs) {
+                answers[ui] = Some((0, r));
+            }
+        }
         let answers: Vec<(u32, Result<QueryResult, QueryError>)> = answers
             .into_iter()
             .map(|o| o.unwrap_or_else(|| unreachable!("every unit answered exactly once")))
             .collect();
         // account per-unit costs once; a fused multi-lane pass is one run
-        self.stats.sim_runs += legacy.len() as u64 + passes;
+        self.stats.sim_runs += legacy.len() as u64 + passes + ann_passes;
         self.stats.lane_count += groups.len() as u64;
         self.stats.shared_hits += (batch.len() - groups.len()) as u64;
         for (retries, _) in &answers {
@@ -774,6 +846,52 @@ mod tests {
         assert_eq!(
             fused.stats().served + fused.stats().failed,
             fused.stats().shared_hits + fused.stats().lane_count
+        );
+    }
+
+    #[test]
+    fn ann_submissions_serve_share_and_conserve() {
+        use crate::workloads::ann::{AnnIndex, AnnParams};
+        let (g, emb) = generate::ann_graph(48, 8, 4, 23);
+        let pair = CompiledPair::build(&g, &ArchConfig::default(), 42);
+        let params = AnnParams { beam: 8, k: 4, ..AnnParams::default() };
+        let ix = Arc::new(AnnIndex::build(&g, &emb, 1, &ArchConfig::default(), 5, params));
+        let store = EpochStore::new_single(pair);
+        let mut srv = StreamServer::new(store, StreamConfig { workers: 1, ..Default::default() })
+            .with_ann(Arc::clone(&ix));
+        let jobs = [
+            Job::AnnSearch(7),
+            Job::AnnSearch(7), // identical: shares one run
+            Job::AnnSearch(30),
+            Job::Workload(Workload::Bfs, 0),
+        ];
+        for job in jobs {
+            srv.submit(job).unwrap();
+        }
+        let out = srv.drain_all();
+        assert_eq!(out.len(), 4);
+        assert!(out[0].shared && out[1].shared, "identical ANN queries share one run");
+        let qv = emb.vector(7).to_vec();
+        let want = crate::workloads::ann::search(
+            &ix.base().compiled,
+            &g,
+            &emb,
+            &qv,
+            &ix.probe(&qv),
+            &params,
+            &SimOptions::default(),
+        )
+        .unwrap_or_else(|e| panic!("direct search failed: {e:?}"));
+        let a = out[0].result.as_ref().unwrap();
+        assert_eq!(a.neighbors.as_deref(), Some(want.neighbors.as_slice()));
+        assert_eq!(a.run.attrs, want.attrs);
+        assert!(out[3].result.is_ok(), "trio jobs coexist with ANN in one drain");
+        assert_eq!(srv.stats().shared_hits, 1);
+        assert_eq!(srv.stats().lane_count, 3);
+        assert_eq!(
+            srv.stats().served + srv.stats().failed,
+            srv.stats().shared_hits + srv.stats().lane_count,
+            "conservation"
         );
     }
 

@@ -1,0 +1,823 @@
+//! Beam-search approximate-nearest-neighbor (ANN) as a vertex-program
+//! workload family (DESIGN.md §10).
+//!
+//! The data-centric mapping: every vertex of a proximity graph holds a
+//! quantized embedding next to its routing slice, the frontier carries
+//! `(candidate, dist)` packets, and one fabric invocation executes one
+//! *host-synchronized expansion superstep* — the current beam's unvisited
+//! candidates scatter, every receiver computes its exact distance to the
+//! query PE-locally ([`isa::PROG_ANN`]'s `AddAuxSat` lane), prunes
+//! against the frozen beam radius in the bound register (`HaltGtBound`),
+//! dedupes against its stored attribute (`CmpHaltGe` — a discovered
+//! vertex's attribute *is* its distance) and records the discovery.
+//! Candidate-set semantics ([`SmallestK`]) stay host-side between
+//! supersteps, exactly like PageRank's inter-round recurrence
+//! ([`crate::workloads::pagerank::run_rounds_with`]): [`search_with`] is
+//! the one shared host loop every backend drives, and it is a line-level
+//! mirror of the CPU oracle [`reference::beam_search`], so the fabric
+//! must reproduce the oracle's neighbors/attrs/supersteps *bitwise*
+//! (`tests/ann.rs`). Recall against exact k-NN
+//! ([`reference::knn_exact`]) is a property of the *algorithm* — the
+//! graph, the entry seeding, the beam width — never of the fabric.
+//!
+//! Entry points come from a hyperplane-hash probe
+//! ([`crate::graph::embed::EntryHash`]); the optional two-level hierarchy
+//! ([`AnnIndex`]) compiles one machine image per level and hands the
+//! frontier across levels through the resume port
+//! ([`crate::sim::flip::SimInstance::run_resumed`]): each superstep's
+//! expand set enters the fabric as [`Inject`] packets — one per unique
+//! destination `(PE, slice)` per source, matching the multi-chip ingress
+//! dedup rule — instead of the boot-time dense seed.
+
+use crate::arch::isa::{self, Instr};
+use crate::compiler::{compile, CompileOpts, CompiledGraph};
+use crate::config::ArchConfig;
+use crate::graph::embed::{Embeddings, EntryHash, SmallestK};
+use crate::graph::{generate, reference, Graph, INF};
+use crate::metrics::{ActivityCounts, RunResult};
+use crate::sim::flip::Inject;
+use crate::sim::multichip::{self, ShardedMachine};
+use crate::sim::{naive, BatchInstance, SimError, SimInstance, SimOptions};
+use crate::util::pool::WorkerPool;
+use crate::workloads::program::VertexProgram;
+use std::collections::BTreeMap;
+
+/// Tuning knobs of an ANN search (and of hierarchical index builds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AnnParams {
+    /// Neighbors returned per query.
+    pub k: usize,
+    /// Beam width: the bounded candidate-set capacity. Must be ≥ `k` for
+    /// the answer to have `k` rows; wider beams trade cycles for recall.
+    pub beam: usize,
+    /// Entry points probed out of the hyperplane hash per query.
+    pub probes: usize,
+    /// Hyperplanes in the entry hash (signature bits).
+    pub planes: usize,
+    /// Out-degree of the kNN graphs built for upper hierarchy levels.
+    pub deg: usize,
+}
+
+impl Default for AnnParams {
+    fn default() -> Self {
+        AnnParams { k: 10, beam: 32, probes: 8, planes: 8, deg: 6 }
+    }
+}
+
+/// One expansion superstep as a vertex program: the expand set densely
+/// seeds ([`VertexProgram::seeds`] = beam membership), receivers run
+/// [`isa::PROG_ANN`] with their exact query distance in the `aux` DRF
+/// lane and the frozen beam radius in the bound register, and nothing
+/// re-scatters — expansion is host-synchronized, so
+/// [`VertexProgram::announces`] is `false` and a sharded superstep
+/// converges after one cut exchange.
+#[derive(Debug, Clone)]
+pub struct BeamStep<'a> {
+    /// Per-vertex embedding table (the DRF-side payload).
+    pub emb: &'a Embeddings,
+    /// The query vector.
+    pub query: &'a [u8],
+    /// Attribute state entering the superstep: discovered vertices hold
+    /// their exact distance, everything else [`INF`].
+    pub attrs: Vec<u32>,
+    /// This superstep's expand set (the beam's unvisited candidates).
+    pub expand: Vec<bool>,
+    /// Beam radius frozen at superstep entry ([`SmallestK::radius`]).
+    pub radius: u32,
+}
+
+impl VertexProgram for BeamStep<'_> {
+    fn name(&self) -> &'static str {
+        "ANN"
+    }
+
+    fn isa(&self) -> &[Instr] {
+        isa::PROG_ANN
+    }
+
+    fn init_attr(&self, vid: u32, _n: usize) -> u32 {
+        self.attrs[vid as usize]
+    }
+
+    fn combine(&self, _attr: u32, _weight: u32) -> u32 {
+        // the packet only *activates* the receiver; the distance is
+        // computed receiver-locally from the aux lane
+        0
+    }
+
+    fn aux(&self, vid: u32) -> u32 {
+        self.emb.dist_to(vid, self.query)
+    }
+
+    fn bound(&self) -> u32 {
+        self.radius
+    }
+
+    fn single_source(&self) -> bool {
+        false
+    }
+
+    fn seeds(&self, vid: u32) -> bool {
+        self.expand[vid as usize]
+    }
+
+    fn announces(&self, _vid: u32, _attr: u32) -> bool {
+        // receivers never re-scatter: the host decides the next frontier
+        false
+    }
+
+    fn reference(&self, view: &Graph, _source: u32) -> Vec<u32> {
+        reference::beam_superstep(view, self.emb, self.query, &self.attrs, &self.expand, self.radius)
+    }
+}
+
+/// Aggregate result of one ANN query driven over the fabric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AnnResult {
+    /// Best `k` candidates as `(vid, dist)`, ascending `(dist, vid)` —
+    /// the same shape as [`reference::knn_exact`] /
+    /// [`reference::BeamTrace::neighbors`].
+    pub neighbors: Vec<(u32, u32)>,
+    /// Final attributes: discovered vertices hold their exact distance.
+    pub attrs: Vec<u32>,
+    /// Expansion supersteps executed.
+    pub supersteps: u64,
+    /// Total simulated cycles across all supersteps.
+    pub cycles: u64,
+    /// Total packets delivered across all supersteps.
+    pub delivered: u64,
+    /// Total traversed edges across all supersteps (MTEPS numerator).
+    pub edges: u64,
+    /// Summed activity counters (energy-model input).
+    pub activity: ActivityCounts,
+}
+
+impl AnnResult {
+    /// Million traversed edges per second at `freq_mhz` (the same
+    /// formula as [`RunResult::mteps`], over the summed supersteps).
+    pub fn mteps(&self, freq_mhz: u64) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        let seconds = self.cycles as f64 / (freq_mhz as f64 * 1e6);
+        self.edges as f64 / 1e6 / seconds
+    }
+}
+
+/// The host-side beam loop shared by every fabric backend — a line-level
+/// mirror of [`reference::beam_search`] around an arbitrary per-superstep
+/// runner, the [`crate::workloads::pagerank::run_rounds_with`] idiom.
+/// One copy of the `SmallestK`/radius/visited logic, so the backends and
+/// the oracle cannot drift apart.
+pub fn search_with<F>(
+    g: &Graph,
+    emb: &Embeddings,
+    query: &[u8],
+    entries: &[u32],
+    params: &AnnParams,
+    mut round: F,
+) -> Result<AnnResult, SimError>
+where
+    F: FnMut(&BeamStep) -> Result<RunResult, SimError>,
+{
+    let n = g.num_vertices();
+    if emb.len() != n {
+        return Err(SimError::invalid(format!(
+            "{} embeddings for {n} vertices",
+            emb.len()
+        )));
+    }
+    for &e in entries {
+        if e as usize >= n {
+            return Err(SimError::invalid(format!("entry vertex {e} out of range (|V| = {n})")));
+        }
+    }
+    let mut attrs = vec![INF; n];
+    let mut visited = vec![false; n];
+    let mut cand = SmallestK::new(params.beam.max(1));
+    for &e in entries {
+        if attrs[e as usize] != INF {
+            continue; // duplicate entry
+        }
+        let d = emb.dist_to(e, query);
+        attrs[e as usize] = d;
+        cand.insert(d, e);
+    }
+    let mut supersteps = 0u64;
+    let mut cycles = 0u64;
+    let mut delivered = 0u64;
+    let mut edges = 0u64;
+    let mut activity = ActivityCounts::default();
+    loop {
+        let mut expand = vec![false; n];
+        let mut any = false;
+        for &(_, v) in cand.items() {
+            if !visited[v as usize] {
+                visited[v as usize] = true;
+                expand[v as usize] = true;
+                any = true;
+            }
+        }
+        if !any {
+            break;
+        }
+        let radius = cand.radius();
+        let vp = BeamStep { emb, query, attrs, expand, radius };
+        let r = round(&vp)?;
+        cycles += r.cycles;
+        delivered += r.sim.packets_delivered;
+        edges += r.edges_traversed;
+        activity.add(&r.sim.activity);
+        for (v, (&post, &pre)) in r.attrs.iter().zip(vp.attrs.iter()).enumerate() {
+            if post != pre {
+                cand.insert(post, v as u32);
+            }
+        }
+        attrs = r.attrs;
+        supersteps += 1;
+    }
+    Ok(AnnResult {
+        neighbors: cand.top_k(params.k),
+        attrs,
+        supersteps,
+        cycles,
+        delivered,
+        edges,
+        activity,
+    })
+}
+
+/// Drive one ANN query on the event-driven core. `g`/`emb` must be the
+/// graph/embedding pair `c` was compiled from. The returned
+/// neighbors/attrs/supersteps match [`reference::beam_search`]
+/// bit-for-bit.
+pub fn search(
+    c: &CompiledGraph,
+    g: &Graph,
+    emb: &Embeddings,
+    query: &[u8],
+    entries: &[u32],
+    params: &AnnParams,
+    opts: &SimOptions,
+) -> Result<AnnResult, SimError> {
+    // one machine instance serves every superstep (DESIGN.md §6): the
+    // image is fixed, only the per-superstep program state changes
+    let mut inst = SimInstance::new(c);
+    search_with(g, emb, query, entries, params, |vp| inst.run_program(c, vp, 0, opts))
+}
+
+/// [`search`] on the naive cycle-stepped reference core.
+pub fn search_naive(
+    c: &CompiledGraph,
+    g: &Graph,
+    emb: &Embeddings,
+    query: &[u8],
+    entries: &[u32],
+    params: &AnnParams,
+    opts: &SimOptions,
+) -> Result<AnnResult, SimError> {
+    let mut inst = naive::NaiveInstance::new(c);
+    search_with(g, emb, query, entries, params, |vp| {
+        inst.run_program(c, vp as &dyn VertexProgram, 0, opts)
+    })
+}
+
+/// [`search`] on a K-chip sharded machine: each superstep runs through
+/// the lockstep exchange ([`multichip::run_program_on`]); with
+/// [`BeamStep::announces`] `false` a superstep converges after one cut
+/// exchange. Optional intra-superstep shard parallelism via `pool` is
+/// bitwise-neutral (the multi-chip contract).
+pub fn search_sharded(
+    m: &ShardedMachine,
+    insts: &mut [SimInstance],
+    g: &Graph,
+    emb: &Embeddings,
+    query: &[u8],
+    entries: &[u32],
+    params: &AnnParams,
+    opts: &SimOptions,
+    pool: Option<&WorkerPool>,
+) -> Result<AnnResult, SimError> {
+    search_with(g, emb, query, entries, params, |vp| {
+        multichip::run_program_on(m, insts, vp, 0, opts, pool).map(|sr| sr.result)
+    })
+}
+
+/// One query of a fused batch: the query vector and its entry points.
+pub type AnnQuery = (Vec<u8>, Vec<u32>);
+
+/// Run `queries.len()` independent ANN queries through fused
+/// [`BatchInstance`] lanes, lockstep per superstep: every live query
+/// contributes its `BeamStep` to one fused `run_batch` pass, finished
+/// queries drop out, and per-lane host state advances independently.
+/// Each query's result is bitwise equal to [`search`] run sequentially
+/// (the lane bit-exactness contract composed with the shared host loop).
+pub fn search_batch(
+    batch: &mut BatchInstance,
+    c: &CompiledGraph,
+    g: &Graph,
+    emb: &Embeddings,
+    queries: &[AnnQuery],
+    params: &AnnParams,
+    opts: &SimOptions,
+) -> Vec<Result<AnnResult, SimError>> {
+    struct Lane {
+        attrs: Vec<u32>,
+        visited: Vec<bool>,
+        cand: SmallestK,
+        supersteps: u64,
+        cycles: u64,
+        delivered: u64,
+        edges: u64,
+        activity: ActivityCounts,
+        done: Option<Result<AnnResult, SimError>>,
+    }
+    let n = g.num_vertices();
+    let mut lanes: Vec<Lane> = queries
+        .iter()
+        .map(|(q, entries)| {
+            let mut attrs = vec![INF; n];
+            let mut cand = SmallestK::new(params.beam.max(1));
+            let mut bad = None;
+            for &e in entries {
+                if e as usize >= n {
+                    bad = Some(SimError::invalid(format!(
+                        "entry vertex {e} out of range (|V| = {n})"
+                    )));
+                    break;
+                }
+                if attrs[e as usize] != INF {
+                    continue;
+                }
+                let d = emb.dist_to(e, q);
+                attrs[e as usize] = d;
+                cand.insert(d, e);
+            }
+            Lane {
+                attrs,
+                visited: vec![false; n],
+                cand,
+                supersteps: 0,
+                cycles: 0,
+                delivered: 0,
+                edges: 0,
+                activity: ActivityCounts::default(),
+                done: bad.map(Err),
+            }
+        })
+        .collect();
+    if emb.len() != n {
+        let e = SimError::invalid(format!("{} embeddings for {n} vertices", emb.len()));
+        return queries.iter().map(|_| Err(e.clone())).collect();
+    }
+    loop {
+        // advance every live lane's host state; collect this superstep's
+        // fused work (lane order = query order, finished queries skipped)
+        let mut idx: Vec<usize> = Vec::new();
+        let mut steps: Vec<BeamStep> = Vec::new();
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            if lane.done.is_some() {
+                continue;
+            }
+            let mut expand = vec![false; n];
+            let mut any = false;
+            for &(_, v) in lane.cand.items() {
+                if !lane.visited[v as usize] {
+                    lane.visited[v as usize] = true;
+                    expand[v as usize] = true;
+                    any = true;
+                }
+            }
+            if !any {
+                lane.done = Some(Ok(AnnResult {
+                    neighbors: lane.cand.top_k(params.k),
+                    attrs: std::mem::take(&mut lane.attrs),
+                    supersteps: lane.supersteps,
+                    cycles: lane.cycles,
+                    delivered: lane.delivered,
+                    edges: lane.edges,
+                    activity: lane.activity,
+                }));
+                continue;
+            }
+            let radius = lane.cand.radius();
+            steps.push(BeamStep {
+                emb,
+                query: &queries[i].0,
+                attrs: std::mem::take(&mut lane.attrs),
+                expand,
+                radius,
+            });
+            idx.push(i);
+        }
+        if steps.is_empty() {
+            break;
+        }
+        let fused: Vec<(&BeamStep, u32)> = steps.iter().map(|s| (s, 0u32)).collect();
+        let results = batch.run_batch(c, &fused, opts);
+        for (&i, (vp, r)) in idx.iter().zip(steps.into_iter().zip(results)) {
+            let lane = &mut lanes[i];
+            match r {
+                Err(e) => {
+                    lane.done = Some(Err(e));
+                }
+                Ok(r) => {
+                    lane.cycles += r.cycles;
+                    lane.delivered += r.sim.packets_delivered;
+                    lane.edges += r.edges_traversed;
+                    lane.activity.add(&r.sim.activity);
+                    for (v, (&post, &pre)) in r.attrs.iter().zip(vp.attrs.iter()).enumerate() {
+                        if post != pre {
+                            lane.cand.insert(post, v as u32);
+                        }
+                    }
+                    lane.attrs = r.attrs;
+                    lane.supersteps += 1;
+                }
+            }
+        }
+    }
+    lanes
+        .into_iter()
+        .map(|l| l.done.unwrap_or_else(|| unreachable!("every lane settles before the loop exits")))
+        .collect()
+}
+
+/// One level of a hierarchical ANN index: a (sub)graph over a subset of
+/// the base vertices, its gathered embedding table, and one compiled
+/// machine image — compile once, serve many queries.
+#[derive(Debug, Clone)]
+pub struct AnnLevel {
+    /// Base-graph vertex ids of this level, ascending (level-local id
+    /// `i` ↔ base id `ids[i]`). Level 0 is the identity.
+    pub ids: Vec<u32>,
+    /// The level's proximity graph over level-local ids.
+    pub graph: Graph,
+    /// The level's embedding rows (gathered from the base table).
+    pub emb: Embeddings,
+    /// The level's compiled machine image.
+    pub compiled: CompiledGraph,
+    /// Per-vertex resume-port scatter lists: for source `u`, one
+    /// representative destination vid per unique destination
+    /// `(PE, slice)` among `u`'s out-neighbors — the [`Inject`] dedup
+    /// rule (delivery walks the whole Intra-Table bucket keyed on the
+    /// source, so one packet per bucket reaches every out-neighbor).
+    scatter: Vec<Vec<u32>>,
+}
+
+/// Deduped resume-port targets of every vertex (see [`AnnLevel::scatter`]).
+fn scatter_targets(g: &Graph, c: &CompiledGraph) -> Vec<Vec<u32>> {
+    let cfg = &c.cfg;
+    (0..g.num_vertices() as u32)
+        .map(|u| {
+            let mut rep: BTreeMap<(usize, u16), u32> = BTreeMap::new();
+            for (v, _w) in g.neighbors(u) {
+                let s = c.placement.slots[v as usize];
+                let e = rep.entry((s.pe.index(cfg), s.copy)).or_insert(v);
+                if v < *e {
+                    *e = v;
+                }
+            }
+            rep.into_values().collect()
+        })
+        .collect()
+}
+
+/// A compiled, hierarchical ANN index: one machine image per level, a
+/// hyperplane entry hash over the coarsest level, and the build-time
+/// search parameters. Level 0 is the full base graph; upper levels
+/// subsample every 4th vertex and re-link them by a kNN graph
+/// ([`generate::knn_graph`]), HNSW-style but with deterministic
+/// stride subsampling so builds are reproducible byte-for-byte.
+#[derive(Debug, Clone)]
+pub struct AnnIndex {
+    /// The levels, finest (the base graph) first.
+    pub levels: Vec<AnnLevel>,
+    /// Entry hash over the coarsest level's embedding rows.
+    pub hash: EntryHash,
+    /// Build/search parameters.
+    pub params: AnnParams,
+}
+
+/// Coarsening stride between hierarchy levels.
+const LEVEL_STRIDE: usize = 4;
+/// Don't coarsen below this many vertices.
+const MIN_LEVEL: usize = 16;
+
+impl AnnIndex {
+    /// Build an index over `g` (its proximity graph) and `emb` (one
+    /// embedding per vertex of `g`), with at most `levels` levels —
+    /// `levels = 1` is the degenerate single-level index whose searcher
+    /// must match the plain [`search`] path bitwise on neighbors/attrs.
+    pub fn build(
+        g: &Graph,
+        emb: &Embeddings,
+        levels: usize,
+        cfg: &ArchConfig,
+        seed: u64,
+        params: AnnParams,
+    ) -> AnnIndex {
+        assert_eq!(emb.len(), g.num_vertices(), "one embedding per vertex");
+        let copts = CompileOpts::default();
+        let mut built: Vec<AnnLevel> = Vec::new();
+        let base_ids: Vec<u32> = (0..g.num_vertices() as u32).collect();
+        let compiled = compile(g, cfg, &copts);
+        let scatter = scatter_targets(g, &compiled);
+        built.push(AnnLevel {
+            ids: base_ids,
+            graph: g.clone(),
+            emb: emb.clone(),
+            compiled,
+            scatter,
+        });
+        while built.len() < levels.max(1) {
+            let prev = match built.last() {
+                Some(l) => l,
+                None => break,
+            };
+            if prev.ids.len() / LEVEL_STRIDE < MIN_LEVEL {
+                break;
+            }
+            let ids: Vec<u32> = prev.ids.iter().copied().step_by(LEVEL_STRIDE).collect();
+            let lemb = emb.gather(&ids);
+            let lg = generate::knn_graph(&lemb, params.deg);
+            let compiled = compile(&lg, cfg, &copts);
+            let scatter = scatter_targets(&lg, &compiled);
+            built.push(AnnLevel { ids, graph: lg, emb: lemb, compiled, scatter });
+        }
+        let top = built.len() - 1;
+        let hash = EntryHash::build(&built[top].emb, params.planes, seed);
+        AnnIndex { levels: built, hash, params }
+    }
+
+    /// Entry points for `query` at the coarsest level (level-local ids).
+    pub fn probe(&self, query: &[u8]) -> Vec<u32> {
+        self.hash.probe(query, self.params.probes.max(1))
+    }
+
+    /// The base (level-0) graph.
+    pub fn base(&self) -> &AnnLevel {
+        &self.levels[0]
+    }
+}
+
+/// Reusable per-level machine instances for hierarchical queries —
+/// build once per worker, serve many queries ([`AnnSearcher::search`]).
+pub struct AnnSearcher {
+    insts: Vec<SimInstance>,
+}
+
+impl AnnSearcher {
+    /// One [`SimInstance`] per index level.
+    pub fn new(ix: &AnnIndex) -> AnnSearcher {
+        AnnSearcher { insts: ix.levels.iter().map(|l| SimInstance::new(&l.compiled)).collect() }
+    }
+
+    /// Search the hierarchy coarsest-to-finest. Every superstep of every
+    /// level enters the fabric through the resume port: the host installs
+    /// the level's attribute state and injects the expand frontier as
+    /// deduped [`Inject`] packets (the cross-level handoff — an upper
+    /// level's winners become the next level's injected entry frontier).
+    /// Neighbors are returned as base-graph ids; attrs are the base
+    /// level's. Cycles/supersteps accumulate across all levels.
+    pub fn search(
+        &mut self,
+        ix: &AnnIndex,
+        query: &[u8],
+        opts: &SimOptions,
+    ) -> Result<AnnResult, SimError> {
+        if self.insts.len() != ix.levels.len() {
+            return Err(SimError::invalid(format!(
+                "{} instances for {} levels",
+                self.insts.len(),
+                ix.levels.len()
+            )));
+        }
+        let mut entries = ix.probe(query);
+        let mut carried_cycles = 0u64;
+        let mut carried_steps = 0u64;
+        let mut carried_delivered = 0u64;
+        let mut carried_edges = 0u64;
+        let mut carried_act = ActivityCounts::default();
+        for li in (0..ix.levels.len()).rev() {
+            let level = &ix.levels[li];
+            let inst = &mut self.insts[li];
+            let r = search_with(&level.graph, &level.emb, query, &entries, &ix.params, |vp| {
+                let mut inbound: Vec<Inject> = Vec::new();
+                for (u, targets) in level.scatter.iter().enumerate() {
+                    if vp.expand[u] {
+                        for &dst in targets {
+                            inbound.push(Inject {
+                                vid: dst,
+                                src_vid: u as u32,
+                                attr: vp.attrs[u],
+                                ready_at: 0,
+                            });
+                        }
+                    }
+                }
+                inst.run_resumed(&level.compiled, vp, vp.attrs.clone(), &inbound, opts)
+            })?;
+            if li == 0 {
+                return Ok(AnnResult {
+                    neighbors: r.neighbors,
+                    attrs: r.attrs,
+                    supersteps: carried_steps + r.supersteps,
+                    cycles: carried_cycles + r.cycles,
+                    delivered: carried_delivered + r.delivered,
+                    edges: carried_edges + r.edges,
+                    activity: {
+                        let mut a = carried_act;
+                        a.add(&r.activity);
+                        a
+                    },
+                });
+            }
+            carried_cycles += r.cycles;
+            carried_steps += r.supersteps;
+            carried_delivered += r.delivered;
+            carried_edges += r.edges;
+            carried_act.add(&r.activity);
+            // handoff: this level's winners, as the next level's entries
+            let below = &ix.levels[li - 1];
+            entries = r
+                .neighbors
+                .iter()
+                .filter_map(|&(v, _)| {
+                    let base = level.ids[v as usize];
+                    below.ids.binary_search(&base).ok().map(|i| i as u32)
+                })
+                .collect();
+        }
+        Err(SimError::invalid("ANN index has no levels"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(n: usize, seed: u64) -> (Graph, Embeddings) {
+        generate::ann_graph(n, 8, 4, seed)
+    }
+
+    #[test]
+    fn beam_step_hooks_encode_the_contract() {
+        let (_, emb) = fixture(16, 3);
+        let q = emb.vector(0).to_vec();
+        let vp = BeamStep {
+            emb: &emb,
+            query: &q,
+            attrs: (0..16).collect(),
+            expand: (0..16).map(|v| v == 2).collect(),
+            radius: 99,
+        };
+        assert_eq!(vp.combine(41, 7), 0, "packets only activate");
+        assert_eq!(vp.aux(5), emb.dist_to(5, &q), "aux lane is the exact distance");
+        assert_eq!(vp.bound(), 99, "bound register is the frozen radius");
+        assert_eq!(vp.init_attr(7, 16), 7);
+        assert!(vp.seeds(2) && !vp.seeds(3), "beam membership seeds");
+        assert!(!vp.announces(2, 1) && !vp.single_source());
+    }
+
+    #[test]
+    fn fabric_search_matches_oracle_bitwise() {
+        let (g, emb) = fixture(48, 11);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts::default());
+        let params = AnnParams { beam: 8, k: 4, ..AnnParams::default() };
+        let q = emb.vector(17).to_vec();
+        let entries = [0u32, 5];
+        let want = reference::beam_search(&g, &emb, &q, &entries, params.beam, params.k);
+        let got = search(&c, &g, &emb, &q, &entries, &params, &SimOptions::default())
+            .unwrap_or_else(|e| panic!("search failed: {e:?}"));
+        assert_eq!(got.neighbors, want.neighbors);
+        assert_eq!(got.attrs, want.attrs);
+        assert_eq!(got.supersteps, want.supersteps);
+        assert!(got.cycles > 0 && got.delivered > 0 && got.activity.alu_ops > 0);
+    }
+
+    #[test]
+    fn naive_core_matches_event_core() {
+        let (g, emb) = fixture(40, 21);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts::default());
+        let params = AnnParams { beam: 6, k: 3, ..AnnParams::default() };
+        let q = emb.vector(9).to_vec();
+        let entries = [3u32];
+        let opts = SimOptions::default();
+        let a = search(&c, &g, &emb, &q, &entries, &params, &opts)
+            .unwrap_or_else(|e| panic!("event core failed: {e:?}"));
+        let b = search_naive(&c, &g, &emb, &q, &entries, &params, &opts)
+            .unwrap_or_else(|e| panic!("naive core failed: {e:?}"));
+        assert_eq!(a.neighbors, b.neighbors);
+        assert_eq!(a.attrs, b.attrs);
+        assert_eq!(a.supersteps, b.supersteps);
+    }
+
+    #[test]
+    fn fused_batch_matches_sequential_searches() {
+        let (g, emb) = fixture(48, 5);
+        let cfg = ArchConfig::default();
+        let c = compile(&g, &cfg, &CompileOpts::default());
+        let params = AnnParams { beam: 8, k: 4, ..AnnParams::default() };
+        let opts = SimOptions::default();
+        let queries: Vec<AnnQuery> = [7u32, 21, 40]
+            .iter()
+            .map(|&v| (emb.vector(v).to_vec(), vec![0u32, 11]))
+            .collect();
+        let mut batch = BatchInstance::new(&c, queries.len());
+        let fused = search_batch(&mut batch, &c, &g, &emb, &queries, &params, &opts);
+        for ((q, entries), f) in queries.iter().zip(&fused) {
+            let seq = search(&c, &g, &emb, q, entries, &params, &opts)
+                .unwrap_or_else(|e| panic!("sequential failed: {e:?}"));
+            let f = f.as_ref().unwrap_or_else(|e| panic!("fused lane failed: {e:?}"));
+            assert_eq!(f, &seq, "fused lane must be bitwise equal to sequential");
+        }
+    }
+
+    #[test]
+    fn degenerate_one_level_index_matches_plain_search() {
+        let (g, emb) = fixture(48, 31);
+        let cfg = ArchConfig::default();
+        let params = AnnParams { beam: 8, k: 4, ..AnnParams::default() };
+        let ix = AnnIndex::build(&g, &emb, 1, &cfg, 77, params);
+        assert_eq!(ix.levels.len(), 1);
+        let q = emb.vector(30).to_vec();
+        let entries = ix.probe(&q);
+        let opts = SimOptions::default();
+        let mut s = AnnSearcher::new(&ix);
+        let via_handoff =
+            s.search(&ix, &q, &opts).unwrap_or_else(|e| panic!("searcher failed: {e:?}"));
+        let plain = search(&ix.levels[0].compiled, &g, &emb, &q, &entries, &params, &opts)
+            .unwrap_or_else(|e| panic!("plain failed: {e:?}"));
+        // same machine, same entries: the resume-port superstep must land
+        // on the seeds path's fixpoint (cycle counts may differ)
+        assert_eq!(via_handoff.neighbors, plain.neighbors);
+        assert_eq!(via_handoff.attrs, plain.attrs);
+        assert_eq!(via_handoff.supersteps, plain.supersteps);
+    }
+
+    #[test]
+    fn hierarchy_builds_and_answers() {
+        let (g, emb) = fixture(160, 13);
+        let cfg = ArchConfig::default();
+        let params = AnnParams { beam: 12, k: 5, ..AnnParams::default() };
+        let ix = AnnIndex::build(&g, &emb, 2, &cfg, 9, params);
+        assert_eq!(ix.levels.len(), 2);
+        assert_eq!(ix.levels[1].ids.len(), 40);
+        // upper ids are a subset of base ids, ascending
+        assert!(ix.levels[1].ids.windows(2).all(|w| w[0] < w[1]));
+        let q = emb.vector(99).to_vec();
+        let mut s = AnnSearcher::new(&ix);
+        let r = s
+            .search(&ix, &q, &SimOptions::default())
+            .unwrap_or_else(|e| panic!("hierarchical search failed: {e:?}"));
+        assert_eq!(r.neighbors.len(), 5);
+        // answers are exact distances in ascending (dist, vid) order
+        for w in r.neighbors.windows(2) {
+            assert!((w[0].1, w[0].0) < (w[1].1, w[1].0));
+        }
+        for &(v, d) in &r.neighbors {
+            assert_eq!(d, emb.dist_to(v, &q), "reported distance must be exact");
+        }
+        // the beam can only improve on the best injected entry point
+        let best_entry = ix
+            .probe(&q)
+            .iter()
+            .map(|&e| ix.levels[1].emb.dist_to(e, &q))
+            .min()
+            .unwrap_or(u32::MAX);
+        assert!(r.neighbors[0].1 <= best_entry);
+        assert!(r.supersteps >= 2, "both levels execute at least one superstep");
+    }
+
+    #[test]
+    fn recall_at_10_beats_threshold_on_clustered_embeddings() {
+        // navigable fixture: degree-6 kNN graph, beam ≫ k (the property
+        // battery in tests/ann.rs sweeps this under FLIP_ANN_SEED)
+        let (g, emb) = generate::ann_graph(192, 8, 6, 41);
+        let cfg = ArchConfig::default();
+        let params = AnnParams { beam: 48, ..AnnParams::default() };
+        let ix = AnnIndex::build(&g, &emb, 1, &cfg, 41, params);
+        let mut total = 0.0;
+        let queries = [3u32, 44, 91, 140, 185];
+        for &qv in &queries {
+            let q = emb.vector(qv).to_vec();
+            let entries = ix.probe(&q);
+            let r = search(
+                &ix.levels[0].compiled,
+                &g,
+                &emb,
+                &q,
+                &entries,
+                &params,
+                &SimOptions::default(),
+            )
+            .unwrap_or_else(|e| panic!("search failed: {e:?}"));
+            total += reference::recall(&r.neighbors, &reference::knn_exact(&emb, &q, params.k));
+        }
+        let mean = total / queries.len() as f64;
+        assert!(mean >= 0.9, "mean recall@10 {mean} below threshold");
+    }
+}

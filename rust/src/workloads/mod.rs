@@ -1,9 +1,9 @@
 //! Graph workloads: the paper's Table-3 trio (BFS, SSSP, WCC) plus the
 //! extended scenarios built on the pluggable vertex-program layer
 //! ([`program`]) — PageRank rounds ([`pagerank`]), A*/ALT point-to-point
-//! navigation ([`navigation`]) and randomized maximal independent set
-//! ([`mis`]) — and the op-centric DFGs for the classic-CGRA baseline
-//! ([`dfgs`]).
+//! navigation ([`navigation`]), randomized maximal independent set
+//! ([`mis`]) and beam-search approximate nearest neighbor ([`ann`]) —
+//! and the op-centric DFGs for the classic-CGRA baseline ([`dfgs`]).
 //!
 //! [`Workload`] is the *name*: a parseable identifier for CLIs, reports
 //! and sweeps. The *behaviour* lives in [`program::VertexProgram`]
@@ -12,6 +12,7 @@
 //! graph-derived state (contributions, heuristics, priorities) and are
 //! built by their modules' constructors.
 
+pub mod ann;
 pub mod dfgs;
 pub mod mis;
 pub mod navigation;
@@ -36,6 +37,8 @@ pub enum Workload {
     AStar,
     /// Randomized maximal independent set ([`mis`]).
     Mis,
+    /// Beam-search approximate nearest neighbor ([`ann`]).
+    Ann,
 }
 
 impl Workload {
@@ -45,7 +48,8 @@ impl Workload {
 
     /// The extended scenarios on the vertex-program layer (driven by the
     /// `scenarios` experiment, not the paper-artifact sweeps).
-    pub const EXTENDED: [Workload; 3] = [Workload::PageRank, Workload::AStar, Workload::Mis];
+    pub const EXTENDED: [Workload; 4] =
+        [Workload::PageRank, Workload::AStar, Workload::Mis, Workload::Ann];
 
     /// Display name.
     pub fn name(self) -> &'static str {
@@ -56,6 +60,7 @@ impl Workload {
             Workload::PageRank => "PageRank",
             Workload::AStar => "A*",
             Workload::Mis => "MIS",
+            Workload::Ann => "ANN",
         }
     }
 
@@ -68,6 +73,7 @@ impl Workload {
             "pagerank" | "pr" => Some(Workload::PageRank),
             "astar" | "a*" | "nav" => Some(Workload::AStar),
             "mis" => Some(Workload::Mis),
+            "ann" | "knn" => Some(Workload::Ann),
             _ => None,
         }
     }
@@ -75,15 +81,15 @@ impl Workload {
     /// True for the extended scenarios whose programs carry graph-derived
     /// state (see [`Workload::builtin_program`]).
     pub fn is_extended(self) -> bool {
-        matches!(self, Workload::PageRank | Workload::AStar | Workload::Mis)
+        matches!(self, Workload::PageRank | Workload::AStar | Workload::Mis | Workload::Ann)
     }
 
     /// The stateless built-in program of a trio workload.
     ///
     /// Panics for the extended workloads: their programs need per-graph
     /// state — construct them via [`pagerank::run_rounds`],
-    /// [`navigation::AStar::new`] / [`navigation::plan`] or
-    /// [`mis::Mis::build`] instead.
+    /// [`navigation::AStar::new`] / [`navigation::plan`],
+    /// [`mis::Mis::build`] or [`ann::search_with`] instead.
     pub fn builtin_program(self) -> Box<dyn VertexProgram> {
         // one workload→program mapping: the boxed form wraps the same
         // [`BuiltinProgram`] the monomorphized path runs on (the enum
@@ -93,6 +99,9 @@ impl Workload {
 
     /// True if the workload starts from a single source vertex; dense-
     /// seeded workloads (WCC/PageRank/MIS) ignore the source argument.
+    /// ANN counts as single-source at the serving layer — a query names
+    /// one query vertex — even though each expansion superstep seeds
+    /// densely from the beam ([`ann::BeamStep::seeds`]).
     pub fn single_source(self) -> bool {
         !matches!(self, Workload::Wcc | Workload::PageRank | Workload::Mis)
     }
@@ -134,7 +143,7 @@ impl BuiltinProgram {
             Workload::Wcc => BuiltinProgram::LabelProp(LabelProp),
             _ => panic!(
                 "{} carries graph-derived state; build it via \
-                 workloads::{{pagerank, navigation, mis}}",
+                 workloads::{{pagerank, navigation, mis, ann}}",
                 w.name()
             ),
         }

@@ -1,0 +1,328 @@
+//! Beam-search ANN oracle-differential battery (DESIGN.md §10).
+//!
+//! Three layers of guarantees:
+//!
+//! * **bitwise triple equality** — the event-driven core, the naive
+//!   cycle-stepped reference core, and the CPU beam-search oracle
+//!   ([`reference::beam_search`]) must agree on neighbors, final
+//!   attributes and superstep count for every query; the two fabric
+//!   backends must additionally agree on every metric (cycles,
+//!   deliveries, activity). The same equality must survive fused
+//!   [`BatchInstance`] lanes (B ∈ {1, 2, 8}), multi-chip sharding
+//!   (K ∈ {1, 2, 4}, pooled or serial supersteps) and a slice-swapping
+//!   machine too small to hold the graph resident;
+//! * **recall@10 ≥ 0.9** — a seeded property over clustered embeddings:
+//!   recall is a function of (embeddings, graph, beam, entry seeding)
+//!   only, because the fabric reproduces the oracle bitwise;
+//! * **hierarchy handoff** — a degenerate single-level [`AnnIndex`]
+//!   driven through the resume-port searcher ([`AnnSearcher`]) must
+//!   reproduce the flat [`ann::search`] answer bitwise, and a real
+//!   two-level index must return well-formed base-graph neighbors.
+//!
+//! Randomized suites derive from one 64-bit seed; on failure the panic
+//! names it. Re-run just that case with
+//! `FLIP_ANN_SEED=0x<seed> cargo test -q --test ann`.
+
+mod common;
+
+use flip::compiler::{compile, CompileOpts};
+use flip::config::ArchConfig;
+use flip::graph::{generate, reference};
+use flip::sim::multichip::ShardedMachine;
+use flip::sim::{BatchInstance, SimOptions};
+use flip::util::WorkerPool;
+use flip::workloads::ann::{self, AnnIndex, AnnParams, AnnQuery, AnnSearcher};
+
+/// xorshift64* — independent of the crate's xoshiro so test inputs
+/// cannot covary with any in-crate randomness.
+struct XorShift {
+    s: u64,
+}
+
+impl XorShift {
+    fn new(seed: u64) -> XorShift {
+        XorShift { s: seed | 1 }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.s;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.s = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+}
+
+/// The per-suite seed list: `cases` seeds derived from `salt`, or just
+/// the user's `FLIP_ANN_SEED` when set (the one-line repro path).
+fn seeds(salt: u64, cases: usize) -> Vec<u64> {
+    if let Ok(s) = std::env::var("FLIP_ANN_SEED") {
+        let s = s.trim();
+        let parsed = match s.strip_prefix("0x") {
+            Some(h) => u64::from_str_radix(h, 16),
+            None => s.parse::<u64>(),
+        };
+        return vec![parsed.unwrap_or_else(|_| panic!("bad FLIP_ANN_SEED `{s}`"))];
+    }
+    let mut x = XorShift::new(0xA22 ^ salt);
+    (0..cases).map(|_| x.next_u64()).collect()
+}
+
+/// Run one randomized case, panicking with the repro seed on failure.
+fn drive(name: &str, salt: u64, cases: usize, f: impl Fn(&mut XorShift) -> Result<(), String>) {
+    for seed in seeds(salt, cases) {
+        let mut x = XorShift::new(seed);
+        if let Err(msg) = f(&mut x) {
+            panic!(
+                "ann battery `{name}` failed: {msg}\n  one-line repro: \
+                 FLIP_ANN_SEED={seed:#x} cargo test -q --test ann {name}"
+            );
+        }
+    }
+}
+
+fn opts() -> SimOptions {
+    SimOptions { max_cycles: 2_000_000_000, watchdog: 5_000_000, ..Default::default() }
+}
+
+/// Assert the oracle-facing half of an [`ann::AnnResult`] matches the
+/// CPU beam search bitwise (neighbors, attrs, supersteps).
+fn assert_oracle(got: &ann::AnnResult, want: &reference::BeamTrace, what: &str) {
+    assert_eq!(got.neighbors, want.neighbors, "{what}: neighbors diverge from oracle");
+    assert_eq!(got.attrs, want.attrs, "{what}: attrs diverge from oracle");
+    assert_eq!(got.supersteps, want.supersteps, "{what}: supersteps diverge from oracle");
+}
+
+// ---- 1. bitwise triple equality across every backend --------------------
+
+/// Event core ≡ naive reference core ≡ CPU oracle, then the same answer
+/// through fused batch lanes (B ∈ {1, 2, 8}) and sharded fabrics
+/// (K ∈ {1, 2, 4}, serial and pooled supersteps). Metric-level equality
+/// (full [`ann::AnnResult`], cycles included) is asserted wherever the
+/// design promises it: naive vs event, lanes vs sequential, pool vs
+/// serial, and K = 1 vs single-chip.
+#[test]
+fn triple_equality_across_lanes_and_shards() {
+    let (g, emb) = generate::ann_graph(64, 8, 6, 29);
+    let cfg = ArchConfig::default();
+    let c = compile(&g, &cfg, &CompileOpts::default());
+    let params = AnnParams { beam: 12, k: 6, ..AnnParams::default() };
+    let queries: Vec<AnnQuery> = [7u32, 19, 42, 63, 7, 30, 55, 11]
+        .iter()
+        .map(|&v| {
+            let q = emb.vector(v).to_vec();
+            let entries = vec![0u32, (v + 1) % 64, 5];
+            (q, entries)
+        })
+        .collect();
+
+    // sequential event core vs naive core vs oracle, per query
+    let mut sequential = Vec::new();
+    for (q, entries) in &queries {
+        let want = reference::beam_search(&g, &emb, q, entries, params.beam, params.k);
+        let got = ann::search(&c, &g, &emb, q, entries, &params, &opts())
+            .unwrap_or_else(|e| panic!("event-core search failed: {e}"));
+        assert_oracle(&got, &want, "event core");
+        let slow = ann::search_naive(&c, &g, &emb, q, entries, &params, &opts())
+            .unwrap_or_else(|e| panic!("naive-core search failed: {e}"));
+        assert_eq!(slow, got, "naive core diverges from event core (metrics included)");
+        sequential.push(got);
+    }
+
+    // fused lanes: each lane bitwise equal to its sequential run
+    for lanes in [1usize, 2, 8] {
+        let mut batch = BatchInstance::new(&c, lanes);
+        for (ci, chunk) in queries.chunks(lanes).enumerate() {
+            let out = ann::search_batch(&mut batch, &c, &g, &emb, chunk, &params, &opts());
+            for (li, r) in out.into_iter().enumerate() {
+                let r = r.unwrap_or_else(|e| panic!("B={lanes} lane {li} failed: {e}"));
+                assert_eq!(
+                    r,
+                    sequential[ci * lanes + li],
+                    "B={lanes} lane {li}: fused run diverges from sequential"
+                );
+            }
+        }
+    }
+
+    // sharded fabric: oracle equality at every K; pool ≡ serial bitwise;
+    // K = 1 metric-identical to the single-chip event core
+    let pool = WorkerPool::new(2);
+    for k in [1usize, 2, 4] {
+        let m = ShardedMachine::build(&g, k, &cfg, 29);
+        let mut insts = m.new_instances();
+        for ((q, entries), want) in queries.iter().zip(&sequential) {
+            let serial =
+                ann::search_sharded(&m, &mut insts, &g, &emb, q, entries, &params, &opts(), None)
+                    .unwrap_or_else(|e| panic!("K={k} serial search failed: {e}"));
+            assert_eq!(serial.neighbors, want.neighbors, "K={k}: neighbors diverge");
+            assert_eq!(serial.attrs, want.attrs, "K={k}: attrs diverge");
+            assert_eq!(serial.supersteps, want.supersteps, "K={k}: supersteps diverge");
+            let pooled = ann::search_sharded(
+                &m,
+                &mut insts,
+                &g,
+                &emb,
+                q,
+                entries,
+                &params,
+                &opts(),
+                Some(&pool),
+            )
+            .unwrap_or_else(|e| panic!("K={k} pooled search failed: {e}"));
+            assert_eq!(pooled, serial, "K={k}: pooled supersteps diverge from serial");
+            if k == 1 {
+                assert_eq!(serial, *want, "K=1 must be metric-identical to single-chip");
+            }
+        }
+    }
+}
+
+/// The same triple equality on a machine too small to hold the graph
+/// resident, so every superstep crosses the slice-swapping path: a
+/// 4×4 array with 2-deep DRFs (capacity 32) serving a 48-vertex graph.
+#[test]
+fn triple_equality_survives_slice_swapping() {
+    let cfg = ArchConfig { array_w: 4, array_h: 4, drf_size: 2, ..ArchConfig::default() };
+    let (g, emb) = generate::ann_graph(48, 8, 6, 31);
+    let c = compile(&g, &cfg, &CompileOpts::default());
+    assert!(c.placement.num_copies > 1, "fixture must actually swap");
+    let params = AnnParams { beam: 8, k: 4, ..AnnParams::default() };
+    let queries: Vec<AnnQuery> =
+        [3u32, 27, 44].iter().map(|&v| (emb.vector(v).to_vec(), vec![0u32, 9])).collect();
+    let mut sequential = Vec::new();
+    for (q, entries) in &queries {
+        let want = reference::beam_search(&g, &emb, q, entries, params.beam, params.k);
+        let got = ann::search(&c, &g, &emb, q, entries, &params, &opts())
+            .unwrap_or_else(|e| panic!("swapping search failed: {e}"));
+        assert_oracle(&got, &want, "swapping event core");
+        let slow = ann::search_naive(&c, &g, &emb, q, entries, &params, &opts())
+            .unwrap_or_else(|e| panic!("swapping naive search failed: {e}"));
+        assert_eq!(slow, got, "swapping: naive diverges from event core");
+        sequential.push(got);
+    }
+    let mut batch = BatchInstance::new(&c, queries.len());
+    let out = ann::search_batch(&mut batch, &c, &g, &emb, &queries, &params, &opts());
+    for (i, r) in out.into_iter().enumerate() {
+        let r = r.unwrap_or_else(|e| panic!("swapping lane {i} failed: {e}"));
+        assert_eq!(r, sequential[i], "swapping lane {i}: fused diverges from sequential");
+    }
+}
+
+// ---- 2. recall@10 as a seeded property ----------------------------------
+
+/// On clustered embeddings with a generous beam, hash-seeded beam search
+/// must recover ≥ 0.9 of the exact 10-NN on average. Recall is measured
+/// on the fabric's answer (not the oracle's), so this doubles as an
+/// end-to-end sanity check of the full index → probe → search pipeline.
+#[test]
+fn recall_at_10_meets_threshold_on_seeded_indexes() {
+    drive("recall_at_10_meets_threshold_on_seeded_indexes", 0x2EC0, 3, |x| {
+        let n = 96 + x.below(97) as usize; // 96..=192
+        let (g, emb) = generate::ann_graph(n, 8, 6, x.next_u64());
+        let params = AnnParams { k: 10, beam: 64, ..AnnParams::default() };
+        let ix = AnnIndex::build(&g, &emb, 1, &ArchConfig::default(), x.next_u64(), params);
+        let mut searcher = AnnSearcher::new(&ix);
+        let queries = 5usize;
+        let mut total = 0.0f64;
+        for _ in 0..queries {
+            let qv = emb.vector(x.below(n as u64) as u32).to_vec();
+            let r = searcher
+                .search(&ix, &qv, &opts())
+                .map_err(|e| format!("seeded search failed: {e}"))?;
+            total += reference::recall(&r.neighbors, &reference::knn_exact(&emb, &qv, params.k));
+        }
+        let mean = total / queries as f64;
+        if mean < 0.9 {
+            return Err(format!("mean recall@10 {mean:.3} < 0.9 over {queries} queries (|V|={n})"));
+        }
+        Ok(())
+    });
+}
+
+// ---- 3. hierarchy handoff -----------------------------------------------
+
+/// A single-level index driven through the resume-port searcher must
+/// reproduce the flat dense-seeded search bitwise on everything the
+/// oracle sees (neighbors, attrs, supersteps) — the handoff's `Inject`
+/// dedup rule must be semantically invisible.
+#[test]
+fn degenerate_hierarchy_matches_flat_search() {
+    let (g, emb) = generate::ann_graph(80, 8, 6, 37);
+    let params = AnnParams { beam: 10, k: 5, ..AnnParams::default() };
+    let ix = AnnIndex::build(&g, &emb, 1, &ArchConfig::default(), 37, params);
+    assert_eq!(ix.levels.len(), 1, "degenerate build must stay single-level");
+    let mut searcher = AnnSearcher::new(&ix);
+    for v in [2u32, 41, 79] {
+        let qv = emb.vector(v).to_vec();
+        let entries = ix.probe(&qv);
+        let flat = ann::search(&ix.base().compiled, &g, &emb, &qv, &entries, &params, &opts())
+            .unwrap_or_else(|e| panic!("flat search failed: {e}"));
+        let via = searcher
+            .search(&ix, &qv, &opts())
+            .unwrap_or_else(|e| panic!("searcher failed: {e}"));
+        assert_eq!(via.neighbors, flat.neighbors, "query {v}: neighbors diverge");
+        assert_eq!(via.attrs, flat.attrs, "query {v}: attrs diverge");
+        assert_eq!(via.supersteps, flat.supersteps, "query {v}: supersteps diverge");
+        let want = reference::beam_search(&g, &emb, &qv, &entries, params.beam, params.k);
+        assert_oracle(&flat, &want, "flat search");
+    }
+}
+
+/// A real two-level hierarchy: the coarse level's winners seed the base
+/// level through the resume port. The answer must be well-formed
+/// base-graph neighbors — exact distances, ascending `(dist, vid)`
+/// order, `k` rows — and must cost supersteps on both levels.
+#[test]
+fn two_level_hierarchy_returns_well_formed_base_answers() {
+    let (g, emb) = generate::ann_graph(256, 8, 6, 43);
+    let params = AnnParams { k: 8, beam: 24, ..AnnParams::default() };
+    let ix = AnnIndex::build(&g, &emb, 2, &ArchConfig::default(), 43, params);
+    assert_eq!(ix.levels.len(), 2, "256 vertices coarsen to one upper level");
+    let mut searcher = AnnSearcher::new(&ix);
+    let mut x = XorShift::new(0xB0B);
+    for _ in 0..4 {
+        let qv = emb.vector(x.below(256) as u32).to_vec();
+        let r = searcher
+            .search(&ix, &qv, &opts())
+            .unwrap_or_else(|e| panic!("hierarchical search failed: {e}"));
+        assert_eq!(r.neighbors.len(), params.k, "k rows");
+        for w in r.neighbors.windows(2) {
+            assert!(
+                (w[0].1, w[0].0) < (w[1].1, w[1].0),
+                "neighbors must ascend by (dist, vid): {:?}",
+                r.neighbors
+            );
+        }
+        for &(v, d) in &r.neighbors {
+            assert!((v as usize) < 256, "neighbor {v} must be a base-graph id");
+            assert_eq!(d, emb.dist_to(v, &qv), "neighbor {v}: stored distance must be exact");
+            assert_eq!(r.attrs[v as usize], d, "neighbor {v}: attr is its distance");
+        }
+        // the coarse pass costs at least one superstep before the handoff
+        assert!(r.supersteps >= 2, "two live levels must cost ≥ 2 supersteps");
+        assert!(r.cycles > 0 && r.delivered > 0);
+    }
+}
+
+// ---- 4. ANN through the shared random-program factory -------------------
+
+/// The shared test-helper factory's ANN case (`which = 6`) must agree
+/// with the oracle hook like every other program — the same differential
+/// the fuzz suite runs, pinned here on one seed.
+#[test]
+fn factory_ann_case_matches_its_reference_hook() {
+    let mut x = XorShift::new(0x77AA);
+    let g = common::random_graph(&mut |n| x.below(n), 24, 48);
+    let cfg = ArchConfig::default();
+    let (vp, view, src) = common::program_case(6, &g, &mut |n| x.below(n));
+    let c = compile(&view, &cfg, &CompileOpts::default());
+    let r = flip::sim::flip::run_program(&c, vp.as_ref(), src, &opts())
+        .unwrap_or_else(|e| panic!("factory ANN case failed: {e}"));
+    assert_eq!(r.attrs, vp.reference(&view, src), "factory ANN superstep vs oracle");
+}

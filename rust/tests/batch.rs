@@ -4,8 +4,9 @@
 //! paths they replace. This suite proves it with the in-house property
 //! harness (`flip::util::proptest`):
 //!
-//! - `prop_batched_equals_sequential` — all six workload programs
-//!   (trio + PageRank round / A* / MIS) × B ∈ {1, 2, 8} lanes: every
+//! - `prop_batched_equals_sequential` — all seven workload programs
+//!   (trio + PageRank round / A* / MIS / ANN superstep) × B ∈ {1, 2, 8}
+//!   lanes: every
 //!   lane of a fused [`BatchInstance`] pass must match its own
 //!   sequential run on attrs, per-lane cycles, edges traversed, and
 //!   every `SimMetrics` counter.
@@ -38,7 +39,7 @@ fn prop_batched_equals_sequential() {
         let copts = CompileOpts { seed: rng.next_u64(), ..Default::default() };
         let b = [1usize, 2, 8][rng.below(3) as usize];
         let opts = SimOptions::default();
-        let cases = common::six_programs(&g, &mut |n| rng.below(n));
+        let cases = common::all_programs(&g, &mut |n| rng.below(n));
         for (which, (vp, view, src)) in cases.iter().enumerate() {
             let c = compile(view, &cfg, &copts);
             // the trio programs (cases 0-2) are source-parametric, so

@@ -1,15 +1,18 @@
 //! Shared integration-test helpers: the random-graph builder and the
-//! six-workload program factory used by both the sharding battery
-//! (`tests/sharded.rs`) and the fuzz suite (`tests/fuzz.rs`).
+//! seven-workload program factory used by the sharding battery
+//! (`tests/sharded.rs`), the fault battery (`tests/fault.rs`) and the
+//! fuzz suite (`tests/fuzz.rs`).
 //!
 //! Everything is parameterized over a `draw(n) -> uniform in [0, n)`
 //! closure, so each suite keeps its own independent RNG (xoshiro for the
 //! property battery, xorshift64* for the fuzzer) while the graph/program
-//! construction logic exists exactly once — adding a seventh workload
-//! here extends both suites' coverage at the same time.
+//! construction logic exists exactly once — adding a workload here
+//! extends every suite's coverage at the same time.
 #![allow(dead_code)] // each test bin compiles its own copy
 
-use flip::graph::{reference, Graph};
+use flip::arch::isa::{self, Instr};
+use flip::graph::embed::Embeddings;
+use flip::graph::{reference, Graph, INF};
 use flip::workloads::program::VertexProgram;
 use flip::workloads::{mis, navigation, pagerank, view_for, Workload};
 
@@ -40,12 +43,78 @@ pub fn random_graph(draw: Draw<'_>, lo: usize, hi: usize) -> Graph {
     Graph::from_edges(n, &edges, false)
 }
 
-/// Build workload case `which % 6` for `g`: the paper trio, then
-/// PageRank round / A* / MIS. Returns (program, compiled view, source).
+/// One ANN beam-search expansion superstep with owned state — the
+/// seventh factory workload. [`flip::workloads::ann::BeamStep`] borrows
+/// its embedding table, so the factory's boxed-`'static` contract needs
+/// this owning mirror; every hook delegates to the same ISA
+/// ([`isa::PROG_ANN`]) and the same oracle
+/// ([`reference::beam_superstep`]), so the differential suites exercise
+/// the identical fabric semantics: dense seeding from the expand set,
+/// the frozen radius in the bound register, receiver-local distances in
+/// the aux lane, and no re-scatter.
+#[derive(Debug, Clone)]
+pub struct OwnedBeamStep {
+    /// Per-vertex embedding table.
+    pub emb: Embeddings,
+    /// The query vector.
+    pub query: Vec<u8>,
+    /// Attribute state entering the superstep.
+    pub attrs: Vec<u32>,
+    /// This superstep's expand set.
+    pub expand: Vec<bool>,
+    /// Beam radius frozen at superstep entry.
+    pub radius: u32,
+}
+
+impl VertexProgram for OwnedBeamStep {
+    fn name(&self) -> &'static str {
+        "ANN"
+    }
+
+    fn isa(&self) -> &[Instr] {
+        isa::PROG_ANN
+    }
+
+    fn init_attr(&self, vid: u32, _n: usize) -> u32 {
+        self.attrs[vid as usize]
+    }
+
+    fn combine(&self, _attr: u32, _weight: u32) -> u32 {
+        0
+    }
+
+    fn aux(&self, vid: u32) -> u32 {
+        self.emb.dist_to(vid, &self.query)
+    }
+
+    fn bound(&self) -> u32 {
+        self.radius
+    }
+
+    fn single_source(&self) -> bool {
+        false
+    }
+
+    fn seeds(&self, vid: u32) -> bool {
+        self.expand[vid as usize]
+    }
+
+    fn announces(&self, _vid: u32, _attr: u32) -> bool {
+        false
+    }
+
+    fn reference(&self, view: &Graph, _source: u32) -> Vec<u32> {
+        reference::beam_superstep(view, &self.emb, &self.query, &self.attrs, &self.expand, self.radius)
+    }
+}
+
+/// Build workload case `which % 7` for `g`: the paper trio, then
+/// PageRank round / A* / MIS / one ANN beam superstep. Returns
+/// (program, compiled view, source).
 pub fn program_case(which: u64, g: &Graph, draw: Draw<'_>) -> ProgramCase {
     let n = g.num_vertices() as u64;
     let src = draw(n) as u32;
-    match which % 6 {
+    match which % 7 {
         0 => (Workload::Bfs.builtin_program(), g.clone(), src),
         1 => (Workload::Sssp.builtin_program(), g.clone(), src),
         2 => (Workload::Wcc.builtin_program(), view_for(Workload::Wcc, g), src),
@@ -58,14 +127,35 @@ pub fn program_case(which: u64, g: &Graph, draw: Draw<'_>) -> ProgramCase {
             let tgt = draw(n) as u32;
             (Box::new(navigation::AStar::new(g, src, tgt, 3)), g.clone(), src)
         }
-        _ => {
+        5 => {
             let (m, view) = mis::Mis::build(g, draw(u64::MAX));
             (Box::new(m), view, 0)
+        }
+        _ => {
+            // a mid-search beam superstep: a few discovered entry
+            // candidates expand at once under a drawn radius
+            let nv = g.num_vertices();
+            let emb = Embeddings::clustered(nv, 8, 4, draw(u64::MAX));
+            let query = emb.vector(src).to_vec();
+            let mut attrs = vec![INF; nv];
+            let mut expand = vec![false; nv];
+            let mut worst = 0u32;
+            for _ in 0..1 + draw(4) {
+                let e = draw(nv as u64) as u32;
+                let d = emb.dist_to(e, &query);
+                attrs[e as usize] = d;
+                expand[e as usize] = true;
+                worst = worst.max(d);
+            }
+            // half the cases prune against the worst seeded distance,
+            // half run unbounded — both sides of HaltGtBound
+            let radius = if draw(2) == 0 { INF } else { worst };
+            (Box::new(OwnedBeamStep { emb, query, attrs, expand, radius }), g.clone(), src)
         }
     }
 }
 
-/// All six workload programs for one (undirected) graph.
-pub fn six_programs(g: &Graph, draw: Draw<'_>) -> Vec<ProgramCase> {
-    (0..6).map(|which| program_case(which, g, &mut *draw)).collect()
+/// All seven workload programs for one (undirected) graph.
+pub fn all_programs(g: &Graph, draw: Draw<'_>) -> Vec<ProgramCase> {
+    (0..7).map(|which| program_case(which, g, &mut *draw)).collect()
 }

@@ -1,6 +1,6 @@
 //! Fault-injection differential battery (DESIGN.md §8).
 //!
-//! Four layers of guarantees, each checked bitwise where the design
+//! Five layers of guarantees, each checked bitwise where the design
 //! promises bitwise:
 //!
 //! * a *quiet* active plan (seeded, rates 0.0) exercises the faulty
@@ -16,7 +16,10 @@
 //!   stall that exhausted its replays), and the machine must serve the
 //!   next query as if nothing happened;
 //! * the serving engine must retry transients up to the policy budget,
-//!   abort on the deadline, and split a mixed batch into partial results.
+//!   abort on the deadline, and split a mixed batch into partial results;
+//! * the batched performance paths (fused [`BatchInstance`] lanes,
+//!   pooled lockstep supersteps) must preserve every guarantee above
+//!   bitwise — the fault machinery cannot observe how work is scheduled.
 //!
 //! Randomized suites derive from one 64-bit seed; on failure the panic
 //! names it. Re-run just that case with
@@ -32,7 +35,9 @@ use flip::service::{Engine, Job, QueryErrorKind, ServePolicy};
 use flip::sim::flip as flipsim;
 use flip::sim::flip::SimOptions;
 use flip::sim::multichip::{self, ShardedMachine};
-use flip::sim::{FaultPlan, SimError};
+use flip::sim::{BatchInstance, FaultPlan, SimError};
+use flip::util::WorkerPool;
+use flip::workloads::program::VertexProgram;
 use flip::workloads::Workload;
 use std::cell::Cell;
 
@@ -101,7 +106,7 @@ fn quiet_plan(seed: u64) -> FaultPlan {
 // ---- 1. quiet active plan is bitwise inert ------------------------------
 
 /// The fault handshake (sequence numbers, checksums, recovery counters)
-/// must cost zero modeled cycles when no fault fires: for all six
+/// must cost zero modeled cycles when no fault fires: for all seven
 /// workloads at K ∈ {1, 2, 4}, a quiet active plan — and an unhit
 /// deadline — produce runs bitwise identical to `SimOptions::default()`,
 /// on both the sharded fabric and the single-chip event core.
@@ -115,7 +120,7 @@ fn quiet_active_plan_is_bitwise_inert() {
     let quiet = SimOptions { faults: quiet_plan(0xD15EA5E), ..Default::default() };
     let far_deadline =
         SimOptions { deadline: Some(u64::MAX / 2), faults: quiet_plan(3), ..Default::default() };
-    for (vp, view, src) in common::six_programs(&g, &mut |n| x.below(n)) {
+    for (vp, view, src) in common::all_programs(&g, &mut |n| x.below(n)) {
         // single-chip event core
         let c = compile(&view, &cfg, &CompileOpts { seed, ..Default::default() });
         let r0 = flipsim::run_program(&c, &*vp, src, &base).expect("baseline single-chip run");
@@ -168,7 +173,7 @@ fn recoverable_faults_reproduce_fault_free_results() {
             .with_max_replays(6);
         let clean = SimOptions::default();
         let lossy = SimOptions { faults: plan, ..Default::default() };
-        for (vp, view, src) in common::six_programs(&g, &mut |n| x.below(n)) {
+        for (vp, view, src) in common::all_programs(&g, &mut |n| x.below(n)) {
             let m = ShardedMachine::build(&view, k, &cfg, seed);
             let mut insts = m.new_instances();
             let want = multichip::run_program(&m, &mut insts, &*vp, src, &clean)
@@ -321,6 +326,98 @@ fn engine_retries_transients_and_aborts_on_deadline() {
     let err = rep.first_error().expect("a 1-cycle budget cannot answer");
     assert_eq!(err.kind, QueryErrorKind::Deadline);
     assert!(!err.is_retryable());
+}
+
+// ---- 5. fault machinery through the batched paths -----------------------
+
+/// The quiet active plan must stay bitwise inert through fused
+/// [`BatchInstance`] lanes too: every lane of a 3-lane batch running
+/// under the quiet plan equals the plain sequential run of the same
+/// query — the per-lane handshake state cannot leak across lanes.
+#[test]
+fn quiet_plan_is_inert_through_fused_lanes() {
+    let mut x = XorShift::new(0xBA7C);
+    let g = common::random_graph(&mut |n| x.below(n), 16, 40);
+    let cfg = ArchConfig::default();
+    let quiet = SimOptions { faults: quiet_plan(0xF00), ..Default::default() };
+    for (vp, view, src) in common::all_programs(&g, &mut |n| x.below(n)) {
+        let c = compile(&view, &cfg, &CompileOpts { seed: 7, ..Default::default() });
+        let want =
+            flipsim::run_program(&c, &*vp, src, &SimOptions::default()).expect("baseline run");
+        let lanes = 3usize;
+        let queries: Vec<(&dyn VertexProgram, u32)> =
+            (0..lanes).map(|_| (vp.as_ref(), src)).collect();
+        let mut batch = BatchInstance::new(&c, lanes);
+        for (lane, r) in batch.run_batch(&c, &queries, &quiet).into_iter().enumerate() {
+            let r = r.expect("quiet fused lane");
+            assert_eq!(r, want, "{} lane {lane}: quiet fused run diverged", vp.name());
+        }
+    }
+}
+
+/// Pooled supersteps must stay bitwise identical to serial ones with
+/// the fault machinery active: under a quiet plan the pooled run equals
+/// the fault-free serial run outright; under a lossy-within-budget plan
+/// the pooled run ≡ the serial lossy run bitwise, and versus the clean
+/// run only the recovery counters and the cycle total may move.
+#[test]
+fn pooled_supersteps_stay_bitwise_under_faults() {
+    drive("pooled_supersteps_stay_bitwise_under_faults", 0x9001, 3, |x| {
+        let g = common::random_graph(&mut |n| x.below(n), 12, 40);
+        let cfg = ArchConfig::default();
+        let seed = x.next_u64();
+        let k = if x.chance(50) { 2 } else { 4 };
+        let pool = WorkerPool::new(k);
+        let clean = SimOptions::default();
+        let quiet = SimOptions { faults: quiet_plan(x.next_u64()), ..Default::default() };
+        let lossy = SimOptions {
+            faults: FaultPlan::seeded(x.next_u64())
+                .with_link_rate(0.25)
+                .with_stall_rate(0.05)
+                .with_max_retransmits(16)
+                .with_max_replays(6),
+            ..Default::default()
+        };
+        for (vp, view, src) in common::all_programs(&g, &mut |n| x.below(n)) {
+            let m = ShardedMachine::build(&view, k, &cfg, seed);
+            let mut insts = m.new_instances();
+            let want = multichip::run_program(&m, &mut insts, &*vp, src, &clean)
+                .map_err(|e| format!("clean serial run: {e}"))?;
+            let mut insts = m.new_instances();
+            let q = multichip::run_program_on(&m, &mut insts, &*vp, src, &quiet, Some(&pool))
+                .map_err(|e| format!("quiet pooled run: {e}"))?;
+            if q.result != want.result || q.supersteps != want.supersteps {
+                return Err(format!("{}: quiet pooled run diverged from clean serial", vp.name()));
+            }
+            let mut insts = m.new_instances();
+            let ls = match multichip::run_program(&m, &mut insts, &*vp, src, &lossy) {
+                Ok(r) => r,
+                // rare budget exhaustion is legal; the pool contract is
+                // vacuous for this case
+                Err(e) if e.is_retryable() => continue,
+                Err(e) => return Err(format!("lossy serial run failed non-retryably: {e}")),
+            };
+            let mut insts = m.new_instances();
+            let lp = multichip::run_program_on(&m, &mut insts, &*vp, src, &lossy, Some(&pool))
+                .map_err(|e| format!("lossy pooled run: {e}"))?;
+            if lp.result != ls.result || lp.supersteps != ls.supersteps {
+                return Err(format!("{}: pooled lossy run diverged from serial lossy", vp.name()));
+            }
+            if ls.result.attrs != want.result.attrs
+                || ls.result.edges_traversed != want.result.edges_traversed
+                || ls.supersteps != want.supersteps
+            {
+                return Err(format!("{}: recoverable faults changed the computation", vp.name()));
+            }
+            let mut sim = ls.result.sim.clone();
+            sim.link_retransmits = 0;
+            sim.fault_recovery_cycles = 0;
+            if sim != want.result.sim {
+                return Err(format!("{}: lossy run moved a non-recovery metric", vp.name()));
+            }
+        }
+        Ok(())
+    });
 }
 
 /// One rejected job (out-of-range source) must not poison the batch:

@@ -5,7 +5,8 @@
 //! * sharded (K ∈ {1, 2, 4}) vs single-chip event core vs CPU oracle,
 //! * event core vs naive reference stepper (cycles, attrs, metrics),
 //! * weight-delta patching vs full recompilation,
-//! * engine batches vs sequential runs.
+//! * engine batches vs sequential runs,
+//! * ANN beam search: fused lanes vs sequential vs the CPU oracle.
 //!
 //! Every case derives from one 64-bit seed. On a mismatch the panic
 //! names that seed; re-run just it with
@@ -16,11 +17,12 @@ mod common;
 
 use flip::compiler::{compile, CompileOpts};
 use flip::config::ArchConfig;
-use flip::graph::{reference, Delta, Graph};
+use flip::graph::{generate, reference, Delta, Graph};
 use flip::sim::flip as flipsim;
 use flip::sim::flip::SimOptions;
 use flip::sim::multichip::{self, ShardedMachine};
-use flip::sim::naive;
+use flip::sim::{naive, BatchInstance};
+use flip::workloads::ann::{self, AnnParams, AnnQuery};
 use flip::workloads::program::VertexProgram;
 use flip::workloads::Workload;
 
@@ -93,9 +95,9 @@ fn fuzz_graph(x: &mut XorShift, lo: usize, hi: usize) -> Graph {
     common::random_graph(&mut |n| x.below(n), lo, hi)
 }
 
-/// One of the six workload programs, with its compiled view and source.
+/// One of the seven workload programs, with its compiled view and source.
 fn fuzz_program(x: &mut XorShift, g: &Graph) -> common::ProgramCase {
-    let which = x.below(6);
+    let which = x.below(7);
     common::program_case(which, g, &mut |n| x.below(n))
 }
 
@@ -198,6 +200,51 @@ fn fuzz_delta_patch_vs_recompile() {
         }
         if a.attrs != reference::dijkstra(&g2, src) {
             return Err("patched run diverges from oracle on new weights".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fuzz_ann_fused_vs_sequential_vs_oracle() {
+    drive("fuzz_ann_fused_vs_sequential_vs_oracle", 0xA7, 4, |x| {
+        let n = 24 + x.below(56) as usize;
+        let (g, emb) = generate::ann_graph(n, 8, 6, x.next_u64());
+        let cfg = ArchConfig::default();
+        let c =
+            compile(&g, &cfg, &CompileOpts { seed: x.next_u64(), ..Default::default() });
+        let params = AnnParams {
+            k: 2 + x.below(4) as usize,
+            beam: 6 + x.below(10) as usize,
+            ..AnnParams::default()
+        };
+        let lanes = 1 + x.below(4) as usize;
+        let queries: Vec<AnnQuery> = (0..lanes)
+            .map(|_| {
+                let q = emb.vector(x.below(n as u64) as u32).to_vec();
+                // duplicate entry points are legal — dedup is the search's job
+                let entries: Vec<u32> =
+                    (0..1 + x.below(3)).map(|_| x.below(n as u64) as u32).collect();
+                (q, entries)
+            })
+            .collect();
+        let opts = SimOptions::default();
+        let mut batch = BatchInstance::new(&c, lanes);
+        let fused = ann::search_batch(&mut batch, &c, &g, &emb, &queries, &params, &opts);
+        for (i, ((q, entries), f)) in queries.iter().zip(fused).enumerate() {
+            let f = f.map_err(|e| format!("fused lane {i}: {e}"))?;
+            let seq = ann::search(&c, &g, &emb, q, entries, &params, &opts)
+                .map_err(|e| format!("sequential query {i}: {e}"))?;
+            if f != seq {
+                return Err(format!("query {i}: fused lane diverges from sequential"));
+            }
+            let want = reference::beam_search(&g, &emb, q, entries, params.beam, params.k);
+            if f.neighbors != want.neighbors
+                || f.attrs != want.attrs
+                || f.supersteps != want.supersteps
+            {
+                return Err(format!("query {i}: fabric diverges from the CPU oracle"));
+            }
         }
         Ok(())
     });

@@ -1,6 +1,6 @@
 //! The sharding differential battery (DESIGN.md §7): K-chip lockstep
 //! runs must converge to vertex attributes equal to the single-chip
-//! event core AND the CPU oracle, for all six workloads, for
+//! event core AND the CPU oracle, for all seven workloads, for
 //! K ∈ {1, 2, 4} — with K = 1 additionally bit-identical in cycles and
 //! every metric to an unsharded run. Swapping shards and aborted runs
 //! are part of the battery.
@@ -24,22 +24,22 @@ fn random_graph(rng: &mut Rng, lo: usize, hi: usize) -> Graph {
     common::random_graph(&mut |n| rng.below(n), lo, hi)
 }
 
-/// All six workload programs for one (undirected) graph.
-fn six_programs(rng: &mut Rng, g: &Graph) -> Vec<common::ProgramCase> {
-    common::six_programs(g, &mut |n| rng.below(n))
+/// All seven workload programs for one (undirected) graph.
+fn all_programs(rng: &mut Rng, g: &Graph) -> Vec<common::ProgramCase> {
+    common::all_programs(g, &mut |n| rng.below(n))
 }
 
 #[test]
-fn prop_sharded_equals_single_chip_and_oracle_all_six_workloads() {
+fn prop_sharded_equals_single_chip_and_oracle_all_workloads() {
     // the headline invariant: K-shard attrs == single-chip event-core
     // attrs == CPU oracle for every workload, K ∈ {1, 2, 4}; K = 1 is
     // additionally metric-identical to the unsharded machine
-    check("sharded_all_six", 5, |rng| {
+    check("sharded_all_workloads", 5, |rng| {
         let g = random_graph(rng, 12, 72);
         let seed = rng.next_u64();
         let cfg = ArchConfig::default();
         let opts = SimOptions::default();
-        for (vp, view, src) in six_programs(rng, &g) {
+        for (vp, view, src) in all_programs(rng, &g) {
             let c = compile(&view, &cfg, &CompileOpts { seed, ..Default::default() });
             let single = flipsim::run_program(&c, vp.as_ref(), src, &opts)
                 .map_err(|e| format!("single-chip {}: {e}", vp.name()))?;

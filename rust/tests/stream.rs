@@ -370,7 +370,7 @@ fn retirement_never_frees_a_pinned_snapshot() {
 
 // ---- 4. epoch chain ≡ stop-the-world ≡ recompile ------------------------
 
-/// The RCU correctness spine: for all six workloads at K ∈ {1, 2, 4},
+/// The RCU correctness spine: for all seven workloads at K ∈ {1, 2, 4},
 /// a chain of N weight-only deltas applied epoch by epoch, the same
 /// deltas merged into one stop-the-world apply, and a full recompile of
 /// the final graph produce bitwise identical machines-in-effect — same
@@ -381,7 +381,7 @@ fn epoch_chain_matches_stop_the_world_and_recompile() {
     drive("epoch_chain_matches_stop_the_world_and_recompile", 0xC4A, 2, |x| {
         let g = common::random_graph(&mut |n| x.below(n), 10, 40);
         let cfg = ArchConfig::default();
-        for (vp, view, src) in common::six_programs(&g, &mut |n| x.below(n)) {
+        for (vp, view, src) in common::all_programs(&g, &mut |n| x.below(n)) {
             let arcs: Vec<(u32, u32, u32)> = view.arcs().collect();
             let nd = if arcs.is_empty() { 0 } else { 1 + x.below(3) as usize };
             let mut deltas: Vec<Delta> = Vec::new();

@@ -90,4 +90,24 @@ if [ "$((served + failed))" -ne "$((hits + lanes))" ]; then
     exit 1
 fi
 
+# Beam-search ANN smoke (DESIGN.md §10): one seeded query batch over a
+# clustered 256-vertex index, asserted on the JSON sink. The fabric is
+# bitwise the CPU oracle, so the recall@10 >= 0.9 gate is a pure
+# index/algorithm check — a fabric regression fails the test suite
+# above, a seeding/index regression fails here.
+echo "== flip run --workload ann smoke (recall gate) =="
+./target/release/flip run --workload ann --n 256 --queries 16 --beam 48 \
+    --json BENCH_ann_smoke.json
+recall="$(grep -o '"ann_recall_at_10":[0-9.]*' BENCH_ann_smoke.json | head -1 | cut -d: -f2)"
+if [ -z "$recall" ]; then
+    echo "error: ANN smoke JSON is missing ann_recall_at_10" >&2
+    exit 1
+fi
+if ! awk -v r="$recall" 'BEGIN { exit !(r >= 0.9) }'; then
+    echo "error: ANN smoke recall@10 $recall < 0.9" >&2
+    exit 1
+fi
+grep -q '"ann_qps":' BENCH_ann_smoke.json \
+    || { echo "error: ANN smoke JSON is missing ann_qps" >&2; exit 1; }
+
 echo "all checks passed"
