@@ -14,7 +14,7 @@
 //!            [--faults SEED] [--deadline CYCLES] [--retries N]
 //!            [--batch-lanes B] [--json PATH] [--set key=val]...
 //! flip serve --duration SECS [--qps-target N] [--update-rate R]
-//!            [--queue-depth D] ...     sustained-load streaming mode
+//!            [--queue-depth D] [--chaos SEED] ...   sustained-load streaming mode
 //! flip compile --group <g> [--idx I]        mapping statistics
 //! flip golden --workload <w> --group <g>    validate sim vs PJRT artifacts
 //! flip info                                 configuration + artifact status
@@ -147,7 +147,9 @@ fn print_usage() {
     println!("                 [--duration SECS] switches to the streaming server:");
     println!("                 open-loop admission at [--qps-target N] with weight deltas");
     println!("                 racing queries at [--update-rate R] per second over RCU");
-    println!("                 epoch snapshots, [--queue-depth D] bounded admission)");
+    println!("                 epoch snapshots, [--queue-depth D] bounded admission,");
+    println!("                 [--chaos SEED] seeded host-fault injection for overload");
+    println!("                 drills: shedding, degraded answers, circuit breakers)");
     println!("  compile        mapping statistics (--group, --idx)");
     println!("  golden         validate simulator vs PJRT golden model");
     println!("  info           configuration and artifact status");
@@ -569,7 +571,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// CI asserts on `p99_cycles`/`deadline_aborts` instead of scraping text.
 fn cmd_serve_stream(args: &Args) -> Result<()> {
     use flip::graph::Delta;
-    use flip::service::stream::{EpochStore, StreamConfig, StreamServer};
+    use flip::service::chaos::ChaosPlan;
+    use flip::service::stream::{EpochStore, Priority, StreamConfig, StreamServer};
     use flip::service::{Job, ServePolicy};
     let env = args.env()?;
     let group = args.group()?;
@@ -582,6 +585,15 @@ fn cmd_serve_stream(args: &Args) -> Result<()> {
     let faults: Option<u64> = args.flag("faults").map(|s| s.parse()).transpose()?;
     let deadline: Option<u64> = args.flag("deadline").map(|s| s.parse()).transpose()?;
     let retries: u32 = args.flag("retries").unwrap_or("0").parse()?;
+    // accepts decimal or 0x-hex, matching the overload battery's
+    // FLIP_CHAOS_SEED repro convention
+    let chaos_seed: Option<u64> = args
+        .flag("chaos")
+        .map(|s| match s.strip_prefix("0x") {
+            Some(h) => u64::from_str_radix(h, 16),
+            None => s.parse(),
+        })
+        .transpose()?;
     let batch_lanes: usize = match args.flag("batch-lanes") {
         Some(b) => b.parse()?,
         None => flip::service::DEFAULT_BATCH_LANES,
@@ -623,12 +635,20 @@ fn cmd_serve_stream(args: &Args) -> Result<()> {
         opts.faults = flip::sim::FaultPlan::seeded(seed);
         println!("  fault plan        : seed {seed}");
     }
+    let chaos = match chaos_seed {
+        Some(seed) => {
+            println!("  chaos plan        : seed {seed}");
+            ChaosPlan::seeded(seed)
+        }
+        None => ChaosPlan::none(),
+    };
     let cfg = StreamConfig {
         queue_depth,
         workers: threads,
         policy: ServePolicy { deadline, max_retries: retries },
         opts,
         batch_lanes,
+        chaos,
         ..Default::default()
     };
     let mut srv = StreamServer::new(store, cfg);
@@ -700,17 +720,30 @@ fn cmd_serve_stream(args: &Args) -> Result<()> {
             break;
         }
         // open-loop admission: whatever the wall clock says is due gets
-        // submitted now; a full queue refuses (and counts) the overflow
+        // submitted now; a full queue refuses (and counts) the overflow.
+        // Priorities round-robin through the three classes so overload
+        // runs exercise the whole shedding ladder.
         let due = (elapsed * qps_target) as u64;
         while submitted < due {
             let job = mk_job(submitted, &mut rng)?;
-            let _ = srv.submit(job);
+            let priority = match submitted % 3 {
+                0 => Priority::Interactive,
+                1 => Priority::Batch,
+                _ => Priority::BestEffort,
+            };
+            let _ = srv.submit_with(job, priority);
             submitted += 1;
         }
         let upd_due = (elapsed * update_rate) as u64;
         while updates_due_done < upd_due {
             let d = mk_delta(&srv, &mut rng);
-            srv.apply_update(&d)?;
+            // an injected epoch-build refusal is part of the scenario
+            // (counted in the stats), not a reason to abort the run
+            if let Err(e) = srv.apply_update(&d) {
+                if chaos_seed.is_none() {
+                    return Err(e.into());
+                }
+            }
             updates_due_done += 1;
         }
         if srv.pending() > 0 {
@@ -768,6 +801,22 @@ fn cmd_serve_stream(args: &Args) -> Result<()> {
         stats.retries, stats.deadline_aborts
     );
     println!(
+        "  overload ladder   : {} shed, {} degraded ({} stale p50 {}), \
+         {} breaker trips / {} probes",
+        stats.shed,
+        stats.degraded,
+        stats.staleness.count(),
+        stats.staleness.p50(),
+        stats.breaker_trips,
+        stats.breaker_probes
+    );
+    if chaos_seed.is_some() {
+        println!(
+            "  chaos injected    : {} build failures, {} worker panics",
+            stats.epoch_build_failures, stats.chaos_panics
+        );
+    }
+    println!(
         "  epochs live       : {:?} (retired {})",
         srv.store().live_epochs(),
         srv.store().retired_count()
@@ -799,7 +848,13 @@ fn cmd_serve_stream(args: &Args) -> Result<()> {
             .metric("shared_hits", stats.shared_hits as f64)
             .metric("lane_count", stats.lane_count as f64)
             .metric("retries", stats.retries as f64)
-            .metric("deadline_aborts", stats.deadline_aborts as f64);
+            .metric("deadline_aborts", stats.deadline_aborts as f64)
+            .metric("shed", stats.shed as f64)
+            .metric("degraded", stats.degraded as f64)
+            .metric("breaker_trips", stats.breaker_trips as f64)
+            .metric("breaker_probes", stats.breaker_probes as f64)
+            .metric("epoch_build_failures", stats.epoch_build_failures as f64)
+            .metric("chaos_panics", stats.chaos_panics as f64);
         sink.write_to(std::path::Path::new(path))?;
         println!("  [json written to {path}]");
     }

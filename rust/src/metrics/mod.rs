@@ -298,6 +298,34 @@ pub struct StreamStats {
     /// Host microseconds spent building next-epoch snapshots (the
     /// off-hot-path RCU copy+patch cost).
     pub epoch_apply_us: u64,
+    /// Jobs offered to `submit`/`submit_with`, accepted or not. The
+    /// overload conservation identity, asserted by the CI overload
+    /// smoke: `submitted == served + failed + shed + rejected`.
+    pub submitted: u64,
+    /// Tickets dropped by load shedding (DESIGN.md §11): refused at
+    /// admission under queue pressure, or evicted from the queue after
+    /// their best-effort sojourn budget expired. Shed tickets never
+    /// count in `served`/`failed` nor in the lane-conservation identity
+    /// — they ran nothing.
+    pub shed: u64,
+    /// Queries answered in a degraded mode (stale epoch, narrowed beam,
+    /// tightened bound, single-chip fallback) while a circuit breaker
+    /// was open. Degraded answers still count in `served`/`failed`;
+    /// this counter is the exactness-loss tally on top.
+    pub degraded: u64,
+    /// Staleness (epochs behind the query's pinned epoch) of each
+    /// stale-read degraded answer.
+    pub staleness: LatencyHistogram,
+    /// Circuit-breaker slots tripped open (DESIGN.md §11).
+    pub breaker_trips: u64,
+    /// Half-open probe queries dispatched by open breaker slots.
+    pub breaker_probes: u64,
+    /// Epoch rebuilds refused by chaos injection
+    /// ([`crate::service::chaos::ChaosPlan::epoch_build_fails`]).
+    pub epoch_build_failures: u64,
+    /// Worker panics (chaos-injected or genuine) converted to
+    /// single-ticket `Fatal` outcomes instead of poisoning the server.
+    pub chaos_panics: u64,
 }
 
 impl StreamStats {

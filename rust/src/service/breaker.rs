@@ -1,0 +1,278 @@
+//! Per-target circuit breakers and degraded-answer configuration for
+//! the streaming server (DESIGN.md §11).
+//!
+//! A [`CircuitBreaker`] watches serving outcomes per *(job class,
+//! serving target)* and, after [`BreakerConfig::threshold`] consecutive
+//! hard failures (`Fatal` or `Transient` — a `LinkFault` classifies
+//! `Transient`), stops sending that class to the fabric: the slot goes
+//! **Open** and subsequent arrivals are routed to the degradation ladder
+//! ([`super::stream::Degraded`]) instead of failing. Every
+//! [`BreakerConfig::probe_interval`]-th arrival while open is promoted
+//! to a **HalfOpen** probe that runs for real; a probe success closes
+//! the slot (exact serving resumes), a probe failure re-opens it.
+//!
+//! The state machine is driven entirely by arrival and outcome *counts*
+//! — never wall-clock — so breaker behavior is deterministic and a
+//! seeded chaos run replays bit-for-bit. Deadline misses, admission
+//! rejections and shed tickets never count against a slot: the breaker
+//! detects a *sick target*, not a busy one (that is admission's job).
+
+use super::Job;
+
+/// Coarse job class half of the breaker key. The class partitions jobs
+/// by which serving path (and which failure domain) they exercise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobClass {
+    /// Breadth-first search jobs.
+    Bfs,
+    /// Single-source shortest path jobs.
+    Sssp,
+    /// Weakly-connected components jobs.
+    Wcc,
+    /// Extended-workload jobs (PageRank, A*, MIS, ANN supersteps).
+    Extended,
+    /// Landmark-guided navigation queries.
+    Navigate,
+    /// Beam-search ANN queries.
+    Ann,
+}
+
+impl JobClass {
+    /// The class a submitted job belongs to.
+    pub fn of(job: &Job) -> JobClass {
+        use crate::workloads::Workload;
+        match job {
+            Job::Workload(Workload::Bfs, _) => JobClass::Bfs,
+            Job::Workload(Workload::Sssp, _) => JobClass::Sssp,
+            Job::Workload(Workload::Wcc, _) => JobClass::Wcc,
+            Job::Workload(_, _) => JobClass::Extended,
+            Job::Navigate { .. } => JobClass::Navigate,
+            Job::AnnSearch(_) => JobClass::Ann,
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            JobClass::Bfs => 0,
+            JobClass::Sssp => 1,
+            JobClass::Wcc => 2,
+            JobClass::Extended => 3,
+            JobClass::Navigate => 4,
+            JobClass::Ann => 5,
+        }
+    }
+}
+
+/// Breaker tuning, part of [`super::stream::StreamConfig`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BreakerConfig {
+    /// Master switch; disabled means every arrival routes to `Serve`.
+    pub enabled: bool,
+    /// Consecutive hard failures that trip a closed slot open.
+    pub threshold: u32,
+    /// While open, every `probe_interval`-th arrival half-opens the slot
+    /// and runs for real; the rest degrade.
+    pub probe_interval: u64,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> BreakerConfig {
+        BreakerConfig { enabled: true, threshold: 8, probe_interval: 4 }
+    }
+}
+
+/// Degraded-answer floors, part of [`super::stream::StreamConfig`]:
+/// how far the ladder may narrow answers while a breaker is open.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DegradeConfig {
+    /// Minimum ANN beam width a degraded search narrows to.
+    pub beam_floor: usize,
+    /// A* bound-register cap for degraded navigation queries.
+    pub bound_floor: u32,
+}
+
+impl Default for DegradeConfig {
+    fn default() -> DegradeConfig {
+        DegradeConfig { beam_floor: 4, bound_floor: 4096 }
+    }
+}
+
+/// Where the breaker routes one arriving unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Slot closed (or breaker disabled): serve exactly.
+    Serve,
+    /// Slot half-opened for this arrival: serve exactly, and this
+    /// outcome alone decides whether the slot closes or re-opens.
+    Probe,
+    /// Slot open: answer from the degradation ladder instead.
+    Degrade,
+}
+
+/// Breaker slot state, observable via [`CircuitBreaker::state`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: arrivals serve exactly.
+    Closed,
+    /// Tripped: arrivals degrade, except scheduled probes.
+    Open,
+    /// A probe is in flight; further arrivals degrade until it reports.
+    HalfOpen,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    state: BreakerState,
+    consecutive: u32,
+    arrivals_while_open: u64,
+}
+
+const SLOT_COUNT: usize = 12; // 6 classes × {single, sharded}
+
+/// Count-driven per-(class, target) circuit breaker.
+#[derive(Debug, Clone)]
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    slots: [Slot; SLOT_COUNT],
+}
+
+impl CircuitBreaker {
+    /// A breaker with every slot closed.
+    pub fn new(cfg: BreakerConfig) -> CircuitBreaker {
+        CircuitBreaker {
+            cfg,
+            slots: [Slot { state: BreakerState::Closed, consecutive: 0, arrivals_while_open: 0 };
+                SLOT_COUNT],
+        }
+    }
+
+    fn slot_index(class: JobClass, sharded: bool) -> usize {
+        class.index() * 2 + usize::from(sharded)
+    }
+
+    /// Current state of one slot.
+    pub fn state(&self, class: JobClass, sharded: bool) -> BreakerState {
+        self.slots[Self::slot_index(class, sharded)].state
+    }
+
+    /// Route one arriving unit. Mutates open slots (probe scheduling is
+    /// arrival-count-driven), so call exactly once per unit.
+    pub fn route(&mut self, class: JobClass, sharded: bool) -> Route {
+        if !self.cfg.enabled {
+            return Route::Serve;
+        }
+        let s = &mut self.slots[Self::slot_index(class, sharded)];
+        match s.state {
+            BreakerState::Closed => Route::Serve,
+            BreakerState::HalfOpen => Route::Degrade,
+            BreakerState::Open => {
+                s.arrivals_while_open += 1;
+                if s.arrivals_while_open % self.cfg.probe_interval.max(1) == 0 {
+                    s.state = BreakerState::HalfOpen;
+                    Route::Probe
+                } else {
+                    Route::Degrade
+                }
+            }
+        }
+    }
+
+    /// Record the outcome of a unit that ran for real (`Route::Serve` or
+    /// `Route::Probe`; degraded units never report here). Returns `true`
+    /// iff this outcome tripped the slot open.
+    pub fn record(&mut self, class: JobClass, sharded: bool, failed: bool, probe: bool) -> bool {
+        if !self.cfg.enabled {
+            return false;
+        }
+        let s = &mut self.slots[Self::slot_index(class, sharded)];
+        if probe {
+            if failed {
+                s.state = BreakerState::Open;
+                s.arrivals_while_open = 0;
+            } else {
+                s.state = BreakerState::Closed;
+                s.consecutive = 0;
+                s.arrivals_while_open = 0;
+            }
+            return false;
+        }
+        if failed {
+            s.consecutive += 1;
+            if s.state == BreakerState::Closed && s.consecutive >= self.cfg.threshold.max(1) {
+                s.state = BreakerState::Open;
+                s.arrivals_while_open = 0;
+                return true;
+            }
+        } else {
+            s.consecutive = 0;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn breaker(threshold: u32, probe_interval: u64) -> CircuitBreaker {
+        CircuitBreaker::new(BreakerConfig { enabled: true, threshold, probe_interval })
+    }
+
+    #[test]
+    fn trips_only_on_consecutive_failures() {
+        let mut b = breaker(3, 4);
+        let c = JobClass::Bfs;
+        assert!(!b.record(c, false, true, false));
+        assert!(!b.record(c, false, true, false));
+        assert!(!b.record(c, false, false, false)); // success resets
+        assert!(!b.record(c, false, true, false));
+        assert!(!b.record(c, false, true, false));
+        assert!(b.record(c, false, true, false)); // third consecutive trips
+        assert_eq!(b.state(c, false), BreakerState::Open);
+    }
+
+    #[test]
+    fn probe_schedule_half_opens_and_recovery_closes() {
+        let mut b = breaker(1, 3);
+        let c = JobClass::Navigate;
+        b.record(c, true, true, false);
+        assert_eq!(b.state(c, true), BreakerState::Open);
+        // arrivals 1, 2 degrade; arrival 3 is the probe
+        assert_eq!(b.route(c, true), Route::Degrade);
+        assert_eq!(b.route(c, true), Route::Degrade);
+        assert_eq!(b.route(c, true), Route::Probe);
+        assert_eq!(b.state(c, true), BreakerState::HalfOpen);
+        // while the probe is in flight, arrivals keep degrading
+        assert_eq!(b.route(c, true), Route::Degrade);
+        // failed probe re-opens, successful probe closes
+        b.record(c, true, true, true);
+        assert_eq!(b.state(c, true), BreakerState::Open);
+        assert_eq!(b.route(c, true), Route::Degrade);
+        assert_eq!(b.route(c, true), Route::Degrade);
+        assert_eq!(b.route(c, true), Route::Probe);
+        b.record(c, true, false, true);
+        assert_eq!(b.state(c, true), BreakerState::Closed);
+        assert_eq!(b.route(c, true), Route::Serve);
+    }
+
+    #[test]
+    fn slots_are_independent_per_class_and_target() {
+        let mut b = breaker(1, 4);
+        b.record(JobClass::Ann, false, true, false);
+        assert_eq!(b.state(JobClass::Ann, false), BreakerState::Open);
+        assert_eq!(b.state(JobClass::Ann, true), BreakerState::Closed);
+        assert_eq!(b.state(JobClass::Bfs, false), BreakerState::Closed);
+        assert_eq!(b.route(JobClass::Bfs, false), Route::Serve);
+    }
+
+    #[test]
+    fn disabled_breaker_never_routes_away_or_trips() {
+        let mut b =
+            CircuitBreaker::new(BreakerConfig { enabled: false, threshold: 1, probe_interval: 1 });
+        for _ in 0..10 {
+            assert!(!b.record(JobClass::Wcc, false, true, false));
+            assert_eq!(b.route(JobClass::Wcc, false), Route::Serve);
+        }
+        assert_eq!(b.state(JobClass::Wcc, false), BreakerState::Closed);
+    }
+}

@@ -1,0 +1,255 @@
+//! Deterministic host-side chaos injection for the serving layer
+//! (DESIGN.md §11).
+//!
+//! [`ChaosPlan`] is the serving-layer twin of [`crate::sim::fault::FaultPlan`]:
+//! a pure function from *event coordinates* to injection decisions.
+//! Where `FaultPlan` breaks the modeled fabric (links, chip stalls),
+//! `ChaosPlan` breaks the host around it — worker threads slow down,
+//! whole drains stall, epoch rebuilds fail, a worker panics mid-unit, or
+//! a unit is handed a synthetic fatal outcome
+//! ([`crate::sim::SimError::Injected`]) without ever running. That last
+//! event exists so the circuit-breaker battery (`tests/overload.rs`) can
+//! trip a breaker on demand instead of having to provoke a real abort.
+//!
+//! Decisions are derived by SplitMix-mixing the event coordinates into
+//! the plan seed (the same `mix` as `sim::fault`), **not** by consuming
+//! a shared stream — so answers do not depend on drain order, the same
+//! (drain, unit) coordinates re-asked give the same answer, and a
+//! one-line seed (`flip serve --chaos SEED`,
+//! `FLIP_CHAOS_SEED=0x.. cargo test -q --test overload`) reproduces any
+//! overload scenario.
+//!
+//! [`ChaosPlan::none`] is inert: every query short-circuits to "no
+//! event" before touching the RNG, so a server configured with it is
+//! bitwise identical — ticket-for-ticket — to a server predating the
+//! chaos layer (`tests/overload.rs` proves it).
+//!
+//! Determinism caveat: slowdown/stall events burn *wall-clock* time
+//! only. They never touch modeled cycles or results — they exist to
+//! back up real queues during overload runs — so modeled outputs stay
+//! bit-identical across machines even though wall latency does not.
+
+use crate::sim::fault::mix;
+use crate::util::rng::Rng;
+
+/// Domain-separation salts for the per-event streams.
+const SALT_SLOW: u64 = 0x736C_6F77; // "slow"
+const SALT_STALL: u64 = 0x6472_7374; // "drst"
+const SALT_BUILD: u64 = 0x6269_6C64; // "bild"
+const SALT_PANIC: u64 = 0x706E_6963; // "pnic"
+const SALT_FATAL: u64 = 0x6661_746C; // "fatl"
+
+/// A seeded, deterministic host-chaos plan threaded through
+/// [`super::stream::StreamConfig`]. Construct with [`ChaosPlan::none`]
+/// (inert) or [`ChaosPlan::seeded`] (default rates), then tune with the
+/// builder methods.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosPlan {
+    seed: u64,
+    active: bool,
+    /// Probability a (drain, worker) dispatch is slowed by [`ChaosPlan::slow_us`].
+    pub p_slow: f64,
+    /// Probability a whole drain pass stalls for [`ChaosPlan::stall_us`]
+    /// before any unit runs.
+    pub p_stall: f64,
+    /// Probability an epoch rebuild (by target version) is refused.
+    pub p_build_fail: f64,
+    /// Probability a (drain, unit) dispatch panics inside its worker.
+    pub p_panic: f64,
+    /// Probability a (drain, unit) is handed a synthetic
+    /// [`crate::sim::SimError::Injected`] fatal outcome without running.
+    pub p_fatal: f64,
+    /// Wall-clock microseconds a slowed worker sleeps.
+    pub slow_us: u64,
+    /// Wall-clock microseconds a stalled drain sleeps.
+    pub stall_us: u64,
+}
+
+impl ChaosPlan {
+    /// The inert plan: injects nothing, costs nothing. A server under
+    /// this plan is bitwise identical to one predating the chaos layer.
+    pub fn none() -> ChaosPlan {
+        ChaosPlan {
+            seed: 0,
+            active: false,
+            p_slow: 0.0,
+            p_stall: 0.0,
+            p_build_fail: 0.0,
+            p_panic: 0.0,
+            p_fatal: 0.0,
+            slow_us: 0,
+            stall_us: 0,
+        }
+    }
+
+    /// An active plan with the default event mix: 10% slow workers, 5%
+    /// stalled drains, 5% refused epoch builds, 1% worker panics, 2%
+    /// synthetic fatal units.
+    pub fn seeded(seed: u64) -> ChaosPlan {
+        ChaosPlan {
+            seed,
+            active: true,
+            p_slow: 0.10,
+            p_stall: 0.05,
+            p_build_fail: 0.05,
+            p_panic: 0.01,
+            p_fatal: 0.02,
+            slow_us: 500,
+            stall_us: 1000,
+        }
+    }
+
+    /// Override the per-(drain, worker) slowdown probability.
+    pub fn with_slow_rate(mut self, p: f64) -> ChaosPlan {
+        self.p_slow = p;
+        self
+    }
+
+    /// Override the per-drain stall probability.
+    pub fn with_stall_rate(mut self, p: f64) -> ChaosPlan {
+        self.p_stall = p;
+        self
+    }
+
+    /// Override the per-epoch build-failure probability.
+    pub fn with_build_fail_rate(mut self, p: f64) -> ChaosPlan {
+        self.p_build_fail = p;
+        self
+    }
+
+    /// Override the per-(drain, unit) worker-panic probability.
+    pub fn with_panic_rate(mut self, p: f64) -> ChaosPlan {
+        self.p_panic = p;
+        self
+    }
+
+    /// Override the per-(drain, unit) synthetic-fatal probability.
+    pub fn with_fatal_rate(mut self, p: f64) -> ChaosPlan {
+        self.p_fatal = p;
+        self
+    }
+
+    /// Whether this plan can inject anything at all.
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// The plan seed (0 for the inert plan).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// One independent RNG stream per event coordinate.
+    fn event_rng(&self, salt: u64, a: u64, b: u64) -> Rng {
+        Rng::new(mix(self.seed, salt, a, b))
+    }
+
+    /// Extra wall-clock microseconds worker `worker` sleeps before
+    /// taking its share of drain `drain`, if any. Wall-clock only —
+    /// never modeled cycles or results.
+    pub fn worker_slowdown(&self, drain: u64, worker: u32) -> Option<u64> {
+        if !self.active {
+            return None;
+        }
+        let mut r = self.event_rng(SALT_SLOW, worker as u64, drain);
+        if !r.chance(self.p_slow) {
+            return None;
+        }
+        Some(self.slow_us)
+    }
+
+    /// Wall-clock microseconds drain pass `drain` stalls before any unit
+    /// runs, if any. Wall-clock only — never modeled cycles or results.
+    pub fn drain_stall(&self, drain: u64) -> Option<u64> {
+        if !self.active {
+            return None;
+        }
+        let mut r = self.event_rng(SALT_STALL, 0, drain);
+        if !r.chance(self.p_stall) {
+            return None;
+        }
+        Some(self.stall_us)
+    }
+
+    /// Whether the rebuild of epoch `version` is refused. A refused
+    /// build leaves the current epoch in place (queries keep serving);
+    /// the server reports a typed error and counts it.
+    pub fn epoch_build_fails(&self, version: u64) -> bool {
+        if !self.active {
+            return false;
+        }
+        self.event_rng(SALT_BUILD, 0, version).chance(self.p_build_fail)
+    }
+
+    /// Whether unit `unit` of drain `drain` panics inside its worker.
+    pub fn unit_panic(&self, drain: u64, unit: u64) -> bool {
+        if !self.active {
+            return false;
+        }
+        self.event_rng(SALT_PANIC, unit, drain).chance(self.p_panic)
+    }
+
+    /// Whether unit `unit` of drain `drain` is handed a synthetic fatal
+    /// outcome ([`crate::sim::SimError::Injected`]) without running.
+    pub fn unit_fatal(&self, drain: u64, unit: u64) -> bool {
+        if !self.active {
+            return false;
+        }
+        self.event_rng(SALT_FATAL, unit, drain).chance(self.p_fatal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_fires() {
+        let p = ChaosPlan::none();
+        assert!(!p.is_active());
+        for d in 0..200 {
+            assert_eq!(p.worker_slowdown(d, 0), None);
+            assert_eq!(p.drain_stall(d), None);
+            assert!(!p.epoch_build_fails(d));
+            assert!(!p.unit_panic(d, 0));
+            assert!(!p.unit_fatal(d, 0));
+        }
+    }
+
+    #[test]
+    fn decisions_are_pure_functions_of_coordinates() {
+        let p = ChaosPlan::seeded(0xC0FFEE)
+            .with_slow_rate(0.5)
+            .with_panic_rate(0.5)
+            .with_fatal_rate(0.5);
+        for d in 0..100 {
+            assert_eq!(p.worker_slowdown(d, 3), p.worker_slowdown(d, 3));
+            assert_eq!(p.unit_panic(d, 7), p.unit_panic(d, 7));
+            assert_eq!(p.unit_fatal(d, 7), p.unit_fatal(d, 7));
+        }
+        // distinct coordinates get independent streams: over 200 events
+        // at p = 0.5 both outcomes must occur
+        let fired = (0..200).filter(|&d| p.unit_panic(d, 0)).count();
+        assert!(fired > 20 && fired < 180, "fired {fired}/200");
+    }
+
+    #[test]
+    fn rate_one_always_fires_and_salts_separate_the_streams() {
+        let p = ChaosPlan::seeded(7).with_fatal_rate(1.0).with_panic_rate(0.0);
+        for d in 0..50 {
+            assert!(p.unit_fatal(d, d));
+            assert!(!p.unit_panic(d, d), "panic stream must not mirror the fatal stream");
+        }
+        let slow = ChaosPlan::seeded(7).with_slow_rate(1.0).with_stall_rate(1.0);
+        assert_eq!(slow.worker_slowdown(0, 0), Some(slow.slow_us));
+        assert_eq!(slow.drain_stall(0), Some(slow.stall_us));
+    }
+
+    #[test]
+    fn different_seeds_give_different_scenarios() {
+        let a = ChaosPlan::seeded(1).with_build_fail_rate(0.5);
+        let b = ChaosPlan::seeded(2).with_build_fail_rate(0.5);
+        let differs = (0..200).any(|v| a.epoch_build_fails(v) != b.epoch_build_fails(v));
+        assert!(differs, "seeds 1 and 2 produced identical build-failure schedules");
+    }
+}

@@ -81,6 +81,8 @@
 //! differential battery in `tests/sharded.rs` proves it); cycle counts
 //! reflect the lockstep timing model.
 
+pub mod breaker;
+pub mod chaos;
 pub mod stream;
 
 use crate::experiments::harness::{CompiledPair, ShardedPair};
@@ -149,6 +151,11 @@ pub enum QueryErrorKind {
     /// A non-transient simulator abort (max-cycles safety net, a
     /// program-contract violation): retrying would reproduce it.
     Fatal,
+    /// The ticket was dropped by load shedding (DESIGN.md §11): its
+    /// best-effort sojourn budget expired while queued. No cycles were
+    /// simulated and the target is not sick — resubmitting under lighter
+    /// load may succeed.
+    Shed,
 }
 
 /// A failed query, surfaced as data so one bad query cannot poison a
@@ -530,7 +537,8 @@ impl<'a> Engine<'a> {
                 let pool = self.pool.as_ref();
                 let m = &mut self.machines[0];
                 for &i in &rest {
-                    let (r, result) = answer_budgeted(m, target, lm, opts, policy, jobs[i], pool);
+                    let (r, result) =
+                        answer_budgeted(m, target, lm, opts, policy, jobs[i], pool, None);
                     retries += u64::from(r);
                     slots[i] = Some(result);
                 }
@@ -562,7 +570,7 @@ impl<'a> Engine<'a> {
                         // never-nest: the pool is busy with this fan-out,
                         // so shard stepping inside a query stays serial
                         let (r, result) =
-                            answer_budgeted(&mut m, target, lm, opts, policy, jobs[i], None);
+                            answer_budgeted(&mut m, target, lm, opts, policy, jobs[i], None, None);
                         local.push((i, r, result));
                     }
                     let mut f = found.lock().unwrap_or_else(|p| p.into_inner());
@@ -841,6 +849,11 @@ fn serve_fused(
 /// step their supersteps' shards on the pool
 /// ([`multichip::run_program_on`]) — callers must only pass a pool that
 /// is idle (never from inside the same pool's fan-out).
+/// `nav_bound_cap` caps the A* bound register of Navigate jobs
+/// ([`crate::workloads::navigation::AStar::with_route_budget`]) — the
+/// streaming layer's degraded-answer floor; `None` (every exact path)
+/// leaves the triangle-inequality bound untouched.
+#[allow(clippy::too_many_arguments)]
 fn answer_budgeted(
     machine: &mut WorkerMachine,
     target: &Target,
@@ -849,6 +862,7 @@ fn answer_budgeted(
     policy: ServePolicy,
     job: Job,
     pool: Option<&WorkerPool>,
+    nav_bound_cap: Option<u32>,
 ) -> (u32, Result<QueryResult, QueryError>) {
     let mut remaining = policy.deadline;
     let mut attempt = 0u32;
@@ -858,7 +872,7 @@ fn answer_budgeted(
             a_opts.deadline = remaining;
         }
         a_opts.faults = opts.faults.reseeded(attempt);
-        let result = answer(machine, target, lm, &a_opts, job, pool);
+        let result = answer(machine, target, lm, &a_opts, job, pool, nav_bound_cap);
         match result {
             Err(ref e) if e.is_retryable() && attempt < policy.max_retries => {
                 if let Some(budget) = remaining {
@@ -889,6 +903,7 @@ fn answer(
     opts: &SimOptions,
     job: Job,
     pool: Option<&WorkerPool>,
+    nav_bound_cap: Option<u32>,
 ) -> Result<QueryResult, QueryError> {
     // unservable job: no cycles simulated, retrying cannot help
     let fail = |msg: String| QueryError {
@@ -944,7 +959,10 @@ fn answer(
             let lm = lm.ok_or_else(|| {
                 fail("navigation needs an undirected road network (no ALT landmarks)".to_string())
             })?;
-            let vp = lm.query(source, dst);
+            let vp = match nav_bound_cap {
+                Some(cap) => lm.query(source, dst).with_route_budget(cap),
+                None => lm.query(source, dst),
+            };
             let run = match (machine, target) {
                 (WorkerMachine::Single(inst), &Target::Single(pair)) => {
                     inst.run_program(&pair.directed, &vp, source, opts).map_err(&sim_fail)?

@@ -70,18 +70,39 @@
 //! (p50/p99/p999 modeled-cycle and wall-clock latency, throughput,
 //! queue depth, epoch lag) consumed by `flip serve --duration`, the
 //! bench JSON sink, and the CI smoke artifact.
+//!
+//! **Overload resilience (DESIGN.md §11).** When offered load exceeds
+//! capacity the server walks a degradation ladder instead of collapsing:
+//! *admission* (priority classes on [`StreamServer::submit_with`], a
+//! queue-pressure signal that refuses best-effort work with
+//! [`AdmissionError::Shed`] while the modeled backlog already exceeds
+//! the deadline budget) → *shed* (a CoDel-style sweep drops queued
+//! `BestEffort` tickets whose modeled-cycle sojourn outlived their
+//! budget, surfaced as [`QueryErrorKind::Shed`] outcomes, never silent)
+//! → *degrade* (while a per-(class, target) circuit breaker
+//! ([`super::breaker`]) is open, queries answer from the newest
+//! still-pinned healthy epoch, a narrowed ANN beam, a tightened A*
+//! bound, or a single-chip fallback — every such answer tagged
+//! [`StreamOutcome::degraded`]) → *break* (the breaker half-opens on a
+//! probe schedule and restores exact serving on a healthy probe). A
+//! seeded host-chaos plan ([`super::chaos::ChaosPlan`]) makes all of it
+//! deterministic and replayable; `tests/overload.rs` is the battery,
+//! including bitwise inertness of the disabled/`none()` configuration.
 
+use super::breaker::{BreakerConfig, BreakerState, CircuitBreaker, DegradeConfig, JobClass, Route};
+use super::chaos::ChaosPlan;
 use super::{
-    answer_budgeted, serve_fused, Job, QueryError, QueryErrorKind, QueryResult, ServePolicy,
-    Target, WorkerMachine, DEFAULT_BATCH_LANES,
+    ann_outcome, answer_budgeted, serve_fused, sim_query_error, Job, QueryError, QueryErrorKind,
+    QueryResult, ServePolicy, Target, WorkerMachine, DEFAULT_BATCH_LANES,
 };
+use crate::sim::error::SimError;
 use crate::experiments::harness::{CompiledPair, ShardedPair};
 use crate::graph::{Delta, Graph};
 use crate::metrics::StreamStats;
 use crate::sim::batch::BatchInstance;
 use crate::sim::flip::{SimInstance, SimOptions};
 use crate::util::WorkerPool;
-use crate::workloads::ann::{AnnIndex, AnnSearcher};
+use crate::workloads::ann::{self, AnnIndex, AnnSearcher};
 use crate::workloads::navigation::Landmarks;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -281,8 +302,21 @@ impl EpochStore {
 pub enum AdmissionError {
     /// The bounded admission queue is at capacity; retry after a drain.
     QueueFull {
-        /// The configured queue depth the submit ran into.
+        /// The *live* pending depth the submit ran into (== the
+        /// configured [`StreamConfig::queue_depth`] at rejection time,
+        /// but reported from the queue itself so backpressure telemetry
+        /// is truthful).
         depth: usize,
+    },
+    /// Queue pressure tightened admission (DESIGN.md §11): clearing the
+    /// modeled backlog would already eat this non-interactive ticket's
+    /// whole deadline budget, so the ticket was refused instead of being
+    /// queued only to be shed later.
+    Shed {
+        /// Modeled-cycle backlog estimate at refusal (pending × p99).
+        backlog: u64,
+        /// The deadline budget the backlog exceeds.
+        budget: u64,
     },
 }
 
@@ -290,13 +324,66 @@ impl std::fmt::Display for AdmissionError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match *self {
             AdmissionError::QueueFull { depth } => {
-                write!(f, "admission queue full (depth {depth})")
+                write!(f, "admission queue full ({depth} pending)")
             }
+            AdmissionError::Shed { backlog, budget } => write!(
+                f,
+                "admission shed under pressure (modeled backlog {backlog} cycles \
+                 exceeds deadline budget {budget})"
+            ),
         }
     }
 }
 
 impl std::error::Error for AdmissionError {}
+
+/// Priority class attached at submission
+/// ([`StreamServer::submit_with`]): the admission and shedding ladder
+/// protects `Interactive` work at the expense of `BestEffort` work.
+/// [`StreamServer::submit`] defaults to `Batch`, which keeps the
+/// pre-priority server's behavior bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    /// Latency-sensitive: never shed by admission pressure or the
+    /// queued-sojourn sweep, drained first.
+    Interactive,
+    /// Ordinary work (the default): shed by admission pressure only once
+    /// the queue is half full, never by the sojourn sweep.
+    #[default]
+    Batch,
+    /// Scavenger work: first to shed under pressure, and evicted from
+    /// the queue once its modeled-cycle sojourn exceeds the deadline.
+    BestEffort,
+}
+
+/// How a degraded answer differs from exact serving (DESIGN.md §11).
+/// Attached to [`StreamOutcome::degraded`] while a circuit breaker is
+/// open; exact answers carry `None`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Degraded {
+    /// Answered against the newest still-pinned healthy epoch instead of
+    /// the pinned one; bitwise what that epoch would have answered.
+    Stale {
+        /// Epochs between the pinned epoch and the one actually served.
+        staleness: u64,
+    },
+    /// ANN search ran with the beam narrowed to the configured floor
+    /// ([`super::breaker::DegradeConfig::beam_floor`]).
+    NarrowedBeam {
+        /// The beam width actually used.
+        beam: usize,
+    },
+    /// Navigation ran with the A* bound register capped at the
+    /// configured floor ([`super::breaker::DegradeConfig::bound_floor`]):
+    /// exact for routes within the cap, unreachable beyond it.
+    TightenedBound {
+        /// The bound register value actually used.
+        bound: u32,
+    },
+    /// A sharded-target query fell back to the single-chip fallback pair
+    /// ([`StreamServer::with_fallback_single`]) at current weights.
+    SingleChip,
+}
 
 /// Streaming-server knobs.
 #[derive(Debug, Clone)]
@@ -315,10 +402,21 @@ pub struct StreamConfig {
     /// of a drain run as one multi-lane pass ([`crate::sim::batch`]).
     /// `<= 1` disables fusing (every unit runs the per-query path).
     pub batch_lanes: usize,
-    /// Per-query deadline/retry policy (the engine's).
+    /// Per-query deadline/retry policy (the engine's). The deadline
+    /// doubles as the shedding budget: without one, no ticket is ever
+    /// shed (admission pressure and the sojourn sweep are both off).
     pub policy: ServePolicy,
     /// Per-query simulator options.
     pub opts: SimOptions,
+    /// Per-(class, target) circuit-breaker tuning (DESIGN.md §11).
+    /// Enabled by default; with no hard failures it never routes a unit
+    /// away, so healthy serving is bit-identical either way.
+    pub breaker: BreakerConfig,
+    /// Degraded-answer floors used while a breaker slot is open.
+    pub degrade: DegradeConfig,
+    /// Host-side chaos plan ([`super::chaos`]); [`ChaosPlan::none`]
+    /// (the default) is bitwise inert.
+    pub chaos: ChaosPlan,
 }
 
 impl Default for StreamConfig {
@@ -331,6 +429,9 @@ impl Default for StreamConfig {
             batch_lanes: DEFAULT_BATCH_LANES,
             policy: ServePolicy::default(),
             opts: SimOptions::default(),
+            breaker: BreakerConfig::default(),
+            degrade: DegradeConfig::default(),
+            chaos: ChaosPlan::none(),
         }
     }
 }
@@ -341,6 +442,10 @@ struct Admitted {
     job: Job,
     epoch: Arc<EpochSnapshot>,
     admitted_at: std::time::Instant,
+    priority: Priority,
+    /// Server modeled clock at admission; the sojourn-shed sweep
+    /// compares `modeled_clock - admitted_clock` against the deadline.
+    admitted_clock: u64,
 }
 
 /// One completed query, fanned back out of its (possibly shared) run.
@@ -350,8 +455,9 @@ pub struct StreamOutcome {
     pub id: u64,
     /// The job answered.
     pub job: Job,
-    /// Epoch version the query pinned at admission (and was answered
-    /// against).
+    /// Epoch version the query was answered against: the epoch pinned at
+    /// admission, except for degraded answers, which report the version
+    /// actually served (stale epoch / current fallback weights).
     pub epoch: u64,
     /// True when this answer was fanned out of a run shared with other
     /// identical queries.
@@ -359,8 +465,15 @@ pub struct StreamOutcome {
     /// Epochs published between this query's admission and its
     /// completion (0 = answered against the then-current state).
     pub lag: u64,
+    /// Priority class the ticket was submitted with.
+    pub priority: Priority,
+    /// `Some` when the answer was served by the degradation ladder while
+    /// a circuit breaker was open — the exactness-loss tag (DESIGN.md
+    /// §11); `None` for exact answers.
+    pub degraded: Option<Degraded>,
     /// The engine-identical result: bitwise what a solo run against the
-    /// pinned epoch returns.
+    /// pinned epoch returns (for degraded answers: against the epoch /
+    /// parameters named by [`StreamOutcome::degraded`]).
     pub result: Result<QueryResult, QueryError>,
 }
 
@@ -388,6 +501,25 @@ pub struct StreamServer {
     /// [`StreamServer::drain_batch`] (previously a per-drain
     /// `thread::scope`, i.e. O(workers) thread churn per drain).
     pool: Option<WorkerPool>,
+    /// Per-(class, target) circuit breakers (DESIGN.md §11).
+    breaker: CircuitBreaker,
+    /// The newest epoch that produced a healthy (exact, `Ok`) answer,
+    /// held weakly: the stale-read ladder serves from it only while some
+    /// *other* pin keeps it alive — the server never extends epoch
+    /// liveness, so retirement observability is unchanged.
+    last_good: Option<Weak<EpochSnapshot>>,
+    /// Single-chip fallback pair for degraded sharded serving
+    /// ([`StreamServer::with_fallback_single`]), patched in lockstep
+    /// with the epoch chain by [`StreamServer::apply_update`].
+    fallback: Option<CompiledPair>,
+    /// Reusable machine over `fallback`, built on first degraded use.
+    fallback_inst: Option<WorkerMachine>,
+    /// Modeled-cycle clock: total cycles this server has simulated.
+    /// Sojourn shedding measures queue wait on this clock (deterministic),
+    /// never on wall time.
+    modeled_clock: u64,
+    /// Drain passes performed — the chaos plan's drain coordinate.
+    drains: u64,
     stats: StreamStats,
     next_id: u64,
 }
@@ -396,6 +528,7 @@ impl StreamServer {
     /// A server over `store` with the given knobs.
     pub fn new(store: EpochStore, cfg: StreamConfig) -> StreamServer {
         let pool = (cfg.workers > 1).then(|| WorkerPool::new(cfg.workers));
+        let breaker = CircuitBreaker::new(cfg.breaker);
         StreamServer {
             store,
             cfg,
@@ -405,9 +538,38 @@ impl StreamServer {
             ann: None,
             ann_searcher: None,
             pool,
+            breaker,
+            last_good: None,
+            fallback: None,
+            fallback_inst: None,
+            modeled_clock: 0,
+            drains: 0,
             stats: StreamStats::default(),
             next_id: 0,
         }
+    }
+
+    /// Attach a single-chip fallback pair for degraded sharded serving:
+    /// while a breaker on the K-chip target is open, non-ANN queries run
+    /// on this pair at *current* weights instead of failing
+    /// ([`Degraded::SingleChip`]). The pair must be compiled from the
+    /// same graph as the store's epoch 0; [`StreamServer::apply_update`]
+    /// patches it in lockstep with the epoch chain.
+    pub fn with_fallback_single(mut self, pair: CompiledPair) -> StreamServer {
+        self.fallback = Some(pair);
+        self.fallback_inst = None;
+        self
+    }
+
+    /// Replace the chaos plan mid-session (the overload battery's
+    /// recovery phase flips back to [`ChaosPlan::none`]).
+    pub fn set_chaos(&mut self, plan: ChaosPlan) {
+        self.cfg.chaos = plan;
+    }
+
+    /// Current breaker state of one `(job class, sharded?)` slot.
+    pub fn breaker_state(&self, class: JobClass, sharded: bool) -> BreakerState {
+        self.breaker.state(class, sharded)
     }
 
     /// Attach a compiled ANN index ([`crate::workloads::ann::AnnIndex`]):
@@ -435,13 +597,39 @@ impl StreamServer {
         self.queue.len()
     }
 
-    /// Admit one query: pin the current epoch and enqueue, or refuse with
-    /// [`AdmissionError::QueueFull`]. Returns the ticket id that will
-    /// come back on the [`StreamOutcome`].
+    /// Admit one query at [`Priority::Batch`]: pin the current epoch and
+    /// enqueue, or refuse with a typed [`AdmissionError`]. Returns the
+    /// ticket id that will come back on the [`StreamOutcome`].
     pub fn submit(&mut self, job: Job) -> Result<u64, AdmissionError> {
-        if self.queue.len() >= self.cfg.queue_depth {
+        self.submit_with(job, Priority::Batch)
+    }
+
+    /// Admit one query with an explicit [`Priority`] (DESIGN.md §11).
+    /// Beyond the bounded-queue check, admission watches a live pressure
+    /// signal: once the modeled backlog (pending × p99 cycles) already
+    /// exceeds the deadline budget, `BestEffort` tickets are refused
+    /// outright and `Batch` tickets are refused once the queue is half
+    /// full ([`AdmissionError::Shed`]) — tightening *before* the queue
+    /// fills. `Interactive` tickets are only ever bounded by queue depth.
+    /// Without a deadline the pressure signal is off and this is exactly
+    /// [`StreamServer::submit`] with a priority label.
+    pub fn submit_with(&mut self, job: Job, priority: Priority) -> Result<u64, AdmissionError> {
+        self.stats.submitted += 1;
+        let pending = self.queue.len();
+        if pending >= self.cfg.queue_depth {
             self.stats.rejected += 1;
-            return Err(AdmissionError::QueueFull { depth: self.cfg.queue_depth });
+            return Err(AdmissionError::QueueFull { depth: pending });
+        }
+        if let Some(budget) = self.cfg.policy.deadline {
+            if priority != Priority::Interactive {
+                let backlog = self.stats.cycles.p99().saturating_mul(pending as u64);
+                if backlog > budget
+                    && (priority == Priority::BestEffort || pending >= self.cfg.queue_depth / 2)
+                {
+                    self.stats.shed += 1;
+                    return Err(AdmissionError::Shed { backlog, budget });
+                }
+            }
         }
         let id = self.next_id;
         self.next_id += 1;
@@ -450,6 +638,8 @@ impl StreamServer {
             job,
             epoch: self.store.pin().0,
             admitted_at: std::time::Instant::now(),
+            priority,
+            admitted_clock: self.modeled_clock,
         });
         self.stats.queue_depth.record(self.queue.len() as u64);
         Ok(id)
@@ -458,12 +648,29 @@ impl StreamServer {
     /// Publish the next epoch from a weight-only delta (see
     /// [`EpochStore::apply_attr_updates`]); queries already admitted keep
     /// their pinned epoch. Records the off-hot-path build cost in
-    /// [`StreamStats::epoch_apply_us`].
+    /// [`StreamStats::epoch_apply_us`]. Under an active chaos plan the
+    /// build may be refused ([`super::chaos::ChaosPlan::epoch_build_fails`]):
+    /// the current epoch stays in place, queries keep serving, and the
+    /// refusal is a typed error plus a counter — never a torn epoch.
     pub fn apply_update(&mut self, delta: &Delta) -> Result<u64, String> {
+        let next = self.store.version() + 1;
+        if self.cfg.chaos.epoch_build_fails(next) {
+            self.stats.epoch_build_failures += 1;
+            return Err(format!("chaos: epoch {next} build refused (injected build failure)"));
+        }
         let t0 = std::time::Instant::now();
         let v = self.store.apply_attr_updates(delta)?;
         self.stats.epoch_apply_us += t0.elapsed().as_micros() as u64;
         self.stats.epochs_published += 1;
+        // keep the single-chip fallback at current weights; a pair that
+        // cannot take the delta is dropped (degraded sharded queries then
+        // stale-read instead) rather than served stale silently
+        if let Some(fb) = self.fallback.as_mut() {
+            if fb.apply_attr_updates(delta).is_err() {
+                self.fallback = None;
+                self.fallback_inst = None;
+            }
+        }
         Ok(v)
     }
 
@@ -471,12 +678,29 @@ impl StreamServer {
     /// identical `(epoch, job)` pairs into single sim runs, answer the
     /// groups on the worker pool, and fan results back out in admission
     /// order. Dropping a drained query's pin is what retires old epochs.
+    ///
+    /// Under a deadline the drain first sweeps overdue `BestEffort`
+    /// tickets out of the queue ([`QueryErrorKind::Shed`] outcomes,
+    /// prepended to the result); selection then prefers higher priority
+    /// classes. Units whose circuit breaker is open answer from the
+    /// degradation ladder; chaos events (stall, slowdown, synthetic
+    /// fault, worker panic) fire here by drain/unit coordinates.
     pub fn drain_batch(&mut self) -> Vec<StreamOutcome> {
-        let take = self.cfg.max_batch.min(self.queue.len());
-        if take == 0 {
+        if self.queue.is_empty() {
             return Vec::new();
         }
-        let batch: Vec<Admitted> = self.queue.drain(..take).collect();
+        self.drains += 1;
+        let drain = self.drains;
+        if let Some(us) = self.cfg.chaos.drain_stall(drain) {
+            std::thread::sleep(std::time::Duration::from_micros(us));
+        }
+        let mut outcomes = Vec::new();
+        self.shed_overdue(&mut outcomes);
+        let take = self.cfg.max_batch.min(self.queue.len());
+        if take == 0 {
+            return outcomes;
+        }
+        let batch: Vec<Admitted> = self.select_batch(take);
         // group by strict (epoch version, job) identity — linear scan,
         // batches are small and Job is a tiny Copy enum
         let mut groups: Vec<(Arc<EpochSnapshot>, Job, usize)> = Vec::new();
@@ -500,18 +724,62 @@ impl StreamServer {
                 }
             }
         }
+        // route each distinct unit through its circuit breaker (exactly
+        // one route() call per unit — probe scheduling is count-driven)
+        let mut unit_route: Vec<Route> = Vec::with_capacity(groups.len());
+        for (snap, job, _) in &groups {
+            let r = if self.cfg.breaker.enabled {
+                let sharded = matches!(snap.target, EpochTarget::Sharded(_));
+                self.breaker.route(JobClass::of(job), sharded)
+            } else {
+                Route::Serve
+            };
+            if r == Route::Probe {
+                self.stats.breaker_probes += 1;
+            }
+            unit_route.push(r);
+        }
+        let mut answers: Vec<Option<(u32, Result<QueryResult, QueryError>)>> =
+            Vec::with_capacity(groups.len());
+        answers.resize_with(groups.len(), || None);
+        // chaos: a synthetic fatal fault fails the unit before it ever
+        // reaches the fabric (degraded units are already off the fabric)
+        for ui in 0..groups.len() {
+            if unit_route[ui] != Route::Degrade && self.cfg.chaos.unit_fatal(drain, ui as u64) {
+                let what = format!("unit fault (drain {drain}, unit {ui})");
+                answers[ui] =
+                    Some((0, Err(sim_query_error(groups[ui].1, &SimError::Injected { what }))));
+            }
+        }
         // partition the distinct units into fused lane sets — same epoch,
         // same trio workload, single-chip target — and legacy per-unit
-        // runs; a singleton set has nothing to fuse
+        // runs; a singleton set has nothing to fuse. Units already failed
+        // by chaos are skipped; open-breaker units collect separately; a
+        // chaos-panicking unit is forced onto the guarded legacy path so
+        // it can never take a fused lane pass down with it.
         let mut fused: Vec<(u64, crate::workloads::Workload, Vec<usize>)> = Vec::new();
         let mut legacy: Vec<usize> = Vec::new();
         // ANN units always take the drain-thread serve path (shared with
         // the engine), never the worker fan-out or the trio lane sets
         let mut ann_units: Vec<usize> = Vec::new();
+        let mut degraded_units: Vec<usize> = Vec::new();
+        let mut panic_units: Vec<bool> = vec![false; groups.len()];
         if self.cfg.batch_lanes > 1 {
             for (ui, (snap, job, _)) in groups.iter().enumerate() {
+                if answers[ui].is_some() {
+                    continue;
+                }
+                if unit_route[ui] == Route::Degrade {
+                    degraded_units.push(ui);
+                    continue;
+                }
                 if matches!(*job, Job::AnnSearch(_)) {
                     ann_units.push(ui);
+                    continue;
+                }
+                if self.cfg.chaos.unit_panic(drain, ui as u64) {
+                    panic_units[ui] = true;
+                    legacy.push(ui);
                     continue;
                 }
                 let fusable = match (*job, &snap.target) {
@@ -540,9 +808,17 @@ impl StreamServer {
             });
         } else {
             for (ui, (_, job, _)) in groups.iter().enumerate() {
-                if matches!(*job, Job::AnnSearch(_)) {
+                if answers[ui].is_some() {
+                    continue;
+                }
+                if unit_route[ui] == Route::Degrade {
+                    degraded_units.push(ui);
+                } else if matches!(*job, Job::AnnSearch(_)) {
                     ann_units.push(ui);
                 } else {
+                    if self.cfg.chaos.unit_panic(drain, ui as u64) {
+                        panic_units[ui] = true;
+                    }
                     legacy.push(ui);
                 }
             }
@@ -556,37 +832,46 @@ impl StreamServer {
         }
         let opts = &self.cfg.opts;
         let policy = self.cfg.policy;
+        let chaos = self.cfg.chaos;
         let groups_ref = &groups;
-        let mut answers: Vec<Option<(u32, Result<QueryResult, QueryError>)>> =
-            Vec::with_capacity(groups.len());
-        answers.resize_with(groups.len(), || None);
         if !legacy.is_empty() {
             if want <= 1 {
+                if let Some(us) = chaos.worker_slowdown(drain, 0) {
+                    std::thread::sleep(std::time::Duration::from_micros(us));
+                }
                 // a lone sharded unit may still step its shards on the
                 // (idle) persistent pool
                 let pool = self.pool.as_ref();
                 let m = &mut self.machines[0];
+                let mut panics = 0u64;
                 for &ui in &legacy {
                     let (snap, job, _) = &groups_ref[ui];
                     let target = snap.target.as_target();
-                    answers[ui] = Some(answer_budgeted(
-                        m,
-                        &target,
-                        snap.landmarks.as_ref(),
-                        opts,
-                        policy,
-                        *job,
-                        pool,
-                    ));
+                    let (ans, panicked) = guarded_answer(panic_units[ui], drain, ui, *job, || {
+                        answer_budgeted(
+                            &mut *m,
+                            &target,
+                            snap.landmarks.as_ref(),
+                            opts,
+                            policy,
+                            *job,
+                            pool,
+                            None,
+                        )
+                    });
+                    panics += u64::from(panicked);
+                    answers[ui] = Some(ans);
                 }
+                self.stats.chaos_panics += panics;
             } else {
                 let next = AtomicUsize::new(0);
                 let claim = AtomicUsize::new(0);
-                let found: Mutex<Vec<(usize, (u32, Result<QueryResult, QueryError>))>> =
+                let found: Mutex<Vec<(usize, (u32, Result<QueryResult, QueryError>), bool)>> =
                     Mutex::new(Vec::with_capacity(legacy.len()));
                 let mslots: Vec<Mutex<&mut WorkerMachine>> =
                     self.machines.iter_mut().take(want).map(Mutex::new).collect();
                 let legacy_ref = &legacy;
+                let panic_ref = &panic_units;
                 let pool = self
                     .pool
                     .as_ref()
@@ -595,6 +880,9 @@ impl StreamServer {
                     let wi = claim.fetch_add(1, Ordering::Relaxed);
                     if wi >= mslots.len() {
                         return; // more pool threads than machines
+                    }
+                    if let Some(us) = chaos.worker_slowdown(drain, wi as u32) {
+                        std::thread::sleep(std::time::Duration::from_micros(us));
                     }
                     let mut m = mslots[wi].lock().unwrap_or_else(|p| p.into_inner());
                     let mut local = Vec::new();
@@ -608,23 +896,26 @@ impl StreamServer {
                         let target = snap.target.as_target();
                         // never-nest: the pool is busy with this fan-out,
                         // so shard stepping inside a unit stays serial
-                        local.push((
-                            ui,
-                            answer_budgeted(
-                                &mut m,
-                                &target,
-                                snap.landmarks.as_ref(),
-                                opts,
-                                policy,
-                                *job,
-                                None,
-                            ),
-                        ));
+                        let (ans, panicked) =
+                            guarded_answer(panic_ref[ui], drain, ui, *job, || {
+                                answer_budgeted(
+                                    &mut m,
+                                    &target,
+                                    snap.landmarks.as_ref(),
+                                    opts,
+                                    policy,
+                                    *job,
+                                    None,
+                                    None,
+                                )
+                            });
+                        local.push((ui, ans, panicked));
                     }
                     let mut f = found.lock().unwrap_or_else(|p| p.into_inner());
                     f.extend(local);
                 });
-                for (ui, ans) in found.into_inner().unwrap_or_else(|p| p.into_inner()) {
+                for (ui, ans, panicked) in found.into_inner().unwrap_or_else(|p| p.into_inner()) {
+                    self.stats.chaos_panics += u64::from(panicked);
                     answers[ui] = Some(ans);
                 }
             }
@@ -684,20 +975,70 @@ impl StreamServer {
                 answers[ui] = Some((0, r));
             }
         }
+        // degraded ladder last: `opts`' borrow of the config has ended,
+        // so serve_degraded may take &mut self
+        let mut degraded_tags: Vec<Option<Degraded>> = vec![None; groups.len()];
+        let mut served_version: Vec<u64> = groups.iter().map(|(s, _, _)| s.version).collect();
+        for &ui in &degraded_units {
+            let snap = Arc::clone(&groups[ui].0);
+            let job = groups[ui].1;
+            let (tag, ver, ans) = self.serve_degraded(&snap, job);
+            degraded_tags[ui] = Some(tag);
+            served_version[ui] = ver;
+            answers[ui] = Some((0, ans));
+        }
         let answers: Vec<(u32, Result<QueryResult, QueryError>)> = answers
             .into_iter()
             .map(|o| o.unwrap_or_else(|| unreachable!("every unit answered exactly once")))
             .collect();
         // account per-unit costs once; a fused multi-lane pass is one run
-        self.stats.sim_runs += legacy.len() as u64 + passes + ann_passes;
+        self.stats.sim_runs +=
+            legacy.len() as u64 + passes + ann_passes + degraded_units.len() as u64;
         self.stats.lane_count += groups.len() as u64;
         self.stats.shared_hits += (batch.len() - groups.len()) as u64;
         for (retries, _) in &answers {
             self.stats.retries += u64::from(*retries);
         }
+        // report exact-path outcomes to the breaker (degraded units never
+        // report; chaos-injected faults count — that is what trips it),
+        // remember the newest epoch that answered healthily, and advance
+        // the modeled clock by what each unit actually cost
+        for ui in 0..groups.len() {
+            let exact = unit_route[ui] != Route::Degrade;
+            match &answers[ui].1 {
+                Ok(q) => {
+                    self.modeled_clock += q.run.cycles;
+                    if exact {
+                        let newer = match self.last_good.as_ref().and_then(Weak::upgrade) {
+                            Some(cur) => groups[ui].0.version >= cur.version,
+                            None => true,
+                        };
+                        if newer {
+                            self.last_good = Some(Arc::downgrade(&groups[ui].0));
+                        }
+                    }
+                }
+                Err(e) => self.modeled_clock += e.cycles,
+            }
+            if exact && self.cfg.breaker.enabled {
+                let failed = matches!(
+                    &answers[ui].1,
+                    Err(e) if matches!(e.kind, QueryErrorKind::Fatal | QueryErrorKind::Transient)
+                );
+                let (snap, job, _) = &groups[ui];
+                let sharded = matches!(snap.target, EpochTarget::Sharded(_));
+                let tripped = self.breaker.record(
+                    JobClass::of(job),
+                    sharded,
+                    failed,
+                    unit_route[ui] == Route::Probe,
+                );
+                self.stats.breaker_trips += u64::from(tripped);
+            }
+        }
         // fan out per-query outcomes in admission order
         let now_version = self.store.version();
-        let mut outcomes = Vec::with_capacity(batch.len());
+        outcomes.reserve(batch.len());
         for (bi, a) in batch.into_iter().enumerate() {
             let gi = assign[bi];
             let (_, ref result) = answers[gi];
@@ -714,15 +1055,24 @@ impl StreamServer {
                     }
                 }
             }
+            let degraded = degraded_tags[gi];
+            if let Some(tag) = degraded {
+                self.stats.degraded += 1;
+                if let Degraded::Stale { staleness } = tag {
+                    self.stats.staleness.record(staleness);
+                }
+            }
             self.stats.wall_us.record(a.admitted_at.elapsed().as_micros() as u64);
             let lag = now_version.saturating_sub(a.epoch.version);
             self.stats.epoch_lag.record(lag);
             outcomes.push(StreamOutcome {
                 id: a.id,
                 job: a.job,
-                epoch: a.epoch.version,
+                epoch: served_version[gi],
                 shared: groups[gi].2 > 1,
                 lag,
+                priority: a.priority,
+                degraded,
                 result,
             });
             // `a` (and its pin) drops here: the last drained query of an
@@ -738,6 +1088,262 @@ impl StreamServer {
             all.extend(self.drain_batch());
         }
         all
+    }
+
+    /// CoDel-style sweep (DESIGN.md §11): evict queued `BestEffort`
+    /// tickets whose modeled-cycle sojourn exceeds the deadline budget,
+    /// surfacing each as a [`QueryErrorKind::Shed`] outcome. A no-op
+    /// without a deadline. Shed tickets never touch the latency
+    /// histograms or `served`/`failed` — they ran nothing.
+    fn shed_overdue(&mut self, outcomes: &mut Vec<StreamOutcome>) {
+        let Some(budget) = self.cfg.policy.deadline else {
+            return;
+        };
+        let now_version = self.store.version();
+        let mut i = 0;
+        while i < self.queue.len() {
+            let sojourn = self.modeled_clock - self.queue[i].admitted_clock;
+            if self.queue[i].priority == Priority::BestEffort && sojourn > budget {
+                let a = self
+                    .queue
+                    .remove(i)
+                    .unwrap_or_else(|| unreachable!("index bounded by len above"));
+                self.stats.shed += 1;
+                outcomes.push(StreamOutcome {
+                    id: a.id,
+                    job: a.job,
+                    epoch: a.epoch.version,
+                    shared: false,
+                    lag: now_version.saturating_sub(a.epoch.version),
+                    priority: a.priority,
+                    degraded: None,
+                    result: Err(QueryError {
+                        job: a.job.describe(),
+                        kind: QueryErrorKind::Shed,
+                        cycles: 0,
+                        msg: format!(
+                            "shed: best-effort sojourn {sojourn} modeled cycles exceeds \
+                             deadline budget {budget}"
+                        ),
+                    }),
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Pop up to `take` tickets, preferring higher priority classes
+    /// (FIFO within a class); the returned batch stays in admission
+    /// order. With uniform priorities the selection is exactly the FIFO
+    /// prefix, i.e. bit-identical to the pre-priority server.
+    fn select_batch(&mut self, take: usize) -> Vec<Admitted> {
+        let mut chosen: Vec<usize> = Vec::with_capacity(take);
+        for class in [Priority::Interactive, Priority::Batch, Priority::BestEffort] {
+            for (i, a) in self.queue.iter().enumerate() {
+                if chosen.len() >= take {
+                    break;
+                }
+                if a.priority == class {
+                    chosen.push(i);
+                }
+            }
+        }
+        chosen.sort_unstable();
+        let mut batch: Vec<Admitted> = Vec::with_capacity(chosen.len());
+        for &i in chosen.iter().rev() {
+            batch.push(
+                self.queue.remove(i).unwrap_or_else(|| unreachable!("chosen index in range")),
+            );
+        }
+        batch.reverse();
+        batch
+    }
+
+    /// Answer one unit from the degradation ladder while its breaker slot
+    /// is open (DESIGN.md §11): sharded queries fall back to the
+    /// single-chip pair at current weights, ANN narrows its beam to the
+    /// configured floor, navigation tightens its A* bound, and everything
+    /// else stale-reads the newest still-pinned healthy epoch. Returns
+    /// the exactness-loss tag, the epoch version actually served, and the
+    /// answer — which is still bitwise what a solo run under the tagged
+    /// parameters would produce (degradation is never approximation of
+    /// the *simulator*, only of the query).
+    fn serve_degraded(
+        &mut self,
+        snap: &Arc<EpochSnapshot>,
+        job: Job,
+    ) -> (Degraded, u64, Result<QueryResult, QueryError>) {
+        let policy = self.cfg.policy;
+        let opts = self.cfg.opts.clone();
+        // rung 1: sharded target with a single-chip fallback attached
+        if !matches!(job, Job::AnnSearch(_)) && matches!(snap.target, EpochTarget::Sharded(_)) {
+            if let Some(pair) = self.fallback.as_ref() {
+                let cur = self.store.pin().0;
+                let m = self
+                    .fallback_inst
+                    .get_or_insert_with(|| WorkerMachine::Single(SimInstance::new(&pair.directed)));
+                let (_, ans) = answer_budgeted(
+                    m,
+                    &Target::Single(pair),
+                    cur.landmarks.as_ref(),
+                    &opts,
+                    policy,
+                    job,
+                    None,
+                    None,
+                );
+                return (Degraded::SingleChip, cur.version, ans);
+            }
+        }
+        // rung 2: ANN with the beam narrowed to the floor (mirrors the
+        // exact path's rejection contract for unservable queries)
+        if let Job::AnnSearch(q) = job {
+            let floor = self.cfg.degrade.beam_floor;
+            let tag = |beam: usize| Degraded::NarrowedBeam { beam };
+            let reject = |msg: String| {
+                Err(QueryError {
+                    job: job.describe(),
+                    kind: QueryErrorKind::Rejected,
+                    cycles: 0,
+                    msg,
+                })
+            };
+            let n = snap.target.graph().num_vertices();
+            let Some(ix) = self.ann.clone() else {
+                let msg = "no ANN index attached (with_ann)".to_string();
+                return (tag(floor), snap.version, reject(msg));
+            };
+            if !matches!(snap.target, EpochTarget::Single(_)) {
+                return (
+                    tag(floor),
+                    snap.version,
+                    reject(
+                        "ANN serving needs a single-chip target \
+                         (sharded search: workloads::ann::search_sharded)"
+                            .to_string(),
+                    ),
+                );
+            }
+            let base = ix.base();
+            if base.emb.len() != n {
+                return (
+                    tag(floor),
+                    snap.version,
+                    reject(format!(
+                        "ANN index over {} vertices, serving graph has {n}",
+                        base.emb.len()
+                    )),
+                );
+            }
+            if q as usize >= n {
+                return (
+                    tag(floor),
+                    snap.version,
+                    reject(format!("query vertex {q} out of range (|V| = {n})")),
+                );
+            }
+            let beam = floor.min(ix.params.beam).max(1);
+            let params = ann::AnnParams { beam, ..ix.params };
+            // attempt-0 semantics, like the exact ANN serve path
+            let mut a_opts = opts.clone();
+            if policy.deadline.is_some() {
+                a_opts.deadline = policy.deadline;
+            }
+            a_opts.faults = opts.faults.reseeded(0);
+            let qv = base.emb.vector(q).to_vec();
+            let entries = ix.probe(&qv);
+            let r = ann::search(
+                &base.compiled,
+                &base.graph,
+                &base.emb,
+                &qv,
+                &entries,
+                &params,
+                &a_opts,
+            );
+            return (tag(beam), snap.version, ann_outcome(q, r));
+        }
+        // rung 3: navigation with the bound register capped at the floor
+        if let Job::Navigate { source, target } = job {
+            let floor = self.cfg.degrade.bound_floor;
+            let n = snap.target.graph().num_vertices();
+            let bound = match snap.landmarks.as_ref() {
+                Some(lm) if (source as usize) < n && (target as usize) < n => {
+                    lm.query(source, target).with_route_budget(floor).route_budget()
+                }
+                _ => floor,
+            };
+            let tgt = snap.target.as_target();
+            let (_, ans) = answer_budgeted(
+                &mut self.machines[0],
+                &tgt,
+                snap.landmarks.as_ref(),
+                &opts,
+                policy,
+                job,
+                None,
+                Some(floor),
+            );
+            return (Degraded::TightenedBound { bound }, snap.version, ans);
+        }
+        // rung 4: stale-read from the newest still-pinned healthy epoch
+        // (never newer than the pinned one; falls back to the pinned
+        // snapshot itself when no older epoch is alive)
+        let stale = self
+            .last_good
+            .as_ref()
+            .and_then(Weak::upgrade)
+            .filter(|s| s.version <= snap.version)
+            .unwrap_or_else(|| Arc::clone(snap));
+        let staleness = snap.version - stale.version;
+        let tgt = stale.target.as_target();
+        let (_, ans) = answer_budgeted(
+            &mut self.machines[0],
+            &tgt,
+            stale.landmarks.as_ref(),
+            &opts,
+            policy,
+            job,
+            None,
+            None,
+        );
+        (Degraded::Stale { staleness }, stale.version, ans)
+    }
+}
+
+/// Run one legacy unit behind a panic shield: a chaos-injected panic
+/// fires *before* the unit touches its machine (the machine is never
+/// left mid-run), and any caught panic — injected or genuine — becomes a
+/// single-ticket `Fatal` outcome instead of poisoning the drain. Returns
+/// the answer plus whether a panic was caught.
+fn guarded_answer(
+    inject_panic: bool,
+    drain: u64,
+    unit: usize,
+    job: Job,
+    f: impl FnOnce() -> (u32, Result<QueryResult, QueryError>),
+) -> ((u32, Result<QueryResult, QueryError>), bool) {
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        if inject_panic {
+            panic!("chaos: worker panic (drain {drain}, unit {unit})");
+        }
+        f()
+    }));
+    match caught {
+        Ok(ans) => (ans, false),
+        Err(_) => (
+            (
+                0,
+                Err(QueryError {
+                    job: job.describe(),
+                    kind: QueryErrorKind::Fatal,
+                    cycles: 0,
+                    msg: format!("worker panicked while serving (drain {drain}, unit {unit})"),
+                }),
+            ),
+            true,
+        ),
     }
 }
 
@@ -951,5 +1557,91 @@ mod tests {
         drop(pin_b);
         assert_eq!(store.live_epochs(), vec![1]);
         assert_eq!(store.retired_count(), 1);
+    }
+
+    /// Modeled cycles of one (Bfs, 0) run on the seed-`seed` test graph,
+    /// measured on a throwaway server (deterministic).
+    fn bfs0_cycles(seed: u64) -> u64 {
+        let (mut probe, _) = server(seed, StreamConfig { workers: 1, ..Default::default() });
+        probe.submit(Job::Workload(Workload::Bfs, 0)).unwrap();
+        let out = probe.drain_all();
+        out[0].result.as_ref().unwrap().run.cycles
+    }
+
+    #[test]
+    fn overdue_best_effort_tickets_are_shed_and_interactive_drains_first() {
+        let c = bfs0_cycles(43);
+        let budget = c + c / 2; // one run fits, two runs of queue wait do not
+        let cfg = StreamConfig {
+            workers: 1,
+            max_batch: 1,
+            policy: ServePolicy { deadline: Some(budget), ..ServePolicy::default() },
+            ..Default::default()
+        };
+        let (mut srv, _) = server(43, cfg);
+        let be = srv.submit_with(Job::Workload(Workload::Bfs, 1), Priority::BestEffort).unwrap();
+        let it = srv.submit_with(Job::Workload(Workload::Bfs, 0), Priority::Interactive).unwrap();
+        let ba = srv.submit_with(Job::Workload(Workload::Bfs, 0), Priority::Batch).unwrap();
+        let out = srv.drain_all();
+        assert_eq!(out.len(), 3);
+        // interactive drains first despite being admitted second; by the
+        // third drain the best-effort ticket's modeled sojourn (2c) has
+        // outlived its budget (1.5c) and it is swept, never run
+        assert_eq!((out[0].id, out[0].priority), (it, Priority::Interactive));
+        assert_eq!((out[1].id, out[1].priority), (ba, Priority::Batch));
+        assert_eq!((out[2].id, out[2].priority), (be, Priority::BestEffort));
+        assert!(out[0].result.is_ok() && out[1].result.is_ok());
+        let e = out[2].result.as_ref().unwrap_err();
+        assert_eq!(e.kind, QueryErrorKind::Shed);
+        assert!(e.msg.contains("shed:"), "shedding is typed and explained: {}", e.msg);
+        assert!(out.iter().all(|o| o.degraded.is_none()));
+        let s = srv.stats();
+        assert_eq!((s.submitted, s.served, s.failed, s.shed, s.rejected), (3, 2, 0, 1, 0));
+        assert_eq!(s.submitted, s.served + s.failed + s.shed + s.rejected, "conservation");
+        assert_eq!(s.breaker_trips, 0);
+        assert_eq!(s.degraded, 0);
+    }
+
+    #[test]
+    fn queue_pressure_tightens_admission_before_the_queue_fills() {
+        let c = bfs0_cycles(45);
+        let budget = 2 * c + c / 2; // pressure trips at 3 pending (3c > 2.5c)
+        let cfg = StreamConfig {
+            workers: 1,
+            queue_depth: 4,
+            policy: ServePolicy { deadline: Some(budget), ..ServePolicy::default() },
+            ..Default::default()
+        };
+        let (mut srv, _) = server(45, cfg);
+        let job = Job::Workload(Workload::Bfs, 0);
+        // seed the p99 estimate with one served query
+        srv.submit(job).unwrap();
+        assert_eq!(srv.drain_all().len(), 1);
+        // pending 0, 1, 2: modeled backlog (pending × p99) within budget
+        for _ in 0..3 {
+            srv.submit_with(job, Priority::BestEffort).unwrap();
+        }
+        // pending 3: backlog 3c exceeds the budget — best-effort refused
+        // while the queue still has a free slot
+        let e = srv.submit_with(job, Priority::BestEffort).unwrap_err();
+        assert_eq!(e, AdmissionError::Shed { backlog: 3 * c, budget });
+        // batch work is refused too once the queue is at least half full
+        assert!(matches!(
+            srv.submit_with(job, Priority::Batch),
+            Err(AdmissionError::Shed { .. })
+        ));
+        // interactive is never pressure-shed; it fills the last slot
+        srv.submit_with(job, Priority::Interactive).unwrap();
+        // and only now is the queue actually full — with the live depth
+        assert_eq!(
+            srv.submit_with(job, Priority::Interactive),
+            Err(AdmissionError::QueueFull { depth: 4 })
+        );
+        let drained = srv.drain_all();
+        assert_eq!(drained.len(), 4);
+        assert!(drained.iter().all(|o| o.result.is_ok()), "identical jobs share one run");
+        let s = srv.stats();
+        assert_eq!((s.submitted, s.shed, s.rejected), (8, 2, 1));
+        assert_eq!(s.submitted, s.served + s.failed + s.shed + s.rejected, "conservation");
     }
 }

@@ -68,6 +68,15 @@ pub enum SimError {
         /// The superstep bound that was exceeded.
         supersteps: u64,
     },
+    /// A host-side chaos-injected failure
+    /// ([`crate::service::chaos::ChaosPlan`]): a deterministic synthetic
+    /// fatal outcome, never produced by the fabric itself and never
+    /// retryable — the serving layer's circuit-breaker battery trips on
+    /// it without having to provoke a real fabric abort.
+    Injected {
+        /// Which chaos event fired, with its event coordinates.
+        what: String,
+    },
 }
 
 impl SimError {
@@ -99,7 +108,8 @@ impl SimError {
             SimError::ChipFailed { cause, .. } => cause.cycles_consumed(),
             SimError::FabricMismatch
             | SimError::InvalidInput(_)
-            | SimError::NoConvergence { .. } => 0,
+            | SimError::NoConvergence { .. }
+            | SimError::Injected { .. } => 0,
         }
     }
 }
@@ -128,6 +138,7 @@ impl std::fmt::Display for SimError {
                 "lockstep did not converge within {supersteps} supersteps \
                  (program violates the determinism contract?)"
             ),
+            SimError::Injected { what } => write!(f, "chaos-injected fault: {what}"),
         }
     }
 }

@@ -183,8 +183,11 @@ impl FaultPlan {
     }
 }
 
-/// SplitMix-style mix of (seed, salt, a, b) into one stream seed.
-fn mix(seed: u64, salt: u64, a: u64, b: u64) -> u64 {
+/// SplitMix-style mix of (seed, salt, a, b) into one stream seed —
+/// shared with the host-side chaos injector
+/// ([`crate::service::chaos::ChaosPlan`]), which mirrors this module's
+/// pure-function-of-coordinates design.
+pub(crate) fn mix(seed: u64, salt: u64, a: u64, b: u64) -> u64 {
     let mut h = seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
     h = (h ^ a.rotate_left(17)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     h = (h ^ b.rotate_left(41)).wrapping_mul(0x94D0_49BB_1331_11EB);

@@ -251,4 +251,78 @@ mod tests {
         });
         assert_eq!(hits.load(Ordering::Relaxed), 2);
     }
+
+    #[test]
+    fn caller_panic_still_waits_for_worker_shares() {
+        // If the *calling* thread's share panics, `run` must still hold
+        // the barrier until every worker finishes (otherwise the erased
+        // borrow could outlive its frame), then re-raise the caller's
+        // panic — not swallow it, not deadlock.
+        let pool = WorkerPool::new(3);
+        let worker_done = AtomicUsize::new(0);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&|| {
+                if std::thread::current().name().is_some_and(|n| n.starts_with("flip-pool-")) {
+                    // worker share: do slow real work so the caller's
+                    // panic definitely fires while workers still run
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    worker_done.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    panic!("caller boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "caller panic must be re-raised");
+        // the barrier held: both workers finished their share before
+        // `run` unwound
+        assert_eq!(worker_done.load(Ordering::Relaxed), 2);
+        // and the pool is still dispatchable
+        let hits = AtomicUsize::new(0);
+        pool.run(&|| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn pool_survives_repeated_panic_rounds() {
+        // A panic per round must not poison the dispatch state: the
+        // panic slot is drained each `run`, generations keep advancing,
+        // and a clean round after N faulty ones behaves like new.
+        let pool = WorkerPool::new(2);
+        for round in 0..4usize {
+            let armed = AtomicUsize::new(0);
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                pool.run(&|| {
+                    if armed.fetch_add(1, Ordering::Relaxed) == 0 {
+                        panic!("round {round} boom");
+                    }
+                });
+            }));
+            assert!(r.is_err(), "round {round} panic must propagate");
+        }
+        let hits = AtomicUsize::new(0);
+        pool.run(&|| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2, "pool must stay reusable");
+    }
+
+    #[test]
+    fn first_worker_panic_wins_when_all_shares_panic() {
+        // Every participant panics; exactly one payload is re-raised
+        // (the first worker's, or the caller's own — scope semantics),
+        // and it is one of the payloads we actually threw.
+        let pool = WorkerPool::new(3);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&|| panic!("share boom"));
+        }));
+        let p = r.expect_err("a panic must cross the barrier");
+        let msg = p
+            .downcast_ref::<&str>()
+            .copied()
+            .or_else(|| p.downcast_ref::<String>().map(String::as_str))
+            .unwrap_or("");
+        assert_eq!(msg, "share boom", "re-raised payload must be one of ours");
+    }
 }

@@ -140,6 +140,17 @@ impl AStar {
     pub fn heuristic(&self, v: u32) -> u32 {
         self.h[v as usize]
     }
+
+    /// Cap the route budget at `cap` (no-op if the triangle-inequality
+    /// bound is already tighter). A capped query prunes more
+    /// aggressively and stays exact for routes within the cap; targets
+    /// farther than `cap` resolve as unreachable (`INF`). The serving
+    /// layer's degraded-answer mode (DESIGN.md §11) uses this as its
+    /// bound floor while a navigation breaker is open.
+    pub fn with_route_budget(mut self, cap: u32) -> AStar {
+        self.bound = self.bound.min(cap);
+        self
+    }
 }
 
 impl VertexProgram for AStar {

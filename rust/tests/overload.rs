@@ -1,0 +1,592 @@
+//! Overload-resilience battery (DESIGN.md §11): the degradation ladder
+//! under deterministic chaos.
+//!
+//! The ladder — adaptive admission, CoDel-style shedding, per-target
+//! circuit breakers, degraded answers, seeded host chaos — promises:
+//!
+//! * **inertness**: with [`ChaosPlan::none`] and the breaker merely
+//!   *enabled*, a server is bitwise identical ticket-for-ticket to one
+//!   with the whole ladder disabled, for single-chip and sharded
+//!   targets alike — resilience machinery costs nothing until it fires;
+//! * **selective shedding**: under seeded overload only best-effort
+//!   tickets are dropped, every drop is a typed
+//!   [`QueryErrorKind::Shed`] outcome (never silence), interactive
+//!   queries all complete within the deadline budget, and the ticket
+//!   ledger conserves: `submitted = served + failed + shed + rejected`;
+//! * **breaker + stale reads**: consecutive injected fatals trip the
+//!   (class, target) slot; while open, answers degrade to the newest
+//!   healthy epoch and are bitwise what a batch engine computes over a
+//!   recompile of that epoch; a scheduled probe under restored health
+//!   closes the slot and exact serving resumes;
+//! * **panic isolation**: an injected worker panic fails exactly its
+//!   ticket (typed `Fatal`, counted) and the server keeps serving.
+//!
+//! Randomized suites derive from one 64-bit seed; on failure the panic
+//! names it. Re-run just that case with
+//! `FLIP_CHAOS_SEED=0x<seed> cargo test -q --test overload`.
+
+mod common;
+
+use flip::config::ArchConfig;
+use flip::experiments::harness::{CompiledPair, ShardedPair};
+use flip::graph::embed::Embeddings;
+use flip::graph::{Delta, Graph};
+use flip::service::breaker::{BreakerConfig, BreakerState, JobClass};
+use flip::service::chaos::ChaosPlan;
+use flip::service::stream::{
+    AdmissionError, Degraded, EpochStore, Priority, StreamConfig, StreamOutcome, StreamServer,
+};
+use flip::service::{Engine, Job, QueryErrorKind, ServePolicy};
+use flip::workloads::ann::{AnnIndex, AnnParams};
+use flip::workloads::Workload;
+use std::sync::Arc;
+
+/// xorshift64* — the battery's generator, independent of the crate's
+/// xoshiro so test inputs cannot covary with compile-time streams.
+struct XorShift {
+    s: u64,
+}
+
+impl XorShift {
+    fn new(seed: u64) -> XorShift {
+        XorShift { s: seed | 1 }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.s;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.s = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+}
+
+/// The per-suite seed list: `cases` seeds derived from `salt`, or just
+/// the user's `FLIP_CHAOS_SEED` when set (the one-line repro path).
+fn seeds(salt: u64, cases: usize) -> Vec<u64> {
+    if let Ok(s) = std::env::var("FLIP_CHAOS_SEED") {
+        let s = s.trim();
+        let parsed = match s.strip_prefix("0x") {
+            Some(h) => u64::from_str_radix(h, 16),
+            None => s.parse::<u64>(),
+        };
+        return vec![parsed.unwrap_or_else(|_| panic!("bad FLIP_CHAOS_SEED `{s}`"))];
+    }
+    let mut x = XorShift::new(0xC4A0_5 ^ salt);
+    (0..cases).map(|_| x.next_u64()).collect()
+}
+
+/// Run one randomized case, panicking with the repro seed on failure.
+fn drive(name: &str, salt: u64, cases: usize, f: impl Fn(&mut XorShift) -> Result<(), String>) {
+    for seed in seeds(salt, cases) {
+        let mut x = XorShift::new(seed);
+        if let Err(msg) = f(&mut x) {
+            panic!(
+                "overload battery `{name}` failed: {msg}\n  one-line repro: \
+                 FLIP_CHAOS_SEED={seed:#x} cargo test -q --test overload {name}"
+            );
+        }
+    }
+}
+
+/// A weight-only delta reweighting one random existing arc of `g`.
+fn random_weight_delta(g: &Graph, x: &mut XorShift) -> Delta {
+    let arcs: Vec<(u32, u32, u32)> = g.arcs().collect();
+    let (u, v, _) = arcs[x.below(arcs.len() as u64) as usize];
+    Delta::from_edges(g, &[(u, v, 1 + x.below(99) as u32)])
+}
+
+/// Modeled cycles one job costs on this pair, via the batch engine (the
+/// streaming layer's bitwise oracle).
+fn measured_cycles(pair: &CompiledPair, job: Job) -> Result<u64, String> {
+    let rep = Engine::new(pair).with_workers(1).serve(&[job]);
+    match &rep.results[0] {
+        Ok(q) => Ok(q.run.cycles),
+        Err(e) => Err(format!("capacity probe failed: {e}")),
+    }
+}
+
+/// Full-fidelity outcome equality: identity, routing metadata, and the
+/// bitwise answer (or the typed error, message included).
+fn same_outcome(a: &StreamOutcome, b: &StreamOutcome) -> bool {
+    if a.id != b.id
+        || a.job != b.job
+        || a.epoch != b.epoch
+        || a.shared != b.shared
+        || a.lag != b.lag
+        || a.priority != b.priority
+        || a.degraded != b.degraded
+    {
+        return false;
+    }
+    match (&a.result, &b.result) {
+        (Ok(p), Ok(q)) => {
+            p.run.cycles == q.run.cycles
+                && p.run.attrs == q.run.attrs
+                && p.run.sim == q.run.sim
+                && p.distance == q.distance
+                && p.neighbors == q.neighbors
+        }
+        (Err(p), Err(q)) => p.kind == q.kind && p.cycles == q.cycles && p.msg == q.msg,
+        _ => false,
+    }
+}
+
+// ---- 1. the idle ladder is bitwise invisible ----------------------------
+
+/// One recorded op script (submits, weight updates, partial drains).
+#[derive(Clone)]
+enum Op {
+    Submit(Job),
+    Update(Delta),
+    Drain,
+}
+
+/// Replay one script on a fresh server, concatenating drain outcomes.
+fn replay(
+    store: EpochStore,
+    cfg: StreamConfig,
+    ann: Option<Arc<AnnIndex>>,
+    ops: &[Op],
+) -> Result<(Vec<StreamOutcome>, flip::metrics::StreamStats), String> {
+    let mut srv = StreamServer::new(store, cfg);
+    if let Some(ix) = ann {
+        srv = srv.with_ann(ix);
+    }
+    let mut out = Vec::new();
+    for op in ops {
+        match op {
+            Op::Submit(job) => {
+                srv.submit(*job).map_err(|e| e.to_string())?;
+            }
+            Op::Update(d) => {
+                srv.apply_update(d)?;
+            }
+            Op::Drain => out.extend(srv.drain_batch()),
+        }
+    }
+    out.extend(srv.drain_all());
+    Ok((out, srv.stats().clone()))
+}
+
+/// An in-capacity server with `ChaosPlan::none()` and the breaker
+/// *enabled* must be bitwise identical — ticket-for-ticket, including
+/// epochs, sharing flags and error text — to one with the breaker
+/// disabled (the pre-ladder server), across all five job kinds at
+/// K = 1 and a sharded K = 2 target. No counter of the ladder may move.
+#[test]
+fn inert_chaos_and_enabled_breaker_are_bitwise_invisible() {
+    drive("inert_chaos_and_enabled_breaker_are_bitwise_invisible", 0x0B5, 2, |x| {
+        let g = common::random_graph(&mut |n| x.below(n), 24, 40);
+        let n = g.num_vertices() as u64;
+        let cfg = ArchConfig::default();
+        let cseed = x.next_u64();
+        let emb = Embeddings::clustered(g.num_vertices(), 8, 4, x.next_u64());
+        let params = AnnParams { beam: 6, k: 3, ..AnnParams::default() };
+        let ix = Arc::new(AnnIndex::build(&g, &emb, 1, &cfg, cseed, params));
+        for k in [1usize, 2] {
+            let mut ops = Vec::new();
+            let mut cur = g.clone();
+            for _ in 0..24 {
+                match x.below(8) {
+                    0..=4 => {
+                        let kinds = if k == 1 { 5 } else { 3 };
+                        let job = match x.below(kinds) {
+                            0 => Job::Workload(Workload::Bfs, x.below(n) as u32),
+                            1 => Job::Workload(Workload::Sssp, x.below(n) as u32),
+                            2 => Job::Workload(Workload::Wcc, x.below(n) as u32),
+                            3 => Job::Navigate {
+                                source: x.below(n) as u32,
+                                target: x.below(n) as u32,
+                            },
+                            _ => Job::AnnSearch(x.below(n) as u32),
+                        };
+                        ops.push(Op::Submit(job));
+                    }
+                    5..=6 => {
+                        let d = random_weight_delta(&cur, x);
+                        cur.apply_delta(&d)?;
+                        ops.push(Op::Update(d));
+                    }
+                    _ => ops.push(Op::Drain),
+                }
+            }
+            let store = || -> EpochStore {
+                if k == 1 {
+                    EpochStore::new_single(CompiledPair::build(&g, &cfg, cseed))
+                        .with_navigation(4)
+                } else {
+                    EpochStore::new_sharded(ShardedPair::build(&g, k, &cfg, cseed))
+                }
+            };
+            let base = || StreamConfig { workers: 2, max_batch: 6, ..Default::default() };
+            let ladder = base(); // breaker enabled by default, chaos none
+            let plain = StreamConfig {
+                breaker: BreakerConfig { enabled: false, ..BreakerConfig::default() },
+                ..base()
+            };
+            let ann = if k == 1 { Some(Arc::clone(&ix)) } else { None };
+            let (a, sa) = replay(store(), ladder, ann.clone(), &ops)?;
+            let (b, sb) = replay(store(), plain, ann, &ops)?;
+            if a.len() != b.len() {
+                return Err(format!("K={k}: {} vs {} outcomes", a.len(), b.len()));
+            }
+            for (oa, ob) in a.iter().zip(&b) {
+                if !same_outcome(oa, ob) {
+                    return Err(format!(
+                        "K={k}: ticket {} diverged under the inert ladder",
+                        oa.id
+                    ));
+                }
+                if oa.degraded.is_some() {
+                    return Err(format!("K={k}: ticket {} degraded at rest", oa.id));
+                }
+            }
+            for (who, st) in [("ladder", &sa), ("plain", &sb)] {
+                if st.shed != 0
+                    || st.degraded != 0
+                    || st.breaker_trips != 0
+                    || st.breaker_probes != 0
+                    || st.chaos_panics != 0
+                    || st.epoch_build_failures != 0
+                {
+                    return Err(format!("K={k}: {who} server moved a ladder counter at rest"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---- 2. overload sheds only best-effort, and every ticket is counted ----
+
+/// A deterministic overload script derived from measured capacity:
+/// deadline budget `cmax + cmin/2` modeled cycles, then a best-effort
+/// ticket queued behind an interactive burst. Admission pressure must
+/// shed new best-effort/batch tickets with the live backlog in the
+/// typed error, the CoDel sweep must evict the overdue queued
+/// best-effort ticket as a `Shed` outcome, interactive queries must all
+/// complete within budget, and the ledger must conserve — under a
+/// seeded wall-clock-only chaos plan (slowdowns + drain stalls), which
+/// must not move a single modeled number.
+#[test]
+fn overload_sheds_only_best_effort_and_conserves_every_ticket() {
+    drive("overload_sheds_only_best_effort_and_conserves_every_ticket", 0x0B6, 2, |x| {
+        let g = common::random_graph(&mut |n| x.below(n), 20, 32);
+        let n = g.num_vertices() as u64;
+        let cfg = ArchConfig::default();
+        let cseed = x.next_u64();
+        let pair = CompiledPair::build(&g, &cfg, cseed);
+        let j0 = Job::Workload(Workload::Bfs, x.below(n) as u32);
+        let j1 = Job::Workload(Workload::Sssp, x.below(n) as u32);
+        let (c0, c1) = (measured_cycles(&pair, j0)?, measured_cycles(&pair, j1)?);
+        let (cmin, cmax) = (c0.min(c1), c0.max(c1));
+        // every single run fits the budget; a drain's worth of backlog
+        // (c0 + c1 = cmax + cmin) strictly exceeds it
+        let budget = cmax + cmin / 2;
+        let chaos = ChaosPlan::seeded(x.next_u64())
+            .with_panic_rate(0.0)
+            .with_fatal_rate(0.0)
+            .with_build_fail_rate(0.0);
+        let mut srv = StreamServer::new(
+            EpochStore::new_single(pair),
+            StreamConfig {
+                workers: 1,
+                max_batch: 2,
+                queue_depth: 4,
+                policy: ServePolicy { deadline: Some(budget), ..Default::default() },
+                chaos,
+                ..Default::default()
+            },
+        );
+        let sub = |srv: &mut StreamServer, job, pri| -> Result<u64, String> {
+            srv.submit_with(job, pri).map_err(|e| e.to_string())
+        };
+        let mut out = Vec::new();
+        // warm-up: populate the latency histograms and the modeled clock
+        sub(&mut srv, j0, Priority::BestEffort)?;
+        sub(&mut srv, j1, Priority::Interactive)?;
+        out.extend(srv.drain_batch());
+        // a best-effort ticket queued behind a two-deep interactive burst
+        let be_ticket = sub(&mut srv, j0, Priority::BestEffort)?;
+        sub(&mut srv, j0, Priority::Interactive)?;
+        sub(&mut srv, j1, Priority::Interactive)?;
+        // pressure: p99 (= cmax) × 3 pending > budget ⇒ typed shed with
+        // the live backlog, best-effort first …
+        match srv.submit_with(j1, Priority::BestEffort) {
+            Err(AdmissionError::Shed { backlog, budget: b }) => {
+                if backlog != 3 * cmax || b != budget {
+                    return Err(format!("shed reported backlog {backlog}/{b}"));
+                }
+            }
+            other => return Err(format!("expected pressure shed, got {other:?}")),
+        }
+        // … then batch traffic once the queue is half full
+        if !matches!(srv.submit_with(j0, Priority::Batch), Err(AdmissionError::Shed { .. })) {
+            return Err("batch ticket admitted through heavy pressure".into());
+        }
+        // interactive is never pressure-shed — only hard backpressure
+        sub(&mut srv, j0, Priority::Interactive)?;
+        match srv.submit_with(j1, Priority::Interactive) {
+            Err(AdmissionError::QueueFull { depth: 4 }) => {}
+            other => return Err(format!("expected QueueFull {{ depth: 4 }}, got {other:?}")),
+        }
+        // first drain serves the interactive burst past the waiting
+        // best-effort ticket; the second finds it overdue and sheds it
+        out.extend(srv.drain_batch());
+        out.extend(srv.drain_batch());
+        out.extend(srv.drain_all());
+        let shed: Vec<&StreamOutcome> = out
+            .iter()
+            .filter(|o| matches!(&o.result, Err(e) if e.kind == QueryErrorKind::Shed))
+            .collect();
+        if shed.len() != 1 || shed[0].id != be_ticket {
+            return Err(format!("CoDel sweep shed {} tickets, wanted exactly ours", shed.len()));
+        }
+        if shed[0].priority != Priority::BestEffort {
+            return Err("a non-best-effort ticket was queue-shed".into());
+        }
+        match &shed[0].result {
+            Err(e) if e.msg.contains("shed") && e.cycles == 0 => {}
+            r => return Err(format!("shed outcome is not a typed zero-cost drop: {r:?}")),
+        }
+        for o in out.iter().filter(|o| o.priority == Priority::Interactive) {
+            match &o.result {
+                Ok(q) if q.run.cycles <= budget => {}
+                r => return Err(format!("interactive ticket {} missed: {r:?}", o.id)),
+            }
+        }
+        let st = srv.stats();
+        if st.submitted != st.served + st.failed + st.shed + st.rejected {
+            return Err(format!(
+                "ledger leak: {} submitted vs {} served + {} failed + {} shed + {} rejected",
+                st.submitted, st.served, st.failed, st.shed, st.rejected
+            ));
+        }
+        if (st.submitted, st.served, st.failed, st.shed, st.rejected) != (9, 5, 0, 3, 1) {
+            return Err(format!(
+                "counter drift: submitted {} served {} failed {} shed {} rejected {}",
+                st.submitted, st.served, st.failed, st.shed, st.rejected
+            ));
+        }
+        if st.chaos_panics != 0 || st.breaker_trips != 0 || st.degraded != 0 {
+            return Err("wall-clock-only chaos moved a modeled counter".into());
+        }
+        Ok(())
+    });
+}
+
+// ---- 3. breaker: trip, stale reads, probe recovery ----------------------
+
+/// Three consecutive injected fatals trip the (Bfs, single) slot. While
+/// it is open the graph moves one epoch forward, and the next arrival
+/// degrades to a stale read of the newest healthy epoch — bitwise what
+/// a batch engine computes over a stop-the-world recompile of that
+/// epoch, staleness reported. With chaos lifted, the scheduled probe
+/// half-opens the slot, succeeds at the current epoch, closes it, and
+/// exact serving resumes.
+#[test]
+fn breaker_trips_serves_stale_and_recovers_exact() {
+    drive("breaker_trips_serves_stale_and_recovers_exact", 0x0B7, 2, |x| {
+        let g0 = common::random_graph(&mut |n| x.below(n), 20, 32);
+        let n = g0.num_vertices() as u64;
+        let cfg = ArchConfig::default();
+        let cseed = x.next_u64();
+        let job = Job::Workload(Workload::Bfs, x.below(n) as u32);
+        let mut srv = StreamServer::new(
+            EpochStore::new_single(CompiledPair::build(&g0, &cfg, cseed)),
+            StreamConfig {
+                workers: 1,
+                max_batch: 1,
+                breaker: BreakerConfig { enabled: true, threshold: 3, probe_interval: 2 },
+                ..Default::default()
+            },
+        );
+        let sub = |srv: &mut StreamServer| srv.submit(job).map_err(|e| e.to_string());
+        // one healthy drain seeds the last-good epoch (version 0); a held
+        // pin keeps that snapshot alive the way in-flight queries do
+        sub(&mut srv)?;
+        let clean = srv.drain_all();
+        if clean[0].result.is_err() || clean[0].degraded.is_some() {
+            return Err("healthy warm-up drain failed".into());
+        }
+        let pin0 = srv.store().pin();
+        // certain injected fatals: three consecutive trip the slot
+        srv.set_chaos(
+            ChaosPlan::seeded(x.next_u64())
+                .with_fatal_rate(1.0)
+                .with_panic_rate(0.0)
+                .with_slow_rate(0.0)
+                .with_stall_rate(0.0)
+                .with_build_fail_rate(0.0),
+        );
+        for i in 0..3 {
+            sub(&mut srv)?;
+            let o = srv.drain_all();
+            match &o[0].result {
+                Err(e) if e.kind == QueryErrorKind::Fatal && e.msg.contains("chaos-injected") => {}
+                r => return Err(format!("injected fatal {i} surfaced as {r:?}")),
+            }
+        }
+        if srv.breaker_state(JobClass::Bfs, false) != BreakerState::Open {
+            return Err("three consecutive fatals left the slot closed".into());
+        }
+        if srv.stats().breaker_trips != 1 {
+            return Err(format!("{} trips recorded, wanted 1", srv.stats().breaker_trips));
+        }
+        // the graph moves on while the slot is open
+        let d = random_weight_delta(&g0, x);
+        let mut g1 = g0.clone();
+        g1.apply_delta(&d)?;
+        srv.apply_update(&d)?;
+        // open slot, arrival 1 of 2: degrade to the last good epoch
+        sub(&mut srv)?;
+        let deg = srv.drain_all();
+        let o = &deg[0];
+        if o.degraded != Some(Degraded::Stale { staleness: 1 }) || o.epoch != 0 {
+            return Err(format!(
+                "open-slot arrival served {:?} at epoch {}, wanted Stale{{1}} at 0",
+                o.degraded, o.epoch
+            ));
+        }
+        let oracle0 = CompiledPair::build(&g0, &cfg, cseed);
+        let want = Engine::new(&oracle0).with_workers(1).serve(&[job]);
+        match (&o.result, &want.results[0]) {
+            (Ok(a), Ok(b))
+                if a.run.cycles == b.run.cycles
+                    && a.run.attrs == b.run.attrs
+                    && a.run.sim == b.run.sim => {}
+            _ => return Err("stale read != engine over a recompile of epoch 0".into()),
+        }
+        // health restored: arrival 2 of 2 is the scheduled probe — it
+        // runs for real at the current epoch and closes the slot
+        srv.set_chaos(ChaosPlan::none());
+        sub(&mut srv)?;
+        let probed = srv.drain_all();
+        let p = &probed[0];
+        if p.degraded.is_some() || p.epoch != 1 {
+            return Err("the probe did not serve exactly at the live epoch".into());
+        }
+        let oracle1 = CompiledPair::build(&g1, &cfg, cseed);
+        let want = Engine::new(&oracle1).with_workers(1).serve(&[job]);
+        match (&p.result, &want.results[0]) {
+            (Ok(a), Ok(b))
+                if a.run.cycles == b.run.cycles
+                    && a.run.attrs == b.run.attrs
+                    && a.run.sim == b.run.sim => {}
+            _ => return Err("probe answer != engine over a recompile of epoch 1".into()),
+        }
+        if srv.breaker_state(JobClass::Bfs, false) != BreakerState::Closed {
+            return Err("a successful probe must close the slot".into());
+        }
+        if srv.stats().breaker_probes < 1 {
+            return Err("the probe was not counted".into());
+        }
+        // exact serving has resumed for good
+        sub(&mut srv)?;
+        let after = srv.drain_all();
+        if after[0].result.is_err() || after[0].degraded.is_some() || after[0].epoch != 1 {
+            return Err("post-recovery serving is not exact".into());
+        }
+        let st = srv.stats();
+        if st.degraded != 1 || st.staleness.count() != 1 || st.staleness.max() != 1 {
+            return Err("exactness-loss accounting drifted".into());
+        }
+        if st.submitted != st.served + st.failed + st.shed + st.rejected {
+            return Err("ledger leak across the breaker episode".into());
+        }
+        drop(pin0);
+        Ok(())
+    });
+}
+
+// ---- 4. worker panics fail one ticket, not the server -------------------
+
+/// With `p_panic = 1.0` every drained unit's worker panics; each panic
+/// must surface as a typed `Fatal` outcome for exactly its own ticket
+/// (counted in `chaos_panics`), and once the plan is lifted the same
+/// server serves exactly again — a panicking worker never poisons the
+/// machines or the queue.
+#[test]
+fn injected_worker_panics_fail_only_their_ticket() {
+    drive("injected_worker_panics_fail_only_their_ticket", 0x0B8, 2, |x| {
+        let g = common::random_graph(&mut |n| x.below(n), 20, 32);
+        let n = g.num_vertices() as u64;
+        let pair = CompiledPair::build(&g, &ArchConfig::default(), x.next_u64());
+        let mut srv = StreamServer::new(
+            EpochStore::new_single(pair),
+            StreamConfig {
+                workers: 1,
+                max_batch: 4,
+                breaker: BreakerConfig { enabled: false, ..BreakerConfig::default() },
+                ..Default::default()
+            },
+        );
+        srv.set_chaos(
+            ChaosPlan::seeded(x.next_u64())
+                .with_panic_rate(1.0)
+                .with_fatal_rate(0.0)
+                .with_slow_rate(0.0)
+                .with_stall_rate(0.0)
+                .with_build_fail_rate(0.0),
+        );
+        let j0 = Job::Workload(Workload::Bfs, x.below(n) as u32);
+        let j1 = Job::Workload(Workload::Sssp, x.below(n) as u32);
+        srv.submit(j0).map_err(|e| e.to_string())?;
+        srv.submit(j1).map_err(|e| e.to_string())?;
+        let out = srv.drain_all();
+        if out.len() != 2 {
+            return Err(format!("{} outcomes for 2 panicking tickets", out.len()));
+        }
+        for o in &out {
+            match &o.result {
+                Err(e) if e.kind == QueryErrorKind::Fatal && e.msg.contains("worker panicked") => {}
+                r => return Err(format!("ticket {} panic surfaced as {r:?}", o.id)),
+            }
+        }
+        if srv.stats().chaos_panics != 2 {
+            return Err(format!("{} panics counted, wanted 2", srv.stats().chaos_panics));
+        }
+        // the same server, plan lifted: exact serving resumes
+        srv.set_chaos(ChaosPlan::none());
+        srv.submit(j0).map_err(|e| e.to_string())?;
+        let after = srv.drain_all();
+        if after[0].result.is_err() || after[0].degraded.is_some() {
+            return Err("server did not survive its own workers".into());
+        }
+        let st = srv.stats();
+        if st.submitted != st.served + st.failed + st.shed + st.rejected {
+            return Err("ledger leak across the panic episode".into());
+        }
+        Ok(())
+    });
+}
+
+// ---- 5. backpressure telemetry is truthful ------------------------------
+
+/// `QueueFull` must carry the *live* pending depth (and render it), not
+/// a stale configured constant — and clear after a drain.
+#[test]
+fn queue_full_reports_the_live_depth() {
+    let mut x = XorShift::new(0x0F11);
+    let g = common::random_graph(&mut |n| x.below(n), 16, 24);
+    let pair = CompiledPair::build(&g, &ArchConfig::default(), 7);
+    let mut srv = StreamServer::new(
+        EpochStore::new_single(pair),
+        StreamConfig { workers: 1, max_batch: 4, queue_depth: 2, ..Default::default() },
+    );
+    let job = Job::Workload(Workload::Bfs, 0);
+    srv.submit(job).unwrap();
+    srv.submit(job).unwrap();
+    let err = srv.submit(job).unwrap_err();
+    assert_eq!(err, AdmissionError::QueueFull { depth: 2 });
+    assert!(err.to_string().contains("2 pending"), "Display must name the live depth: {err}");
+    srv.drain_all();
+    assert!(srv.submit(job).is_ok(), "backpressure clears after a drain");
+    assert_eq!(srv.stats().rejected, 1);
+}

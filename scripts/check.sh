@@ -71,12 +71,20 @@ grep -q '"deadline_aborts":0' BENCH_serve_smoke.json \
 grep -q '"p99_cycles":' BENCH_serve_smoke.json \
     || { echo "error: streaming smoke JSON is missing p99_cycles" >&2; exit 1; }
 
+# The overload ladder's counters must be present (zero here: no deadline
+# and no chaos configured, so the resilience layer is provably inert in
+# the smoke) — a missing field means the telemetry contract regressed.
+grep -q '"shed":' BENCH_serve_smoke.json \
+    || { echo "error: streaming smoke JSON is missing shed" >&2; exit 1; }
+grep -q '"degraded":' BENCH_serve_smoke.json \
+    || { echo "error: streaming smoke JSON is missing degraded" >&2; exit 1; }
+
 # Batched-drain accounting (DESIGN.md §Perf.2): every completed query is
 # either a lane of a (possibly fused) sim pass or a frontier-sharing
 # fan-out, never both and never neither:
 #   served + failed == shared_hits + lane_count
 smoke_num() {
-    grep -o "\"$1\":[0-9]*" BENCH_serve_smoke.json | head -1 | cut -d: -f2
+    grep -o "\"$1\":[0-9]*" "${2:-BENCH_serve_smoke.json}" | head -1 | cut -d: -f2
 }
 served="$(smoke_num served)"; failed="$(smoke_num failed)"
 hits="$(smoke_num shared_hits)"; lanes="$(smoke_num lane_count)"
@@ -89,6 +97,45 @@ if [ "$((served + failed))" -ne "$((hits + lanes))" ]; then
     echo "       != shared_hits($hits) + lane_count($lanes)" >&2
     exit 1
 fi
+
+# Overload drill (DESIGN.md §11): the same serving scenario pushed to
+# ~3x the smoke's measured capacity for 5 seconds, with a deadline
+# budget (arming the shedding ladder) and a fixed chaos seed (seeded
+# worker slowdowns, drain stalls, epoch-build refusals, worker panics,
+# synthetic fatals). The gate asserts the ticket conservation ledger —
+# submitted == served + failed + shed + rejected — and that the run
+# neither hangs (wall cap) nor crashes; individual injected failures are
+# the point, not a regression. The chaos seed is pinned so any failure
+# here reproduces with `flip serve --chaos 3405691582 ...`.
+echo "== flip serve --chaos overload drill (degradation ladder) =="
+cap_qps="$(grep -o '"stream_qps":[0-9]*' BENCH_serve_smoke.json | head -1 | cut -d: -f2)"
+overload_qps="$(awk -v c="${cap_qps:-40}" 'BEGIN { q = int(3 * c); print (q > 120) ? q : 120 }')"
+overload_cmd=(./target/release/flip serve --group srn --duration 5 \
+    --qps-target "$overload_qps" --update-rate 4 --threads 2 \
+    --deadline 2000000 --chaos 3405691582 --json BENCH_serve_overload.json)
+if command -v timeout >/dev/null 2>&1; then
+    timeout -k 30 120 "${overload_cmd[@]}"
+else
+    "${overload_cmd[@]}"
+fi
+o_submitted="$(smoke_num submitted BENCH_serve_overload.json)"
+o_served="$(smoke_num served BENCH_serve_overload.json)"
+o_failed="$(smoke_num failed BENCH_serve_overload.json)"
+o_shed="$(smoke_num shed BENCH_serve_overload.json)"
+o_rejected="$(smoke_num rejected BENCH_serve_overload.json)"
+if [ -z "$o_submitted" ] || [ -z "$o_served" ] || [ -z "$o_failed" ] \
+    || [ -z "$o_shed" ] || [ -z "$o_rejected" ]; then
+    echo "error: overload drill JSON is missing ledger fields" >&2
+    exit 1
+fi
+if [ "$o_submitted" -ne "$((o_served + o_failed + o_shed + o_rejected))" ]; then
+    echo "error: overload ticket ledger leaked: submitted($o_submitted)" >&2
+    echo "       != served($o_served) + failed($o_failed) + shed($o_shed)" >&2
+    echo "       + rejected($o_rejected)" >&2
+    exit 1
+fi
+grep -q '"chaos_panics":' BENCH_serve_overload.json \
+    || { echo "error: overload drill JSON is missing chaos_panics" >&2; exit 1; }
 
 # Beam-search ANN smoke (DESIGN.md §10): one seeded query batch over a
 # clustered 256-vertex index, asserted on the JSON sink. The fabric is
